@@ -1,0 +1,49 @@
+//! Fig 5: multi-GPU scaling (1/2/4/8 simulated GPUs, plus 16 workers on
+//! 8 GPUs for the Freebase-style dataset).
+//!
+//! Paper: near-linear scaling; 16 processes on 8 GPUs is fastest on
+//! Freebase.
+
+use dglke::benchkit::*;
+use dglke::kg::Dataset;
+use dglke::models::ModelKind;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = load_manifest_or_exit();
+    println!("Fig 5: multi-GPU scaling (simulated parallel clock)");
+    println!("{:>14} {:>10} {:>8} {:>14} {:>10}", "dataset", "model", "workers", "triplets/s", "speedup");
+    let mut rows = Vec::new();
+    for (ds_name, model) in
+        [("fb15k-syn", ModelKind::TransEL2), ("freebase-syn:0.02", ModelKind::TransEL2)]
+    {
+        let dataset = Dataset::load(ds_name, 0)?;
+        let mut base = 0.0f64;
+        for workers in [1usize, 2, 4, 8, 16] {
+            let (stats, _) = timed_run(
+                &dataset,
+                &manifest,
+                model,
+                "default",
+                workers,
+                bench_batches(24),
+                true,
+                |_| {},
+            )?;
+            let tps = stats.triplets_per_sec;
+            if workers == 1 {
+                base = tps;
+            }
+            println!(
+                "{:>14} {:>10} {:>8} {:>14.0} {:>9.2}x",
+                ds_name,
+                model.name(),
+                workers,
+                tps,
+                tps / base
+            );
+            rows.push(format!("{ds_name},{},{workers},{tps:.0},{:.3}", model.name(), tps / base));
+        }
+    }
+    write_results_csv("fig5", "dataset,model,workers,triplets_per_sec,speedup", &rows);
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Fig 6: many-core CPU scaling (paper: 48-core r5dn, near-linear).
+//!
+//! CPU mode: no transfer ledger; embeddings live in shared memory and
+//! workers are trainer threads. The simulated-parallel clock (max worker
+//! thread-CPU busy time + sync) stands in for multi-core wall-clock on
+//! this 1-core testbed — see EXPERIMENTS.md §Testbed.
+
+use dglke::benchkit::*;
+use dglke::kg::Dataset;
+use dglke::models::ModelKind;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = load_manifest_or_exit();
+    println!("Fig 6: many-core CPU scaling");
+    println!("{:>14} {:>10} {:>8} {:>14} {:>10}", "dataset", "model", "threads", "triplets/s", "speedup");
+    let mut rows = Vec::new();
+    for (ds_name, model) in
+        [("fb15k-syn", ModelKind::TransEL2), ("fb15k-syn", ModelKind::DistMult)]
+    {
+        let dataset = Dataset::load(ds_name, 0)?;
+        let mut base = 0.0f64;
+        for threads in [1usize, 2, 4, 8, 16, 32, 48] {
+            let (stats, _) = timed_run(
+                &dataset,
+                &manifest,
+                model,
+                "default",
+                threads,
+                bench_batches(16),
+                false,
+                |cfg| cfg.sync_interval = 8, // the paper's periodic sync
+            )?;
+            let tps = stats.triplets_per_sec;
+            if threads == 1 {
+                base = tps;
+            }
+            println!(
+                "{:>14} {:>10} {:>8} {:>14.0} {:>9.2}x",
+                ds_name,
+                model.name(),
+                threads,
+                tps,
+                tps / base
+            );
+            rows.push(format!("{ds_name},{},{threads},{tps:.0},{:.3}", model.name(), tps / base));
+        }
+    }
+    write_results_csv("fig6", "dataset,model,threads,triplets_per_sec,speedup", &rows);
+    Ok(())
+}

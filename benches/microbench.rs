@@ -1,0 +1,108 @@
+//! Microbenchmarks of the L3 hot-path components, used by the §Perf pass:
+//! artifact execution, gather, grad split/accumulate, sampler, optimizer,
+//! and KVStore pull/push (local + TCP).
+
+use dglke::benchkit::load_manifest_or_exit;
+use dglke::kg::Dataset;
+use dglke::models::step::StepInputs;
+use dglke::models::ModelKind;
+use dglke::runtime::{TrainExecutor, XlaRuntime};
+use dglke::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
+use dglke::store::{EmbeddingTable, SparseAdagrad};
+use dglke::train::batch::{split_grads, BatchBuffers};
+use std::time::Instant;
+
+fn time_ms(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() * 1000.0 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = load_manifest_or_exit();
+    let dataset = Dataset::load("fb15k-syn", 0)?;
+    let model = ModelKind::TransEL2;
+    let art = manifest.find_train(model.name(), "logistic", "default")?;
+    let rt = XlaRuntime::cpu()?;
+    let exe = TrainExecutor::new(&rt, art)?;
+    let shape = exe.shape;
+    let rel_dim = exe.rel_dim;
+
+    let entities = EmbeddingTable::uniform(dataset.n_entities(), shape.dim, 0.4, 1);
+    let relations = EmbeddingTable::uniform(dataset.n_relations(), rel_dim, 0.4, 2);
+    let ent_opt = SparseAdagrad::new(dataset.n_entities(), 0.1);
+
+    let mut pos = PositiveSampler::over_all(&dataset.train, 3);
+    let mut neg = NegativeSampler::new(
+        NegativeConfig { k: shape.neg_k, chunk_size: shape.chunk_size(), ..Default::default() },
+        dataset.n_entities(),
+        4,
+    );
+    let mut idx = Vec::new();
+    pos.next_batch(shape.batch, &mut idx);
+    let batch = neg.assemble(&dataset.train, &idx);
+    let mut buf = BatchBuffers::new(&shape, rel_dim);
+    buf.gather(&batch, &entities, &relations);
+    let grads = exe.step(&buf.inputs())?;
+    let (ent_g, _) = split_grads(&batch, &grads, shape.dim, rel_dim);
+
+    println!("microbench (default transe_l2 shape: b={} nc={} k={} d={})",
+        shape.batch, shape.chunks, shape.neg_k, shape.dim);
+    let ms = time_ms(8, || {
+        pos.next_batch(shape.batch, &mut idx);
+        let _ = neg.assemble(&dataset.train, &idx);
+    });
+    println!("  sample+assemble      {ms:9.3} ms");
+    let ms = time_ms(8, || {
+        buf.gather(&batch, &entities, &relations);
+    });
+    println!("  gather               {ms:9.3} ms");
+    let ms = time_ms(8, || {
+        let inp = StepInputs {
+            h: &buf.h,
+            r: &buf.r,
+            t: &buf.t,
+            neg_h: &buf.neg_h,
+            neg_t: &buf.neg_t,
+        };
+        exe.step(&inp).unwrap();
+    });
+    println!("  xla train step       {ms:9.3} ms");
+    let ms = time_ms(8, || {
+        let _ = split_grads(&batch, &grads, shape.dim, rel_dim);
+    });
+    println!("  grad split+accum     {ms:9.3} ms");
+    let ms = time_ms(8, || {
+        ent_opt.apply(&entities, &ent_g.ids, &ent_g.rows);
+    });
+    println!("  adagrad apply        {ms:9.3} ms");
+
+    // KVStore round trips
+    let entity_machine: Vec<u32> = (0..dataset.n_entities()).map(|i| (i % 2) as u32).collect();
+    let cluster = dglke::kvstore::KvCluster::start(
+        &entity_machine,
+        dataset.n_relations(),
+        2,
+        1,
+        shape.dim,
+        rel_dim,
+        0.1,
+        0.4,
+        9,
+    )?;
+    let mut client = cluster.client(0)?;
+    let ids: Vec<u64> = (0..1024u64).collect();
+    let mut out = vec![0f32; 1024 * shape.dim];
+    let ms = time_ms(8, || {
+        client.pull(dglke::kvstore::TableId::Entities, &ids, shape.dim, &mut out).unwrap();
+    });
+    println!("  kv pull 1024 rows    {ms:9.3} ms (half local, half TCP)");
+    let ms = time_ms(8, || {
+        client.push(dglke::kvstore::TableId::Entities, &ids, shape.dim, &out).unwrap();
+    });
+    println!("  kv push 1024 rows    {ms:9.3} ms");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time JAX/Pallas layer of dglke-rs. Never imported at runtime."""

@@ -1,0 +1,157 @@
+"""AOT lowering: JAX/Pallas model graphs → HLO *text* artifacts + manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python never runs at training time — the Rust coordinator loads these
+files through PJRT and owns the hot path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import shapes as S
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train(model: str, loss: str, shape: S.TrainShape, adv_temp, kernels="pallas"):
+    step = M.make_train_step(model, loss, shape.chunks, adv_temp=adv_temp, kernels=kernels)
+    args = M.example_train_args(model, shape)
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    return jax.jit(step).lower(*specs)
+
+
+def lower_eval(model: str, side: str, shape: S.EvalShape):
+    fn = M.make_eval_score(model, side)
+    args = M.example_eval_args(model, shape)
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    return jax.jit(fn).lower(*specs)
+
+
+def emit(out_dir: str, key: str, hlo: str) -> str:
+    fname = f"{key}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(hlo)
+    return fname
+
+
+def build_manifest(out_dir: str, models, losses, include_tiny=True, adv_temp=None):
+    entries = []
+    for model in models:
+        for loss in losses:
+            shapes = [("default", S.default_train_shape(model))]
+            if include_tiny:
+                shapes.append(("tiny", S.tiny_train_shape(model)))
+            if model == "transe_l2" and loss == "logistic":
+                # Fig 3 pair: identical work per positive, chunked vs
+                # independent negatives (chunk size 1 = naive sampling)
+                shapes.append(("fig3_joint", S.TrainShape(batch=1024, chunks=16, neg_k=64, dim=128)))
+                shapes.append(("fig3_naive", S.TrainShape(batch=1024, chunks=1024, neg_k=64, dim=128)))
+            for tag, shape in shapes:
+                key = shape.key(model, loss)
+                # the naive-sampling baseline is lowered with naive jnp
+                # broadcast scoring (no chunked GEMM kernels)
+                kernels = "ref" if tag == "fig3_naive" else "pallas"
+                print(f"lowering {key} ...", flush=True)
+                hlo = to_hlo_text(lower_train(model, loss, shape, adv_temp, kernels=kernels))
+                fname = emit(out_dir, key, hlo)
+                entries.append(
+                    {
+                        "key": key,
+                        "file": fname,
+                        "kind": "train",
+                        "model": model,
+                        "loss": loss,
+                        "tag": tag,
+                        "batch": shape.batch,
+                        "chunks": shape.chunks,
+                        "neg_k": shape.neg_k,
+                        "dim": shape.dim,
+                        "rel_dim": S.rel_dim(model, shape.dim),
+                        "adv_temp": adv_temp,
+                        "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+                    }
+                )
+        for side in ("tail", "head"):
+            shapes = [("default", S.default_eval_shape(model))]
+            if include_tiny:
+                shapes.append(("tiny", S.tiny_eval_shape(model)))
+            for tag, shape in shapes:
+                key = shape.key(model, side)
+                print(f"lowering {key} ...", flush=True)
+                hlo = to_hlo_text(lower_eval(model, side, shape))
+                fname = emit(out_dir, key, hlo)
+                entries.append(
+                    {
+                        "key": key,
+                        "file": fname,
+                        "kind": f"eval_{side}",
+                        "model": model,
+                        "tag": tag,
+                        "m": shape.m,
+                        "cands": shape.cands,
+                        "dim": shape.dim,
+                        "rel_dim": S.rel_dim(model, shape.dim),
+                        "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+                    }
+                )
+    return entries
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument(
+        "--models",
+        default=",".join(S.MODELS),
+        help="comma-separated subset of models to lower",
+    )
+    p.add_argument("--losses", default="logistic", help="logistic,margin")
+    p.add_argument("--no-tiny", action="store_true", help="skip tiny test shapes")
+    p.add_argument("--adv-temp", type=float, default=None)
+    args = p.parse_args()
+
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    for m in models:
+        if m not in S.MODELS:
+            print(f"unknown model {m!r}; known: {S.MODELS}", file=sys.stderr)
+            return 1
+    losses = [l.strip() for l in args.losses.split(",") if l.strip()]
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = build_manifest(
+        args.out, models, losses, include_tiny=not args.no_tiny, adv_temp=args.adv_temp
+    )
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,274 @@
+"""Layer-1 Pallas kernels: grouped pairwise scoring.
+
+The paper's §3.3 insight is that joint negative sampling turns negative
+scoring into a *generalized matrix multiplication*: a chunk of ``cs``
+positives shares ``k`` negatives, so the score block is a ``[cs, k]``
+contraction over the embedding dimension ``d``. On GPU the authors hand
+this to cuBLAS; on TPU the same contraction is exactly one MXU systolic
+pass per ``[CS_T, d] x [d, K_T]`` tile pair.
+
+Kernels:
+
+* :func:`bmm` — batched matmul ``[nc, m, kk] x [nc, kk, n] -> [nc, m, n]``.
+  This single kernel carries the Dot/SqDiff/L2 score families *and* their
+  backward passes (both VJPs of a matmul are matmuls).
+* :func:`pairwise_l1` (+ backward kernels) — TransE-L1 has no GEMM form
+  (sum of absolute differences); its kernel streams ``d``-strips through
+  VMEM and accumulates ``|o - n|`` tiles, the TPU analogue of the paper's
+  fused elementwise path.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the Rust runtime executes. The BlockSpec structure is still the real TPU
+schedule; DESIGN.md §Perf carries the VMEM/MXU analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: sized for TPU VMEM (see DESIGN.md §Perf). For small inputs
+# the tile clamps to the full extent. TILE_N=256 measured 19% faster than
+# 128 on the CPU-PJRT path (fewer interpret-mode grid steps) and still fits
+# VMEM on TPU — see EXPERIMENTS.md §Perf.
+TILE_M = 128
+TILE_N = 256
+
+
+def _tile(extent: int, tile: int) -> int:
+    """Largest divisor-tile <= tile (extents here are powers of two)."""
+    t = min(extent, tile)
+    while extent % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# bmm: batched matmul
+# ---------------------------------------------------------------------------
+
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    # a_ref: [1, TM, kk], b_ref: [1, kk, TN] resident in VMEM; one MXU
+    # contraction per grid step.
+    a = a_ref[0]
+    b = b_ref[0]
+    o_ref[0] = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def bmm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched matmul via Pallas: [nc, m, kk] x [nc, kk, n] -> [nc, m, n]."""
+    nc, m, kk = a.shape
+    nc2, kk2, n = b.shape
+    assert nc == nc2 and kk == kk2, (a.shape, b.shape)
+    tm = _tile(m, TILE_M)
+    tn = _tile(n, TILE_N)
+    grid = (nc, m // tm, n // tn)
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, kk), lambda c, i, j: (c, i, 0)),
+            pl.BlockSpec((1, kk, tn), lambda c, i, j: (c, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, tn), lambda c, i, j: (c, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nc, m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# pairwise L1: scores[c, i, j] = -sum_d |o[c,i,d] - n[c,j,d]|
+# ---------------------------------------------------------------------------
+
+
+def _l1_kernel(o_ref, n_ref, s_ref):
+    o = o_ref[0]  # [TM, d]
+    n = n_ref[0]  # [TN, d]
+    diff = jnp.abs(o[:, None, :] - n[None, :, :])  # [TM, TN, d] in VMEM
+    s_ref[0] = -jnp.sum(diff, axis=-1)
+
+
+def pairwise_l1_fwd(o: jax.Array, n: jax.Array) -> jax.Array:
+    """[nc, cs, d], [nc, k, d] -> [nc, cs, k] of -Σ|o - n|."""
+    nc, cs, d = o.shape
+    nc2, k, d2 = n.shape
+    assert nc == nc2 and d == d2
+    # smaller tiles than bmm: the |o-n| intermediate is TM*TN*d floats
+    tm = _tile(cs, 32)
+    tn = _tile(k, 64)
+    grid = (nc, cs // tm, k // tn)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, d), lambda c, i, j: (c, i, 0)),
+            pl.BlockSpec((1, tn, d), lambda c, i, j: (c, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, tn), lambda c, i, j: (c, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nc, cs, k), jnp.float32),
+        interpret=True,
+    )(o, n)
+
+
+def _l1_bwd_do_kernel(o_ref, n_ref, g_ref, do_ref):
+    # do[c,i,d] = -Σ_j g[c,i,j] · sign(o[c,i,d] - n[c,j,d])
+    o = o_ref[0]  # [TM, d]
+    n = n_ref[0]  # [k, d]
+    g = g_ref[0]  # [TM, k]
+    sign = jnp.sign(o[:, None, :] - n[None, :, :])  # [TM, k, d]
+    do_ref[0] = -jnp.einsum("ij,ijd->id", g, sign)
+
+
+def _l1_bwd_dn_kernel(o_ref, n_ref, g_ref, dn_ref):
+    # dn[c,j,d] = Σ_i g[c,i,j] · sign(o[c,i,d] - n[c,j,d])
+    o = o_ref[0]  # [cs, d]
+    n = n_ref[0]  # [TN, d]
+    g = g_ref[0]  # [cs, TN]
+    sign = jnp.sign(o[:, None, :] - n[None, :, :])  # [cs, TN, d]
+    dn_ref[0] = jnp.einsum("ij,ijd->jd", g, sign)
+
+
+def pairwise_l1_bwd(o, n, g):
+    nc, cs, d = o.shape
+    k = n.shape[1]
+    tm = _tile(cs, 32)
+    do = pl.pallas_call(
+        _l1_bwd_do_kernel,
+        grid=(nc, cs // tm),
+        in_specs=[
+            pl.BlockSpec((1, tm, d), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, k, d), lambda c, i: (c, 0, 0)),
+            pl.BlockSpec((1, tm, k), lambda c, i: (c, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, d), lambda c, i: (c, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, cs, d), jnp.float32),
+        interpret=True,
+    )(o, n, g)
+    tn = _tile(k, 64)
+    dn = pl.pallas_call(
+        _l1_bwd_dn_kernel,
+        grid=(nc, k // tn),
+        in_specs=[
+            pl.BlockSpec((1, cs, d), lambda c, j: (c, 0, 0)),
+            pl.BlockSpec((1, tn, d), lambda c, j: (c, j, 0)),
+            pl.BlockSpec((1, cs, tn), lambda c, j: (c, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tn, d), lambda c, j: (c, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, k, d), jnp.float32),
+        interpret=True,
+    )(o, n, g)
+    return do, dn
+
+
+# ---------------------------------------------------------------------------
+# Differentiable pairwise ops built on the kernels
+# ---------------------------------------------------------------------------
+
+L2_EPS = 1e-12  # must match rust models::L2_EPS
+
+
+@jax.custom_vjp
+def pairwise_dot(o, n):
+    """[nc,cs,d] x [nc,k,d] -> [nc,cs,k] of o·n (MXU kernel fwd + bwd)."""
+    return bmm(o, jnp.swapaxes(n, 1, 2))
+
+
+def _dot_fwd(o, n):
+    return pairwise_dot(o, n), (o, n)
+
+
+def _dot_bwd(res, g):
+    o, n = res
+    do = bmm(g, n)  # [nc,cs,k] x [nc,k,d]
+    dn = bmm(jnp.swapaxes(g, 1, 2), o)  # [nc,k,cs] x [nc,cs,d]
+    return do, dn
+
+
+pairwise_dot.defvjp(_dot_fwd, _dot_bwd)
+
+
+def _sq_norms(x):
+    return jnp.sum(x * x, axis=-1)
+
+
+@jax.custom_vjp
+def pairwise_sqdiff(o, n):
+    """-(‖o‖² - 2 o·n + ‖n‖²) via the bmm kernel (quadratic expansion)."""
+    cross = bmm(o, jnp.swapaxes(n, 1, 2))
+    return -(_sq_norms(o)[:, :, None] - 2.0 * cross + _sq_norms(n)[:, None, :])
+
+
+def _sqdiff_fwd(o, n):
+    return pairwise_sqdiff(o, n), (o, n)
+
+
+def _sqdiff_bwd(res, g):
+    o, n = res
+    # df/do = -2(o - n): do_i = -2(o_i Σ_j g_ij - Σ_j g_ij n_j)
+    row = jnp.sum(g, axis=2)  # [nc, cs]
+    col = jnp.sum(g, axis=1)  # [nc, k]
+    do = -2.0 * (o * row[:, :, None] - bmm(g, n))
+    dn = 2.0 * (bmm(jnp.swapaxes(g, 1, 2), o) - n * col[:, :, None])
+    return do, dn
+
+
+pairwise_sqdiff.defvjp(_sqdiff_fwd, _sqdiff_bwd)
+
+
+@jax.custom_vjp
+def pairwise_l2(o, n):
+    """-sqrt(‖o-n‖² + eps), matching rust PairwiseOp::L2."""
+    sq = -pairwise_sqdiff(o, n)
+    return -jnp.sqrt(sq + L2_EPS)
+
+
+def _l2_fwd(o, n):
+    f = pairwise_l2(o, n)
+    return f, (o, n, f)
+
+
+def _l2_bwd(res, g):
+    o, n, f = res
+    # df/do = (o-n)/f (f negative) → with w = g / (-f):
+    w = g / (-f)
+    row = jnp.sum(w, axis=2)
+    col = jnp.sum(w, axis=1)
+    # df/do = -(o-n)/L ⇒ do_i = -Σ_j w_ij (o_i - n_j)
+    # df/dn = +(o-n)/L ⇒ dn_j = +Σ_i w_ij (o_i - n_j)
+    do = -(o * row[:, :, None] - bmm(w, n))
+    dn = bmm(jnp.swapaxes(w, 1, 2), o) - n * col[:, :, None]
+    return do, dn
+
+
+pairwise_l2.defvjp(_l2_fwd, _l2_bwd)
+
+
+@jax.custom_vjp
+def pairwise_l1(o, n):
+    """-Σ|o - n| via the dedicated L1 kernels."""
+    return pairwise_l1_fwd(o, n)
+
+
+def _l1_fwd(o, n):
+    return pairwise_l1_fwd(o, n), (o, n)
+
+
+def _l1_bwd(res, g):
+    o, n = res
+    return pairwise_l1_bwd(o, n, g)
+
+
+pairwise_l1.defvjp(_l1_fwd, _l1_bwd)
+
+
+PAIRWISE = {
+    "dot": pairwise_dot,
+    "sqdiff": pairwise_sqdiff,
+    "l2": pairwise_l2,
+    "l1": pairwise_l1,
+}

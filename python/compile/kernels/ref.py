@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas pairwise kernels.
+
+These are the correctness reference: ``python/tests/test_kernels.py``
+sweeps shapes with hypothesis and asserts the Pallas path matches these
+to float tolerance, for values *and* gradients.
+"""
+
+import jax.numpy as jnp
+
+L2_EPS = 1e-12
+
+
+def ref_dot(o, n):
+    return jnp.einsum("bid,bjd->bij", o, n)
+
+
+def ref_sqdiff(o, n):
+    diff = o[:, :, None, :] - n[:, None, :, :]
+    return -jnp.sum(diff * diff, axis=-1)
+
+
+def ref_l2(o, n):
+    return -jnp.sqrt(-ref_sqdiff(o, n) + L2_EPS)
+
+
+def ref_l1(o, n):
+    diff = o[:, :, None, :] - n[:, None, :, :]
+    return -jnp.sum(jnp.abs(diff), axis=-1)
+
+
+REF = {
+    "dot": ref_dot,
+    "sqdiff": ref_sqdiff,
+    "l2": ref_l2,
+    "l1": ref_l1,
+}

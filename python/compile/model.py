@@ -1,0 +1,259 @@
+"""Layer-2: JAX score functions, losses and train-step graphs for the KGE
+model zoo (paper Table 1), built on the Layer-1 Pallas pairwise kernels.
+
+This module mirrors ``rust/src/models/`` bit-for-bit in math and memory
+layout (see the decomposition notes there):
+
+* every model is (o-builder, optional negative projection, pairwise op);
+* relation rows: TransR = ``[r_vec(d) | M(d·d) row-major]``, RESCAL =
+  ``M(d·d) row-major``, RotatE = phases ``θ[d/2]``, ComplEx = first half
+  real / second half imaginary;
+* the loss is logistic (default) or pairwise margin, with optional
+  self-adversarial negative weighting (stop-gradient softmax).
+
+``train_step`` is ``jax.value_and_grad`` over the *gathered* embeddings —
+gather/scatter and AdaGrad live in the Rust coordinator, matching the
+paper's step (2)/(4) split.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise import PAIRWISE
+from .shapes import rel_dim
+
+L2_EPS = 1e-12
+
+PAIRWISE_OP = {
+    "transe_l1": "l1",
+    "transe_l2": "l2",
+    "distmult": "dot",
+    "complex": "dot",
+    "rescal": "dot",
+    "rotate": "sqdiff",
+    "transr": "sqdiff",
+}
+
+
+def _split_complex(x):
+    d = x.shape[-1]
+    return x[..., : d // 2], x[..., d // 2 :]
+
+
+def build_o(model: str, side: str, e, r):
+    """o-builder: ``side='tail'`` consumes heads, ``side='head'`` consumes
+    tails. e: [..., d]; r: [..., rd]. Returns [..., d]."""
+    if model in ("transe_l1", "transe_l2"):
+        return e + r if side == "tail" else e - r
+    if model == "distmult":
+        return e * r
+    if model == "complex":
+        er, ei = _split_complex(e)
+        rr, ri = _split_complex(r)
+        if side == "tail":
+            return jnp.concatenate([er * rr - ei * ri, er * ri + ei * rr], axis=-1)
+        # head: w = (rr·tr + ri·ti, rr·ti − ri·tr)
+        return jnp.concatenate([rr * er + ri * ei, rr * ei - ri * er], axis=-1)
+    if model == "rotate":
+        hr, hi = _split_complex(e)
+        cos, sin = jnp.cos(r), jnp.sin(r)
+        if side == "tail":
+            return jnp.concatenate([hr * cos - hi * sin, hr * sin + hi * cos], axis=-1)
+        # head: o' = t ∘ e^{-iθ}
+        return jnp.concatenate([hr * cos + hi * sin, hi * cos - hr * sin], axis=-1)
+    if model == "rescal":
+        d = e.shape[-1]
+        m = r.reshape(r.shape[:-1] + (d, d))
+        if side == "tail":
+            return jnp.einsum("...a,...ab->...b", e, m)  # Mᵀh
+        return jnp.einsum("...ab,...b->...a", m, e)  # Mt
+    if model == "transr":
+        d = e.shape[-1]
+        rv = r[..., :d]
+        m = r[..., d:].reshape(r.shape[:-1] + (d, d))
+        if side == "tail":
+            return jnp.einsum("...ab,...b->...a", m, e) + rv  # Mh + rv
+        return jnp.einsum("...ab,...b->...a", m, e) - rv  # Mt - rv
+    raise ValueError(model)
+
+
+def transr_project(r, n, d):
+    """Project negatives [nc,k,d] through each positive's M: returns
+    [nc,cs,k,d]. r: [nc,cs,rd]."""
+    m = r[..., d:].reshape(r.shape[:-1] + (d, d))  # [nc,cs,d,d]
+    return jnp.einsum("zcab,zkb->zcka", m, n)
+
+
+def _sq(x):
+    return jnp.sum(x * x, axis=-1)
+
+
+def _pairwise_4d(op: str, o, n4):
+    """Pairwise op between o [nc,cs,d] and per-row candidates n4
+    [nc,cs,k,d] (TransR projected negatives). Plain jnp — the 4-D shape
+    has no shared-candidate GEMM structure."""
+    diff = o[:, :, None, :] - n4
+    if op == "sqdiff":
+        return -jnp.sum(diff * diff, axis=-1)
+    if op == "l2":
+        return -jnp.sqrt(jnp.sum(diff * diff, axis=-1) + L2_EPS)
+    if op == "l1":
+        return -jnp.sum(jnp.abs(diff), axis=-1)
+    if op == "dot":
+        return jnp.einsum("zcd,zckd->zck", o, n4)
+    raise ValueError(op)
+
+
+def _diag_pairwise(op: str, o, n):
+    """scores[i] = op(o_i, n_i); o, n: [..., d]."""
+    if op == "dot":
+        return jnp.sum(o * n, axis=-1)
+    diff = o - n
+    if op == "sqdiff":
+        return -_sq(diff)
+    if op == "l2":
+        return -jnp.sqrt(_sq(diff) + L2_EPS)
+    if op == "l1":
+        return -jnp.sum(jnp.abs(diff), axis=-1)
+    raise ValueError(op)
+
+
+def batch_scores(model: str, h, r, t, neg_h, neg_t, chunks: int, kernels: str = "pallas"):
+    """Forward scores of one mini-batch.
+
+    h/r/t: [b, ·]; neg_h/neg_t: [nc, k, d]. Returns (pos [b],
+    neg [b, 2k]) with tail-corruption scores first, then head-corruption —
+    the same layout as rust `models::step`.
+
+    kernels="pallas" routes pairwise scoring through the Layer-1 kernels
+    (the paper's GEMM formulation); kernels="ref" uses naive jnp
+    broadcasting — the baseline a naive implementation would write, used
+    by the Fig 3 "naive sampling" artifact.
+    """
+    b, d = h.shape
+    k = neg_t.shape[1]
+    cs = b // chunks
+    op = PAIRWISE_OP[model]
+
+    hc = h.reshape(chunks, cs, d)
+    tc = t.reshape(chunks, cs, d)
+    rc = r.reshape(chunks, cs, r.shape[-1])
+
+    o_tail = build_o(model, "tail", hc, rc)  # [nc,cs,d]
+    o_head = build_o(model, "head", tc, rc)
+
+    if model == "transr":
+        # positives: project each t_i through its own M
+        m = rc[..., d:].reshape(chunks, cs, d, d)
+        t_proj = jnp.einsum("zcab,zcb->zca", m, tc)
+        pos = _diag_pairwise(op, o_tail, t_proj).reshape(b)
+        # negatives: project the chunk candidates per positive row
+        nt4 = transr_project(rc, neg_t, d)  # [nc,cs,k,d]
+        nh4 = transr_project(rc, neg_h, d)
+        neg_tail = _pairwise_4d(op, o_tail, nt4)  # [nc,cs,k]
+        neg_head = _pairwise_4d(op, o_head, nh4)
+    else:
+        pos = _diag_pairwise(op, o_tail, tc).reshape(b)
+        if kernels == "pallas":
+            pair = PAIRWISE[op]
+        else:
+            from .kernels.ref import REF
+
+            pair = REF[op]
+        neg_tail = pair(o_tail, neg_t)  # [nc,cs,k]
+        neg_head = pair(o_head, neg_h)
+
+    neg = jnp.concatenate(
+        [neg_tail.reshape(b, k), neg_head.reshape(b, k)], axis=1
+    )  # [b, 2k]
+    return pos, neg
+
+
+def loss_fn(loss: str, pos, neg, gamma: float = 1.0, adv_temp: float | None = None):
+    """Loss matching rust `models::loss::loss_and_grad`."""
+    b, k2 = neg.shape
+    if adv_temp is not None:
+        w = jax.nn.softmax(neg * adv_temp, axis=-1)
+        w = jax.lax.stop_gradient(w)
+    else:
+        w = jnp.full_like(neg, 1.0 / k2)
+    if loss == "logistic":
+        pos_term = jnp.mean(jax.nn.softplus(-pos))
+        neg_term = jnp.mean(jnp.sum(w * jax.nn.softplus(neg), axis=-1))
+        return pos_term + neg_term
+    if loss == "margin":
+        viol = jnp.maximum(0.0, gamma - pos[:, None] + neg)
+        return jnp.mean(jnp.sum(w * viol, axis=-1))
+    raise ValueError(loss)
+
+
+def make_train_step(
+    model: str,
+    loss: str,
+    chunks: int,
+    adv_temp: float | None = None,
+    kernels: str = "pallas",
+):
+    """Returns f(h, r, t, neg_h, neg_t) -> (loss, d_h, d_r, d_t, d_negh,
+    d_negt) — the train artifact body."""
+
+    def objective(h, r, t, neg_h, neg_t):
+        pos, neg = batch_scores(model, h, r, t, neg_h, neg_t, chunks, kernels=kernels)
+        return loss_fn(loss, pos, neg, adv_temp=adv_temp)
+
+    grad_fn = jax.value_and_grad(objective, argnums=(0, 1, 2, 3, 4))
+
+    def step(h, r, t, neg_h, neg_t):
+        value, grads = grad_fn(h, r, t, neg_h, neg_t)
+        return (value,) + grads
+
+    return step
+
+
+def make_eval_score(model: str, side: str):
+    """Returns f(e, r, cand) -> (scores [m, c],).
+
+    side='tail': e = heads, candidates are tails.
+    side='head': e = tails, candidates are heads.
+    """
+    op = PAIRWISE_OP[model]
+
+    def score(e, r, cand):
+        m, d = e.shape
+        o = build_o(model, side, e[None], r[None])[0]  # [m, d]
+        if model == "transr":
+            mm = r[:, d:].reshape(m, d, d)
+            pc = jnp.einsum("mab,cb->mca", mm, cand)  # [m, c, d]
+            diff = o[:, None, :] - pc
+            return (-jnp.sum(diff * diff, axis=-1),)
+        pair = PAIRWISE[op]
+        return (pair(o[None], cand[None])[0],)
+
+    return score
+
+
+def example_train_args(model: str, shape, rng_seed: int = 0):
+    """Random example args with the artifact's exact shapes/dtypes."""
+    import numpy as np
+
+    rng = np.random.default_rng(rng_seed)
+    b, nc, k, d = shape.batch, shape.chunks, shape.neg_k, shape.dim
+    rd = rel_dim(model, d)
+
+    def arr(*s):
+        return jnp.asarray(rng.standard_normal(s, dtype=np.float32) * 0.5)
+
+    return (arr(b, d), arr(b, rd), arr(b, d), arr(nc, k, d), arr(nc, k, d))
+
+
+def example_eval_args(model: str, shape, rng_seed: int = 0):
+    import numpy as np
+
+    rng = np.random.default_rng(rng_seed)
+    m, c, d = shape.m, shape.cands, shape.dim
+    rd = rel_dim(model, d)
+
+    def arr(*s):
+        return jnp.asarray(rng.standard_normal(s, dtype=np.float32) * 0.5)
+
+    return (arr(m, d), arr(m, rd), arr(c, d))

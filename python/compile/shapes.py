@@ -1,0 +1,85 @@
+"""Static shape configurations for the AOT artifacts.
+
+The Rust coordinator pads/assembles batches to exactly these shapes (XLA
+artifacts are shape-monomorphic). Keys must match
+``rust/src/runtime/artifacts.rs``.
+"""
+
+from dataclasses import dataclass
+
+MODELS = [
+    "transe_l1",
+    "transe_l2",
+    "distmult",
+    "complex",
+    "rescal",
+    "rotate",
+    "transr",
+]
+
+# relation-row width per model (must match ModelKind::rel_dim)
+def rel_dim(model: str, d: int) -> int:
+    if model in ("transe_l1", "transe_l2", "distmult", "complex"):
+        return d
+    if model == "rotate":
+        return d // 2
+    if model == "rescal":
+        return d * d
+    if model == "transr":
+        return d + d * d
+    raise ValueError(model)
+
+
+@dataclass(frozen=True)
+class TrainShape:
+    batch: int
+    chunks: int
+    neg_k: int
+    dim: int
+
+    @property
+    def chunk_size(self) -> int:
+        assert self.batch % self.chunks == 0
+        return self.batch // self.chunks
+
+    def key(self, model: str, loss: str) -> str:
+        return (
+            f"{model}_train_{loss}_b{self.batch}_c{self.chunk_size}"
+            f"_k{self.neg_k}_d{self.dim}"
+        )
+
+
+@dataclass(frozen=True)
+class EvalShape:
+    m: int  # positives scored at once
+    cands: int  # candidate entities per call
+    dim: int
+
+    def key(self, model: str, side: str) -> str:
+        return f"{model}_eval_{side}_m{self.m}_cand{self.cands}_d{self.dim}"
+
+
+def default_train_shape(model: str) -> TrainShape:
+    """Production shapes. TransR/RESCAL are d× heavier (paper §2), so they
+    get smaller batches, mirroring how the paper runs them."""
+    if model == "transr":
+        return TrainShape(batch=256, chunks=8, neg_k=64, dim=32)
+    if model == "rescal":
+        return TrainShape(batch=512, chunks=8, neg_k=128, dim=64)
+    return TrainShape(batch=1024, chunks=16, neg_k=256, dim=128)
+
+
+def default_eval_shape(model: str) -> EvalShape:
+    if model == "transr":
+        return EvalShape(m=64, cands=1024, dim=32)
+    if model == "rescal":
+        return EvalShape(m=64, cands=2048, dim=64)
+    return EvalShape(m=64, cands=2048, dim=128)
+
+
+def tiny_train_shape(model: str) -> TrainShape:
+    return TrainShape(batch=32, chunks=4, neg_k=16, dim=16)
+
+
+def tiny_eval_shape(model: str) -> EvalShape:
+    return EvalShape(m=8, cands=64, dim=16)

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracle: values and gradients, swept over
+shapes and distributions (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise as pw
+from compile.kernels import ref
+
+OPS = ["dot", "sqdiff", "l2", "l1"]
+
+
+def rand(key, shape, scale):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_values_match_ref(op):
+    o = rand(0, (3, 16, 24), 1.0)
+    n = rand(1, (3, 40, 24), 1.0)
+    np.testing.assert_allclose(
+        pw.PAIRWISE[op](o, n), ref.REF[op](o, n), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_grads_match_ref(op):
+    o = rand(2, (2, 8, 16), 1.0)
+    n = rand(3, (2, 12, 16), 1.0)
+    g = rand(4, (2, 8, 12), 1.0)
+
+    def mine(o, n):
+        return jnp.sum(pw.PAIRWISE[op](o, n) * g)
+
+    def theirs(o, n):
+        return jnp.sum(ref.REF[op](o, n) * g)
+
+    g1 = jax.grad(mine, argnums=(0, 1))(o, n)
+    g2 = jax.grad(theirs, argnums=(0, 1))(o, n)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nc=st.sampled_from([1, 2, 4]),
+    cs=st.sampled_from([1, 4, 8, 32]),
+    k=st.sampled_from([1, 8, 64]),
+    d=st.sampled_from([2, 8, 16, 128]),
+    op=st.sampled_from(OPS),
+    scale=st.sampled_from([1e-3, 1.0, 100.0]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_shape_sweep(nc, cs, k, d, op, scale, seed):
+    o = rand(seed, (nc, cs, d), scale)
+    n = rand(seed + 1, (nc, k, d), scale)
+    got = pw.PAIRWISE[op](o, n)
+    want = ref.REF[op](o, n)
+    assert got.shape == (nc, cs, k)
+    tol = 1e-4 * max(scale * scale * d, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    cs=st.sampled_from([4, 16]),
+    k=st.sampled_from([8, 32]),
+    d=st.sampled_from([8, 64]),
+    op=st.sampled_from(OPS),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_grad_sweep(cs, k, d, op, seed):
+    o = rand(seed, (2, cs, d), 1.0)
+    n = rand(seed + 1, (2, k, d), 1.0)
+    g = rand(seed + 2, (2, cs, k), 1.0)
+    g1 = jax.grad(lambda o, n: jnp.sum(pw.PAIRWISE[op](o, n) * g), argnums=(0, 1))(o, n)
+    g2 = jax.grad(lambda o, n: jnp.sum(ref.REF[op](o, n) * g), argnums=(0, 1))(o, n)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-3, atol=1e-3)
+
+
+def test_bmm_matches_einsum():
+    a = rand(5, (3, 16, 8), 1.0)
+    b = rand(6, (3, 8, 24), 1.0)
+    np.testing.assert_allclose(
+        pw.bmm(a, b), jnp.einsum("zmk,zkn->zmn", a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_l2_eps_matches_rust():
+    # The constant must equal rust models::L2_EPS for bit-compatible
+    # numerics across backends.
+    assert pw.L2_EPS == 1e-12
+    assert ref.L2_EPS == 1e-12
+
+
+def test_l1_at_kink_is_finite():
+    # identical rows: |o-n| = 0 everywhere; gradient must be finite (sign(0)=0)
+    o = jnp.ones((1, 4, 8))
+    n = jnp.ones((1, 4, 8))
+    g = jnp.ones((1, 4, 4))
+    do, dn = jax.grad(lambda o, n: jnp.sum(pw.pairwise_l1(o, n) * g), argnums=(0, 1))(o, n)
+    assert np.isfinite(np.asarray(do)).all()
+    assert np.isfinite(np.asarray(dn)).all()
+
+
+def test_l2_at_zero_distance_is_finite():
+    o = jnp.ones((1, 2, 4))
+    n = jnp.ones((1, 2, 4))
+    f = pw.pairwise_l2(o, n)
+    assert np.isfinite(np.asarray(f)).all()
+    do = jax.grad(lambda o: jnp.sum(pw.pairwise_l2(o, n)))(o)
+    assert np.isfinite(np.asarray(do)).all()

@@ -1,0 +1,150 @@
+"""L2 model layer: score decompositions vs textbook formulas, loss math,
+train-step gradients, eval scoring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import shapes as S
+
+MODELS = S.MODELS
+
+
+def direct_score(model, h, r, t):
+    """Textbook per-triplet score, paper Table 1 (same as the rust test
+    oracle in models/builders.rs)."""
+    d = h.shape[-1]
+    dc = d // 2
+    if model == "transe_l1":
+        return -jnp.sum(jnp.abs(h + r - t), -1)
+    if model == "transe_l2":
+        return -jnp.sqrt(jnp.sum((h + r - t) ** 2, -1) + M.L2_EPS)
+    if model == "distmult":
+        return jnp.sum(h * r * t, -1)
+    if model == "complex":
+        hr, hi = h[..., :dc], h[..., dc:]
+        rr, ri = r[..., :dc], r[..., dc:]
+        tr, ti = t[..., :dc], t[..., dc:]
+        return jnp.sum((hr * rr - hi * ri) * tr + (hr * ri + hi * rr) * ti, -1)
+    if model == "rotate":
+        hr, hi = h[..., :dc], h[..., dc:]
+        cos, sin = jnp.cos(r), jnp.sin(r)
+        orr = hr * cos - hi * sin
+        oi = hr * sin + hi * cos
+        return -jnp.sum((orr - t[..., :dc]) ** 2 + (oi - t[..., dc:]) ** 2, -1)
+    if model == "rescal":
+        m = r.reshape(r.shape[:-1] + (d, d))
+        return jnp.einsum("...a,...ab,...b->...", h, m, t)
+    if model == "transr":
+        rv, m = r[..., :d], r[..., d:].reshape(r.shape[:-1] + (d, d))
+        proj = jnp.einsum("...ab,...b->...a", m, h - t) + rv
+        return -jnp.sum(proj**2, -1)
+    raise ValueError(model)
+
+
+def rand_inputs(model, b=8, nc=2, k=4, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    rd = S.rel_dim(model, d)
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s, dtype=np.float32) * 0.5)
+    return mk(b, d), mk(b, rd), mk(b, d), mk(nc, k, d), mk(nc, k, d)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_positive_scores_match_direct(model):
+    h, r, t, nh, nt = rand_inputs(model)
+    pos, _ = M.batch_scores(model, h, r, t, nh, nt, chunks=2)
+    np.testing.assert_allclose(pos, direct_score(model, h, r, t), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_negative_scores_match_direct(model):
+    b, nc, k, d = 8, 2, 4, 8
+    h, r, t, nh, nt = rand_inputs(model, b, nc, k, d)
+    _, neg = M.batch_scores(model, h, r, t, nh, nt, chunks=nc)
+    cs = b // nc
+    for i in range(b):
+        c = i // cs
+        for j in range(k):
+            # tail corruption: replace t_i with nt[c, j]
+            want = direct_score(model, h[i], r[i], nt[c, j])
+            np.testing.assert_allclose(neg[i, j], want, rtol=1e-3, atol=1e-4)
+            # head corruption: replace h_i with nh[c, j]
+            want = direct_score(model, nh[c, j], r[i], t[i])
+            np.testing.assert_allclose(neg[i, k + j], want, rtol=1e-3, atol=1e-4)
+
+
+def test_logistic_loss_matches_manual():
+    pos = jnp.array([2.0, -1.0])
+    neg = jnp.array([[0.5, -0.5], [1.0, 0.0]])
+    got = M.loss_fn("logistic", pos, neg)
+    sp = lambda x: np.log1p(np.exp(x))
+    want = np.mean([sp(-2.0), sp(1.0)]) + np.mean(
+        [0.5 * (sp(0.5) + sp(-0.5)), 0.5 * (sp(1.0) + sp(0.0))]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_margin_loss_matches_manual():
+    pos = jnp.array([1.0])
+    neg = jnp.array([[0.5, -3.0]])
+    got = M.loss_fn("margin", pos, neg, gamma=1.0)
+    # pairs: max(0, 1 - 1 + 0.5) = 0.5 ; max(0, 1 - 1 - 3) = 0; mean w=1/2
+    np.testing.assert_allclose(got, 0.25, rtol=1e-6)
+
+
+def test_adversarial_weights_prefer_hard_negatives():
+    pos = jnp.array([0.0])
+    easy = jnp.array([[-10.0, 5.0]])
+    l_adv = M.loss_fn("logistic", pos, easy, adv_temp=1.0)
+    l_uni = M.loss_fn("logistic", pos, easy)
+    # adversarial concentrates weight on the hard (high-score) negative
+    assert l_adv > l_uni
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_train_step_runs_and_shapes(model):
+    shape = S.tiny_train_shape(model)
+    step = M.make_train_step(model, "logistic", shape.chunks)
+    args = M.example_train_args(model, shape)
+    out = jax.jit(step)(*args)
+    loss, dh, dr, dt, dnh, dnt = out
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    for g, a in zip((dh, dr, dt, dnh, dnt), args):
+        assert g.shape == a.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize("model", ["transe_l2", "distmult", "rotate", "transr"])
+def test_train_step_gradient_descends(model):
+    shape = S.tiny_train_shape(model)
+    step = jax.jit(M.make_train_step(model, "logistic", shape.chunks))
+    args = list(M.example_train_args(model, shape))
+    first = float(step(*args)[0])
+    for _ in range(60):
+        out = step(*args)
+        for i in range(5):
+            args[i] = args[i] - 0.5 * out[1 + i]
+    last = float(step(*args)[0])
+    assert last < first * 0.8, f"{model}: {first} -> {last}"
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("side", ["tail", "head"])
+def test_eval_scores_match_direct(model, side):
+    rng = np.random.default_rng(7)
+    m, c, d = 4, 6, 8
+    rd = S.rel_dim(model, d)
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s, dtype=np.float32) * 0.5)
+    e, r, cand = mk(m, d), mk(m, rd), mk(c, d)
+    (scores,) = M.make_eval_score(model, side)(e, r, cand)
+    assert scores.shape == (m, c)
+    for i in range(m):
+        for j in range(c):
+            if side == "tail":
+                want = direct_score(model, e[i], r[i], cand[j])
+            else:
+                want = direct_score(model, cand[j], r[i], e[i])
+            np.testing.assert_allclose(scores[i, j], want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,16 @@
+//! Reimplementations of the systems the paper compares against (§4, §6.4)
+//! on our substrate, isolating exactly the design choices the paper
+//! credits for its speedups:
+//!
+//! * [`pbg`] — PyTorch-BigGraph-style: random 2D block schedule + dense
+//!   relation weights (Fig 8);
+//! * [`graphvite`] — GraphVite-style: episodic subgraph training with
+//!   stale embeddings (Fig 9/10);
+//! * naive negative sampling (Fig 3) is a sampler/artifact configuration:
+//!   chunk_size = 1 (`NegativeConfig`), exercised by the Fig 3 bench.
+
+pub mod graphvite;
+pub mod pbg;
+
+pub use graphvite::{run_graphvite, GraphViteConfig, GraphViteStats};
+pub use pbg::{run_pbg, PbgConfig, PbgStats};

@@ -1,0 +1,81 @@
+//! Shared helpers for the paper-figure benches (`benches/*.rs`,
+//! `harness = false`).
+//!
+//! Testbed note (also in EXPERIMENTS.md): this machine exposes ONE CPU
+//! core, so concurrent workers time-share. Timing benches therefore
+//! report the **simulated parallel clock**: max per-worker thread-CPU
+//! busy time + modeled PCIe/network transfer (see
+//! `train::device::TransferLedger` and `util::cputime`). Single-worker
+//! numbers are additionally reported as real wall-clock.
+
+use crate::kg::Dataset;
+use crate::models::ModelKind;
+use crate::runtime::{artifacts, BackendKind, Manifest};
+use crate::train::worker::ModelState;
+use crate::train::{run_training, Hardware, TrainConfig, TrainStats};
+use anyhow::Result;
+
+/// Batches per worker for benches; QUICK=1 shrinks runs ~4×.
+pub fn bench_batches(default: usize) -> usize {
+    if std::env::var("QUICK").is_ok() {
+        (default / 4).max(2)
+    } else {
+        default
+    }
+}
+
+pub fn load_manifest_or_exit() -> Manifest {
+    if !artifacts::available() {
+        eprintln!("benches need AOT artifacts — run `make artifacts` first");
+        std::process::exit(0); // treat as skipped, not failed
+    }
+    Manifest::load(&artifacts::default_dir()).expect("manifest parse")
+}
+
+/// One timed training run; returns (stats, per-batch sim-parallel ms).
+#[allow(clippy::too_many_arguments)]
+pub fn timed_run(
+    dataset: &Dataset,
+    manifest: &Manifest,
+    model: ModelKind,
+    tag: &str,
+    workers: usize,
+    batches_per_worker: usize,
+    gpu: bool,
+    mutate: impl FnOnce(&mut TrainConfig),
+) -> Result<(TrainStats, f64)> {
+    let art = manifest.find_train(model.name(), "logistic", tag)?;
+    let mut cfg = TrainConfig {
+        model,
+        backend: BackendKind::Xla,
+        artifact_tag: tag.to_string(),
+        n_workers: workers,
+        batches_per_worker,
+        lr: 0.25,
+        sync_interval: usize::MAX, // benches measure steady-state steps
+        hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    mutate(&mut cfg);
+    let state = ModelState::init(dataset, model, art.dim, &cfg);
+    let stats = run_training(dataset, &state, Some(manifest), &cfg)?;
+    let per_batch_ms = stats.sim_parallel_secs * 1000.0 / batches_per_worker as f64;
+    Ok((stats, per_batch_ms))
+}
+
+/// Append rows to results/<name>.csv (creating header if new).
+pub fn write_results_csv(name: &str, header: &str, rows: &[String]) {
+    std::fs::create_dir_all("results").ok();
+    let path = format!("results/{name}.csv");
+    let fresh = !std::path::Path::new(&path).exists();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path).unwrap();
+    use std::io::Write;
+    if fresh {
+        writeln!(f, "{header}").unwrap();
+    }
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+    println!("[appended {} rows to {path}]", rows.len());
+}

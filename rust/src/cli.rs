@@ -1,0 +1,121 @@
+//! Minimal CLI argument parser (no clap in the vendored dep set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Unknown keys are rejected at `finish()` so typos fail loudly.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+pub struct Args {
+    named: HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+    positional: Vec<String>,
+    consumed: std::collections::HashSet<String>,
+}
+
+impl Args {
+    /// Parse raw args (without the program name).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut named = HashMap::new();
+        let mut flags = std::collections::HashSet::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    named.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    named.insert(key.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { named, flags, positional, consumed: Default::default() })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.named.get(key).cloned()
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.flags.contains(key)
+            || self.named.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Error on unconsumed --keys (catches typos).
+    pub fn finish(self) -> Result<()> {
+        let unknown: Vec<&String> = self
+            .named
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(*k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown arguments: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn named_and_positional() {
+        let mut a = Args::parse(&raw("train --model transe --workers 4 --verbose")).unwrap();
+        assert_eq!(a.positional(), &["train"]);
+        assert_eq!(a.get("model").as_deref(), Some("transe"));
+        assert_eq!(a.parse_or("workers", 1usize).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let mut a = Args::parse(&raw("--lr=0.5 --tag=x")).unwrap();
+        assert_eq!(a.parse_or("lr", 0.0f32).unwrap(), 0.5);
+        assert_eq!(a.get_or("tag", "y"), "x");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut a = Args::parse(&raw("--known 1 --typo 2")).unwrap();
+        let _ = a.get("known");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let mut a = Args::parse(&raw("--workers abc")).unwrap();
+        assert!(a.parse_or("workers", 1usize).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Link-prediction metrics (paper §5.3): Hit@k, Mean Rank, MRR.
+
+/// Accumulates ranks of positive triplets.
+#[derive(Clone, Debug, Default)]
+pub struct RankAccumulator {
+    ranks: Vec<f64>,
+}
+
+impl RankAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rank: f64) {
+        debug_assert!(rank >= 1.0);
+        self.ranks.push(rank);
+    }
+
+    pub fn merge(&mut self, other: RankAccumulator) {
+        self.ranks.extend(other.ranks);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        let q = self.ranks.len().max(1) as f64;
+        let mut m = Metrics::default();
+        for &r in &self.ranks {
+            if r <= 1.0 {
+                m.hit1 += 1.0;
+            }
+            if r <= 3.0 {
+                m.hit3 += 1.0;
+            }
+            if r <= 10.0 {
+                m.hit10 += 1.0;
+            }
+            m.mr += r;
+            m.mrr += 1.0 / r;
+        }
+        m.hit1 /= q;
+        m.hit3 /= q;
+        m.hit10 /= q;
+        m.mr /= q;
+        m.mrr /= q;
+        m.n = self.ranks.len();
+        m
+    }
+}
+
+/// The five numbers every accuracy table in the paper reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Metrics {
+    pub hit1: f64,
+    pub hit3: f64,
+    pub hit10: f64,
+    pub mr: f64,
+    pub mrr: f64,
+    pub n: usize,
+}
+
+impl Metrics {
+    /// Paper-style table row.
+    pub fn row(&self) -> String {
+        format!(
+            "Hit@10 {:.3}  Hit@3 {:.3}  Hit@1 {:.3}  MR {:.2}  MRR {:.3}",
+            self.hit10, self.hit3, self.hit1, self.mr, self.mrr
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_math() {
+        let mut acc = RankAccumulator::new();
+        for r in [1.0, 2.0, 10.0, 100.0] {
+            acc.push(r);
+        }
+        let m = acc.metrics();
+        assert_eq!(m.hit1, 0.25);
+        assert_eq!(m.hit3, 0.5);
+        assert_eq!(m.hit10, 0.75);
+        assert_eq!(m.mr, 28.25);
+        assert!((m.mrr - (1.0 + 0.5 + 0.1 + 0.01) / 4.0).abs() < 1e-12);
+        assert_eq!(m.n, 4);
+    }
+
+    #[test]
+    fn merge_accumulators() {
+        let mut a = RankAccumulator::new();
+        a.push(1.0);
+        let mut b = RankAccumulator::new();
+        b.push(3.0);
+        a.merge(b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.metrics().hit3, 1.0);
+    }
+
+    #[test]
+    fn perfect_model() {
+        let mut acc = RankAccumulator::new();
+        for _ in 0..10 {
+            acc.push(1.0);
+        }
+        let m = acc.metrics();
+        assert_eq!(m.mrr, 1.0);
+        assert_eq!(m.mr, 1.0);
+        assert_eq!(m.hit1, 1.0);
+    }
+}

@@ -1,0 +1,317 @@
+//! Synthetic knowledge-graph generator (dataset substitution, DESIGN.md).
+//!
+//! We cannot download FB15k / WN18 / Freebase in this environment, so we
+//! generate *learnable* stand-ins from a latent ground-truth ("teacher")
+//! model. The generator reproduces the dataset properties the paper's
+//! optimizations depend on:
+//!
+//! * **learnability** — edges are chosen to score highly under a teacher
+//!   TransE model over low-dimensional latent vectors, so a student KGE
+//!   model can reach high Hit@k/MRR and accuracy-affecting optimizations
+//!   (degree-based negatives, staleness, partition restrictions) move the
+//!   metrics in the same direction they do on real data;
+//! * **long-tail relation frequencies** — Zipf-distributed, like
+//!   Freebase's 14.8k relations (drives relation partitioning, §3.4, and
+//!   KVStore reshuffling, §3.6);
+//! * **skewed entity degrees** — Zipf head selection (drives degree-based
+//!   negative sampling, §3.3);
+//! * **community structure** — entities belong to latent communities and
+//!   edges are mostly intra-community, so a min-cut partitioner finds the
+//!   diagonal-block structure of paper Fig. 2 (drives §3.2/§6.3).
+
+use super::triplets::{Triplet, TripletStore};
+use crate::util::alias::AliasTable;
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    pub n_entities: usize,
+    pub n_relations: usize,
+    pub n_edges: usize,
+    /// Latent teacher dimension (small; controls how "clean" the KG is).
+    pub latent_dim: usize,
+    /// Zipf exponent for relation frequencies (~1.0 for Freebase-like).
+    pub relation_zipf: f64,
+    /// Zipf exponent for head-entity popularity.
+    pub entity_zipf: f64,
+    /// Number of candidate tails scored per edge (higher = cleaner KG).
+    pub candidates: usize,
+    /// Number of latent communities (0 = ceil(sqrt(n_entities))).
+    pub n_communities: usize,
+    /// Probability an edge stays inside its head's community.
+    pub p_intra: f64,
+    /// Fraction of pure-noise edges (uniform random tails).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            n_entities: 10_000,
+            n_relations: 100,
+            n_edges: 100_000,
+            latent_dim: 16,
+            relation_zipf: 1.0,
+            entity_zipf: 0.7,
+            candidates: 24,
+            n_communities: 0,
+            p_intra: 0.85,
+            noise: 0.05,
+            seed: 0,
+        }
+    }
+}
+
+impl GeneratorConfig {
+    /// FB15k-shaped: 15k entities, 1.3k relations, ~500k edges.
+    pub fn fb15k_syn(seed: u64) -> Self {
+        GeneratorConfig {
+            n_entities: 14_951,
+            n_relations: 1_345,
+            n_edges: 500_000,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// WN18-shaped: 41k entities, 18 relations, ~150k edges.
+    pub fn wn18_syn(seed: u64) -> Self {
+        GeneratorConfig {
+            n_entities: 40_943,
+            n_relations: 18,
+            n_edges: 151_000,
+            relation_zipf: 0.6,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Freebase-shaped, scaled by `scale` (scale=1.0 → 100k entities,
+    /// 14.8k relations long-tail, 1M edges; the paper's real Freebase is
+    /// 86M/338M which does not fit this testbed's time budget).
+    pub fn freebase_syn(scale: f64, seed: u64) -> Self {
+        GeneratorConfig {
+            n_entities: ((100_000.0 * scale) as usize).max(1000),
+            n_relations: ((14_824.0 * scale.sqrt()) as usize).clamp(100, 14_824),
+            n_edges: ((1_000_000.0 * scale) as usize).max(10_000),
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Tiny graph for unit tests.
+    pub fn tiny(seed: u64) -> Self {
+        GeneratorConfig {
+            n_entities: 200,
+            n_relations: 8,
+            n_edges: 2_000,
+            candidates: 6,
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// Output: the KG plus the teacher latents (kept for diagnostics/tests).
+pub struct GeneratedKg {
+    pub store: TripletStore,
+    pub communities: Vec<u32>,
+    pub n_communities: usize,
+}
+
+fn zipf_weights(n: usize, exponent: f64) -> Vec<f64> {
+    (1..=n).map(|i| 1.0 / (i as f64).powf(exponent)).collect()
+}
+
+/// Generate a synthetic KG. Deterministic for a given config.
+pub fn generate(cfg: &GeneratorConfig) -> GeneratedKg {
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xD61E_5EED);
+    let n = cfg.n_entities;
+    let m = cfg.latent_dim;
+    let n_comm = if cfg.n_communities == 0 {
+        ((n as f64).sqrt().ceil() as usize).max(1)
+    } else {
+        cfg.n_communities
+    };
+
+    // Teacher latents. Entities of the same community share a centroid so
+    // intra-community edges are also semantically coherent.
+    let mut centroids = vec![0f32; n_comm * m];
+    for v in centroids.iter_mut() {
+        *v = rng.gen_normal();
+    }
+    let mut communities = vec![0u32; n];
+    let mut ent = vec![0f32; n * m];
+    for e in 0..n {
+        let c = rng.gen_index(n_comm);
+        communities[e] = c as u32;
+        for d in 0..m {
+            ent[e * m + d] = centroids[c * m + d] + 0.5 * rng.gen_normal();
+        }
+    }
+    let mut rel = vec![0f32; cfg.n_relations * m];
+    for v in rel.iter_mut() {
+        *v = 0.7 * rng.gen_normal();
+    }
+
+    // Entities grouped by community for intra-community tail candidates.
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); n_comm];
+    for e in 0..n {
+        by_comm[communities[e] as usize].push(e as u32);
+    }
+
+    // Popularity / frequency distributions. Identity permutation for
+    // relations (relation 0 is the most frequent — tests rely on the
+    // monotone shape, the ids are synthetic anyway).
+    let rel_table = AliasTable::new(&zipf_weights(cfg.n_relations, cfg.relation_zipf));
+    let head_table = AliasTable::new(&zipf_weights(n, cfg.entity_zipf));
+
+    let mut seen = std::collections::HashSet::with_capacity(cfg.n_edges * 2);
+    let mut store = TripletStore::new(n, cfg.n_relations);
+    let score = |h: usize, r: usize, t: usize, ent: &[f32], rel: &[f32]| -> f32 {
+        // teacher TransE-L2: -(||z_h + z_r - z_t||^2)
+        let mut s = 0f32;
+        for d in 0..m {
+            let diff = ent[h * m + d] + rel[r * m + d] - ent[t * m + d];
+            s += diff * diff;
+        }
+        -s
+    };
+
+    let mut attempts = 0usize;
+    let max_attempts = cfg.n_edges * 20;
+    while store.len() < cfg.n_edges && attempts < max_attempts {
+        attempts += 1;
+        let h = head_table.sample(&mut rng);
+        let r = rel_table.sample(&mut rng);
+        let t = if rng.gen_f64() < cfg.noise {
+            // pure-noise edge
+            rng.gen_index(n)
+        } else {
+            // pick the best-scoring of `candidates` tails, mostly from the
+            // head's community
+            let comm = &by_comm[communities[h] as usize];
+            let mut best_t = usize::MAX;
+            let mut best_s = f32::NEG_INFINITY;
+            for _ in 0..cfg.candidates {
+                let cand = if !comm.is_empty() && rng.gen_f64() < cfg.p_intra {
+                    comm[rng.gen_index(comm.len())] as usize
+                } else {
+                    rng.gen_index(n)
+                };
+                let s = score(h, r, cand, &ent, &rel);
+                if s > best_s {
+                    best_s = s;
+                    best_t = cand;
+                }
+            }
+            best_t
+        };
+        if t == h {
+            continue;
+        }
+        if seen.insert((h as u32, r as u32, t as u32)) {
+            store.push(Triplet { head: h as u32, rel: r as u32, tail: t as u32 });
+        }
+    }
+
+    GeneratedKg { store, communities, n_communities: n_comm }
+}
+
+/// Split a store into train/valid/test by fraction (e.g. 0.90/0.05/0.05,
+/// the paper's Freebase split). Deterministic shuffle by seed.
+pub fn split(
+    store: &TripletStore,
+    valid_frac: f64,
+    test_frac: f64,
+    seed: u64,
+) -> (TripletStore, TripletStore, TripletStore) {
+    let mut idx: Vec<usize> = (0..store.len()).collect();
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5917);
+    rng.shuffle(&mut idx);
+    let n_valid = (store.len() as f64 * valid_frac) as usize;
+    let n_test = (store.len() as f64 * test_frac) as usize;
+    let valid = store.select(&idx[..n_valid]);
+    let test = store.select(&idx[n_valid..n_valid + n_test]);
+    let train = store.select(&idx[n_valid + n_test..]);
+    (train, valid, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_size() {
+        let g = generate(&GeneratorConfig::tiny(1));
+        assert!(g.store.len() >= 1_800, "got {}", g.store.len());
+        assert_eq!(g.store.n_entities(), 200);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&GeneratorConfig::tiny(7));
+        let b = generate(&GeneratorConfig::tiny(7));
+        assert_eq!(a.store.heads, b.store.heads);
+        assert_eq!(a.store.tails, b.store.tails);
+        assert_eq!(a.store.rels, b.store.rels);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&GeneratorConfig::tiny(1));
+        let b = generate(&GeneratorConfig::tiny(2));
+        assert_ne!(a.store.heads, b.store.heads);
+    }
+
+    #[test]
+    fn no_self_loops_or_dups() {
+        let g = generate(&GeneratorConfig::tiny(3));
+        let mut seen = std::collections::HashSet::new();
+        for t in g.store.iter() {
+            assert_ne!(t.head, t.tail);
+            assert!(seen.insert((t.head, t.rel, t.tail)));
+        }
+    }
+
+    #[test]
+    fn relation_frequencies_long_tailed() {
+        let g = generate(&GeneratorConfig::tiny(4));
+        let counts = g.store.relation_counts();
+        // Zipf with identity permutation: relation 0 should be much more
+        // frequent than the median relation.
+        let mut sorted = counts.clone();
+        sorted.sort_unstable();
+        // tiny only has 8 relations, so the tail is shallow — require the
+        // head to be at least ~2.5× the median.
+        assert!(2 * counts[0] >= 5 * sorted[sorted.len() / 2].max(1), "{counts:?}");
+    }
+
+    #[test]
+    fn community_locality() {
+        let g = generate(&GeneratorConfig::tiny(5));
+        let intra = g
+            .store
+            .iter()
+            .filter(|t| g.communities[t.head as usize] == g.communities[t.tail as usize])
+            .count();
+        // p_intra = 0.85 with candidate selection should keep well over
+        // half the edges intra-community.
+        assert!(intra * 2 > g.store.len(), "intra={} of {}", intra, g.store.len());
+    }
+
+    #[test]
+    fn split_fractions() {
+        let g = generate(&GeneratorConfig::tiny(6));
+        let (train, valid, test) = split(&g.store, 0.05, 0.05, 9);
+        assert_eq!(train.len() + valid.len() + test.len(), g.store.len());
+        assert!((valid.len() as f64 / g.store.len() as f64 - 0.05).abs() < 0.01);
+        // no overlap
+        let set = crate::kg::triplets::TripletSet::from_stores([&train]);
+        for t in test.iter() {
+            assert!(!set.contains(t.head, t.rel, t.tail));
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Knowledge-graph data layer: triplet stores, vocabularies, synthetic
+//! dataset generation, and dataset I/O.
+
+pub mod dataset;
+pub mod generator;
+pub mod triplets;
+pub mod vocab;
+
+pub use dataset::Dataset;
+pub use triplets::{Csr, Triplet, TripletSet, TripletStore};

@@ -1,0 +1,257 @@
+//! Triplet storage with CSR adjacency indexes.
+//!
+//! A knowledge graph is a list of `(head, relation, tail)` triplets over
+//! dense entity/relation id spaces (paper §2). We keep the raw triplet
+//! arrays (struct-of-arrays, cache friendly for batch sampling) plus CSR
+//! indexes by head and by tail for degree queries, filtered evaluation,
+//! and the partitioners.
+
+/// A single (head, relation, tail) edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Triplet {
+    pub head: u32,
+    pub rel: u32,
+    pub tail: u32,
+}
+
+/// Struct-of-arrays triplet store.
+#[derive(Clone, Debug, Default)]
+pub struct TripletStore {
+    pub heads: Vec<u32>,
+    pub rels: Vec<u32>,
+    pub tails: Vec<u32>,
+    n_entities: usize,
+    n_relations: usize,
+}
+
+impl TripletStore {
+    pub fn new(n_entities: usize, n_relations: usize) -> Self {
+        TripletStore { heads: vec![], rels: vec![], tails: vec![], n_entities, n_relations }
+    }
+
+    pub fn from_triplets(n_entities: usize, n_relations: usize, triplets: &[Triplet]) -> Self {
+        let mut s = Self::new(n_entities, n_relations);
+        s.heads.reserve(triplets.len());
+        s.rels.reserve(triplets.len());
+        s.tails.reserve(triplets.len());
+        for t in triplets {
+            s.push(*t);
+        }
+        s
+    }
+
+    pub fn push(&mut self, t: Triplet) {
+        debug_assert!((t.head as usize) < self.n_entities, "head out of range");
+        debug_assert!((t.tail as usize) < self.n_entities, "tail out of range");
+        debug_assert!((t.rel as usize) < self.n_relations, "rel out of range");
+        self.heads.push(t.head);
+        self.rels.push(t.rel);
+        self.tails.push(t.tail);
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heads.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Triplet {
+        Triplet { head: self.heads[i], rel: self.rels[i], tail: self.tails[i] }
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.n_entities
+    }
+
+    pub fn n_relations(&self) -> usize {
+        self.n_relations
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Triplet> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Total degree (in + out) per entity.
+    pub fn entity_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n_entities];
+        for &h in &self.heads {
+            deg[h as usize] += 1;
+        }
+        for &t in &self.tails {
+            deg[t as usize] += 1;
+        }
+        deg
+    }
+
+    /// Triplet count per relation (the paper's relation frequency, §3.4).
+    pub fn relation_counts(&self) -> Vec<u64> {
+        let mut cnt = vec![0u64; self.n_relations];
+        for &r in &self.rels {
+            cnt[r as usize] += 1;
+        }
+        cnt
+    }
+
+    /// Select a subset of triplet indices into a new store.
+    pub fn select(&self, idx: &[usize]) -> TripletStore {
+        let mut s = TripletStore::new(self.n_entities, self.n_relations);
+        for &i in idx {
+            s.push(self.get(i));
+        }
+        s
+    }
+}
+
+/// CSR adjacency over a triplet store: for each key entity, the list of
+/// (other entity, relation) pairs. Built by counting sort — O(E).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub offsets: Vec<u64>,
+    /// neighbor entity ids, aligned with `rels`
+    pub neighbors: Vec<u32>,
+    pub rels: Vec<u32>,
+}
+
+impl Csr {
+    /// Build keyed by head (out-edges) if `by_head`, else keyed by tail.
+    pub fn build(store: &TripletStore, by_head: bool) -> Csr {
+        let n = store.n_entities();
+        let (keys, others) = if by_head {
+            (&store.heads, &store.tails)
+        } else {
+            (&store.tails, &store.heads)
+        };
+        let mut offsets = vec![0u64; n + 1];
+        for &k in keys {
+            offsets[k as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0u32; keys.len()];
+        let mut rels = vec![0u32; keys.len()];
+        for i in 0..keys.len() {
+            let k = keys[i] as usize;
+            let pos = cursor[k] as usize;
+            neighbors[pos] = others[i];
+            rels[pos] = store.rels[i];
+            cursor[k] += 1;
+        }
+        Csr { offsets, neighbors, rels }
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// (neighbor, relation) pairs incident to `v`.
+    pub fn edges(&self, v: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        (lo..hi).map(move |i| (self.neighbors[i], self.rels[i]))
+    }
+}
+
+/// Hash set of all triplets — used by the filtered evaluation protocol to
+/// drop corrupted triplets that exist in the dataset (paper §5.3).
+#[derive(Debug, Default)]
+pub struct TripletSet {
+    set: std::collections::HashSet<(u32, u32, u32)>,
+}
+
+impl TripletSet {
+    pub fn from_stores<'a>(stores: impl IntoIterator<Item = &'a TripletStore>) -> Self {
+        let mut set = std::collections::HashSet::new();
+        for s in stores {
+            for t in s.iter() {
+                set.insert((t.head, t.rel, t.tail));
+            }
+        }
+        TripletSet { set }
+    }
+
+    #[inline]
+    pub fn contains(&self, h: u32, r: u32, t: u32) -> bool {
+        self.set.contains(&(h, r, t))
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> TripletStore {
+        // 4 entities, 2 relations
+        let t = [(0, 0, 1), (0, 1, 2), (1, 0, 2), (3, 1, 0), (2, 0, 3)];
+        let trip: Vec<Triplet> =
+            t.iter().map(|&(h, r, t)| Triplet { head: h, rel: r, tail: t }).collect();
+        TripletStore::from_triplets(4, 2, &trip)
+    }
+
+    #[test]
+    fn degrees() {
+        let s = toy();
+        assert_eq!(s.entity_degrees(), vec![3, 2, 3, 2]);
+        assert_eq!(s.relation_counts(), vec![3, 2]);
+    }
+
+    #[test]
+    fn csr_by_head() {
+        let s = toy();
+        let csr = Csr::build(&s, true);
+        assert_eq!(csr.degree(0), 2);
+        let e: Vec<_> = csr.edges(0).collect();
+        assert!(e.contains(&(1, 0)) && e.contains(&(2, 1)));
+        assert_eq!(csr.degree(2), 1);
+    }
+
+    #[test]
+    fn csr_by_tail() {
+        let s = toy();
+        let csr = Csr::build(&s, false);
+        assert_eq!(csr.degree(2), 2);
+        let e: Vec<_> = csr.edges(0).collect();
+        assert_eq!(e, vec![(3, 1)]);
+    }
+
+    #[test]
+    fn csr_total_edges_preserved() {
+        let s = toy();
+        for by_head in [true, false] {
+            let csr = Csr::build(&s, by_head);
+            let total: usize = (0..4).map(|v| csr.degree(v)).sum();
+            assert_eq!(total, s.len());
+        }
+    }
+
+    #[test]
+    fn triplet_set_membership() {
+        let s = toy();
+        let set = TripletSet::from_stores([&s]);
+        assert!(set.contains(0, 0, 1));
+        assert!(!set.contains(1, 1, 0));
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn select_subset() {
+        let s = toy();
+        let sub = s.select(&[0, 2]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.get(1), Triplet { head: 1, rel: 0, tail: 2 });
+    }
+}

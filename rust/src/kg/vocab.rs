@@ -1,0 +1,89 @@
+//! Entity / relation vocabularies: string name ↔ dense id mapping.
+//!
+//! Real KG files (FB15k TSV etc.) name entities with opaque strings
+//! (`/m/027rn`); training works on dense u32 ids. `Vocab` builds the
+//! mapping on first sight, preserving insertion order for reproducibility.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    name_to_id: HashMap<String, u32>,
+    id_to_name: Vec<String>,
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get the id for `name`, inserting it if unseen.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.name_to_id.get(name) {
+            return id;
+        }
+        let id = self.id_to_name.len() as u32;
+        self.name_to_id.insert(name.to_string(), id);
+        self.id_to_name.push(name.to_string());
+        id
+    }
+
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.name_to_id.get(name).copied()
+    }
+
+    pub fn name(&self, id: u32) -> Option<&str> {
+        self.id_to_name.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_name.is_empty()
+    }
+
+    /// Synthetic vocab with ids as names ("e0", "e1", ...), used by the
+    /// generator presets.
+    pub fn synthetic(prefix: &str, n: usize) -> Self {
+        let mut v = Vocab::new();
+        for i in 0..n {
+            v.intern(&format!("{prefix}{i}"));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut v = Vocab::new();
+        let a = v.intern("/m/x");
+        let b = v.intern("/m/y");
+        assert_eq!(v.intern("/m/x"), a);
+        assert_eq!(a, 0);
+        assert_eq!(b, 1);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn lookup_both_ways() {
+        let mut v = Vocab::new();
+        let id = v.intern("hello");
+        assert_eq!(v.get("hello"), Some(id));
+        assert_eq!(v.name(id), Some("hello"));
+        assert_eq!(v.get("missing"), None);
+        assert_eq!(v.name(99), None);
+    }
+
+    #[test]
+    fn synthetic_sizes() {
+        let v = Vocab::synthetic("e", 10);
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.get("e7"), Some(7));
+    }
+}

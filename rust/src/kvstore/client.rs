@@ -1,0 +1,304 @@
+//! KVStore client: batched pull/push with the same-machine shared-memory
+//! fast path and a remote-traffic ledger.
+//!
+//! One client per trainer thread. Ids are deduplicated before hitting the
+//! wire (DGL-KE pulls each unique embedding once per batch), grouped by
+//! owning server, fetched (local servers by direct memcpy, remote servers
+//! over TCP), then scattered into the caller's batch buffers.
+
+use super::placement::Placement;
+use super::protocol::*;
+use super::server::ServerState;
+use crate::util::bytes::Reader;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Remote/local traffic counters shared across a run's clients.
+#[derive(Debug, Default)]
+pub struct NetLedger {
+    pub local_bytes: AtomicU64,
+    pub remote_bytes: AtomicU64,
+    pub remote_requests: AtomicU64,
+}
+
+impl NetLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn local(&self) -> u64 {
+        self.local_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn remote(&self) -> u64 {
+        self.remote_bytes.load(Ordering::Relaxed)
+    }
+}
+
+enum Link {
+    /// same machine: direct shared-memory access
+    Local(Arc<ServerState>),
+    /// different machine: TCP connection
+    Remote(TcpStream),
+}
+
+/// Per-trainer KVStore client homed on one machine.
+pub struct KvClient {
+    pub machine: usize,
+    placement: Arc<Placement>,
+    links: Vec<Link>,
+    ledger: Arc<NetLedger>,
+    /// scratch: per-server slot lists
+    pull_slots: Vec<Vec<u64>>,
+    pull_back: Vec<Vec<usize>>, // positions into the unique-id list
+}
+
+impl KvClient {
+    /// Connect a client on `machine`. `states[s]`/`addrs[s]` describe
+    /// server `s`; same-machine servers are linked through shared memory.
+    pub fn connect(
+        machine: usize,
+        placement: Arc<Placement>,
+        states: &[Arc<ServerState>],
+        addrs: &[std::net::SocketAddr],
+        ledger: Arc<NetLedger>,
+    ) -> Result<KvClient> {
+        let n = placement.n_servers();
+        anyhow::ensure!(states.len() == n && addrs.len() == n);
+        let mut links = Vec::with_capacity(n);
+        for s in 0..n {
+            if placement.machine_of_server(s) == machine {
+                links.push(Link::Local(states[s].clone()));
+            } else {
+                let stream = TcpStream::connect(addrs[s])?;
+                stream.set_nodelay(true)?;
+                links.push(Link::Remote(stream));
+            }
+        }
+        Ok(KvClient {
+            machine,
+            placement,
+            links,
+            ledger,
+            pull_slots: vec![Vec::new(); n],
+            pull_back: vec![Vec::new(); n],
+        })
+    }
+
+    fn server_and_slot(&self, table: TableId, id: u64) -> (usize, u64) {
+        match table {
+            TableId::Entities => (
+                self.placement.ent_server[id as usize] as usize,
+                self.placement.ent_slot[id as usize] as u64,
+            ),
+            TableId::Relations => (
+                self.placement.rel_server[id as usize] as usize,
+                self.placement.rel_slot[id as usize] as u64,
+            ),
+        }
+    }
+
+    /// Pull rows for (possibly duplicated) `ids` into `out[ids.len(), dim]`.
+    pub fn pull(&mut self, table: TableId, ids: &[u64], dim: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(out.len(), ids.len() * dim);
+        // dedup
+        let mut unique: Vec<u64> = Vec::with_capacity(ids.len());
+        let mut index: HashMap<u64, usize> = HashMap::with_capacity(ids.len());
+        for &id in ids {
+            index.entry(id).or_insert_with(|| {
+                unique.push(id);
+                unique.len() - 1
+            });
+        }
+        // group by server
+        for s in 0..self.links.len() {
+            self.pull_slots[s].clear();
+            self.pull_back[s].clear();
+        }
+        for (u, &id) in unique.iter().enumerate() {
+            let (s, slot) = self.server_and_slot(table, id);
+            self.pull_slots[s].push(slot);
+            self.pull_back[s].push(u);
+        }
+        // fetch per server into the unique-row buffer
+        let mut rows = vec![0f32; unique.len() * dim];
+        for s in 0..self.links.len() {
+            if self.pull_slots[s].is_empty() {
+                continue;
+            }
+            let slots = std::mem::take(&mut self.pull_slots[s]);
+            let nbytes = (slots.len() * dim * 4 + slots.len() * 8) as u64;
+            match &mut self.links[s] {
+                Link::Local(state) => {
+                    self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    let mut tmp = vec![0f32; slots.len() * dim];
+                    state.pull_local(table, &slots, &mut tmp);
+                    for (j, &u) in self.pull_back[s].iter().enumerate() {
+                        rows[u * dim..(u + 1) * dim].copy_from_slice(&tmp[j * dim..(j + 1) * dim]);
+                    }
+                }
+                Link::Remote(stream) => {
+                    self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    write_frame(stream, OP_PULL, &encode_pull(table, &slots))?;
+                    let (op, payload) = read_frame(stream)?;
+                    if op != OP_OK {
+                        bail!("server error on pull");
+                    }
+                    let tmp = Reader::new(&payload).f32_vec()?;
+                    anyhow::ensure!(tmp.len() == slots.len() * dim, "bad pull response size");
+                    for (j, &u) in self.pull_back[s].iter().enumerate() {
+                        rows[u * dim..(u + 1) * dim].copy_from_slice(&tmp[j * dim..(j + 1) * dim]);
+                    }
+                }
+            }
+            self.pull_slots[s] = slots;
+        }
+        // scatter to caller layout
+        for (j, &id) in ids.iter().enumerate() {
+            let u = index[&id];
+            out[j * dim..(j + 1) * dim].copy_from_slice(&rows[u * dim..(u + 1) * dim]);
+        }
+        Ok(())
+    }
+
+    /// Push (already accumulated) gradient rows; the owning server applies
+    /// AdaGrad.
+    pub fn push(&mut self, table: TableId, ids: &[u64], dim: usize, rows: &[f32]) -> Result<()> {
+        debug_assert_eq!(rows.len(), ids.len() * dim);
+        let n = self.links.len();
+        let mut slots: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut data: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for (j, &id) in ids.iter().enumerate() {
+            let (s, slot) = self.server_and_slot(table, id);
+            slots[s].push(slot);
+            data[s].extend_from_slice(&rows[j * dim..(j + 1) * dim]);
+        }
+        for s in 0..n {
+            if slots[s].is_empty() {
+                continue;
+            }
+            let nbytes = (data[s].len() * 4 + slots[s].len() * 8) as u64;
+            match &mut self.links[s] {
+                Link::Local(state) => {
+                    self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    state.push_local(table, &slots[s], &data[s]);
+                }
+                Link::Remote(stream) => {
+                    self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    write_frame(stream, OP_PUSH, &encode_push(table, &slots[s], &data[s]))?;
+                    let (op, _) = read_frame(stream)?;
+                    if op != OP_OK {
+                        bail!("server error on push");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for KvClient {
+    fn drop(&mut self) {
+        for link in &mut self.links {
+            if let Link::Remote(stream) = link {
+                let _ = write_frame(stream, OP_STOP, &[]);
+                let _ = read_frame(stream);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::server::KvServer;
+
+    /// 2 machines × 1 server, 8 entities striped, 4 relations.
+    fn cluster() -> (Vec<KvServer>, Arc<Placement>, Vec<Arc<ServerState>>, Vec<std::net::SocketAddr>) {
+        let entity_machine: Vec<u32> = (0..8).map(|i| (i % 2) as u32).collect();
+        let placement = Arc::new(Placement::build(&entity_machine, 4, 2, 1, 3));
+        let mut servers = Vec::new();
+        let mut states = Vec::new();
+        let mut addrs = Vec::new();
+        for s in 0..2 {
+            let state = Arc::new(ServerState::init(
+                &placement.ent_ids_of_server[s],
+                &placement.rel_ids_of_server[s],
+                4,
+                4,
+                0.5,
+                0.1,
+                99,
+            ));
+            let server = KvServer::start(state.clone()).unwrap();
+            addrs.push(server.addr);
+            states.push(state);
+            servers.push(server);
+        }
+        (servers, placement, states, addrs)
+    }
+
+    #[test]
+    fn pull_mixed_local_remote() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut client =
+            KvClient::connect(0, placement.clone(), &states, &addrs, ledger.clone()).unwrap();
+        // ids 0..8 span both machines; 3 duplicated
+        let ids = [0u64, 1, 2, 3, 3, 7];
+        let mut out = vec![0f32; ids.len() * 4];
+        client.pull(TableId::Entities, &ids, 4, &mut out).unwrap();
+        // duplicates identical
+        assert_eq!(&out[3 * 4..4 * 4], &out[4 * 4..5 * 4]);
+        // values match server state directly
+        let (s, slot) = (placement.ent_server[7] as usize, placement.ent_slot[7] as usize);
+        assert_eq!(&out[5 * 4..6 * 4], states[s].ents.row(slot));
+        assert!(ledger.local() > 0, "machine-0 ids should use fast path");
+        assert!(ledger.remote() > 0, "machine-1 ids should use TCP");
+    }
+
+    #[test]
+    fn push_updates_remote_rows() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut client =
+            KvClient::connect(0, placement.clone(), &states, &addrs, ledger).unwrap();
+        // entity 1 lives on machine 1 (remote from machine 0)
+        let (s, slot) = (placement.ent_server[1] as usize, placement.ent_slot[1] as usize);
+        let before = states[s].ents.row(slot).to_vec();
+        client.push(TableId::Entities, &[1], 4, &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_ne!(states[s].ents.row(slot), before.as_slice());
+    }
+
+    #[test]
+    fn relations_pull_roundtrip() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut client = KvClient::connect(1, placement.clone(), &states, &addrs, ledger).unwrap();
+        let ids = [0u64, 1, 2, 3];
+        let mut out = vec![0f32; 4 * 4];
+        client.pull(TableId::Relations, &ids, 4, &mut out).unwrap();
+        for (j, &id) in ids.iter().enumerate() {
+            let (s, slot) =
+                (placement.rel_server[id as usize] as usize, placement.rel_slot[id as usize] as usize);
+            assert_eq!(&out[j * 4..(j + 1) * 4], states[s].rels.row(slot), "rel {id}");
+        }
+    }
+
+    #[test]
+    fn dedup_reduces_wire_bytes() {
+        let (_servers, placement, states, addrs) = cluster();
+        let l1 = Arc::new(NetLedger::new());
+        let mut c1 = KvClient::connect(0, placement.clone(), &states, &addrs, l1.clone()).unwrap();
+        let many_dups = vec![1u64; 64];
+        let mut out = vec![0f32; 64 * 4];
+        c1.pull(TableId::Entities, &many_dups, 4, &mut out).unwrap();
+        // only ONE unique row crosses the wire
+        assert_eq!(l1.remote(), (4 * 4 + 8) as u64);
+    }
+}

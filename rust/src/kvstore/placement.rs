@@ -1,0 +1,153 @@
+//! Placement: which server owns each embedding row, and at which slot.
+//!
+//! * **Entities** follow the graph partition: a METIS partition's entities
+//!   live on its machine's servers (paper §3.2 "co-locate the embeddings
+//!   of the entities with the triplets in the diagonal block"), spread
+//!   across that machine's servers by hash.
+//! * **Relations** are *reshuffled* across all servers by hash (paper
+//!   §3.6: long-tail relation frequencies would otherwise make the server
+//!   holding the head relations a hot spot).
+
+use crate::util::rng::splitmix64;
+
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub machines: usize,
+    pub servers_per_machine: usize,
+    /// entity id → global server index
+    pub ent_server: Vec<u32>,
+    /// entity id → slot within its server
+    pub ent_slot: Vec<u32>,
+    /// relation id → global server index
+    pub rel_server: Vec<u32>,
+    /// relation id → slot within its server
+    pub rel_slot: Vec<u32>,
+    /// per-server (entity_count, relation_count)
+    pub server_sizes: Vec<(usize, usize)>,
+    /// per-server list of entity ids in slot order (for init/dump)
+    pub ent_ids_of_server: Vec<Vec<u64>>,
+    pub rel_ids_of_server: Vec<Vec<u64>>,
+}
+
+fn hash_to(seed: u64, id: u64, buckets: usize) -> usize {
+    let mut s = seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    (splitmix64(&mut s) % buckets as u64) as usize
+}
+
+impl Placement {
+    /// `entity_machine[id]` assigns entities to machines (from the graph
+    /// partition; use a uniform hash assignment when training without
+    /// METIS).
+    pub fn build(
+        entity_machine: &[u32],
+        n_relations: usize,
+        machines: usize,
+        servers_per_machine: usize,
+        seed: u64,
+    ) -> Placement {
+        let n_servers = machines * servers_per_machine;
+        let n_entities = entity_machine.len();
+        let mut ent_server = vec![0u32; n_entities];
+        let mut ent_slot = vec![0u32; n_entities];
+        let mut rel_server = vec![0u32; n_relations];
+        let mut rel_slot = vec![0u32; n_relations];
+        let mut server_sizes = vec![(0usize, 0usize); n_servers];
+        let mut ent_ids_of_server: Vec<Vec<u64>> = vec![Vec::new(); n_servers];
+        let mut rel_ids_of_server: Vec<Vec<u64>> = vec![Vec::new(); n_servers];
+
+        for (id, &m) in entity_machine.iter().enumerate() {
+            debug_assert!((m as usize) < machines);
+            let local = hash_to(seed ^ 0xE17, id as u64, servers_per_machine);
+            let s = m as usize * servers_per_machine + local;
+            ent_server[id] = s as u32;
+            ent_slot[id] = server_sizes[s].0 as u32;
+            server_sizes[s].0 += 1;
+            ent_ids_of_server[s].push(id as u64);
+        }
+        // relations: reshuffled across ALL servers
+        for id in 0..n_relations {
+            let s = hash_to(seed ^ 0x4e1, id as u64, n_servers);
+            rel_server[id] = s as u32;
+            rel_slot[id] = server_sizes[s].1 as u32;
+            server_sizes[s].1 += 1;
+            rel_ids_of_server[s].push(id as u64);
+        }
+        Placement {
+            machines,
+            servers_per_machine,
+            ent_server,
+            ent_slot,
+            rel_server,
+            rel_slot,
+            server_sizes,
+            ent_ids_of_server,
+            rel_ids_of_server,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.machines * self.servers_per_machine
+    }
+
+    pub fn machine_of_server(&self, server: usize) -> usize {
+        server / self.servers_per_machine
+    }
+
+    /// Entities resident on `machine` (the local negative-sampling pool).
+    pub fn entities_of_machine(&self, machine: usize) -> Vec<u32> {
+        self.ent_server
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| self.machine_of_server(s as usize) == machine)
+            .map(|(id, _)| id as u32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_placement() -> Placement {
+        let entity_machine: Vec<u32> = (0..100).map(|i| (i % 4) as u32).collect();
+        Placement::build(&entity_machine, 50, 4, 2, 7)
+    }
+
+    #[test]
+    fn entities_land_on_their_machine() {
+        let p = toy_placement();
+        for id in 0..100usize {
+            let s = p.ent_server[id] as usize;
+            assert_eq!(p.machine_of_server(s), id % 4);
+        }
+    }
+
+    #[test]
+    fn slots_dense_per_server() {
+        let p = toy_placement();
+        for s in 0..p.n_servers() {
+            let ids = &p.ent_ids_of_server[s];
+            assert_eq!(ids.len(), p.server_sizes[s].0);
+            for (slot, &id) in ids.iter().enumerate() {
+                assert_eq!(p.ent_slot[id as usize] as usize, slot);
+                assert_eq!(p.ent_server[id as usize] as usize, s);
+            }
+        }
+    }
+
+    #[test]
+    fn relations_spread_across_servers() {
+        let p = toy_placement();
+        let used: std::collections::HashSet<u32> = p.rel_server.iter().copied().collect();
+        // 50 relations over 8 servers should hit most servers
+        assert!(used.len() >= 6, "{used:?}");
+    }
+
+    #[test]
+    fn machine_pools_partition_entities() {
+        let p = toy_placement();
+        let total: usize = (0..4).map(|m| p.entities_of_machine(m).len()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(p.entities_of_machine(0), (0..100u32).step_by(4).collect::<Vec<_>>());
+    }
+}

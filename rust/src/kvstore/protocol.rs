@@ -1,0 +1,137 @@
+//! KVStore wire protocol: length-prefixed frames over TCP.
+//!
+//! Frame = `[u32 len][u8 opcode][payload]`. Payloads use the codecs in
+//! `util::bytes`. The protocol is deliberately tiny: PULL gathers rows,
+//! PUSH applies gradients server-side (the server owns the optimizer,
+//! like DGL-KE's KVStore), PING measures round trips, STOP shuts a
+//! connection down.
+
+use crate::util::bytes::{Reader, Writer};
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+pub const OP_PULL: u8 = 1;
+pub const OP_PUSH: u8 = 2;
+pub const OP_PING: u8 = 3;
+pub const OP_STOP: u8 = 4;
+pub const OP_OK: u8 = 0x80;
+pub const OP_ERR: u8 = 0xFF;
+
+/// Table selector within a server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableId {
+    Entities = 0,
+    Relations = 1,
+}
+
+impl TableId {
+    pub fn from_u8(v: u8) -> Result<TableId> {
+        match v {
+            0 => Ok(TableId::Entities),
+            1 => Ok(TableId::Relations),
+            _ => bail!("bad table id {v}"),
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_frame(stream: &mut impl Write, opcode: u8, payload: &[u8]) -> Result<()> {
+    let len = (payload.len() + 1) as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(&[opcode])?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame; returns (opcode, payload). Caps frames at 1 GiB.
+pub fn read_frame(stream: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > (1 << 30) {
+        bail!("bad frame length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    let op = buf[0];
+    buf.remove(0);
+    Ok((op, buf))
+}
+
+/// PULL request: (table, slots).
+pub fn encode_pull(table: TableId, slots: &[u64]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(9 + slots.len() * 8);
+    w.u8(table as u8);
+    w.u64_slice(slots);
+    w.buf
+}
+
+pub fn decode_pull(payload: &[u8]) -> Result<(TableId, Vec<u64>)> {
+    let mut r = Reader::new(payload);
+    let table = TableId::from_u8(r.u8()?)?;
+    Ok((table, r.u64_vec()?))
+}
+
+/// PUSH request: (table, slots, grad rows).
+pub fn encode_push(table: TableId, slots: &[u64], rows: &[f32]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(17 + slots.len() * 8 + rows.len() * 4);
+    w.u8(table as u8);
+    w.u64_slice(slots);
+    w.f32_slice(rows);
+    w.buf
+}
+
+pub fn decode_push(payload: &[u8]) -> Result<(TableId, Vec<u64>, Vec<f32>)> {
+    let mut r = Reader::new(payload);
+    let table = TableId::from_u8(r.u8()?)?;
+    let slots = r.u64_vec()?;
+    let rows = r.f32_vec()?;
+    Ok((table, slots, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_PULL, b"hello").unwrap();
+        let (op, payload) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(op, OP_PULL);
+        assert_eq!(payload, b"hello");
+    }
+
+    #[test]
+    fn pull_roundtrip() {
+        let enc = encode_pull(TableId::Relations, &[3, 1, 4]);
+        let (t, slots) = decode_pull(&enc).unwrap();
+        assert_eq!(t, TableId::Relations);
+        assert_eq!(slots, vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn push_roundtrip() {
+        let enc = encode_push(TableId::Entities, &[7], &[1.0, -2.0]);
+        let (t, slots, rows) = decode_push(&enc).unwrap();
+        assert_eq!(t, TableId::Entities);
+        assert_eq!(slots, vec![7]);
+        assert_eq!(rows, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_PUSH, b"abcdef").unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! KVStore server: owns embedding shards and applies sparse AdaGrad on
+//! push (paper §3.6 — the KVStore does the optimizer work, overlapping
+//! gradient communication with local gradient computation).
+//!
+//! Each server is reachable two ways:
+//! * **shared memory** — same-machine trainers call [`ServerState`]
+//!   methods directly through an `Arc` (the paper's same-machine
+//!   optimization);
+//! * **TCP** — remote trainers connect to the server's loopback port and
+//!   speak the frame protocol; one service thread per connection.
+
+use super::protocol::*;
+use crate::store::{EmbeddingTable, SparseAdagrad};
+use anyhow::Result;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// In-memory state of one server (shared-memory fast path operates on
+/// this directly).
+pub struct ServerState {
+    pub ents: EmbeddingTable,
+    pub rels: EmbeddingTable,
+    pub ent_opt: SparseAdagrad,
+    pub rel_opt: SparseAdagrad,
+    /// ops served (pulls, pushes) — diagnostics
+    pub pulls: AtomicU64,
+    pub pushes: AtomicU64,
+}
+
+impl ServerState {
+    /// Initialize shard tables. Row init is derived from the *global* id,
+    /// so embeddings are identical regardless of placement — single-node
+    /// and distributed runs start from the same model.
+    pub fn init(
+        ent_ids: &[u64],
+        rel_ids: &[u64],
+        dim: usize,
+        rel_dim: usize,
+        lr: f32,
+        init_scale: f32,
+        seed: u64,
+    ) -> ServerState {
+        let ents = EmbeddingTable::zeros(ent_ids.len(), dim);
+        for (slot, &id) in ent_ids.iter().enumerate() {
+            let mut rng = crate::util::rng::Rng::seed_from_u64(seed ^ (id.wrapping_mul(2) + 1));
+            let row = unsafe { ents.row_mut(slot) };
+            for v in row {
+                *v = rng.gen_uniform(-init_scale, init_scale);
+            }
+        }
+        let rels = EmbeddingTable::zeros(rel_ids.len(), rel_dim);
+        for (slot, &id) in rel_ids.iter().enumerate() {
+            let mut rng =
+                crate::util::rng::Rng::seed_from_u64(seed ^ (id.wrapping_mul(2) + 0x10001));
+            let row = unsafe { rels.row_mut(slot) };
+            for v in row {
+                *v = rng.gen_uniform(-init_scale, init_scale);
+            }
+        }
+        ServerState {
+            ent_opt: SparseAdagrad::new(ent_ids.len(), lr),
+            rel_opt: SparseAdagrad::new(rel_ids.len(), lr),
+            ents,
+            rels,
+            pulls: AtomicU64::new(0),
+            pushes: AtomicU64::new(0),
+        }
+    }
+
+    fn table(&self, t: TableId) -> &EmbeddingTable {
+        match t {
+            TableId::Entities => &self.ents,
+            TableId::Relations => &self.rels,
+        }
+    }
+
+    /// Shared-memory pull: copy rows at `slots` into `out`.
+    pub fn pull_local(&self, t: TableId, slots: &[u64], out: &mut [f32]) {
+        self.pulls.fetch_add(1, Ordering::Relaxed);
+        self.table(t).gather(slots, out);
+    }
+
+    /// Shared-memory push: apply AdaGrad to rows at `slots`.
+    pub fn push_local(&self, t: TableId, slots: &[u64], rows: &[f32]) {
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        match t {
+            TableId::Entities => self.ent_opt.apply(&self.ents, slots, rows),
+            TableId::Relations => self.rel_opt.apply(&self.rels, slots, rows),
+        }
+    }
+}
+
+/// A running TCP server around a [`ServerState`].
+pub struct KvServer {
+    pub state: Arc<ServerState>,
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KvServer {
+    /// Bind an ephemeral loopback port and start serving.
+    pub fn start(state: Arc<ServerState>) -> Result<KvServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_state = state.clone();
+        let accept_stop = stop.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("dglke-kv-accept".into())
+            .spawn(move || {
+                // accept loop; connection threads detach and exit on STOP /
+                // socket close
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let st = accept_state.clone();
+                            std::thread::Builder::new()
+                                .name("dglke-kv-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(stream, &st);
+                                })
+                                .expect("spawn conn thread");
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(KvServer { state, addr, stop, accept_handle: Some(accept_handle) })
+    }
+
+    /// Stop accepting (open connections finish on their own STOP frames).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for KvServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        let (op, payload) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        match op {
+            OP_PULL => {
+                let (t, slots) = decode_pull(&payload)?;
+                let dim = match t {
+                    TableId::Entities => state.ents.dim(),
+                    TableId::Relations => state.rels.dim(),
+                };
+                let mut rows = vec![0f32; slots.len() * dim];
+                state.pull_local(t, &slots, &mut rows);
+                let mut w = crate::util::bytes::Writer::with_capacity(rows.len() * 4 + 8);
+                w.f32_slice(&rows);
+                write_frame(&mut stream, OP_OK, &w.buf)?;
+            }
+            OP_PUSH => {
+                let (t, slots, rows) = decode_push(&payload)?;
+                state.push_local(t, &slots, &rows);
+                write_frame(&mut stream, OP_OK, &[])?;
+            }
+            OP_PING => {
+                write_frame(&mut stream, OP_OK, &payload)?;
+            }
+            OP_STOP => {
+                write_frame(&mut stream, OP_OK, &[])?;
+                return Ok(());
+            }
+            _ => {
+                write_frame(&mut stream, OP_ERR, b"bad opcode")?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_server() -> KvServer {
+        let state = ServerState::init(&[10, 20, 30], &[5], 4, 2, 0.5, 0.1, 42);
+        KvServer::start(Arc::new(state)).unwrap()
+    }
+
+    #[test]
+    fn init_is_placement_independent() {
+        let a = ServerState::init(&[10, 20], &[], 4, 2, 0.5, 0.1, 42);
+        let b = ServerState::init(&[20, 10], &[], 4, 2, 0.5, 0.1, 42);
+        assert_eq!(a.ents.row(0), b.ents.row(1)); // id 10
+        assert_eq!(a.ents.row(1), b.ents.row(0)); // id 20
+    }
+
+    #[test]
+    fn tcp_pull_push_roundtrip() {
+        let server = toy_server();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+
+        // pull slot 1 (entity id 20)
+        write_frame(&mut stream, OP_PULL, &encode_pull(TableId::Entities, &[1])).unwrap();
+        let (op, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(op, OP_OK);
+        let rows = crate::util::bytes::Reader::new(&payload).f32_vec().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.as_slice(), server.state.ents.row(1));
+
+        // push a gradient and observe the row move
+        let before = server.state.ents.row(1).to_vec();
+        write_frame(
+            &mut stream,
+            OP_PUSH,
+            &encode_push(TableId::Entities, &[1], &[1.0, 1.0, 1.0, 1.0]),
+        )
+        .unwrap();
+        let (op, _) = read_frame(&mut stream).unwrap();
+        assert_eq!(op, OP_OK);
+        assert_ne!(server.state.ents.row(1), before.as_slice());
+
+        write_frame(&mut stream, OP_STOP, &[]).unwrap();
+        let (op, _) = read_frame(&mut stream).unwrap();
+        assert_eq!(op, OP_OK);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = toy_server();
+        crate::util::threadpool::scoped_map(4, |_| {
+            let mut stream = TcpStream::connect(server.addr).unwrap();
+            for _ in 0..20 {
+                write_frame(&mut stream, OP_PULL, &encode_pull(TableId::Entities, &[0, 2]))
+                    .unwrap();
+                let (op, payload) = read_frame(&mut stream).unwrap();
+                assert_eq!(op, OP_OK);
+                assert_eq!(payload.len(), 8 + 8 * 4);
+            }
+            write_frame(&mut stream, OP_STOP, &[]).unwrap();
+            let _ = read_frame(&mut stream);
+        });
+        assert!(server.state.pulls.load(Ordering::Relaxed) >= 80);
+    }
+
+    #[test]
+    fn ping_echoes() {
+        let server = toy_server();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        write_frame(&mut stream, OP_PING, b"xyz").unwrap();
+        let (op, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(op, OP_OK);
+        assert_eq!(payload, b"xyz");
+    }
+}

@@ -1,0 +1,33 @@
+//! # dglke-rs
+//!
+//! Reproduction of **DGL-KE: Training Knowledge Graph Embeddings at Scale**
+//! (Zheng et al., SIGIR 2020) as a three-layer Rust + JAX + Pallas system.
+//!
+//! * Layer 3 (this crate): the paper's coordination contribution — graph &
+//!   relation partitioning, joint/degree-based/local negative sampling,
+//!   hogwild embedding store + sparse Adagrad, async gradient updaters,
+//!   distributed KVStore, multi-worker / many-core / distributed trainers,
+//!   evaluation, and the PBG/GraphVite baselines.
+//! * Layer 2 (`python/compile/model.py`): JAX fwd/bwd of the KGE models,
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * Layer 1 (`python/compile/kernels/`): Pallas pairwise-score kernels —
+//!   the paper's §3.3 "negative scoring as generalized matmul".
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod dist;
+pub mod eval;
+pub mod kg;
+pub mod kvstore;
+pub mod partition;
+pub mod repro;
+pub mod runtime;
+pub mod sampler;
+pub mod store;
+pub mod train;
+pub mod models;
+pub mod util;

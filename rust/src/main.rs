@@ -1,0 +1,324 @@
+//! dglke — launcher CLI for the DGL-KE reproduction.
+//!
+//! Subcommands:
+//!   train       single-machine training (many-core CPU or simulated
+//!               multi-GPU), optional evaluation
+//!   dist-train  distributed training over the in-process KVStore cluster
+//!   partition   inspect METIS vs random partition quality
+//!   gen-data    materialize a synthetic dataset as TSV
+//!   eval-only   evaluate random-init embeddings (sanity floor)
+//!   repro       regenerate the paper's accuracy tables (table4..table9)
+//!
+//! Every flag has a default; unknown flags error out.
+
+use anyhow::{bail, Context, Result};
+use dglke::cli::Args;
+use dglke::dist::{run_distributed, DistConfig, PartitionStrategy};
+use dglke::eval::{evaluate, EvalConfig, EvalProtocol};
+use dglke::kg::Dataset;
+use dglke::models::{LossCfg, LossKind, ModelKind};
+use dglke::partition::{GraphPartition, MetisConfig};
+use dglke::runtime::{artifacts, BackendKind, Manifest};
+use dglke::train::worker::ModelState;
+use dglke::train::{run_training, Hardware, TrainConfig};
+
+const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|repro> [--flags]
+  common: --dataset fb15k-syn|wn18-syn|freebase-syn[:scale]|tiny|<tsv-dir>
+          --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
+          --backend xla|native --tag default|tiny --seed N
+  train:  --workers N --batches N(per worker) --lr F --gpu (simulate GPUs)
+          --degree-frac F --no-async --no-rel-part --sync-interval N --eval
+  dist-train: --machines N --trainers N --servers N --random-partition
+          --no-local-negatives --batches N --eval
+  partition: --machines N
+  gen-data: --out DIR
+  repro:  --exp table4..table9|all --scale F --out DIR";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&raw)?;
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "train" => cmd_train(args),
+        "dist-train" => cmd_dist(args),
+        "partition" => cmd_partition(args),
+        "gen-data" => cmd_gen_data(args),
+        "eval-only" => cmd_eval_only(args),
+        "repro" => cmd_repro(args),
+        _ => {
+            if args.flag("help") || cmd.is_empty() {
+                println!("{USAGE}");
+                Ok(())
+            } else {
+                bail!("unknown command {cmd:?}\n{USAGE}")
+            }
+        }
+    }
+}
+
+fn parse_model(args: &mut Args) -> Result<ModelKind> {
+    let name = args.get_or("model", "transe_l2");
+    ModelKind::parse(&name).with_context(|| format!("unknown model {name}"))
+}
+
+fn parse_backend(args: &mut Args) -> Result<BackendKind> {
+    let name = args.get_or("backend", "xla");
+    BackendKind::parse(&name).with_context(|| format!("unknown backend {name}"))
+}
+
+fn load_manifest() -> Result<Option<Manifest>> {
+    if artifacts::available() {
+        Ok(Some(Manifest::load(&artifacts::default_dir())?))
+    } else {
+        Ok(None)
+    }
+}
+
+fn resolve_shape(
+    manifest: Option<&Manifest>,
+    backend: BackendKind,
+    model: ModelKind,
+    tag: &str,
+) -> Result<(Option<dglke::models::step::StepShape>, usize)> {
+    // returns (explicit shape for native, dim)
+    match manifest.and_then(|m| m.find_train(model.name(), "logistic", tag).ok()) {
+        Some(a) => {
+            let s = dglke::models::step::StepShape {
+                batch: a.batch,
+                chunks: a.chunks,
+                neg_k: a.neg_k,
+                dim: a.dim,
+            };
+            Ok(((backend == BackendKind::Native).then_some(s), a.dim))
+        }
+        None if backend == BackendKind::Native => {
+            let s = dglke::models::step::StepShape { batch: 256, chunks: 8, neg_k: 64, dim: 64 };
+            Ok((Some(s), 64))
+        }
+        None => bail!("no artifacts for model {} tag {tag} — run `make artifacts`", model.name()),
+    }
+}
+
+fn run_eval(model: ModelKind, state: &ModelState, dataset: &Dataset, sampled: bool, seed: u64) {
+    let cfg = EvalConfig {
+        protocol: if sampled {
+            EvalProtocol::Sampled { uniform: 1000, degree: 1000 }
+        } else {
+            EvalProtocol::FullFiltered
+        },
+        max_triplets: 500,
+        n_threads: 4,
+        seed,
+    };
+    let m = evaluate(model, &state.entities, &state.relations, dataset, &dataset.test, &cfg);
+    println!("eval ({} test triplets, both sides): {}", m.n / 2, m.row());
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let dataset_name = args.get_or("dataset", "fb15k-syn");
+    let seed = args.parse_or("seed", 0u64)?;
+    let model = parse_model(&mut args)?;
+    let backend = parse_backend(&mut args)?;
+    let tag = args.get_or("tag", "default");
+    let workers = args.parse_or("workers", 1usize)?;
+    let batches = args.parse_or("batches", 200usize)?;
+    let lr = args.parse_or("lr", 0.3f32)?;
+    let margin: Option<f32> = args.get("margin").map(|v| v.parse()).transpose()?;
+    let adv_temp: Option<f32> = args.get("adv-temp").map(|v| v.parse()).transpose()?;
+    let gpu = args.flag("gpu");
+    let degree_frac = args.parse_or("degree-frac", 0.0f64)?;
+    let no_async = args.flag("no-async");
+    let no_rel_part = args.flag("no-rel-part");
+    let sync_interval = args.parse_or("sync-interval", 500usize)?;
+    let do_eval = args.flag("eval");
+    let sampled_eval = args.flag("sampled-eval");
+    args.finish()?;
+
+    let dataset = Dataset::load(&dataset_name, seed)?;
+    println!("{}", dataset.summary());
+    let manifest = load_manifest()?;
+    let (shape, dim) = resolve_shape(manifest.as_ref(), backend, model, &tag)?;
+    let cfg = TrainConfig {
+        model,
+        loss: LossCfg {
+            kind: margin.map(LossKind::Margin).unwrap_or(LossKind::Logistic),
+            adv_temp,
+        },
+        backend,
+        artifact_tag: tag,
+        shape,
+        n_workers: workers,
+        batches_per_worker: batches,
+        lr,
+        neg_degree_frac: degree_frac,
+        async_update: !no_async,
+        relation_partition: !no_rel_part,
+        sync_interval,
+        hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
+        seed,
+        ..Default::default()
+    };
+    let state = ModelState::init(&dataset, model, dim, &cfg);
+    println!(
+        "training {} ({} params) on {} workers, backend {:?}",
+        model.name(),
+        state.n_params(),
+        workers,
+        backend
+    );
+    let stats = run_training(&dataset, &state, manifest.as_ref(), &cfg)?;
+    println!(
+        "done: {} batches, wall {:.1}s, sim-parallel {:.1}s, {:.0} triplets/s, final loss {:.4}",
+        stats.total_batches,
+        stats.wall_secs,
+        stats.sim_parallel_secs,
+        stats.triplets_per_sec,
+        stats.mean_loss_tail
+    );
+    for (p, s) in &stats.phases {
+        println!("  phase {p}: {s:.2}s");
+    }
+    if gpu {
+        println!(
+            "  transfers: h2d {:.1}MB d2h {:.1}MB overlapped {:.1}MB",
+            stats.h2d_bytes as f64 / 1e6,
+            stats.d2h_bytes as f64 / 1e6,
+            stats.overlapped_bytes as f64 / 1e6
+        );
+    }
+    if do_eval {
+        run_eval(model, &state, &dataset, sampled_eval, seed);
+    }
+    Ok(())
+}
+
+fn cmd_dist(mut args: Args) -> Result<()> {
+    let dataset_name = args.get_or("dataset", "freebase-syn:0.02");
+    let seed = args.parse_or("seed", 0u64)?;
+    let model = parse_model(&mut args)?;
+    let backend = parse_backend(&mut args)?;
+    let tag = args.get_or("tag", "default");
+    let machines = args.parse_or("machines", 4usize)?;
+    let trainers = args.parse_or("trainers", 2usize)?;
+    let servers = args.parse_or("servers", 2usize)?;
+    let batches = args.parse_or("batches", 100usize)?;
+    let lr = args.parse_or("lr", 0.3f32)?;
+    let random_part = args.flag("random-partition");
+    let no_local_neg = args.flag("no-local-negatives");
+    let do_eval = args.flag("eval");
+    args.finish()?;
+
+    let dataset = Dataset::load(&dataset_name, seed)?;
+    println!("{}", dataset.summary());
+    let manifest = load_manifest()?;
+    let (shape, dim) = resolve_shape(manifest.as_ref(), backend, model, &tag)?;
+    let cfg = DistConfig {
+        model,
+        backend,
+        artifact_tag: tag,
+        shape,
+        machines,
+        trainers_per_machine: trainers,
+        servers_per_machine: servers,
+        partition: if random_part { PartitionStrategy::Random } else { PartitionStrategy::Metis },
+        local_negatives: !no_local_neg,
+        batches_per_trainer: batches,
+        lr,
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "distributed training on {machines} machines x {trainers} trainers ({} partition)",
+        if random_part { "random" } else { "METIS" }
+    );
+    let (stats, mut cluster) = run_distributed(&dataset, manifest.as_ref(), &cfg)?;
+    println!(
+        "done: {} batches, wall {:.1}s, {:.0} triplets/s",
+        stats.total_batches, stats.wall_secs, stats.triplets_per_sec
+    );
+    println!(
+        "  locality {:.3}; traffic local {:.1}MB remote {:.1}MB ({} remote reqs)",
+        stats.locality,
+        stats.local_bytes as f64 / 1e6,
+        stats.remote_bytes as f64 / 1e6,
+        stats.remote_requests
+    );
+    if do_eval {
+        let rel_dim = model.rel_dim(dim);
+        let ents = cluster.dump_entities(dataset.n_entities(), dim);
+        let rels = cluster.dump_relations(dataset.n_relations(), rel_dim);
+        let state = ModelState {
+            entities: std::sync::Arc::new(ents),
+            relations: std::sync::Arc::new(rels),
+            ent_opt: std::sync::Arc::new(dglke::store::SparseAdagrad::new(1, lr)),
+            rel_opt: std::sync::Arc::new(dglke::store::SparseAdagrad::new(1, lr)),
+            dim,
+            rel_dim,
+        };
+        run_eval(model, &state, &dataset, true, seed);
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_partition(mut args: Args) -> Result<()> {
+    let dataset_name = args.get_or("dataset", "fb15k-syn");
+    let seed = args.parse_or("seed", 0u64)?;
+    let machines = args.parse_or("machines", 4usize)?;
+    args.finish()?;
+    let dataset = Dataset::load(&dataset_name, seed)?;
+    println!("{}", dataset.summary());
+    let t = std::time::Instant::now();
+    let metis = GraphPartition::metis(&dataset.train, machines, &MetisConfig::default());
+    let metis_time = t.elapsed();
+    let random = GraphPartition::random(&dataset.train, machines, seed);
+    println!(
+        "METIS : locality {:.3} (computed in {:.2}s), entity sizes {:?}",
+        metis.locality(&dataset.train),
+        metis_time.as_secs_f64(),
+        metis.entity_sizes()
+    );
+    println!(
+        "random: locality {:.3}, entity sizes {:?}",
+        random.locality(&dataset.train),
+        random.entity_sizes()
+    );
+    Ok(())
+}
+
+fn cmd_gen_data(mut args: Args) -> Result<()> {
+    let dataset_name = args.get_or("dataset", "fb15k-syn");
+    let seed = args.parse_or("seed", 0u64)?;
+    let out = args.get_or("out", "data/generated");
+    args.finish()?;
+    let dataset = Dataset::load(&dataset_name, seed)?;
+    dataset.save_tsv_dir(std::path::Path::new(&out))?;
+    println!("{} -> {out}", dataset.summary());
+    Ok(())
+}
+
+fn cmd_eval_only(mut args: Args) -> Result<()> {
+    let dataset_name = args.get_or("dataset", "tiny");
+    let seed = args.parse_or("seed", 0u64)?;
+    let model = parse_model(&mut args)?;
+    let dim = args.parse_or("dim", 64usize)?;
+    args.finish()?;
+    let dataset = Dataset::load(&dataset_name, seed)?;
+    let cfg = TrainConfig { seed, ..Default::default() };
+    let state = ModelState::init(&dataset, model, dim, &cfg);
+    println!("random-embedding floor for {} on {}:", model.name(), dataset.name);
+    run_eval(model, &state, &dataset, false, seed);
+    Ok(())
+}
+
+fn cmd_repro(mut args: Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    let opts = dglke::repro::ReproOpts {
+        scale: args.parse_or("scale", 1.0f64)?,
+        backend: parse_backend(&mut args)?,
+        out_dir: args.get_or("out", "results").into(),
+        seed: args.parse_or("seed", 0u64)?,
+    };
+    args.finish()?;
+    dglke::repro::run(&exp, &opts)
+}

@@ -1,0 +1,624 @@
+//! Per-model "o-builders" (forward + backward) and negative projection.
+//!
+//! Tail-corruption form: `o = g(h, r)` such that the triplet score is
+//! `pairwise(o, t)`; head-corruption form: `o' = g'(t, r)` such that the
+//! score is `pairwise(h, o')`. See `models::ModelKind` for the per-model
+//! decomposition and the derivations in DESIGN.md.
+
+use super::ModelKind;
+
+/// Which entity the o-builder consumes: the positive head (tail-corruption
+/// side) or the positive tail (head-corruption side).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// corrupt tails: o = g(h, r), candidates are tails
+    Tail,
+    /// corrupt heads: o' = g'(t, r), candidates are heads
+    Head,
+}
+
+/// Build o rows for a batch: `e[m,d]` is the kept entity (head for
+/// Side::Tail, tail for Side::Head), `r[m,rd]` the relation rows.
+/// Writes `o[m,d]`.
+pub fn build_o(kind: ModelKind, side: Side, e: &[f32], r: &[f32], d: usize, o: &mut [f32]) {
+    let m = e.len() / d;
+    let rd = kind.rel_dim(d);
+    debug_assert_eq!(r.len(), m * rd);
+    debug_assert_eq!(o.len(), m * d);
+    let dc = d / 2;
+    match (kind, side) {
+        (ModelKind::TransEL1 | ModelKind::TransEL2, Side::Tail) => {
+            // o = h + r
+            for i in 0..m * d {
+                o[i] = e[i] + r[i];
+            }
+        }
+        (ModelKind::TransEL1 | ModelKind::TransEL2, Side::Head) => {
+            // score(h') = -||h' + r - t|| = -||h' - (t - r)|| → o' = t - r
+            for i in 0..m * d {
+                o[i] = e[i] - r[i];
+            }
+        }
+        (ModelKind::DistMult, _) => {
+            // o = h∘r (symmetric in h/t)
+            for i in 0..m * d {
+                o[i] = e[i] * r[i];
+            }
+        }
+        (ModelKind::ComplEx, Side::Tail) => {
+            // o = h·r (complex product); f = Re(o · conj(t)) = o_r·t_r + o_i·t_i
+            for i in 0..m {
+                for x in 0..dc {
+                    let hr = e[i * d + x];
+                    let hi = e[i * d + dc + x];
+                    let rr = r[i * d + x];
+                    let ri = r[i * d + dc + x];
+                    o[i * d + x] = hr * rr - hi * ri;
+                    o[i * d + dc + x] = hr * ri + hi * rr;
+                }
+            }
+        }
+        (ModelKind::ComplEx, Side::Head) => {
+            // f(h') = h'_r·w_r + h'_i·w_i with w = (r_r t_r + r_i t_i,
+            //                                       r_r t_i − r_i t_r)
+            for i in 0..m {
+                for x in 0..dc {
+                    let tr = e[i * d + x];
+                    let ti = e[i * d + dc + x];
+                    let rr = r[i * d + x];
+                    let ri = r[i * d + dc + x];
+                    o[i * d + x] = rr * tr + ri * ti;
+                    o[i * d + dc + x] = rr * ti - ri * tr;
+                }
+            }
+        }
+        (ModelKind::RotatE, Side::Tail) => {
+            // o = h ∘ e^{iθ}; r rows hold θ[d/2]
+            for i in 0..m {
+                for x in 0..dc {
+                    let hr = e[i * d + x];
+                    let hi = e[i * d + dc + x];
+                    let (sin, cos) = r[i * dc + x].sin_cos();
+                    o[i * d + x] = hr * cos - hi * sin;
+                    o[i * d + dc + x] = hr * sin + hi * cos;
+                }
+            }
+        }
+        (ModelKind::RotatE, Side::Head) => {
+            // ||h'∘r − t|| = ||h' − t∘conj(r)|| → o' = t ∘ e^{−iθ}
+            for i in 0..m {
+                for x in 0..dc {
+                    let tr = e[i * d + x];
+                    let ti = e[i * d + dc + x];
+                    let (sin, cos) = r[i * dc + x].sin_cos();
+                    o[i * d + x] = tr * cos + ti * sin;
+                    o[i * d + dc + x] = ti * cos - tr * sin;
+                }
+            }
+        }
+        (ModelKind::Rescal, Side::Tail) => {
+            // f = hᵀ M t → o = Mᵀ h; r row is M (row-major d×d)
+            for i in 0..m {
+                let mm = &r[i * rd..(i + 1) * rd];
+                let h = &e[i * d..(i + 1) * d];
+                let oi = &mut o[i * d..(i + 1) * d];
+                oi.fill(0.0);
+                for a in 0..d {
+                    let ha = h[a];
+                    for b in 0..d {
+                        oi[b] += ha * mm[a * d + b];
+                    }
+                }
+            }
+        }
+        (ModelKind::Rescal, Side::Head) => {
+            // o' = M t
+            for i in 0..m {
+                let mm = &r[i * rd..(i + 1) * rd];
+                let t = &e[i * d..(i + 1) * d];
+                let oi = &mut o[i * d..(i + 1) * d];
+                for a in 0..d {
+                    let mut s = 0f32;
+                    for b in 0..d {
+                        s += mm[a * d + b] * t[b];
+                    }
+                    oi[a] = s;
+                }
+            }
+        }
+        (ModelKind::TransR, Side::Tail) => {
+            // r row = [r_vec(d) | M(d×d)]; o = M h + r_vec
+            for i in 0..m {
+                let rv = &r[i * rd..i * rd + d];
+                let mm = &r[i * rd + d..(i + 1) * rd];
+                let h = &e[i * d..(i + 1) * d];
+                let oi = &mut o[i * d..(i + 1) * d];
+                for a in 0..d {
+                    let mut s = rv[a];
+                    for b in 0..d {
+                        s += mm[a * d + b] * h[b];
+                    }
+                    oi[a] = s;
+                }
+            }
+        }
+        (ModelKind::TransR, Side::Head) => {
+            // score(h') = -||M h' + r - M t||² = -||M h' - (M t - r)||²
+            for i in 0..m {
+                let rv = &r[i * rd..i * rd + d];
+                let mm = &r[i * rd + d..(i + 1) * rd];
+                let t = &e[i * d..(i + 1) * d];
+                let oi = &mut o[i * d..(i + 1) * d];
+                for a in 0..d {
+                    let mut s = -rv[a];
+                    for b in 0..d {
+                        s += mm[a * d + b] * t[b];
+                    }
+                    oi[a] = s;
+                }
+            }
+        }
+    }
+}
+
+/// VJP of `build_o`: given `d_o[m,d]`, accumulate into `d_e[m,d]` and
+/// `d_r[m,rd]`.
+pub fn build_o_backward(
+    kind: ModelKind,
+    side: Side,
+    e: &[f32],
+    r: &[f32],
+    d: usize,
+    d_o: &[f32],
+    d_e: &mut [f32],
+    d_r: &mut [f32],
+) {
+    let m = e.len() / d;
+    let rd = kind.rel_dim(d);
+    let dc = d / 2;
+    match (kind, side) {
+        (ModelKind::TransEL1 | ModelKind::TransEL2, Side::Tail) => {
+            for i in 0..m * d {
+                d_e[i] += d_o[i];
+                d_r[i] += d_o[i];
+            }
+        }
+        (ModelKind::TransEL1 | ModelKind::TransEL2, Side::Head) => {
+            for i in 0..m * d {
+                d_e[i] += d_o[i];
+                d_r[i] -= d_o[i];
+            }
+        }
+        (ModelKind::DistMult, _) => {
+            for i in 0..m * d {
+                d_e[i] += d_o[i] * r[i];
+                d_r[i] += d_o[i] * e[i];
+            }
+        }
+        (ModelKind::ComplEx, Side::Tail) => {
+            for i in 0..m {
+                for x in 0..dc {
+                    let (hr, hi) = (e[i * d + x], e[i * d + dc + x]);
+                    let (rr, ri) = (r[i * d + x], r[i * d + dc + x]);
+                    let (gr, gi) = (d_o[i * d + x], d_o[i * d + dc + x]);
+                    // o_r = hr rr − hi ri ; o_i = hr ri + hi rr
+                    d_e[i * d + x] += gr * rr + gi * ri;
+                    d_e[i * d + dc + x] += -gr * ri + gi * rr;
+                    d_r[i * d + x] += gr * hr + gi * hi;
+                    d_r[i * d + dc + x] += -gr * hi + gi * hr;
+                }
+            }
+        }
+        (ModelKind::ComplEx, Side::Head) => {
+            for i in 0..m {
+                for x in 0..dc {
+                    let (tr, ti) = (e[i * d + x], e[i * d + dc + x]);
+                    let (rr, ri) = (r[i * d + x], r[i * d + dc + x]);
+                    let (gr, gi) = (d_o[i * d + x], d_o[i * d + dc + x]);
+                    // o_r = rr tr + ri ti ; o_i = rr ti − ri tr
+                    d_e[i * d + x] += gr * rr - gi * ri;
+                    d_e[i * d + dc + x] += gr * ri + gi * rr;
+                    d_r[i * d + x] += gr * tr + gi * ti;
+                    d_r[i * d + dc + x] += gr * ti - gi * tr;
+                }
+            }
+        }
+        (ModelKind::RotatE, Side::Tail) => {
+            for i in 0..m {
+                for x in 0..dc {
+                    let (hr, hi) = (e[i * d + x], e[i * d + dc + x]);
+                    let (sin, cos) = r[i * dc + x].sin_cos();
+                    let (gr, gi) = (d_o[i * d + x], d_o[i * d + dc + x]);
+                    // o_r = hr c − hi s ; o_i = hr s + hi c
+                    d_e[i * d + x] += gr * cos + gi * sin;
+                    d_e[i * d + dc + x] += -gr * sin + gi * cos;
+                    // dθ: do_r/dθ = −hr s − hi c ; do_i/dθ = hr c − hi s
+                    d_r[i * dc + x] += gr * (-hr * sin - hi * cos) + gi * (hr * cos - hi * sin);
+                }
+            }
+        }
+        (ModelKind::RotatE, Side::Head) => {
+            for i in 0..m {
+                for x in 0..dc {
+                    let (tr, ti) = (e[i * d + x], e[i * d + dc + x]);
+                    let (sin, cos) = r[i * dc + x].sin_cos();
+                    let (gr, gi) = (d_o[i * d + x], d_o[i * d + dc + x]);
+                    // o_r = tr c + ti s ; o_i = ti c − tr s
+                    d_e[i * d + x] += gr * cos - gi * sin;
+                    d_e[i * d + dc + x] += gr * sin + gi * cos;
+                    d_r[i * dc + x] += gr * (-tr * sin + ti * cos) + gi * (-ti * sin - tr * cos);
+                }
+            }
+        }
+        (ModelKind::Rescal, Side::Tail) => {
+            // o = Mᵀh: d_h_a += Σ_b g_b M_ab ; d_M_ab += h_a g_b
+            for i in 0..m {
+                let mm = &r[i * rd..(i + 1) * rd];
+                let h = &e[i * d..(i + 1) * d];
+                let g = &d_o[i * d..(i + 1) * d];
+                let dh = &mut d_e[i * d..(i + 1) * d];
+                for a in 0..d {
+                    let mut s = 0f32;
+                    for b in 0..d {
+                        s += g[b] * mm[a * d + b];
+                    }
+                    dh[a] += s;
+                }
+                let dm = &mut d_r[i * rd..(i + 1) * rd];
+                for a in 0..d {
+                    let ha = h[a];
+                    for b in 0..d {
+                        dm[a * d + b] += ha * g[b];
+                    }
+                }
+            }
+        }
+        (ModelKind::Rescal, Side::Head) => {
+            // o' = M t: d_t_b += Σ_a g_a M_ab ; d_M_ab += g_a t_b
+            for i in 0..m {
+                let mm = &r[i * rd..(i + 1) * rd];
+                let t = &e[i * d..(i + 1) * d];
+                let g = &d_o[i * d..(i + 1) * d];
+                let dt = &mut d_e[i * d..(i + 1) * d];
+                for b in 0..d {
+                    let mut s = 0f32;
+                    for a in 0..d {
+                        s += g[a] * mm[a * d + b];
+                    }
+                    dt[b] += s;
+                }
+                let dm = &mut d_r[i * rd..(i + 1) * rd];
+                for a in 0..d {
+                    let ga = g[a];
+                    for b in 0..d {
+                        dm[a * d + b] += ga * t[b];
+                    }
+                }
+            }
+        }
+        (ModelKind::TransR, Side::Tail) => {
+            // o = M h + rv
+            for i in 0..m {
+                let mm = &r[i * rd + d..(i + 1) * rd];
+                let h = &e[i * d..(i + 1) * d];
+                let g = &d_o[i * d..(i + 1) * d];
+                let dh = &mut d_e[i * d..(i + 1) * d];
+                for b in 0..d {
+                    let mut s = 0f32;
+                    for a in 0..d {
+                        s += g[a] * mm[a * d + b];
+                    }
+                    dh[b] += s;
+                }
+                let (drv, dm) = d_r[i * rd..(i + 1) * rd].split_at_mut(d);
+                for a in 0..d {
+                    drv[a] += g[a];
+                    let ga = g[a];
+                    for b in 0..d {
+                        dm[a * d + b] += ga * h[b];
+                    }
+                }
+            }
+        }
+        (ModelKind::TransR, Side::Head) => {
+            // o' = M t − rv
+            for i in 0..m {
+                let mm = &r[i * rd + d..(i + 1) * rd];
+                let t = &e[i * d..(i + 1) * d];
+                let g = &d_o[i * d..(i + 1) * d];
+                let dt = &mut d_e[i * d..(i + 1) * d];
+                for b in 0..d {
+                    let mut s = 0f32;
+                    for a in 0..d {
+                        s += g[a] * mm[a * d + b];
+                    }
+                    dt[b] += s;
+                }
+                let (drv, dm) = d_r[i * rd..(i + 1) * rd].split_at_mut(d);
+                for a in 0..d {
+                    drv[a] -= g[a];
+                    let ga = g[a];
+                    for b in 0..d {
+                        dm[a * d + b] += ga * t[b];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// TransR negative projection: project candidate rows `n[k,d]` through the
+/// i-th positive's matrix M (from `r` row i). Writes `out[k,d]`.
+pub fn project_negs(kind: ModelKind, r_row: &[f32], n: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert!(kind.projects_negatives());
+    let rd = kind.rel_dim(d);
+    debug_assert_eq!(r_row.len(), rd);
+    let mm = &r_row[d..]; // skip r_vec
+    let k = n.len() / d;
+    for j in 0..k {
+        let nj = &n[j * d..(j + 1) * d];
+        let oj = &mut out[j * d..(j + 1) * d];
+        for a in 0..d {
+            let mut s = 0f32;
+            for b in 0..d {
+                s += mm[a * d + b] * nj[b];
+            }
+            oj[a] = s;
+        }
+    }
+}
+
+/// VJP of `project_negs`: accumulate into `d_n[k,d]` and `d_r_row[rd]`
+/// (matrix part only).
+pub fn project_negs_backward(
+    kind: ModelKind,
+    r_row: &[f32],
+    n: &[f32],
+    d: usize,
+    d_out: &[f32],
+    d_n: &mut [f32],
+    d_r_row: &mut [f32],
+) {
+    debug_assert!(kind.projects_negatives());
+    let mm = &r_row[d..];
+    let k = n.len() / d;
+    let dm = &mut d_r_row[d..];
+    for j in 0..k {
+        let nj = &n[j * d..(j + 1) * d];
+        let gj = &d_out[j * d..(j + 1) * d];
+        let dnj = &mut d_n[j * d..(j + 1) * d];
+        for b in 0..d {
+            let mut s = 0f32;
+            for a in 0..d {
+                s += gj[a] * mm[a * d + b];
+            }
+            dnj[b] += s;
+        }
+        for a in 0..d {
+            let ga = gj[a];
+            for b in 0..d {
+                dm[a * d + b] += ga * nj[b];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ops::{diag_forward, pairwise_forward};
+    use crate::util::rng::Rng;
+
+    /// Direct (textbook) score of a single triplet per paper Table 1.
+    pub fn direct_score(kind: ModelKind, h: &[f32], r: &[f32], t: &[f32], d: usize) -> f32 {
+        let dc = d / 2;
+        match kind {
+            ModelKind::TransEL1 => {
+                -(0..d).map(|x| (h[x] + r[x] - t[x]).abs()).sum::<f32>()
+            }
+            ModelKind::TransEL2 => {
+                let s: f32 = (0..d).map(|x| (h[x] + r[x] - t[x]).powi(2)).sum();
+                -(s + crate::models::L2_EPS).sqrt()
+            }
+            ModelKind::DistMult => (0..d).map(|x| h[x] * r[x] * t[x]).sum(),
+            ModelKind::ComplEx => (0..dc)
+                .map(|x| {
+                    let (hr, hi) = (h[x], h[dc + x]);
+                    let (rr, ri) = (r[x], r[dc + x]);
+                    let (tr, ti) = (t[x], t[dc + x]);
+                    (hr * rr - hi * ri) * tr + (hr * ri + hi * rr) * ti
+                })
+                .sum(),
+            ModelKind::RotatE => -(0..dc)
+                .map(|x| {
+                    let (sin, cos) = r[x].sin_cos();
+                    let or = h[x] * cos - h[dc + x] * sin;
+                    let oi = h[x] * sin + h[dc + x] * cos;
+                    (or - t[x]).powi(2) + (oi - t[dc + x]).powi(2)
+                })
+                .sum::<f32>(),
+            ModelKind::Rescal => {
+                let mut s = 0f32;
+                for a in 0..d {
+                    for b in 0..d {
+                        s += h[a] * r[a * d + b] * t[b];
+                    }
+                }
+                s
+            }
+            ModelKind::TransR => {
+                let rv = &r[..d];
+                let mm = &r[d..];
+                let mut s = 0f32;
+                for a in 0..d {
+                    let mut proj = rv[a];
+                    for b in 0..d {
+                        proj += mm[a * d + b] * (h[b] - t[b]);
+                    }
+                    s += proj * proj;
+                }
+                -s
+            }
+        }
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_normal() * 0.5).collect()
+    }
+
+    /// Both side decompositions must reproduce the direct triplet score.
+    #[test]
+    fn decomposition_matches_direct_score() {
+        let d = 8;
+        let m = 5;
+        let mut rng = Rng::seed_from_u64(31);
+        for kind in ModelKind::ALL {
+            let rd = kind.rel_dim(d);
+            let h = rand_vec(&mut rng, m * d);
+            let r = rand_vec(&mut rng, m * rd);
+            let t = rand_vec(&mut rng, m * d);
+            let op = kind.pairwise_op();
+
+            // tail side: score = pairwise(o, proj(t))
+            let mut o = vec![0f32; m * d];
+            build_o(kind, Side::Tail, &h, &r, d, &mut o);
+            let mut tail_scores = vec![0f32; m];
+            if kind.projects_negatives() {
+                for i in 0..m {
+                    let mut pt = vec![0f32; d];
+                    project_negs(kind, &r[i * rd..(i + 1) * rd], &t[i * d..(i + 1) * d], d, &mut pt);
+                    let mut s = vec![0f32; 1];
+                    pairwise_forward(op, &o[i * d..(i + 1) * d], &pt, d, &mut s);
+                    tail_scores[i] = s[0];
+                }
+            } else {
+                diag_forward(op, &o, &t, d, &mut tail_scores);
+            }
+
+            // head side: score = pairwise(proj(h), o')
+            let mut o2 = vec![0f32; m * d];
+            build_o(kind, Side::Head, &t, &r, d, &mut o2);
+            let mut head_scores = vec![0f32; m];
+            if kind.projects_negatives() {
+                for i in 0..m {
+                    let mut ph = vec![0f32; d];
+                    project_negs(kind, &r[i * rd..(i + 1) * rd], &h[i * d..(i + 1) * d], d, &mut ph);
+                    let mut s = vec![0f32; 1];
+                    pairwise_forward(op, &ph, &o2[i * d..(i + 1) * d], d, &mut s);
+                    head_scores[i] = s[0];
+                }
+            } else {
+                // note argument order: pairwise(h, o')
+                diag_forward(op, &h, &o2, d, &mut head_scores);
+            }
+
+            for i in 0..m {
+                let direct = direct_score(
+                    kind,
+                    &h[i * d..(i + 1) * d],
+                    &r[i * rd..(i + 1) * rd],
+                    &t[i * d..(i + 1) * d],
+                    d,
+                );
+                assert!(
+                    (tail_scores[i] - direct).abs() < 1e-4,
+                    "{kind:?} tail: {} vs {direct}",
+                    tail_scores[i]
+                );
+                assert!(
+                    (head_scores[i] - direct).abs() < 1e-4,
+                    "{kind:?} head: {} vs {direct}",
+                    head_scores[i]
+                );
+            }
+        }
+    }
+
+    /// Finite-difference check of build_o_backward for every model/side.
+    #[test]
+    fn builder_gradients() {
+        let d = 6;
+        let m = 2;
+        let mut rng = Rng::seed_from_u64(77);
+        for kind in ModelKind::ALL {
+            let d_use = if kind.validate_dim(d) { d } else { d + 1 };
+            let rd = kind.rel_dim(d_use);
+            let e = rand_vec(&mut rng, m * d_use);
+            let r = rand_vec(&mut rng, m * rd);
+            let g = rand_vec(&mut rng, m * d_use);
+            for side in [Side::Tail, Side::Head] {
+                let mut d_e = vec![0f32; m * d_use];
+                let mut d_r = vec![0f32; m * rd];
+                build_o_backward(kind, side, &e, &r, d_use, &g, &mut d_e, &mut d_r);
+
+                let loss = |e: &[f32], r: &[f32]| -> f64 {
+                    let mut o = vec![0f32; m * d_use];
+                    build_o(kind, side, e, r, d_use, &mut o);
+                    o.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum()
+                };
+                let eps = 1e-3f32;
+                for idx in (0..m * d_use).step_by(3) {
+                    let mut ep = e.clone();
+                    ep[idx] += eps;
+                    let mut em = e.clone();
+                    em[idx] -= eps;
+                    let fd = (loss(&ep, &r) - loss(&em, &r)) / (2.0 * eps as f64);
+                    assert!(
+                        (fd - d_e[idx] as f64).abs() < 3e-2,
+                        "{kind:?}/{side:?} d_e[{idx}] fd={fd} got={}",
+                        d_e[idx]
+                    );
+                }
+                for idx in (0..m * rd).step_by(7) {
+                    let mut rp = r.clone();
+                    rp[idx] += eps;
+                    let mut rm = r.clone();
+                    rm[idx] -= eps;
+                    let fd = (loss(&e, &rp) - loss(&e, &rm)) / (2.0 * eps as f64);
+                    assert!(
+                        (fd - d_r[idx] as f64).abs() < 3e-2,
+                        "{kind:?}/{side:?} d_r[{idx}] fd={fd} got={}",
+                        d_r[idx]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn projection_gradients() {
+        let d = 5;
+        let k = 3;
+        let kind = ModelKind::TransR;
+        let rd = kind.rel_dim(d);
+        let mut rng = Rng::seed_from_u64(99);
+        let r_row = rand_vec(&mut rng, rd);
+        let n = rand_vec(&mut rng, k * d);
+        let g = rand_vec(&mut rng, k * d);
+        let mut d_n = vec![0f32; k * d];
+        let mut d_r = vec![0f32; rd];
+        project_negs_backward(kind, &r_row, &n, d, &g, &mut d_n, &mut d_r);
+        let loss = |r_row: &[f32], n: &[f32]| -> f64 {
+            let mut out = vec![0f32; k * d];
+            project_negs(kind, r_row, n, d, &mut out);
+            out.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for idx in 0..k * d {
+            let mut np = n.clone();
+            np[idx] += eps;
+            let mut nm = n.clone();
+            nm[idx] -= eps;
+            let fd = (loss(&r_row, &np) - loss(&r_row, &nm)) / (2.0 * eps as f64);
+            assert!((fd - d_n[idx] as f64).abs() < 2e-2);
+        }
+        for idx in 0..rd {
+            let mut rp = r_row.clone();
+            rp[idx] += eps;
+            let mut rm = r_row.clone();
+            rm[idx] -= eps;
+            let fd = (loss(&rp, &n) - loss(&rm, &n)) / (2.0 * eps as f64);
+            assert!((fd - d_r[idx] as f64).abs() < 2e-2, "d_r[{idx}]");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Loss functions over positive/negative scores (paper §2) and their
+//! gradients w.r.t. the scores.
+//!
+//! * `Logistic` — log(1 + exp(−y·f)), y=+1 positives / −1 negatives;
+//! * `Margin`   — pairwise hinge max(0, γ − f⁺ + f⁻).
+//!
+//! Optional self-adversarial negative weighting (RotatE paper; DGL-KE's
+//! `-adv` flag): negatives are weighted by softmax(α·f⁻) treated as a
+//! constant (stop-gradient), per chunk-row.
+
+/// Loss family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LossKind {
+    Logistic,
+    /// Pairwise hinge with the given margin γ.
+    Margin(f32),
+}
+
+impl LossKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Logistic => "logistic",
+            LossKind::Margin(_) => "margin",
+        }
+    }
+}
+
+/// Loss configuration: family + optional adversarial temperature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossCfg {
+    pub kind: LossKind,
+    /// Self-adversarial temperature α (None = uniform negative weights).
+    pub adv_temp: Option<f32>,
+}
+
+impl Default for LossCfg {
+    fn default() -> Self {
+        LossCfg { kind: LossKind::Logistic, adv_temp: None }
+    }
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    // numerically stable log(1+e^x)
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Adversarial weights per row of `k` negatives: softmax(α f) (detached).
+/// Writes into `w` (len = scores.len()); rows of length k.
+fn adv_weights(scores: &[f32], k: usize, alpha: f32, w: &mut [f32]) {
+    for row in 0..scores.len() / k {
+        let s = &scores[row * k..(row + 1) * k];
+        let wr = &mut w[row * k..(row + 1) * k];
+        let mx = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for j in 0..k {
+            wr[j] = ((s[j] - mx) * alpha).exp();
+            z += wr[j];
+        }
+        for j in 0..k {
+            wr[j] /= z;
+        }
+    }
+}
+
+/// Compute loss value and gradients w.r.t. the scores.
+///
+/// `pos[b]` — positive scores; `neg[b*k]` — negative scores laid out so
+/// that negatives `i*k..(i+1)*k` belong to positive `i` (joint sampling
+/// replicates the chunk's shared negatives per positive row).
+///
+/// Returns loss; writes `d_pos[b]`, `d_neg[b*k]`.
+pub fn loss_and_grad(
+    cfg: &LossCfg,
+    pos: &[f32],
+    neg: &[f32],
+    k: usize,
+    d_pos: &mut [f32],
+    d_neg: &mut [f32],
+) -> f32 {
+    let b = pos.len();
+    debug_assert_eq!(neg.len(), b * k);
+    debug_assert_eq!(d_pos.len(), b);
+    debug_assert_eq!(d_neg.len(), b * k);
+
+    // negative weights: uniform 1/k per row, or adversarial softmax
+    let mut w = vec![1.0f32 / k as f32; neg.len()];
+    if let Some(alpha) = cfg.adv_temp {
+        adv_weights(neg, k, alpha, &mut w);
+    }
+
+    match cfg.kind {
+        LossKind::Logistic => {
+            // L = (1/b)Σ softplus(−f⁺) + (1/b)Σ_i Σ_j w_ij softplus(f⁻_ij)
+            let inv_b = 1.0 / b as f32;
+            let mut loss = 0f32;
+            for i in 0..b {
+                loss += softplus(-pos[i]) * inv_b;
+                d_pos[i] = -sigmoid(-pos[i]) * inv_b;
+            }
+            for i in 0..b {
+                for j in 0..k {
+                    let idx = i * k + j;
+                    loss += w[idx] * softplus(neg[idx]) * inv_b;
+                    d_neg[idx] = w[idx] * sigmoid(neg[idx]) * inv_b;
+                }
+            }
+            loss
+        }
+        LossKind::Margin(gamma) => {
+            // L = (1/b)Σ_i Σ_j w_ij max(0, γ − f⁺_i + f⁻_ij)
+            let inv_b = 1.0 / b as f32;
+            let mut loss = 0f32;
+            d_pos.fill(0.0);
+            for i in 0..b {
+                for j in 0..k {
+                    let idx = i * k + j;
+                    let v = gamma - pos[i] + neg[idx];
+                    if v > 0.0 {
+                        loss += w[idx] * v * inv_b;
+                        d_pos[i] -= w[idx] * inv_b;
+                        d_neg[idx] = w[idx] * inv_b;
+                    } else {
+                        d_neg[idx] = 0.0;
+                    }
+                }
+            }
+            loss
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fd_check(cfg: LossCfg) {
+        let b = 4;
+        let k = 3;
+        let mut rng = Rng::seed_from_u64(3);
+        let pos: Vec<f32> = (0..b).map(|_| rng.gen_normal()).collect();
+        let neg: Vec<f32> = (0..b * k).map(|_| rng.gen_normal()).collect();
+        let mut dp = vec![0f32; b];
+        let mut dn = vec![0f32; b * k];
+        loss_and_grad(&cfg, &pos, &neg, k, &mut dp, &mut dn);
+
+        let f = |pos: &[f32], neg: &[f32]| -> f64 {
+            let mut a = vec![0f32; b];
+            let mut c = vec![0f32; b * k];
+            loss_and_grad(&cfg, pos, neg, k, &mut a, &mut c) as f64
+        };
+        let eps = 1e-3f32;
+        for i in 0..b {
+            let mut pp = pos.clone();
+            pp[i] += eps;
+            let mut pm = pos.clone();
+            pm[i] -= eps;
+            let fd = (f(&pp, &neg) - f(&pm, &neg)) / (2.0 * eps as f64);
+            assert!((fd - dp[i] as f64).abs() < 1e-2, "{cfg:?} d_pos[{i}] fd={fd} got={}", dp[i]);
+        }
+        // adversarial weights are stop-gradient, so only check the
+        // non-adversarial configs against finite differences of d_neg.
+        if cfg.adv_temp.is_none() {
+            for i in 0..b * k {
+                let mut np = neg.clone();
+                np[i] += eps;
+                let mut nm = neg.clone();
+                nm[i] -= eps;
+                let fd = (f(&pos, &np) - f(&pos, &nm)) / (2.0 * eps as f64);
+                assert!((fd - dn[i] as f64).abs() < 1e-2, "{cfg:?} d_neg[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_grads() {
+        fd_check(LossCfg { kind: LossKind::Logistic, adv_temp: None });
+    }
+
+    #[test]
+    fn margin_grads() {
+        fd_check(LossCfg { kind: LossKind::Margin(1.0), adv_temp: None });
+    }
+
+    #[test]
+    fn adversarial_pos_grads() {
+        fd_check(LossCfg { kind: LossKind::Logistic, adv_temp: Some(1.0) });
+    }
+
+    #[test]
+    fn adv_weights_sum_to_one() {
+        let scores = [0.5f32, -1.0, 2.0, 0.0, 0.0, 0.0];
+        let mut w = vec![0f32; 6];
+        adv_weights(&scores, 3, 1.0, &mut w);
+        for row in 0..2 {
+            let s: f32 = w[row * 3..(row + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // higher score → higher weight
+        assert!(w[2] > w[0] && w[0] > w[1]);
+        // uniform row → uniform weights
+        assert!((w[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_scores_low_loss() {
+        let cfg = LossCfg::default();
+        let pos = [20.0f32; 4];
+        let neg = [-20.0f32; 8];
+        let mut dp = vec![0f32; 4];
+        let mut dn = vec![0f32; 8];
+        let l = loss_and_grad(&cfg, &pos, &neg, 2, &mut dp, &mut dn);
+        assert!(l < 1e-6);
+    }
+}

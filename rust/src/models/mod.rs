@@ -1,0 +1,165 @@
+//! KGE model zoo (paper Table 1) — native Rust implementation.
+//!
+//! Every score function in the paper decomposes, per the paper's §3.3
+//! trick, into
+//!
+//! 1. an **o-builder**: `o = g(h, r)` (tail-corruption form) or
+//!    `o' = g'(t, r)` (head-corruption form), computed once per positive;
+//! 2. an optional **negative projection** (TransR only: negatives must be
+//!    multiplied by the per-positive projection matrix `M_r`);
+//! 3. a generic **pairwise op** between `o` rows and candidate rows:
+//!    `Dot` (DistMult/ComplEx/RESCAL), `SqDiff` = −‖o−n‖² (RotatE/TransR),
+//!    `L2` = −‖o−n‖ (TransE-L2) or `L1` = −Σ|o−n| (TransE-L1).
+//!
+//! The JAX/Pallas layer (`python/compile/`) implements the *same*
+//! decomposition, with the pairwise op as the Pallas kernel; this module
+//! is the bit-level reference the artifacts are tested against, the CPU
+//! fallback backend, and the scorer used by pure-coordinator benches.
+
+pub mod builders;
+pub mod loss;
+pub mod ops;
+pub mod step;
+
+pub use loss::{LossKind, LossCfg};
+pub use step::{EvalSide, NativeModel, StepGrads, StepInputs};
+
+pub const L2_EPS: f32 = 1e-12;
+
+/// The seven score functions of paper Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    TransEL1,
+    TransEL2,
+    TransR,
+    DistMult,
+    ComplEx,
+    Rescal,
+    RotatE,
+}
+
+/// Generic pairwise score between an `o` row and a candidate row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairwiseOp {
+    /// f = o · n
+    Dot,
+    /// f = −‖o − n‖²
+    SqDiff,
+    /// f = −sqrt(‖o − n‖² + eps)
+    L2,
+    /// f = −Σ|o − n|
+    L1,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 7] = [
+        ModelKind::TransEL1,
+        ModelKind::TransEL2,
+        ModelKind::TransR,
+        ModelKind::DistMult,
+        ModelKind::ComplEx,
+        ModelKind::Rescal,
+        ModelKind::RotatE,
+    ];
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "transe" | "transe_l2" => ModelKind::TransEL2,
+            "transe_l1" => ModelKind::TransEL1,
+            "transr" => ModelKind::TransR,
+            "distmult" => ModelKind::DistMult,
+            "complex" => ModelKind::ComplEx,
+            "rescal" => ModelKind::Rescal,
+            "rotate" => ModelKind::RotatE,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::TransEL1 => "transe_l1",
+            ModelKind::TransEL2 => "transe_l2",
+            ModelKind::TransR => "transr",
+            ModelKind::DistMult => "distmult",
+            ModelKind::ComplEx => "complex",
+            ModelKind::Rescal => "rescal",
+            ModelKind::RotatE => "rotate",
+        }
+    }
+
+    /// Width of one relation-embedding row for entity dim `d`.
+    /// TransR appends the d×d projection matrix to the d-dim translation
+    /// vector; RESCAL's relation *is* the d×d matrix; RotatE stores d/2
+    /// rotation phases.
+    pub fn rel_dim(&self, d: usize) -> usize {
+        match self {
+            ModelKind::TransEL1 | ModelKind::TransEL2 | ModelKind::DistMult => d,
+            ModelKind::ComplEx => d,
+            ModelKind::RotatE => d / 2,
+            ModelKind::Rescal => d * d,
+            ModelKind::TransR => d + d * d,
+        }
+    }
+
+    /// Entity dims must be even for the complex-valued models.
+    pub fn validate_dim(&self, d: usize) -> bool {
+        match self {
+            ModelKind::ComplEx | ModelKind::RotatE => d % 2 == 0 && d >= 2,
+            _ => d >= 1,
+        }
+    }
+
+    pub fn pairwise_op(&self) -> PairwiseOp {
+        match self {
+            ModelKind::DistMult | ModelKind::ComplEx | ModelKind::Rescal => PairwiseOp::Dot,
+            ModelKind::RotatE | ModelKind::TransR => PairwiseOp::SqDiff,
+            ModelKind::TransEL2 => PairwiseOp::L2,
+            ModelKind::TransEL1 => PairwiseOp::L1,
+        }
+    }
+
+    /// Whether negatives must be projected through the per-positive
+    /// relation matrix before the pairwise op (TransR only). This is the
+    /// paper's §3.4 observation that TransR moves O(b·d²) of relation
+    /// state per batch.
+    pub fn projects_negatives(&self) -> bool {
+        matches!(self, ModelKind::TransR)
+    }
+
+    /// Relative per-triplet FLOP weight (used by benches to normalize).
+    pub fn flops_weight(&self, d: usize) -> f64 {
+        match self {
+            ModelKind::Rescal | ModelKind::TransR => d as f64, // extra matvec
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(m.name()), Some(m));
+        }
+        assert_eq!(ModelKind::parse("TransE"), Some(ModelKind::TransEL2));
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn rel_dims() {
+        assert_eq!(ModelKind::TransEL2.rel_dim(8), 8);
+        assert_eq!(ModelKind::RotatE.rel_dim(8), 4);
+        assert_eq!(ModelKind::Rescal.rel_dim(8), 64);
+        assert_eq!(ModelKind::TransR.rel_dim(8), 72);
+    }
+
+    #[test]
+    fn dim_validation() {
+        assert!(ModelKind::ComplEx.validate_dim(8));
+        assert!(!ModelKind::ComplEx.validate_dim(7));
+        assert!(ModelKind::TransEL1.validate_dim(7));
+    }
+}

@@ -1,0 +1,296 @@
+//! Generic pairwise score ops (forward + backward).
+//!
+//! `pairwise(op, o[m,d], n[k,d]) -> scores[m,k]` and its VJP. The `Dot`
+//! and `SqDiff` paths are GEMM-shaped — these are exactly what the L1
+//! Pallas kernel computes on the accelerator; the native versions here are
+//! written as blocked loops that LLVM auto-vectorizes.
+
+use super::PairwiseOp;
+use super::L2_EPS;
+
+/// scores[i*k + j] = op(o_i, n_j). `scores` must have len m*k.
+pub fn pairwise_forward(op: PairwiseOp, o: &[f32], n: &[f32], d: usize, scores: &mut [f32]) {
+    let m = o.len() / d;
+    let k = n.len() / d;
+    debug_assert_eq!(scores.len(), m * k);
+    match op {
+        PairwiseOp::Dot => {
+            for i in 0..m {
+                let oi = &o[i * d..(i + 1) * d];
+                for j in 0..k {
+                    let nj = &n[j * d..(j + 1) * d];
+                    let mut s = 0f32;
+                    for x in 0..d {
+                        s += oi[x] * nj[x];
+                    }
+                    scores[i * k + j] = s;
+                }
+            }
+        }
+        PairwiseOp::SqDiff => {
+            for i in 0..m {
+                let oi = &o[i * d..(i + 1) * d];
+                for j in 0..k {
+                    let nj = &n[j * d..(j + 1) * d];
+                    let mut s = 0f32;
+                    for x in 0..d {
+                        let diff = oi[x] - nj[x];
+                        s += diff * diff;
+                    }
+                    scores[i * k + j] = -s;
+                }
+            }
+        }
+        PairwiseOp::L2 => {
+            for i in 0..m {
+                let oi = &o[i * d..(i + 1) * d];
+                for j in 0..k {
+                    let nj = &n[j * d..(j + 1) * d];
+                    let mut s = 0f32;
+                    for x in 0..d {
+                        let diff = oi[x] - nj[x];
+                        s += diff * diff;
+                    }
+                    scores[i * k + j] = -(s + L2_EPS).sqrt();
+                }
+            }
+        }
+        PairwiseOp::L1 => {
+            for i in 0..m {
+                let oi = &o[i * d..(i + 1) * d];
+                for j in 0..k {
+                    let nj = &n[j * d..(j + 1) * d];
+                    let mut s = 0f32;
+                    for x in 0..d {
+                        s += (oi[x] - nj[x]).abs();
+                    }
+                    scores[i * k + j] = -s;
+                }
+            }
+        }
+    }
+}
+
+/// VJP of `pairwise_forward`: given upstream `d_scores[m,k]`, accumulate
+/// into `d_o[m,d]` and `d_n[k,d]`. `scores` is the forward output (needed
+/// by the L2 path to recover the norm).
+pub fn pairwise_backward(
+    op: PairwiseOp,
+    o: &[f32],
+    n: &[f32],
+    d: usize,
+    scores: &[f32],
+    d_scores: &[f32],
+    d_o: &mut [f32],
+    d_n: &mut [f32],
+) {
+    let m = o.len() / d;
+    let k = n.len() / d;
+    debug_assert_eq!(d_scores.len(), m * k);
+    match op {
+        PairwiseOp::Dot => {
+            // d_o_i += Σ_j g_ij n_j ; d_n_j += Σ_i g_ij o_i
+            for i in 0..m {
+                for j in 0..k {
+                    let g = d_scores[i * k + j];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for x in 0..d {
+                        d_o[i * d + x] += g * n[j * d + x];
+                        d_n[j * d + x] += g * o[i * d + x];
+                    }
+                }
+            }
+        }
+        PairwiseOp::SqDiff => {
+            // f = -Σ(o-n)²: df/do = -2(o-n), df/dn = 2(o-n)
+            for i in 0..m {
+                for j in 0..k {
+                    let g = d_scores[i * k + j];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for x in 0..d {
+                        let diff = o[i * d + x] - n[j * d + x];
+                        d_o[i * d + x] += -2.0 * g * diff;
+                        d_n[j * d + x] += 2.0 * g * diff;
+                    }
+                }
+            }
+        }
+        PairwiseOp::L2 => {
+            // f = -sqrt(S+eps): df/do = -(o-n)/sqrt(S+eps) = (o-n)/f
+            for i in 0..m {
+                for j in 0..k {
+                    let g = d_scores[i * k + j];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let norm = -scores[i * k + j]; // = sqrt(S+eps) > 0
+                    let inv = 1.0 / norm;
+                    for x in 0..d {
+                        let diff = o[i * d + x] - n[j * d + x];
+                        d_o[i * d + x] += -g * diff * inv;
+                        d_n[j * d + x] += g * diff * inv;
+                    }
+                }
+            }
+        }
+        PairwiseOp::L1 => {
+            for i in 0..m {
+                for j in 0..k {
+                    let g = d_scores[i * k + j];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for x in 0..d {
+                        let s = (o[i * d + x] - n[j * d + x]).signum();
+                        // signum(0) = 0 to match jax's sign convention
+                        let s = if o[i * d + x] == n[j * d + x] { 0.0 } else { s };
+                        d_o[i * d + x] += -g * s;
+                        d_n[j * d + x] += g * s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Diagonal variant: scores[i] = op(o_i, n_i) — used for positive triplets.
+pub fn diag_forward(op: PairwiseOp, o: &[f32], n: &[f32], d: usize, scores: &mut [f32]) {
+    let m = o.len() / d;
+    let mut tmp = vec![0f32; 1];
+    for i in 0..m {
+        pairwise_forward(op, &o[i * d..(i + 1) * d], &n[i * d..(i + 1) * d], d, &mut tmp);
+        scores[i] = tmp[0];
+    }
+}
+
+/// VJP of `diag_forward`.
+pub fn diag_backward(
+    op: PairwiseOp,
+    o: &[f32],
+    n: &[f32],
+    d: usize,
+    scores: &[f32],
+    d_scores: &[f32],
+    d_o: &mut [f32],
+    d_n: &mut [f32],
+) {
+    let m = o.len() / d;
+    for i in 0..m {
+        pairwise_backward(
+            op,
+            &o[i * d..(i + 1) * d],
+            &n[i * d..(i + 1) * d],
+            d,
+            &scores[i..i + 1],
+            &d_scores[i..i + 1],
+            &mut d_o[i * d..(i + 1) * d],
+            &mut d_n[i * d..(i + 1) * d],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn finite_diff_check(op: PairwiseOp) {
+        let d = 6;
+        let (m, k) = (3, 4);
+        let mut rng = Rng::seed_from_u64(21);
+        let o: Vec<f32> = (0..m * d).map(|_| rng.gen_normal()).collect();
+        let n: Vec<f32> = (0..k * d).map(|_| rng.gen_normal()).collect();
+        let mut scores = vec![0f32; m * k];
+        pairwise_forward(op, &o, &n, d, &mut scores);
+
+        // random upstream gradient
+        let g: Vec<f32> = (0..m * k).map(|_| rng.gen_normal()).collect();
+        let mut d_o = vec![0f32; m * d];
+        let mut d_n = vec![0f32; k * d];
+        pairwise_backward(op, &o, &n, d, &scores, &g, &mut d_o, &mut d_n);
+
+        let loss = |o: &[f32], n: &[f32]| -> f64 {
+            let mut s = vec![0f32; m * k];
+            pairwise_forward(op, o, n, d, &mut s);
+            s.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for idx in 0..m * d {
+            let mut op_ = o.clone();
+            op_[idx] += eps;
+            let mut om = o.clone();
+            om[idx] -= eps;
+            let fd = (loss(&op_, &n) - loss(&om, &n)) / (2.0 * eps as f64);
+            assert!(
+                (fd - d_o[idx] as f64).abs() < 2e-2,
+                "{op:?} d_o[{idx}]: fd={fd} got={}",
+                d_o[idx]
+            );
+        }
+        for idx in 0..k * d {
+            let mut np_ = n.to_vec();
+            np_[idx] += eps;
+            let mut nm = n.to_vec();
+            nm[idx] -= eps;
+            let fd = (loss(&o, &np_) - loss(&o, &nm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - d_n[idx] as f64).abs() < 2e-2,
+                "{op:?} d_n[{idx}]: fd={fd} got={}",
+                d_n[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_dot() {
+        finite_diff_check(PairwiseOp::Dot);
+    }
+
+    #[test]
+    fn grad_sqdiff() {
+        finite_diff_check(PairwiseOp::SqDiff);
+    }
+
+    #[test]
+    fn grad_l2() {
+        finite_diff_check(PairwiseOp::L2);
+    }
+
+    #[test]
+    fn grad_l1() {
+        // L1 is piecewise linear; finite differences still valid away from
+        // kinks, which random normals avoid w.p. 1.
+        finite_diff_check(PairwiseOp::L1);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        let o = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let n = [1.0, 0.0, 0.0, 1.0]; // 2x2
+        let mut s = vec![0f32; 4];
+        pairwise_forward(PairwiseOp::Dot, &o, &n, 2, &mut s);
+        assert_eq!(s, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn diag_matches_pairwise_diagonal() {
+        let d = 4;
+        let m = 3;
+        let mut rng = Rng::seed_from_u64(5);
+        let o: Vec<f32> = (0..m * d).map(|_| rng.gen_normal()).collect();
+        let n: Vec<f32> = (0..m * d).map(|_| rng.gen_normal()).collect();
+        for op in [PairwiseOp::Dot, PairwiseOp::SqDiff, PairwiseOp::L2, PairwiseOp::L1] {
+            let mut full = vec![0f32; m * m];
+            pairwise_forward(op, &o, &n, d, &mut full);
+            let mut diag = vec![0f32; m];
+            diag_forward(op, &o, &n, d, &mut diag);
+            for i in 0..m {
+                assert_eq!(diag[i], full[i * m + i]);
+            }
+        }
+    }
+}

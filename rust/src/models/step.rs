@@ -1,0 +1,513 @@
+//! Full native train step (forward + backward) and eval scoring.
+//!
+//! This mirrors the AOT-compiled artifact contract exactly (DESIGN.md
+//! §Artifact contract): inputs are the *gathered* embeddings of a
+//! mini-batch under joint negative sampling; outputs are the loss and the
+//! gradients w.r.t. those gathered embeddings. The coordinator owns
+//! gather/scatter and the optimizer.
+
+use super::builders::{build_o, build_o_backward, project_negs, project_negs_backward, Side};
+use super::loss::{loss_and_grad, LossCfg};
+use super::ops::{diag_backward, diag_forward, pairwise_backward, pairwise_forward};
+use super::ModelKind;
+
+/// Shapes of one training step: B = nc·cs positives, each chunk of cs
+/// positives shares k tail-corruption negatives and k head-corruption
+/// negatives (paper §3.3 joint sampling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepShape {
+    pub batch: usize,
+    pub chunks: usize,
+    pub neg_k: usize,
+    pub dim: usize,
+}
+
+impl StepShape {
+    pub fn chunk_size(&self) -> usize {
+        debug_assert_eq!(self.batch % self.chunks, 0);
+        self.batch / self.chunks
+    }
+}
+
+/// Borrowed gathered embeddings for one step.
+pub struct StepInputs<'a> {
+    /// positive head embeddings [B, D]
+    pub h: &'a [f32],
+    /// positive relation rows [B, RD]
+    pub r: &'a [f32],
+    /// positive tail embeddings [B, D]
+    pub t: &'a [f32],
+    /// head-corruption negatives [nc, K, D]
+    pub neg_h: &'a [f32],
+    /// tail-corruption negatives [nc, K, D]
+    pub neg_t: &'a [f32],
+}
+
+/// Gradients w.r.t. the gathered embeddings (same shapes as inputs).
+#[derive(Clone, Debug, Default)]
+pub struct StepGrads {
+    pub loss: f32,
+    pub d_h: Vec<f32>,
+    pub d_r: Vec<f32>,
+    pub d_t: Vec<f32>,
+    pub d_neg_h: Vec<f32>,
+    pub d_neg_t: Vec<f32>,
+}
+
+/// Which side an eval scoring pass corrupts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalSide {
+    Tail,
+    Head,
+}
+
+/// Native (pure Rust) implementation of a KGE model step. Stateless apart
+/// from configuration; safe to share across threads.
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub kind: ModelKind,
+    pub dim: usize,
+    pub loss: LossCfg,
+}
+
+impl NativeModel {
+    pub fn new(kind: ModelKind, dim: usize, loss: LossCfg) -> Self {
+        assert!(kind.validate_dim(dim), "{kind:?} requires even dim, got {dim}");
+        NativeModel { kind, dim, loss }
+    }
+
+    pub fn rel_dim(&self) -> usize {
+        self.kind.rel_dim(self.dim)
+    }
+
+    /// Forward+backward of one mini-batch. See module docs for layout.
+    pub fn train_step(&self, shape: &StepShape, inp: &StepInputs<'_>) -> StepGrads {
+        let d = self.dim;
+        let rd = self.rel_dim();
+        let b = shape.batch;
+        let nc = shape.chunks;
+        let cs = shape.chunk_size();
+        let k = shape.neg_k;
+        let op = self.kind.pairwise_op();
+        debug_assert_eq!(inp.h.len(), b * d);
+        debug_assert_eq!(inp.r.len(), b * rd);
+        debug_assert_eq!(inp.t.len(), b * d);
+        debug_assert_eq!(inp.neg_h.len(), nc * k * d);
+        debug_assert_eq!(inp.neg_t.len(), nc * k * d);
+
+        // ---- forward ----
+        let mut o_tail = vec![0f32; b * d];
+        build_o(self.kind, Side::Tail, inp.h, inp.r, d, &mut o_tail);
+        let mut o_head = vec![0f32; b * d];
+        build_o(self.kind, Side::Head, inp.t, inp.r, d, &mut o_head);
+
+        // positives: pairwise(o_tail_i, proj_i(t_i))
+        let projecting = self.kind.projects_negatives();
+        let mut proj_t = if projecting { vec![0f32; b * d] } else { Vec::new() };
+        if projecting {
+            for i in 0..b {
+                let mut out = vec![0f32; d];
+                project_negs(self.kind, &inp.r[i * rd..(i + 1) * rd], &inp.t[i * d..(i + 1) * d], d, &mut out);
+                proj_t[i * d..(i + 1) * d].copy_from_slice(&out);
+            }
+        }
+        let t_eff: &[f32] = if projecting { &proj_t } else { inp.t };
+        let mut pos = vec![0f32; b];
+        diag_forward(op, &o_tail, t_eff, d, &mut pos);
+
+        // negatives: per chunk, pairwise(o rows, negs). TransR projects the
+        // chunk negatives per positive row.
+        // proj_neg_t[c] layout: [cs, k, d] when projecting, else unused.
+        let mut neg_scores = vec![0f32; b * 2 * k]; // [B, 2K]: tail side then head side
+        let mut proj_negs_t = if projecting { vec![0f32; b * k * d] } else { Vec::new() };
+        let mut proj_negs_h = if projecting { vec![0f32; b * k * d] } else { Vec::new() };
+        for c in 0..nc {
+            let rows = c * cs..(c + 1) * cs;
+            let nt = &inp.neg_t[c * k * d..(c + 1) * k * d];
+            let nh = &inp.neg_h[c * k * d..(c + 1) * k * d];
+            if projecting {
+                for i in rows.clone() {
+                    let r_row = &inp.r[i * rd..(i + 1) * rd];
+                    let pt = &mut proj_negs_t[i * k * d..(i + 1) * k * d];
+                    project_negs(self.kind, r_row, nt, d, pt);
+                    let mut s = vec![0f32; k];
+                    pairwise_forward(op, &o_tail[i * d..(i + 1) * d], pt, d, &mut s);
+                    neg_scores[i * 2 * k..i * 2 * k + k].copy_from_slice(&s);
+                    let ph = &mut proj_negs_h[i * k * d..(i + 1) * k * d];
+                    project_negs(self.kind, r_row, nh, d, ph);
+                    pairwise_forward(op, &o_head[i * d..(i + 1) * d], ph, d, &mut s);
+                    neg_scores[i * 2 * k + k..(i + 1) * 2 * k].copy_from_slice(&s);
+                }
+            } else {
+                // chunk-level GEMM-shaped pairwise
+                let mut s = vec![0f32; cs * k];
+                pairwise_forward(op, &o_tail[rows.start * d..rows.end * d], nt, d, &mut s);
+                for (li, i) in rows.clone().enumerate() {
+                    neg_scores[i * 2 * k..i * 2 * k + k].copy_from_slice(&s[li * k..(li + 1) * k]);
+                }
+                pairwise_forward(op, &o_head[rows.start * d..rows.end * d], nh, d, &mut s);
+                for (li, i) in rows.clone().enumerate() {
+                    neg_scores[i * 2 * k + k..(i + 1) * 2 * k]
+                        .copy_from_slice(&s[li * k..(li + 1) * k]);
+                }
+            }
+        }
+
+        // ---- loss ----
+        let mut d_pos = vec![0f32; b];
+        let mut d_neg = vec![0f32; b * 2 * k];
+        let loss = loss_and_grad(&self.loss, &pos, &neg_scores, 2 * k, &mut d_pos, &mut d_neg);
+
+        // ---- backward ----
+        let mut g = StepGrads {
+            loss,
+            d_h: vec![0f32; b * d],
+            d_r: vec![0f32; b * rd],
+            d_t: vec![0f32; b * d],
+            d_neg_h: vec![0f32; nc * k * d],
+            d_neg_t: vec![0f32; nc * k * d],
+        };
+        let mut d_o_tail = vec![0f32; b * d];
+        let mut d_o_head = vec![0f32; b * d];
+
+        // positives → d_o_tail, d_t (through projection if TransR)
+        {
+            let mut d_t_eff = vec![0f32; b * d];
+            diag_backward(op, &o_tail, t_eff, d, &pos, &d_pos, &mut d_o_tail, &mut d_t_eff);
+            if projecting {
+                for i in 0..b {
+                    project_negs_backward(
+                        self.kind,
+                        &inp.r[i * rd..(i + 1) * rd],
+                        &inp.t[i * d..(i + 1) * d],
+                        d,
+                        &d_t_eff[i * d..(i + 1) * d],
+                        &mut g.d_t[i * d..(i + 1) * d],
+                        &mut g.d_r[i * rd..(i + 1) * rd],
+                    );
+                }
+            } else {
+                g.d_t.copy_from_slice(&d_t_eff);
+            }
+        }
+
+        // negatives
+        for c in 0..nc {
+            let rows = c * cs..(c + 1) * cs;
+            let nt = &inp.neg_t[c * k * d..(c + 1) * k * d];
+            let nh = &inp.neg_h[c * k * d..(c + 1) * k * d];
+            if projecting {
+                for i in rows.clone() {
+                    let r_row = &inp.r[i * rd..(i + 1) * rd];
+                    // tail side
+                    let pt = &proj_negs_t[i * k * d..(i + 1) * k * d];
+                    let st = &neg_scores[i * 2 * k..i * 2 * k + k];
+                    let gt = &d_neg[i * 2 * k..i * 2 * k + k];
+                    let mut d_pt = vec![0f32; k * d];
+                    pairwise_backward(
+                        op,
+                        &o_tail[i * d..(i + 1) * d],
+                        pt,
+                        d,
+                        st,
+                        gt,
+                        &mut d_o_tail[i * d..(i + 1) * d],
+                        &mut d_pt,
+                    );
+                    project_negs_backward(
+                        self.kind,
+                        r_row,
+                        nt,
+                        d,
+                        &d_pt,
+                        &mut g.d_neg_t[c * k * d..(c + 1) * k * d],
+                        &mut g.d_r[i * rd..(i + 1) * rd],
+                    );
+                    // head side
+                    let ph = &proj_negs_h[i * k * d..(i + 1) * k * d];
+                    let sh = &neg_scores[i * 2 * k + k..(i + 1) * 2 * k];
+                    let gh = &d_neg[i * 2 * k + k..(i + 1) * 2 * k];
+                    let mut d_ph = vec![0f32; k * d];
+                    pairwise_backward(
+                        op,
+                        &o_head[i * d..(i + 1) * d],
+                        ph,
+                        d,
+                        sh,
+                        gh,
+                        &mut d_o_head[i * d..(i + 1) * d],
+                        &mut d_ph,
+                    );
+                    project_negs_backward(
+                        self.kind,
+                        r_row,
+                        nh,
+                        d,
+                        &d_ph,
+                        &mut g.d_neg_h[c * k * d..(c + 1) * k * d],
+                        &mut g.d_r[i * rd..(i + 1) * rd],
+                    );
+                }
+            } else {
+                // reassemble chunk score/grad blocks [cs,k]
+                let mut st = vec![0f32; cs * k];
+                let mut gt = vec![0f32; cs * k];
+                let mut sh = vec![0f32; cs * k];
+                let mut gh = vec![0f32; cs * k];
+                for (li, i) in rows.clone().enumerate() {
+                    st[li * k..(li + 1) * k]
+                        .copy_from_slice(&neg_scores[i * 2 * k..i * 2 * k + k]);
+                    gt[li * k..(li + 1) * k].copy_from_slice(&d_neg[i * 2 * k..i * 2 * k + k]);
+                    sh[li * k..(li + 1) * k]
+                        .copy_from_slice(&neg_scores[i * 2 * k + k..(i + 1) * 2 * k]);
+                    gh[li * k..(li + 1) * k]
+                        .copy_from_slice(&d_neg[i * 2 * k + k..(i + 1) * 2 * k]);
+                }
+                pairwise_backward(
+                    op,
+                    &o_tail[rows.start * d..rows.end * d],
+                    nt,
+                    d,
+                    &st,
+                    &gt,
+                    &mut d_o_tail[rows.start * d..rows.end * d],
+                    &mut g.d_neg_t[c * k * d..(c + 1) * k * d],
+                );
+                pairwise_backward(
+                    op,
+                    &o_head[rows.start * d..rows.end * d],
+                    nh,
+                    d,
+                    &sh,
+                    &gh,
+                    &mut d_o_head[rows.start * d..rows.end * d],
+                    &mut g.d_neg_h[c * k * d..(c + 1) * k * d],
+                );
+            }
+        }
+
+        // o builders
+        build_o_backward(self.kind, Side::Tail, inp.h, inp.r, d, &d_o_tail, &mut g.d_h, &mut g.d_r);
+        build_o_backward(self.kind, Side::Head, inp.t, inp.r, d, &d_o_head, &mut g.d_t, &mut g.d_r);
+        g
+    }
+
+    /// Score `m` (entity, relation) pairs against `c` candidate entities.
+    /// For `EvalSide::Tail`, `e` holds the positive heads and candidates
+    /// are tails; for `EvalSide::Head`, `e` holds the positive tails and
+    /// candidates are heads. Writes `scores[m, c]`.
+    pub fn eval_scores(
+        &self,
+        side: EvalSide,
+        e: &[f32],
+        r: &[f32],
+        cand: &[f32],
+        scores: &mut [f32],
+    ) {
+        let d = self.dim;
+        let rd = self.rel_dim();
+        let m = e.len() / d;
+        let c = cand.len() / d;
+        debug_assert_eq!(scores.len(), m * c);
+        let op = self.kind.pairwise_op();
+        let bside = match side {
+            EvalSide::Tail => Side::Tail,
+            EvalSide::Head => Side::Head,
+        };
+        let mut o = vec![0f32; m * d];
+        build_o(self.kind, bside, e, r, d, &mut o);
+        if self.kind.projects_negatives() {
+            let mut pc = vec![0f32; c * d];
+            for i in 0..m {
+                project_negs(self.kind, &r[i * rd..(i + 1) * rd], cand, d, &mut pc);
+                pairwise_forward(op, &o[i * d..(i + 1) * d], &pc, d, &mut scores[i * c..(i + 1) * c]);
+            }
+        } else {
+            pairwise_forward(op, &o, cand, d, scores);
+        }
+    }
+
+    /// Score a single triplet (used by tests and spot checks).
+    pub fn score_one(&self, h: &[f32], r: &[f32], t: &[f32]) -> f32 {
+        let d = self.dim;
+        let mut s = vec![0f32; 1];
+        self.eval_scores(EvalSide::Tail, h, r, t, &mut s);
+        let _ = d;
+        s[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LossKind;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_normal() * 0.5).collect()
+    }
+
+    fn shape() -> StepShape {
+        StepShape { batch: 8, chunks: 2, neg_k: 3, dim: 6 }
+    }
+
+    fn make_inputs(rng: &mut Rng, kind: ModelKind, s: &StepShape) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let rd = kind.rel_dim(s.dim);
+        (
+            rand_vec(rng, s.batch * s.dim),
+            rand_vec(rng, s.batch * rd),
+            rand_vec(rng, s.batch * s.dim),
+            rand_vec(rng, s.chunks * s.neg_k * s.dim),
+            rand_vec(rng, s.chunks * s.neg_k * s.dim),
+        )
+    }
+
+    /// Finite-difference check of the whole step for every model.
+    #[test]
+    fn train_step_gradients_all_models() {
+        let s = shape();
+        for kind in ModelKind::ALL {
+            let model = NativeModel::new(kind, s.dim, LossCfg::default());
+            let mut rng = Rng::seed_from_u64(kind as u64 + 100);
+            let (h, r, t, nh, nt) = make_inputs(&mut rng, kind, &s);
+            let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+            let g = model.train_step(&s, &inp);
+
+            let eval = |h: &[f32], r: &[f32], t: &[f32], nh: &[f32], nt: &[f32]| -> f64 {
+                model
+                    .train_step(&s, &StepInputs { h, r, t, neg_h: nh, neg_t: nt })
+                    .loss as f64
+            };
+            let eps = 1e-2f32;
+            let tol = 5e-3;
+            // spot-check a few coordinates of each gradient tensor
+            for idx in [0usize, 7, s.batch * s.dim - 1] {
+                let mut p = h.clone();
+                p[idx] += eps;
+                let mut m = h.clone();
+                m[idx] -= eps;
+                let fd = (eval(&p, &r, &t, &nh, &nt) - eval(&m, &r, &t, &nh, &nt)) / (2.0 * eps as f64);
+                assert!((fd - g.d_h[idx] as f64).abs() < tol, "{kind:?} d_h[{idx}] fd={fd} got={}", g.d_h[idx]);
+            }
+            for idx in [0usize, r.len() / 2, r.len() - 1] {
+                let mut p = r.clone();
+                p[idx] += eps;
+                let mut m = r.clone();
+                m[idx] -= eps;
+                let fd = (eval(&h, &p, &t, &nh, &nt) - eval(&h, &m, &t, &nh, &nt)) / (2.0 * eps as f64);
+                assert!((fd - g.d_r[idx] as f64).abs() < tol, "{kind:?} d_r[{idx}] fd={fd} got={}", g.d_r[idx]);
+            }
+            for idx in [1usize, s.batch * s.dim - 2] {
+                let mut p = t.clone();
+                p[idx] += eps;
+                let mut m = t.clone();
+                m[idx] -= eps;
+                let fd = (eval(&h, &r, &p, &nh, &nt) - eval(&h, &r, &m, &nh, &nt)) / (2.0 * eps as f64);
+                assert!((fd - g.d_t[idx] as f64).abs() < tol, "{kind:?} d_t[{idx}] fd={fd} got={}", g.d_t[idx]);
+            }
+            for idx in [0usize, nh.len() - 1] {
+                let mut p = nh.clone();
+                p[idx] += eps;
+                let mut m = nh.clone();
+                m[idx] -= eps;
+                let fd = (eval(&h, &r, &t, &p, &nt) - eval(&h, &r, &t, &m, &nt)) / (2.0 * eps as f64);
+                assert!((fd - g.d_neg_h[idx] as f64).abs() < tol, "{kind:?} d_neg_h[{idx}]");
+                let mut p = nt.clone();
+                p[idx] += eps;
+                let mut m = nt.clone();
+                m[idx] -= eps;
+                let fd = (eval(&h, &r, &t, &nh, &p) - eval(&h, &r, &t, &nh, &m)) / (2.0 * eps as f64);
+                assert!((fd - g.d_neg_t[idx] as f64).abs() < tol, "{kind:?} d_neg_t[{idx}]");
+            }
+        }
+    }
+
+    /// Margin loss path also differentiates cleanly.
+    #[test]
+    fn train_step_margin_loss() {
+        let s = shape();
+        let model = NativeModel::new(
+            ModelKind::TransEL2,
+            s.dim,
+            LossCfg { kind: LossKind::Margin(1.0), adv_temp: None },
+        );
+        let mut rng = Rng::seed_from_u64(7);
+        let (h, r, t, nh, nt) = make_inputs(&mut rng, ModelKind::TransEL2, &s);
+        let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+        let g = model.train_step(&s, &inp);
+        assert!(g.loss > 0.0);
+        let eval = |h: &[f32]| -> f64 {
+            model.train_step(&s, &StepInputs { h, r: &r, t: &t, neg_h: &nh, neg_t: &nt }).loss as f64
+        };
+        let eps = 1e-2f32;
+        let idx = 3;
+        let mut p = h.clone();
+        p[idx] += eps;
+        let mut m = h.clone();
+        m[idx] -= eps;
+        let fd = (eval(&p) - eval(&m)) / (2.0 * eps as f64);
+        assert!((fd - g.d_h[idx] as f64).abs() < 5e-3);
+    }
+
+    /// eval_scores tail-side must agree with the direct per-triplet score.
+    #[test]
+    fn eval_matches_train_decomposition() {
+        let d = 8;
+        for kind in ModelKind::ALL {
+            let model = NativeModel::new(kind, d, LossCfg::default());
+            let mut rng = Rng::seed_from_u64(kind as u64 + 11);
+            let rd = kind.rel_dim(d);
+            let h = rand_vec(&mut rng, d);
+            let r = rand_vec(&mut rng, rd);
+            let t = rand_vec(&mut rng, d);
+            let tail = model.score_one(&h, &r, &t);
+            // head-side scoring of the same triplet must agree
+            let mut s = vec![0f32; 1];
+            model.eval_scores(EvalSide::Head, &t, &r, &h, &mut s);
+            assert!((tail - s[0]).abs() < 1e-4, "{kind:?} tail={tail} head={}", s[0]);
+        }
+    }
+
+    /// Training on a toy problem must reduce the loss (end-to-end sanity
+    /// of gradient direction).
+    #[test]
+    fn sgd_reduces_loss() {
+        let s = StepShape { batch: 16, chunks: 4, neg_k: 8, dim: 8 };
+        for kind in [ModelKind::TransEL2, ModelKind::DistMult, ModelKind::RotatE] {
+            let model = NativeModel::new(kind, s.dim, LossCfg::default());
+            let mut rng = Rng::seed_from_u64(5);
+            let rd = kind.rel_dim(s.dim);
+            let mut h = rand_vec(&mut rng, s.batch * s.dim);
+            let mut r = rand_vec(&mut rng, s.batch * rd);
+            let mut t = rand_vec(&mut rng, s.batch * s.dim);
+            let mut nh = rand_vec(&mut rng, s.chunks * s.neg_k * s.dim);
+            let mut nt = rand_vec(&mut rng, s.chunks * s.neg_k * s.dim);
+            let first = model
+                .train_step(&s, &StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt })
+                .loss;
+            let mut last = first;
+            for _ in 0..200 {
+                let g = model
+                    .train_step(&s, &StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt });
+                let lr = 0.5f32;
+                for (x, dx) in h.iter_mut().zip(&g.d_h) {
+                    *x -= lr * dx;
+                }
+                for (x, dx) in r.iter_mut().zip(&g.d_r) {
+                    *x -= lr * dx;
+                }
+                for (x, dx) in t.iter_mut().zip(&g.d_t) {
+                    *x -= lr * dx;
+                }
+                for (x, dx) in nh.iter_mut().zip(&g.d_neg_h) {
+                    *x -= lr * dx;
+                }
+                for (x, dx) in nt.iter_mut().zip(&g.d_neg_t) {
+                    *x -= lr * dx;
+                }
+                last = g.loss;
+            }
+            assert!(last < first * 0.7, "{kind:?}: loss {first} -> {last}");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Weighted undirected graph used by the min-cut partitioner.
+//!
+//! Built from a `TripletStore` by collapsing parallel edges (a (h,t) pair
+//! connected by multiple relations becomes one edge of weight = multiplicity)
+//! and dropping direction — edge-cut in the undirected multigraph is what
+//! determines cross-machine embedding traffic (paper §3.2).
+
+use crate::kg::TripletStore;
+
+#[derive(Clone, Debug)]
+pub struct WeightedGraph {
+    /// CSR offsets, len = n+1
+    pub offsets: Vec<u64>,
+    /// neighbor vertex ids
+    pub adj: Vec<u32>,
+    /// edge weights, aligned with `adj`
+    pub ewgt: Vec<u32>,
+    /// vertex weights (number of collapsed original vertices)
+    pub vwgt: Vec<u32>,
+}
+
+impl WeightedGraph {
+    pub fn n_vertices(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    pub fn neighbors(&self, v: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        (lo..hi).map(move |i| (self.adj[i], self.ewgt[i]))
+    }
+
+    /// Total vertex weight.
+    pub fn total_vwgt(&self) -> u64 {
+        self.vwgt.iter().map(|&w| w as u64).sum()
+    }
+
+    /// Build from (u, v, w) edge triples with u != v. Parallel edges are
+    /// collapsed by summing weights.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, u32)], vwgt: Option<Vec<u32>>) -> Self {
+        // Dedup via sort on (min,max) keys.
+        let mut keyed: Vec<(u32, u32, u32)> = edges
+            .iter()
+            .filter(|&&(u, v, _)| u != v)
+            .map(|&(u, v, w)| if u < v { (u, v, w) } else { (v, u, w) })
+            .collect();
+        keyed.sort_unstable_by_key(|&(u, v, _)| ((u as u64) << 32) | v as u64);
+        let mut dedup: Vec<(u32, u32, u32)> = Vec::with_capacity(keyed.len());
+        for (u, v, w) in keyed {
+            if let Some(last) = dedup.last_mut() {
+                if last.0 == u && last.1 == v {
+                    last.2 += w;
+                    continue;
+                }
+            }
+            dedup.push((u, v, w));
+        }
+        // CSR with both directions.
+        let mut offsets = vec![0u64; n + 1];
+        for &(u, v, _) in &dedup {
+            offsets[u as usize + 1] += 1;
+            offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let m2 = dedup.len() * 2;
+        let mut adj = vec![0u32; m2];
+        let mut ewgt = vec![0u32; m2];
+        let mut cursor = offsets.clone();
+        for &(u, v, w) in &dedup {
+            let pu = cursor[u as usize] as usize;
+            adj[pu] = v;
+            ewgt[pu] = w;
+            cursor[u as usize] += 1;
+            let pv = cursor[v as usize] as usize;
+            adj[pv] = u;
+            ewgt[pv] = w;
+            cursor[v as usize] += 1;
+        }
+        WeightedGraph { offsets, adj, ewgt, vwgt: vwgt.unwrap_or_else(|| vec![1; n]) }
+    }
+
+    pub fn from_triplets(store: &TripletStore) -> Self {
+        let edges: Vec<(u32, u32, u32)> =
+            store.iter().map(|t| (t.head, t.tail, 1u32)).collect();
+        Self::from_edges(store.n_entities(), &edges, None)
+    }
+
+    /// Edge-cut of a partition assignment (each cut edge counted once).
+    pub fn edge_cut(&self, part: &[u32]) -> u64 {
+        let mut cut = 0u64;
+        for v in 0..self.n_vertices() {
+            for (u, w) in self.neighbors(v as u32) {
+                if (u as usize) > v && part[u as usize] != part[v] {
+                    cut += w as u64;
+                }
+            }
+        }
+        cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collapse_parallel_edges() {
+        let g = WeightedGraph::from_edges(3, &[(0, 1, 1), (1, 0, 1), (1, 2, 1)], None);
+        assert_eq!(g.degree(0), 1);
+        let (n, w) = g.neighbors(0).next().unwrap();
+        assert_eq!((n, w), (1, 2));
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = WeightedGraph::from_edges(2, &[(0, 0, 5), (0, 1, 1)], None);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn edge_cut_counts_once() {
+        let g = WeightedGraph::from_edges(4, &[(0, 1, 2), (1, 2, 3), (2, 3, 1)], None);
+        // split {0,1} | {2,3}: only edge (1,2) w=3 is cut
+        assert_eq!(g.edge_cut(&[0, 0, 1, 1]), 3);
+        assert_eq!(g.edge_cut(&[0, 0, 0, 0]), 0);
+        assert_eq!(g.edge_cut(&[0, 1, 0, 1]), 2 + 3 + 1);
+    }
+}

@@ -1,0 +1,332 @@
+//! Multilevel k-way min-cut partitioner — our stand-in for METIS [6].
+//!
+//! Classic three-phase scheme (Karypis & Kumar):
+//! 1. **Coarsening** — repeated heavy-edge matching collapses the graph
+//!    until it is small;
+//! 2. **Initial partitioning** — greedy region growing on the coarsest
+//!    graph into k balanced parts;
+//! 3. **Uncoarsening + refinement** — project the partition back up,
+//!    applying boundary Kernighan–Lin-style gain moves at every level
+//!    under a balance constraint.
+//!
+//! The paper only needs METIS's qualitative property: most triplets end up
+//! inside diagonal blocks (Fig 2), so distributed trainers rarely touch
+//! remote entity embeddings. `partition::stats` measures exactly that.
+
+use super::graph::WeightedGraph;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MetisConfig {
+    /// Allowed imbalance: max part weight <= (1+epsilon) * ideal.
+    pub epsilon: f64,
+    /// Stop coarsening when the graph has at most this many vertices
+    /// (scaled by k).
+    pub coarsest_per_part: usize,
+    /// Boundary refinement passes per level.
+    pub refine_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for MetisConfig {
+    fn default() -> Self {
+        MetisConfig { epsilon: 0.05, coarsest_per_part: 30, refine_passes: 4, seed: 1 }
+    }
+}
+
+/// Partition `g` into `k` parts. Returns the part id of every vertex.
+pub fn partition(g: &WeightedGraph, k: usize, cfg: &MetisConfig) -> Vec<u32> {
+    assert!(k >= 1);
+    let n = g.n_vertices();
+    if k == 1 || n <= k {
+        return (0..n).map(|v| (v % k) as u32).collect();
+    }
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x4d45_5449);
+
+    // ---- coarsening ----
+    let mut levels: Vec<(WeightedGraph, Vec<u32>)> = Vec::new(); // (coarser graph, map fine->coarse)
+    let mut cur = g.clone();
+    let target = (cfg.coarsest_per_part * k).max(64);
+    while cur.n_vertices() > target && levels.len() < 40 {
+        let (coarse, map) = coarsen_once(&cur, &mut rng);
+        // stop if coarsening stalls (< 10% reduction)
+        if coarse.n_vertices() as f64 > cur.n_vertices() as f64 * 0.95 {
+            break;
+        }
+        levels.push((cur, map));
+        cur = coarse;
+    }
+
+    // ---- initial partition on coarsest ----
+    let total = cur.total_vwgt();
+    let max_part = ((total as f64 / k as f64) * (1.0 + cfg.epsilon)).ceil() as u64;
+    let mut part = region_grow(&cur, k, max_part, &mut rng);
+    refine(&cur, &mut part, k, max_part, cfg.refine_passes);
+
+    // ---- uncoarsen + refine ----
+    while let Some((fine, map)) = levels.pop() {
+        let mut fine_part = vec![0u32; fine.n_vertices()];
+        for v in 0..fine.n_vertices() {
+            fine_part[v] = part[map[v] as usize];
+        }
+        refine(&fine, &mut fine_part, k, max_part, cfg.refine_passes);
+        part = fine_part;
+    }
+    part
+}
+
+/// One round of heavy-edge matching. Returns the coarse graph and the
+/// fine→coarse vertex map.
+fn coarsen_once(g: &WeightedGraph, rng: &mut Rng) -> (WeightedGraph, Vec<u32>) {
+    let n = g.n_vertices();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut matched = vec![u32::MAX; n];
+    let mut n_coarse = 0u32;
+    for &v in &order {
+        if matched[v as usize] != u32::MAX {
+            continue;
+        }
+        // heaviest unmatched neighbor
+        let mut best = u32::MAX;
+        let mut best_w = 0u32;
+        for (u, w) in g.neighbors(v) {
+            if matched[u as usize] == u32::MAX && u != v && w >= best_w {
+                best = u;
+                best_w = w;
+            }
+        }
+        matched[v as usize] = n_coarse;
+        if best != u32::MAX {
+            matched[best as usize] = n_coarse;
+        }
+        n_coarse += 1;
+    }
+    // coarse vertex weights + edges
+    let mut vwgt = vec![0u32; n_coarse as usize];
+    for v in 0..n {
+        vwgt[matched[v] as usize] += g.vwgt[v];
+    }
+    let mut edges: Vec<(u32, u32, u32)> = Vec::with_capacity(g.adj.len() / 2);
+    for v in 0..n {
+        let cv = matched[v];
+        for (u, w) in g.neighbors(v as u32) {
+            let cu = matched[u as usize];
+            if cv < cu {
+                edges.push((cv, cu, w));
+            }
+        }
+    }
+    let coarse = WeightedGraph::from_edges(n_coarse as usize, &edges, Some(vwgt));
+    (coarse, matched)
+}
+
+/// Greedy BFS region growing into k balanced parts.
+fn region_grow(g: &WeightedGraph, k: usize, max_part: u64, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n_vertices();
+    let mut part = vec![u32::MAX; n];
+    let mut weights = vec![0u64; k];
+    let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); k];
+    // distinct random seeds
+    for (p, f) in frontier.iter_mut().enumerate() {
+        for _ in 0..64 {
+            let v = rng.gen_index(n) as u32;
+            if part[v as usize] == u32::MAX {
+                part[v as usize] = p as u32;
+                weights[p] += g.vwgt[v as usize] as u64;
+                f.push(v);
+                break;
+            }
+        }
+    }
+    // round-robin BFS growth, lightest part first
+    loop {
+        // pick the lightest part that still has a frontier
+        let mut grew = false;
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by_key(|&p| weights[p]);
+        for p in order {
+            if weights[p] as u64 >= max_part {
+                continue;
+            }
+            while let Some(v) = frontier[p].pop() {
+                let mut advanced = false;
+                for (u, _) in g.neighbors(v) {
+                    if part[u as usize] == u32::MAX {
+                        part[u as usize] = p as u32;
+                        weights[p] += g.vwgt[u as usize] as u64;
+                        frontier[p].push(u);
+                        advanced = true;
+                        break;
+                    }
+                }
+                if advanced {
+                    frontier[p].push(v);
+                    grew = true;
+                    break;
+                }
+            }
+            if grew {
+                break;
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    // orphans (disconnected remainder) → lightest parts
+    for v in 0..n {
+        if part[v] == u32::MAX {
+            let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+            part[v] = p as u32;
+            weights[p] += g.vwgt[v] as u64;
+        }
+    }
+    part
+}
+
+/// Greedy boundary refinement: move boundary vertices to the neighboring
+/// part with the highest cut gain, respecting the balance constraint.
+fn refine(g: &WeightedGraph, part: &mut [u32], k: usize, max_part: u64, passes: usize) {
+    let n = g.n_vertices();
+    let mut weights = vec![0u64; k];
+    for v in 0..n {
+        weights[part[v] as usize] += g.vwgt[v] as u64;
+    }
+    let mut gains: Vec<i64> = vec![0; k];
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..n {
+            let pv = part[v] as usize;
+            // connectivity of v to each part
+            let mut touched: Vec<usize> = Vec::with_capacity(8);
+            for g_ in gains.iter_mut() {
+                *g_ = 0;
+            }
+            for (u, w) in g.neighbors(v as u32) {
+                let pu = part[u as usize] as usize;
+                if gains[pu] == 0 {
+                    touched.push(pu);
+                }
+                gains[pu] += w as i64;
+            }
+            let internal = gains[pv];
+            let mut best_part = pv;
+            let mut best_gain = 0i64;
+            for &p in &touched {
+                if p == pv {
+                    continue;
+                }
+                let gain = gains[p] - internal;
+                if gain > best_gain && weights[p] + g.vwgt[v] as u64 <= max_part {
+                    best_gain = gain;
+                    best_part = p;
+                }
+            }
+            if best_part != pv {
+                weights[pv] -= g.vwgt[v] as u64;
+                weights[best_part] += g.vwgt[v] as u64;
+                part[v] = best_part as u32;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator::{generate, GeneratorConfig};
+
+    fn ring_of_cliques(n_cliques: usize, size: usize) -> WeightedGraph {
+        // Cliques connected in a ring by single edges — a min-cut
+        // partitioner must cut only the ring edges.
+        let mut edges = Vec::new();
+        for c in 0..n_cliques {
+            let base = (c * size) as u32;
+            for i in 0..size as u32 {
+                for j in (i + 1)..size as u32 {
+                    edges.push((base + i, base + j, 1u32));
+                }
+            }
+            let next = (((c + 1) % n_cliques) * size) as u32;
+            edges.push((base, next, 1u32));
+        }
+        WeightedGraph::from_edges(n_cliques * size, &edges, None)
+    }
+
+    #[test]
+    fn cliques_stay_together() {
+        let g = ring_of_cliques(8, 16);
+        let part = partition(&g, 4, &MetisConfig::default());
+        // cut should be close to the minimum of 4 ring edges; allow a bit
+        // of slack for the greedy heuristics.
+        let cut = g.edge_cut(&part);
+        assert!(cut <= 12, "cut={cut}");
+        // balance
+        let mut w = [0u64; 4];
+        for &p in &part {
+            w[p as usize] += 1;
+        }
+        for &x in &w {
+            assert!(x >= 16 && x <= 48, "weights={w:?}");
+        }
+    }
+
+    #[test]
+    fn balance_constraint_respected() {
+        let g = ring_of_cliques(10, 10);
+        let cfg = MetisConfig { epsilon: 0.10, ..Default::default() };
+        let part = partition(&g, 5, &cfg);
+        let mut w = vec![0u64; 5];
+        for &p in &part {
+            w[p as usize] += 1;
+        }
+        let max = *w.iter().max().unwrap();
+        // region growing can overfill the last part with orphans, but
+        // should stay near (1+eps)*ideal = 22
+        assert!(max <= 30, "{w:?}");
+    }
+
+    #[test]
+    fn beats_random_on_community_graph() {
+        let kg = generate(&GeneratorConfig::tiny(3));
+        let g = WeightedGraph::from_triplets(&kg.store);
+        let part = partition(&g, 4, &MetisConfig::default());
+        let metis_cut = g.edge_cut(&part);
+        let mut rng = Rng::seed_from_u64(5);
+        let rand_part: Vec<u32> = (0..g.n_vertices()).map(|_| rng.gen_index(4) as u32).collect();
+        let rand_cut = g.edge_cut(&rand_part);
+        assert!(
+            (metis_cut as f64) < 0.8 * rand_cut as f64,
+            "metis={metis_cut} random={rand_cut}"
+        );
+    }
+
+    #[test]
+    fn k1_trivial() {
+        let g = ring_of_cliques(2, 4);
+        let part = partition(&g, 1, &MetisConfig::default());
+        assert!(part.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn all_vertices_assigned() {
+        let kg = generate(&GeneratorConfig::tiny(9));
+        let g = WeightedGraph::from_triplets(&kg.store);
+        for k in [2, 3, 4, 8] {
+            let part = partition(&g, k, &MetisConfig::default());
+            assert_eq!(part.len(), g.n_vertices());
+            assert!(part.iter().all(|&p| (p as usize) < k));
+            // every part non-empty
+            let mut seen = vec![false; k];
+            for &p in &part {
+                seen[p as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "k={k}");
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Graph partitioning (paper §3.2) and relation partitioning (§3.4).
+//!
+//! * [`metis`] — multilevel min-cut partitioner (METIS stand-in) used to
+//!   place entities and triplets on machines for distributed training;
+//! * [`random_partition`] — the random baseline of §6.3;
+//! * [`relation`] — the greedy relation partitioner that binds relations
+//!   to computing units within a machine;
+//! * [`stats`] — locality metrics (edge-cut, fraction of local triplets)
+//!   used by tests and the Fig 7 bench.
+
+pub mod graph;
+pub mod metis;
+pub mod relation;
+
+use crate::kg::TripletStore;
+use crate::util::rng::Rng;
+
+pub use graph::WeightedGraph;
+pub use metis::{partition as metis_partition, MetisConfig};
+pub use relation::{partition_relations, RelationPartition, SPLIT};
+
+/// A placement of entities and triplets onto `k` machines.
+#[derive(Clone, Debug)]
+pub struct GraphPartition {
+    pub k: usize,
+    /// entity → machine
+    pub entity_part: Vec<u32>,
+    /// triplet index → machine (machine of the triplet's head)
+    pub triplet_part: Vec<u32>,
+}
+
+impl GraphPartition {
+    /// Build from an entity assignment; triplets follow their head entity
+    /// (the paper co-locates a METIS partition's entities and incident
+    /// triplets).
+    pub fn from_entity_assignment(store: &TripletStore, k: usize, entity_part: Vec<u32>) -> Self {
+        assert_eq!(entity_part.len(), store.n_entities());
+        let triplet_part = store.heads.iter().map(|&h| entity_part[h as usize]).collect();
+        GraphPartition { k, entity_part, triplet_part }
+    }
+
+    /// METIS-style placement.
+    pub fn metis(store: &TripletStore, k: usize, cfg: &MetisConfig) -> Self {
+        let g = WeightedGraph::from_triplets(store);
+        let part = metis_partition(&g, k, cfg);
+        Self::from_entity_assignment(store, k, part)
+    }
+
+    /// Random placement (the §6.3 baseline).
+    pub fn random(store: &TripletStore, k: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x52_414e_44);
+        let part = (0..store.n_entities()).map(|_| rng.gen_index(k) as u32).collect();
+        Self::from_entity_assignment(store, k, part)
+    }
+
+    /// Triplet indices assigned to machine `p`.
+    pub fn triplets_of(&self, p: u32) -> Vec<usize> {
+        self.triplet_part
+            .iter()
+            .enumerate()
+            .filter(|&(_, &tp)| tp == p)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Locality: fraction of triplet endpoints that live on the triplet's
+    /// machine. 1.0 = no remote embedding traffic. This is the quantity
+    /// the paper's Fig 2 visualizes as diagonal-block density.
+    pub fn locality(&self, store: &TripletStore) -> f64 {
+        let mut local = 0u64;
+        for i in 0..store.len() {
+            let p = self.triplet_part[i];
+            if self.entity_part[store.heads[i] as usize] == p {
+                local += 1;
+            }
+            if self.entity_part[store.tails[i] as usize] == p {
+                local += 1;
+            }
+        }
+        local as f64 / (2 * store.len()) as f64
+    }
+
+    /// Per-machine entity counts.
+    pub fn entity_sizes(&self) -> Vec<u64> {
+        let mut s = vec![0u64; self.k];
+        for &p in &self.entity_part {
+            s[p as usize] += 1;
+        }
+        s
+    }
+
+    /// Per-machine triplet counts.
+    pub fn triplet_sizes(&self) -> Vec<u64> {
+        let mut s = vec![0u64; self.k];
+        for &p in &self.triplet_part {
+            s[p as usize] += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator::{generate, GeneratorConfig};
+
+    #[test]
+    fn metis_beats_random_locality() {
+        let kg = generate(&GeneratorConfig::tiny(8));
+        let m = GraphPartition::metis(&kg.store, 4, &MetisConfig::default());
+        let r = GraphPartition::random(&kg.store, 4, 8);
+        let lm = m.locality(&kg.store);
+        let lr = r.locality(&kg.store);
+        // random gives ~0.25 + 0.5 (head always local) ≈ 0.625;
+        // metis should clearly beat it on a community graph
+        assert!(lm > lr + 0.1, "metis={lm} random={lr}");
+    }
+
+    #[test]
+    fn heads_always_local() {
+        let kg = generate(&GeneratorConfig::tiny(1));
+        let p = GraphPartition::random(&kg.store, 4, 1);
+        for i in 0..kg.store.len() {
+            assert_eq!(p.triplet_part[i], p.entity_part[kg.store.heads[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn triplets_of_partitions_cover_all() {
+        let kg = generate(&GeneratorConfig::tiny(2));
+        let p = GraphPartition::metis(&kg.store, 3, &MetisConfig::default());
+        let total: usize = (0..3).map(|m| p.triplets_of(m).len()).sum();
+        assert_eq!(total, kg.store.len());
+    }
+}

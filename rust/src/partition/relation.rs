@@ -1,0 +1,209 @@
+//! Relation partitioning (paper §3.4).
+//!
+//! Greedy algorithm from the paper: sort relations by frequency
+//! (non-increasing), assign each to the partition with the fewest triplets
+//! so far. Relations whose triplet count exceeds the ideal partition size
+//! are *split* equally across all partitions ("most common relations").
+//! Per-epoch randomization perturbs the assignment so SGD does not see the
+//! same relation↔worker binding forever (paper's fix for reduced
+//! stochasticity).
+
+use crate::kg::TripletStore;
+use crate::util::rng::Rng;
+
+/// Assignment of triplets (and relations) to `k` computing units.
+#[derive(Clone, Debug)]
+pub struct RelationPartition {
+    pub k: usize,
+    /// triplet index → partition
+    pub triplet_part: Vec<u32>,
+    /// relation → owning partition, or `SPLIT` if split across all
+    pub relation_part: Vec<u32>,
+    /// number of triplets per partition
+    pub sizes: Vec<u64>,
+}
+
+/// Marker for relations split across all partitions.
+pub const SPLIT: u32 = u32::MAX;
+
+impl RelationPartition {
+    /// Distinct relations that partition `p` touches (split relations count
+    /// for every partition) — the data-transfer metric of §3.4.
+    pub fn relations_touched(&self, p: u32) -> usize {
+        self.relation_part
+            .iter()
+            .filter(|&&rp| rp == p || rp == SPLIT)
+            .count()
+    }
+
+    /// Triplet indices owned by partition `p`.
+    pub fn triplets_of(&self, p: u32) -> Vec<usize> {
+        self.triplet_part
+            .iter()
+            .enumerate()
+            .filter(|&(_, &tp)| tp == p)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Build a relation partition for `store` into `k` parts.
+///
+/// `shuffle_seed` drives the per-epoch randomization: among partitions
+/// whose load is within ~5% of the minimum, the tie is broken randomly, so
+/// successive epochs produce different but equally balanced assignments.
+pub fn partition_relations(store: &TripletStore, k: usize, shuffle_seed: u64) -> RelationPartition {
+    assert!(k >= 1);
+    let counts = store.relation_counts();
+    let n_rel = counts.len();
+    let total: u64 = counts.iter().sum();
+    let ideal = total.div_ceil(k as u64);
+
+    // sort relations by frequency, non-increasing; randomize ties so the
+    // per-epoch assignment varies
+    let mut rng = Rng::seed_from_u64(shuffle_seed ^ 0x52_454c);
+    let mut order: Vec<u32> = (0..n_rel as u32).collect();
+    rng.shuffle(&mut order);
+    order.sort_by_key(|&r| std::cmp::Reverse(counts[r as usize]));
+
+    let mut relation_part = vec![0u32; n_rel];
+    let mut sizes = vec![0u64; k];
+    for &r in &order {
+        let c = counts[r as usize];
+        if c == 0 {
+            // unused relation: assign round-robin, irrelevant for load
+            relation_part[r as usize] = (r as usize % k) as u32;
+            continue;
+        }
+        if c > ideal {
+            // very frequent relation: split across all partitions
+            relation_part[r as usize] = SPLIT;
+            for s in sizes.iter_mut() {
+                *s += c / k as u64;
+            }
+            continue;
+        }
+        // partitions within 5% of the minimum load are tie-broken randomly
+        let min = *sizes.iter().min().unwrap();
+        let slack = (ideal / 20).max(1);
+        let eligible: Vec<usize> =
+            (0..k).filter(|&p| sizes[p] <= min.saturating_add(slack)).collect();
+        let p = eligible[rng.gen_index(eligible.len())];
+        relation_part[r as usize] = p as u32;
+        sizes[p] += c;
+    }
+
+    // assign triplets: owned relation → its partition; split relation →
+    // round-robin by a per-relation counter (equal split, deterministic)
+    let mut triplet_part = vec![0u32; store.len()];
+    let mut split_cursor = vec![0usize; n_rel];
+    for i in 0..store.len() {
+        let r = store.rels[i] as usize;
+        let rp = relation_part[r];
+        triplet_part[i] = if rp == SPLIT {
+            let p = (split_cursor[r] % k) as u32;
+            split_cursor[r] += 1;
+            p
+        } else {
+            rp
+        };
+    }
+    // recompute exact sizes from the triplet assignment
+    let mut sizes = vec![0u64; k];
+    for &p in &triplet_part {
+        sizes[p as usize] += 1;
+    }
+    RelationPartition { k, triplet_part, relation_part, sizes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator::{generate, GeneratorConfig};
+    use crate::kg::Triplet;
+
+    fn store_with_counts(counts: &[u64]) -> TripletStore {
+        let mut s = TripletStore::new(4, counts.len());
+        for (r, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                s.push(Triplet { head: 0, rel: r as u32, tail: 1 });
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn balanced_sizes() {
+        // needs clearly more relations than partitions for greedy balance
+        let cfg = GeneratorConfig { n_relations: 64, ..GeneratorConfig::tiny(2) };
+        let kg = generate(&cfg);
+        for k in [2, 4, 8] {
+            let rp = partition_relations(&kg.store, k, 7);
+            let min = *rp.sizes.iter().min().unwrap() as f64;
+            let max = *rp.sizes.iter().max().unwrap() as f64;
+            assert!(max <= 1.3 * min + 16.0, "k={k} sizes={:?}", rp.sizes);
+            let total: u64 = rp.sizes.iter().sum();
+            assert_eq!(total as usize, kg.store.len());
+        }
+    }
+
+    #[test]
+    fn each_owned_relation_in_one_partition() {
+        let kg = generate(&GeneratorConfig::tiny(3));
+        let rp = partition_relations(&kg.store, 4, 1);
+        for i in 0..kg.store.len() {
+            let r = kg.store.rels[i] as usize;
+            if rp.relation_part[r] != SPLIT {
+                assert_eq!(rp.triplet_part[i], rp.relation_part[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_relation_split() {
+        // one relation with 90 of 100 triplets must be split across k=4
+        let s = store_with_counts(&[90, 4, 3, 3]);
+        let rp = partition_relations(&s, 4, 0);
+        assert_eq!(rp.relation_part[0], SPLIT);
+        // split relation spreads its triplets near-evenly
+        let min = *rp.sizes.iter().min().unwrap();
+        let max = *rp.sizes.iter().max().unwrap();
+        assert!(max - min <= 6, "{:?}", rp.sizes);
+    }
+
+    #[test]
+    fn per_epoch_reshuffle_changes_assignment() {
+        let kg = generate(&GeneratorConfig::tiny(4));
+        let a = partition_relations(&kg.store, 4, 1);
+        let b = partition_relations(&kg.store, 4, 2);
+        assert_ne!(a.relation_part, b.relation_part);
+        // …but both stay balanced
+        for rp in [&a, &b] {
+            let min = *rp.sizes.iter().min().unwrap() as f64;
+            let max = *rp.sizes.iter().max().unwrap() as f64;
+            assert!(max <= 1.3 * min + 16.0);
+        }
+    }
+
+    #[test]
+    fn relations_touched_less_than_total() {
+        // with many relations, each partition should touch ~1/k of them —
+        // the whole point of §3.4 vs dense relation weights
+        let kg = generate(&GeneratorConfig::tiny(5));
+        let k = 4;
+        let rp = partition_relations(&kg.store, k, 3);
+        let n_rel = kg.store.n_relations();
+        for p in 0..k as u32 {
+            let touched = rp.relations_touched(p);
+            assert!(touched < n_rel, "p={p} touched={touched} of {n_rel}");
+        }
+    }
+
+    #[test]
+    fn k1_owns_everything() {
+        let kg = generate(&GeneratorConfig::tiny(6));
+        let rp = partition_relations(&kg.store, 1, 0);
+        assert!(rp.triplet_part.iter().all(|&p| p == 0));
+        assert_eq!(rp.sizes[0] as usize, kg.store.len());
+    }
+}

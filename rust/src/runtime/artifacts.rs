@@ -1,0 +1,180 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `make artifacts` writes `artifacts/manifest.json` plus one
+//! HLO-text file per (model, phase, shape); this module indexes them.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct TrainArtifact {
+    pub key: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub loss: String,
+    pub tag: String,
+    pub batch: usize,
+    pub chunks: usize,
+    pub neg_k: usize,
+    pub dim: usize,
+    pub rel_dim: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalArtifact {
+    pub key: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub side: String, // "tail" | "head"
+    pub tag: String,
+    pub m: usize,
+    pub cands: usize,
+    pub dim: usize,
+    pub rel_dim: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub train: Vec<TrainArtifact>,
+    pub eval: Vec<EvalArtifact>,
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing field {k}"))
+}
+
+fn req_str(j: &Json, k: &str) -> Result<String> {
+    Ok(j.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest missing field {k}"))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`. Fails with a actionable message when the
+    /// artifacts have not been built.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("cannot read {} — run `make artifacts` first", path.display())
+        })?;
+        let j = Json::parse(&text).context("manifest.json is not valid JSON")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest has no artifacts array"))?;
+        let mut m = Manifest::default();
+        for a in arts {
+            let kind = req_str(a, "kind")?;
+            let file = dir.join(req_str(a, "file")?);
+            if !file.exists() {
+                bail!("artifact file {} listed in manifest but missing", file.display());
+            }
+            match kind.as_str() {
+                "train" => m.train.push(TrainArtifact {
+                    key: req_str(a, "key")?,
+                    file,
+                    model: req_str(a, "model")?,
+                    loss: req_str(a, "loss")?,
+                    tag: req_str(a, "tag")?,
+                    batch: req_usize(a, "batch")?,
+                    chunks: req_usize(a, "chunks")?,
+                    neg_k: req_usize(a, "neg_k")?,
+                    dim: req_usize(a, "dim")?,
+                    rel_dim: req_usize(a, "rel_dim")?,
+                }),
+                "eval_tail" | "eval_head" => m.eval.push(EvalArtifact {
+                    key: req_str(a, "key")?,
+                    file,
+                    model: req_str(a, "model")?,
+                    side: kind.trim_start_matches("eval_").to_string(),
+                    tag: req_str(a, "tag")?,
+                    m: req_usize(a, "m")?,
+                    cands: req_usize(a, "cands")?,
+                    dim: req_usize(a, "dim")?,
+                    rel_dim: req_usize(a, "rel_dim")?,
+                }),
+                other => bail!("unknown artifact kind {other}"),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Find the train artifact for (model, loss, tag).
+    pub fn find_train(&self, model: &str, loss: &str, tag: &str) -> Result<&TrainArtifact> {
+        self.train
+            .iter()
+            .find(|a| a.model == model && a.loss == loss && a.tag == tag)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no train artifact for model={model} loss={loss} tag={tag}; \
+                     available: {:?}",
+                    self.train.iter().map(|a| &a.key).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn find_eval(&self, model: &str, side: &str, tag: &str) -> Result<&EvalArtifact> {
+        self.eval
+            .iter()
+            .find(|a| a.model == model && a.side == side && a.tag == tag)
+            .ok_or_else(|| anyhow!("no eval artifact for model={model} side={side} tag={tag}"))
+    }
+}
+
+/// Default artifacts directory: $DGLKE_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("DGLKE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if artifacts exist (used by tests to skip gracefully).
+pub fn available() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dglke_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[
+              {"kind":"train","key":"k1","file":"x.hlo.txt","model":"transe_l2","loss":"logistic",
+               "tag":"tiny","batch":32,"chunks":4,"neg_k":16,"dim":16,"rel_dim":16},
+              {"kind":"eval_tail","key":"k2","file":"x.hlo.txt","model":"transe_l2",
+               "tag":"tiny","m":8,"cands":64,"dim":16,"rel_dim":16}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.train.len(), 1);
+        assert_eq!(m.eval.len(), 1);
+        let t = m.find_train("transe_l2", "logistic", "tiny").unwrap();
+        assert_eq!(t.batch, 32);
+        assert!(m.find_train("nope", "logistic", "tiny").is_err());
+        let e = m.find_eval("transe_l2", "tail", "tiny").unwrap();
+        assert_eq!(e.cands, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("dglke_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"kind":"train","key":"k","file":"gone.hlo.txt","model":"m",
+              "loss":"l","tag":"t","batch":1,"chunks":1,"neg_k":1,"dim":1,"rel_dim":1}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,143 @@
+//! Compute backend abstraction: XLA artifacts (production) or the native
+//! Rust mirror (tests, fallback, coordinator-overhead isolation).
+//!
+//! Both implement the same step contract, and a dedicated integration test
+//! (`rust/tests/xla_vs_native.rs`) asserts they agree numerically — the
+//! cross-layer correctness signal of the whole stack.
+
+use super::artifacts::Manifest;
+use super::executor::{TrainExecutor, XlaRuntime};
+use crate::models::step::{StepGrads, StepInputs, StepShape};
+use crate::models::{LossCfg, LossKind, ModelKind, NativeModel};
+use anyhow::Result;
+
+/// Which backend trainers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled XLA artifacts via PJRT (the production path).
+    Xla,
+    /// Pure-Rust mirror of the artifacts.
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "xla" => Some(BackendKind::Xla),
+            "native" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+}
+
+/// A per-worker train-step backend. Construct *inside* the worker thread
+/// (the XLA client must not cross threads).
+pub enum TrainBackend {
+    Xla(TrainExecutor),
+    Native { model: NativeModel, shape: StepShape },
+}
+
+impl TrainBackend {
+    /// Build for a worker. `tag` selects the artifact shape family
+    /// ("default" or "tiny").
+    pub fn create(
+        kind: BackendKind,
+        model: ModelKind,
+        loss: LossCfg,
+        manifest: Option<&Manifest>,
+        tag: &str,
+        shape_override: Option<StepShape>,
+    ) -> Result<TrainBackend> {
+        match kind {
+            BackendKind::Xla => {
+                let manifest =
+                    manifest.ok_or_else(|| anyhow::anyhow!("XLA backend needs a manifest"))?;
+                let loss_name = match loss.kind {
+                    LossKind::Logistic => "logistic",
+                    LossKind::Margin(_) => "margin",
+                };
+                let art = manifest.find_train(model.name(), loss_name, tag)?;
+                let rt = XlaRuntime::cpu()?;
+                Ok(TrainBackend::Xla(TrainExecutor::new(&rt, art)?))
+            }
+            BackendKind::Native => {
+                let shape = shape_override
+                    .ok_or_else(|| anyhow::anyhow!("native backend needs an explicit shape"))?;
+                Ok(TrainBackend::Native { model: NativeModel::new(model, shape.dim, loss), shape })
+            }
+        }
+    }
+
+    pub fn shape(&self) -> StepShape {
+        match self {
+            TrainBackend::Xla(e) => e.shape,
+            TrainBackend::Native { shape, .. } => *shape,
+        }
+    }
+
+    pub fn rel_dim(&self) -> usize {
+        match self {
+            TrainBackend::Xla(e) => e.rel_dim,
+            TrainBackend::Native { model, .. } => model.rel_dim(),
+        }
+    }
+
+    pub fn step(&self, inp: &StepInputs<'_>) -> Result<StepGrads> {
+        match self {
+            TrainBackend::Xla(e) => e.step(inp),
+            TrainBackend::Native { model, shape } => Ok(model.train_step(shape, inp)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("Native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn native_backend_steps() {
+        let shape = StepShape { batch: 8, chunks: 2, neg_k: 4, dim: 8 };
+        let be = TrainBackend::create(
+            BackendKind::Native,
+            ModelKind::DistMult,
+            LossCfg::default(),
+            None,
+            "tiny",
+            Some(shape),
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::seed_from_u64(1);
+        let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.gen_normal()).collect() };
+        let h = mk(8 * 8);
+        let r = mk(8 * 8);
+        let t = mk(8 * 8);
+        let nh = mk(2 * 4 * 8);
+        let nt = mk(2 * 4 * 8);
+        let g = be
+            .step(&StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt })
+            .unwrap();
+        assert!(g.loss.is_finite());
+        assert_eq!(g.d_h.len(), 8 * 8);
+    }
+
+    #[test]
+    fn xla_without_manifest_fails() {
+        let shape = StepShape { batch: 8, chunks: 2, neg_k: 4, dim: 8 };
+        assert!(TrainBackend::create(
+            BackendKind::Xla,
+            ModelKind::DistMult,
+            LossCfg::default(),
+            None,
+            "tiny",
+            Some(shape),
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! One `XlaRuntime` (PJRT CPU client) per trainer thread — the `xla`
+//! crate's client is `Rc`-based and must not cross threads, which maps
+//! naturally onto the paper's process-per-trainer design. Each trainer
+//! compiles its own executable from the shared HLO text at startup
+//! (compile once, execute per mini-batch).
+
+use super::artifacts::{EvalArtifact, TrainArtifact};
+use crate::models::step::{StepGrads, StepInputs, StepShape};
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Thread-local XLA runtime: a PJRT CPU client.
+pub struct XlaRuntime {
+    client: PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(XlaRuntime { client: PjRtClient::cpu()? })
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn compile_file(&self, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+/// Compiled train-step executable (one per worker).
+pub struct TrainExecutor {
+    exe: PjRtLoadedExecutable,
+    pub shape: StepShape,
+    pub rel_dim: usize,
+    pub key: String,
+}
+
+impl TrainExecutor {
+    pub fn new(rt: &XlaRuntime, art: &TrainArtifact) -> Result<Self> {
+        let exe = rt.compile_file(&art.file)?;
+        Ok(TrainExecutor {
+            exe,
+            shape: StepShape {
+                batch: art.batch,
+                chunks: art.chunks,
+                neg_k: art.neg_k,
+                dim: art.dim,
+            },
+            rel_dim: art.rel_dim,
+            key: art.key.clone(),
+        })
+    }
+
+    /// Run one forward+backward step on gathered embeddings.
+    pub fn step(&self, inp: &StepInputs<'_>) -> Result<StepGrads> {
+        let s = &self.shape;
+        let (b, nc, k, d) = (s.batch, s.chunks, s.neg_k, s.dim);
+        let rd = self.rel_dim;
+        let args = [
+            literal_f32(inp.h, &[b, d])?,
+            literal_f32(inp.r, &[b, rd])?,
+            literal_f32(inp.t, &[b, d])?,
+            literal_f32(inp.neg_h, &[nc, k, d])?,
+            literal_f32(inp.neg_t, &[nc, k, d])?,
+        ];
+        let result = self.exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 6, "train artifact returned {} outputs", outs.len());
+        Ok(StepGrads {
+            loss: outs[0].get_first_element::<f32>()?,
+            d_h: outs[1].to_vec::<f32>()?,
+            d_r: outs[2].to_vec::<f32>()?,
+            d_t: outs[3].to_vec::<f32>()?,
+            d_neg_h: outs[4].to_vec::<f32>()?,
+            d_neg_t: outs[5].to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Compiled eval-scoring executable.
+pub struct EvalExecutor {
+    exe: PjRtLoadedExecutable,
+    pub m: usize,
+    pub cands: usize,
+    pub dim: usize,
+    pub rel_dim: usize,
+    pub side: String,
+}
+
+impl EvalExecutor {
+    pub fn new(rt: &XlaRuntime, art: &EvalArtifact) -> Result<Self> {
+        let exe = rt.compile_file(&art.file)?;
+        Ok(EvalExecutor {
+            exe,
+            m: art.m,
+            cands: art.cands,
+            dim: art.dim,
+            rel_dim: art.rel_dim,
+            side: art.side.clone(),
+        })
+    }
+
+    /// Score m (entity, relation) rows against the candidate block.
+    /// Returns scores [m, cands].
+    pub fn scores(&self, e: &[f32], r: &[f32], cand: &[f32]) -> Result<Vec<f32>> {
+        let args = [
+            literal_f32(e, &[self.m, self.dim])?,
+            literal_f32(r, &[self.m, self.rel_dim])?,
+            literal_f32(cand, &[self.cands, self.dim])?,
+        ];
+        let result = self.exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

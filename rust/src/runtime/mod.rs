@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts built by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs at training time.
+
+pub mod artifacts;
+pub mod backend;
+pub mod executor;
+
+pub use artifacts::Manifest;
+pub use backend::{BackendKind, TrainBackend};
+pub use executor::{EvalExecutor, TrainExecutor, XlaRuntime};

@@ -1,0 +1,135 @@
+//! Positive triplet sampling: epoch-shuffled traversal of a (local)
+//! triplet set.
+//!
+//! Each trainer owns a disjoint set of triplet indices (its relation
+//! partition within a machine, or its METIS partition's triplets in
+//! distributed mode) and iterates them in a reshuffled order every epoch —
+//! the paper's step (1).
+
+use crate::kg::TripletStore;
+use crate::util::rng::Rng;
+
+pub struct PositiveSampler {
+    /// triplet indices this sampler may draw from
+    indices: Vec<u32>,
+    cursor: usize,
+    epoch: u64,
+    rng: Rng,
+}
+
+impl PositiveSampler {
+    /// Sampler over all triplets of `store`.
+    pub fn over_all(store: &TripletStore, seed: u64) -> Self {
+        Self::over_indices((0..store.len() as u32).collect(), seed)
+    }
+
+    /// Sampler over an explicit index set (a partition).
+    pub fn over_indices(indices: Vec<u32>, seed: u64) -> Self {
+        let mut s = PositiveSampler {
+            indices,
+            cursor: 0,
+            epoch: 0,
+            rng: Rng::seed_from_u64(seed ^ 0x505f53),
+        };
+        s.rng.shuffle(&mut s.indices);
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Replace the index set (used when the relation partition is
+    /// recomputed at an epoch boundary, §3.4).
+    pub fn reset_indices(&mut self, indices: Vec<u32>) {
+        self.indices = indices;
+        self.rng.shuffle(&mut self.indices);
+        self.cursor = 0;
+    }
+
+    /// Draw the next `b` triplet indices, reshuffling at epoch boundaries.
+    /// Returns the drawn indices and whether an epoch boundary was crossed.
+    pub fn next_batch(&mut self, b: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        assert!(!self.indices.is_empty(), "empty positive sampler");
+        let mut crossed = false;
+        while out.len() < b {
+            if self.cursor >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+                self.epoch += 1;
+                crossed = true;
+            }
+            let take = (b - out.len()).min(self.indices.len() - self.cursor);
+            out.extend_from_slice(&self.indices[self.cursor..self.cursor + take]);
+            self.cursor += take;
+        }
+        crossed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator::{generate, GeneratorConfig};
+
+    #[test]
+    fn covers_all_indices_each_epoch() {
+        let kg = generate(&GeneratorConfig::tiny(1));
+        let n = kg.store.len();
+        let mut s = PositiveSampler::over_all(&kg.store, 3);
+        let mut seen = vec![0u32; n];
+        let b = 64;
+        let mut buf = Vec::new();
+        let mut drawn = 0;
+        while drawn < n {
+            let take = b.min(n - drawn);
+            s.next_batch(take, &mut buf);
+            for &i in &buf {
+                seen[i as usize] += 1;
+            }
+            drawn += take;
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each triplet exactly once per epoch");
+    }
+
+    #[test]
+    fn epoch_boundary_reported() {
+        let mut s = PositiveSampler::over_indices((0..10).collect(), 1);
+        let mut buf = Vec::new();
+        assert!(!s.next_batch(8, &mut buf));
+        assert!(s.next_batch(8, &mut buf)); // wraps
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(buf.len(), 8);
+    }
+
+    #[test]
+    fn epochs_reshuffled() {
+        let mut s = PositiveSampler::over_indices((0..100).collect(), 2);
+        let mut a = Vec::new();
+        s.next_batch(100, &mut a);
+        let mut b = Vec::new();
+        s.next_batch(100, &mut b);
+        assert_ne!(a, b);
+        let mut bs = b.clone();
+        bs.sort_unstable();
+        assert_eq!(bs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partition_scoped() {
+        let idx = vec![5u32, 9, 13];
+        let mut s = PositiveSampler::over_indices(idx.clone(), 7);
+        let mut buf = Vec::new();
+        s.next_batch(9, &mut buf);
+        assert!(buf.iter().all(|i| idx.contains(i)));
+    }
+}

@@ -1,0 +1,174 @@
+//! Shared-memory embedding table with Hogwild-style unsynchronized access.
+//!
+//! The paper (§2, citing Hogwild [14]) trains with asynchronous sparse
+//! updates: multiple trainer processes read and write rows of the global
+//! embedding tensors without locks, accepting benign races because
+//! mini-batches rarely collide on rows when the entity count is large.
+//! `EmbeddingTable` reproduces that: it hands out raw row views from an
+//! `UnsafeCell`-backed buffer shared across threads.
+//!
+//! Safety contract: races on individual f32 lanes may produce stale or
+//! torn values — that is *by design* (same as the paper/PyTorch shared
+//! tensors); it never produces out-of-bounds access, and `f32` loads and
+//! stores on x86-64 are individually atomic at the hardware level.
+
+use crate::util::rng::Rng;
+use std::cell::UnsafeCell;
+
+pub struct EmbeddingTable {
+    data: UnsafeCell<Vec<f32>>,
+    rows: usize,
+    dim: usize,
+}
+
+// Hogwild: see module docs.
+unsafe impl Sync for EmbeddingTable {}
+unsafe impl Send for EmbeddingTable {}
+
+impl EmbeddingTable {
+    pub fn zeros(rows: usize, dim: usize) -> Self {
+        EmbeddingTable { data: UnsafeCell::new(vec![0f32; rows * dim]), rows, dim }
+    }
+
+    /// DGL-KE-style init: uniform in [-init_scale, init_scale]
+    /// (DGL-KE uses gamma-adjusted uniform; the scale is a hyperparameter).
+    pub fn uniform(rows: usize, dim: usize, init_scale: f32, seed: u64) -> Self {
+        let t = Self::zeros(rows, dim);
+        {
+            let data = unsafe { &mut *t.data.get() };
+            // parallel init for large tables
+            let n_threads = if rows * dim > 1 << 22 { 8 } else { 1 };
+            let ranges = crate::util::threadpool::split_ranges(data.len(), n_threads);
+            let ptr = SyncPtr(data.as_mut_ptr());
+            let ptr_ref = &ptr;
+            crate::util::threadpool::scoped_map(n_threads, |i| {
+                let mut rng = Rng::seed_from_u64(seed).fork(i as u64);
+                let r = ranges[i].clone();
+                for j in r {
+                    unsafe {
+                        *ptr_ref.0.add(j) = rng.gen_uniform(-init_scale, init_scale);
+                    }
+                }
+            });
+        }
+        t
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.rows * self.dim
+    }
+
+    /// Immutable view of row `i`. May observe concurrent writes (Hogwild).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        unsafe {
+            let v = &*self.data.get();
+            std::slice::from_raw_parts(v.as_ptr().add(i * self.dim), self.dim)
+        }
+    }
+
+    /// Mutable view of row `i`.
+    ///
+    /// # Safety
+    /// Caller must accept Hogwild races: concurrent writers to the same row
+    /// interleave at f32 granularity.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn row_mut(&self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        let v = &mut *self.data.get();
+        std::slice::from_raw_parts_mut(v.as_mut_ptr().add(i * self.dim), self.dim)
+    }
+
+    /// Gather rows `ids` into `out` ([ids.len(), dim] row-major).
+    pub fn gather(&self, ids: &[u64], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.dim);
+        for (j, &id) in ids.iter().enumerate() {
+            out[j * self.dim..(j + 1) * self.dim].copy_from_slice(self.row(id as usize));
+        }
+    }
+
+    /// Number of bytes a gather of `n` rows moves (for the transfer ledger).
+    pub fn gather_bytes(&self, n: usize) -> u64 {
+        (n * self.dim * 4) as u64
+    }
+
+    /// Overwrite row `i` (used by KVStore pulls and checkpoint load).
+    pub fn set_row(&self, i: usize, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.dim);
+        unsafe {
+            self.row_mut(i).copy_from_slice(values);
+        }
+    }
+
+    /// Full snapshot (tests / checkpoints).
+    pub fn snapshot(&self) -> Vec<f32> {
+        unsafe { (*self.data.get()).clone() }
+    }
+}
+
+/// Send+Sync raw pointer wrapper for scoped parallel init.
+struct SyncPtr(*mut f32);
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_range_and_determinism() {
+        let a = EmbeddingTable::uniform(100, 16, 0.5, 3);
+        let b = EmbeddingTable::uniform(100, 16, 0.5, 3);
+        assert_eq!(a.snapshot(), b.snapshot());
+        for v in a.snapshot() {
+            assert!(v >= -0.5 && v < 0.5);
+        }
+    }
+
+    #[test]
+    fn gather_matches_rows() {
+        let t = EmbeddingTable::uniform(10, 4, 1.0, 1);
+        let ids = [3u64, 7, 3];
+        let mut out = vec![0f32; 3 * 4];
+        t.gather(&ids, &mut out);
+        assert_eq!(&out[0..4], t.row(3));
+        assert_eq!(&out[4..8], t.row(7));
+        assert_eq!(&out[8..12], t.row(3));
+    }
+
+    #[test]
+    fn concurrent_disjoint_writes() {
+        let t = EmbeddingTable::zeros(64, 8);
+        crate::util::threadpool::scoped_map(8, |w| {
+            for i in 0..8 {
+                let row = w * 8 + i;
+                unsafe {
+                    t.row_mut(row).fill(row as f32);
+                }
+            }
+        });
+        for row in 0..64 {
+            assert!(t.row(row).iter().all(|&v| v == row as f32));
+        }
+    }
+
+    #[test]
+    fn set_row_roundtrip() {
+        let t = EmbeddingTable::zeros(4, 3);
+        t.set_row(2, &[1.0, 2.0, 3.0]);
+        assert_eq!(t.row(2), &[1.0, 2.0, 3.0]);
+        assert_eq!(t.row(1), &[0.0; 3]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Sparse gradient containers: (ids, rows) pairs with duplicate-id
+//! accumulation.
+//!
+//! A mini-batch under joint negative sampling touches each embedding row
+//! possibly many times (an entity can appear as head, tail, and negative).
+//! Before the optimizer applies the update — and before gradients are
+//! pushed over the KVStore — duplicates are folded together, which both
+//! matches DGL-KE's `index_add_`-style accumulation and minimizes rows on
+//! the wire.
+
+use std::collections::HashMap;
+
+/// A batch of sparse gradients over one embedding table.
+#[derive(Clone, Debug, Default)]
+pub struct SparseGrads {
+    pub ids: Vec<u64>,
+    /// [ids.len(), dim] row-major
+    pub rows: Vec<f32>,
+    pub dim: usize,
+}
+
+impl SparseGrads {
+    pub fn new(dim: usize) -> Self {
+        SparseGrads { ids: Vec::new(), rows: Vec::new(), dim }
+    }
+
+    pub fn with_capacity(dim: usize, n: usize) -> Self {
+        SparseGrads { ids: Vec::with_capacity(n), rows: Vec::with_capacity(n * dim), dim }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Append gradient rows for `ids` from a contiguous buffer.
+    pub fn extend_from(&mut self, ids: &[u64], rows: &[f32]) {
+        debug_assert_eq!(rows.len(), ids.len() * self.dim);
+        self.ids.extend_from_slice(ids);
+        self.rows.extend_from_slice(rows);
+    }
+
+    /// Fold duplicate ids by summing their rows. Keeps first-seen order.
+    pub fn accumulate(self) -> SparseGrads {
+        let dim = self.dim;
+        let mut index: HashMap<u64, usize> = HashMap::with_capacity(self.ids.len());
+        let mut out = SparseGrads::with_capacity(dim, self.ids.len());
+        for (j, &id) in self.ids.iter().enumerate() {
+            let src = &self.rows[j * dim..(j + 1) * dim];
+            match index.get(&id) {
+                Some(&slot) => {
+                    let dst = &mut out.rows[slot * dim..(slot + 1) * dim];
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d += s;
+                    }
+                }
+                None => {
+                    index.insert(id, out.ids.len());
+                    out.ids.push(id);
+                    out.rows.extend_from_slice(src);
+                }
+            }
+        }
+        out
+    }
+
+    /// Split by a shard function (e.g. KVStore server of each id).
+    pub fn split_by<F: Fn(u64) -> usize>(&self, n_shards: usize, shard_of: F) -> Vec<SparseGrads> {
+        let mut out: Vec<SparseGrads> = (0..n_shards).map(|_| SparseGrads::new(self.dim)).collect();
+        for (j, &id) in self.ids.iter().enumerate() {
+            let s = shard_of(id);
+            out[s].ids.push(id);
+            out[s].rows.extend_from_slice(&self.rows[j * self.dim..(j + 1) * self.dim]);
+        }
+        out
+    }
+
+    /// Total bytes this gradient batch occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.ids.len() * 8 + self.rows.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_folds_duplicates() {
+        let mut g = SparseGrads::new(2);
+        g.extend_from(&[5, 3, 5], &[1.0, 2.0, 10.0, 20.0, 100.0, 200.0]);
+        let a = g.accumulate();
+        assert_eq!(a.ids, vec![5, 3]);
+        assert_eq!(a.rows, vec![101.0, 202.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn accumulate_no_duplicates_is_identity() {
+        let mut g = SparseGrads::new(1);
+        g.extend_from(&[1, 2, 3], &[0.1, 0.2, 0.3]);
+        let a = g.accumulate();
+        assert_eq!(a.ids, vec![1, 2, 3]);
+        assert_eq!(a.rows, vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn split_by_shard() {
+        let mut g = SparseGrads::new(1);
+        g.extend_from(&[0, 1, 2, 3], &[0.0, 1.0, 2.0, 3.0]);
+        let parts = g.split_by(2, |id| (id % 2) as usize);
+        assert_eq!(parts[0].ids, vec![0, 2]);
+        assert_eq!(parts[1].ids, vec![1, 3]);
+        assert_eq!(parts[1].rows, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        let mut g = SparseGrads::new(4);
+        g.extend_from(&[9], &[0.0; 4]);
+        assert_eq!(g.wire_bytes(), 8 + 16);
+    }
+}

@@ -1,0 +1,10 @@
+//! Embedding storage and optimization: Hogwild shared tables, sparse
+//! row-wise AdaGrad, and sparse-gradient containers.
+
+pub mod adagrad;
+pub mod embedding;
+pub mod gradients;
+
+pub use adagrad::SparseAdagrad;
+pub use embedding::EmbeddingTable;
+pub use gradients::SparseGrads;

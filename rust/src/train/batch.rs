@@ -1,0 +1,122 @@
+//! Batch assembly: gather embeddings for a sampled batch into the step
+//! buffers (paper step 2), and map step gradients back to sparse
+//! (id, row) updates (paper step 4).
+//!
+//! Buffers are reused across batches — no allocation on the hot loop.
+
+use crate::models::step::{StepGrads, StepInputs, StepShape};
+use crate::sampler::Batch;
+use crate::store::{EmbeddingTable, SparseGrads};
+
+/// Reusable gather buffers for one worker.
+pub struct BatchBuffers {
+    pub h: Vec<f32>,
+    pub r: Vec<f32>,
+    pub t: Vec<f32>,
+    pub neg_h: Vec<f32>,
+    pub neg_t: Vec<f32>,
+}
+
+impl BatchBuffers {
+    pub fn new(shape: &StepShape, rel_dim: usize) -> Self {
+        let (b, nc, k, d) = (shape.batch, shape.chunks, shape.neg_k, shape.dim);
+        BatchBuffers {
+            h: vec![0f32; b * d],
+            r: vec![0f32; b * rel_dim],
+            t: vec![0f32; b * d],
+            neg_h: vec![0f32; nc * k * d],
+            neg_t: vec![0f32; nc * k * d],
+        }
+    }
+
+    /// Gather all embeddings of `batch` from the global tables.
+    /// Returns the number of f32 values moved (for the transfer ledger).
+    pub fn gather(
+        &mut self,
+        batch: &Batch,
+        entities: &EmbeddingTable,
+        relations: &EmbeddingTable,
+    ) -> u64 {
+        entities.gather(&batch.heads, &mut self.h);
+        relations.gather(&batch.rels, &mut self.r);
+        entities.gather(&batch.tails, &mut self.t);
+        entities.gather(&batch.neg_heads, &mut self.neg_h);
+        entities.gather(&batch.neg_tails, &mut self.neg_t);
+        (self.h.len() + self.r.len() + self.t.len() + self.neg_h.len() + self.neg_t.len()) as u64
+    }
+
+    pub fn inputs(&self) -> StepInputs<'_> {
+        StepInputs {
+            h: &self.h,
+            r: &self.r,
+            t: &self.t,
+            neg_h: &self.neg_h,
+            neg_t: &self.neg_t,
+        }
+    }
+}
+
+/// Split step gradients into entity-sparse and relation-sparse updates,
+/// folding duplicate ids (exact accumulation, like DGL-KE's index_add_).
+pub fn split_grads(batch: &Batch, grads: &StepGrads, dim: usize, rel_dim: usize) -> (SparseGrads, SparseGrads) {
+    let mut ent = SparseGrads::with_capacity(
+        dim,
+        batch.heads.len() * 2 + batch.neg_heads.len() + batch.neg_tails.len(),
+    );
+    ent.extend_from(&batch.heads, &grads.d_h);
+    ent.extend_from(&batch.tails, &grads.d_t);
+    ent.extend_from(&batch.neg_heads, &grads.d_neg_h);
+    ent.extend_from(&batch.neg_tails, &grads.d_neg_t);
+
+    let mut rel = SparseGrads::with_capacity(rel_dim, batch.rels.len());
+    rel.extend_from(&batch.rels, &grads.d_r);
+
+    (ent.accumulate(), rel.accumulate())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_and_split_roundtrip() {
+        let shape = StepShape { batch: 4, chunks: 2, neg_k: 2, dim: 3 };
+        let entities = EmbeddingTable::uniform(10, 3, 1.0, 1);
+        let relations = EmbeddingTable::uniform(5, 3, 1.0, 2);
+        let batch = Batch {
+            heads: vec![1, 2, 3, 1],
+            rels: vec![0, 1, 0, 2],
+            tails: vec![4, 5, 6, 7],
+            neg_heads: vec![8, 9, 8, 9],
+            neg_tails: vec![0, 1, 2, 3],
+            chunks: 2,
+            neg_k: 2,
+        };
+        let mut buf = BatchBuffers::new(&shape, 3);
+        let moved = buf.gather(&batch, &entities, &relations);
+        assert_eq!(moved as usize, 4 * 3 * 3 + 2 * 2 * 3 * 2);
+        assert_eq!(&buf.h[0..3], entities.row(1));
+        assert_eq!(&buf.r[3..6], relations.row(1));
+        assert_eq!(&buf.neg_t[0..3], entities.row(0));
+
+        // fake grads: all ones
+        let grads = StepGrads {
+            loss: 0.0,
+            d_h: vec![1.0; 4 * 3],
+            d_r: vec![1.0; 4 * 3],
+            d_t: vec![1.0; 4 * 3],
+            d_neg_h: vec![1.0; 4 * 3],
+            d_neg_t: vec![1.0; 4 * 3],
+        };
+        let (ent, rel) = split_grads(&batch, &grads, 3, 3);
+        // entity 1: twice in heads + once in neg_tails → accumulated = 3.0
+        let idx1 = ent.ids.iter().position(|&i| i == 1).unwrap();
+        assert_eq!(&ent.rows[idx1 * 3..(idx1 + 1) * 3], &[3.0, 3.0, 3.0]);
+        // no duplicate ids remain
+        let set: std::collections::HashSet<_> = ent.ids.iter().collect();
+        assert_eq!(set.len(), ent.ids.len());
+        assert_eq!(rel.ids.len(), 3); // rels {0,1,2}, 0 twice
+        let idx0 = rel.ids.iter().position(|&i| i == 0).unwrap();
+        assert_eq!(&rel.rows[idx0 * 3..(idx0 + 1) * 3], &[2.0, 2.0, 2.0]);
+    }
+}

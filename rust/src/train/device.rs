@@ -1,0 +1,110 @@
+//! Device simulation: host↔device transfer ledger (DESIGN.md
+//! §Environment-constraints).
+//!
+//! The paper's multi-GPU results (Fig 3's 40×, Fig 4's rel_part bars) are
+//! data-movement effects: how many embedding bytes cross PCIe per batch.
+//! We count those bytes exactly and convert them to simulated transfer
+//! time with a configurable link bandwidth (default 12 GB/s ≈ PCIe 3.0
+//! x16, the paper's p3.16xlarge). Compute time is real (measured XLA
+//! execution); transfer time is the counted-bytes model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hardware mode of a training run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Hardware {
+    /// Many-core CPU: shared memory, no transfer accounting (§6.2).
+    Cpu,
+    /// Simulated multi-GPU: per-batch embedding traffic is ledgered and
+    /// billed at `pcie_gbps` (§6.1).
+    Gpu { pcie_gbps: f64 },
+}
+
+impl Hardware {
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, Hardware::Gpu { .. })
+    }
+}
+
+/// Shared transfer ledger (one per run; workers add atomically).
+#[derive(Debug, Default)]
+pub struct TransferLedger {
+    /// host→device bytes on the critical path
+    pub h2d: AtomicU64,
+    /// device→host bytes on the critical path
+    pub d2h: AtomicU64,
+    /// bytes whose transfer is overlapped with compute (async updates) —
+    /// counted but not billed to the critical path
+    pub overlapped: AtomicU64,
+}
+
+impl TransferLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_h2d(&self, bytes: u64) {
+        self.h2d.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_d2h(&self, bytes: u64) {
+        self.d2h.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_overlapped(&self, bytes: u64) {
+        self.overlapped.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn critical_bytes(&self) -> u64 {
+        self.h2d.load(Ordering::Relaxed) + self.d2h.load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.critical_bytes() + self.overlapped.load(Ordering::Relaxed)
+    }
+
+    /// Critical-path transfer seconds under `hw`'s bandwidth model,
+    /// per worker (each simulated GPU has its own PCIe link, so the
+    /// per-worker share is total / n_workers).
+    pub fn critical_secs(&self, hw: Hardware, n_workers: usize) -> f64 {
+        match hw {
+            Hardware::Cpu => 0.0,
+            Hardware::Gpu { pcie_gbps } => {
+                self.critical_bytes() as f64 / (pcie_gbps * 1e9) / n_workers as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let l = TransferLedger::new();
+        l.add_h2d(100);
+        l.add_d2h(50);
+        l.add_overlapped(25);
+        assert_eq!(l.critical_bytes(), 150);
+        assert_eq!(l.total_bytes(), 175);
+    }
+
+    #[test]
+    fn cpu_mode_bills_nothing() {
+        let l = TransferLedger::new();
+        l.add_h2d(1 << 30);
+        assert_eq!(l.critical_secs(Hardware::Cpu, 1), 0.0);
+    }
+
+    #[test]
+    fn gpu_mode_bills_bandwidth() {
+        let l = TransferLedger::new();
+        l.add_h2d(12_000_000_000); // 12 GB at 12 GB/s = 1 s
+        let s = l.critical_secs(Hardware::Gpu { pcie_gbps: 12.0 }, 1);
+        assert!((s - 1.0).abs() < 1e-9);
+        // split across 4 links
+        let s4 = l.critical_secs(Hardware::Gpu { pcie_gbps: 12.0 }, 4);
+        assert!((s4 - 0.25).abs() < 1e-9);
+    }
+}

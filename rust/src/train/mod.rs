@@ -1,0 +1,19 @@
+//! Training engine: the paper's §3 pipeline on one machine.
+//!
+//! * [`batch`] — gather/scatter between the global tables and step buffers;
+//! * [`updater`] — async entity-gradient updaters (§3.5);
+//! * [`sync`] — periodic barriers + relation-partition reshuffles (§3.6);
+//! * [`device`] — the multi-GPU transfer ledger (DESIGN.md substitution);
+//! * [`worker`] + [`run_training`] — multi-worker orchestration covering
+//!   the paper's many-core CPU (§6.2) and multi-GPU (§6.1) modes.
+//!
+//! Distributed (multi-machine) training lives in [`crate::dist`].
+
+pub mod batch;
+pub mod device;
+pub mod sync;
+pub mod updater;
+pub mod worker;
+
+pub use device::{Hardware, TransferLedger};
+pub use worker::{run_training, TrainConfig, TrainStats};

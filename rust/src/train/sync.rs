@@ -1,0 +1,87 @@
+//! Periodic synchronization among trainer workers (paper §3.6).
+//!
+//! Fully-async multiprocessing lets workers drift apart, which the paper
+//! observed to destabilize accuracy; a barrier every few thousand batches
+//! keeps all trainers at roughly the same rate. The barrier is also the
+//! coordination point for per-epoch relation-partition reshuffles (§3.4).
+
+use crate::partition::RelationPartition;
+use std::sync::{Barrier, RwLock};
+
+/// Shared sync state for one training run.
+pub struct SyncState {
+    barrier: Barrier,
+    /// current relation partition (None when relation partitioning is off)
+    rel_part: RwLock<Option<std::sync::Arc<RelationPartition>>>,
+    /// epoch of the current partition
+    rel_epoch: RwLock<u64>,
+}
+
+impl SyncState {
+    pub fn new(n_workers: usize, initial: Option<RelationPartition>) -> Self {
+        SyncState {
+            barrier: Barrier::new(n_workers),
+            rel_part: RwLock::new(initial.map(std::sync::Arc::new)),
+            rel_epoch: RwLock::new(0),
+        }
+    }
+
+    /// Wait for all workers. Returns true on the leader (exactly one
+    /// worker per barrier crossing).
+    pub fn wait(&self) -> bool {
+        self.barrier.wait().is_leader()
+    }
+
+    /// Leader installs a freshly reshuffled relation partition for `epoch`.
+    pub fn install_partition(&self, part: RelationPartition, epoch: u64) {
+        *self.rel_part.write().unwrap() = Some(std::sync::Arc::new(part));
+        *self.rel_epoch.write().unwrap() = epoch;
+    }
+
+    /// Current partition (if relation partitioning is enabled).
+    pub fn partition(&self) -> Option<std::sync::Arc<RelationPartition>> {
+        self.rel_part.read().unwrap().clone()
+    }
+
+    pub fn partition_epoch(&self) -> u64 {
+        *self.rel_epoch.read().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn exactly_one_leader_per_crossing() {
+        let sync = SyncState::new(4, None);
+        let leaders = AtomicUsize::new(0);
+        crate::util::threadpool::scoped_map(4, |_| {
+            for _ in 0..10 {
+                if sync.wait() {
+                    leaders.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+        assert_eq!(leaders.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn partition_install_visible_to_all() {
+        use crate::kg::generator::{generate, GeneratorConfig};
+        use crate::partition::partition_relations;
+        let kg = generate(&GeneratorConfig::tiny(1));
+        let sync = SyncState::new(2, Some(partition_relations(&kg.store, 2, 0)));
+        let before = sync.partition().unwrap();
+        crate::util::threadpool::scoped_map(2, |_| {
+            if sync.wait() {
+                sync.install_partition(partition_relations(&kg.store, 2, 99), 1);
+            }
+            sync.wait();
+            assert_eq!(sync.partition_epoch(), 1);
+        });
+        let after = sync.partition().unwrap();
+        assert_ne!(before.relation_part, after.relation_part);
+    }
+}

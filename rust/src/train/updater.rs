@@ -1,0 +1,149 @@
+//! Asynchronous entity-gradient updater (paper §3.5).
+//!
+//! Each trainer gets a *dedicated* updater thread. The trainer sends the
+//! entity gradients of a finished batch over a channel and immediately
+//! proceeds to the next batch; the updater applies sparse AdaGrad to the
+//! shared table concurrently — overlapping the (random-memory-bound)
+//! update with the next batch's compute, which the paper measures at
+//! ~40% speedup on Freebase.
+//!
+//! A bounded channel caps staleness at `max_pending` batches.
+
+use crate::store::{EmbeddingTable, SparseAdagrad, SparseGrads};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+enum Msg {
+    Apply(SparseGrads),
+    Flush(SyncSender<()>),
+    Stop,
+}
+
+/// Handle owned by the trainer thread.
+pub struct AsyncUpdater {
+    tx: SyncSender<Msg>,
+    handle: Option<std::thread::JoinHandle<u64>>,
+}
+
+impl AsyncUpdater {
+    /// Spawn the updater over the shared entity table/optimizer.
+    pub fn spawn(
+        table: Arc<EmbeddingTable>,
+        opt: Arc<SparseAdagrad>,
+        max_pending: usize,
+    ) -> AsyncUpdater {
+        let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(max_pending.max(1));
+        let handle = std::thread::Builder::new()
+            .name("dglke-updater".into())
+            .spawn(move || {
+                let mut applied = 0u64;
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Apply(g) => {
+                            opt.apply(&table, &g.ids, &g.rows);
+                            applied += 1;
+                        }
+                        Msg::Flush(ack) => {
+                            let _ = ack.send(());
+                        }
+                        Msg::Stop => break,
+                    }
+                }
+                applied
+            })
+            .expect("spawn updater");
+        AsyncUpdater { tx, handle: Some(handle) }
+    }
+
+    /// Queue one batch of entity gradients (blocks only when the updater
+    /// is `max_pending` batches behind — the staleness bound).
+    pub fn submit(&self, grads: SparseGrads) {
+        self.tx.send(Msg::Apply(grads)).expect("updater thread died");
+    }
+
+    /// Wait until every queued update has been applied (used at sync
+    /// barriers and before evaluation).
+    pub fn flush(&self) {
+        let (ack_tx, ack_rx) = sync_channel(1);
+        self.tx.send(Msg::Flush(ack_tx)).expect("updater thread died");
+        ack_rx.recv().expect("updater thread died");
+    }
+
+    /// Stop and join; returns the number of batches applied.
+    pub fn join(mut self) -> u64 {
+        let _ = self.tx.send(Msg::Stop);
+        self.handle.take().unwrap().join().expect("updater panicked")
+    }
+}
+
+impl Drop for AsyncUpdater {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = self.tx.send(Msg::Stop);
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_all_updates() {
+        let table = Arc::new(EmbeddingTable::zeros(4, 2));
+        let opt = Arc::new(SparseAdagrad::new(4, 1.0));
+        let up = AsyncUpdater::spawn(table.clone(), opt, 8);
+        for _ in 0..10 {
+            let mut g = SparseGrads::new(2);
+            g.extend_from(&[1], &[1.0, 1.0]);
+            up.submit(g);
+        }
+        let applied = up.join();
+        assert_eq!(applied, 10);
+        // row 1 moved, others untouched
+        assert_ne!(table.row(1), &[0.0, 0.0]);
+        assert_eq!(table.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn flush_waits_for_pending() {
+        let table = Arc::new(EmbeddingTable::zeros(2, 4));
+        let opt = Arc::new(SparseAdagrad::new(2, 1.0));
+        let up = AsyncUpdater::spawn(table.clone(), opt, 64);
+        for _ in 0..50 {
+            let mut g = SparseGrads::new(4);
+            g.extend_from(&[0], &[0.1; 4]);
+            up.submit(g);
+        }
+        up.flush();
+        // after flush the row reflects all 50 updates (AdaGrad state 50·0.01)
+        let moved = table.row(0)[0];
+        assert!(moved != 0.0);
+        let snapshot = table.row(0)[0];
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(table.row(0)[0], snapshot, "no updates in flight after flush");
+        up.join();
+    }
+
+    #[test]
+    fn equivalent_to_sync_application() {
+        // async updater applied N disjoint-row updates == applying inline
+        let t_async = Arc::new(EmbeddingTable::zeros(8, 2));
+        let t_sync = EmbeddingTable::zeros(8, 2);
+        let o_async = Arc::new(SparseAdagrad::new(8, 0.5));
+        let o_sync = SparseAdagrad::new(8, 0.5);
+        let up = AsyncUpdater::spawn(t_async.clone(), o_async, 4);
+        for i in 0..8u64 {
+            let mut g = SparseGrads::new(2);
+            g.extend_from(&[i], &[i as f32, 1.0]);
+            up.submit(g);
+            o_sync.apply(&t_sync, &[i], &[i as f32, 1.0]);
+        }
+        up.flush();
+        for i in 0..8 {
+            assert_eq!(t_async.row(i), t_sync.row(i));
+        }
+        up.join();
+    }
+}

@@ -1,0 +1,128 @@
+//! Walker alias method for O(1) sampling from a discrete distribution.
+//!
+//! Used for degree-proportional entity sampling (paper §3.3 / §5.3
+//! protocol 2) and for the Zipf relation-frequency generator.
+
+use super::rng::Rng;
+
+/// Alias table over `n` outcomes with arbitrary non-negative weights.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from weights. Zero-weight outcomes are never sampled.
+    /// Panics if all weights are zero or the table is empty.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty alias table");
+        assert!(n < u32::MAX as usize, "alias table too large");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all-zero weights");
+        let scale = n as f64 / total;
+
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = *large.last().unwrap();
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are 1.0 up to float error.
+        for i in large.into_iter().chain(small) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.gen_index(self.prob.len());
+        if rng.gen_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(weights: &[f64], draws: usize) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Rng::seed_from_u64(42);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let freq = empirical(&[1.0; 10], 200_000);
+        for f in freq {
+            assert!((f - 0.1).abs() < 0.01, "f={f}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights() {
+        let w = [8.0, 4.0, 2.0, 1.0, 1.0];
+        let total: f64 = w.iter().sum();
+        let freq = empirical(&w, 400_000);
+        for (f, wi) in freq.iter().zip(&w) {
+            let expect = wi / total;
+            assert!((f - expect).abs() < 0.01, "f={f} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let freq = empirical(&[1.0, 0.0, 1.0], 100_000);
+        assert_eq!(freq[1], 0.0);
+    }
+
+    #[test]
+    fn single_outcome() {
+        let freq = empirical(&[3.5], 100);
+        assert_eq!(freq[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_zero_panics() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

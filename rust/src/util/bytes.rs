@@ -1,0 +1,202 @@
+//! Byte-level encode/decode helpers for the KVStore wire protocol and the
+//! on-disk dataset caches. Little-endian throughout; no serde in the
+//! vendored dep set, so framing is explicit and versioned at the protocol
+//! layer (`kvstore/protocol.rs`).
+
+/// Incrementally encode values into a growable buffer.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64_slice(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Cursor-based decoder over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("decode error: {0} at offset {1}")]
+pub struct DecodeError(pub &'static str, pub usize);
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError("truncated", self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>, DecodeError> {
+        let n = self.u64()? as usize;
+        if n > self.remaining() / 8 {
+            return Err(DecodeError("length overflow", self.pos));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, DecodeError> {
+        let n = self.u64()? as usize;
+        if n > self.remaining() / 4 {
+            return Err(DecodeError("length overflow", self.pos));
+        }
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn str(&mut self) -> Result<String, DecodeError> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| DecodeError("utf8", self.pos))
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Reinterpret an f32 slice as bytes (for bulk I/O of embedding rows).
+pub fn f32_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Copy bytes into an f32 vec (len must be a multiple of 4).
+pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    assert_eq!(b.len() % 4, 0);
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(123456);
+        w.u64(u64::MAX - 3);
+        w.f32(-1.5);
+        w.str("hello");
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 123456);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.str().unwrap(), "hello");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_vecs() {
+        let mut w = Writer::new();
+        w.u64_slice(&[1, 2, 3]);
+        w.f32_slice(&[0.5, -0.5]);
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u64_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32_vec().unwrap(), vec![0.5, -0.5]);
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let mut w = Writer::new();
+        w.u64(9);
+        let mut r = Reader::new(&w.buf[..4]);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn hostile_length_fails() {
+        // A declared length far beyond the actual payload must not OOM.
+        let mut w = Writer::new();
+        w.u64(u64::MAX / 2);
+        let mut r = Reader::new(&w.buf);
+        assert!(r.f32_vec().is_err());
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        assert_eq!(bytes_to_f32(f32_as_bytes(&v)), v);
+    }
+}

@@ -1,0 +1,62 @@
+//! Per-thread CPU time (CLOCK_THREAD_CPUTIME_ID).
+//!
+//! The evaluation testbed has a single CPU core, so wall-clock timing of
+//! concurrent trainer threads measures time-sharing, not parallel
+//! behaviour. Thread CPU time is preemption-immune: a worker's busy time
+//! is what it *would* take on its own core. The scaling benches (Fig 5/6)
+//! reconstruct parallel wall-clock as `max_w busy_w + sync + transfer`
+//! from these measurements — documented in DESIGN.md and EXPERIMENTS.md.
+
+use std::time::Duration;
+
+/// CPU time consumed by the calling thread.
+pub fn thread_cpu_time() -> Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    assert_eq!(rc, 0, "clock_gettime failed");
+    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Stopwatch over thread CPU time.
+pub struct CpuTimer {
+    start: Duration,
+}
+
+impl Default for CpuTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CpuTimer {
+    pub fn new() -> Self {
+        CpuTimer { start: thread_cpu_time() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        thread_cpu_time().saturating_sub(self.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_work_accumulates_cpu_time() {
+        let t = CpuTimer::new();
+        let mut x = 0u64;
+        for i in 0..20_000_000u64 {
+            x = x.wrapping_add(i).rotate_left(7);
+        }
+        std::hint::black_box(x);
+        assert!(t.elapsed() > Duration::from_millis(1));
+    }
+
+    #[test]
+    fn sleep_does_not_count() {
+        let t = CpuTimer::new();
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(t.elapsed() < Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrate utilities: RNG, alias sampling, timing, fork-join
+//! helpers, byte codecs, and ranking helpers.
+
+pub mod alias;
+pub mod bytes;
+pub mod cputime;
+pub mod rng;
+pub mod threadpool;
+pub mod json;
+pub mod timer;
+pub mod topk;

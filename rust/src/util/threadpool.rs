@@ -1,0 +1,77 @@
+//! Minimal scoped fork-join helpers (no rayon in the vendored dep set).
+//!
+//! The trainers use long-lived dedicated threads (`train/`); this module
+//! covers the remaining data-parallel chores: parallel init, parallel eval
+//! sharding, and the partitioner's parallel refinement sweeps.
+
+/// Run `f(worker_id)` on `n` scoped threads and collect the results in
+/// worker order. Panics propagate.
+pub fn scoped_map<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    assert!(n > 0);
+    if n == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n).map(|i| s.spawn({ let f = &f; move || f(i) })).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Split `len` items into `n` contiguous ranges (first `len % n` ranges get
+/// one extra item). Ranges may be empty when `len < n`.
+pub fn split_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+/// Parallel for over chunks of a slice: `f(chunk_index, range)`.
+pub fn parallel_chunks(len: usize, n: usize, f: impl Fn(usize, std::ops::Range<usize>) + Sync) {
+    let ranges = split_ranges(len, n);
+    scoped_map(n, |i| f(i, ranges[i].clone()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_collects_in_order() {
+        let out = scoped_map(4, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn ranges_cover_everything() {
+        for (len, n) in [(10, 3), (0, 2), (7, 7), (3, 5), (100, 8)] {
+            let ranges = split_ranges(len, n);
+            assert_eq!(ranges.len(), n);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, len);
+            // contiguous & ordered
+            let mut pos = 0;
+            for r in &ranges {
+                assert_eq!(r.start, pos);
+                pos = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_visits_all() {
+        let counter = AtomicUsize::new(0);
+        parallel_chunks(1000, 4, |_, r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+}

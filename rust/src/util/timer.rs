@@ -1,0 +1,133 @@
+//! Lightweight timing + phase accounting used by the trainers and benches.
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Accumulates time spent per named phase (sample / gather / compute /
+/// update / transfer ...). Cheap enough to keep on the training hot loop.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(&'static str, Duration)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        for e in &mut self.entries {
+            if e.0 == phase {
+                e.1 += d;
+                return;
+            }
+        }
+        self.entries.push((phase, d));
+    }
+
+    /// Time a closure, attributing it to `phase`.
+    pub fn time<R>(&mut self, phase: &'static str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.add(phase, t.elapsed());
+        r
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|e| e.0 == phase)
+            .map(|e| e.1)
+            .unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    /// Merge another PhaseTimes (e.g. from a worker thread) into this one.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for &(p, d) in &other.entries {
+            self.add(p, d);
+        }
+    }
+
+    pub fn entries(&self) -> &[(&'static str, Duration)] {
+        &self.entries
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut s = String::new();
+        for &(p, d) in &self.entries {
+            let secs = d.as_secs_f64();
+            s.push_str(&format!("{p}: {secs:.3}s ({:.1}%)  ", 100.0 * secs / total));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accumulation() {
+        let mut pt = PhaseTimes::new();
+        pt.add("a", Duration::from_millis(10));
+        pt.add("b", Duration::from_millis(5));
+        pt.add("a", Duration::from_millis(10));
+        assert_eq!(pt.get("a"), Duration::from_millis(20));
+        assert_eq!(pt.get("b"), Duration::from_millis(5));
+        assert_eq!(pt.total(), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn merge_workers() {
+        let mut a = PhaseTimes::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimes::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimes::new();
+        let v = pt.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(pt.get("work") > Duration::ZERO || pt.get("work") == Duration::ZERO);
+    }
+}

@@ -1,0 +1,88 @@
+//! Rank computation helpers for link-prediction evaluation.
+
+/// Rank of the positive among candidates, 1-based, using *optimistic tie
+/// breaking minus half* ("average" protocol): rank = 1 + #{better} +
+/// #{ties}/2. This matches common KGE eval implementations and is stable
+/// under score ties from saturated models.
+pub fn rank_of(positive_score: f32, candidate_scores: &[f32]) -> f64 {
+    let mut better = 0usize;
+    let mut ties = 0usize;
+    for &s in candidate_scores {
+        if s > positive_score {
+            better += 1;
+        } else if s == positive_score {
+            ties += 1;
+        }
+    }
+    1.0 + better as f64 + ties as f64 / 2.0
+}
+
+/// Indices of the k largest values (descending). O(n log k).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Entry(f32, usize); // min-heap on score
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal).then(o.1.cmp(&self.1))
+        }
+    }
+
+    let k = k.min(scores.len());
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Entry(s, i));
+        } else if let Some(min) = heap.peek() {
+            if s > min.0 {
+                heap.pop();
+                heap.push(Entry(s, i));
+            }
+        }
+    }
+    let mut out: Vec<(f32, usize)> = heap.into_iter().map(|e| (e.0, e.1)).collect();
+    out.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    out.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_no_ties() {
+        assert_eq!(rank_of(5.0, &[1.0, 9.0, 3.0]), 2.0); // one better
+        assert_eq!(rank_of(10.0, &[1.0, 9.0, 3.0]), 1.0);
+        assert_eq!(rank_of(0.0, &[1.0, 9.0, 3.0]), 4.0);
+    }
+
+    #[test]
+    fn rank_ties_average() {
+        assert_eq!(rank_of(5.0, &[5.0, 5.0]), 2.0); // 1 + 0 + 1
+    }
+
+    #[test]
+    fn topk_basic() {
+        let s = [0.1, 0.9, 0.5, 0.7];
+        assert_eq!(top_k_indices(&s, 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&s, 10), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn topk_against_sort() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(9);
+        let scores: Vec<f32> = (0..500).map(|_| rng.gen_f32()).collect();
+        let got = top_k_indices(&scores, 25);
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+        assert_eq!(got, idx[..25].to_vec());
+    }
+}

@@ -1,0 +1,326 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! batching, state management), with hand-rolled generators seeded from
+//! the repo RNG (no proptest crate in the vendored set — same idea:
+//! random structured inputs, many cases, shrink by rerunning a seed).
+
+use dglke::kg::generator::{generate, GeneratorConfig};
+use dglke::kg::{Triplet, TripletStore};
+use dglke::kvstore::{KvCluster, TableId};
+use dglke::partition::{partition_relations, GraphPartition, MetisConfig, SPLIT};
+use dglke::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
+use dglke::store::{EmbeddingTable, SparseAdagrad, SparseGrads};
+use dglke::util::json::Json;
+use dglke::util::rng::Rng;
+
+fn random_store(rng: &mut Rng, n_entities: usize, n_relations: usize, n: usize) -> TripletStore {
+    let mut s = TripletStore::new(n_entities, n_relations);
+    for _ in 0..n {
+        let h = rng.gen_index(n_entities) as u32;
+        let mut t = rng.gen_index(n_entities) as u32;
+        if t == h {
+            t = (t + 1) % n_entities as u32;
+        }
+        s.push(Triplet { head: h, rel: rng.gen_index(n_relations) as u32, tail: t });
+    }
+    s
+}
+
+// ---------------- partitioning invariants ----------------
+
+#[test]
+fn prop_graph_partition_total_and_ownership() {
+    let mut rng = Rng::seed_from_u64(100);
+    for case in 0..8 {
+        let store = random_store(&mut rng, 100 + case * 37, 5, 800);
+        for k in [2usize, 3, 5] {
+            let p = GraphPartition::metis(&store, k, &MetisConfig::default());
+            // every entity assigned to a valid machine
+            assert!(p.entity_part.iter().all(|&m| (m as usize) < k));
+            // triplets follow their head
+            for i in 0..store.len() {
+                assert_eq!(p.triplet_part[i], p.entity_part[store.heads[i] as usize]);
+            }
+            // partition sizes sum to totals
+            assert_eq!(p.entity_sizes().iter().sum::<u64>() as usize, store.n_entities());
+            assert_eq!(p.triplet_sizes().iter().sum::<u64>() as usize, store.len());
+        }
+    }
+}
+
+#[test]
+fn prop_metis_no_worse_than_random_on_clustered_graphs() {
+    for seed in 0..5 {
+        let kg = generate(&GeneratorConfig::tiny(seed));
+        let g = dglke::partition::WeightedGraph::from_triplets(&kg.store);
+        let m = dglke::partition::metis_partition(&g, 4, &MetisConfig::default());
+        let mut rng = Rng::seed_from_u64(seed);
+        let r: Vec<u32> = (0..g.n_vertices()).map(|_| rng.gen_index(4) as u32).collect();
+        assert!(g.edge_cut(&m) <= g.edge_cut(&r), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_relation_partition_conservation() {
+    let mut rng = Rng::seed_from_u64(200);
+    for case in 0..10 {
+        let n_rel = 3 + rng.gen_index(60);
+        let store = random_store(&mut rng, 50, n_rel, 500 + case * 100);
+        let k = 1 + rng.gen_index(6);
+        let rp = partition_relations(&store, k, case as u64);
+        // every triplet assigned exactly once, to a valid partition
+        assert_eq!(rp.triplet_part.len(), store.len());
+        assert!(rp.triplet_part.iter().all(|&p| (p as usize) < k));
+        assert_eq!(rp.sizes.iter().sum::<u64>() as usize, store.len());
+        // non-split relations keep all triplets in one partition
+        for i in 0..store.len() {
+            let r = store.rels[i] as usize;
+            if rp.relation_part[r] != SPLIT {
+                assert_eq!(rp.triplet_part[i], rp.relation_part[r]);
+            }
+        }
+    }
+}
+
+// ---------------- sampler invariants ----------------
+
+#[test]
+fn prop_positive_sampler_is_permutation_per_epoch() {
+    let mut rng = Rng::seed_from_u64(300);
+    for _ in 0..6 {
+        let n = 10 + rng.gen_index(500);
+        let idx: Vec<u32> = (0..n as u32).collect();
+        let mut s = PositiveSampler::over_indices(idx, rng.next_u64());
+        let b = 1 + rng.gen_index(n);
+        let mut seen = vec![0u32; n];
+        let mut buf = Vec::new();
+        let mut drawn = 0;
+        while drawn < n {
+            let take = b.min(n - drawn);
+            s.next_batch(take, &mut buf);
+            for &i in &buf {
+                seen[i as usize] += 1;
+            }
+            drawn += take;
+        }
+        assert!(seen.iter().all(|&c| c == 1), "n={n} b={b}");
+    }
+}
+
+#[test]
+fn prop_uniform_negatives_cover_entity_space() {
+    // over many batches, uniform sampling should touch a large fraction of
+    // a small entity space (coupon-collector style)
+    let store = random_store(&mut Rng::seed_from_u64(1), 64, 2, 256);
+    let mut s = NegativeSampler::new(
+        NegativeConfig { k: 32, chunk_size: 32, ..Default::default() },
+        64,
+        9,
+    );
+    let idx: Vec<u32> = (0..64).collect();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..30 {
+        let b = s.assemble(&store, &idx);
+        seen.extend(b.neg_tails.iter().copied());
+    }
+    assert!(seen.len() >= 60, "covered {}", seen.len());
+}
+
+#[test]
+fn prop_batch_layout_consistent() {
+    let mut rng = Rng::seed_from_u64(400);
+    for _ in 0..10 {
+        let ne = 50 + rng.gen_index(200);
+        let store = random_store(&mut rng, ne, 8, 400);
+        let k = 1 + rng.gen_index(32);
+        let b = 64;
+        let cs = [1usize, 2, 4, 8, 16, 32, 64][rng.gen_index(7)];
+        let mut s = NegativeSampler::new(
+            NegativeConfig { k, chunk_size: cs, degree_frac: 0.3, ..Default::default() },
+            ne,
+            rng.next_u64(),
+        );
+        let idx: Vec<u32> = (0..b as u32).collect();
+        let batch = s.assemble(&store, &idx);
+        assert_eq!(batch.batch_size(), b);
+        assert_eq!(batch.chunks, b / cs);
+        assert_eq!(batch.neg_heads.len(), batch.chunks * k);
+        assert_eq!(batch.neg_tails.len(), batch.chunks * k);
+        assert!(batch.neg_heads.iter().all(|&e| (e as usize) < ne));
+        // positives match the store rows
+        for (j, &i) in idx.iter().enumerate() {
+            let t = store.get(i as usize);
+            assert_eq!(batch.heads[j], t.head as u64);
+            assert_eq!(batch.rels[j], t.rel as u64);
+            assert_eq!(batch.tails[j], t.tail as u64);
+        }
+    }
+}
+
+// ---------------- optimizer / gradient state ----------------
+
+#[test]
+fn prop_accumulate_preserves_sum() {
+    let mut rng = Rng::seed_from_u64(500);
+    for _ in 0..10 {
+        let dim = 1 + rng.gen_index(8);
+        let n = 1 + rng.gen_index(100);
+        let mut g = SparseGrads::new(dim);
+        let mut expected: std::collections::HashMap<u64, Vec<f64>> = Default::default();
+        for _ in 0..n {
+            let id = rng.gen_range(10) as u64;
+            let row: Vec<f32> = (0..dim).map(|_| rng.gen_normal()).collect();
+            g.extend_from(&[id], &row);
+            let e = expected.entry(id).or_insert_with(|| vec![0.0; dim]);
+            for (a, &b) in e.iter_mut().zip(&row) {
+                *a += b as f64;
+            }
+        }
+        let acc = g.accumulate();
+        assert_eq!(acc.ids.len(), expected.len());
+        for (j, &id) in acc.ids.iter().enumerate() {
+            for x in 0..dim {
+                let got = acc.rows[j * dim + x] as f64;
+                let want = expected[&id][x];
+                assert!((got - want).abs() < 1e-3, "id {id} dim {x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_adagrad_descends_on_convex_problems() {
+    let mut rng = Rng::seed_from_u64(600);
+    for _ in 0..5 {
+        let dim = 1 + rng.gen_index(6);
+        let target: Vec<f32> = (0..dim).map(|_| rng.gen_normal()).collect();
+        let table = EmbeddingTable::zeros(1, dim);
+        let opt = SparseAdagrad::new(1, 1.0);
+        for _ in 0..800 {
+            let row = table.row(0);
+            let grad: Vec<f32> = row.iter().zip(&target).map(|(&x, &t)| 2.0 * (x - t)).collect();
+            opt.apply(&table, &[0], &grad);
+        }
+        for (x, t) in table.row(0).iter().zip(&target) {
+            assert!((x - t).abs() < 0.1, "{x} vs {t}");
+        }
+    }
+}
+
+// ---------------- KVStore consistency (random ops vs model) ----------------
+
+#[test]
+fn prop_kvstore_matches_in_memory_model() {
+    let mut rng = Rng::seed_from_u64(700);
+    let n_entities = 40;
+    let dim = 4;
+    let entity_machine: Vec<u32> = (0..n_entities).map(|_| rng.gen_index(2) as u32).collect();
+    let cluster = KvCluster::start(&entity_machine, 6, 2, 2, dim, dim, 0.5, 0.1, 77).unwrap();
+
+    // reference model: same init (id-derived), same AdaGrad
+    let model = EmbeddingTable::zeros(n_entities, dim);
+    for id in 0..n_entities {
+        let mut r = Rng::seed_from_u64(77 ^ ((id as u64).wrapping_mul(2) + 1));
+        let row: Vec<f32> = (0..dim).map(|_| r.gen_uniform(-0.1, 0.1)).collect();
+        model.set_row(id, &row);
+    }
+    let model_opt = SparseAdagrad::new(n_entities, 0.5);
+
+    let mut client = cluster.client(0).unwrap();
+    for _ in 0..200 {
+        if rng.gen_f32() < 0.5 {
+            // random push of 1-4 unique ids
+            let n = 1 + rng.gen_index(4);
+            let ids: Vec<u64> =
+                rng.sample_distinct(n_entities, n).into_iter().map(|x| x as u64).collect();
+            let rows: Vec<f32> = (0..n * dim).map(|_| rng.gen_normal()).collect();
+            client.push(TableId::Entities, &ids, dim, &rows).unwrap();
+            model_opt.apply(&model, &ids, &rows);
+        } else {
+            // random pull must match the model exactly
+            let n = 1 + rng.gen_index(6);
+            let ids: Vec<u64> = (0..n).map(|_| rng.gen_range(n_entities as u64)).collect();
+            let mut out = vec![0f32; n * dim];
+            client.pull(TableId::Entities, &ids, dim, &mut out).unwrap();
+            for (j, &id) in ids.iter().enumerate() {
+                assert_eq!(
+                    &out[j * dim..(j + 1) * dim],
+                    model.row(id as usize),
+                    "divergence at id {id}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kvstore_survives_malformed_frames() {
+    use std::io::Write;
+    let entity_machine = vec![0u32; 8];
+    let cluster = KvCluster::start(&entity_machine, 2, 1, 1, 4, 4, 0.1, 0.1, 1).unwrap();
+    // garbage connection: random bytes then dropped
+    {
+        let mut s = std::net::TcpStream::connect(cluster.addrs[0]).unwrap();
+        s.write_all(&[0xde, 0xad, 0xbe, 0xef, 0x01, 0x02]).unwrap();
+        // oversized length prefix
+        let mut s2 = std::net::TcpStream::connect(cluster.addrs[0]).unwrap();
+        s2.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // server still serves valid clients afterwards
+    let mut client = cluster.client(0).unwrap();
+    let mut out = vec![0f32; 4];
+    client.pull(TableId::Entities, &[3], 4, &mut out).unwrap();
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+// ---------------- json fuzz ----------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_index(4) } else { rng.gen_index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_f32() < 0.5),
+            2 => Json::Num((rng.gen_normal() * 100.0).round() as f64),
+            3 => {
+                let n = rng.gen_index(8);
+                Json::Str((0..n).map(|_| char::from(33 + rng.gen_index(90) as u8)).collect())
+            }
+            4 => Json::Arr((0..rng.gen_index(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.gen_index(4) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::seed_from_u64(800);
+    for _ in 0..200 {
+        let v = gen_value(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, v, "{text}");
+    }
+}
+
+// ---------------- hogwild under real contention ----------------
+
+#[test]
+fn hogwild_updates_all_land_on_disjoint_rows() {
+    let table = std::sync::Arc::new(EmbeddingTable::zeros(256, 8));
+    let opt = std::sync::Arc::new(SparseAdagrad::new(256, 1.0));
+    dglke::util::threadpool::scoped_map(8, |w| {
+        let mut rng = Rng::seed_from_u64(w as u64);
+        for _ in 0..200 {
+            let id = (w * 32 + rng.gen_index(32)) as u64; // worker-disjoint rows
+            let grad: Vec<f32> = (0..8).map(|_| rng.gen_normal()).collect();
+            opt.apply(&table, &[id], &grad);
+        }
+    });
+    // every worker's rows moved; no row left NaN/inf
+    for row in 0..256 {
+        assert!(table.row(row).iter().all(|v| v.is_finite()));
+    }
+}

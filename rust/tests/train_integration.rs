@@ -1,0 +1,99 @@
+//! End-to-end training integration: the full coordinator loop driving the
+//! AOT XLA artifacts (the production path), multi-worker.
+
+use dglke::kg::Dataset;
+use dglke::models::ModelKind;
+use dglke::runtime::{artifacts, BackendKind, Manifest};
+use dglke::train::worker::ModelState;
+use dglke::train::{run_training, TrainConfig};
+
+fn manifest() -> Option<Manifest> {
+    if !artifacts::available() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Manifest::load(&artifacts::default_dir()).unwrap())
+}
+
+#[test]
+fn xla_training_reduces_loss_tiny_artifacts() {
+    let Some(manifest) = manifest() else { return };
+    let dataset = Dataset::load("tiny", 7).unwrap();
+    let cfg = TrainConfig {
+        model: ModelKind::TransEL2,
+        backend: BackendKind::Xla,
+        artifact_tag: "tiny".into(),
+        n_workers: 1,
+        batches_per_worker: 60,
+        lr: 0.25,
+        log_every: 10,
+        ..Default::default()
+    };
+    let state = ModelState::init(&dataset, cfg.model, 16, &cfg);
+    let stats = run_training(&dataset, &state, Some(&manifest), &cfg).unwrap();
+    let first = stats.loss_curve.first().unwrap().1;
+    let last = stats.loss_curve.last().unwrap().1;
+    assert!(last < first, "loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn xla_multiworker_training() {
+    let Some(manifest) = manifest() else { return };
+    let dataset = Dataset::load("tiny", 8).unwrap();
+    let cfg = TrainConfig {
+        model: ModelKind::DistMult,
+        backend: BackendKind::Xla,
+        artifact_tag: "tiny".into(),
+        n_workers: 2,
+        batches_per_worker: 30,
+        sync_interval: 10,
+        lr: 0.25,
+        log_every: 10,
+        ..Default::default()
+    };
+    let state = ModelState::init(&dataset, cfg.model, 16, &cfg);
+    let stats = run_training(&dataset, &state, Some(&manifest), &cfg).unwrap();
+    assert_eq!(stats.total_batches, 60);
+    assert!(stats.mean_loss_tail.is_finite());
+}
+
+#[test]
+fn native_and_xla_agree_over_training_trajectory() {
+    // Same seed, single worker, sync updates: both backends should follow
+    // nearly the same loss trajectory (small float divergence allowed —
+    // XLA reassociates reductions).
+    let Some(manifest) = manifest() else { return };
+    let dataset = Dataset::load("tiny", 9).unwrap();
+    let mk = |backend: BackendKind| {
+        let cfg = TrainConfig {
+            model: ModelKind::RotatE,
+            backend,
+            artifact_tag: "tiny".into(),
+            shape: Some(dglke::models::step::StepShape {
+                batch: 32,
+                chunks: 4,
+                neg_k: 16,
+                dim: 16,
+            }),
+            n_workers: 1,
+            batches_per_worker: 20,
+            async_update: false,
+            lr: 0.1,
+            log_every: 1,
+            seed: 42,
+            ..Default::default()
+        };
+        let state = ModelState::init(&dataset, cfg.model, 16, &cfg);
+        run_training(&dataset, &state, Some(&manifest), &cfg).unwrap()
+    };
+    let nat = mk(BackendKind::Native);
+    let xla = mk(BackendKind::Xla);
+    assert_eq!(nat.loss_curve.len(), xla.loss_curve.len());
+    for ((s1, l1), (s2, l2)) in nat.loss_curve.iter().zip(&xla.loss_curve) {
+        assert_eq!(s1, s2);
+        assert!(
+            (l1 - l2).abs() < 2e-2 * l1.abs().max(1.0),
+            "step {s1}: native={l1} xla={l2}"
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! Cross-layer integration test: the AOT-compiled XLA artifacts (L1+L2,
+//! Pallas + JAX, lowered to HLO) must numerically match the native Rust
+//! mirror (L3) for every model — values AND gradients.
+//!
+//! This is the strongest correctness signal in the repo: it exercises
+//! python/compile/kernels (Pallas), python/compile/model.py (JAX),
+//! aot.py (lowering), the HLO-text interchange, the PJRT runtime, and
+//! rust/src/models in one assertion.
+//!
+//! Skips (with a message) when `artifacts/` has not been built.
+
+use dglke::models::step::{StepInputs, StepShape};
+use dglke::models::{LossCfg, ModelKind, NativeModel};
+use dglke::runtime::{EvalExecutor, Manifest, TrainExecutor, XlaRuntime};
+use dglke::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = dglke::runtime::artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_normal() * scale).collect()
+}
+
+fn assert_close(tag: &str, a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    let mut worst = 0f32;
+    let mut worst_i = 0;
+    for i in 0..a.len() {
+        let err = (a[i] - b[i]).abs() - rtol * b[i].abs();
+        if err > worst {
+            worst = err;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst <= atol,
+        "{tag}: mismatch at {worst_i}: {} vs {} (excess {worst})",
+        a[worst_i],
+        b[worst_i]
+    );
+}
+
+#[test]
+fn train_step_all_models_match() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = XlaRuntime::cpu().unwrap();
+
+    for kind in ModelKind::ALL {
+        let art = manifest
+            .find_train(kind.name(), "logistic", "tiny")
+            .expect("tiny artifact missing — rebuild artifacts");
+        let exe = TrainExecutor::new(&rt, art).unwrap();
+        let shape = exe.shape;
+        let native = NativeModel::new(kind, shape.dim, LossCfg::default());
+
+        let mut rng = Rng::seed_from_u64(kind as u64 * 7 + 1);
+        let h = rand_vec(&mut rng, shape.batch * shape.dim, 0.5);
+        let r = rand_vec(&mut rng, shape.batch * exe.rel_dim, 0.5);
+        let t = rand_vec(&mut rng, shape.batch * shape.dim, 0.5);
+        let nh = rand_vec(&mut rng, shape.chunks * shape.neg_k * shape.dim, 0.5);
+        let nt = rand_vec(&mut rng, shape.chunks * shape.neg_k * shape.dim, 0.5);
+        let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+
+        let gx = exe.step(&inp).unwrap();
+        let gn = native.train_step(&shape, &inp);
+
+        let name = kind.name();
+        assert!(
+            (gx.loss - gn.loss).abs() < 1e-4,
+            "{name} loss: xla={} native={}",
+            gx.loss,
+            gn.loss
+        );
+        assert_close(&format!("{name} d_h"), &gx.d_h, &gn.d_h, 1e-4, 1e-3);
+        assert_close(&format!("{name} d_r"), &gx.d_r, &gn.d_r, 1e-4, 1e-3);
+        assert_close(&format!("{name} d_t"), &gx.d_t, &gn.d_t, 1e-4, 1e-3);
+        assert_close(&format!("{name} d_neg_h"), &gx.d_neg_h, &gn.d_neg_h, 1e-4, 1e-3);
+        assert_close(&format!("{name} d_neg_t"), &gx.d_neg_t, &gn.d_neg_t, 1e-4, 1e-3);
+    }
+}
+
+#[test]
+fn eval_scores_all_models_match() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = XlaRuntime::cpu().unwrap();
+
+    for kind in ModelKind::ALL {
+        for side in ["tail", "head"] {
+            let art = manifest.find_eval(kind.name(), side, "tiny").unwrap();
+            let exe = EvalExecutor::new(&rt, art).unwrap();
+            let native = NativeModel::new(kind, exe.dim, LossCfg::default());
+
+            let mut rng = Rng::seed_from_u64(kind as u64 * 13 + 5);
+            let e = rand_vec(&mut rng, exe.m * exe.dim, 0.5);
+            let r = rand_vec(&mut rng, exe.m * exe.rel_dim, 0.5);
+            let cand = rand_vec(&mut rng, exe.cands * exe.dim, 0.5);
+
+            let sx = exe.scores(&e, &r, &cand).unwrap();
+            let mut sn = vec![0f32; exe.m * exe.cands];
+            let eval_side = if side == "tail" {
+                dglke::models::EvalSide::Tail
+            } else {
+                dglke::models::EvalSide::Head
+            };
+            native.eval_scores(eval_side, &e, &r, &cand, &mut sn);
+            assert_close(&format!("{} eval_{side}", kind.name()), &sx, &sn, 1e-4, 1e-3);
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_executions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = XlaRuntime::cpu().unwrap();
+    let art = manifest.find_train("distmult", "logistic", "tiny").unwrap();
+    let exe = TrainExecutor::new(&rt, art).unwrap();
+    let shape = exe.shape;
+    let mut rng = Rng::seed_from_u64(3);
+    let h = rand_vec(&mut rng, shape.batch * shape.dim, 0.5);
+    let r = rand_vec(&mut rng, shape.batch * exe.rel_dim, 0.5);
+    let t = rand_vec(&mut rng, shape.batch * shape.dim, 0.5);
+    let nh = rand_vec(&mut rng, shape.chunks * shape.neg_k * shape.dim, 0.5);
+    let nt = rand_vec(&mut rng, shape.chunks * shape.neg_k * shape.dim, 0.5);
+    let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+    let a = exe.step(&inp).unwrap();
+    let b = exe.step(&inp).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.d_h, b.d_h);
+}
