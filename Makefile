@@ -1,0 +1,40 @@
+# DGL-KE reproduction — build/test/verify entry points.
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: build test fmt fmt-check check artifacts bench clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt
+
+fmt-check:
+	$(CARGO) fmt --check
+
+# Tier-1 verification: what CI runs.
+check: build test fmt-check
+
+# AOT-compile the JAX/Pallas train+eval artifacts (writes
+# $(ARTIFACTS_DIR)/manifest.json + HLO text files). Requires jax.
+# abspath keeps ARTIFACTS_DIR overrides (relative or absolute) correct
+# despite the cd into python/.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out $(abspath $(ARTIFACTS_DIR))
+
+# Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
+bench:
+	$(CARGO) build --release --benches
+	for b in fig3_neg_sampling fig4_optimizations fig5_multigpu fig6_manycore \
+	         fig7_distributed fig8_pbg fig9_graphvite; do \
+	    $(CARGO) bench --bench $$b || exit 1; \
+	done
+
+clean:
+	$(CARGO) clean

@@ -11,8 +11,8 @@ use dglke::kg::Dataset;
 use dglke::models::ModelKind;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = load_manifest_or_exit();
-    let dataset = Dataset::load("fb15k-syn", 0)?;
+    let _manifest = load_manifest_or_exit();
+    let dataset = std::sync::Arc::new(Dataset::load("fb15k-syn", 0)?);
     println!("Fig 3: joint vs naive negative sampling — transe_l2, fb15k-syn");
     println!("{:>12} {:>8} {:>16} {:>16}", "sampling", "workers", "step (ms, sim)", "h2d MB/step");
 
@@ -24,7 +24,6 @@ fn main() -> anyhow::Result<()> {
         {
             let (stats, ms) = timed_run(
                 &dataset,
-                &manifest,
                 ModelKind::TransEL2,
                 tag,
                 workers,

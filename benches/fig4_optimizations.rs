@@ -33,17 +33,16 @@ struct Components {
 }
 
 fn components(
-    dataset: &Dataset,
-    manifest: &dglke::runtime::Manifest,
+    dataset: &std::sync::Arc<Dataset>,
     model: ModelKind,
     rel_part: bool,
     batches: usize,
 ) -> anyhow::Result<Components> {
     // one measured run per configuration; phases are aggregated thread-CPU
     // seconds across workers
-    let (stats, _) = timed_run(dataset, manifest, model, "default", 2, batches, true, |cfg| {
-        cfg.async_update = false; // measure the update cost explicitly
-        cfg.relation_partition = rel_part;
+    let (stats, _) = timed_run(dataset, model, "default", 2, batches, true, |spec| {
+        spec.async_update = false; // measure the update cost explicitly
+        spec.relation_partition = rel_part;
     })?;
     let per_batch = |phase: &str| -> f64 {
         stats
@@ -62,7 +61,7 @@ fn components(
 }
 
 fn main() -> anyhow::Result<()> {
-    let manifest = load_manifest_or_exit();
+    let _manifest = load_manifest_or_exit();
     println!("Fig 4: simulated V100 per-batch step time (model in bench header)");
     println!(
         "{:>10} {:>18} {:>9} {:>9} {:>9} {:>16}",
@@ -70,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rows = Vec::new();
     for (ds_name, batches) in [("fb15k-syn", 12), ("freebase-syn:0.02", 12)] {
-        let dataset = Dataset::load(ds_name, 0)?;
+        let dataset = std::sync::Arc::new(Dataset::load(ds_name, 0)?);
         for model in [
             ModelKind::TransEL2,
             ModelKind::DistMult,
@@ -79,8 +78,8 @@ fn main() -> anyhow::Result<()> {
             ModelKind::TransR,
         ] {
             let b = bench_batches(batches);
-            let dense_rel = components(&dataset, &manifest, model, false, b)?;
-            let pinned_rel = components(&dataset, &manifest, model, true, b)?;
+            let dense_rel = components(&dataset, model, false, b)?;
+            let pinned_rel = components(&dataset, model, true, b)?;
 
             let sync = dense_rel.compute_ms + dense_rel.transfer_ms + dense_rel.update_ms;
             let async_ = dense_rel.compute_ms.max(dense_rel.update_ms) + dense_rel.transfer_ms;

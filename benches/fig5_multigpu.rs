@@ -9,19 +9,18 @@ use dglke::kg::Dataset;
 use dglke::models::ModelKind;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = load_manifest_or_exit();
+    let _manifest = load_manifest_or_exit();
     println!("Fig 5: multi-GPU scaling (simulated parallel clock)");
     println!("{:>14} {:>10} {:>8} {:>14} {:>10}", "dataset", "model", "workers", "triplets/s", "speedup");
     let mut rows = Vec::new();
     for (ds_name, model) in
         [("fb15k-syn", ModelKind::TransEL2), ("freebase-syn:0.02", ModelKind::TransEL2)]
     {
-        let dataset = Dataset::load(ds_name, 0)?;
+        let dataset = std::sync::Arc::new(Dataset::load(ds_name, 0)?);
         let mut base = 0.0f64;
         for workers in [1usize, 2, 4, 8, 16] {
             let (stats, _) = timed_run(
                 &dataset,
-                &manifest,
                 model,
                 "default",
                 workers,

@@ -10,25 +10,24 @@ use dglke::kg::Dataset;
 use dglke::models::ModelKind;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = load_manifest_or_exit();
+    let _manifest = load_manifest_or_exit();
     println!("Fig 6: many-core CPU scaling");
     println!("{:>14} {:>10} {:>8} {:>14} {:>10}", "dataset", "model", "threads", "triplets/s", "speedup");
     let mut rows = Vec::new();
     for (ds_name, model) in
         [("fb15k-syn", ModelKind::TransEL2), ("fb15k-syn", ModelKind::DistMult)]
     {
-        let dataset = Dataset::load(ds_name, 0)?;
+        let dataset = std::sync::Arc::new(Dataset::load(ds_name, 0)?);
         let mut base = 0.0f64;
         for threads in [1usize, 2, 4, 8, 16, 32, 48] {
             let (stats, _) = timed_run(
                 &dataset,
-                &manifest,
                 model,
                 "default",
                 threads,
                 bench_batches(16),
                 false,
-                |cfg| cfg.sync_interval = 8, // the paper's periodic sync
+                |spec| spec.sync_interval = 8, // the paper's periodic sync
             )?;
             let tps = stats.triplets_per_sec;
             if threads == 1 {

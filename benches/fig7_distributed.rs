@@ -4,62 +4,57 @@
 //! Paper: METIS ≈3.5× faster than single machine and ~20% faster than
 //! random partitioning (communication-bound). We report real wall-clock
 //! (TCP loopback) plus the remote-traffic ledger — the quantity METIS
-//! minimizes.
+//! minimizes. Both arms run through the `api::Session`.
 
+use dglke::api::{ParallelMode, Session};
 use dglke::benchkit::*;
-use dglke::dist::{run_distributed, DistConfig, PartitionStrategy};
+use dglke::dist::PartitionStrategy;
 use dglke::kg::Dataset;
 use dglke::models::ModelKind;
-use dglke::runtime::BackendKind;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = load_manifest_or_exit();
-    let dataset = Dataset::load("freebase-syn:0.02", 0)?;
+    let _manifest = load_manifest_or_exit();
+    let dataset = Arc::new(Dataset::load("freebase-syn:0.02", 0)?);
     println!("Fig 7: distributed training on {}", dataset.summary());
     let model = ModelKind::TransEL2;
     let batches = bench_batches(16);
     let mut rows = Vec::new();
 
     // single machine baseline (8 workers, shared memory)
-    let (stats, _) = timed_run(&dataset, &manifest, model, "default", 8, batches, false, |_| {})?;
+    let (stats, _) = timed_run(&dataset, model, "default", 8, batches, false, |_| {})?;
     println!(
         "{:>22} wall {:>8.2}s  sim-parallel {:>8.2}s  remote 0 MB",
         "single-machine", stats.wall_secs, stats.sim_parallel_secs
     );
     rows.push(format!("single,{:.3},{:.3},0,1.0", stats.wall_secs, stats.sim_parallel_secs));
 
-    for (name, strategy) in
-        [("random", PartitionStrategy::Random), ("metis", PartitionStrategy::Metis)]
-    {
-        let cfg = DistConfig {
-            model,
-            backend: BackendKind::Xla,
-            artifact_tag: "default".into(),
+    for strategy in [PartitionStrategy::Random, PartitionStrategy::Metis] {
+        let mut spec = bench_spec(&dataset, model, "default", 8, batches, false);
+        spec.mode = ParallelMode::Distributed {
             machines: 4,
-            trainers_per_machine: 2,
-            servers_per_machine: 2,
+            trainers: 2,
+            servers: 2,
             partition: strategy,
             local_negatives: true,
-            batches_per_trainer: batches,
-            lr: 0.25,
-            ..Default::default()
         };
-        let (stats, mut cluster) = run_distributed(&dataset, Some(&manifest), &cfg)?;
-        cluster.shutdown();
+        let mut session = Session::with_dataset(spec, dataset.clone())?;
+        let report = session.train()?;
         println!(
             "{:>22} wall {:>8.2}s  locality {:.3}  remote {:>8.1} MB  ({} reqs)",
-            format!("4-machine {name}"),
-            stats.wall_secs,
-            stats.locality,
-            stats.remote_bytes as f64 / 1e6,
-            stats.remote_requests
+            format!("4-machine {}", strategy.name()),
+            report.wall_secs,
+            report.locality,
+            report.remote_bytes as f64 / 1e6,
+            report.remote_requests
         );
         rows.push(format!(
-            "{name},{:.3},{:.3},{:.1},{:.3}",
-            stats.wall_secs,
-            stats.wall_secs,
-            stats.remote_bytes as f64 / 1e6,
-            stats.locality
+            "{},{:.3},{:.3},{:.1},{:.3}",
+            strategy.name(),
+            report.wall_secs,
+            report.wall_secs,
+            report.remote_bytes as f64 / 1e6,
+            report.locality
         ));
     }
     write_results_csv("fig7", "config,wall_secs,sim_secs,remote_mb,locality", &rows);

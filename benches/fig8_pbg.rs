@@ -3,7 +3,8 @@
 //!
 //! The PBG baseline pays its dense-relation-weight cost (a full
 //! read-modify-write pass over the relation table per batch) and its
-//! random 2D block schedule; everything else is shared code.
+//! random 2D block schedule; everything else is shared code. The DGL-KE
+//! arm runs through the `api::Session`.
 
 use dglke::baselines::{run_pbg, PbgConfig};
 use dglke::benchkit::*;
@@ -12,18 +13,17 @@ use dglke::models::step::StepShape;
 use dglke::models::ModelKind;
 use dglke::runtime::BackendKind;
 use dglke::train::worker::ModelState;
-use dglke::train::TrainConfig;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let manifest = load_manifest_or_exit();
-    let dataset = Dataset::load("freebase-syn:0.02", 0)?;
+    let dataset = Arc::new(Dataset::load("freebase-syn:0.02", 0)?);
     println!("Fig 8: DGL-KE vs PBG-style on {}", dataset.summary());
     println!("{:>10} {:>12} {:>12} {:>10}", "model", "dglke s", "pbg s", "speedup");
     let mut rows = Vec::new();
     for model in [ModelKind::TransEL2, ModelKind::DistMult, ModelKind::ComplEx] {
         let batches = bench_batches(16);
-        let (dgl_stats, _) =
-            timed_run(&dataset, &manifest, model, "default", 2, batches, false, |_| {})?;
+        let (dgl_stats, _) = timed_run(&dataset, model, "default", 2, batches, false, |_| {})?;
 
         let art = manifest.find_train(model.name(), "logistic", "default")?;
         let pbg_cfg = PbgConfig {
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             lr: 0.25,
             ..Default::default()
         };
-        let state = ModelState::init(&dataset, model, art.dim, &TrainConfig::default());
+        let state = ModelState::init_with(&dataset, model, art.dim, 0.1, 0.37, 0);
         let pbg_stats = run_pbg(&dataset, &state, Some(&manifest), &pbg_cfg)?;
         // compare total busy work under the same clock: wall on this
         // single-core box is proportional to total compute for both

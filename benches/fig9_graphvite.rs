@@ -4,8 +4,10 @@
 //!
 //! Protocol here: identical total batch budget; report wall time AND the
 //! final filtered MRR — DGL-KE should match/beat MRR in the same or less
-//! time, while GraphVite pays episode copies and staleness.
+//! time, while GraphVite pays episode copies and staleness. The DGL-KE arm
+//! runs through the `api::Session` (eval requested in the spec).
 
+use dglke::api::{EvalProtocolSpec, EvalSpec};
 use dglke::baselines::{run_graphvite, GraphViteConfig};
 use dglke::benchkit::*;
 use dglke::eval::{evaluate, EvalConfig};
@@ -14,7 +16,7 @@ use dglke::models::step::StepShape;
 use dglke::models::ModelKind;
 use dglke::runtime::BackendKind;
 use dglke::train::worker::ModelState;
-use dglke::train::TrainConfig;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let manifest = load_manifest_or_exit();
@@ -26,27 +28,21 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let eval_cfg = EvalConfig { max_triplets: 200, n_threads: 4, ..Default::default() };
     for ds_name in ["fb15k-syn", "wn18-syn"] {
-        let dataset = Dataset::load(ds_name, 0)?;
+        let dataset = Arc::new(Dataset::load(ds_name, 0)?);
         for model in [ModelKind::TransEL2, ModelKind::DistMult] {
             let batches = bench_batches(60);
             let art = manifest.find_train(model.name(), "logistic", "default")?;
 
-            // DGL-KE
-            let cfg = TrainConfig {
-                model,
-                backend: BackendKind::Xla,
-                artifact_tag: "default".into(),
-                n_workers: 1,
-                batches_per_worker: batches,
-                lr: 0.25,
-                log_every: usize::MAX,
-                ..Default::default()
-            };
-            let state = ModelState::init(&dataset, model, art.dim, &cfg);
-            let t = std::time::Instant::now();
-            dglke::train::run_training(&dataset, &state, Some(&manifest), &cfg)?;
-            let dgl_time = t.elapsed().as_secs_f64();
-            let m = evaluate(model, &state.entities, &state.relations, &dataset, &dataset.test, &eval_cfg);
+            // DGL-KE through the session API (spec-requested eval)
+            let (report, _) = timed_run(&dataset, model, "default", 1, batches, false, |spec| {
+                spec.eval = Some(EvalSpec {
+                    protocol: EvalProtocolSpec::FullFiltered,
+                    max_triplets: 200,
+                    n_threads: 4,
+                });
+            })?;
+            let m = report.metrics.expect("eval requested in spec");
+            let dgl_time = report.wall_secs;
             println!(
                 "{ds_name:>12} {:>10} {:>10} {:>8.1} {:>10.3} {:>8.3}",
                 model.name(),
@@ -55,7 +51,12 @@ fn main() -> anyhow::Result<()> {
                 m.mrr,
                 m.hit10
             );
-            rows.push(format!("{ds_name},{},dglke,{dgl_time:.2},{:.4},{:.4}", model.name(), m.mrr, m.hit10));
+            rows.push(format!(
+                "{ds_name},{},dglke,{dgl_time:.2},{:.4},{:.4}",
+                model.name(),
+                m.mrr,
+                m.hit10
+            ));
 
             // GraphVite-style
             let gv_cfg = GraphViteConfig {
@@ -75,7 +76,7 @@ fn main() -> anyhow::Result<()> {
                 lr: 0.25,
                 ..Default::default()
             };
-            let gv_state = ModelState::init(&dataset, model, art.dim, &TrainConfig::default());
+            let gv_state = ModelState::init_with(&dataset, model, art.dim, 0.1, 0.37, 0);
             let t = std::time::Instant::now();
             run_graphvite(&dataset, &gv_state, Some(&manifest), &gv_cfg)?;
             let gv_time = t.elapsed().as_secs_f64();

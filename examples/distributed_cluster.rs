@@ -1,73 +1,61 @@
 //! Distributed training demo (paper §6.3): a 4-machine KVStore cluster
 //! (servers reachable via shared memory locally and TCP remotely),
 //! comparing METIS vs random graph partitioning on communication volume
-//! and accuracy.
+//! and accuracy — all through the typed session API.
 //!
 //!     make artifacts && cargo run --release --example distributed_cluster
 
-use dglke::dist::{run_distributed, DistConfig, PartitionStrategy};
-use dglke::eval::{evaluate, EvalConfig, EvalProtocol};
+use dglke::api::{EvalProtocolSpec, EvalSpec, ParallelMode, RunSpec, Session};
+use dglke::dist::PartitionStrategy;
 use dglke::kg::Dataset;
 use dglke::models::ModelKind;
-use dglke::runtime::{artifacts, BackendKind, Manifest};
+use dglke::runtime::{artifacts, BackendKind};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     if !artifacts::available() {
         eprintln!("run `make artifacts` first");
         return Ok(());
     }
-    let manifest = Manifest::load(&artifacts::default_dir())?;
-    let dataset = Dataset::load("freebase-syn:0.05", 3)?;
+    let dataset = Arc::new(Dataset::load("freebase-syn:0.05", 3)?);
     println!("dataset: {}", dataset.summary());
 
-    let model = ModelKind::DistMult;
     for strategy in [PartitionStrategy::Random, PartitionStrategy::Metis] {
-        let name = match strategy {
-            PartitionStrategy::Random => "random",
-            PartitionStrategy::Metis => "METIS",
-        };
-        println!("\n=== 4 machines x 2 trainers, {} partitioning ===", name);
-        let cfg = DistConfig {
-            model,
+        println!("\n=== 4 machines x 2 trainers, {} partitioning ===", strategy.name());
+        let spec = RunSpec {
+            dataset: dataset.name.clone(),
+            model: ModelKind::DistMult,
             backend: BackendKind::Xla,
-            artifact_tag: "default".into(),
-            machines: 4,
-            trainers_per_machine: 2,
-            servers_per_machine: 2,
-            partition: strategy,
-            local_negatives: true,
-            batches_per_trainer: 25,
+            mode: ParallelMode::Distributed {
+                machines: 4,
+                trainers: 2,
+                servers: 2,
+                partition: strategy,
+                local_negatives: true,
+            },
+            batches: 25,
             lr: 0.3,
+            eval: Some(EvalSpec {
+                protocol: EvalProtocolSpec::Sampled { uniform: 500, degree: 500 },
+                max_triplets: 150,
+                n_threads: 4,
+            }),
             seed: 3,
             ..Default::default()
         };
-        let (stats, mut cluster) = run_distributed(&dataset, Some(&manifest), &cfg)?;
+        let mut session = Session::with_dataset(spec, dataset.clone())?;
+        let report = session.train()?;
         println!(
             "locality {:.3} | local {:.1}MB | remote {:.1}MB over TCP ({} requests) | wall {:.1}s",
-            stats.locality,
-            stats.local_bytes as f64 / 1e6,
-            stats.remote_bytes as f64 / 1e6,
-            stats.remote_requests,
-            stats.wall_secs
+            report.locality,
+            report.local_bytes as f64 / 1e6,
+            report.remote_bytes as f64 / 1e6,
+            report.remote_requests,
+            report.wall_secs
         );
-
-        let ents = cluster.dump_entities(dataset.n_entities(), 128);
-        let rels = cluster.dump_relations(dataset.n_relations(), 128);
-        cluster.shutdown();
-        let m = evaluate(
-            model,
-            &ents,
-            &rels,
-            &dataset,
-            &dataset.test,
-            &EvalConfig {
-                protocol: EvalProtocol::Sampled { uniform: 500, degree: 500 },
-                max_triplets: 150,
-                n_threads: 4,
-                seed: 3,
-            },
-        );
-        println!("accuracy: {}", m.row());
+        if let Some(m) = &report.metrics {
+            println!("accuracy: {}", m.row());
+        }
     }
     Ok(())
 }

@@ -4,24 +4,23 @@
 //! throughput, then evaluate with the paper's sampled protocol.
 //!
 //! 100M parameters ≈ 780k entities × d=128 (+ relations). The run is
-//! recorded in EXPERIMENTS.md §End-to-end.
+//! recorded in EXPERIMENTS.md §End-to-end. The custom generated dataset is
+//! attached to a `Session` via `Session::with_dataset`.
 //!
 //!     make artifacts && cargo run --release --example freebase_e2e
 
-use dglke::eval::{evaluate, EvalConfig, EvalProtocol};
+use dglke::api::{EvalProtocolSpec, EvalSpec, ParallelMode, RunSpec, Session};
 use dglke::kg::generator::GeneratorConfig;
 use dglke::kg::Dataset;
 use dglke::models::ModelKind;
-use dglke::runtime::{artifacts, BackendKind, Manifest};
-use dglke::train::worker::ModelState;
-use dglke::train::{run_training, Hardware, TrainConfig};
+use dglke::runtime::{artifacts, BackendKind};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     if !artifacts::available() {
         eprintln!("run `make artifacts` first");
         return Ok(());
     }
-    let manifest = Manifest::load(&artifacts::default_dir())?;
 
     // Freebase-shaped synthetic graph sized for ~100M parameters at d=128.
     let steps: usize = std::env::var("E2E_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
@@ -34,66 +33,57 @@ fn main() -> anyhow::Result<()> {
     };
     println!("generating freebase-shaped KG ({} entities, {} edges)...", gen.n_entities, gen.n_edges);
     let t = std::time::Instant::now();
-    let dataset = Dataset::synthetic("freebase-e2e", &gen, 7);
+    let dataset = Arc::new(Dataset::synthetic("freebase-e2e", &gen, 7));
     println!("generated in {:.1}s: {}", t.elapsed().as_secs_f64(), dataset.summary());
 
-    let model = ModelKind::TransEL2;
     let workers = 4;
-    let cfg = TrainConfig {
-        model,
+    let spec = RunSpec {
+        dataset: dataset.name.clone(),
+        model: ModelKind::TransEL2,
         backend: BackendKind::Xla,
-        artifact_tag: "default".into(),
-        n_workers: workers,
-        batches_per_worker: steps / workers,
+        mode: ParallelMode::Single { workers, gpu: true },
+        batches: steps / workers,
         lr: 0.3,
         neg_degree_frac: 0.5,
-        hardware: Hardware::Gpu { pcie_gbps: 12.0 },
         sync_interval: 50,
         log_every: 10,
+        eval: Some(EvalSpec {
+            protocol: EvalProtocolSpec::Sampled { uniform: 1000, degree: 1000 },
+            max_triplets: 200,
+            n_threads: 4,
+        }),
         seed: 7,
         ..Default::default()
     };
-    let state = ModelState::init(&dataset, model, 128, &cfg);
+    let mut session = Session::with_dataset(spec, dataset.clone())?;
     println!(
-        "model: {} — {:.1}M parameters ({} entities x d=128 + {} relations)",
-        model.name(),
-        state.n_params() as f64 / 1e6,
+        "model: {} — {:.1}M parameters ({} entities x d={} + {} relations)",
+        session.spec().model.name(),
+        session.n_params() as f64 / 1e6,
         dataset.n_entities(),
+        session.dim(),
         dataset.n_relations()
     );
-    assert!(state.n_params() >= 100_000_000, "e2e run must exercise >=100M params");
+    assert!(session.n_params() >= 100_000_000, "e2e run must exercise >=100M params");
 
     println!("training {} steps on {} workers (async updates, rel-part, degree negatives)...", steps, workers);
-    let stats = run_training(&dataset, &state, Some(&manifest), &cfg)?;
+    let report = session.train()?;
     println!("loss curve:");
-    for (step, loss) in &stats.loss_curve {
+    for (step, loss) in &report.loss_curve {
         println!("  step {step:5}  loss {loss:.4}");
     }
     println!(
         "done: {} batches, wall {:.1}s, sim-parallel {:.1}s, {:.0} triplets/s",
-        stats.total_batches, stats.wall_secs, stats.sim_parallel_secs, stats.triplets_per_sec
+        report.total_batches, report.wall_secs, report.sim_parallel_secs, report.triplets_per_sec
     );
     println!(
         "transfers: h2d {:.0}MB, d2h {:.0}MB, overlapped {:.0}MB",
-        stats.h2d_bytes as f64 / 1e6,
-        stats.d2h_bytes as f64 / 1e6,
-        stats.overlapped_bytes as f64 / 1e6
+        report.h2d_bytes as f64 / 1e6,
+        report.d2h_bytes as f64 / 1e6,
+        report.overlapped_bytes as f64 / 1e6
     );
-
-    println!("evaluating (paper protocol 2: 1000 uniform + 1000 degree-based negatives)...");
-    let m = evaluate(
-        model,
-        &state.entities,
-        &state.relations,
-        &dataset,
-        &dataset.test,
-        &EvalConfig {
-            protocol: EvalProtocol::Sampled { uniform: 1000, degree: 1000 },
-            max_triplets: 200,
-            n_threads: 4,
-            seed: 7,
-        },
-    );
-    println!("result: {}", m.row());
+    if let Some(m) = &report.metrics {
+        println!("result (paper protocol 2: 1000 uniform + 1000 degree-based): {}", m.row());
+    }
     Ok(())
 }

@@ -5,27 +5,23 @@
 //!
 //!     make artifacts && cargo run --release --example multi_gpu_optimizations
 
-use dglke::benchkit::timed_run;
+use dglke::benchkit::{load_manifest_or_exit, timed_run};
 use dglke::kg::Dataset;
 use dglke::models::ModelKind;
-use dglke::runtime::{artifacts, Manifest};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    if !artifacts::available() {
-        eprintln!("run `make artifacts` first");
-        return Ok(());
-    }
-    let manifest = Manifest::load(&artifacts::default_dir())?;
-    let dataset = Dataset::load("fb15k-syn", 1)?;
+    let _manifest = load_manifest_or_exit();
+    let dataset = Arc::new(Dataset::load("fb15k-syn", 1)?);
     println!("dataset: {}", dataset.summary());
     let model = ModelKind::TransEL2;
 
     println!("\n1) joint vs naive negative sampling (Fig 3, 8 sim-GPUs):");
     for (name, tag, batches) in [("joint", "fig3_joint", 12usize), ("naive", "fig3_naive", 4)] {
-        let (stats, ms) = timed_run(&dataset, &manifest, model, tag, 8, batches, true, |_| {})?;
+        let (report, ms) = timed_run(&dataset, model, tag, 8, batches, true, |_| {})?;
         println!(
             "   {name:6} {ms:8.1} ms/step, {:.1} MB h2d per step",
-            stats.h2d_bytes as f64 / 1e6 / stats.total_batches as f64
+            report.h2d_bytes as f64 / 1e6 / report.total_batches as f64
         );
     }
 
@@ -33,14 +29,14 @@ fn main() -> anyhow::Result<()> {
     for (name, async_up, rel_part) in
         [("sync", false, false), ("async", true, false), ("async+rel_part", true, true)]
     {
-        let (stats, ms) = timed_run(&dataset, &manifest, model, "default", 8, 10, true, |cfg| {
-            cfg.async_update = async_up;
-            cfg.relation_partition = rel_part;
+        let (report, ms) = timed_run(&dataset, model, "default", 8, 10, true, |spec| {
+            spec.async_update = async_up;
+            spec.relation_partition = rel_part;
         })?;
         println!(
             "   {name:16} {ms:8.1} ms/step  (critical-path transfer {:.1} MB, overlapped {:.1} MB)",
-            (stats.h2d_bytes + stats.d2h_bytes) as f64 / 1e6,
-            stats.overlapped_bytes as f64 / 1e6
+            (report.h2d_bytes + report.d2h_bytes) as f64 / 1e6,
+            report.overlapped_bytes as f64 / 1e6
         );
     }
     println!("\nsee benches/fig*_*.rs for the full figure reproductions");

@@ -1,64 +1,76 @@
-//! Quickstart: train a TransE model on a small synthetic KG with the
-//! production (AOT XLA) path, then evaluate link prediction.
+//! Quickstart: train a TransE model on a small synthetic KG through the
+//! typed session API, then evaluate link prediction and export the
+//! embeddings.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Walks the full stack: dataset → sampler → gather → PJRT-compiled
-//! artifact (Pallas/JAX lowered to HLO) → sparse AdaGrad → filtered
-//! link-prediction evaluation.
+//! Walks the full stack: `RunSpec` → `Session` → dataset → sampler →
+//! gather → PJRT-compiled artifact (Pallas/JAX lowered to HLO) → sparse
+//! AdaGrad → filtered link-prediction evaluation → `Report` JSON.
+//!
+//! A native-backend variant of this run (same dataset/model/schedule, no
+//! artifacts needed) is described declaratively by
+//! `examples/specs/quickstart.json`:
+//!
+//!     dglke train --config examples/specs/quickstart.json
 
-use dglke::eval::{evaluate, EvalConfig};
-use dglke::kg::Dataset;
+use dglke::api::{EvalProtocolSpec, EvalSpec, Session};
 use dglke::models::ModelKind;
-use dglke::runtime::{artifacts, BackendKind, Manifest};
-use dglke::train::worker::ModelState;
-use dglke::train::{run_training, TrainConfig};
+use dglke::runtime::{artifacts, BackendKind};
 
 fn main() -> anyhow::Result<()> {
     if !artifacts::available() {
         eprintln!("run `make artifacts` first");
         return Ok(());
     }
-    let manifest = Manifest::load(&artifacts::default_dir())?;
 
     // a small FB15k-shaped synthetic KG (see kg::generator for why the
     // synthetic stand-in is learnable)
-    let dataset = Dataset::load("fb15k-syn", 42)?;
-    println!("dataset: {}", dataset.summary());
+    let mut session = Session::builder()
+        .dataset("fb15k-syn")
+        .model(ModelKind::TransEL2)
+        .backend(BackendKind::Xla)
+        .workers(2)
+        .batches(250) // ~1 epoch per worker
+        .lr(0.3)
+        .sync_interval(100)
+        .log_every(25)
+        .eval(EvalSpec {
+            protocol: EvalProtocolSpec::FullFiltered,
+            max_triplets: 500,
+            n_threads: 4,
+        })
+        .seed(42)
+        .build()?;
 
-    let model = ModelKind::TransEL2;
-    let cfg = TrainConfig {
-        model,
-        backend: BackendKind::Xla,
-        artifact_tag: "default".into(),
-        n_workers: 2,
-        batches_per_worker: 250, // ~1 epoch
-        lr: 0.3,
-        sync_interval: 100,
-        log_every: 25,
-        seed: 42,
-        ..Default::default()
-    };
-    let state = ModelState::init(&dataset, model, 128, &cfg);
-    println!("training {} ({:.1}M parameters)...", model.name(), state.n_params() as f64 / 1e6);
-    let stats = run_training(&dataset, &state, Some(&manifest), &cfg)?;
+    println!("dataset: {}", session.dataset().summary());
+    println!(
+        "training {} ({:.1}M parameters)...",
+        session.spec().model.name(),
+        session.n_params() as f64 / 1e6
+    );
+
+    let report = session.train()?;
     println!(
         "trained {} batches in {:.1}s ({:.0} triplets/s)",
-        stats.total_batches, stats.wall_secs, stats.triplets_per_sec
+        report.total_batches, report.wall_secs, report.triplets_per_sec
     );
-    for (step, loss) in &stats.loss_curve {
+    for (step, loss) in &report.loss_curve {
         println!("  step {step:5}  loss {loss:.4}");
     }
+    if let Some(m) = &report.metrics {
+        println!("result (filtered ranking protocol): {}", m.row());
+    }
 
-    println!("evaluating (filtered ranking protocol)...");
-    let m = evaluate(
-        model,
-        &state.entities,
-        &state.relations,
-        &dataset,
-        &dataset.test,
-        &EvalConfig { max_triplets: 300, n_threads: 4, ..Default::default() },
-    );
-    println!("result: {}", m.row());
+    // the whole run — spec, stats, metrics — as one JSON document
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/quickstart_report.json", report.to_json_string())?;
+    println!("[wrote results/quickstart_report.json]");
+
+    // export embeddings for downstream serving, and prove they round-trip
+    let ckpt = std::path::Path::new("results/quickstart_ckpt");
+    session.export_embeddings(ckpt)?;
+    session.load_checkpoint(ckpt)?;
+    println!("[exported + reloaded {}]", ckpt.display());
     Ok(())
 }

@@ -1,0 +1,29 @@
+//! The typed run API: one declarative [`RunSpec`] + one validating
+//! [`Session`] drive every mode of the system — many-core CPU, simulated
+//! multi-GPU, and distributed — replacing the per-entry-point wiring of
+//! `TrainConfig` / `DistConfig` / `EvalConfig` that the CLI, repro drivers,
+//! examples, and benches used to duplicate.
+//!
+//! * [`RunSpec`] — dataset, model, loss, backend, parallelism mode,
+//!   hyperparameters, eval protocol, seed. Serializes to/parses from JSON
+//!   (see [`spec`] for the schema); `dglke train --config run.json` and
+//!   `--dump-config` round-trip through it.
+//! * [`Session`] — `Session::from_spec(spec)?` or
+//!   `Session::builder().dataset("fb15k-syn").workers(8).build()?`;
+//!   internalizes manifest loading, shape resolution (including the
+//!   documented [`DEFAULT_NATIVE_SHAPE`] fallback), and state init.
+//! * [`Report`] — unified result (train stats + eval metrics +
+//!   traffic/locality counters), JSON-serializable, produced by one code
+//!   path for all hardware modes.
+//! * [`Session::export_embeddings`] / [`Session::load_checkpoint`] — model
+//!   persistence for downstream serving.
+
+pub mod report;
+pub mod session;
+pub mod spec;
+
+pub use report::Report;
+pub use session::{load_default_manifest, resolve_shape, ResolvedShape, Session, SessionBuilder};
+pub use spec::{
+    EvalProtocolSpec, EvalSpec, LossSpec, ParallelMode, RunSpec, DEFAULT_NATIVE_SHAPE,
+};

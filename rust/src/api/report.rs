@@ -1,0 +1,201 @@
+//! [`Report`]: the unified result of a [`crate::api::Session`] run — train
+//! stats, optional eval metrics, and traffic/locality counters — with a
+//! JSON form so benchmarks and experiment trajectories are produced by one
+//! code path regardless of hardware mode.
+
+use crate::dist::DistStats;
+use crate::eval::Metrics;
+use crate::train::TrainStats;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Unified run report. Single-machine runs leave the traffic/locality
+/// fields at zero; distributed runs leave the transfer-ledger fields at
+/// zero. `final_loss` is the mean of the last 10 logged losses.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// "single" | "distributed"
+    pub mode: String,
+    pub total_batches: u64,
+    pub wall_secs: f64,
+    /// simulated parallel wall-clock (see `TrainStats::sim_parallel_secs`);
+    /// equals `wall_secs` for distributed runs
+    pub sim_parallel_secs: f64,
+    pub triplets_per_sec: f64,
+    pub final_loss: f32,
+    pub loss_curve: Vec<(u64, f32)>,
+    /// per-phase busy seconds (single-machine runs)
+    pub phases: Vec<(String, f64)>,
+    // simulated PCIe ledger (single-machine GPU mode)
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub overlapped_bytes: u64,
+    // KVStore ledger (distributed mode)
+    pub locality: f64,
+    pub local_bytes: u64,
+    pub remote_bytes: u64,
+    pub remote_requests: u64,
+    /// eval metrics, when the spec requested evaluation
+    pub metrics: Option<Metrics>,
+    /// the spec that produced this report (provenance), in JSON form
+    pub spec: Option<Json>,
+}
+
+impl Report {
+    pub fn from_train(stats: &TrainStats) -> Report {
+        Report {
+            mode: "single".into(),
+            total_batches: stats.total_batches,
+            wall_secs: stats.wall_secs,
+            sim_parallel_secs: stats.sim_parallel_secs,
+            triplets_per_sec: stats.triplets_per_sec,
+            final_loss: stats.mean_loss_tail,
+            loss_curve: stats.loss_curve.clone(),
+            phases: stats.phases.clone(),
+            h2d_bytes: stats.h2d_bytes,
+            d2h_bytes: stats.d2h_bytes,
+            overlapped_bytes: stats.overlapped_bytes,
+            ..Default::default()
+        }
+    }
+
+    pub fn from_dist(stats: &DistStats) -> Report {
+        Report {
+            mode: "distributed".into(),
+            total_batches: stats.total_batches,
+            wall_secs: stats.wall_secs,
+            sim_parallel_secs: stats.wall_secs,
+            triplets_per_sec: stats.triplets_per_sec,
+            final_loss: stats.mean_loss_tail,
+            loss_curve: stats.loss_curve.clone(),
+            locality: stats.locality,
+            local_bytes: stats.local_bytes,
+            remote_bytes: stats.remote_bytes,
+            remote_requests: stats.remote_requests,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics = match &self.metrics {
+            None => Json::Null,
+            Some(m) => obj(vec![
+                ("hit1", Json::Num(m.hit1)),
+                ("hit3", Json::Num(m.hit3)),
+                ("hit10", Json::Num(m.hit10)),
+                ("mr", Json::Num(m.mr)),
+                ("mrr", Json::Num(m.mrr)),
+                ("n", Json::Num(m.n as f64)),
+            ]),
+        };
+        obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("total_batches", Json::Num(self.total_batches as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("sim_parallel_secs", Json::Num(self.sim_parallel_secs)),
+            ("triplets_per_sec", Json::Num(self.triplets_per_sec)),
+            ("final_loss", Json::Num(self.final_loss as f64)),
+            (
+                "loss_curve",
+                Json::Arr(
+                    self.loss_curve
+                        .iter()
+                        .map(|&(s, l)| Json::Arr(vec![Json::Num(s as f64), Json::Num(l as f64)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "phases",
+                obj(self
+                    .phases
+                    .iter()
+                    .map(|(p, s)| (p.as_str(), Json::Num(*s)))
+                    .collect()),
+            ),
+            ("h2d_bytes", Json::Num(self.h2d_bytes as f64)),
+            ("d2h_bytes", Json::Num(self.d2h_bytes as f64)),
+            ("overlapped_bytes", Json::Num(self.overlapped_bytes as f64)),
+            ("locality", Json::Num(self.locality)),
+            ("local_bytes", Json::Num(self.local_bytes as f64)),
+            ("remote_bytes", Json::Num(self.remote_bytes as f64)),
+            ("remote_requests", Json::Num(self.remote_requests as f64)),
+            ("metrics", metrics),
+            ("spec", self.spec.clone().unwrap_or(Json::Null)),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Human-readable multi-line summary (what the CLI prints).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "done: {} batches, wall {:.1}s, sim-parallel {:.1}s, {:.0} triplets/s, final loss {:.4}",
+            self.total_batches,
+            self.wall_secs,
+            self.sim_parallel_secs,
+            self.triplets_per_sec,
+            self.final_loss
+        );
+        for (p, secs) in &self.phases {
+            s.push_str(&format!("\n  phase {p}: {secs:.2}s"));
+        }
+        if self.h2d_bytes + self.d2h_bytes + self.overlapped_bytes > 0 {
+            s.push_str(&format!(
+                "\n  transfers: h2d {:.1}MB d2h {:.1}MB overlapped {:.1}MB",
+                self.h2d_bytes as f64 / 1e6,
+                self.d2h_bytes as f64 / 1e6,
+                self.overlapped_bytes as f64 / 1e6
+            ));
+        }
+        if self.mode == "distributed" {
+            s.push_str(&format!(
+                "\n  locality {:.3}; traffic local {:.1}MB remote {:.1}MB ({} remote reqs)",
+                self.locality,
+                self.local_bytes as f64 / 1e6,
+                self.remote_bytes as f64 / 1e6,
+                self.remote_requests
+            ));
+        }
+        if let Some(m) = &self.metrics {
+            s.push_str(&format!("\n  eval ({} ranks, both sides): {}", m.n, m.row()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_serializes_and_parses() {
+        let mut r = Report::from_train(&TrainStats {
+            wall_secs: 1.5,
+            sim_parallel_secs: 0.7,
+            total_batches: 60,
+            triplets_per_sec: 1234.0,
+            mean_loss_tail: 0.25,
+            loss_curve: vec![(0, 0.9), (50, 0.3)],
+            phases: vec![("compute".into(), 0.4)],
+            ..Default::default()
+        });
+        r.metrics = Some(Metrics { hit10: 0.5, mrr: 0.25, n: 10, ..Default::default() });
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(j.get("total_batches").unwrap().as_usize(), Some(60));
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("single"));
+        assert_eq!(j.get("metrics").unwrap().get("n").unwrap().as_usize(), Some(10));
+        let curve = j.get("loss_curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 2);
+        assert!(r.summary().contains("60 batches"));
+    }
+}

@@ -1,0 +1,512 @@
+//! [`Session`]: a validated, ready-to-run training/evaluation session built
+//! from a [`RunSpec`]. Internalizes everything the entry points used to
+//! hand-wire: manifest loading, step-shape resolution, model-state init,
+//! mode dispatch (single-machine vs distributed), post-train evaluation,
+//! and embedding export/import.
+
+use super::report::Report;
+use super::spec::{ParallelMode, RunSpec, DEFAULT_NATIVE_SHAPE};
+use crate::dist::{run_distributed, DistConfig};
+use crate::eval::{evaluate, Metrics};
+use crate::kg::Dataset;
+use crate::models::step::StepShape;
+use crate::runtime::{artifacts, BackendKind, Manifest};
+use crate::train::worker::ModelState;
+use crate::train::{run_training, Hardware, TrainConfig};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Load the default artifact manifest if artifacts have been built.
+pub fn load_default_manifest() -> Result<Option<Manifest>> {
+    if artifacts::available() {
+        Ok(Some(Manifest::load(&artifacts::default_dir())?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// The step shape a spec resolves to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResolvedShape {
+    /// the shape every train step will actually use
+    pub step: StepShape,
+    /// explicit shape to hand the native backend (`None` when a compiled
+    /// XLA artifact owns the shape)
+    pub native_override: Option<StepShape>,
+}
+
+/// Resolve the step shape for a spec: the spec's own shape wins (native
+/// backend); otherwise the artifact manifest; otherwise — native backend
+/// only — the documented [`DEFAULT_NATIVE_SHAPE`], with a log line (the old
+/// CLI buried this fallback as an unlogged literal).
+pub fn resolve_shape(manifest: Option<&Manifest>, spec: &RunSpec) -> Result<ResolvedShape> {
+    let loss_name = spec.loss.to_cfg().kind.name();
+    let art =
+        manifest.and_then(|m| m.find_train(spec.model.name(), loss_name, &spec.artifact_tag).ok());
+    match spec.backend {
+        BackendKind::Native => {
+            if let Some(s) = spec.shape {
+                return Ok(ResolvedShape { step: s, native_override: Some(s) });
+            }
+            match art {
+                Some(a) => {
+                    let s =
+                        StepShape { batch: a.batch, chunks: a.chunks, neg_k: a.neg_k, dim: a.dim };
+                    Ok(ResolvedShape { step: s, native_override: Some(s) })
+                }
+                None => {
+                    let s = DEFAULT_NATIVE_SHAPE;
+                    // log the fallback once per process, not once per
+                    // session (repro tables build many sessions)
+                    static LOGGED: std::sync::Once = std::sync::Once::new();
+                    LOGGED.call_once(|| {
+                        println!(
+                            "[spec] no artifacts built — native runs without an explicit shape \
+                             use the default batch={} chunks={} neg_k={} dim={} \
+                             (set RunSpec.shape to override)",
+                            s.batch, s.chunks, s.neg_k, s.dim
+                        );
+                    });
+                    Ok(ResolvedShape { step: s, native_override: Some(s) })
+                }
+            }
+        }
+        BackendKind::Xla => match art {
+            // compiled artifacts carry their own shape; the spec's shape
+            // field is not consulted
+            Some(a) => Ok(ResolvedShape {
+                step: StepShape { batch: a.batch, chunks: a.chunks, neg_k: a.neg_k, dim: a.dim },
+                native_override: None,
+            }),
+            None => bail!(
+                "no artifacts for model {} tag {} — run `make artifacts` or use the native backend",
+                spec.model.name(),
+                spec.artifact_tag
+            ),
+        },
+    }
+}
+
+/// A validated run: dataset loaded, shapes resolved, model state
+/// initialized. Construct with [`Session::from_spec`] or
+/// [`Session::builder`], then call [`Session::train`] /
+/// [`Session::evaluate`] / [`Session::export_embeddings`].
+pub struct Session {
+    spec: RunSpec,
+    dataset: Arc<Dataset>,
+    manifest: Option<Manifest>,
+    shape: ResolvedShape,
+    state: ModelState,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Build a session from a spec: validates the spec, loads the dataset
+    /// (erroring on unknown presets/directories), loads the artifact
+    /// manifest when present, resolves the step shape, and initializes the
+    /// embedding tables.
+    pub fn from_spec(spec: RunSpec) -> Result<Session> {
+        spec.validate()?;
+        let dataset = Arc::new(
+            Dataset::load(&spec.dataset, spec.seed)
+                .with_context(|| format!("loading dataset {:?}", spec.dataset))?,
+        );
+        Self::with_dataset(spec, dataset)
+    }
+
+    /// Like [`Session::from_spec`] but reusing an already-loaded dataset
+    /// (synthetic datasets are expensive to regenerate; benches share one
+    /// `Arc<Dataset>` across many sessions).
+    pub fn with_dataset(spec: RunSpec, dataset: Arc<Dataset>) -> Result<Session> {
+        spec.validate()?;
+        let manifest = load_default_manifest()?;
+        let shape = resolve_shape(manifest.as_ref(), &spec)?;
+        let dim = shape.step.dim;
+        anyhow::ensure!(
+            spec.model.validate_dim(dim),
+            "model {} requires an even dim, got {}",
+            spec.model.name(),
+            dim
+        );
+        let state = match spec.mode {
+            // distributed runs initialize per-shard on the KVStore servers
+            // (id-derived RNG) and dump into this state after training, so
+            // the random init here would be dead work
+            ParallelMode::Distributed { .. } => {
+                ModelState::placeholder(&dataset, spec.model, dim, spec.lr)
+            }
+            ParallelMode::Single { .. } => {
+                ModelState::init_with(&dataset, spec.model, dim, spec.lr, spec.init_scale, spec.seed)
+            }
+        };
+        Ok(Session { spec, dataset, manifest, shape, state })
+    }
+
+    pub fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    pub fn dim(&self) -> usize {
+        self.shape.step.dim
+    }
+
+    /// The step shape every mini-batch will use.
+    pub fn step_shape(&self) -> StepShape {
+        self.shape.step
+    }
+
+    /// Mini-batch size of one step under the resolved shape.
+    pub fn batch_size(&self) -> usize {
+        self.shape.step.batch
+    }
+
+    /// Number of model parameters.
+    pub fn n_params(&self) -> usize {
+        self.state.n_params()
+    }
+
+    fn train_config(&self, workers: usize, gpu: bool) -> TrainConfig {
+        TrainConfig {
+            model: self.spec.model,
+            loss: self.spec.loss.to_cfg(),
+            backend: self.spec.backend,
+            artifact_tag: self.spec.artifact_tag.clone(),
+            shape: self.shape.native_override,
+            n_workers: workers,
+            batches_per_worker: self.spec.batches,
+            lr: self.spec.lr,
+            init_scale: self.spec.init_scale,
+            neg_degree_frac: self.spec.neg_degree_frac,
+            async_update: self.spec.async_update,
+            relation_partition: self.spec.relation_partition,
+            sync_interval: self.spec.sync_interval,
+            hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
+            seed: self.spec.seed,
+            log_every: self.spec.log_every,
+        }
+    }
+
+    /// Run training under the spec's parallelism mode; when the spec
+    /// requests evaluation, it is run afterwards and embedded in the
+    /// [`Report`]. Trained embeddings are left in the session state (for
+    /// distributed runs they are dumped out of the KVStore cluster), so
+    /// [`Session::evaluate`] and [`Session::export_embeddings`] see them.
+    pub fn train(&mut self) -> Result<Report> {
+        let mut report = match self.spec.mode {
+            ParallelMode::Single { workers, gpu } => {
+                let cfg = self.train_config(workers, gpu);
+                let stats = run_training(&self.dataset, &self.state, self.manifest.as_ref(), &cfg)?;
+                Report::from_train(&stats)
+            }
+            ParallelMode::Distributed { machines, trainers, servers, partition, local_negatives } => {
+                let cfg = DistConfig {
+                    model: self.spec.model,
+                    loss: self.spec.loss.to_cfg(),
+                    backend: self.spec.backend,
+                    artifact_tag: self.spec.artifact_tag.clone(),
+                    shape: self.shape.native_override,
+                    machines,
+                    trainers_per_machine: trainers,
+                    servers_per_machine: servers,
+                    partition,
+                    local_negatives,
+                    batches_per_trainer: self.spec.batches,
+                    lr: self.spec.lr,
+                    init_scale: self.spec.init_scale,
+                    neg_degree_frac: self.spec.neg_degree_frac,
+                    seed: self.spec.seed,
+                    log_every: self.spec.log_every,
+                };
+                let (stats, mut cluster) =
+                    run_distributed(&self.dataset, self.manifest.as_ref(), &cfg)?;
+                // materialize the trained embeddings into the session state
+                let ents = cluster.dump_entities(self.dataset.n_entities(), self.dim());
+                let rels = cluster.dump_relations(self.dataset.n_relations(), self.state.rel_dim);
+                cluster.shutdown();
+                self.state.entities = Arc::new(ents);
+                self.state.relations = Arc::new(rels);
+                Report::from_dist(&stats)
+            }
+        };
+        if self.spec.eval.is_some() {
+            report.metrics = Some(self.evaluate()?);
+        }
+        report.spec = Some(self.spec.to_json());
+        Ok(report)
+    }
+
+    /// Evaluate link prediction of the current embeddings on the test
+    /// split, under the spec's eval protocol (or the default protocol when
+    /// the spec has none). Note: a distributed session holds placeholder
+    /// (zero) embeddings until [`Session::train`] dumps the cluster state.
+    pub fn evaluate(&self) -> Result<Metrics> {
+        let eval_spec = self.spec.eval.clone().unwrap_or_default();
+        Ok(evaluate(
+            self.spec.model,
+            &self.state.entities,
+            &self.state.relations,
+            &self.dataset,
+            &self.dataset.test,
+            &eval_spec.to_cfg(self.spec.seed),
+        ))
+    }
+
+    /// Export the embedding tables to `dir` as a checkpoint:
+    /// `checkpoint.json` (metadata) + `entities.f32` / `relations.f32`
+    /// (length-prefixed little-endian f32 rows).
+    pub fn export_embeddings(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let meta = {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("version".to_string(), Json::Num(1.0));
+            m.insert("dataset".to_string(), Json::Str(self.spec.dataset.clone()));
+            m.insert("model".to_string(), Json::Str(self.spec.model.name().to_string()));
+            m.insert("dim".to_string(), Json::Num(self.dim() as f64));
+            m.insert("rel_dim".to_string(), Json::Num(self.state.rel_dim as f64));
+            m.insert("n_entities".to_string(), Json::Num(self.dataset.n_entities() as f64));
+            m.insert("n_relations".to_string(), Json::Num(self.dataset.n_relations() as f64));
+            m.insert("seed".to_string(), Json::Num(self.spec.seed as f64));
+            Json::Obj(m)
+        };
+        std::fs::write(dir.join("checkpoint.json"), meta.to_string())?;
+        for (file, table) in
+            [("entities.f32", &self.state.entities), ("relations.f32", &self.state.relations)]
+        {
+            let snap = table.snapshot();
+            let mut w = Writer::with_capacity(snap.len() * 4 + 8);
+            w.f32_slice(&snap);
+            std::fs::write(dir.join(file), &w.buf)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint previously written by [`Session::export_embeddings`]
+    /// into this session's embedding tables. The checkpoint must match the
+    /// session's model, dims, and table sizes. Optimizer state is reset.
+    pub fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        let meta_path = dir.join("checkpoint.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let meta = Json::parse(&text).map_err(|e| anyhow!("bad checkpoint.json: {e}"))?;
+        let meta_usize = |k: &str| -> Result<usize> {
+            meta.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("checkpoint missing {k}"))
+        };
+        let model = meta.get("model").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(
+            model == self.spec.model.name(),
+            "checkpoint model {model:?} does not match session model {:?}",
+            self.spec.model.name()
+        );
+        anyhow::ensure!(meta_usize("dim")? == self.dim(), "checkpoint dim mismatch");
+        anyhow::ensure!(
+            meta_usize("rel_dim")? == self.state.rel_dim,
+            "checkpoint rel_dim mismatch"
+        );
+        anyhow::ensure!(
+            meta_usize("n_entities")? == self.dataset.n_entities(),
+            "checkpoint has {} entities, dataset has {}",
+            meta_usize("n_entities")?,
+            self.dataset.n_entities()
+        );
+        anyhow::ensure!(
+            meta_usize("n_relations")? == self.dataset.n_relations(),
+            "checkpoint relation count mismatch"
+        );
+        for (file, table) in
+            [("entities.f32", &self.state.entities), ("relations.f32", &self.state.relations)]
+        {
+            let path = dir.join(file);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rows = Reader::new(&bytes)
+                .f32_vec()
+                .with_context(|| format!("decoding {}", path.display()))?;
+            anyhow::ensure!(
+                rows.len() == table.rows() * table.dim(),
+                "{file}: expected {} values, found {}",
+                table.rows() * table.dim(),
+                rows.len()
+            );
+            for i in 0..table.rows() {
+                table.set_row(i, &rows[i * table.dim()..(i + 1) * table.dim()]);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fluent construction of a [`RunSpec`] + [`Session`].
+///
+/// ```no_run
+/// # use dglke::api::Session;
+/// # use dglke::models::ModelKind;
+/// # fn main() -> anyhow::Result<()> {
+/// let mut session = Session::builder()
+///     .dataset("fb15k-syn")
+///     .model(ModelKind::RotatE)
+///     .workers(8)
+///     .batches(250)
+///     .build()?;
+/// let report = session.train()?;
+/// println!("{}", report.summary());
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Default, Clone, Debug)]
+pub struct SessionBuilder {
+    spec: RunSpec,
+}
+
+impl SessionBuilder {
+    pub fn dataset(mut self, name: impl Into<String>) -> Self {
+        self.spec.dataset = name.into();
+        self
+    }
+
+    pub fn model(mut self, model: crate::models::ModelKind) -> Self {
+        self.spec.model = model;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.spec.backend = backend;
+        self
+    }
+
+    pub fn artifact_tag(mut self, tag: impl Into<String>) -> Self {
+        self.spec.artifact_tag = tag.into();
+        self
+    }
+
+    /// Single-machine mode with `workers` trainer threads (CPU).
+    pub fn workers(mut self, workers: usize) -> Self {
+        let gpu = matches!(self.spec.mode, ParallelMode::Single { gpu: true, .. });
+        self.spec.mode = ParallelMode::Single { workers, gpu };
+        self
+    }
+
+    /// Single-machine mode with simulated GPUs (PCIe transfer accounting).
+    pub fn gpu(mut self, gpu: bool) -> Self {
+        let workers = match self.spec.mode {
+            ParallelMode::Single { workers, .. } => workers,
+            _ => 1,
+        };
+        self.spec.mode = ParallelMode::Single { workers, gpu };
+        self
+    }
+
+    /// Distributed mode over the KVStore cluster.
+    pub fn distributed(mut self, machines: usize, trainers: usize, servers: usize) -> Self {
+        self.spec.mode = ParallelMode::Distributed {
+            machines,
+            trainers,
+            servers,
+            partition: crate::dist::PartitionStrategy::Metis,
+            local_negatives: true,
+        };
+        self
+    }
+
+    pub fn partition(mut self, strategy: crate::dist::PartitionStrategy) -> Self {
+        if let ParallelMode::Distributed { ref mut partition, .. } = self.spec.mode {
+            *partition = strategy;
+        }
+        self
+    }
+
+    pub fn local_negatives(mut self, on: bool) -> Self {
+        if let ParallelMode::Distributed { ref mut local_negatives, .. } = self.spec.mode {
+            *local_negatives = on;
+        }
+        self
+    }
+
+    pub fn batches(mut self, batches: usize) -> Self {
+        self.spec.batches = batches;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.spec.lr = lr;
+        self
+    }
+
+    pub fn init_scale(mut self, s: f32) -> Self {
+        self.spec.init_scale = s;
+        self
+    }
+
+    pub fn margin(mut self, margin: f32) -> Self {
+        self.spec.loss.margin = Some(margin);
+        self
+    }
+
+    pub fn adv_temp(mut self, t: f32) -> Self {
+        self.spec.loss.adv_temp = Some(t);
+        self
+    }
+
+    pub fn neg_degree_frac(mut self, f: f64) -> Self {
+        self.spec.neg_degree_frac = f;
+        self
+    }
+
+    pub fn async_update(mut self, on: bool) -> Self {
+        self.spec.async_update = on;
+        self
+    }
+
+    pub fn relation_partition(mut self, on: bool) -> Self {
+        self.spec.relation_partition = on;
+        self
+    }
+
+    pub fn sync_interval(mut self, n: usize) -> Self {
+        self.spec.sync_interval = n;
+        self
+    }
+
+    pub fn log_every(mut self, n: usize) -> Self {
+        self.spec.log_every = n;
+        self
+    }
+
+    pub fn shape(mut self, shape: StepShape) -> Self {
+        self.spec.shape = Some(shape);
+        self
+    }
+
+    pub fn eval(mut self, eval: super::spec::EvalSpec) -> Self {
+        self.spec.eval = Some(eval);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// The spec assembled so far (e.g. to serialize instead of running).
+    pub fn into_spec(self) -> RunSpec {
+        self.spec
+    }
+
+    pub fn build(self) -> Result<Session> {
+        Session::from_spec(self.spec)
+    }
+}

@@ -1,0 +1,577 @@
+//! [`RunSpec`]: the single declarative, JSON-serializable description of a
+//! training/evaluation run, shared by the CLI, the repro drivers, the
+//! examples, and the benches.
+//!
+//! # JSON schema
+//!
+//! ```json
+//! {
+//!   "dataset": "fb15k-syn",                  // preset name or TSV directory
+//!   "model": "transe_l2",                    // Table-1 model name
+//!   "loss": {"kind": "logistic"},            // or {"kind": "margin", "margin": 1.5}
+//!                                            // optional "adv_temp": 1.0
+//!   "backend": "native",                     // "native" | "xla"
+//!   "artifact_tag": "default",               // AOT shape family
+//!   "mode": {"kind": "single",               // one machine, N workers
+//!            "workers": 2, "gpu": false},
+//!        // or {"kind": "distributed", "machines": 4, "trainers": 2,
+//!        //     "servers": 2, "partition": "metis", "local_negatives": true}
+//!   "batches": 200,                          // per worker / per trainer
+//!   "lr": 0.25,
+//!   "init_scale": 0.37,
+//!   "neg_degree_frac": 0.0,                  // §3.3 degree-based negatives
+//!   "async_update": true,                    // §3.5 (single-machine only)
+//!   "relation_partition": true,              // §3.4 (single-machine only)
+//!   "sync_interval": 500,                    // §3.6 barrier period
+//!   "log_every": 50,
+//!   "shape": null,                           // or {"batch":256,"chunks":8,
+//!                                            //     "neg_k":64,"dim":64}
+//!   "eval": null,                            // or {"protocol":"full_filtered",
+//!                                            //     "max_triplets":500,"n_threads":4}
+//!                                            // or {"protocol":"sampled",
+//!                                            //     "uniform":1000,"degree":1000,...}
+//!   "seed": 0
+//! }
+//! ```
+//!
+//! Every field has a default; a spec file only needs the fields it changes.
+//! `RunSpec::from_json` round-trips `RunSpec::to_json` exactly.
+
+use crate::dist::PartitionStrategy;
+use crate::models::step::StepShape;
+use crate::models::{LossCfg, LossKind, ModelKind};
+use crate::runtime::BackendKind;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// The silent `resolve_shape` fallback of the old CLI, promoted to an
+/// explicit, documented default: the step shape used by the native backend
+/// when neither the spec nor the artifact manifest provides one.
+pub const DEFAULT_NATIVE_SHAPE: StepShape =
+    StepShape { batch: 256, chunks: 8, neg_k: 64, dim: 64 };
+
+/// Loss configuration in spec form (margin implies the hinge loss).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct LossSpec {
+    /// `Some(γ)` selects the pairwise hinge loss; `None` the logistic loss.
+    pub margin: Option<f32>,
+    /// self-adversarial temperature α (RotatE-style)
+    pub adv_temp: Option<f32>,
+}
+
+impl LossSpec {
+    pub fn to_cfg(&self) -> LossCfg {
+        LossCfg {
+            kind: self.margin.map(LossKind::Margin).unwrap_or(LossKind::Logistic),
+            adv_temp: self.adv_temp,
+        }
+    }
+}
+
+/// Hardware/parallelism mode of a run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParallelMode {
+    /// One machine: `workers` trainer threads over shared memory, optionally
+    /// billing a simulated PCIe link per worker (`gpu`).
+    Single { workers: usize, gpu: bool },
+    /// `machines × trainers` trainer threads over the KVStore cluster.
+    Distributed {
+        machines: usize,
+        trainers: usize,
+        servers: usize,
+        partition: PartitionStrategy,
+        local_negatives: bool,
+    },
+}
+
+impl Default for ParallelMode {
+    fn default() -> Self {
+        ParallelMode::Single { workers: 1, gpu: false }
+    }
+}
+
+/// Evaluation protocol in spec form.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EvalProtocolSpec {
+    /// rank against all corrupted candidates, filtered (paper protocol 1)
+    FullFiltered,
+    /// rank against sampled negatives, unfiltered (paper protocol 2)
+    Sampled { uniform: usize, degree: usize },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalSpec {
+    pub protocol: EvalProtocolSpec,
+    /// evaluate at most this many test triplets (0 = all)
+    pub max_triplets: usize,
+    pub n_threads: usize,
+}
+
+impl Default for EvalSpec {
+    fn default() -> Self {
+        EvalSpec { protocol: EvalProtocolSpec::FullFiltered, max_triplets: 500, n_threads: 4 }
+    }
+}
+
+impl EvalSpec {
+    pub fn to_cfg(&self, seed: u64) -> crate::eval::EvalConfig {
+        crate::eval::EvalConfig {
+            protocol: match self.protocol {
+                EvalProtocolSpec::FullFiltered => crate::eval::EvalProtocol::FullFiltered,
+                EvalProtocolSpec::Sampled { uniform, degree } => {
+                    crate::eval::EvalProtocol::Sampled { uniform, degree }
+                }
+            },
+            max_triplets: self.max_triplets,
+            n_threads: self.n_threads,
+            seed,
+        }
+    }
+}
+
+/// A complete, declarative description of one run. See the module docs for
+/// the JSON schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub dataset: String,
+    pub model: ModelKind,
+    pub loss: LossSpec,
+    pub backend: BackendKind,
+    pub artifact_tag: String,
+    pub mode: ParallelMode,
+    /// batches per worker (single) / per trainer (distributed)
+    pub batches: usize,
+    pub lr: f32,
+    pub init_scale: f32,
+    pub neg_degree_frac: f64,
+    pub async_update: bool,
+    pub relation_partition: bool,
+    pub sync_interval: usize,
+    pub log_every: usize,
+    /// explicit step shape; `None` = resolve from artifacts, falling back to
+    /// [`DEFAULT_NATIVE_SHAPE`] on the native backend
+    pub shape: Option<StepShape>,
+    /// evaluation to run after training (`None` = skip)
+    pub eval: Option<EvalSpec>,
+    /// limited to 2^53 so the JSON round-trip (f64 numbers) is exact;
+    /// `validate()` rejects larger seeds
+    pub seed: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            dataset: "fb15k-syn".into(),
+            model: ModelKind::TransEL2,
+            loss: LossSpec::default(),
+            backend: BackendKind::Native,
+            artifact_tag: "default".into(),
+            mode: ParallelMode::default(),
+            batches: 200,
+            lr: 0.3,
+            init_scale: 0.37,
+            neg_degree_frac: 0.0,
+            async_update: true,
+            relation_partition: true,
+            sync_interval: 500,
+            log_every: 50,
+            shape: None,
+            eval: None,
+            seed: 0,
+        }
+    }
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn shape_to_json(s: &StepShape) -> Json {
+    obj(vec![
+        ("batch", Json::Num(s.batch as f64)),
+        ("chunks", Json::Num(s.chunks as f64)),
+        ("neg_k", Json::Num(s.neg_k as f64)),
+        ("dim", Json::Num(s.dim as f64)),
+    ])
+}
+
+fn opt_num(j: &Json, key: &str) -> Option<f64> {
+    match j.get(key) {
+        Some(Json::Null) | None => None,
+        Some(v) => v.as_f64(),
+    }
+}
+
+fn req_usize(j: &Json, key: &str, what: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{what}: missing or non-numeric field {key:?}"))
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| anyhow!("field {key:?} must be a number")),
+    }
+}
+
+fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("field {key:?} must be a number")),
+    }
+}
+
+fn get_bool(j: &Json, key: &str, default: bool) -> Result<bool> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => bail!("field {key:?} must be a boolean"),
+    }
+}
+
+fn get_str(j: &Json, key: &str, default: &str) -> Result<String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => bail!("field {key:?} must be a string"),
+    }
+}
+
+impl RunSpec {
+    /// Serialize to the documented JSON form. `from_json` inverts this
+    /// exactly (`parse(to_json(s)) == s`).
+    pub fn to_json(&self) -> Json {
+        let loss = {
+            let mut entries = vec![(
+                "kind",
+                Json::Str(if self.loss.margin.is_some() { "margin" } else { "logistic" }.into()),
+            )];
+            if let Some(m) = self.loss.margin {
+                entries.push(("margin", Json::Num(m as f64)));
+            }
+            if let Some(a) = self.loss.adv_temp {
+                entries.push(("adv_temp", Json::Num(a as f64)));
+            }
+            obj(entries)
+        };
+        let mode = match &self.mode {
+            ParallelMode::Single { workers, gpu } => obj(vec![
+                ("kind", Json::Str("single".into())),
+                ("workers", Json::Num(*workers as f64)),
+                ("gpu", Json::Bool(*gpu)),
+            ]),
+            ParallelMode::Distributed { machines, trainers, servers, partition, local_negatives } => {
+                obj(vec![
+                    ("kind", Json::Str("distributed".into())),
+                    ("machines", Json::Num(*machines as f64)),
+                    ("trainers", Json::Num(*trainers as f64)),
+                    ("servers", Json::Num(*servers as f64)),
+                    ("partition", Json::Str(partition.name().into())),
+                    ("local_negatives", Json::Bool(*local_negatives)),
+                ])
+            }
+        };
+        let eval = match &self.eval {
+            None => Json::Null,
+            Some(e) => {
+                let mut entries = match e.protocol {
+                    EvalProtocolSpec::FullFiltered => {
+                        vec![("protocol", Json::Str("full_filtered".into()))]
+                    }
+                    EvalProtocolSpec::Sampled { uniform, degree } => vec![
+                        ("protocol", Json::Str("sampled".into())),
+                        ("uniform", Json::Num(uniform as f64)),
+                        ("degree", Json::Num(degree as f64)),
+                    ],
+                };
+                entries.push(("max_triplets", Json::Num(e.max_triplets as f64)));
+                entries.push(("n_threads", Json::Num(e.n_threads as f64)));
+                obj(entries)
+            }
+        };
+        obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("model", Json::Str(self.model.name().into())),
+            ("loss", loss),
+            (
+                "backend",
+                Json::Str(match self.backend {
+                    BackendKind::Xla => "xla".into(),
+                    BackendKind::Native => "native".into(),
+                }),
+            ),
+            ("artifact_tag", Json::Str(self.artifact_tag.clone())),
+            ("mode", mode),
+            ("batches", Json::Num(self.batches as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("init_scale", Json::Num(self.init_scale as f64)),
+            ("neg_degree_frac", Json::Num(self.neg_degree_frac)),
+            ("async_update", Json::Bool(self.async_update)),
+            ("relation_partition", Json::Bool(self.relation_partition)),
+            ("sync_interval", Json::Num(self.sync_interval as f64)),
+            ("log_every", Json::Num(self.log_every as f64)),
+            ("shape", self.shape.as_ref().map(shape_to_json).unwrap_or(Json::Null)),
+            ("eval", eval),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse the documented JSON form. Missing fields take their
+    /// [`RunSpec::default`] values; unknown enum values are errors.
+    pub fn from_json(j: &Json) -> Result<RunSpec> {
+        let d = RunSpec::default();
+        let model_name = get_str(j, "model", d.model.name())?;
+        let model = ModelKind::parse(&model_name)
+            .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+        let backend_name = get_str(j, "backend", "native")?;
+        let backend = BackendKind::parse(&backend_name)
+            .ok_or_else(|| anyhow!("unknown backend {backend_name:?}"))?;
+
+        let loss = match j.get("loss") {
+            None | Some(Json::Null) => LossSpec::default(),
+            Some(l) => {
+                let margin = opt_num(l, "margin").map(|v| v as f32);
+                let adv_temp = opt_num(l, "adv_temp").map(|v| v as f32);
+                // a bare "margin" implies the hinge loss, matching LossSpec
+                let default_kind = if margin.is_some() { "margin" } else { "logistic" };
+                let kind = get_str(l, "kind", default_kind)?;
+                match kind.as_str() {
+                    "logistic" => {
+                        anyhow::ensure!(
+                            margin.is_none(),
+                            "loss.margin is set but loss.kind is \"logistic\" — \
+                             use kind \"margin\" or drop the margin field"
+                        );
+                        LossSpec { margin: None, adv_temp }
+                    }
+                    "margin" => LossSpec { margin: Some(margin.unwrap_or(1.0)), adv_temp },
+                    other => bail!("unknown loss kind {other:?}"),
+                }
+            }
+        };
+
+        let mode = match j.get("mode") {
+            None | Some(Json::Null) => ParallelMode::default(),
+            Some(m) => match get_str(m, "kind", "single")?.as_str() {
+                "single" => ParallelMode::Single {
+                    workers: get_usize(m, "workers", 1)?,
+                    gpu: get_bool(m, "gpu", false)?,
+                },
+                "distributed" => {
+                    let part_name = get_str(m, "partition", "metis")?;
+                    ParallelMode::Distributed {
+                        machines: get_usize(m, "machines", 4)?,
+                        trainers: get_usize(m, "trainers", 2)?,
+                        servers: get_usize(m, "servers", 2)?,
+                        partition: PartitionStrategy::parse(&part_name)
+                            .ok_or_else(|| anyhow!("unknown partition {part_name:?}"))?,
+                        local_negatives: get_bool(m, "local_negatives", true)?,
+                    }
+                }
+                other => bail!("unknown mode kind {other:?}"),
+            },
+        };
+
+        let shape = match j.get("shape") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(StepShape {
+                batch: req_usize(s, "batch", "shape")?,
+                chunks: req_usize(s, "chunks", "shape")?,
+                neg_k: req_usize(s, "neg_k", "shape")?,
+                dim: req_usize(s, "dim", "shape")?,
+            }),
+        };
+
+        let eval = match j.get("eval") {
+            None | Some(Json::Null) => None,
+            Some(e) => {
+                let protocol = match get_str(e, "protocol", "full_filtered")?.as_str() {
+                    "full_filtered" => EvalProtocolSpec::FullFiltered,
+                    "sampled" => EvalProtocolSpec::Sampled {
+                        uniform: get_usize(e, "uniform", 1000)?,
+                        degree: get_usize(e, "degree", 1000)?,
+                    },
+                    other => bail!("unknown eval protocol {other:?}"),
+                };
+                Some(EvalSpec {
+                    protocol,
+                    max_triplets: get_usize(e, "max_triplets", 500)?,
+                    n_threads: get_usize(e, "n_threads", 4)?,
+                })
+            }
+        };
+
+        Ok(RunSpec {
+            dataset: get_str(j, "dataset", &d.dataset)?,
+            model,
+            loss,
+            backend,
+            artifact_tag: get_str(j, "artifact_tag", &d.artifact_tag)?,
+            mode,
+            batches: get_usize(j, "batches", d.batches)?,
+            lr: get_f64(j, "lr", d.lr as f64)? as f32,
+            init_scale: get_f64(j, "init_scale", d.init_scale as f64)? as f32,
+            neg_degree_frac: get_f64(j, "neg_degree_frac", d.neg_degree_frac)?,
+            async_update: get_bool(j, "async_update", d.async_update)?,
+            relation_partition: get_bool(j, "relation_partition", d.relation_partition)?,
+            sync_interval: get_usize(j, "sync_interval", d.sync_interval)?,
+            log_every: get_usize(j, "log_every", d.log_every)?,
+            shape,
+            eval,
+            seed: get_usize(j, "seed", d.seed as usize)? as u64,
+        })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<RunSpec> {
+        let j = Json::parse(s).map_err(|e| anyhow!("spec is not valid JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Structural validation (cheap; no dataset/artifact access).
+    pub fn validate(&self) -> Result<()> {
+        match &self.mode {
+            ParallelMode::Single { workers, .. } => {
+                anyhow::ensure!(*workers >= 1, "mode.workers must be >= 1");
+            }
+            ParallelMode::Distributed { machines, trainers, servers, .. } => {
+                anyhow::ensure!(*machines >= 1, "mode.machines must be >= 1");
+                anyhow::ensure!(*trainers >= 1, "mode.trainers must be >= 1");
+                anyhow::ensure!(*servers >= 1, "mode.servers must be >= 1");
+            }
+        }
+        anyhow::ensure!(self.batches >= 1, "batches must be >= 1");
+        anyhow::ensure!(self.lr > 0.0, "lr must be positive");
+        if let Some(s) = &self.shape {
+            anyhow::ensure!(
+                s.batch > 0 && s.chunks > 0 && s.neg_k > 0 && s.dim > 0,
+                "shape fields must be positive"
+            );
+            anyhow::ensure!(
+                s.batch % s.chunks == 0,
+                "shape.batch ({}) must be divisible by shape.chunks ({})",
+                s.batch,
+                s.chunks
+            );
+            anyhow::ensure!(
+                self.model.validate_dim(s.dim),
+                "model {} requires an even dim, got {}",
+                self.model.name(),
+                s.dim
+            );
+        }
+        anyhow::ensure!(self.sync_interval >= 1, "sync_interval must be >= 1");
+        anyhow::ensure!(
+            self.seed <= (1u64 << 53),
+            "seed {} exceeds 2^53 and would not survive the JSON round-trip",
+            self.seed
+        );
+        Ok(())
+    }
+
+    /// Number of trainer threads this spec launches.
+    pub fn n_workers(&self) -> usize {
+        match &self.mode {
+            ParallelMode::Single { workers, .. } => *workers,
+            ParallelMode::Distributed { machines, trainers, .. } => machines * trainers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trips() {
+        let spec = RunSpec::default();
+        let s = spec.to_json_string();
+        let back = RunSpec::from_json_str(&s).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn full_spec_round_trips() {
+        let spec = RunSpec {
+            dataset: "wn18-syn".into(),
+            model: ModelKind::RotatE,
+            loss: LossSpec { margin: Some(6.0), adv_temp: Some(0.5) },
+            backend: BackendKind::Xla,
+            artifact_tag: "tiny".into(),
+            mode: ParallelMode::Distributed {
+                machines: 4,
+                trainers: 2,
+                servers: 2,
+                partition: PartitionStrategy::Random,
+                local_negatives: false,
+            },
+            batches: 77,
+            lr: 0.125,
+            init_scale: 0.5,
+            neg_degree_frac: 0.25,
+            async_update: false,
+            relation_partition: false,
+            sync_interval: 64,
+            log_every: 5,
+            shape: Some(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 16 }),
+            eval: Some(EvalSpec {
+                protocol: EvalProtocolSpec::Sampled { uniform: 100, degree: 50 },
+                max_triplets: 40,
+                n_threads: 2,
+            }),
+            seed: 99,
+        };
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn sparse_spec_uses_defaults() {
+        let spec = RunSpec::from_json_str(r#"{"dataset": "tiny", "batches": 7}"#).unwrap();
+        assert_eq!(spec.dataset, "tiny");
+        assert_eq!(spec.batches, 7);
+        assert_eq!(spec.model, ModelKind::TransEL2);
+        assert_eq!(spec.mode, ParallelMode::Single { workers: 1, gpu: false });
+    }
+
+    #[test]
+    fn unknown_enum_values_rejected() {
+        assert!(RunSpec::from_json_str(r#"{"model": "gpt"}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"backend": "cuda"}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"loss": {"kind": "hinge2"}}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"mode": {"kind": "tpu-pod"}}"#).is_err());
+        assert!(
+            RunSpec::from_json_str(r#"{"mode": {"kind":"distributed","partition":"spectral"}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        let mut spec = RunSpec::default();
+        spec.mode = ParallelMode::Single { workers: 0, gpu: false };
+        assert!(spec.validate().is_err());
+
+        let mut spec = RunSpec::default();
+        spec.batches = 0;
+        assert!(spec.validate().is_err());
+
+        let mut spec = RunSpec::default();
+        spec.model = ModelKind::RotatE;
+        spec.shape = Some(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 15 });
+        assert!(spec.validate().is_err(), "rotate needs even dim");
+
+        let mut spec = RunSpec::default();
+        spec.shape = Some(StepShape { batch: 30, chunks: 4, neg_k: 8, dim: 16 });
+        assert!(spec.validate().is_err(), "batch must divide by chunks");
+    }
+}

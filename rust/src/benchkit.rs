@@ -1,5 +1,6 @@
 //! Shared helpers for the paper-figure benches (`benches/*.rs`,
-//! `harness = false`).
+//! `harness = false`), built on the [`crate::api`] session so benches run
+//! the same code path as the CLI and the repro drivers.
 //!
 //! Testbed note (also in EXPERIMENTS.md): this machine exposes ONE CPU
 //! core, so concurrent workers time-share. Timing benches therefore
@@ -8,12 +9,12 @@
 //! `train::device::TransferLedger` and `util::cputime`). Single-worker
 //! numbers are additionally reported as real wall-clock.
 
+use crate::api::{ParallelMode, Report, RunSpec, Session};
 use crate::kg::Dataset;
 use crate::models::ModelKind;
 use crate::runtime::{artifacts, BackendKind, Manifest};
-use crate::train::worker::ModelState;
-use crate::train::{run_training, Hardware, TrainConfig, TrainStats};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Batches per worker for benches; QUICK=1 shrinks runs ~4×.
 pub fn bench_batches(default: usize) -> usize {
@@ -32,36 +33,48 @@ pub fn load_manifest_or_exit() -> Manifest {
     Manifest::load(&artifacts::default_dir()).expect("manifest parse")
 }
 
-/// One timed training run; returns (stats, per-batch sim-parallel ms).
-#[allow(clippy::too_many_arguments)]
-pub fn timed_run(
+/// The spec the timing benches start from; `mutate` in [`timed_run`]
+/// adjusts it per measurement.
+pub fn bench_spec(
     dataset: &Dataset,
-    manifest: &Manifest,
     model: ModelKind,
     tag: &str,
     workers: usize,
     batches_per_worker: usize,
     gpu: bool,
-    mutate: impl FnOnce(&mut TrainConfig),
-) -> Result<(TrainStats, f64)> {
-    let art = manifest.find_train(model.name(), "logistic", tag)?;
-    let mut cfg = TrainConfig {
+) -> RunSpec {
+    RunSpec {
+        dataset: dataset.name.clone(),
         model,
         backend: BackendKind::Xla,
         artifact_tag: tag.to_string(),
-        n_workers: workers,
-        batches_per_worker,
+        mode: ParallelMode::Single { workers, gpu },
+        batches: batches_per_worker,
         lr: 0.25,
         sync_interval: usize::MAX, // benches measure steady-state steps
-        hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
         log_every: usize::MAX,
         ..Default::default()
-    };
-    mutate(&mut cfg);
-    let state = ModelState::init(dataset, model, art.dim, &cfg);
-    let stats = run_training(dataset, &state, Some(manifest), &cfg)?;
-    let per_batch_ms = stats.sim_parallel_secs * 1000.0 / batches_per_worker as f64;
-    Ok((stats, per_batch_ms))
+    }
+}
+
+/// One timed training run through the session API; returns
+/// (report, per-batch sim-parallel ms). The dataset `Arc` is shared so
+/// repeated measurements don't regenerate the synthetic graph.
+pub fn timed_run(
+    dataset: &Arc<Dataset>,
+    model: ModelKind,
+    tag: &str,
+    workers: usize,
+    batches_per_worker: usize,
+    gpu: bool,
+    mutate: impl FnOnce(&mut RunSpec),
+) -> Result<(Report, f64)> {
+    let mut spec = bench_spec(dataset, model, tag, workers, batches_per_worker, gpu);
+    mutate(&mut spec);
+    let mut session = Session::with_dataset(spec, dataset.clone())?;
+    let report = session.train()?;
+    let per_batch_ms = report.sim_parallel_secs * 1000.0 / batches_per_worker as f64;
+    Ok((report, per_batch_ms))
 }
 
 /// Append rows to results/<name>.csv (creating header if new).

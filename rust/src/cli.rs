@@ -13,6 +13,14 @@ pub struct Args {
     consumed: std::collections::HashSet<String>,
 }
 
+/// Can `s` be the *value* of the preceding `--key`? Anything not starting
+/// with a dash qualifies, and so does a negative number (`--margin -1.5`,
+/// `--shift -2`, `--eps -1e-6`) — a dash followed by digits must not turn
+/// the preceding key into a boolean flag.
+fn is_value_token(s: &str) -> bool {
+    !s.starts_with('-') || s.parse::<f64>().is_ok()
+}
+
 impl Args {
     /// Parse raw args (without the program name).
     pub fn parse(raw: &[String]) -> Result<Args> {
@@ -25,7 +33,7 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     named.insert(k.to_string(), v.to_string());
-                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                } else if i + 1 < raw.len() && is_value_token(&raw[i + 1]) {
                     named.insert(key.to_string(), raw[i + 1].clone());
                     i += 1;
                 } else {
@@ -117,5 +125,33 @@ mod tests {
     fn bad_parse_errors() {
         let mut a = Args::parse(&raw("--workers abc")).unwrap();
         assert!(a.parse_or("workers", 1usize).is_err());
+    }
+
+    #[test]
+    fn negative_numeric_values() {
+        // regression: `--margin -1.5` must bind -1.5 to margin, not turn
+        // --margin into a boolean flag
+        let mut a = Args::parse(&raw("train --margin -1.5 --shift -2 --eps -1e-6")).unwrap();
+        assert_eq!(a.parse_or("margin", 0.0f32).unwrap(), -1.5);
+        assert_eq!(a.parse_or("shift", 0i64).unwrap(), -2);
+        assert_eq!(a.parse_or("eps", 0.0f64).unwrap(), -1e-6);
+        a.finish().unwrap();
+        // equals syntax too
+        let mut b = Args::parse(&raw("--margin=-1.5")).unwrap();
+        assert_eq!(b.parse_or("margin", 0.0f32).unwrap(), -1.5);
+        b.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_flag() {
+        let mut a = Args::parse(&raw("--gpu --margin -1.5")).unwrap();
+        assert!(a.flag("gpu"));
+        assert_eq!(a.parse_or("margin", 0.0f32).unwrap(), -1.5);
+        a.finish().unwrap();
+        // a non-numeric dash token is not a value
+        let mut b = Args::parse(&raw("--eval --model transe")).unwrap();
+        assert!(b.flag("eval"));
+        assert_eq!(b.get("model").as_deref(), Some("transe"));
+        b.finish().unwrap();
     }
 }

@@ -1,0 +1,413 @@
+//! Distributed training (paper §3.2, §3.6, §6.3): trainers on `machines`
+//! simulated machines pull/push embeddings through the in-process
+//! [`crate::kvstore`] cluster (shared memory locally, TCP remotely).
+//!
+//! The paper's distributed recipe, reproduced here:
+//!
+//! 1. **Graph partitioning** (§3.2): entities are placed on machines by a
+//!    METIS-style min-cut (or randomly, the §6.3 baseline); each machine's
+//!    trainers sample positives only from triplets whose head lives there.
+//! 2. **KVStore** (§3.6): every machine runs `servers_per_machine` servers;
+//!    embeddings shard across them (relations reshuffled by hash to avoid
+//!    long-tail hot spots). Same-machine access is a memcpy; cross-machine
+//!    access is TCP, counted by the [`crate::kvstore::NetLedger`].
+//! 3. **Local negative sampling** (§3.3): negatives are drawn from the
+//!    machine's own entity pool, so negative gathers add no remote traffic.
+//! 4. Server-side sparse AdaGrad: trainers push raw gradients; the owning
+//!    server applies the optimizer (communication/optimizer overlap).
+
+use crate::kg::Dataset;
+use crate::kvstore::{KvCluster, TableId};
+use crate::models::step::StepShape;
+use crate::models::{LossCfg, ModelKind};
+use crate::partition::{GraphPartition, MetisConfig};
+use crate::runtime::{BackendKind, Manifest, TrainBackend};
+use crate::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
+use crate::store::SparseGrads;
+use crate::train::batch::{split_grads, BatchBuffers};
+use crate::util::timer::Timer;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// How entities (and with them, triplets) are placed on machines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Uniform random placement — the paper's §6.3 baseline.
+    Random,
+    /// METIS-style min-cut placement (maximizes triplet locality).
+    Metis,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str) -> Option<PartitionStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Some(PartitionStrategy::Random),
+            "metis" => Some(PartitionStrategy::Metis),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Random => "random",
+            PartitionStrategy::Metis => "metis",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    pub model: ModelKind,
+    pub loss: LossCfg,
+    pub backend: BackendKind,
+    /// artifact shape family ("default" / "tiny"); ignored for native
+    pub artifact_tag: String,
+    /// explicit shape (required for the native backend)
+    pub shape: Option<StepShape>,
+    pub machines: usize,
+    pub trainers_per_machine: usize,
+    pub servers_per_machine: usize,
+    pub partition: PartitionStrategy,
+    /// draw uniform negatives from the machine-local entity pool (§3.3)
+    pub local_negatives: bool,
+    pub batches_per_trainer: usize,
+    pub lr: f32,
+    pub init_scale: f32,
+    /// fraction of negatives drawn in-batch ∝ degree (§3.3)
+    pub neg_degree_frac: f64,
+    pub seed: u64,
+    /// record loss every this many batches (trainer 0 only)
+    pub log_every: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            model: ModelKind::TransEL2,
+            loss: LossCfg::default(),
+            backend: BackendKind::Native,
+            artifact_tag: "default".into(),
+            shape: None,
+            machines: 4,
+            trainers_per_machine: 2,
+            servers_per_machine: 2,
+            partition: PartitionStrategy::Metis,
+            local_negatives: true,
+            batches_per_trainer: 100,
+            lr: 0.1,
+            init_scale: 0.37,
+            neg_degree_frac: 0.0,
+            seed: 0,
+            log_every: 50,
+        }
+    }
+}
+
+/// Aggregate statistics of one distributed run.
+#[derive(Clone, Debug, Default)]
+pub struct DistStats {
+    pub wall_secs: f64,
+    pub total_batches: u64,
+    pub triplets_per_sec: f64,
+    /// fraction of triplet endpoints local to their machine (§3.2)
+    pub locality: f64,
+    /// bytes served through the same-machine fast path
+    pub local_bytes: u64,
+    /// bytes that crossed TCP
+    pub remote_bytes: u64,
+    pub remote_requests: u64,
+    pub loss_curve: Vec<(u64, f32)>,
+    pub mean_loss_tail: f32,
+}
+
+/// Resolve (explicit native shape, dim, rel_dim) for a distributed run —
+/// the same contract as [`TrainBackend::create`], evaluated up front so the
+/// KVStore shards can be sized before trainers start.
+fn resolve_dims(
+    cfg: &DistConfig,
+    manifest: Option<&Manifest>,
+) -> Result<(Option<StepShape>, usize, usize)> {
+    match cfg.backend {
+        BackendKind::Native => {
+            let shape = match cfg.shape {
+                Some(s) => s,
+                None => bail!("native distributed backend needs an explicit shape"),
+            };
+            Ok((Some(shape), shape.dim, cfg.model.rel_dim(shape.dim)))
+        }
+        BackendKind::Xla => {
+            let m = match manifest {
+                Some(m) => m,
+                None => bail!("XLA distributed backend needs a manifest"),
+            };
+            let art = m.find_train(cfg.model.name(), cfg.loss.kind.name(), &cfg.artifact_tag)?;
+            Ok((None, art.dim, art.rel_dim))
+        }
+    }
+}
+
+struct TrainerOut {
+    losses: Vec<(u64, f32)>,
+    batches: u64,
+}
+
+/// Run distributed training. Returns stats plus the still-running cluster so
+/// the caller can [`KvCluster::dump_entities`] for evaluation; call
+/// [`KvCluster::shutdown`] when done.
+pub fn run_distributed(
+    dataset: &Dataset,
+    manifest: Option<&Manifest>,
+    cfg: &DistConfig,
+) -> Result<(DistStats, KvCluster)> {
+    anyhow::ensure!(cfg.machines >= 1, "machines must be >= 1");
+    anyhow::ensure!(cfg.trainers_per_machine >= 1, "trainers_per_machine must be >= 1");
+    anyhow::ensure!(cfg.servers_per_machine >= 1, "servers_per_machine must be >= 1");
+
+    let partition = match cfg.partition {
+        PartitionStrategy::Metis => {
+            GraphPartition::metis(&dataset.train, cfg.machines, &MetisConfig::default())
+        }
+        PartitionStrategy::Random => {
+            GraphPartition::random(&dataset.train, cfg.machines, cfg.seed)
+        }
+    };
+    let locality = partition.locality(&dataset.train);
+
+    let (shape_override, dim, rel_dim) = resolve_dims(cfg, manifest)?;
+    let cluster = KvCluster::start(
+        &partition.entity_part,
+        dataset.n_relations(),
+        cfg.machines,
+        cfg.servers_per_machine,
+        dim,
+        rel_dim,
+        cfg.lr,
+        cfg.init_scale,
+        cfg.seed,
+    )?;
+
+    // Per-machine positive index sets and local negative pools, shared
+    // read-only across that machine's trainers.
+    let mut machine_triplets: Vec<Arc<Vec<usize>>> = Vec::with_capacity(cfg.machines);
+    let mut machine_pools: Vec<Option<Arc<Vec<u32>>>> = Vec::with_capacity(cfg.machines);
+    for m in 0..cfg.machines {
+        let mut idx = partition.triplets_of(m as u32);
+        if idx.is_empty() {
+            // degenerate partition (tiny graph, many machines): fall back to
+            // the full triplet set so the trainer has work
+            idx = (0..dataset.train.len()).collect();
+        }
+        machine_triplets.push(Arc::new(idx));
+        let pool = if cfg.local_negatives {
+            let p = cluster.placement.entities_of_machine(m);
+            (!p.is_empty()).then(|| Arc::new(p))
+        } else {
+            None
+        };
+        machine_pools.push(pool);
+    }
+
+    let n_trainers = cfg.machines * cfg.trainers_per_machine;
+    let timer = Timer::new();
+    let outs: Vec<Result<TrainerOut>> = crate::util::threadpool::scoped_map(n_trainers, |t| {
+        let machine = t / cfg.trainers_per_machine;
+        let lane = t % cfg.trainers_per_machine;
+        trainer_loop(
+            dataset,
+            manifest,
+            cfg,
+            &cluster,
+            shape_override,
+            rel_dim,
+            machine,
+            lane,
+            &machine_triplets[machine],
+            machine_pools[machine].clone(),
+            t,
+        )
+    });
+    let wall = timer.elapsed_secs();
+
+    let mut losses = Vec::new();
+    let mut batches = 0u64;
+    let mut batch_size = 0usize;
+    for out in outs {
+        let out = out?;
+        batches += out.batches;
+        if out.losses.len() > losses.len() {
+            losses = out.losses;
+        }
+    }
+    if let Some(s) = shape_override {
+        batch_size = s.batch;
+    } else if let Some(m) = manifest {
+        if let Ok(art) = m.find_train(cfg.model.name(), cfg.loss.kind.name(), &cfg.artifact_tag) {
+            batch_size = art.batch;
+        }
+    }
+    let tail: Vec<f32> = losses.iter().rev().take(10).map(|&(_, l)| l).collect();
+    let stats = DistStats {
+        wall_secs: wall,
+        total_batches: batches,
+        triplets_per_sec: (batches * batch_size as u64) as f64 / wall.max(1e-9),
+        locality,
+        local_bytes: cluster.ledger.local(),
+        remote_bytes: cluster.ledger.remote(),
+        remote_requests: cluster
+            .ledger
+            .remote_requests
+            .load(std::sync::atomic::Ordering::Relaxed),
+        mean_loss_tail: if tail.is_empty() {
+            f32::NAN
+        } else {
+            tail.iter().sum::<f32>() / tail.len() as f32
+        },
+        loss_curve: losses,
+    };
+    Ok((stats, cluster))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn trainer_loop(
+    dataset: &Dataset,
+    manifest: Option<&Manifest>,
+    cfg: &DistConfig,
+    cluster: &KvCluster,
+    shape_override: Option<StepShape>,
+    rel_dim: usize,
+    machine: usize,
+    lane: usize,
+    machine_idx: &[usize],
+    local_pool: Option<Arc<Vec<u32>>>,
+    trainer_id: usize,
+) -> Result<TrainerOut> {
+    // backend per trainer thread (the PJRT client is !Send)
+    let backend = TrainBackend::create(
+        cfg.backend,
+        cfg.model,
+        cfg.loss,
+        manifest,
+        &cfg.artifact_tag,
+        shape_override,
+    )?;
+    let shape = backend.shape();
+    let mut client = cluster.client(machine)?;
+
+    // strided split of the machine's triplets among its trainer lanes
+    let mut my_idx: Vec<u32> = machine_idx
+        .iter()
+        .enumerate()
+        .filter(|&(j, _)| j % cfg.trainers_per_machine == lane)
+        .map(|(_, &i)| i as u32)
+        .collect();
+    if my_idx.is_empty() {
+        my_idx = machine_idx.iter().map(|&i| i as u32).collect();
+    }
+    let mut pos = PositiveSampler::over_indices(my_idx, cfg.seed ^ (trainer_id as u64 + 1));
+    let mut neg = NegativeSampler::new(
+        NegativeConfig {
+            k: shape.neg_k,
+            chunk_size: shape.chunk_size(),
+            degree_frac: cfg.neg_degree_frac,
+            local_pool,
+        },
+        dataset.n_entities(),
+        cfg.seed ^ (0xD157 + trainer_id as u64),
+    );
+
+    let mut buf = BatchBuffers::new(&shape, rel_dim);
+    let mut idx_buf: Vec<u32> = Vec::with_capacity(shape.batch);
+    let mut losses = Vec::new();
+
+    for step in 0..cfg.batches_per_trainer as u64 {
+        // (1) sample positives + joint negatives
+        pos.next_batch(shape.batch, &mut idx_buf);
+        let batch = neg.assemble(&dataset.train, &idx_buf);
+
+        // (2) pull embeddings through the KVStore
+        client.pull(TableId::Entities, &batch.heads, shape.dim, &mut buf.h)?;
+        client.pull(TableId::Relations, &batch.rels, rel_dim, &mut buf.r)?;
+        client.pull(TableId::Entities, &batch.tails, shape.dim, &mut buf.t)?;
+        client.pull(TableId::Entities, &batch.neg_heads, shape.dim, &mut buf.neg_h)?;
+        client.pull(TableId::Entities, &batch.neg_tails, shape.dim, &mut buf.neg_t)?;
+
+        // (3) fwd/bwd
+        let grads = backend.step(&buf.inputs())?;
+        if trainer_id == 0 && step % cfg.log_every.max(1) as u64 == 0 {
+            losses.push((step, grads.loss));
+        }
+
+        // (4) push sparse gradients; the owning server applies AdaGrad
+        let (ent_g, rel_g): (SparseGrads, SparseGrads) =
+            split_grads(&batch, &grads, shape.dim, rel_dim);
+        client.push(TableId::Entities, &ent_g.ids, shape.dim, &ent_g.rows)?;
+        client.push(TableId::Relations, &rel_g.ids, rel_dim, &rel_g.rows)?;
+    }
+
+    Ok(TrainerOut { losses, batches: cfg.batches_per_trainer as u64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> DistConfig {
+        DistConfig {
+            backend: BackendKind::Native,
+            shape: Some(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 16 }),
+            machines: 2,
+            trainers_per_machine: 2,
+            servers_per_machine: 1,
+            batches_per_trainer: 20,
+            lr: 0.25,
+            log_every: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn distributed_training_runs_and_learns() {
+        let dataset = Dataset::load("tiny", 11).unwrap();
+        let cfg = tiny_cfg();
+        let (stats, mut cluster) = run_distributed(&dataset, None, &cfg).unwrap();
+        cluster.shutdown();
+        assert_eq!(stats.total_batches, 2 * 2 * 20);
+        assert!(stats.locality > 0.0 && stats.locality <= 1.0);
+        let first = stats.loss_curve.first().unwrap().1;
+        assert!(stats.mean_loss_tail < first, "{} -> {}", first, stats.mean_loss_tail);
+    }
+
+    #[test]
+    fn metis_moves_fewer_remote_bytes_than_random() {
+        let dataset = Dataset::load("tiny", 12).unwrap();
+        let run = |strategy: PartitionStrategy| {
+            let cfg = DistConfig { partition: strategy, ..tiny_cfg() };
+            let (stats, mut cluster) = run_distributed(&dataset, None, &cfg).unwrap();
+            cluster.shutdown();
+            stats
+        };
+        let metis = run(PartitionStrategy::Metis);
+        let random = run(PartitionStrategy::Random);
+        assert!(metis.locality > random.locality);
+        assert!(
+            metis.remote_bytes < random.remote_bytes,
+            "metis {} vs random {}",
+            metis.remote_bytes,
+            random.remote_bytes
+        );
+    }
+
+    #[test]
+    fn dump_matches_server_shards() {
+        let dataset = Dataset::load("tiny", 13).unwrap();
+        let cfg = DistConfig { batches_per_trainer: 2, ..tiny_cfg() };
+        let (_, mut cluster) = run_distributed(&dataset, None, &cfg).unwrap();
+        let dim = 16;
+        let ents = cluster.dump_entities(dataset.n_entities(), dim);
+        // row 0 equals the owning shard's slot
+        let s = cluster.placement.ent_server[0] as usize;
+        let slot = cluster.placement.ent_slot[0] as usize;
+        assert_eq!(ents.row(0), cluster.states[s].ents.row(slot));
+        cluster.shutdown();
+    }
+}

@@ -3,6 +3,37 @@
 //! Reproduction of **DGL-KE: Training Knowledge Graph Embeddings at Scale**
 //! (Zheng et al., SIGIR 2020) as a three-layer Rust + JAX + Pallas system.
 //!
+//! ## Entry point: the [`api`] session
+//!
+//! Every mode of the system — many-core CPU, simulated multi-GPU, and
+//! distributed over the KVStore cluster — is driven by one typed API:
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use dglke::api::Session;
+//! use dglke::models::ModelKind;
+//!
+//! let mut session = Session::builder()
+//!     .dataset("fb15k-syn")          // preset or TSV directory
+//!     .model(ModelKind::RotatE)
+//!     .workers(8)                    // or .distributed(4, 2, 2)
+//!     .batches(250)
+//!     .seed(42)
+//!     .build()?;                     // validates; loads data; resolves shapes
+//! let report = session.train()?;     // -> api::Report (JSON-serializable)
+//! let metrics = session.evaluate()?; // -> eval::Metrics
+//! session.export_embeddings(std::path::Path::new("ckpt"))?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! A [`api::RunSpec`] is the serializable form of the same thing: the CLI's
+//! `dglke train --config run.json` and `--dump-config` round-trip through
+//! it (schema in [`api::spec`]), so every benchmark and repro table is a
+//! spec file away from being reproduced.
+//!
+//! ## Layers
+//!
 //! * Layer 3 (this crate): the paper's coordination contribution — graph &
 //!   relation partitioning, joint/degree-based/local negative sampling,
 //!   hogwild embedding store + sparse Adagrad, async gradient updaters,
@@ -16,6 +47,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for measured-vs-paper results.
 
+pub mod api;
 pub mod baselines;
 pub mod benchkit;
 pub mod cli;

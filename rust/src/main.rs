@@ -9,29 +9,34 @@
 //!   eval-only   evaluate random-init embeddings (sanity floor)
 //!   repro       regenerate the paper's accuracy tables (table4..table9)
 //!
-//! Every flag has a default; unknown flags error out.
+//! `train` and `dist-train` are thin flag→`RunSpec` translators over the
+//! library's `api::Session`: `--config run.json` loads a spec file (any
+//! explicit flags override it), `--dump-config` prints the effective spec
+//! as JSON without running, and `--report out.json` writes the run's
+//! `Report` JSON. Every flag has a default; unknown flags error out.
 
 use anyhow::{bail, Context, Result};
+use dglke::api::{EvalProtocolSpec, EvalSpec, ParallelMode, RunSpec, Session};
 use dglke::cli::Args;
-use dglke::dist::{run_distributed, DistConfig, PartitionStrategy};
-use dglke::eval::{evaluate, EvalConfig, EvalProtocol};
+use dglke::dist::PartitionStrategy;
 use dglke::kg::Dataset;
-use dglke::models::{LossCfg, LossKind, ModelKind};
+use dglke::models::ModelKind;
 use dglke::partition::{GraphPartition, MetisConfig};
-use dglke::runtime::{artifacts, BackendKind, Manifest};
-use dglke::train::worker::ModelState;
-use dglke::train::{run_training, Hardware, TrainConfig};
+use dglke::runtime::BackendKind;
 
 const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|repro> [--flags]
   common: --dataset fb15k-syn|wn18-syn|freebase-syn[:scale]|tiny|<tsv-dir>
           --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
-          --backend xla|native --tag default|tiny --seed N
+          --backend native|xla (default native) --tag default|tiny --seed N
+          --config spec.json (flags override) --dump-config --report out.json
   train:  --workers N --batches N(per worker) --lr F --gpu (simulate GPUs)
-          --degree-frac F --no-async --no-rel-part --sync-interval N --eval
+          --margin F --adv-temp F --degree-frac F --no-async --no-rel-part
+          --sync-interval N --log-every N --eval --sampled-eval
   dist-train: --machines N --trainers N --servers N --random-partition
           --no-local-negatives --batches N --eval
   partition: --machines N
   gen-data: --out DIR
+  eval-only: --dim N
   repro:  --exp table4..table9|all --scale F --out DIR";
 
 fn main() -> Result<()> {
@@ -39,8 +44,8 @@ fn main() -> Result<()> {
     let mut args = Args::parse(&raw)?;
     let cmd = args.positional().first().cloned().unwrap_or_default();
     match cmd.as_str() {
-        "train" => cmd_train(args),
-        "dist-train" => cmd_dist(args),
+        "train" => cmd_run(args, false),
+        "dist-train" => cmd_run(args, true),
         "partition" => cmd_partition(args),
         "gen-data" => cmd_gen_data(args),
         "eval-only" => cmd_eval_only(args),
@@ -56,208 +61,142 @@ fn main() -> Result<()> {
     }
 }
 
-fn parse_model(args: &mut Args) -> Result<ModelKind> {
-    let name = args.get_or("model", "transe_l2");
-    ModelKind::parse(&name).with_context(|| format!("unknown model {name}"))
-}
-
-fn parse_backend(args: &mut Args) -> Result<BackendKind> {
-    let name = args.get_or("backend", "xla");
-    BackendKind::parse(&name).with_context(|| format!("unknown backend {name}"))
-}
-
-fn load_manifest() -> Result<Option<Manifest>> {
-    if artifacts::available() {
-        Ok(Some(Manifest::load(&artifacts::default_dir())?))
-    } else {
-        Ok(None)
-    }
-}
-
-fn resolve_shape(
-    manifest: Option<&Manifest>,
-    backend: BackendKind,
-    model: ModelKind,
-    tag: &str,
-) -> Result<(Option<dglke::models::step::StepShape>, usize)> {
-    // returns (explicit shape for native, dim)
-    match manifest.and_then(|m| m.find_train(model.name(), "logistic", tag).ok()) {
-        Some(a) => {
-            let s = dglke::models::step::StepShape {
-                batch: a.batch,
-                chunks: a.chunks,
-                neg_k: a.neg_k,
-                dim: a.dim,
-            };
-            Ok(((backend == BackendKind::Native).then_some(s), a.dim))
+/// Load `--config` (if given) and overlay any explicitly-passed flags onto
+/// the spec. Shared by `train` and `dist-train`.
+fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
+    let mut spec = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading spec file {path}"))?;
+            RunSpec::from_json_str(&text).with_context(|| format!("parsing spec file {path}"))?
         }
-        None if backend == BackendKind::Native => {
-            let s = dglke::models::step::StepShape { batch: 256, chunks: 8, neg_k: 64, dim: 64 };
-            Ok((Some(s), 64))
-        }
-        None => bail!("no artifacts for model {} tag {tag} — run `make artifacts`", model.name()),
-    }
-}
-
-fn run_eval(model: ModelKind, state: &ModelState, dataset: &Dataset, sampled: bool, seed: u64) {
-    let cfg = EvalConfig {
-        protocol: if sampled {
-            EvalProtocol::Sampled { uniform: 1000, degree: 1000 }
-        } else {
-            EvalProtocol::FullFiltered
-        },
-        max_triplets: 500,
-        n_threads: 4,
-        seed,
+        None => RunSpec::default(),
     };
-    let m = evaluate(model, &state.entities, &state.relations, dataset, &dataset.test, &cfg);
-    println!("eval ({} test triplets, both sides): {}", m.n / 2, m.row());
-}
 
-fn cmd_train(mut args: Args) -> Result<()> {
-    let dataset_name = args.get_or("dataset", "fb15k-syn");
-    let seed = args.parse_or("seed", 0u64)?;
-    let model = parse_model(&mut args)?;
-    let backend = parse_backend(&mut args)?;
-    let tag = args.get_or("tag", "default");
-    let workers = args.parse_or("workers", 1usize)?;
-    let batches = args.parse_or("batches", 200usize)?;
-    let lr = args.parse_or("lr", 0.3f32)?;
-    let margin: Option<f32> = args.get("margin").map(|v| v.parse()).transpose()?;
-    let adv_temp: Option<f32> = args.get("adv-temp").map(|v| v.parse()).transpose()?;
-    let gpu = args.flag("gpu");
-    let degree_frac = args.parse_or("degree-frac", 0.0f64)?;
-    let no_async = args.flag("no-async");
-    let no_rel_part = args.flag("no-rel-part");
-    let sync_interval = args.parse_or("sync-interval", 500usize)?;
-    let do_eval = args.flag("eval");
-    let sampled_eval = args.flag("sampled-eval");
-    args.finish()?;
-
-    let dataset = Dataset::load(&dataset_name, seed)?;
-    println!("{}", dataset.summary());
-    let manifest = load_manifest()?;
-    let (shape, dim) = resolve_shape(manifest.as_ref(), backend, model, &tag)?;
-    let cfg = TrainConfig {
-        model,
-        loss: LossCfg {
-            kind: margin.map(LossKind::Margin).unwrap_or(LossKind::Logistic),
-            adv_temp,
-        },
-        backend,
-        artifact_tag: tag,
-        shape,
-        n_workers: workers,
-        batches_per_worker: batches,
-        lr,
-        neg_degree_frac: degree_frac,
-        async_update: !no_async,
-        relation_partition: !no_rel_part,
-        sync_interval,
-        hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
-        seed,
-        ..Default::default()
-    };
-    let state = ModelState::init(&dataset, model, dim, &cfg);
-    println!(
-        "training {} ({} params) on {} workers, backend {:?}",
-        model.name(),
-        state.n_params(),
-        workers,
-        backend
-    );
-    let stats = run_training(&dataset, &state, manifest.as_ref(), &cfg)?;
-    println!(
-        "done: {} batches, wall {:.1}s, sim-parallel {:.1}s, {:.0} triplets/s, final loss {:.4}",
-        stats.total_batches,
-        stats.wall_secs,
-        stats.sim_parallel_secs,
-        stats.triplets_per_sec,
-        stats.mean_loss_tail
-    );
-    for (p, s) in &stats.phases {
-        println!("  phase {p}: {s:.2}s");
-    }
-    if gpu {
-        println!(
-            "  transfers: h2d {:.1}MB d2h {:.1}MB overlapped {:.1}MB",
-            stats.h2d_bytes as f64 / 1e6,
-            stats.d2h_bytes as f64 / 1e6,
-            stats.overlapped_bytes as f64 / 1e6
-        );
-    }
-    if do_eval {
-        run_eval(model, &state, &dataset, sampled_eval, seed);
-    }
-    Ok(())
-}
-
-fn cmd_dist(mut args: Args) -> Result<()> {
-    let dataset_name = args.get_or("dataset", "freebase-syn:0.02");
-    let seed = args.parse_or("seed", 0u64)?;
-    let model = parse_model(&mut args)?;
-    let backend = parse_backend(&mut args)?;
-    let tag = args.get_or("tag", "default");
-    let machines = args.parse_or("machines", 4usize)?;
-    let trainers = args.parse_or("trainers", 2usize)?;
-    let servers = args.parse_or("servers", 2usize)?;
-    let batches = args.parse_or("batches", 100usize)?;
-    let lr = args.parse_or("lr", 0.3f32)?;
-    let random_part = args.flag("random-partition");
-    let no_local_neg = args.flag("no-local-negatives");
-    let do_eval = args.flag("eval");
-    args.finish()?;
-
-    let dataset = Dataset::load(&dataset_name, seed)?;
-    println!("{}", dataset.summary());
-    let manifest = load_manifest()?;
-    let (shape, dim) = resolve_shape(manifest.as_ref(), backend, model, &tag)?;
-    let cfg = DistConfig {
-        model,
-        backend,
-        artifact_tag: tag,
-        shape,
-        machines,
-        trainers_per_machine: trainers,
-        servers_per_machine: servers,
-        partition: if random_part { PartitionStrategy::Random } else { PartitionStrategy::Metis },
-        local_negatives: !no_local_neg,
-        batches_per_trainer: batches,
-        lr,
-        seed,
-        ..Default::default()
-    };
-    println!(
-        "distributed training on {machines} machines x {trainers} trainers ({} partition)",
-        if random_part { "random" } else { "METIS" }
-    );
-    let (stats, mut cluster) = run_distributed(&dataset, manifest.as_ref(), &cfg)?;
-    println!(
-        "done: {} batches, wall {:.1}s, {:.0} triplets/s",
-        stats.total_batches, stats.wall_secs, stats.triplets_per_sec
-    );
-    println!(
-        "  locality {:.3}; traffic local {:.1}MB remote {:.1}MB ({} remote reqs)",
-        stats.locality,
-        stats.local_bytes as f64 / 1e6,
-        stats.remote_bytes as f64 / 1e6,
-        stats.remote_requests
-    );
-    if do_eval {
-        let rel_dim = model.rel_dim(dim);
-        let ents = cluster.dump_entities(dataset.n_entities(), dim);
-        let rels = cluster.dump_relations(dataset.n_relations(), rel_dim);
-        let state = ModelState {
-            entities: std::sync::Arc::new(ents),
-            relations: std::sync::Arc::new(rels),
-            ent_opt: std::sync::Arc::new(dglke::store::SparseAdagrad::new(1, lr)),
-            rel_opt: std::sync::Arc::new(dglke::store::SparseAdagrad::new(1, lr)),
-            dim,
-            rel_dim,
+    if dist && !matches!(spec.mode, ParallelMode::Distributed { .. }) {
+        spec.mode = ParallelMode::Distributed {
+            machines: 4,
+            trainers: 2,
+            servers: 2,
+            partition: PartitionStrategy::Metis,
+            local_negatives: true,
         };
-        run_eval(model, &state, &dataset, true, seed);
+        // only replace values still at their RunSpec defaults — a --config
+        // file's explicit dataset/batches must survive the mode install
+        let defaults = RunSpec::default();
+        if spec.dataset == defaults.dataset {
+            spec.dataset = "freebase-syn:0.02".into();
+        }
+        if spec.batches == defaults.batches {
+            spec.batches = 100;
+        }
     }
-    cluster.shutdown();
+
+    if let Some(v) = args.get("dataset") {
+        spec.dataset = v;
+    }
+    if let Some(v) = args.get("model") {
+        spec.model = ModelKind::parse(&v).with_context(|| format!("unknown model {v}"))?;
+    }
+    if let Some(v) = args.get("backend") {
+        spec.backend = BackendKind::parse(&v).with_context(|| format!("unknown backend {v}"))?;
+    }
+    if let Some(v) = args.get("tag") {
+        spec.artifact_tag = v;
+    }
+    spec.seed = args.parse_or("seed", spec.seed)?;
+    spec.batches = args.parse_or("batches", spec.batches)?;
+    spec.lr = args.parse_or("lr", spec.lr)?;
+    if let Some(v) = args.get("margin") {
+        spec.loss.margin = Some(v.parse().with_context(|| format!("bad --margin {v}"))?);
+    }
+    if let Some(v) = args.get("adv-temp") {
+        spec.loss.adv_temp = Some(v.parse().with_context(|| format!("bad --adv-temp {v}"))?);
+    }
+    spec.neg_degree_frac = args.parse_or("degree-frac", spec.neg_degree_frac)?;
+    if args.flag("no-async") {
+        spec.async_update = false;
+    }
+    if args.flag("no-rel-part") {
+        spec.relation_partition = false;
+    }
+    spec.sync_interval = args.parse_or("sync-interval", spec.sync_interval)?;
+    spec.log_every = args.parse_or("log-every", spec.log_every)?;
+
+    if dist {
+        let (mut machines, mut trainers, mut servers, mut partition, mut local_negatives) =
+            match spec.mode {
+                ParallelMode::Distributed { machines, trainers, servers, partition, local_negatives } => {
+                    (machines, trainers, servers, partition, local_negatives)
+                }
+                _ => unreachable!("dist mode installed above"),
+            };
+        machines = args.parse_or("machines", machines)?;
+        trainers = args.parse_or("trainers", trainers)?;
+        servers = args.parse_or("servers", servers)?;
+        if args.flag("random-partition") {
+            partition = PartitionStrategy::Random;
+        }
+        if args.flag("no-local-negatives") {
+            local_negatives = false;
+        }
+        spec.mode =
+            ParallelMode::Distributed { machines, trainers, servers, partition, local_negatives };
+    } else if let ParallelMode::Single { workers, gpu } = spec.mode {
+        let workers = args.parse_or("workers", workers)?;
+        let gpu = gpu || args.flag("gpu");
+        spec.mode = ParallelMode::Single { workers, gpu };
+    } else if args.get("workers").is_some() || args.flag("gpu") {
+        // `train --config dist.json` runs the distributed spec as-is;
+        // silently ignoring explicit single-mode flags would be a trap
+        bail!("--workers/--gpu have no effect with a distributed --config; use dist-train flags");
+    }
+
+    if args.flag("eval") || args.flag("sampled-eval") {
+        let protocol = if args.flag("sampled-eval") {
+            EvalProtocolSpec::Sampled { uniform: 1000, degree: 1000 }
+        } else {
+            EvalProtocolSpec::FullFiltered
+        };
+        spec.eval = Some(EvalSpec { protocol, max_triplets: 500, n_threads: 4 });
+    }
+    Ok(spec)
+}
+
+/// `train` and `dist-train`: flag→spec translation + `Session` run.
+fn cmd_run(mut args: Args, dist: bool) -> Result<()> {
+    let spec = spec_from_flags(&mut args, dist)?;
+    let dump = args.flag("dump-config");
+    let report_path = args.get("report");
+    args.finish()?;
+
+    if dump {
+        println!("{}", spec.to_json_string());
+        return Ok(());
+    }
+
+    let mut session = Session::from_spec(spec)?;
+    println!("{}", session.dataset().summary());
+    match session.spec().mode {
+        ParallelMode::Single { workers, .. } => println!(
+            "training {} ({} params) on {} workers, backend {:?}",
+            session.spec().model.name(),
+            session.n_params(),
+            workers,
+            session.spec().backend
+        ),
+        ParallelMode::Distributed { machines, trainers, partition, .. } => println!(
+            "distributed training on {machines} machines x {trainers} trainers ({} partition)",
+            partition.name()
+        ),
+    }
+    let report = session.train()?;
+    println!("{}", report.summary());
+    if let Some(path) = report_path {
+        std::fs::write(&path, report.to_json_string())
+            .with_context(|| format!("writing report {path}"))?;
+        println!("[wrote {path}]");
+    }
     Ok(())
 }
 
@@ -298,24 +237,44 @@ fn cmd_gen_data(mut args: Args) -> Result<()> {
 }
 
 fn cmd_eval_only(mut args: Args) -> Result<()> {
-    let dataset_name = args.get_or("dataset", "tiny");
-    let seed = args.parse_or("seed", 0u64)?;
-    let model = parse_model(&mut args)?;
+    let mut spec = RunSpec {
+        dataset: "tiny".into(),
+        backend: BackendKind::Native,
+        eval: Some(EvalSpec::default()),
+        ..Default::default()
+    };
+    if let Some(v) = args.get("dataset") {
+        spec.dataset = v;
+    }
+    if let Some(v) = args.get("model") {
+        spec.model = ModelKind::parse(&v).with_context(|| format!("unknown model {v}"))?;
+    }
+    spec.seed = args.parse_or("seed", spec.seed)?;
     let dim = args.parse_or("dim", 64usize)?;
+    spec.shape = Some(dglke::models::step::StepShape {
+        dim,
+        ..dglke::api::DEFAULT_NATIVE_SHAPE
+    });
     args.finish()?;
-    let dataset = Dataset::load(&dataset_name, seed)?;
-    let cfg = TrainConfig { seed, ..Default::default() };
-    let state = ModelState::init(&dataset, model, dim, &cfg);
-    println!("random-embedding floor for {} on {}:", model.name(), dataset.name);
-    run_eval(model, &state, &dataset, false, seed);
+
+    let session = Session::from_spec(spec)?;
+    println!(
+        "random-embedding floor for {} on {}:",
+        session.spec().model.name(),
+        session.dataset().name
+    );
+    let m = session.evaluate()?;
+    println!("eval ({} ranks, both sides): {}", m.n, m.row());
     Ok(())
 }
 
 fn cmd_repro(mut args: Args) -> Result<()> {
     let exp = args.get_or("exp", "all");
+    let backend_name = args.get_or("backend", "xla");
     let opts = dglke::repro::ReproOpts {
         scale: args.parse_or("scale", 1.0f64)?,
-        backend: parse_backend(&mut args)?,
+        backend: BackendKind::parse(&backend_name)
+            .with_context(|| format!("unknown backend {backend_name}"))?,
         out_dir: args.get_or("out", "results").into(),
         seed: args.parse_or("seed", 0u64)?,
     };

@@ -6,18 +6,24 @@
 //! `results/<exp>.csv`. Absolute values differ from the paper (synthetic
 //! datasets, simulated GPUs — see DESIGN.md substitutions); the *shape*
 //! (who wins, roughly by how much) is the reproduction target.
+//!
+//! All drivers build declarative [`RunSpec`]s and run them through
+//! [`Session`] — the same code path as the CLI and the benches.
 
+use crate::api::{
+    resolve_shape, EvalProtocolSpec, EvalSpec, ParallelMode, Report, RunSpec, Session,
+};
 use crate::baselines::{run_graphvite, GraphViteConfig};
-use crate::dist::{run_distributed, DistConfig, PartitionStrategy};
-use crate::eval::{evaluate, EvalConfig, EvalProtocol, Metrics};
+use crate::dist::PartitionStrategy;
+use crate::eval::{evaluate, Metrics};
 use crate::kg::Dataset;
-use crate::models::{LossCfg, ModelKind};
+use crate::models::ModelKind;
 use crate::runtime::{artifacts, BackendKind, Manifest};
 use crate::train::worker::ModelState;
-use crate::train::{run_training, Hardware, TrainConfig};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct ReproOpts {
@@ -41,17 +47,16 @@ impl Default for ReproOpts {
 
 pub fn run(exp: &str, opts: &ReproOpts) -> Result<()> {
     if !artifacts::available() && opts.backend == BackendKind::Xla {
-        bail!("artifacts not built — run `make artifacts` first");
+        bail!("artifacts not built — run `make artifacts` first, or pass --backend native");
     }
     std::fs::create_dir_all(&opts.out_dir)?;
-    let manifest = Manifest::load(&artifacts::default_dir())?;
     match exp {
-        "table4" => table4(opts, &manifest),
-        "table5" => table5(opts, &manifest),
-        "table6" => table6(opts, &manifest),
-        "table7" => table7(opts, &manifest),
-        "table8" => table89(opts, &manifest, "fb15k-syn", "table8"),
-        "table9" => table89(opts, &manifest, "wn18-syn", "table9"),
+        "table4" => table4(opts),
+        "table5" => table5(opts),
+        "table6" => table6(opts),
+        "table7" => table7(opts),
+        "table8" => table89(opts, "fb15k-syn", "table8"),
+        "table9" => table89(opts, "wn18-syn", "table9"),
         "all" => {
             for e in ["table4", "table5", "table6", "table7", "table8", "table9"] {
                 println!("\n================ {e} ================");
@@ -63,82 +68,74 @@ pub fn run(exp: &str, opts: &ReproOpts) -> Result<()> {
     }
 }
 
-/// Shared: train with the main engine and evaluate.
-struct RunSpec<'a> {
-    dataset: &'a Dataset,
+/// One table row's training setup, in spec terms.
+struct TableRun {
     model: ModelKind,
     workers: usize,
     epochs: f64,
     degree_frac: f64,
-    eval: EvalConfig,
+    eval: EvalSpec,
 }
 
-fn artifact_dim(manifest: &Manifest, model: ModelKind) -> Result<usize> {
-    Ok(manifest.find_train(model.name(), "logistic", "default")?.dim)
-}
-
-fn train_eval(
-    spec: &RunSpec<'_>,
-    manifest: &Manifest,
-    opts: &ReproOpts,
-) -> Result<(Metrics, crate::train::TrainStats)> {
-    let art = manifest.find_train(spec.model.name(), "logistic", "default")?;
-    let total_batches = ((spec.dataset.train.len() as f64 * spec.epochs * opts.scale)
-        / art.batch as f64)
-        .ceil()
-        .max(1.0) as usize;
-    let cfg = TrainConfig {
-        model: spec.model,
-        loss: LossCfg::default(),
+fn base_spec(opts: &ReproOpts, dataset: &Dataset, model: ModelKind) -> RunSpec {
+    RunSpec {
+        dataset: dataset.name.clone(),
+        model,
         backend: opts.backend,
-        artifact_tag: "default".into(),
-        shape: (opts.backend == BackendKind::Native).then_some(
-            crate::models::step::StepShape {
-                batch: art.batch,
-                chunks: art.chunks,
-                neg_k: art.neg_k,
-                dim: art.dim,
-            },
-        ),
-        n_workers: spec.workers,
-        batches_per_worker: (total_batches / spec.workers).max(1),
         lr: 0.3,
-        neg_degree_frac: spec.degree_frac,
-        hardware: Hardware::Gpu { pcie_gbps: 12.0 },
         sync_interval: 200,
         seed: opts.seed,
         ..Default::default()
-    };
-    let state = ModelState::init(spec.dataset, spec.model, art.dim, &cfg);
-    let stats = run_training(spec.dataset, &state, Some(manifest), &cfg)
-        .with_context(|| format!("training {} x{}", spec.model.name(), spec.workers))?;
-    let m = evaluate(
-        spec.model,
-        &state.entities,
-        &state.relations,
-        spec.dataset,
-        &spec.dataset.test,
-        &spec.eval,
-    );
-    Ok((m, stats))
+    }
 }
 
-fn freebase_eval(seed: u64) -> EvalConfig {
-    EvalConfig {
-        protocol: EvalProtocol::Sampled { uniform: 1000, degree: 1000 },
+/// Batches needed to cover `epochs` passes over the training set at this
+/// spec's resolved batch size.
+fn epochs_to_batches(
+    opts: &ReproOpts,
+    dataset: &Dataset,
+    manifest: Option<&Manifest>,
+    spec: &RunSpec,
+    epochs: f64,
+) -> Result<usize> {
+    let shape = resolve_shape(manifest, spec)?;
+    let total =
+        ((dataset.train.len() as f64 * epochs * opts.scale) / shape.step.batch as f64).ceil();
+    Ok((total as usize).max(1))
+}
+
+/// Shared: train with the session API and evaluate. `manifest` is loaded
+/// once per table and reused for every row.
+fn train_eval(
+    run: &TableRun,
+    dataset: &Arc<Dataset>,
+    manifest: Option<&Manifest>,
+    opts: &ReproOpts,
+) -> Result<(Metrics, Report)> {
+    let mut spec = base_spec(opts, dataset, run.model);
+    spec.mode = ParallelMode::Single { workers: run.workers, gpu: true };
+    spec.neg_degree_frac = run.degree_frac;
+    spec.eval = Some(run.eval.clone());
+    let total = epochs_to_batches(opts, dataset, manifest, &spec, run.epochs)?;
+    spec.batches = (total / run.workers).max(1);
+    let mut session = Session::with_dataset(spec, dataset.clone())?;
+    let report = session
+        .train()
+        .with_context(|| format!("training {} x{}", run.model.name(), run.workers))?;
+    let metrics = report.metrics.expect("eval requested in spec");
+    Ok((metrics, report))
+}
+
+fn freebase_eval(_seed: u64) -> EvalSpec {
+    EvalSpec {
+        protocol: EvalProtocolSpec::Sampled { uniform: 1000, degree: 1000 },
         max_triplets: 500,
         n_threads: 4,
-        seed,
     }
 }
 
-fn full_eval(seed: u64, max: usize) -> EvalConfig {
-    EvalConfig {
-        protocol: EvalProtocol::FullFiltered,
-        max_triplets: max,
-        n_threads: 4,
-        seed,
-    }
+fn full_eval(_seed: u64, max: usize) -> EvalSpec {
+    EvalSpec { protocol: EvalProtocolSpec::FullFiltered, max_triplets: max, n_threads: 4 }
 }
 
 fn write_csv(opts: &ReproOpts, name: &str, header: &str, rows: &[String]) -> Result<()> {
@@ -156,47 +153,44 @@ fn print_metrics_block(label: &str, m: &Metrics) {
     println!("{label:24} {}", m.row());
 }
 
+fn metrics_csv(m: &Metrics) -> String {
+    format!("{:.4},{:.4},{:.4},{:.2},{:.4}", m.hit10, m.hit3, m.hit1, m.mr, m.mrr)
+}
+
 /// Table 4: degree-based negative sampling, with vs without (Freebase).
-fn table4(opts: &ReproOpts, manifest: &Manifest) -> Result<()> {
+fn table4(opts: &ReproOpts) -> Result<()> {
     println!("Table 4: degree-based negative sampling on freebase-syn (8 simulated GPUs)");
-    let dataset = Dataset::load("freebase-syn:0.02", opts.seed)?;
+    let dataset = Arc::new(Dataset::load("freebase-syn:0.02", opts.seed)?);
     println!("  {}", dataset.summary());
+    let manifest = crate::api::load_default_manifest()?;
     let mut rows = Vec::new();
     for model in [ModelKind::TransEL2, ModelKind::ComplEx, ModelKind::DistMult] {
         for (tag, frac) in [("with", 0.5), ("w/o", 0.0)] {
             let (m, _) = train_eval(
-                &RunSpec {
-                    dataset: &dataset,
+                &TableRun {
                     model,
                     workers: 8,
                     epochs: 4.0,
                     degree_frac: frac,
                     eval: freebase_eval(opts.seed),
                 },
-                manifest,
+                &dataset,
+                manifest.as_ref(),
                 opts,
             )?;
             print_metrics_block(&format!("{} {}", model.name(), tag), &m);
-            rows.push(format!(
-                "{},{},{:.4},{:.4},{:.4},{:.2},{:.4}",
-                model.name(),
-                tag,
-                m.hit10,
-                m.hit3,
-                m.hit1,
-                m.mr,
-                m.mrr
-            ));
+            rows.push(format!("{},{},{}", model.name(), tag, metrics_csv(&m)));
         }
     }
     write_csv(opts, "table4", "model,degree_sampling,hit10,hit3,hit1,mr,mrr", &rows)
 }
 
 /// Table 5: FB15k accuracy, 1 GPU vs fastest (8 workers).
-fn table5(opts: &ReproOpts, manifest: &Manifest) -> Result<()> {
+fn table5(opts: &ReproOpts) -> Result<()> {
     println!("Table 5: fb15k-syn accuracy, 1GPU vs Fastest (8 workers)");
-    let dataset = Dataset::load("fb15k-syn", opts.seed)?;
+    let dataset = Arc::new(Dataset::load("fb15k-syn", opts.seed)?);
     println!("  {}", dataset.summary());
+    let manifest = crate::api::load_default_manifest()?;
     let models = [
         ModelKind::TransEL2,
         ModelKind::DistMult,
@@ -209,38 +203,30 @@ fn table5(opts: &ReproOpts, manifest: &Manifest) -> Result<()> {
         let max = if model == ModelKind::TransR { 150 } else { 400 };
         for (tag, workers) in [("1GPU", 1usize), ("Fastest", 8)] {
             let (m, _) = train_eval(
-                &RunSpec {
-                    dataset: &dataset,
+                &TableRun {
                     model,
                     workers,
                     epochs: 2.0,
                     degree_frac: 0.0,
                     eval: full_eval(opts.seed, max),
                 },
-                manifest,
+                &dataset,
+                manifest.as_ref(),
                 opts,
             )?;
             print_metrics_block(&format!("{} {}", model.name(), tag), &m);
-            rows.push(format!(
-                "{},{},{:.4},{:.4},{:.4},{:.2},{:.4}",
-                model.name(),
-                tag,
-                m.hit10,
-                m.hit3,
-                m.hit1,
-                m.mr,
-                m.mrr
-            ));
+            rows.push(format!("{},{},{}", model.name(), tag, metrics_csv(&m)));
         }
     }
     write_csv(opts, "table5", "model,config,hit10,hit3,hit1,mr,mrr", &rows)
 }
 
 /// Table 6: Freebase accuracy, 1 GPU vs fastest (8 GPUs / 16 procs).
-fn table6(opts: &ReproOpts, manifest: &Manifest) -> Result<()> {
+fn table6(opts: &ReproOpts) -> Result<()> {
     println!("Table 6: freebase-syn accuracy, 1GPU vs Fastest (16 workers on 8 sim-GPUs)");
-    let dataset = Dataset::load("freebase-syn:0.02", opts.seed)?;
+    let dataset = Arc::new(Dataset::load("freebase-syn:0.02", opts.seed)?);
     println!("  {}", dataset.summary());
+    let manifest = crate::api::load_default_manifest()?;
     let models = [
         ModelKind::TransEL2,
         ModelKind::DistMult,
@@ -257,212 +243,142 @@ fn table6(opts: &ReproOpts, manifest: &Manifest) -> Result<()> {
         };
         for &(tag, workers) in configs {
             let (m, _) = train_eval(
-                &RunSpec {
-                    dataset: &dataset,
+                &TableRun {
                     model,
                     workers,
                     epochs: 4.0,
                     degree_frac: 0.5,
                     eval: freebase_eval(opts.seed),
                 },
-                manifest,
+                &dataset,
+                manifest.as_ref(),
                 opts,
             )?;
             print_metrics_block(&format!("{} {}", model.name(), tag), &m);
-            rows.push(format!(
-                "{},{},{:.4},{:.4},{:.4},{:.2},{:.4}",
-                model.name(),
-                tag,
-                m.hit10,
-                m.hit3,
-                m.hit1,
-                m.mr,
-                m.mrr
-            ));
+            rows.push(format!("{},{},{}", model.name(), tag, metrics_csv(&m)));
         }
     }
     write_csv(opts, "table6", "model,config,hit10,hit3,hit1,mr,mrr", &rows)
 }
 
 /// Table 7: distributed training accuracy — single vs random vs METIS.
-fn table7(opts: &ReproOpts, manifest: &Manifest) -> Result<()> {
+fn table7(opts: &ReproOpts) -> Result<()> {
     println!("Table 7: distributed accuracy on freebase-syn: single / random / METIS");
-    let dataset = Dataset::load("freebase-syn:0.02", opts.seed)?;
+    let dataset = Arc::new(Dataset::load("freebase-syn:0.02", opts.seed)?);
     println!("  {}", dataset.summary());
+    let manifest = crate::api::load_default_manifest()?;
     let mut rows = Vec::new();
     for model in [ModelKind::TransEL2, ModelKind::DistMult] {
-        let art = manifest.find_train(model.name(), "logistic", "default")?;
-        let epochs = 4.0 * opts.scale;
-        let total_batches =
-            ((dataset.train.len() as f64 * epochs) / art.batch as f64).ceil() as usize;
-
         // single machine baseline
         let (m_single, _) = train_eval(
-            &RunSpec {
-                dataset: &dataset,
+            &TableRun {
                 model,
                 workers: 8,
                 epochs: 4.0,
                 degree_frac: 0.0,
                 eval: freebase_eval(opts.seed),
             },
-            manifest,
+            &dataset,
+            manifest.as_ref(),
             opts,
         )?;
         print_metrics_block(&format!("{} single", model.name()), &m_single);
+        rows.push(format!("{},single,{}", model.name(), metrics_csv(&m_single)));
 
-        let mut dist_metrics = Vec::new();
         for strategy in [PartitionStrategy::Random, PartitionStrategy::Metis] {
-            let cfg = DistConfig {
-                model,
-                backend: opts.backend,
-                artifact_tag: "default".into(),
-                shape: (opts.backend == BackendKind::Native).then_some(
-                    crate::models::step::StepShape {
-                        batch: art.batch,
-                        chunks: art.chunks,
-                        neg_k: art.neg_k,
-                        dim: art.dim,
-                    },
-                ),
+            let mut spec = base_spec(opts, &dataset, model);
+            spec.mode = ParallelMode::Distributed {
                 machines: 4,
-                trainers_per_machine: 2,
-                servers_per_machine: 2,
+                trainers: 2,
+                servers: 2,
                 partition: strategy,
                 local_negatives: true,
-                batches_per_trainer: (total_batches / 8).max(1),
-                lr: 0.3,
-                seed: opts.seed,
-                ..Default::default()
             };
-            let (stats, mut cluster) = run_distributed(&dataset, Some(manifest), &cfg)?;
-            let ents = cluster.dump_entities(dataset.n_entities(), art.dim);
-            let rels = cluster.dump_relations(dataset.n_relations(), art.rel_dim);
-            cluster.shutdown();
-            let m = evaluate(model, &ents, &rels, &dataset, &dataset.test, &freebase_eval(opts.seed));
-            let name = match strategy {
-                PartitionStrategy::Random => "random",
-                PartitionStrategy::Metis => "metis",
-            };
-            print_metrics_block(&format!("{} {}", model.name(), name), &m);
+            spec.eval = Some(freebase_eval(opts.seed));
+            let total = epochs_to_batches(opts, &dataset, manifest.as_ref(), &spec, 4.0)?;
+            spec.batches = (total / 8).max(1);
+            let mut session = Session::with_dataset(spec, dataset.clone())?;
+            let report = session.train()?;
+            let m = report.metrics.expect("eval requested in spec");
+            print_metrics_block(&format!("{} {}", model.name(), strategy.name()), &m);
             println!(
                 "    locality={:.3} remote={:.1}MB local={:.1}MB",
-                stats.locality,
-                stats.remote_bytes as f64 / 1e6,
-                stats.local_bytes as f64 / 1e6
+                report.locality,
+                report.remote_bytes as f64 / 1e6,
+                report.local_bytes as f64 / 1e6
             );
-            dist_metrics.push((name, m));
-        }
-        rows.push(format!(
-            "{},single,{:.4},{:.4},{:.4},{:.2},{:.4}",
-            model.name(),
-            m_single.hit10,
-            m_single.hit3,
-            m_single.hit1,
-            m_single.mr,
-            m_single.mrr
-        ));
-        for (name, m) in dist_metrics {
-            rows.push(format!(
-                "{},{},{:.4},{:.4},{:.4},{:.2},{:.4}",
-                model.name(),
-                name,
-                m.hit10,
-                m.hit3,
-                m.hit1,
-                m.mr,
-                m.mrr
-            ));
+            rows.push(format!("{},{},{}", model.name(), strategy.name(), metrics_csv(&m)));
         }
     }
     write_csv(opts, "table7", "model,config,hit10,hit3,hit1,mr,mrr", &rows)
 }
 
 /// Tables 8/9: DGL-KE vs GraphVite-style accuracy at 1/4/8 workers.
-fn table89(opts: &ReproOpts, manifest: &Manifest, dataset_name: &str, out: &str) -> Result<()> {
+fn table89(opts: &ReproOpts, dataset_name: &str, out: &str) -> Result<()> {
     println!("{out}: DGL-KE vs GraphVite-style on {dataset_name}, 1/4/8 simulated GPUs");
-    let dataset = Dataset::load(dataset_name, opts.seed)?;
+    let dataset = Arc::new(Dataset::load(dataset_name, opts.seed)?);
     println!("  {}", dataset.summary());
+    let manifest = crate::api::load_default_manifest()?;
     let models = [ModelKind::TransEL2, ModelKind::DistMult, ModelKind::ComplEx, ModelKind::RotatE];
     let mut rows = Vec::new();
     for model in models {
-        let art = manifest.find_train(model.name(), "logistic", "default")?;
         for workers in [1usize, 4, 8] {
-            // DGL-KE
-            let (m, stats) = train_eval(
-                &RunSpec {
-                    dataset: &dataset,
+            // DGL-KE through the session API
+            let (m, report) = train_eval(
+                &TableRun {
                     model,
                     workers,
                     epochs: 2.0,
                     degree_frac: 0.0,
                     eval: full_eval(opts.seed, 300),
                 },
-                manifest,
+                &dataset,
+                manifest.as_ref(),
                 opts,
             )?;
             print_metrics_block(&format!("{} dglke x{}", model.name(), workers), &m);
             rows.push(format!(
-                "{},dglke,{},{:.4},{:.4},{:.4},{:.2},{:.4},{:.2}",
+                "{},dglke,{},{},{:.2}",
                 model.name(),
                 workers,
-                m.hit10,
-                m.hit3,
-                m.hit1,
-                m.mr,
-                m.mrr,
-                stats.sim_parallel_secs
+                metrics_csv(&m),
+                report.sim_parallel_secs
             ));
 
-            // GraphVite-style (same total batches)
-            let total_batches = ((dataset.train.len() as f64 * 2.0 * opts.scale)
-                / art.batch as f64)
-                .ceil() as usize;
+            // GraphVite-style baseline (same total batch budget, same shape)
+            let spec = base_spec(opts, &dataset, model);
+            let shape = resolve_shape(manifest.as_ref(), &spec)?;
+            let total = epochs_to_batches(opts, &dataset, manifest.as_ref(), &spec, 2.0)?;
             let gv_cfg = GraphViteConfig {
                 model,
                 backend: opts.backend,
                 artifact_tag: "default".into(),
-                shape: (opts.backend == BackendKind::Native).then_some(
-                    crate::models::step::StepShape {
-                        batch: art.batch,
-                        chunks: art.chunks,
-                        neg_k: art.neg_k,
-                        dim: art.dim,
-                    },
-                ),
+                shape: shape.native_override,
                 n_workers: workers,
                 episode_entities: 4096,
                 episode_batches: 40,
-                total_batches_per_worker: (total_batches / workers).max(1),
+                total_batches_per_worker: (total / workers).max(1),
                 lr: 0.3,
                 seed: opts.seed,
                 ..Default::default()
             };
-            let gv_state = ModelState::init(
-                &dataset,
-                model,
-                art.dim,
-                &TrainConfig { lr: 0.3, seed: opts.seed, ..Default::default() },
-            );
-            let gv_stats = run_graphvite(&dataset, &gv_state, Some(manifest), &gv_cfg)?;
+            let gv_state =
+                ModelState::init_with(&dataset, model, shape.step.dim, 0.3, 0.37, opts.seed);
+            let gv_stats = run_graphvite(&dataset, &gv_state, manifest.as_ref(), &gv_cfg)?;
             let gm = evaluate(
                 model,
                 &gv_state.entities,
                 &gv_state.relations,
                 &dataset,
                 &dataset.test,
-                &full_eval(opts.seed, 300),
+                &full_eval(opts.seed, 300).to_cfg(opts.seed),
             );
             print_metrics_block(&format!("{} graphvite x{}", model.name(), workers), &gm);
             rows.push(format!(
-                "{},graphvite,{},{:.4},{:.4},{:.4},{:.2},{:.4},{:.2}",
+                "{},graphvite,{},{},{:.2}",
                 model.name(),
                 workers,
-                gm.hit10,
-                gm.hit3,
-                gm.hit1,
-                gm.mr,
-                gm.mrr,
+                metrics_csv(&gm),
                 gv_stats.wall_secs
             ));
         }

@@ -1,0 +1,63 @@
+//! Stub PJRT executor, compiled when the `xla` cargo feature is off (the
+//! `xla` crate is not in the vendored dep set). Mirrors the API of
+//! `executor.rs` exactly; every entry point fails at runtime with an
+//! actionable message. The native backend is unaffected.
+
+use super::artifacts::{EvalArtifact, TrainArtifact};
+use crate::models::step::{StepGrads, StepInputs, StepShape};
+use anyhow::{bail, Result};
+
+const NO_XLA: &str =
+    "built without the `xla` feature — use `--backend native`, or rebuild with \
+     `cargo build --features xla` (requires the vendored xla crate)";
+
+/// Thread-local XLA runtime (stub).
+pub struct XlaRuntime {
+    _private: (),
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn compile_file(&self, _path: &std::path::Path) -> Result<()> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Compiled train-step executable (stub).
+pub struct TrainExecutor {
+    pub shape: StepShape,
+    pub rel_dim: usize,
+    pub key: String,
+}
+
+impl TrainExecutor {
+    pub fn new(_rt: &XlaRuntime, _art: &TrainArtifact) -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn step(&self, _inp: &StepInputs<'_>) -> Result<StepGrads> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Compiled eval-scoring executable (stub).
+pub struct EvalExecutor {
+    pub m: usize,
+    pub cands: usize,
+    pub dim: usize,
+    pub rel_dim: usize,
+    pub side: String,
+}
+
+impl EvalExecutor {
+    pub fn new(_rt: &XlaRuntime, _art: &EvalArtifact) -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn scores(&self, _e: &[f32], _r: &[f32], _cand: &[f32]) -> Result<Vec<f32>> {
+        bail!(NO_XLA)
+    }
+}

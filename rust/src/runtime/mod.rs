@@ -4,6 +4,10 @@
 
 pub mod artifacts;
 pub mod backend;
+#[cfg(feature = "xla")]
+pub mod executor;
+#[cfg(not(feature = "xla"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use artifacts::Manifest;

@@ -92,22 +92,51 @@ pub struct ModelState {
 
 impl ModelState {
     pub fn init(dataset: &Dataset, model: ModelKind, dim: usize, cfg: &TrainConfig) -> Self {
+        Self::init_with(dataset, model, dim, cfg.lr, cfg.init_scale, cfg.seed)
+    }
+
+    /// Initialize from bare hyperparameters (no `TrainConfig` needed —
+    /// used by the `api` session and the baseline trainers).
+    pub fn init_with(
+        dataset: &Dataset,
+        model: ModelKind,
+        dim: usize,
+        lr: f32,
+        init_scale: f32,
+        seed: u64,
+    ) -> Self {
         let rel_dim = model.rel_dim(dim);
         ModelState {
             entities: Arc::new(EmbeddingTable::uniform(
                 dataset.n_entities(),
                 dim,
-                cfg.init_scale,
-                cfg.seed ^ 0xE,
+                init_scale,
+                seed ^ 0xE,
             )),
             relations: Arc::new(EmbeddingTable::uniform(
                 dataset.n_relations(),
                 rel_dim,
-                cfg.init_scale,
-                cfg.seed ^ 0xF,
+                init_scale,
+                seed ^ 0xF,
             )),
-            ent_opt: Arc::new(SparseAdagrad::new(dataset.n_entities(), cfg.lr)),
-            rel_opt: Arc::new(SparseAdagrad::new(dataset.n_relations(), cfg.lr)),
+            ent_opt: Arc::new(SparseAdagrad::new(dataset.n_entities(), lr)),
+            rel_opt: Arc::new(SparseAdagrad::new(dataset.n_relations(), lr)),
+            dim,
+            rel_dim,
+        }
+    }
+
+    /// Placeholder state (zero tables, unit optimizers) for runs whose
+    /// real parameters live elsewhere — distributed KVStore shards
+    /// initialize and train server-side, and are dumped into this state
+    /// afterwards. Skips the (large) random init.
+    pub fn placeholder(dataset: &Dataset, model: ModelKind, dim: usize, lr: f32) -> Self {
+        let rel_dim = model.rel_dim(dim);
+        ModelState {
+            entities: Arc::new(EmbeddingTable::zeros(dataset.n_entities(), dim)),
+            relations: Arc::new(EmbeddingTable::zeros(dataset.n_relations(), rel_dim)),
+            ent_opt: Arc::new(SparseAdagrad::new(1, lr)),
+            rel_opt: Arc::new(SparseAdagrad::new(1, lr)),
             dim,
             rel_dim,
         }

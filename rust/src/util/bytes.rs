@@ -65,9 +65,16 @@ pub struct Reader<'a> {
     pos: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("decode error: {0} at offset {1}")]
+#[derive(Debug)]
 pub struct DecodeError(pub &'static str, pub usize);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error: {} at offset {}", self.0, self.1)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 impl<'a> Reader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {

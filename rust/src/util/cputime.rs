@@ -9,12 +9,53 @@
 
 use std::time::Duration;
 
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod imp {
+    use std::os::raw::{c_int, c_long};
+    use std::time::Duration;
+
+    // Layout of struct timespec on 64-bit Linux (time_t == c_long == i64).
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: c_long,
+        tv_nsec: c_long,
+    }
+
+    // Direct libc symbol (no `libc` crate in the vendored dep set); the C
+    // library is linked by default. The clockid value is Linux-specific,
+    // which is why this path is gated on target_os = "linux".
+    extern "C" {
+        fn clock_gettime(clk_id: c_int, tp: *mut Timespec) -> c_int;
+    }
+
+    const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
+
+    pub fn thread_cpu_time() -> Duration {
+        let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+        let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        assert_eq!(rc, 0, "clock_gettime failed");
+        Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+mod imp {
+    use std::time::{Duration, Instant};
+
+    // Fallback: wall-clock since first use on this thread (over-counts
+    // under time-sharing, but keeps the crate building everywhere).
+    thread_local! {
+        static START: Instant = Instant::now();
+    }
+
+    pub fn thread_cpu_time() -> Duration {
+        START.with(|s| s.elapsed())
+    }
+}
+
 /// CPU time consumed by the calling thread.
 pub fn thread_cpu_time() -> Duration {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
-    assert_eq!(rc, 0, "clock_gettime failed");
-    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+    imp::thread_cpu_time()
 }
 
 /// Stopwatch over thread CPU time.

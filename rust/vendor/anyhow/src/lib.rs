@@ -1,0 +1,229 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository has no access to crates.io, so
+//! this shim provides the (small) subset of anyhow's API the codebase uses:
+//!
+//! * [`Error`] — an opaque error value carrying a context chain;
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — construction macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (for any
+//!   `std::error::Error` *or* an `Error` itself) and on `Option`.
+//!
+//! Like the real anyhow, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From` impl and the
+//! dual `Context` impls coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error value: a message plus a chain of underlying causes.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recent) context; later entries are
+    /// successively deeper causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the context/cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod ext {
+    /// Anything `.context()` can turn into an [`crate::Error`]. Implemented
+    /// for all std errors and for `Error` itself; the two impls are coherent
+    /// because `Error` does not implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| format!("reading {}", "/definitely/not/a/file"))?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().starts_with("reading /definitely"));
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing").unwrap_err();
+        assert_eq!(err.to_string(), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(5).unwrap_err().to_string().contains("Condition failed"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let err = r.context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer");
+        assert_eq!(err.chain().collect::<Vec<_>>(), vec!["outer", "inner"]);
+    }
+}
