@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check check artifacts bench clean
+.PHONY: build test fmt fmt-check check artifacts bench bench-smoke clean
 
 build:
 	$(CARGO) build --release
@@ -27,6 +27,11 @@ check: build test fmt-check
 # despite the cd into python/.
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out $(abspath $(ARTIFACTS_DIR))
+
+# Storage-layer gather/scatter microbenchmark (dense vs sharded vs mmap);
+# small enough for CI, writes the BENCH_storage.json artifact.
+bench-smoke:
+	QUICK=1 $(CARGO) bench --bench bench_storage
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

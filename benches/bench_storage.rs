@@ -1,0 +1,86 @@
+//! Storage-backend microbenchmark: gather and scatter-update (AdaGrad)
+//! latency for the dense / sharded / mmap [`EmbeddingStore`] backends on
+//! the same table shape and id distribution. Writes `BENCH_storage.json`
+//! so the perf trajectory of the storage layer is tracked run-over-run
+//! (`make bench-smoke`).
+//!
+//! QUICK=1 shrinks the table for smoke runs.
+
+use dglke::store::{EmbeddingStore, SparseAdagrad, StoreConfig};
+use dglke::util::json::Json;
+use dglke::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn time_ms(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() * 1000.0 / iters as f64
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    let rows: usize = if quick { 20_000 } else { 200_000 };
+    let dim: usize = 64;
+    let n_ids: usize = 2048;
+    let iters = if quick { 8 } else { 32 };
+
+    let mut rng = Rng::seed_from_u64(7);
+    // unique ids: the trainers pre-accumulate duplicates before the
+    // optimizer, so the hot path sees unique rows
+    let ids: Vec<u64> =
+        rng.sample_distinct(rows, n_ids).into_iter().map(|x| x as u64).collect();
+    let grads: Vec<f32> = (0..n_ids * dim).map(|_| rng.gen_normal() * 0.01).collect();
+
+    let tmp = std::env::temp_dir().join(format!("dglke-bench-storage-{}", std::process::id()));
+    let configs = [
+        ("dense", StoreConfig::dense()),
+        ("sharded", StoreConfig::sharded(8)),
+        ("mmap", StoreConfig::mmap(tmp.to_string_lossy().into_owned())),
+    ];
+
+    println!("storage microbench: rows={rows} dim={dim} batch_ids={n_ids} iters={iters}");
+    let mut backends = BTreeMap::new();
+    for (name, cfg) in configs {
+        let cfg = cfg.resolved()?;
+        let table = cfg.uniform(&format!("bench_{name}"), rows, dim, 0.4, 1)?;
+        let opt = SparseAdagrad::with_storage(&cfg, &format!("bench_{name}.opt"), rows, 0.05)?;
+        let mut out = vec![0f32; n_ids * dim];
+
+        let gather_ms = time_ms(iters, || table.gather(&ids, &mut out));
+        let update_ms = time_ms(iters, || opt.apply(&*table, &ids, &grads));
+        println!("  {name:8} gather {gather_ms:9.3} ms   adagrad update {update_ms:9.3} ms");
+
+        backends.insert(
+            name.to_string(),
+            obj(vec![
+                ("gather_ms", Json::Num(gather_ms)),
+                ("update_ms", Json::Num(update_ms)),
+                ("resident_bytes", Json::Num(table.resident_bytes() as f64)),
+            ]),
+        );
+    }
+
+    let report = obj(vec![
+        ("rows", Json::Num(rows as f64)),
+        ("dim", Json::Num(dim as f64)),
+        ("batch_ids", Json::Num(n_ids as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("backends", Json::Obj(backends)),
+    ]);
+    std::fs::write("BENCH_storage.json", report.to_string())?;
+    println!("[wrote BENCH_storage.json]");
+    std::fs::remove_dir_all(&tmp).ok();
+    Ok(())
+}

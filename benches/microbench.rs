@@ -8,7 +8,7 @@ use dglke::models::step::StepInputs;
 use dglke::models::ModelKind;
 use dglke::runtime::{TrainExecutor, XlaRuntime};
 use dglke::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
-use dglke::store::{EmbeddingTable, SparseAdagrad};
+use dglke::store::{DenseStore, SparseAdagrad};
 use dglke::train::batch::{split_grads, BatchBuffers};
 use std::time::Instant;
 
@@ -31,8 +31,8 @@ fn main() -> anyhow::Result<()> {
     let shape = exe.shape;
     let rel_dim = exe.rel_dim;
 
-    let entities = EmbeddingTable::uniform(dataset.n_entities(), shape.dim, 0.4, 1);
-    let relations = EmbeddingTable::uniform(dataset.n_relations(), rel_dim, 0.4, 2);
+    let entities = DenseStore::uniform(dataset.n_entities(), shape.dim, 0.4, 1);
+    let relations = DenseStore::uniform(dataset.n_relations(), rel_dim, 0.4, 2);
     let ent_opt = SparseAdagrad::new(dataset.n_entities(), 0.1);
 
     let mut pos = PositiveSampler::over_all(&dataset.train, 3);

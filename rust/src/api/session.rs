@@ -11,9 +11,9 @@ use crate::eval::{evaluate, Metrics};
 use crate::kg::Dataset;
 use crate::models::step::StepShape;
 use crate::runtime::{artifacts, BackendKind, Manifest};
+use crate::store::{EmbeddingStore, StoreBackendKind};
 use crate::train::worker::ModelState;
 use crate::train::{run_training, Hardware, TrainConfig};
-use crate::util::bytes::{Reader, Writer};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
@@ -134,6 +134,26 @@ impl Session {
             spec.model.name(),
             dim
         );
+        // in-memory budget: dense/sharded tables (embeddings + optimizer
+        // state) must fit. Only single-machine mmap runs are exempt —
+        // distributed runs materialize dense tables on the in-process
+        // KVStore servers regardless of the declared backend.
+        if let Some(mb) = spec.storage.budget_mb {
+            let rel_dim = spec.model.rel_dim(dim);
+            let need = ((dataset.n_entities() * (dim + 1) + dataset.n_relations() * (rel_dim + 1))
+                * 4) as u64;
+            let budget = (mb * (1u64 << 20) as f64) as u64;
+            let on_disk = spec.storage.backend == StoreBackendKind::Mmap
+                && matches!(spec.mode, ParallelMode::Single { .. });
+            if !on_disk {
+                anyhow::ensure!(
+                    need <= budget,
+                    "embedding tables need {need} bytes but storage.budget_mb is {mb} MiB — \
+                     use {{\"storage\": {{\"backend\": \"mmap\"}}}} in a single-machine run for \
+                     larger-than-RAM tables (distributed servers hold dense shards in memory)",
+                );
+            }
+        }
         let state = match spec.mode {
             // distributed runs initialize per-shard on the KVStore servers
             // (id-derived RNG) and dump into this state after training, so
@@ -141,9 +161,15 @@ impl Session {
             ParallelMode::Distributed { .. } => {
                 ModelState::placeholder(&dataset, spec.model, dim, spec.lr)
             }
-            ParallelMode::Single { .. } => {
-                ModelState::init_with(&dataset, spec.model, dim, spec.lr, spec.init_scale, spec.seed)
-            }
+            ParallelMode::Single { .. } => ModelState::init_with_storage(
+                &dataset,
+                spec.model,
+                dim,
+                spec.lr,
+                spec.init_scale,
+                spec.seed,
+                &spec.storage,
+            )?,
         };
         Ok(Session { spec, dataset, manifest, shape, state })
     }
@@ -230,6 +256,7 @@ impl Session {
                     neg_degree_frac: self.spec.neg_degree_frac,
                     seed: self.spec.seed,
                     log_every: self.spec.log_every,
+                    storage: self.spec.storage.clone(),
                 };
                 let (stats, mut cluster) =
                     run_distributed(&self.dataset, self.manifest.as_ref(), &cfg)?;
@@ -237,8 +264,8 @@ impl Session {
                 let ents = cluster.dump_entities(self.dataset.n_entities(), self.dim());
                 let rels = cluster.dump_relations(self.dataset.n_relations(), self.state.rel_dim);
                 cluster.shutdown();
-                self.state.entities = Arc::new(ents);
-                self.state.relations = Arc::new(rels);
+                self.state.entities = ents;
+                self.state.relations = rels;
                 Report::from_dist(&stats)
             }
         };
@@ -267,7 +294,10 @@ impl Session {
 
     /// Export the embedding tables to `dir` as a checkpoint:
     /// `checkpoint.json` (metadata) + `entities.f32` / `relations.f32`
-    /// (length-prefixed little-endian f32 rows).
+    /// (length-prefixed little-endian f32 rows). Rows are *streamed*
+    /// through a bounded buffer ([`EmbeddingStore::export_rows`]) — no
+    /// full-table clone, so checkpointing an mmap-backed table never
+    /// allocates table-sized memory.
     pub fn export_embeddings(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
@@ -287,10 +317,15 @@ impl Session {
         for (file, table) in
             [("entities.f32", &self.state.entities), ("relations.f32", &self.state.relations)]
         {
-            let snap = table.snapshot();
-            let mut w = Writer::with_capacity(snap.len() * 4 + 8);
-            w.f32_slice(&snap);
-            std::fs::write(dir.join(file), &w.buf)?;
+            let path = dir.join(file);
+            let f = std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?;
+            let mut w = std::io::BufWriter::new(f);
+            use std::io::Write;
+            // same framing as util::bytes::Writer::f32_slice
+            w.write_all(&(table.n_params() as u64).to_le_bytes())?;
+            table.export_rows(&mut w)?;
+            w.flush()?;
         }
         Ok(())
     }
@@ -330,20 +365,43 @@ impl Session {
         for (file, table) in
             [("entities.f32", &self.state.entities), ("relations.f32", &self.state.relations)]
         {
+            // stream rows through a bounded buffer — symmetric with
+            // export_embeddings, so loading never allocates table-sized
+            // memory either
             let path = dir.join(file);
-            let bytes = std::fs::read(&path)
+            let f = std::fs::File::open(&path)
                 .with_context(|| format!("reading {}", path.display()))?;
-            let rows = Reader::new(&bytes)
-                .f32_vec()
+            let mut rd = std::io::BufReader::new(f);
+            use std::io::Read;
+            let mut len8 = [0u8; 8];
+            rd.read_exact(&mut len8)
                 .with_context(|| format!("decoding {}", path.display()))?;
+            let n_values = u64::from_le_bytes(len8) as usize;
             anyhow::ensure!(
-                rows.len() == table.rows() * table.dim(),
+                n_values == table.n_params(),
                 "{file}: expected {} values, found {}",
-                table.rows() * table.dim(),
-                rows.len()
+                table.n_params(),
+                n_values
             );
-            for i in 0..table.rows() {
-                table.set_row(i, &rows[i * table.dim()..(i + 1) * table.dim()]);
+            let dim = table.dim();
+            let rows = table.rows();
+            if rows == 0 || dim == 0 {
+                continue;
+            }
+            let chunk_rows = crate::store::chunk_rows_for(dim, rows);
+            let mut buf = vec![0f32; chunk_rows * dim];
+            let mut row = 0;
+            while row < rows {
+                let take = chunk_rows.min(rows - row);
+                let n_values = take * dim;
+                // decode straight into the reused f32 buffer (LE hosts)
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, n_values * 4)
+                };
+                rd.read_exact(bytes)
+                    .with_context(|| format!("decoding {}", path.display()))?;
+                table.set_rows(row, &buf[..n_values]);
+                row += take;
             }
         }
         Ok(())
@@ -493,6 +551,12 @@ impl SessionBuilder {
 
     pub fn eval(mut self, eval: super::spec::EvalSpec) -> Self {
         self.spec.eval = Some(eval);
+        self
+    }
+
+    /// Embedding-storage backend (dense / sharded / mmap).
+    pub fn storage(mut self, storage: crate::store::StoreConfig) -> Self {
+        self.spec.storage = storage;
         self
     }
 

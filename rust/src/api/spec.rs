@@ -30,6 +30,11 @@
 //!                                            //     "max_triplets":500,"n_threads":4}
 //!                                            // or {"protocol":"sampled",
 //!                                            //     "uniform":1000,"degree":1000,...}
+//!   "storage": {"backend": "dense",          // "dense" | "sharded" | "mmap"
+//!               "shards": 8,                 // sharded backend only
+//!               "dir": null,                 // mmap backing dir (null = temp)
+//!               "budget_mb": null},          // in-memory budget; tables over
+//!                                            // it must use the mmap backend
 //!   "seed": 0
 //! }
 //! ```
@@ -41,6 +46,7 @@ use crate::dist::PartitionStrategy;
 use crate::models::step::StepShape;
 use crate::models::{LossCfg, LossKind, ModelKind};
 use crate::runtime::BackendKind;
+use crate::store::{StoreBackendKind, StoreConfig};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -154,6 +160,8 @@ pub struct RunSpec {
     pub shape: Option<StepShape>,
     /// evaluation to run after training (`None` = skip)
     pub eval: Option<EvalSpec>,
+    /// embedding-storage backend (dense / sharded / mmap) and its knobs
+    pub storage: StoreConfig,
     /// limited to 2^53 so the JSON round-trip (f64 numbers) is exact;
     /// `validate()` rejects larger seeds
     pub seed: u64,
@@ -178,6 +186,7 @@ impl Default for RunSpec {
             log_every: 50,
             shape: None,
             eval: None,
+            storage: StoreConfig::default(),
             seed: 0,
         }
     }
@@ -295,6 +304,15 @@ impl RunSpec {
                 obj(entries)
             }
         };
+        let storage = obj(vec![
+            ("backend", Json::Str(self.storage.backend.name().into())),
+            ("shards", Json::Num(self.storage.shards as f64)),
+            (
+                "dir",
+                self.storage.dir.as_ref().map(|d| Json::Str(d.clone())).unwrap_or(Json::Null),
+            ),
+            ("budget_mb", self.storage.budget_mb.map(Json::Num).unwrap_or(Json::Null)),
+        ]);
         obj(vec![
             ("dataset", Json::Str(self.dataset.clone())),
             ("model", Json::Str(self.model.name().into())),
@@ -318,6 +336,7 @@ impl RunSpec {
             ("log_every", Json::Num(self.log_every as f64)),
             ("shape", self.shape.as_ref().map(shape_to_json).unwrap_or(Json::Null)),
             ("eval", eval),
+            ("storage", storage),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -411,6 +430,32 @@ impl RunSpec {
             }
         };
 
+        let storage = match j.get("storage") {
+            None | Some(Json::Null) => StoreConfig::default(),
+            Some(s) => {
+                let backend_name = get_str(s, "backend", "dense")?;
+                let backend = StoreBackendKind::parse(&backend_name)
+                    .ok_or_else(|| anyhow!("unknown storage backend {backend_name:?}"))?;
+                let dir = match s.get("dir") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Str(d)) => Some(d.clone()),
+                    Some(_) => bail!("field \"storage.dir\" must be a string"),
+                };
+                let budget_mb = match s.get("budget_mb") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_f64().ok_or_else(|| {
+                        anyhow!("field \"storage.budget_mb\" must be a number")
+                    })?),
+                };
+                StoreConfig {
+                    backend,
+                    shards: get_usize(s, "shards", StoreConfig::default().shards)?,
+                    dir,
+                    budget_mb,
+                }
+            }
+        };
+
         Ok(RunSpec {
             dataset: get_str(j, "dataset", &d.dataset)?,
             model,
@@ -428,6 +473,7 @@ impl RunSpec {
             log_every: get_usize(j, "log_every", d.log_every)?,
             shape,
             eval,
+            storage,
             seed: get_usize(j, "seed", d.seed as usize)? as u64,
         })
     }
@@ -470,6 +516,7 @@ impl RunSpec {
             );
         }
         anyhow::ensure!(self.sync_interval >= 1, "sync_interval must be >= 1");
+        self.storage.validate()?;
         anyhow::ensure!(
             self.seed <= (1u64 << 53),
             "seed {} exceeds 2^53 and would not survive the JSON round-trip",
@@ -528,10 +575,32 @@ mod tests {
                 max_triplets: 40,
                 n_threads: 2,
             }),
+            storage: StoreConfig {
+                backend: StoreBackendKind::Mmap,
+                shards: 4,
+                dir: Some("/tmp/dglke-tables".into()),
+                budget_mb: Some(512.5),
+            },
             seed: 99,
         };
         let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn storage_spec_parses_and_defaults() {
+        let spec = RunSpec::from_json_str(r#"{"storage": {"backend": "sharded", "shards": 16}}"#)
+            .unwrap();
+        assert_eq!(spec.storage.backend, StoreBackendKind::Sharded);
+        assert_eq!(spec.storage.shards, 16);
+        assert_eq!(spec.storage.dir, None);
+        // absent → dense default
+        let spec = RunSpec::from_json_str("{}").unwrap();
+        assert_eq!(spec.storage, StoreConfig::default());
+        // unknown backend rejected
+        assert!(RunSpec::from_json_str(r#"{"storage": {"backend": "ssd"}}"#).is_err());
+        // wrong-typed budget rejected, not silently dropped
+        assert!(RunSpec::from_json_str(r#"{"storage": {"budget_mb": "256"}}"#).is_err());
     }
 
     #[test]
@@ -573,5 +642,13 @@ mod tests {
         let mut spec = RunSpec::default();
         spec.shape = Some(StepShape { batch: 30, chunks: 4, neg_k: 8, dim: 16 });
         assert!(spec.validate().is_err(), "batch must divide by chunks");
+
+        let mut spec = RunSpec::default();
+        spec.storage.shards = 0;
+        assert!(spec.validate().is_err(), "zero shards");
+
+        let mut spec = RunSpec::default();
+        spec.storage.budget_mb = Some(-1.0);
+        assert!(spec.validate().is_err(), "negative budget");
     }
 }

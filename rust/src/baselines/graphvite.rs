@@ -16,7 +16,7 @@ use crate::kg::Dataset;
 use crate::models::step::{StepInputs, StepShape};
 use crate::models::{LossCfg, ModelKind};
 use crate::runtime::{BackendKind, Manifest, TrainBackend};
-use crate::store::{EmbeddingTable, SparseAdagrad};
+use crate::store::{DenseStore, EmbeddingStore, SparseAdagrad};
 use crate::train::device::TransferLedger;
 use crate::train::worker::ModelState;
 use crate::util::rng::Rng;
@@ -129,13 +129,17 @@ pub fn run_graphvite(
                 episodes_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
 
                 // --- copy-in: episode embeddings to the "GPU buffer" ---
-                let local_ents = EmbeddingTable::zeros(n_sub, shape.dim);
+                let mut ent_buf = vec![0f32; shape.dim];
+                let local_ents = DenseStore::zeros(n_sub, shape.dim);
                 for (local, &global) in sub.iter().enumerate() {
-                    local_ents.set_row(local, state.entities.row(global));
+                    state.entities.read_row(global, &mut ent_buf);
+                    local_ents.set_row(local, &ent_buf);
                 }
-                let local_rels = EmbeddingTable::zeros(dataset.n_relations(), rel_dim);
+                let mut rel_buf = vec![0f32; rel_dim];
+                let local_rels = DenseStore::zeros(dataset.n_relations(), rel_dim);
                 for r in 0..dataset.n_relations() {
-                    local_rels.set_row(r, state.relations.row(r));
+                    state.relations.read_row(r, &mut rel_buf);
+                    local_rels.set_row(r, &rel_buf);
                 }
                 let local_ent_opt = SparseAdagrad::new(n_sub, cfg.lr);
                 let local_rel_opt = SparseAdagrad::new(dataset.n_relations(), cfg.lr);
@@ -191,8 +195,8 @@ pub fn run_graphvite(
                     };
                     let (ent_g, rel_g) =
                         crate::train::batch::split_grads(&batch, &grads, shape.dim, rel_dim);
-                    local_ent_opt.apply(&local_ents, &ent_g.ids, &ent_g.rows);
-                    local_rel_opt.apply(&local_rels, &rel_g.ids, &rel_g.rows);
+                    local_ent_opt.apply_unique(&local_ents, &ent_g.ids, &ent_g.rows);
+                    local_rel_opt.apply_unique(&local_rels, &rel_g.ids, &rel_g.rows);
                     step += 1;
                 }
 

@@ -21,7 +21,7 @@ use crate::models::step::StepShape;
 use crate::models::{LossCfg, ModelKind};
 use crate::runtime::{BackendKind, Manifest, TrainBackend};
 use crate::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
-use crate::store::EmbeddingTable;
+use crate::store::EmbeddingStore;
 use crate::train::batch::{split_grads, BatchBuffers};
 use crate::train::worker::ModelState;
 use crate::util::rng::Rng;
@@ -92,7 +92,8 @@ impl DenseRelOptimizer {
     /// Full-table pass: every row is read and written (grad rows for the
     /// batch's relations, zero-grad elsewhere — but PBG's dense optimizer
     /// walks the whole tensor regardless).
-    fn apply_dense(&self, table: &EmbeddingTable, sparse_ids: &[u64], sparse_rows: &[f32]) {
+    #[allow(clippy::erasing_op)]
+    fn apply_dense(&self, table: &dyn EmbeddingStore, sparse_ids: &[u64], sparse_rows: &[f32]) {
         let dim = table.dim();
         let state = unsafe { &mut *self.state.get() };
         // index sparse grads
@@ -101,7 +102,6 @@ impl DenseRelOptimizer {
             grad_of.insert(id as usize, j);
         }
         for row_id in 0..table.rows() {
-            let row = unsafe { table.row_mut(row_id) };
             match grad_of.get(&row_id) {
                 Some(&j) => {
                     let g = &sparse_rows[j * dim..(j + 1) * dim];
@@ -111,16 +111,20 @@ impl DenseRelOptimizer {
                     }
                     state[row_id] += sum_sq / dim as f32;
                     let scale = self.lr / (state[row_id] + 1e-10).sqrt();
-                    for (x, &gx) in row.iter_mut().zip(g) {
-                        *x -= scale * gx;
-                    }
+                    table.update_row(row_id, &mut |row| {
+                        for (x, &gx) in row.iter_mut().zip(g) {
+                            *x -= scale * gx;
+                        }
+                    });
                 }
                 None => {
                     // zero grad: dense optimizer still reads+writes the row
                     let scale = self.lr / (state[row_id] + 1e-10).sqrt();
-                    for x in row.iter_mut() {
-                        *x -= scale * 0.0;
-                    }
+                    table.update_row(row_id, &mut |row| {
+                        for x in row.iter_mut() {
+                            *x -= scale * 0.0;
+                        }
+                    });
                 }
             }
         }
@@ -208,7 +212,7 @@ pub fn run_pbg(
                     }
                     let (ent_g, rel_g) =
                         split_grads(&batch, &grads, shape.dim, rel_dim);
-                    state.ent_opt.apply(&state.entities, &ent_g.ids, &ent_g.rows);
+                    state.ent_opt.apply_unique(&state.entities, &ent_g.ids, &ent_g.rows);
                     // THE PBG COST: dense pass over the whole relation table
                     rel_opt.apply_dense(&state.relations, &rel_g.ids, &rel_g.rows);
                     step += 1;

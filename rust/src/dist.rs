@@ -78,6 +78,8 @@ pub struct DistConfig {
     pub seed: u64,
     /// record loss every this many batches (trainer 0 only)
     pub log_every: usize,
+    /// storage backend for the per-server embedding shards
+    pub storage: crate::store::StoreConfig,
 }
 
 impl Default for DistConfig {
@@ -99,6 +101,7 @@ impl Default for DistConfig {
             neg_degree_frac: 0.0,
             seed: 0,
             log_every: 50,
+            storage: crate::store::StoreConfig::default(),
         }
     }
 }
@@ -174,7 +177,7 @@ pub fn run_distributed(
     let locality = partition.locality(&dataset.train);
 
     let (shape_override, dim, rel_dim) = resolve_dims(cfg, manifest)?;
-    let cluster = KvCluster::start(
+    let cluster = KvCluster::start_with_storage(
         &partition.entity_part,
         dataset.n_relations(),
         cfg.machines,
@@ -184,6 +187,7 @@ pub fn run_distributed(
         cfg.lr,
         cfg.init_scale,
         cfg.seed,
+        &cfg.storage,
     )?;
 
     // Per-machine positive index sets and local negative pools, shared
@@ -350,6 +354,7 @@ fn trainer_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::EmbeddingStore;
 
     fn tiny_cfg() -> DistConfig {
         DistConfig {
@@ -407,7 +412,7 @@ mod tests {
         // row 0 equals the owning shard's slot
         let s = cluster.placement.ent_server[0] as usize;
         let slot = cluster.placement.ent_slot[0] as usize;
-        assert_eq!(ents.row(0), cluster.states[s].ents.row(slot));
+        assert_eq!(ents.row_vec(0), cluster.states[s].ents.row_vec(slot));
         cluster.shutdown();
     }
 }

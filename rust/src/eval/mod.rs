@@ -16,7 +16,7 @@ pub use metrics::{Metrics, RankAccumulator};
 
 use crate::kg::{Dataset, TripletSet, TripletStore};
 use crate::models::{EvalSide, LossCfg, ModelKind, NativeModel};
-use crate::store::EmbeddingTable;
+use crate::store::EmbeddingStore;
 use crate::util::alias::AliasTable;
 use crate::util::rng::Rng;
 use crate::util::topk::rank_of;
@@ -49,11 +49,13 @@ impl Default for EvalConfig {
     }
 }
 
-/// Evaluate link prediction of trained embeddings on `test`.
+/// Evaluate link prediction of trained embeddings on `test`. Reads the
+/// tables only through the [`EmbeddingStore`] trait, so any backend
+/// (dense / sharded / mmap) evaluates identically.
 pub fn evaluate(
     model: ModelKind,
-    entities: &EmbeddingTable,
-    relations: &EmbeddingTable,
+    entities: &dyn EmbeddingStore,
+    relations: &dyn EmbeddingStore,
     dataset: &Dataset,
     test: &TripletStore,
     cfg: &EvalConfig,
@@ -92,11 +94,15 @@ pub fn evaluate(
         let mut rng = Rng::seed_from_u64(cfg.seed ^ (w as u64 + 0x5EED));
         let mut cand_buf: Vec<f32> = Vec::new();
         let mut score_buf: Vec<f32> = Vec::new();
+        let mut id_buf: Vec<u64> = Vec::new();
+        let mut h_emb = vec![0f32; dim];
+        let mut t_emb = vec![0f32; dim];
+        let mut r_emb = vec![0f32; relations.dim()];
         for &ti in &idx[ranges[w].clone()] {
             let t = test.get(ti);
-            let h_emb = entities.row(t.head as usize).to_vec();
-            let t_emb = entities.row(t.tail as usize).to_vec();
-            let r_emb = relations.row(t.rel as usize).to_vec();
+            entities.read_row(t.head as usize, &mut h_emb);
+            entities.read_row(t.tail as usize, &mut t_emb);
+            relations.read_row(t.rel as usize, &mut r_emb);
             let pos_score = native.score_one(&h_emb, &r_emb, &t_emb);
 
             for side in [EvalSide::Tail, EvalSide::Head] {
@@ -137,11 +143,10 @@ pub fn evaluate(
                 let mut ranks_scores: Vec<f32> = Vec::with_capacity(cand_ids.len());
                 const BLOCK: usize = 4096;
                 for block in cand_ids.chunks(BLOCK) {
-                    cand_buf.clear();
-                    cand_buf.reserve(block.len() * dim);
-                    for &c in block {
-                        cand_buf.extend_from_slice(entities.row(c as usize));
-                    }
+                    id_buf.clear();
+                    id_buf.extend(block.iter().map(|&c| c as u64));
+                    cand_buf.resize(block.len() * dim, 0.0);
+                    entities.gather(&id_buf, &mut cand_buf);
                     score_buf.resize(block.len(), 0.0);
                     native.eval_scores(side, kept, kept_r, &cand_buf, &mut score_buf);
                     ranks_scores.extend_from_slice(&score_buf);

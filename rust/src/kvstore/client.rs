@@ -217,6 +217,7 @@ impl Drop for KvClient {
 mod tests {
     use super::*;
     use crate::kvstore::server::KvServer;
+    use crate::store::EmbeddingStore;
 
     /// 2 machines × 1 server, 8 entities striped, 4 relations.
     fn cluster() -> (Vec<KvServer>, Arc<Placement>, Vec<Arc<ServerState>>, Vec<std::net::SocketAddr>) {
@@ -257,7 +258,7 @@ mod tests {
         assert_eq!(&out[3 * 4..4 * 4], &out[4 * 4..5 * 4]);
         // values match server state directly
         let (s, slot) = (placement.ent_server[7] as usize, placement.ent_slot[7] as usize);
-        assert_eq!(&out[5 * 4..6 * 4], states[s].ents.row(slot));
+        assert_eq!(&out[5 * 4..6 * 4], states[s].ents.row_vec(slot).as_slice());
         assert!(ledger.local() > 0, "machine-0 ids should use fast path");
         assert!(ledger.remote() > 0, "machine-1 ids should use TCP");
     }
@@ -270,9 +271,9 @@ mod tests {
             KvClient::connect(0, placement.clone(), &states, &addrs, ledger).unwrap();
         // entity 1 lives on machine 1 (remote from machine 0)
         let (s, slot) = (placement.ent_server[1] as usize, placement.ent_slot[1] as usize);
-        let before = states[s].ents.row(slot).to_vec();
+        let before = states[s].ents.row_vec(slot);
         client.push(TableId::Entities, &[1], 4, &[1.0, 1.0, 1.0, 1.0]).unwrap();
-        assert_ne!(states[s].ents.row(slot), before.as_slice());
+        assert_ne!(states[s].ents.row_vec(slot), before);
     }
 
     #[test]
@@ -286,7 +287,7 @@ mod tests {
         for (j, &id) in ids.iter().enumerate() {
             let (s, slot) =
                 (placement.rel_server[id as usize] as usize, placement.rel_slot[id as usize] as usize);
-            assert_eq!(&out[j * 4..(j + 1) * 4], states[s].rels.row(slot), "rel {id}");
+            assert_eq!(&out[j * 4..(j + 1) * 4], states[s].rels.row_vec(slot).as_slice(), "rel {id}");
         }
     }
 

@@ -18,7 +18,7 @@ pub use placement::Placement;
 pub use protocol::TableId;
 pub use server::{KvServer, ServerState};
 
-use crate::store::EmbeddingTable;
+use crate::store::{DenseStore, EmbeddingStore};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -32,7 +32,7 @@ pub struct KvCluster {
 }
 
 impl KvCluster {
-    /// Boot servers for the given entity→machine assignment.
+    /// Boot servers for the given entity→machine assignment (dense shards).
     #[allow(clippy::too_many_arguments)]
     pub fn start(
         entity_machine: &[u32],
@@ -45,6 +45,36 @@ impl KvCluster {
         init_scale: f32,
         seed: u64,
     ) -> Result<KvCluster> {
+        Self::start_with_storage(
+            entity_machine,
+            n_relations,
+            machines,
+            servers_per_machine,
+            dim,
+            rel_dim,
+            lr,
+            init_scale,
+            seed,
+            &crate::store::StoreConfig::dense(),
+        )
+    }
+
+    /// Boot servers with shard tables on an explicit storage backend —
+    /// each server hosts one partition of the global table on dense,
+    /// sharded, or file-backed (mmap) storage.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_storage(
+        entity_machine: &[u32],
+        n_relations: usize,
+        machines: usize,
+        servers_per_machine: usize,
+        dim: usize,
+        rel_dim: usize,
+        lr: f32,
+        init_scale: f32,
+        seed: u64,
+        storage: &crate::store::StoreConfig,
+    ) -> Result<KvCluster> {
         let placement = Arc::new(Placement::build(
             entity_machine,
             n_relations,
@@ -56,7 +86,8 @@ impl KvCluster {
         let mut addrs = Vec::new();
         let mut servers = Vec::new();
         for s in 0..placement.n_servers() {
-            let state = Arc::new(ServerState::init(
+            let state = Arc::new(ServerState::init_with_storage(
+                &format!("server{s}"),
                 &placement.ent_ids_of_server[s],
                 &placement.rel_ids_of_server[s],
                 dim,
@@ -64,7 +95,8 @@ impl KvCluster {
                 lr,
                 init_scale,
                 seed,
-            ));
+                storage,
+            )?);
             let server = KvServer::start(state.clone())?;
             addrs.push(server.addr);
             states.push(state);
@@ -85,25 +117,29 @@ impl KvCluster {
     }
 
     /// Snapshot all entity embeddings into a dense table (for evaluation).
-    pub fn dump_entities(&self, n_entities: usize, dim: usize) -> EmbeddingTable {
-        let table = EmbeddingTable::zeros(n_entities, dim);
+    pub fn dump_entities(&self, n_entities: usize, dim: usize) -> Arc<dyn EmbeddingStore> {
+        let table = DenseStore::zeros(n_entities, dim);
+        let mut buf = vec![0f32; dim];
         for s in 0..self.placement.n_servers() {
             for (slot, &id) in self.placement.ent_ids_of_server[s].iter().enumerate() {
-                table.set_row(id as usize, self.states[s].ents.row(slot));
+                self.states[s].ents.read_row(slot, &mut buf);
+                table.set_row(id as usize, &buf);
             }
         }
-        table
+        Arc::new(table)
     }
 
     /// Snapshot all relation embeddings.
-    pub fn dump_relations(&self, n_relations: usize, rel_dim: usize) -> EmbeddingTable {
-        let table = EmbeddingTable::zeros(n_relations, rel_dim);
+    pub fn dump_relations(&self, n_relations: usize, rel_dim: usize) -> Arc<dyn EmbeddingStore> {
+        let table = DenseStore::zeros(n_relations, rel_dim);
+        let mut buf = vec![0f32; rel_dim];
         for s in 0..self.placement.n_servers() {
             for (slot, &id) in self.placement.rel_ids_of_server[s].iter().enumerate() {
-                table.set_row(id as usize, self.states[s].rels.row(slot));
+                self.states[s].rels.read_row(slot, &mut buf);
+                table.set_row(id as usize, &buf);
             }
         }
-        table
+        Arc::new(table)
     }
 
     pub fn shutdown(&mut self) {
@@ -124,7 +160,7 @@ mod tests {
         let ents = cluster.dump_entities(20, 4);
         // init is id-derived: independent single-table init must match
         let state = ServerState::init(&[7], &[], 4, 4, 0.1, 0.2, 5);
-        assert_eq!(ents.row(7), state.ents.row(0));
+        assert_eq!(ents.row_vec(7), state.ents.row_vec(0));
         let rels = cluster.dump_relations(6, 4);
         assert_eq!(rels.rows(), 6);
     }
@@ -139,7 +175,7 @@ mod tests {
         let mut out = vec![0f32; 12 * 4];
         client.pull(TableId::Entities, &ids, 4, &mut out).unwrap();
         for i in 0..12 {
-            assert_eq!(&out[i * 4..(i + 1) * 4], dump.row(i));
+            assert_eq!(&out[i * 4..(i + 1) * 4], dump.row_vec(i).as_slice());
         }
     }
 }

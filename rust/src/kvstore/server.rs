@@ -10,17 +10,20 @@
 //!   speak the frame protocol; one service thread per connection.
 
 use super::protocol::*;
-use crate::store::{EmbeddingTable, SparseAdagrad};
+use crate::store::{EmbeddingStore, SparseAdagrad, StoreConfig};
 use anyhow::Result;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// In-memory state of one server (shared-memory fast path operates on
-/// this directly).
+/// this directly). The shard tables sit behind [`EmbeddingStore`], so a
+/// server shard can be hosted on any backend (dense by default; sharded /
+/// mmap via [`ServerState::init_with_storage`]) — each server *is* one
+/// explicit partition of the global table.
 pub struct ServerState {
-    pub ents: EmbeddingTable,
-    pub rels: EmbeddingTable,
+    pub ents: Arc<dyn EmbeddingStore>,
+    pub rels: Arc<dyn EmbeddingStore>,
     pub ent_opt: SparseAdagrad,
     pub rel_opt: SparseAdagrad,
     /// ops served (pulls, pushes) — diagnostics
@@ -29,9 +32,7 @@ pub struct ServerState {
 }
 
 impl ServerState {
-    /// Initialize shard tables. Row init is derived from the *global* id,
-    /// so embeddings are identical regardless of placement — single-node
-    /// and distributed runs start from the same model.
+    /// Initialize shard tables on the default dense backend.
     pub fn init(
         ent_ids: &[u64],
         rel_ids: &[u64],
@@ -41,37 +42,83 @@ impl ServerState {
         init_scale: f32,
         seed: u64,
     ) -> ServerState {
-        let ents = EmbeddingTable::zeros(ent_ids.len(), dim);
+        Self::init_with_storage(
+            "server",
+            ent_ids,
+            rel_ids,
+            dim,
+            rel_dim,
+            lr,
+            init_scale,
+            seed,
+            &StoreConfig::dense(),
+        )
+        .expect("dense server shard init cannot fail")
+    }
+
+    /// Initialize shard tables on an explicit storage backend. Row init is
+    /// derived from the *global* id, so embeddings are identical regardless
+    /// of placement — single-node and distributed runs start from the same
+    /// model. `label` names the shard's backing files (the cluster passes
+    /// `server{s}`), so servers of one cluster can share a pinned mmap dir
+    /// with deterministic filenames; concurrent *clusters* must pin
+    /// distinct dirs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn init_with_storage(
+        label: &str,
+        ent_ids: &[u64],
+        rel_ids: &[u64],
+        dim: usize,
+        rel_dim: usize,
+        lr: f32,
+        init_scale: f32,
+        seed: u64,
+        storage: &StoreConfig,
+    ) -> Result<ServerState> {
+        let storage = storage.resolved()?;
+        let ents = storage.zeros(&format!("{label}.entities"), ent_ids.len(), dim)?;
+        let mut buf = vec![0f32; dim];
         for (slot, &id) in ent_ids.iter().enumerate() {
             let mut rng = crate::util::rng::Rng::seed_from_u64(seed ^ (id.wrapping_mul(2) + 1));
-            let row = unsafe { ents.row_mut(slot) };
-            for v in row {
+            for v in buf.iter_mut() {
                 *v = rng.gen_uniform(-init_scale, init_scale);
             }
+            ents.set_row(slot, &buf);
         }
-        let rels = EmbeddingTable::zeros(rel_ids.len(), rel_dim);
+        let rels = storage.zeros(&format!("{label}.relations"), rel_ids.len(), rel_dim)?;
+        let mut buf = vec![0f32; rel_dim];
         for (slot, &id) in rel_ids.iter().enumerate() {
             let mut rng =
                 crate::util::rng::Rng::seed_from_u64(seed ^ (id.wrapping_mul(2) + 0x10001));
-            let row = unsafe { rels.row_mut(slot) };
-            for v in row {
+            for v in buf.iter_mut() {
                 *v = rng.gen_uniform(-init_scale, init_scale);
             }
+            rels.set_row(slot, &buf);
         }
-        ServerState {
-            ent_opt: SparseAdagrad::new(ent_ids.len(), lr),
-            rel_opt: SparseAdagrad::new(rel_ids.len(), lr),
+        Ok(ServerState {
+            ent_opt: SparseAdagrad::with_storage(
+                &storage,
+                &format!("{label}.entities.opt"),
+                ent_ids.len(),
+                lr,
+            )?,
+            rel_opt: SparseAdagrad::with_storage(
+                &storage,
+                &format!("{label}.relations.opt"),
+                rel_ids.len(),
+                lr,
+            )?,
             ents,
             rels,
             pulls: AtomicU64::new(0),
             pushes: AtomicU64::new(0),
-        }
+        })
     }
 
-    fn table(&self, t: TableId) -> &EmbeddingTable {
+    fn table(&self, t: TableId) -> &dyn EmbeddingStore {
         match t {
-            TableId::Entities => &self.ents,
-            TableId::Relations => &self.rels,
+            TableId::Entities => self.ents.as_ref(),
+            TableId::Relations => self.rels.as_ref(),
         }
     }
 
@@ -85,8 +132,8 @@ impl ServerState {
     pub fn push_local(&self, t: TableId, slots: &[u64], rows: &[f32]) {
         self.pushes.fetch_add(1, Ordering::Relaxed);
         match t {
-            TableId::Entities => self.ent_opt.apply(&self.ents, slots, rows),
-            TableId::Relations => self.rel_opt.apply(&self.rels, slots, rows),
+            TableId::Entities => self.ent_opt.apply(self.ents.as_ref(), slots, rows),
+            TableId::Relations => self.rel_opt.apply(self.rels.as_ref(), slots, rows),
         }
     }
 }
@@ -203,8 +250,8 @@ mod tests {
     fn init_is_placement_independent() {
         let a = ServerState::init(&[10, 20], &[], 4, 2, 0.5, 0.1, 42);
         let b = ServerState::init(&[20, 10], &[], 4, 2, 0.5, 0.1, 42);
-        assert_eq!(a.ents.row(0), b.ents.row(1)); // id 10
-        assert_eq!(a.ents.row(1), b.ents.row(0)); // id 20
+        assert_eq!(a.ents.row_vec(0), b.ents.row_vec(1)); // id 10
+        assert_eq!(a.ents.row_vec(1), b.ents.row_vec(0)); // id 20
     }
 
     #[test]
@@ -219,10 +266,10 @@ mod tests {
         assert_eq!(op, OP_OK);
         let rows = crate::util::bytes::Reader::new(&payload).f32_vec().unwrap();
         assert_eq!(rows.len(), 4);
-        assert_eq!(rows.as_slice(), server.state.ents.row(1));
+        assert_eq!(rows, server.state.ents.row_vec(1));
 
         // push a gradient and observe the row move
-        let before = server.state.ents.row(1).to_vec();
+        let before = server.state.ents.row_vec(1);
         write_frame(
             &mut stream,
             OP_PUSH,
@@ -231,7 +278,7 @@ mod tests {
         .unwrap();
         let (op, _) = read_frame(&mut stream).unwrap();
         assert_eq!(op, OP_OK);
-        assert_ne!(server.state.ents.row(1), before.as_slice());
+        assert_ne!(server.state.ents.row_vec(1), before);
 
         write_frame(&mut stream, OP_STOP, &[]).unwrap();
         let (op, _) = read_frame(&mut stream).unwrap();

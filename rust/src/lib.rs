@@ -36,9 +36,11 @@
 //!
 //! * Layer 3 (this crate): the paper's coordination contribution — graph &
 //!   relation partitioning, joint/degree-based/local negative sampling,
-//!   hogwild embedding store + sparse Adagrad, async gradient updaters,
-//!   distributed KVStore, multi-worker / many-core / distributed trainers,
-//!   evaluation, and the PBG/GraphVite baselines.
+//!   pluggable hogwild embedding storage ([`store::EmbeddingStore`]:
+//!   dense / sharded / file-backed mmap for larger-than-RAM tables) +
+//!   sparse Adagrad, async gradient updaters, distributed KVStore,
+//!   multi-worker / many-core / distributed trainers, evaluation, and the
+//!   PBG/GraphVite baselines.
 //! * Layer 2 (`python/compile/model.py`): JAX fwd/bwd of the KGE models,
 //!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! * Layer 1 (`python/compile/kernels/`): Pallas pairwise-score kernels —

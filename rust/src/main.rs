@@ -29,6 +29,8 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
           --backend native|xla (default native) --tag default|tiny --seed N
           --config spec.json (flags override) --dump-config --report out.json
+          --storage dense|sharded|mmap --shards N --storage-dir DIR
+          --budget-mb F (tables over the budget must use mmap)
   train:  --workers N --batches N(per worker) --lr F --gpu (simulate GPUs)
           --margin F --adv-temp F --degree-frac F --no-async --no-rel-part
           --sync-interval N --log-every N --eval --sampled-eval
@@ -122,6 +124,18 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
     }
     spec.sync_interval = args.parse_or("sync-interval", spec.sync_interval)?;
     spec.log_every = args.parse_or("log-every", spec.log_every)?;
+    if let Some(v) = args.get("storage") {
+        spec.storage.backend = dglke::store::StoreBackendKind::parse(&v)
+            .with_context(|| format!("unknown storage backend {v}"))?;
+    }
+    spec.storage.shards = args.parse_or("shards", spec.storage.shards)?;
+    if let Some(v) = args.get("storage-dir") {
+        spec.storage.dir = Some(v);
+    }
+    if let Some(v) = args.get("budget-mb") {
+        spec.storage.budget_mb =
+            Some(v.parse().with_context(|| format!("bad --budget-mb {v}"))?);
+    }
 
     if dist {
         let (mut machines, mut trainers, mut servers, mut partition, mut local_negatives) =

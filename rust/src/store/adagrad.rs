@@ -6,36 +6,87 @@
 //! that random-access embedding updates dominate on large graphs, so the
 //! update must stay as lean as possible.
 //!
-//! Updates go through [`EmbeddingTable::row_mut`], i.e. they are Hogwild:
-//! concurrent updaters may interleave, which the paper accepts by design.
+//! The state lives behind the same [`EmbeddingStore`] boundary as the
+//! table it optimizes (a dim-1 store), so a sharded/mmap table gets
+//! sharded/mmap optimizer state — built together via
+//! [`SparseAdagrad::with_storage`].
+//!
+//! Updates are Hogwild: concurrent updaters may interleave, which the
+//! paper accepts by design. Duplicate ids within one `apply` call are
+//! pre-accumulated (summed) so each row gets *one* exact AdaGrad step —
+//! matching DGL-KE's `index_add_` semantics — instead of order-dependent
+//! sequential steps.
 
-use super::embedding::EmbeddingTable;
-use std::cell::UnsafeCell;
+use super::{EmbeddingStore, SparseGrads, StoreConfig};
+use anyhow::Result;
 
 pub struct SparseAdagrad {
-    /// per-row accumulated squared-gradient mean
-    state: UnsafeCell<Vec<f32>>,
+    /// per-row accumulated squared-gradient mean, dim-1 store
+    state: Box<dyn EmbeddingStore>,
     pub lr: f32,
     pub eps: f32,
 }
 
-unsafe impl Sync for SparseAdagrad {}
-unsafe impl Send for SparseAdagrad {}
+thread_local! {
+    /// Reused duplicate-id scratch: the check runs on every `apply` (hot
+    /// path), so it must not allocate per call after warm-up.
+    static SEEN: std::cell::RefCell<std::collections::HashSet<u64>> =
+        std::cell::RefCell::new(std::collections::HashSet::new());
+}
+
+fn has_duplicates(ids: &[u64]) -> bool {
+    if ids.len() < 2 {
+        return false;
+    }
+    SEEN.with(|c| {
+        let mut seen = c.borrow_mut();
+        seen.clear();
+        seen.reserve(ids.len());
+        ids.iter().any(|id| !seen.insert(*id))
+    })
+}
 
 impl SparseAdagrad {
+    /// Dense (in-memory) optimizer state.
     pub fn new(rows: usize, lr: f32) -> Self {
-        SparseAdagrad { state: UnsafeCell::new(vec![0f32; rows]), lr, eps: 1e-10 }
+        Self::with_storage(&StoreConfig::dense(), "adagrad", rows, lr)
+            .expect("in-memory optimizer state cannot fail")
+    }
+
+    /// Optimizer state on the same backend as its table, so state
+    /// shards/spills alongside the embeddings.
+    pub fn with_storage(cfg: &StoreConfig, label: &str, rows: usize, lr: f32) -> Result<Self> {
+        Ok(SparseAdagrad { state: cfg.opt_state(label, rows)?, lr, eps: 1e-10 })
     }
 
     /// Apply one sparse update: for each (id, grad-row) pair, advance the
     /// AdaGrad state and update the embedding row in place.
     ///
-    /// `grads` is [ids.len(), dim] row-major. Duplicate ids are legal; they
-    /// are applied sequentially (caller may pre-accumulate for exactness).
-    pub fn apply(&self, table: &EmbeddingTable, ids: &[u64], grads: &[f32]) {
+    /// `grads` is [ids.len(), dim] row-major. Duplicate ids are legal:
+    /// their rows are summed first (exact accumulation), then each unique
+    /// row takes a single AdaGrad step.
+    pub fn apply(&self, table: &dyn EmbeddingStore, ids: &[u64], grads: &[f32]) {
         let dim = table.dim();
         debug_assert_eq!(grads.len(), ids.len() * dim);
-        let state = unsafe { &mut *self.state.get() };
+        if has_duplicates(ids) {
+            let mut g = SparseGrads::with_capacity(dim, ids.len());
+            g.extend_from(ids, grads);
+            let acc = g.accumulate();
+            self.apply_unique(table, &acc.ids, &acc.rows);
+        } else {
+            self.apply_unique(table, ids, grads);
+        }
+    }
+
+    /// Like [`SparseAdagrad::apply`] but skips the duplicate check:
+    /// callers that just ran [`SparseGrads::accumulate`] (the trainers'
+    /// `split_grads` path) are contractually duplicate-free, so the
+    /// per-batch id hashing would be pure waste on the hot path.
+    pub fn apply_unique(&self, table: &dyn EmbeddingStore, ids: &[u64], grads: &[f32]) {
+        debug_assert!(!has_duplicates(ids), "apply_unique requires pre-accumulated ids");
+        let dim = table.dim();
+        let table_rows = table.rows();
+        let state_rows = self.state.rows();
         for (j, &id) in ids.iter().enumerate() {
             let g = &grads[j * dim..(j + 1) * dim];
             let mut sum_sq = 0f32;
@@ -43,28 +94,41 @@ impl SparseAdagrad {
                 sum_sq += x * x;
             }
             let i = id as usize;
-            state[i] += sum_sq / dim as f32;
-            let scale = self.lr / (state[i] + self.eps).sqrt();
-            let row = unsafe { table.row_mut(i) };
-            for (x, &gx) in row.iter_mut().zip(g) {
-                *x -= scale * gx;
-            }
+            // hard bound: backends use raw row access, so an oversized id
+            // must fail loudly here, not corrupt the heap
+            assert!(
+                i < table_rows && i < state_rows,
+                "adagrad id {i} out of range (table rows {table_rows}, state rows {state_rows})"
+            );
+            let mut scale = 0f32;
+            self.state.update_row(i, &mut |s| {
+                s[0] += sum_sq / dim as f32;
+                scale = self.lr / (s[0] + self.eps).sqrt();
+            });
+            table.update_row(i, &mut |row| {
+                for (x, &gx) in row.iter_mut().zip(g) {
+                    *x -= scale * gx;
+                }
+            });
         }
     }
 
     /// Current state scalar for row `i` (tests/diagnostics).
     pub fn state_of(&self, i: usize) -> f32 {
-        unsafe { (&*self.state.get())[i] }
+        let mut v = [0f32];
+        self.state.read_row(i, &mut v);
+        v[0]
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::DenseStore;
 
     #[test]
     fn single_update_math() {
-        let t = EmbeddingTable::zeros(2, 2);
+        let t = DenseStore::zeros(2, 2);
         t.set_row(0, &[1.0, 1.0]);
         let opt = SparseAdagrad::new(2, 0.1);
         // g = [3, 4]: mean(g²) = 12.5, scale = 0.1/sqrt(12.5)
@@ -80,7 +144,7 @@ mod tests {
 
     #[test]
     fn effective_lr_decays() {
-        let t = EmbeddingTable::zeros(1, 2);
+        let t = DenseStore::zeros(1, 2);
         let opt = SparseAdagrad::new(1, 0.1);
         let before = t.row(0)[0];
         opt.apply(&t, &[0], &[1.0, 1.0]);
@@ -92,25 +156,64 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_ids_apply_sequentially() {
-        let t = EmbeddingTable::zeros(1, 1);
+    fn duplicate_ids_take_one_exact_step() {
+        // regression: duplicates must pre-accumulate into a single step,
+        // not apply sequentially in batch order
+        let t = DenseStore::zeros(1, 1);
         let opt = SparseAdagrad::new(1, 1.0);
         opt.apply(&t, &[0, 0], &[1.0, 1.0]);
-        // after first: state=1, x = -1/sqrt(1) = -1
-        // after second: state=2, x = -1 - 1/sqrt(2)
-        let expect = -1.0 - 1.0 / 2f32.sqrt();
-        assert!((t.row(0)[0] - expect).abs() < 1e-5);
+        // accumulated g = 2: state = 4, x = -1·2/sqrt(4) = -1
+        assert!((t.row(0)[0] - (-1.0)).abs() < 1e-5, "x={}", t.row(0)[0]);
+        assert!((opt.state_of(0) - 4.0).abs() < 1e-5);
+
+        // equivalently: duplicates == the pre-summed single entry
+        let t2 = DenseStore::zeros(1, 1);
+        let opt2 = SparseAdagrad::new(1, 1.0);
+        opt2.apply(&t2, &[0], &[2.0]);
+        assert_eq!(t.row(0), t2.row(0));
+        assert_eq!(opt.state_of(0), opt2.state_of(0));
+    }
+
+    #[test]
+    fn duplicate_order_is_irrelevant() {
+        let mk = |ids: &[u64], grads: &[f32]| {
+            let t = DenseStore::zeros(3, 2);
+            let opt = SparseAdagrad::new(3, 0.5);
+            opt.apply(&t, ids, grads);
+            t.snapshot()
+        };
+        let a = mk(&[2, 0, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = mk(&[2, 2, 0], &[1.0, 2.0, 5.0, 6.0, 3.0, 4.0]);
+        assert_eq!(a, b);
     }
 
     #[test]
     fn converges_quadratic() {
         // minimize (x - 3)² via its gradient
-        let t = EmbeddingTable::zeros(1, 1);
+        let t = DenseStore::zeros(1, 1);
         let opt = SparseAdagrad::new(1, 1.0);
         for _ in 0..500 {
             let x = t.row(0)[0];
             opt.apply(&t, &[0], &[2.0 * (x - 3.0)]);
         }
         assert!((t.row(0)[0] - 3.0).abs() < 0.05, "x={}", t.row(0)[0]);
+    }
+
+    #[test]
+    fn state_follows_table_backend() {
+        let dir = std::env::temp_dir()
+            .join(format!("dglke-adagrad-mmap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StoreConfig::mmap(dir.to_string_lossy().into_owned()).resolved().unwrap();
+        let table = cfg.zeros("t", 4, 2).unwrap();
+        let opt = SparseAdagrad::with_storage(&cfg, "t.opt", 4, 0.1).unwrap();
+        opt.apply(&*table, &[1], &[3.0, 4.0]);
+        assert!((opt.state_of(1) - 12.5).abs() < 1e-6);
+        // mirror on dense: identical arithmetic
+        let dt = DenseStore::zeros(4, 2);
+        let dopt = SparseAdagrad::new(4, 0.1);
+        dopt.apply(&dt, &[1], &[3.0, 4.0]);
+        assert_eq!(table.row_vec(1), dt.row(1));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

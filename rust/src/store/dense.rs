@@ -1,71 +1,42 @@
-//! Shared-memory embedding table with Hogwild-style unsynchronized access.
+//! Dense shared-memory backend: one flat Hogwild `Vec<f32>`.
 //!
 //! The paper (§2, citing Hogwild [14]) trains with asynchronous sparse
 //! updates: multiple trainer processes read and write rows of the global
 //! embedding tensors without locks, accepting benign races because
 //! mini-batches rarely collide on rows when the entity count is large.
-//! `EmbeddingTable` reproduces that: it hands out raw row views from an
-//! `UnsafeCell`-backed buffer shared across threads.
+//! `DenseStore` reproduces that: it hands out raw row views from an
+//! `UnsafeCell`-backed buffer shared across threads. It is the
+//! zero-regression default backend of [`crate::store::StoreConfig`].
 //!
 //! Safety contract: races on individual f32 lanes may produce stale or
 //! torn values — that is *by design* (same as the paper/PyTorch shared
 //! tensors); it never produces out-of-bounds access, and `f32` loads and
 //! stores on x86-64 are individually atomic at the hardware level.
 
-use crate::util::rng::Rng;
+use super::EmbeddingStore;
 use std::cell::UnsafeCell;
 
-pub struct EmbeddingTable {
+pub struct DenseStore {
     data: UnsafeCell<Vec<f32>>,
     rows: usize,
     dim: usize,
 }
 
 // Hogwild: see module docs.
-unsafe impl Sync for EmbeddingTable {}
-unsafe impl Send for EmbeddingTable {}
+unsafe impl Sync for DenseStore {}
+unsafe impl Send for DenseStore {}
 
-impl EmbeddingTable {
+impl DenseStore {
     pub fn zeros(rows: usize, dim: usize) -> Self {
-        EmbeddingTable { data: UnsafeCell::new(vec![0f32; rows * dim]), rows, dim }
+        DenseStore { data: UnsafeCell::new(vec![0f32; rows * dim]), rows, dim }
     }
 
-    /// DGL-KE-style init: uniform in [-init_scale, init_scale]
-    /// (DGL-KE uses gamma-adjusted uniform; the scale is a hyperparameter).
+    /// DGL-KE-style init: uniform in [-init_scale, init_scale), per-row
+    /// seeded (see [`crate::store::init_uniform_rows`]).
     pub fn uniform(rows: usize, dim: usize, init_scale: f32, seed: u64) -> Self {
         let t = Self::zeros(rows, dim);
-        {
-            let data = unsafe { &mut *t.data.get() };
-            // parallel init for large tables
-            let n_threads = if rows * dim > 1 << 22 { 8 } else { 1 };
-            let ranges = crate::util::threadpool::split_ranges(data.len(), n_threads);
-            let ptr = SyncPtr(data.as_mut_ptr());
-            let ptr_ref = &ptr;
-            crate::util::threadpool::scoped_map(n_threads, |i| {
-                let mut rng = Rng::seed_from_u64(seed).fork(i as u64);
-                let r = ranges[i].clone();
-                for j in r {
-                    unsafe {
-                        *ptr_ref.0.add(j) = rng.gen_uniform(-init_scale, init_scale);
-                    }
-                }
-            });
-        }
+        super::init_uniform_rows(&t, init_scale, seed);
         t
-    }
-
-    #[inline]
-    pub fn rows(&self) -> usize {
-        self.rows
-    }
-
-    #[inline]
-    pub fn dim(&self) -> usize {
-        self.dim
-    }
-
-    pub fn n_params(&self) -> usize {
-        self.rows * self.dim
     }
 
     /// Immutable view of row `i`. May observe concurrent writes (Hogwild).
@@ -90,38 +61,63 @@ impl EmbeddingTable {
         let v = &mut *self.data.get();
         std::slice::from_raw_parts_mut(v.as_mut_ptr().add(i * self.dim), self.dim)
     }
+}
 
-    /// Gather rows `ids` into `out` ([ids.len(), dim] row-major).
-    pub fn gather(&self, ids: &[u64], out: &mut [f32]) {
-        debug_assert_eq!(out.len(), ids.len() * self.dim);
-        for (j, &id) in ids.iter().enumerate() {
-            out[j * self.dim..(j + 1) * self.dim].copy_from_slice(self.row(id as usize));
-        }
+impl EmbeddingStore for DenseStore {
+    fn rows(&self) -> usize {
+        self.rows
     }
 
-    /// Number of bytes a gather of `n` rows moves (for the transfer ledger).
-    pub fn gather_bytes(&self, n: usize) -> u64 {
-        (n * self.dim * 4) as u64
+    fn dim(&self) -> usize {
+        self.dim
     }
 
-    /// Overwrite row `i` (used by KVStore pulls and checkpoint load).
-    pub fn set_row(&self, i: usize, values: &[f32]) {
+    fn backend_name(&self) -> &'static str {
+        "dense"
+    }
+
+    #[inline]
+    fn read_row(&self, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(i));
+    }
+
+    #[inline]
+    fn set_row(&self, i: usize, values: &[f32]) {
         debug_assert_eq!(values.len(), self.dim);
         unsafe {
             self.row_mut(i).copy_from_slice(values);
         }
     }
 
-    /// Full snapshot (tests / checkpoints).
-    pub fn snapshot(&self) -> Vec<f32> {
+    #[inline]
+    fn update_row(&self, i: usize, f: &mut dyn FnMut(&mut [f32])) {
+        f(unsafe { self.row_mut(i) });
+    }
+
+    fn gather(&self, ids: &[u64], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.dim);
+        for (j, &id) in ids.iter().enumerate() {
+            out[j * self.dim..(j + 1) * self.dim].copy_from_slice(self.row(id as usize));
+        }
+    }
+
+    fn set_rows(&self, first_row: usize, values: &[f32]) {
+        debug_assert!(first_row * self.dim + values.len() <= self.rows * self.dim);
+        unsafe {
+            let v = &mut *self.data.get();
+            let dst = v.as_mut_ptr().add(first_row * self.dim);
+            std::ptr::copy_nonoverlapping(values.as_ptr(), dst, values.len());
+        }
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.rows * self.dim * 4) as u64
+    }
+
+    fn snapshot(&self) -> Vec<f32> {
         unsafe { (*self.data.get()).clone() }
     }
 }
-
-/// Send+Sync raw pointer wrapper for scoped parallel init.
-struct SyncPtr(*mut f32);
-unsafe impl Send for SyncPtr {}
-unsafe impl Sync for SyncPtr {}
 
 #[cfg(test)]
 mod tests {
@@ -129,8 +125,8 @@ mod tests {
 
     #[test]
     fn init_range_and_determinism() {
-        let a = EmbeddingTable::uniform(100, 16, 0.5, 3);
-        let b = EmbeddingTable::uniform(100, 16, 0.5, 3);
+        let a = DenseStore::uniform(100, 16, 0.5, 3);
+        let b = DenseStore::uniform(100, 16, 0.5, 3);
         assert_eq!(a.snapshot(), b.snapshot());
         for v in a.snapshot() {
             assert!(v >= -0.5 && v < 0.5);
@@ -139,7 +135,7 @@ mod tests {
 
     #[test]
     fn gather_matches_rows() {
-        let t = EmbeddingTable::uniform(10, 4, 1.0, 1);
+        let t = DenseStore::uniform(10, 4, 1.0, 1);
         let ids = [3u64, 7, 3];
         let mut out = vec![0f32; 3 * 4];
         t.gather(&ids, &mut out);
@@ -150,7 +146,7 @@ mod tests {
 
     #[test]
     fn concurrent_disjoint_writes() {
-        let t = EmbeddingTable::zeros(64, 8);
+        let t = DenseStore::zeros(64, 8);
         crate::util::threadpool::scoped_map(8, |w| {
             for i in 0..8 {
                 let row = w * 8 + i;
@@ -166,9 +162,21 @@ mod tests {
 
     #[test]
     fn set_row_roundtrip() {
-        let t = EmbeddingTable::zeros(4, 3);
+        let t = DenseStore::zeros(4, 3);
         t.set_row(2, &[1.0, 2.0, 3.0]);
         assert_eq!(t.row(2), &[1.0, 2.0, 3.0]);
         assert_eq!(t.row(1), &[0.0; 3]);
+    }
+
+    #[test]
+    fn update_row_reads_current_values() {
+        let t = DenseStore::zeros(2, 2);
+        t.set_row(0, &[1.0, 2.0]);
+        t.update_row(0, &mut |row| {
+            for x in row.iter_mut() {
+                *x *= 10.0;
+            }
+        });
+        assert_eq!(t.row(0), &[10.0, 20.0]);
     }
 }

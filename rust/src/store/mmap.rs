@@ -1,0 +1,220 @@
+//! File-backed backend for larger-than-RAM embedding tables.
+//!
+//! Rows live in a flat backing file (`rows × dim` little-endian f32s,
+//! row-major — the same layout checkpoints use) and are read/written with
+//! positioned I/O (`pread`/`pwrite` via `std::os::unix::fs::FileExt`); the
+//! OS page cache plays the role of the mapped working set, bounded by
+//! available memory rather than table size. No `mmap(2)` call is issued —
+//! the vendored dependency set has no `libc` — but the access model is the
+//! same: only touched pages are resident, and `resident_bytes()` is 0 from
+//! the process-heap perspective.
+//!
+//! Concurrent row updates race at row granularity (Hogwild, like every
+//! backend); positioned I/O never moves a shared cursor, so races stay
+//! value-level, never structural.
+//!
+//! Checkpoint export streams straight from the backing file
+//! ([`EmbeddingStore::export_rows`]) — no full-table `snapshot()` clone,
+//! which is the difference between "checkpoint = table-sized allocation"
+//! and "checkpoint = bounded buffer" at Freebase scale.
+
+use super::EmbeddingStore;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+pub struct MmapStore {
+    file: File,
+    path: PathBuf,
+    rows: usize,
+    dim: usize,
+}
+
+thread_local! {
+    /// Per-thread row scratch for read-modify-write (`update_row`).
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+impl MmapStore {
+    /// Create (or truncate) a backing file of `rows × dim` zeros. The file
+    /// is extended sparsely, so an untouched table costs no disk. The file
+    /// persists after the store is dropped (the caller owns the dir).
+    pub fn create(path: &Path, rows: usize, dim: usize) -> Result<MmapStore> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating mmap store {}", path.display()))?;
+        file.set_len((rows * dim * 4) as u64)
+            .with_context(|| format!("sizing mmap store {}", path.display()))?;
+        Ok(MmapStore { file, path: path.to_path_buf(), rows, dim })
+    }
+
+    /// Like [`MmapStore::create`], but the backing file is unlinked
+    /// immediately after opening: it stays fully usable through the open
+    /// descriptor and the kernel reclaims the space when the store is
+    /// dropped — even if the process crashes. Used for runs that did not
+    /// pin a `storage.dir`, so scratch tables never accumulate in /tmp.
+    pub fn create_ephemeral(path: &Path, rows: usize, dim: usize) -> Result<MmapStore> {
+        let store = Self::create(path, rows, dim)?;
+        std::fs::remove_file(path)
+            .with_context(|| format!("unlinking ephemeral mmap store {}", path.display()))?;
+        Ok(store)
+    }
+
+    /// The path the backing file was created at (already unlinked for
+    /// ephemeral stores).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    #[inline]
+    fn offset(&self, i: usize) -> u64 {
+        debug_assert!(i < self.rows);
+        (i * self.dim * 4) as u64
+    }
+}
+
+impl EmbeddingStore for MmapStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "mmap"
+    }
+
+    fn read_row(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+        };
+        self.file
+            .read_exact_at(bytes, self.offset(i))
+            .expect("MmapStore: backing-file read failed");
+    }
+
+    fn set_row(&self, i: usize, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.dim);
+        self.file
+            .write_all_at(crate::util::bytes::f32_as_bytes(values), self.offset(i))
+            .expect("MmapStore: backing-file write failed");
+    }
+
+    /// One positioned write per chunk instead of one syscall per row.
+    fn set_rows(&self, first_row: usize, values: &[f32]) {
+        debug_assert!(first_row * self.dim + values.len() <= self.rows * self.dim);
+        self.file
+            .write_all_at(crate::util::bytes::f32_as_bytes(values), self.offset(first_row))
+            .expect("MmapStore: backing-file write failed");
+    }
+
+    fn update_row(&self, i: usize, f: &mut dyn FnMut(&mut [f32])) {
+        SCRATCH.with(|c| {
+            let mut buf = c.borrow_mut();
+            buf.resize(self.dim, 0.0);
+            self.read_row(i, &mut buf[..]);
+            f(&mut buf[..]);
+            self.set_row(i, &buf[..]);
+        });
+    }
+
+    /// Rows live on disk / in the page cache, not on the process heap.
+    fn resident_bytes(&self) -> u64 {
+        0
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.file
+            .sync_data()
+            .with_context(|| format!("flushing mmap store {}", self.path.display()))
+    }
+
+    fn export_rows(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let total = (self.rows * self.dim * 4) as u64;
+        let mut buf = vec![0u8; (1usize << 20).min(total.max(1) as usize)];
+        let mut off = 0u64;
+        while off < total {
+            let n = ((total - off) as usize).min(buf.len());
+            self.file
+                .read_exact_at(&mut buf[..n], off)
+                .with_context(|| format!("exporting mmap store {}", self.path.display()))?;
+            w.write_all(&buf[..n])?;
+            off += n as u64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dglke-mmap-test-{tag}-{}.f32", std::process::id()))
+    }
+
+    #[test]
+    fn rows_round_trip_through_file() {
+        let path = tmp_path("roundtrip");
+        let t = MmapStore::create(&path, 5, 3).unwrap();
+        assert_eq!(t.row_vec(4), vec![0.0; 3]); // sparse zeros
+        t.set_row(2, &[1.5, -2.5, 3.0]);
+        assert_eq!(t.row_vec(2), vec![1.5, -2.5, 3.0]);
+        t.update_row(2, &mut |row| row[1] = 9.0);
+        assert_eq!(t.row_vec(2), vec![1.5, 9.0, 3.0]);
+        t.flush().unwrap();
+        assert_eq!(t.resident_bytes(), 0);
+        assert!(t.table_bytes() > 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_streams_file_contents() {
+        let path = tmp_path("export");
+        let t = MmapStore::create(&path, 4, 2).unwrap();
+        for i in 0..4 {
+            t.set_row(i, &[i as f32, i as f32 + 0.5]);
+        }
+        let mut bytes = Vec::new();
+        t.export_rows(&mut bytes).unwrap();
+        assert_eq!(crate::util::bytes::bytes_to_f32(&bytes), t.snapshot());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ephemeral_file_is_unlinked_but_usable() {
+        let path = tmp_path("ephemeral");
+        let t = MmapStore::create_ephemeral(&path, 3, 2).unwrap();
+        assert!(!path.exists(), "backing file should be unlinked");
+        t.set_row(1, &[4.0, 5.0]);
+        assert_eq!(t.row_vec(1), vec![4.0, 5.0]);
+        let mut bytes = Vec::new();
+        t.export_rows(&mut bytes).unwrap();
+        assert_eq!(bytes.len(), 3 * 2 * 4);
+    }
+
+    #[test]
+    fn concurrent_disjoint_rows() {
+        let path = tmp_path("hogwild");
+        let t = MmapStore::create(&path, 32, 4).unwrap();
+        crate::util::threadpool::scoped_map(4, |w| {
+            for i in 0..8 {
+                let row = w * 8 + i;
+                t.set_row(row, &[row as f32; 4]);
+            }
+        });
+        for row in 0..32 {
+            assert_eq!(t.row_vec(row), vec![row as f32; 4]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

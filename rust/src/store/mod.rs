@@ -1,10 +1,472 @@
-//! Embedding storage and optimization: Hogwild shared tables, sparse
-//! row-wise AdaGrad, and sparse-gradient containers.
+//! Embedding storage and optimization.
+//!
+//! The paper's core scaling observation (§3.5) is that KGE training at the
+//! 86M-entity scale is dominated by random-access embedding reads/writes —
+//! the storage layer, not the score kernel, is the bottleneck. This module
+//! therefore puts storage behind one trait, [`EmbeddingStore`], with three
+//! backends selected by [`StoreConfig`]:
+//!
+//! * [`DenseStore`] — one flat Hogwild `Vec<f32>` (the zero-regression
+//!   default; what the old `EmbeddingTable` was);
+//! * [`ShardedStore`] — N independently-allocated dense shards with
+//!   per-shard parallel init/flush, making per-partition placement
+//!   explicit for the KVStore/distributed layers;
+//! * [`MmapStore`] — file-backed rows for larger-than-RAM tables, with
+//!   streaming (no full-table clone) checkpoint export.
+//!
+//! [`SparseAdagrad`] keeps its per-row state behind the same trait, so
+//! optimizer state shards/spills alongside its table. [`SparseGrads`] is
+//! the sparse-gradient container shared by the trainers and the KVStore
+//! wire path.
+//!
+//! Row initialization is *per-row* seeded ([`init_uniform_rows`]): the
+//! value of row `r` depends only on `(seed, r)`, never on the backend,
+//! shard count, or init thread count — so every backend trains
+//! byte-identically from the same spec (see `rust/tests/storage_tests.rs`).
 
 pub mod adagrad;
-pub mod embedding;
+pub mod dense;
 pub mod gradients;
+pub mod mmap;
+pub mod sharded;
 
 pub use adagrad::SparseAdagrad;
-pub use embedding::EmbeddingTable;
+pub use dense::DenseStore;
 pub use gradients::SparseGrads;
+pub use mmap::MmapStore;
+pub use sharded::ShardedStore;
+
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Row-granular embedding storage with Hogwild semantics.
+///
+/// All methods take `&self`: concurrent readers and writers race at row
+/// (and, within a row, f32-lane) granularity, which the paper accepts by
+/// design for asynchronous sparse training. Implementations must never
+/// produce out-of-bounds access; torn/stale lanes under contention are
+/// permitted. I/O-backed implementations panic on I/O errors in the
+/// row-granular methods (the hot path carries no `Result`), and report
+/// failures from [`EmbeddingStore::flush`].
+pub trait EmbeddingStore: Send + Sync {
+    fn rows(&self) -> usize;
+
+    fn dim(&self) -> usize;
+
+    /// Backend tag ("dense" / "sharded" / "mmap") for logs and reports.
+    fn backend_name(&self) -> &'static str;
+
+    /// Copy row `i` into `out` (`out.len() == dim`).
+    fn read_row(&self, i: usize, out: &mut [f32]);
+
+    /// Overwrite row `i` (`values.len() == dim`).
+    fn set_row(&self, i: usize, values: &[f32]);
+
+    /// Read-modify-write row `i` in place. The closure sees the current
+    /// row contents and mutates them; backends without resident rows load
+    /// the row, apply the closure, and write it back.
+    fn update_row(&self, i: usize, f: &mut dyn FnMut(&mut [f32]));
+
+    /// Overwrite a contiguous run of rows starting at `first_row`
+    /// (`values.len()` is a multiple of `dim`). Bulk writers (init,
+    /// checkpoint load) should prefer this over per-row [`set_row`]:
+    /// file-backed stores turn it into one positioned write instead of
+    /// one syscall per row.
+    ///
+    /// [`set_row`]: EmbeddingStore::set_row
+    fn set_rows(&self, first_row: usize, values: &[f32]) {
+        let dim = self.dim();
+        debug_assert_eq!(values.len() % dim.max(1), 0);
+        for (k, row) in values.chunks_exact(dim).enumerate() {
+            self.set_row(first_row + k, row);
+        }
+    }
+
+    /// Bytes resident in RAM for this table (0 when rows live on disk).
+    fn resident_bytes(&self) -> u64;
+
+    /// Gather rows `ids` into `out` (`[ids.len(), dim]`, row-major).
+    fn gather(&self, ids: &[u64], out: &mut [f32]) {
+        let dim = self.dim();
+        debug_assert_eq!(out.len(), ids.len() * dim);
+        for (j, &id) in ids.iter().enumerate() {
+            self.read_row(id as usize, &mut out[j * dim..(j + 1) * dim]);
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        self.rows() * self.dim()
+    }
+
+    /// Total logical table size in bytes (independent of residency).
+    fn table_bytes(&self) -> u64 {
+        (self.n_params() * 4) as u64
+    }
+
+    /// Number of bytes a gather of `n` rows moves (for the transfer ledger).
+    fn gather_bytes(&self, n: usize) -> u64 {
+        (n * self.dim() * 4) as u64
+    }
+
+    /// Owned copy of row `i` (tests, cold paths).
+    fn row_vec(&self, i: usize) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim()];
+        self.read_row(i, &mut out);
+        out
+    }
+
+    /// Full copy of the table (tests, cold paths). Checkpoints should use
+    /// [`EmbeddingStore::export_rows`] instead, which never materializes
+    /// the whole table.
+    fn snapshot(&self) -> Vec<f32> {
+        let dim = self.dim();
+        let mut out = vec![0f32; self.n_params()];
+        for i in 0..self.rows() {
+            self.read_row(i, &mut out[i * dim..(i + 1) * dim]);
+        }
+        out
+    }
+
+    /// Persist pending writes (no-op for memory backends).
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Stream every row, in order, as raw little-endian f32 bytes into `w`
+    /// without materializing a full-table copy. File-backed stores copy
+    /// straight from their backing file.
+    fn export_rows(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let dim = self.dim();
+        let rows = self.rows();
+        if dim == 0 || rows == 0 {
+            return Ok(());
+        }
+        let chunk_rows = chunk_rows_for(dim, rows);
+        let mut buf = vec![0f32; chunk_rows * dim];
+        let mut r = 0;
+        while r < rows {
+            let n = chunk_rows.min(rows - r);
+            for k in 0..n {
+                self.read_row(r + k, &mut buf[k * dim..(k + 1) * dim]);
+            }
+            w.write_all(crate::util::bytes::f32_as_bytes(&buf[..n * dim]))?;
+            r += n;
+        }
+        Ok(())
+    }
+}
+
+/// Rows per bulk-I/O chunk (~256 KiB) for a `dim`-wide table — the one
+/// formula shared by parallel init, checkpoint export, and checkpoint
+/// load, so chunk-size tuning happens in exactly one place.
+pub fn chunk_rows_for(dim: usize, rows: usize) -> usize {
+    ((1usize << 16) / dim.max(1) + 1).min(rows.max(1))
+}
+
+/// Which [`EmbeddingStore`] implementation a [`StoreConfig`] builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreBackendKind {
+    Dense,
+    Sharded,
+    Mmap,
+}
+
+impl StoreBackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreBackendKind::Dense => "dense",
+            StoreBackendKind::Sharded => "sharded",
+            StoreBackendKind::Mmap => "mmap",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StoreBackendKind> {
+        match s {
+            "dense" => Some(StoreBackendKind::Dense),
+            "sharded" => Some(StoreBackendKind::Sharded),
+            "mmap" => Some(StoreBackendKind::Mmap),
+            _ => None,
+        }
+    }
+}
+
+/// Declarative storage-backend selection; the `"storage"` field of a
+/// `RunSpec` (see `api::spec` for the JSON form).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreConfig {
+    pub backend: StoreBackendKind,
+    /// shard count (sharded backend only)
+    pub shards: usize,
+    /// backing directory (mmap backend). `None` = anonymous temp files,
+    /// unlinked at creation so the kernel reclaims them when the run ends
+    /// (crash-safe); `Some(dir)` = persistent files the caller owns.
+    pub dir: Option<String>,
+    /// optional in-memory budget in MiB (fractional allowed). Runs whose
+    /// tables would exceed it must use the mmap backend; enforced by
+    /// `api::Session`.
+    pub budget_mb: Option<f64>,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { backend: StoreBackendKind::Dense, shards: 8, dir: None, budget_mb: None }
+    }
+}
+
+static MMAP_FILE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+impl StoreConfig {
+    pub fn dense() -> StoreConfig {
+        StoreConfig::default()
+    }
+
+    pub fn sharded(shards: usize) -> StoreConfig {
+        StoreConfig { backend: StoreBackendKind::Sharded, shards, ..StoreConfig::default() }
+    }
+
+    pub fn mmap(dir: impl Into<String>) -> StoreConfig {
+        StoreConfig {
+            backend: StoreBackendKind::Mmap,
+            dir: Some(dir.into()),
+            ..StoreConfig::default()
+        }
+    }
+
+    /// Structural validation (cheap; no filesystem access).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shards >= 1, "storage.shards must be >= 1");
+        if let Some(mb) = self.budget_mb {
+            anyhow::ensure!(mb > 0.0, "storage.budget_mb must be positive");
+        }
+        Ok(())
+    }
+
+    /// Fill in runtime defaults: clamp the shard count and create the
+    /// explicit mmap backing dir when one is pinned. (With `dir: None`,
+    /// mmap tables use anonymous unlinked temp files — nothing to create.)
+    pub fn resolved(&self) -> Result<StoreConfig> {
+        let mut cfg = self.clone();
+        cfg.shards = cfg.shards.max(1);
+        if cfg.backend == StoreBackendKind::Mmap {
+            if let Some(dir) = &cfg.dir {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating storage dir {dir}"))?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    fn build(&self, label: &str, rows: usize, dim: usize) -> Result<Box<dyn EmbeddingStore>> {
+        Ok(match self.backend {
+            StoreBackendKind::Dense => Box::new(DenseStore::zeros(rows, dim)),
+            StoreBackendKind::Sharded => {
+                Box::new(ShardedStore::zeros(rows, dim, self.shards.max(1)))
+            }
+            StoreBackendKind::Mmap => match &self.dir {
+                Some(dir) => {
+                    let path = std::path::Path::new(dir).join(format!("{label}.f32"));
+                    Box::new(MmapStore::create(&path, rows, dim)?)
+                }
+                None => {
+                    // anonymous scratch table: unique temp name, unlinked at
+                    // creation so the space is reclaimed when the run ends
+                    let n = MMAP_FILE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let path = std::env::temp_dir().join(format!(
+                        "dglke-store-{}-{n}-{label}.f32",
+                        std::process::id()
+                    ));
+                    Box::new(MmapStore::create_ephemeral(&path, rows, dim)?)
+                }
+            },
+        })
+    }
+
+    /// Build a zero-initialized table.
+    pub fn zeros(&self, label: &str, rows: usize, dim: usize) -> Result<Arc<dyn EmbeddingStore>> {
+        Ok(Arc::from(self.build(label, rows, dim)?))
+    }
+
+    /// Build a table initialized uniform in `[-init_scale, init_scale]`
+    /// with backend-independent per-row seeding.
+    pub fn uniform(
+        &self,
+        label: &str,
+        rows: usize,
+        dim: usize,
+        init_scale: f32,
+        seed: u64,
+    ) -> Result<Arc<dyn EmbeddingStore>> {
+        let store = self.build(label, rows, dim)?;
+        init_uniform_rows(store.as_ref(), init_scale, seed);
+        Ok(Arc::from(store))
+    }
+
+    /// Build optimizer state (one scalar per row) on the same backend, so
+    /// state shards/spills alongside its table.
+    pub fn opt_state(&self, label: &str, rows: usize) -> Result<Box<dyn EmbeddingStore>> {
+        self.build(label, rows, 1)
+    }
+}
+
+/// Initialize every row uniform in `[-scale, scale)`. Row `r` is drawn
+/// from its own forked stream, so the result depends only on `(seed, r)`
+/// — not on the backend, shard layout, write chunking, or how many init
+/// threads run (threads come from `available_parallelism`, clamped).
+/// Rows are written in ~256 KiB chunks via [`EmbeddingStore::set_rows`].
+pub fn init_uniform_rows(store: &dyn EmbeddingStore, scale: f32, seed: u64) {
+    let rows = store.rows();
+    let dim = store.dim();
+    if rows == 0 || dim == 0 {
+        return;
+    }
+    let n_threads =
+        if rows * dim > 1 << 22 { crate::util::threadpool::default_threads(16) } else { 1 };
+    let base = Rng::seed_from_u64(seed);
+    let ranges = crate::util::threadpool::split_ranges(rows, n_threads);
+    crate::util::threadpool::scoped_map(n_threads, |w| {
+        let range = ranges[w].clone();
+        let chunk_rows = chunk_rows_for(dim, range.len());
+        let mut buf = vec![0f32; chunk_rows * dim];
+        let mut r = range.start;
+        while r < range.end {
+            let n = chunk_rows.min(range.end - r);
+            for k in 0..n {
+                let mut rng = base.fork((r + k) as u64);
+                for v in buf[k * dim..(k + 1) * dim].iter_mut() {
+                    *v = rng.gen_uniform(-scale, scale);
+                }
+            }
+            store.set_rows(r, &buf[..n * dim]);
+            r += n;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backends(tmp: &std::path::Path) -> Vec<(&'static str, StoreConfig)> {
+        vec![
+            ("dense", StoreConfig::dense()),
+            ("sharded", StoreConfig::sharded(3)),
+            ("mmap", StoreConfig::mmap(tmp.to_string_lossy().into_owned())),
+        ]
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("dglke-store-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn uniform_init_identical_across_backends() {
+        let tmp = tmp_dir("init");
+        let mut snaps = Vec::new();
+        for (name, cfg) in backends(&tmp) {
+            let cfg = cfg.resolved().unwrap();
+            let t = cfg.uniform(name, 33, 7, 0.5, 42).unwrap();
+            assert_eq!(t.rows(), 33);
+            assert_eq!(t.dim(), 7);
+            let snap = t.snapshot();
+            assert!(snap.iter().all(|v| *v >= -0.5 && *v < 0.5));
+            snaps.push((name, snap));
+        }
+        for (name, s) in &snaps[1..] {
+            assert_eq!(s, &snaps[0].1, "{name} init differs from dense");
+        }
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn random_ops_identical_across_backends() {
+        let tmp = tmp_dir("ops");
+        let stores: Vec<Arc<dyn EmbeddingStore>> = backends(&tmp)
+            .into_iter()
+            .map(|(name, cfg)| cfg.resolved().unwrap().uniform(name, 50, 4, 0.3, 7).unwrap())
+            .collect();
+        let mut rng = Rng::seed_from_u64(99);
+        let mut out = vec![0f32; 4 * 4];
+        for _ in 0..300 {
+            let op = rng.gen_index(3);
+            let i = rng.gen_index(50);
+            match op {
+                0 => {
+                    let vals: Vec<f32> = (0..4).map(|_| rng.gen_normal()).collect();
+                    for s in &stores {
+                        s.set_row(i, &vals);
+                    }
+                }
+                1 => {
+                    let delta = rng.gen_normal();
+                    for s in &stores {
+                        s.update_row(i, &mut |row| {
+                            for x in row.iter_mut() {
+                                *x += delta;
+                            }
+                        });
+                    }
+                }
+                _ => {
+                    let ids: Vec<u64> =
+                        (0..4).map(|_| rng.gen_index(50) as u64).collect();
+                    let mut first: Option<Vec<f32>> = None;
+                    for s in &stores {
+                        s.gather(&ids, &mut out);
+                        match &first {
+                            None => first = Some(out.clone()),
+                            Some(f) => assert_eq!(f, &out),
+                        }
+                    }
+                }
+            }
+        }
+        let dense_snap = stores[0].snapshot();
+        for s in &stores[1..] {
+            assert_eq!(s.snapshot(), dense_snap, "{} diverged", s.backend_name());
+        }
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn export_rows_matches_snapshot() {
+        let tmp = tmp_dir("export");
+        for (name, cfg) in backends(&tmp) {
+            let cfg = cfg.resolved().unwrap();
+            let t = cfg.uniform(name, 17, 5, 0.4, 3).unwrap();
+            let mut bytes = Vec::new();
+            t.export_rows(&mut bytes).unwrap();
+            assert_eq!(crate::util::bytes::bytes_to_f32(&bytes), t.snapshot(), "{name}");
+        }
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn default_mmap_dir_is_ephemeral_and_matches_dense() {
+        let cfg = StoreConfig { backend: StoreBackendKind::Mmap, ..StoreConfig::default() };
+        let t = cfg.resolved().unwrap().uniform("ephemeral", 8, 3, 0.2, 1).unwrap();
+        assert_eq!(t.backend_name(), "mmap");
+        let d = StoreConfig::dense().uniform("d", 8, 3, 0.2, 1).unwrap();
+        assert_eq!(t.snapshot(), d.snapshot());
+    }
+
+    #[test]
+    fn backend_kind_parse_round_trip() {
+        for k in [StoreBackendKind::Dense, StoreBackendKind::Sharded, StoreBackendKind::Mmap] {
+            assert_eq!(StoreBackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StoreBackendKind::parse("ssd"), None);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(StoreConfig { shards: 0, ..StoreConfig::default() }.validate().is_err());
+        assert!(StoreConfig { budget_mb: Some(0.0), ..StoreConfig::default() }
+            .validate()
+            .is_err());
+        assert!(StoreConfig::sharded(4).validate().is_ok());
+    }
+}

@@ -6,7 +6,7 @@
 
 use crate::models::step::{StepGrads, StepInputs, StepShape};
 use crate::sampler::Batch;
-use crate::store::{EmbeddingTable, SparseGrads};
+use crate::store::{EmbeddingStore, SparseGrads};
 
 /// Reusable gather buffers for one worker.
 pub struct BatchBuffers {
@@ -29,13 +29,14 @@ impl BatchBuffers {
         }
     }
 
-    /// Gather all embeddings of `batch` from the global tables.
-    /// Returns the number of f32 values moved (for the transfer ledger).
+    /// Gather all embeddings of `batch` from the global tables (any
+    /// storage backend). Returns the number of f32 values moved (for the
+    /// transfer ledger).
     pub fn gather(
         &mut self,
         batch: &Batch,
-        entities: &EmbeddingTable,
-        relations: &EmbeddingTable,
+        entities: &dyn EmbeddingStore,
+        relations: &dyn EmbeddingStore,
     ) -> u64 {
         entities.gather(&batch.heads, &mut self.h);
         relations.gather(&batch.rels, &mut self.r);
@@ -81,8 +82,8 @@ mod tests {
     #[test]
     fn gather_and_split_roundtrip() {
         let shape = StepShape { batch: 4, chunks: 2, neg_k: 2, dim: 3 };
-        let entities = EmbeddingTable::uniform(10, 3, 1.0, 1);
-        let relations = EmbeddingTable::uniform(5, 3, 1.0, 2);
+        let entities = crate::store::DenseStore::uniform(10, 3, 1.0, 1);
+        let relations = crate::store::DenseStore::uniform(5, 3, 1.0, 2);
         let batch = Batch {
             heads: vec![1, 2, 3, 1],
             rels: vec![0, 1, 0, 2],

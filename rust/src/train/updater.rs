@@ -9,7 +9,7 @@
 //!
 //! A bounded channel caps staleness at `max_pending` batches.
 
-use crate::store::{EmbeddingTable, SparseAdagrad, SparseGrads};
+use crate::store::{EmbeddingStore, SparseAdagrad, SparseGrads};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
@@ -28,7 +28,7 @@ pub struct AsyncUpdater {
 impl AsyncUpdater {
     /// Spawn the updater over the shared entity table/optimizer.
     pub fn spawn(
-        table: Arc<EmbeddingTable>,
+        table: Arc<dyn EmbeddingStore>,
         opt: Arc<SparseAdagrad>,
         max_pending: usize,
     ) -> AsyncUpdater {
@@ -40,7 +40,8 @@ impl AsyncUpdater {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Apply(g) => {
-                            opt.apply(&table, &g.ids, &g.rows);
+                            // submitted grads are pre-accumulated (split_grads)
+                            opt.apply_unique(&*table, &g.ids, &g.rows);
                             applied += 1;
                         }
                         Msg::Flush(ack) => {
@@ -56,7 +57,9 @@ impl AsyncUpdater {
     }
 
     /// Queue one batch of entity gradients (blocks only when the updater
-    /// is `max_pending` batches behind — the staleness bound).
+    /// is `max_pending` batches behind — the staleness bound). `grads`
+    /// must be duplicate-free — `split_grads` pre-accumulates — since the
+    /// updater takes the unique AdaGrad fast path.
     pub fn submit(&self, grads: SparseGrads) {
         self.tx.send(Msg::Apply(grads)).expect("updater thread died");
     }
@@ -88,10 +91,11 @@ impl Drop for AsyncUpdater {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::DenseStore;
 
     #[test]
     fn applies_all_updates() {
-        let table = Arc::new(EmbeddingTable::zeros(4, 2));
+        let table: Arc<dyn EmbeddingStore> = Arc::new(DenseStore::zeros(4, 2));
         let opt = Arc::new(SparseAdagrad::new(4, 1.0));
         let up = AsyncUpdater::spawn(table.clone(), opt, 8);
         for _ in 0..10 {
@@ -102,13 +106,13 @@ mod tests {
         let applied = up.join();
         assert_eq!(applied, 10);
         // row 1 moved, others untouched
-        assert_ne!(table.row(1), &[0.0, 0.0]);
-        assert_eq!(table.row(0), &[0.0, 0.0]);
+        assert_ne!(table.row_vec(1), vec![0.0, 0.0]);
+        assert_eq!(table.row_vec(0), vec![0.0, 0.0]);
     }
 
     #[test]
     fn flush_waits_for_pending() {
-        let table = Arc::new(EmbeddingTable::zeros(2, 4));
+        let table: Arc<dyn EmbeddingStore> = Arc::new(DenseStore::zeros(2, 4));
         let opt = Arc::new(SparseAdagrad::new(2, 1.0));
         let up = AsyncUpdater::spawn(table.clone(), opt, 64);
         for _ in 0..50 {
@@ -118,19 +122,19 @@ mod tests {
         }
         up.flush();
         // after flush the row reflects all 50 updates (AdaGrad state 50·0.01)
-        let moved = table.row(0)[0];
+        let moved = table.row_vec(0)[0];
         assert!(moved != 0.0);
-        let snapshot = table.row(0)[0];
+        let snapshot = table.row_vec(0)[0];
         std::thread::sleep(std::time::Duration::from_millis(20));
-        assert_eq!(table.row(0)[0], snapshot, "no updates in flight after flush");
+        assert_eq!(table.row_vec(0)[0], snapshot, "no updates in flight after flush");
         up.join();
     }
 
     #[test]
     fn equivalent_to_sync_application() {
         // async updater applied N disjoint-row updates == applying inline
-        let t_async = Arc::new(EmbeddingTable::zeros(8, 2));
-        let t_sync = EmbeddingTable::zeros(8, 2);
+        let t_async: Arc<dyn EmbeddingStore> = Arc::new(DenseStore::zeros(8, 2));
+        let t_sync = DenseStore::zeros(8, 2);
         let o_async = Arc::new(SparseAdagrad::new(8, 0.5));
         let o_sync = SparseAdagrad::new(8, 0.5);
         let up = AsyncUpdater::spawn(t_async.clone(), o_async, 4);
@@ -142,7 +146,7 @@ mod tests {
         }
         up.flush();
         for i in 0..8 {
-            assert_eq!(t_async.row(i), t_sync.row(i));
+            assert_eq!(t_async.row_vec(i), t_sync.row(i));
         }
         up.join();
     }

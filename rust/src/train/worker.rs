@@ -23,7 +23,7 @@ use crate::models::{LossCfg, ModelKind};
 use crate::partition::partition_relations;
 use crate::runtime::{BackendKind, Manifest, TrainBackend};
 use crate::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
-use crate::store::{EmbeddingTable, SparseAdagrad};
+use crate::store::{EmbeddingStore, SparseAdagrad, StoreConfig};
 use crate::util::timer::{PhaseTimes, Timer};
 use anyhow::Result;
 use std::sync::Arc;
@@ -80,10 +80,12 @@ impl Default for TrainConfig {
     }
 }
 
-/// Shared mutable training state (the "model").
+/// Shared mutable training state (the "model"). The tables sit behind
+/// [`EmbeddingStore`], so the same trainers run over dense, sharded, or
+/// file-backed (mmap) storage — pick with [`ModelState::init_with_storage`].
 pub struct ModelState {
-    pub entities: Arc<EmbeddingTable>,
-    pub relations: Arc<EmbeddingTable>,
+    pub entities: Arc<dyn EmbeddingStore>,
+    pub relations: Arc<dyn EmbeddingStore>,
     pub ent_opt: Arc<SparseAdagrad>,
     pub rel_opt: Arc<SparseAdagrad>,
     pub dim: usize,
@@ -95,8 +97,8 @@ impl ModelState {
         Self::init_with(dataset, model, dim, cfg.lr, cfg.init_scale, cfg.seed)
     }
 
-    /// Initialize from bare hyperparameters (no `TrainConfig` needed —
-    /// used by the `api` session and the baseline trainers).
+    /// Initialize from bare hyperparameters on the default dense backend
+    /// (used by the baseline trainers and tests).
     pub fn init_with(
         dataset: &Dataset,
         model: ModelKind,
@@ -105,25 +107,56 @@ impl ModelState {
         init_scale: f32,
         seed: u64,
     ) -> Self {
+        Self::init_with_storage(dataset, model, dim, lr, init_scale, seed, &StoreConfig::dense())
+            .expect("dense storage init cannot fail")
+    }
+
+    /// Initialize on an explicit storage backend. Row init is per-row
+    /// seeded, so every backend yields byte-identical starting tables for
+    /// the same seed; optimizer state is built on the same backend so it
+    /// shards/spills alongside its table.
+    #[allow(clippy::too_many_arguments)]
+    pub fn init_with_storage(
+        dataset: &Dataset,
+        model: ModelKind,
+        dim: usize,
+        lr: f32,
+        init_scale: f32,
+        seed: u64,
+        storage: &StoreConfig,
+    ) -> Result<Self> {
+        let storage = storage.resolved()?;
         let rel_dim = model.rel_dim(dim);
-        ModelState {
-            entities: Arc::new(EmbeddingTable::uniform(
+        Ok(ModelState {
+            entities: storage.uniform(
+                "entities",
                 dataset.n_entities(),
                 dim,
                 init_scale,
                 seed ^ 0xE,
-            )),
-            relations: Arc::new(EmbeddingTable::uniform(
+            )?,
+            relations: storage.uniform(
+                "relations",
                 dataset.n_relations(),
                 rel_dim,
                 init_scale,
                 seed ^ 0xF,
-            )),
-            ent_opt: Arc::new(SparseAdagrad::new(dataset.n_entities(), lr)),
-            rel_opt: Arc::new(SparseAdagrad::new(dataset.n_relations(), lr)),
+            )?,
+            ent_opt: Arc::new(SparseAdagrad::with_storage(
+                &storage,
+                "entities.opt",
+                dataset.n_entities(),
+                lr,
+            )?),
+            rel_opt: Arc::new(SparseAdagrad::with_storage(
+                &storage,
+                "relations.opt",
+                dataset.n_relations(),
+                lr,
+            )?),
             dim,
             rel_dim,
-        }
+        })
     }
 
     /// Placeholder state (zero tables, unit optimizers) for runs whose
@@ -133,8 +166,8 @@ impl ModelState {
     pub fn placeholder(dataset: &Dataset, model: ModelKind, dim: usize, lr: f32) -> Self {
         let rel_dim = model.rel_dim(dim);
         ModelState {
-            entities: Arc::new(EmbeddingTable::zeros(dataset.n_entities(), dim)),
-            relations: Arc::new(EmbeddingTable::zeros(dataset.n_relations(), rel_dim)),
+            entities: Arc::new(crate::store::DenseStore::zeros(dataset.n_entities(), dim)),
+            relations: Arc::new(crate::store::DenseStore::zeros(dataset.n_relations(), rel_dim)),
             ent_opt: Arc::new(SparseAdagrad::new(1, lr)),
             rel_opt: Arc::new(SparseAdagrad::new(1, lr)),
             dim,
@@ -334,10 +367,7 @@ fn worker_loop(
 
     for step in 0..cfg.batches_per_worker as u64 {
         // (1) sample
-        let crossed = phases.time("sample", || {
-            let crossed = pos.next_batch(shape.batch, &mut idx_buf);
-            crossed
-        });
+        let crossed = phases.time("sample", || pos.next_batch(shape.batch, &mut idx_buf));
         let batch = phases.time("sample", || neg.assemble(&dataset.train, &idx_buf));
         if crossed {
             last_epoch = pos.epoch();
@@ -370,7 +400,8 @@ fn worker_loop(
             if gpu && !cfg.relation_partition {
                 ledger.add_d2h((rel_g.rows.len() * 4) as u64);
             }
-            state.rel_opt.apply(&state.relations, &rel_g.ids, &rel_g.rows);
+            // split_grads pre-accumulated duplicates → unique fast path
+            state.rel_opt.apply_unique(&state.relations, &rel_g.ids, &rel_g.rows);
             let ent_bytes = (ent_g.rows.len() * 4) as u64;
             match &updater {
                 Some(up) => {
@@ -383,7 +414,7 @@ fn worker_loop(
                     if gpu {
                         ledger.add_d2h(ent_bytes);
                     }
-                    state.ent_opt.apply(&state.entities, &ent_g.ids, &ent_g.rows);
+                    state.ent_opt.apply_unique(&state.entities, &ent_g.ids, &ent_g.rows);
                 }
             }
         });

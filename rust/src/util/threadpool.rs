@@ -4,6 +4,14 @@
 //! covers the remaining data-parallel chores: parallel init, parallel eval
 //! sharding, and the partitioner's parallel refinement sweeps.
 
+/// Data-parallel thread count for one-shot chores (parallel init, table
+/// export): the machine's `available_parallelism`, clamped to `[1, cap]`
+/// so small machines aren't oversubscribed and big ones aren't capped at
+/// a hard-coded constant.
+pub fn default_threads(cap: usize) -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, cap.max(1))
+}
+
 /// Run `f(worker_id)` on `n` scoped threads and collect the results in
 /// worker order. Panics propagate.
 pub fn scoped_map<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
@@ -48,6 +56,14 @@ mod tests {
     fn map_collects_in_order() {
         let out = scoped_map(4, |i| i * 10);
         assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn default_threads_clamps() {
+        assert_eq!(default_threads(1), 1);
+        let n = default_threads(16);
+        assert!((1..=16).contains(&n));
+        assert!(default_threads(0) == 1);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use dglke::api::{
 use dglke::models::step::StepShape;
 use dglke::models::ModelKind;
 use dglke::runtime::BackendKind;
+use dglke::store::EmbeddingStore;
 
 /// A small deterministic spec: native backend, 1 worker, sync updates
 /// (async updates apply gradients on a second thread, which is

@@ -8,7 +8,7 @@ use dglke::kg::{Triplet, TripletStore};
 use dglke::kvstore::{KvCluster, TableId};
 use dglke::partition::{partition_relations, GraphPartition, MetisConfig, SPLIT};
 use dglke::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
-use dglke::store::{EmbeddingTable, SparseAdagrad, SparseGrads};
+use dglke::store::{DenseStore, EmbeddingStore, SparseAdagrad, SparseGrads};
 use dglke::util::json::Json;
 use dglke::util::rng::Rng;
 
@@ -193,7 +193,7 @@ fn prop_adagrad_descends_on_convex_problems() {
     for _ in 0..5 {
         let dim = 1 + rng.gen_index(6);
         let target: Vec<f32> = (0..dim).map(|_| rng.gen_normal()).collect();
-        let table = EmbeddingTable::zeros(1, dim);
+        let table = DenseStore::zeros(1, dim);
         let opt = SparseAdagrad::new(1, 1.0);
         for _ in 0..800 {
             let row = table.row(0);
@@ -217,7 +217,7 @@ fn prop_kvstore_matches_in_memory_model() {
     let cluster = KvCluster::start(&entity_machine, 6, 2, 2, dim, dim, 0.5, 0.1, 77).unwrap();
 
     // reference model: same init (id-derived), same AdaGrad
-    let model = EmbeddingTable::zeros(n_entities, dim);
+    let model = DenseStore::zeros(n_entities, dim);
     for id in 0..n_entities {
         let mut r = Rng::seed_from_u64(77 ^ ((id as u64).wrapping_mul(2) + 1));
         let row: Vec<f32> = (0..dim).map(|_| r.gen_uniform(-0.1, 0.1)).collect();
@@ -309,7 +309,7 @@ fn prop_json_roundtrip_random_values() {
 
 #[test]
 fn hogwild_updates_all_land_on_disjoint_rows() {
-    let table = std::sync::Arc::new(EmbeddingTable::zeros(256, 8));
+    let table = std::sync::Arc::new(DenseStore::zeros(256, 8));
     let opt = std::sync::Arc::new(SparseAdagrad::new(256, 1.0));
     dglke::util::threadpool::scoped_map(8, |w| {
         let mut rng = Rng::seed_from_u64(w as u64);

@@ -1,0 +1,164 @@
+//! Cross-backend storage tests: the three [`EmbeddingStore`] backends
+//! (dense / sharded / mmap) must be *observationally identical* — same
+//! init, same training trajectory, same checkpoints — differing only in
+//! where the bytes live. Plus the budget gate that routes larger-than-RAM
+//! runs to the mmap backend.
+
+use dglke::api::{ParallelMode, RunSpec, Session};
+use dglke::models::step::StepShape;
+use dglke::models::ModelKind;
+use dglke::runtime::BackendKind;
+use dglke::store::{EmbeddingStore, StoreBackendKind, StoreConfig};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("dglke-storage-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic training spec: 1 worker, sync updates, native backend.
+fn spec_with_storage(storage: StoreConfig) -> RunSpec {
+    RunSpec {
+        dataset: "tiny".into(),
+        model: ModelKind::TransEL2,
+        backend: BackendKind::Native,
+        mode: ParallelMode::Single { workers: 1, gpu: false },
+        batches: 25,
+        lr: 0.25,
+        log_every: 5,
+        async_update: false,
+        shape: Some(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 16 }),
+        storage,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn backends_train_byte_identical() {
+    let dir = tmp_dir("identical");
+    let configs = [
+        ("dense", StoreConfig::dense()),
+        ("sharded", StoreConfig::sharded(3)),
+        ("mmap", StoreConfig::mmap(dir.join("mmap").to_string_lossy().into_owned())),
+    ];
+    let mut results = Vec::new();
+    for (name, storage) in configs {
+        let mut session = Session::from_spec(spec_with_storage(storage)).unwrap();
+        assert_eq!(session.state().entities.backend_name(), name);
+        let report = session.train().unwrap();
+        results.push((
+            name,
+            report.loss_curve.clone(),
+            session.state().entities.snapshot(),
+            session.state().relations.snapshot(),
+        ));
+    }
+    let (_, ref curve0, ref ents0, ref rels0) = results[0];
+    for (name, curve, ents, rels) in &results[1..] {
+        assert_eq!(curve, curve0, "{name}: loss trajectory differs from dense");
+        assert_eq!(ents, ents0, "{name}: entity table differs from dense");
+        assert_eq!(rels, rels0, "{name}: relation table differs from dense");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mmap_checkpoint_round_trips_into_dense() {
+    let dir = tmp_dir("ckpt");
+    let store_dir = dir.join("tables");
+    let ckpt_dir = dir.join("checkpoint");
+
+    let mut mmap_session = Session::from_spec(spec_with_storage(StoreConfig::mmap(
+        store_dir.to_string_lossy().into_owned(),
+    )))
+    .unwrap();
+    mmap_session.train().unwrap();
+    // rows live on disk: nothing table-sized resident, yet the logical
+    // table is full-size
+    assert_eq!(mmap_session.state().entities.resident_bytes(), 0);
+    assert!(mmap_session.state().entities.table_bytes() > 0);
+    // export streams from the backing file (no snapshot clone involved)
+    mmap_session.export_embeddings(&ckpt_dir).unwrap();
+
+    let mut dense_session = Session::from_spec(spec_with_storage(StoreConfig::dense())).unwrap();
+    dense_session.load_checkpoint(&ckpt_dir).unwrap();
+    assert_eq!(
+        dense_session.state().entities.snapshot(),
+        mmap_session.state().entities.snapshot()
+    );
+    assert_eq!(
+        dense_session.state().relations.snapshot(),
+        mmap_session.state().relations.snapshot()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn budget_gate_routes_big_tables_to_mmap() {
+    // a budget far below the tiny dataset's table bytes: dense must be
+    // rejected with an actionable error, mmap must train to completion
+    let dir = tmp_dir("budget");
+    let mut spec = spec_with_storage(StoreConfig::dense());
+    spec.storage.budget_mb = Some(0.001); // ~1 KiB
+    let err = Session::from_spec(spec).unwrap_err();
+    assert!(err.to_string().contains("mmap"), "unhelpful error: {err}");
+
+    let mut spec = spec_with_storage(StoreConfig::mmap(dir.to_string_lossy().into_owned()));
+    spec.storage.budget_mb = Some(0.001);
+    let mut session = Session::from_spec(spec).unwrap();
+    let report = session.train().unwrap();
+    // trains (loss decreases) despite tables exceeding the budget
+    let first = report.loss_curve.first().unwrap().1;
+    let last = report.loss_curve.last().unwrap().1;
+    assert!(last < first, "loss {first} -> {last}");
+    assert!(session.state().entities.table_bytes() > 1024);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sharded_store_flush_and_placement() {
+    let spec = spec_with_storage(StoreConfig::sharded(4));
+    let session = Session::from_spec(spec).unwrap();
+    assert_eq!(session.state().entities.backend_name(), "sharded");
+    session.state().entities.flush().unwrap();
+    assert_eq!(
+        session.state().entities.resident_bytes(),
+        session.state().entities.table_bytes()
+    );
+}
+
+#[test]
+fn distributed_session_honors_storage_backend() {
+    // server shards are hosted on the spec's backend (sharded here); with
+    // a single trainer the run is deterministic, so it must train to the
+    // exact same dump as a dense-shard run
+    let mk = |storage: StoreConfig| {
+        let spec = RunSpec {
+            mode: ParallelMode::Distributed {
+                machines: 1,
+                trainers: 1,
+                servers: 1,
+                partition: dglke::dist::PartitionStrategy::Metis,
+                local_negatives: true,
+            },
+            batches: 10,
+            ..spec_with_storage(storage)
+        };
+        let mut session = Session::from_spec(spec).unwrap();
+        session.train().unwrap();
+        session.state().entities.snapshot()
+    };
+    assert_eq!(mk(StoreConfig::sharded(2)), mk(StoreConfig::dense()));
+}
+
+#[test]
+fn storage_spec_round_trips_through_cli_json() {
+    let mut spec = spec_with_storage(StoreConfig::sharded(5));
+    spec.storage.budget_mb = Some(64.0);
+    let parsed = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+    assert_eq!(spec, parsed);
+    assert_eq!(parsed.storage.backend, StoreBackendKind::Sharded);
+    assert_eq!(parsed.storage.shards, 5);
+}
