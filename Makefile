@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check check artifacts bench bench-smoke clean
+.PHONY: build test fmt fmt-check check artifacts bench bench-smoke bench-prefetch clean
 
 build:
 	$(CARGO) build --release
@@ -32,6 +32,11 @@ artifacts:
 # small enough for CI, writes the BENCH_storage.json artifact.
 bench-smoke:
 	QUICK=1 $(CARGO) bench --bench bench_storage
+
+# Prefetch-pipeline on/off step-time comparison per storage backend;
+# writes BENCH_prefetch.json (expected: mmap >= 1.2x, dense ~ wash).
+bench-prefetch:
+	QUICK=1 $(CARGO) bench --bench bench_prefetch
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

@@ -218,6 +218,8 @@ impl Session {
             init_scale: self.spec.init_scale,
             neg_degree_frac: self.spec.neg_degree_frac,
             async_update: self.spec.async_update,
+            prefetch: self.spec.pipeline.prefetch,
+            prefetch_depth: self.spec.pipeline.depth,
             relation_partition: self.spec.relation_partition,
             sync_interval: self.spec.sync_interval,
             hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
@@ -526,6 +528,19 @@ impl SessionBuilder {
 
     pub fn async_update(mut self, on: bool) -> Self {
         self.spec.async_update = on;
+        self
+    }
+
+    /// Overlap next-batch sample+gather with compute (§3.5). Helps when
+    /// gather latency is visible (mmap/sharded storage); a wash on dense.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.spec.pipeline.prefetch = on;
+        self
+    }
+
+    /// Prefetch buffers in flight (>= 2; also the staleness bound).
+    pub fn prefetch_depth(mut self, depth: usize) -> Self {
+        self.spec.pipeline.depth = depth;
         self
     }
 

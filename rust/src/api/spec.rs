@@ -21,6 +21,10 @@
 //!   "init_scale": 0.37,
 //!   "neg_degree_frac": 0.0,                  // §3.3 degree-based negatives
 //!   "async_update": true,                    // §3.5 (single-machine only)
+//!   "pipeline": {"prefetch": false,          // §3.5 overlap next-batch
+//!                "depth": 2},                //   sample+gather with compute;
+//!                                            //   depth = buffers in flight
+//!                                            //   (>= 2, double buffering)
 //!   "relation_partition": true,              // §3.4 (single-machine only)
 //!   "sync_interval": 500,                    // §3.6 barrier period
 //!   "log_every": 50,
@@ -72,6 +76,27 @@ impl LossSpec {
             kind: self.margin.map(LossKind::Margin).unwrap_or(LossKind::Logistic),
             adv_temp: self.adv_temp,
         }
+    }
+}
+
+/// Prefetch-pipeline configuration (§3.5): run sample+gather for batch
+/// N+1 on a helper thread while batch N computes. Off by default — it
+/// pays off when gather latency is visible (mmap / sharded storage) and
+/// is a wash on dense in-memory tables. With synchronous updates and a
+/// single worker the pipeline is byte-identical to the sequential loop
+/// (prefetched rows dirtied by an update are patched before compute);
+/// otherwise staleness is bounded by `depth` batches, the same Hogwild
+/// contract as `async_update`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PipelineSpec {
+    pub prefetch: bool,
+    /// buffers in flight (>= 2; 2 = classic double buffering)
+    pub depth: usize,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> Self {
+        PipelineSpec { prefetch: false, depth: 2 }
     }
 }
 
@@ -152,6 +177,9 @@ pub struct RunSpec {
     pub init_scale: f32,
     pub neg_degree_frac: f64,
     pub async_update: bool,
+    /// async prefetch pipeline (single-machine only; distributed trainers
+    /// gather from the KVStore and ignore it)
+    pub pipeline: PipelineSpec,
     pub relation_partition: bool,
     pub sync_interval: usize,
     pub log_every: usize,
@@ -181,6 +209,7 @@ impl Default for RunSpec {
             init_scale: 0.37,
             neg_degree_frac: 0.0,
             async_update: true,
+            pipeline: PipelineSpec::default(),
             relation_partition: true,
             sync_interval: 500,
             log_every: 50,
@@ -331,6 +360,13 @@ impl RunSpec {
             ("init_scale", Json::Num(self.init_scale as f64)),
             ("neg_degree_frac", Json::Num(self.neg_degree_frac)),
             ("async_update", Json::Bool(self.async_update)),
+            (
+                "pipeline",
+                obj(vec![
+                    ("prefetch", Json::Bool(self.pipeline.prefetch)),
+                    ("depth", Json::Num(self.pipeline.depth as f64)),
+                ]),
+            ),
             ("relation_partition", Json::Bool(self.relation_partition)),
             ("sync_interval", Json::Num(self.sync_interval as f64)),
             ("log_every", Json::Num(self.log_every as f64)),
@@ -430,6 +466,14 @@ impl RunSpec {
             }
         };
 
+        let pipeline = match j.get("pipeline") {
+            None | Some(Json::Null) => PipelineSpec::default(),
+            Some(p) => PipelineSpec {
+                prefetch: get_bool(p, "prefetch", PipelineSpec::default().prefetch)?,
+                depth: get_usize(p, "depth", PipelineSpec::default().depth)?,
+            },
+        };
+
         let storage = match j.get("storage") {
             None | Some(Json::Null) => StoreConfig::default(),
             Some(s) => {
@@ -468,6 +512,7 @@ impl RunSpec {
             init_scale: get_f64(j, "init_scale", d.init_scale as f64)? as f32,
             neg_degree_frac: get_f64(j, "neg_degree_frac", d.neg_degree_frac)?,
             async_update: get_bool(j, "async_update", d.async_update)?,
+            pipeline,
             relation_partition: get_bool(j, "relation_partition", d.relation_partition)?,
             sync_interval: get_usize(j, "sync_interval", d.sync_interval)?,
             log_every: get_usize(j, "log_every", d.log_every)?,
@@ -516,6 +561,12 @@ impl RunSpec {
             );
         }
         anyhow::ensure!(self.sync_interval >= 1, "sync_interval must be >= 1");
+        anyhow::ensure!(
+            (2..=16).contains(&self.pipeline.depth),
+            "pipeline.depth must be in [2, 16] (double buffering needs 2 buffers; \
+             more than 16 only grows staleness), got {}",
+            self.pipeline.depth
+        );
         self.storage.validate()?;
         anyhow::ensure!(
             self.seed <= (1u64 << 53),
@@ -566,6 +617,7 @@ mod tests {
             init_scale: 0.5,
             neg_degree_frac: 0.25,
             async_update: false,
+            pipeline: PipelineSpec { prefetch: true, depth: 3 },
             relation_partition: false,
             sync_interval: 64,
             log_every: 5,
@@ -601,6 +653,34 @@ mod tests {
         assert!(RunSpec::from_json_str(r#"{"storage": {"backend": "ssd"}}"#).is_err());
         // wrong-typed budget rejected, not silently dropped
         assert!(RunSpec::from_json_str(r#"{"storage": {"budget_mb": "256"}}"#).is_err());
+    }
+
+    #[test]
+    fn pipeline_spec_parses_and_validates() {
+        // absent → off, depth 2
+        let spec = RunSpec::from_json_str("{}").unwrap();
+        assert_eq!(spec.pipeline, PipelineSpec::default());
+        assert!(!spec.pipeline.prefetch);
+        // partial object fills defaults
+        let spec = RunSpec::from_json_str(r#"{"pipeline": {"prefetch": true}}"#).unwrap();
+        assert_eq!(spec.pipeline, PipelineSpec { prefetch: true, depth: 2 });
+        // explicit depth round-trips
+        let spec = RunSpec::from_json_str(r#"{"pipeline": {"prefetch": true, "depth": 4}}"#)
+            .unwrap();
+        assert_eq!(spec.pipeline.depth, 4);
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        // wrong types rejected
+        assert!(RunSpec::from_json_str(r#"{"pipeline": {"prefetch": "yes"}}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"pipeline": {"depth": "two"}}"#).is_err());
+        // depth bounds enforced by validate
+        let mut spec = RunSpec::default();
+        spec.pipeline.depth = 1;
+        assert!(spec.validate().is_err(), "depth 1 cannot double-buffer");
+        spec.pipeline.depth = 17;
+        assert!(spec.validate().is_err(), "depth 17 exceeds the staleness cap");
+        spec.pipeline.depth = 2;
+        assert!(spec.validate().is_ok());
     }
 
     #[test]

@@ -33,6 +33,8 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --budget-mb F (tables over the budget must use mmap)
   train:  --workers N --batches N(per worker) --lr F --gpu (simulate GPUs)
           --margin F --adv-temp F --degree-frac F --no-async --no-rel-part
+          --prefetch (overlap next-batch sample+gather with compute)
+          --prefetch-depth N (buffers in flight, >= 2)
           --sync-interval N --log-every N --eval --sampled-eval
   dist-train: --machines N --trainers N --servers N --random-partition
           --no-local-negatives --batches N --eval
@@ -119,6 +121,10 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
     if args.flag("no-async") {
         spec.async_update = false;
     }
+    if args.flag("prefetch") {
+        spec.pipeline.prefetch = true;
+    }
+    spec.pipeline.depth = args.parse_or("prefetch-depth", spec.pipeline.depth)?;
     if args.flag("no-rel-part") {
         spec.relation_partition = false;
     }

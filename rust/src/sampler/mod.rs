@@ -15,7 +15,7 @@ pub mod negative;
 pub mod positive;
 
 pub use negative::{NegativeConfig, NegativeSampler};
-pub use positive::PositiveSampler;
+pub use positive::{PositiveSampler, SamplerCursor};
 
 /// One assembled mini-batch of triplet ids (embeddings not yet gathered).
 #[derive(Clone, Debug)]

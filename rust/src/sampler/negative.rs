@@ -27,7 +27,11 @@ impl Default for NegativeConfig {
     }
 }
 
-/// Stateful negative sampler (one per trainer thread).
+/// Stateful negative sampler (one per trainer thread). `Clone` forks the
+/// full RNG state, so a clone replays the exact same negative stream —
+/// used by the prefetch pipeline to move sampling onto a helper thread
+/// without changing the drawn sequence.
+#[derive(Clone)]
 pub struct NegativeSampler {
     cfg: NegativeConfig,
     n_entities: u64,

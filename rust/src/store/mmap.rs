@@ -11,7 +11,12 @@
 //!
 //! Concurrent row updates race at row granularity (Hogwild, like every
 //! backend); positioned I/O never moves a shared cursor, so races stay
-//! value-level, never structural.
+//! value-level, never structural. This matters specifically for the
+//! prefetch pipeline, where a helper thread gathers rows while the
+//! worker (and async updater) write them: `pread` against a concurrent
+//! `pwrite` of the same row returns some interleaving of old and new
+//! bytes for that row only — never another row's data, a short read, or
+//! a fault (audited by `concurrent_gather_races_stay_value_level` below).
 //!
 //! Checkpoint export streams straight from the backing file
 //! ([`EmbeddingStore::export_rows`]) — no full-table `snapshot()` clone,
@@ -200,6 +205,54 @@ mod tests {
         let mut bytes = Vec::new();
         t.export_rows(&mut bytes).unwrap();
         assert_eq!(bytes.len(), 3 * 2 * 4);
+    }
+
+    #[test]
+    fn concurrent_gather_races_stay_value_level() {
+        // the prefetch-pipeline audit: one thread gathers the same id set
+        // over and over while another rewrites those rows. The documented
+        // guarantee is byte provenance, not atomicity: a racing read may
+        // interleave old and new bytes of *that row* (Hogwild tearing),
+        // but never bytes of another row, a short read, or a fault. Every
+        // value ever written to row r has all four bytes carrying r in
+        // the low 6 bits (generation in the high 2), so each gathered
+        // byte proves which row it came from regardless of tearing.
+        let pattern = |row: usize, g: usize| -> f32 {
+            let b = (row as u8) | (((g % 4) as u8) << 6);
+            f32::from_bits(u32::from_le_bytes([b; 4]))
+        };
+        let path = tmp_path("gather-race");
+        let t = MmapStore::create(&path, 64, 8).unwrap();
+        for row in 0..64 {
+            t.set_row(row, &[pattern(row, 0); 8]);
+        }
+        let ids: Vec<u64> = (0..64).collect();
+        crate::util::threadpool::scoped_map(2, |w| {
+            if w == 0 {
+                for g in 1..=50 {
+                    for row in 0..64usize {
+                        t.set_row(row, &[pattern(row, g); 8]);
+                    }
+                }
+            } else {
+                let mut out = vec![0f32; 64 * 8];
+                for _ in 0..200 {
+                    t.gather(&ids, &mut out);
+                    for (j, lanes) in out.chunks_exact(8).enumerate() {
+                        for &v in lanes {
+                            for byte in v.to_bits().to_le_bytes() {
+                                assert_eq!(
+                                    (byte & 0x3F) as usize,
+                                    j,
+                                    "row {j} holds a byte written to another row"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -7,8 +7,19 @@
 use crate::models::step::{StepGrads, StepInputs, StepShape};
 use crate::sampler::Batch;
 use crate::store::{EmbeddingStore, SparseGrads};
+use std::collections::HashSet;
 
-/// Reusable gather buffers for one worker.
+/// Bytes a transfer of `values` f32s moves. Gather/scatter paths count in
+/// f32 values; the GPU ledger bills bytes — this is the one place that
+/// conversion lives, so the ×4 can't silently drift between call sites.
+pub fn bytes_moved(values: u64) -> u64 {
+    values * std::mem::size_of::<f32>() as u64
+}
+
+/// Reusable gather buffers for one worker. Plain owned `Vec`s, so a
+/// buffer set can be handed to a prefetch thread, filled there, and sent
+/// back over a channel (the pipeline's double-buffer protocol) without
+/// any shared-state aliasing.
 pub struct BatchBuffers {
     pub h: Vec<f32>,
     pub r: Vec<f32>,
@@ -46,6 +57,38 @@ impl BatchBuffers {
         (self.h.len() + self.r.len() + self.t.len() + self.neg_h.len() + self.neg_t.len()) as u64
     }
 
+    /// Re-gather the rows of `batch` whose ids appear in `ent_dirty` /
+    /// `rel_dirty` — the ids written to the tables since this buffer was
+    /// prefetched. Called by the worker after applying an update, so a
+    /// pipelined gather that raced that update is repaired before compute
+    /// and the prefetch pipeline stays byte-identical to the sequential
+    /// loop under synchronous updates. Returns the `(entity, relation)`
+    /// f32 values re-moved, separately — they bill differently: these
+    /// re-gathers sit on the critical path, and relation rows only cross
+    /// the link at all when relation partitioning is off (§3.4).
+    pub fn patch_rows(
+        &mut self,
+        batch: &Batch,
+        entities: &dyn EmbeddingStore,
+        relations: &dyn EmbeddingStore,
+        ent_dirty: &HashSet<u64>,
+        rel_dirty: &HashSet<u64>,
+    ) -> (u64, u64) {
+        if ent_dirty.is_empty() && rel_dirty.is_empty() {
+            return (0, 0);
+        }
+        let dim = entities.dim();
+        let rel_dim = relations.dim();
+        let mut ent_moved = 0u64;
+        let mut rel_moved = 0u64;
+        patch_section(&batch.heads, &mut self.h, entities, ent_dirty, dim, &mut ent_moved);
+        patch_section(&batch.tails, &mut self.t, entities, ent_dirty, dim, &mut ent_moved);
+        patch_section(&batch.neg_heads, &mut self.neg_h, entities, ent_dirty, dim, &mut ent_moved);
+        patch_section(&batch.neg_tails, &mut self.neg_t, entities, ent_dirty, dim, &mut ent_moved);
+        patch_section(&batch.rels, &mut self.r, relations, rel_dirty, rel_dim, &mut rel_moved);
+        (ent_moved, rel_moved)
+    }
+
     pub fn inputs(&self) -> StepInputs<'_> {
         StepInputs {
             h: &self.h,
@@ -53,6 +96,24 @@ impl BatchBuffers {
             t: &self.t,
             neg_h: &self.neg_h,
             neg_t: &self.neg_t,
+        }
+    }
+}
+
+/// One section of [`BatchBuffers::patch_rows`]: re-read the rows of `ids`
+/// that appear in `dirty` into their slots of `buf`, counting f32s moved.
+fn patch_section(
+    ids: &[u64],
+    buf: &mut [f32],
+    store: &dyn EmbeddingStore,
+    dirty: &HashSet<u64>,
+    d: usize,
+    moved: &mut u64,
+) {
+    for (j, id) in ids.iter().enumerate() {
+        if dirty.contains(id) {
+            store.read_row(*id as usize, &mut buf[j * d..(j + 1) * d]);
+            *moved += d as u64;
         }
     }
 }
@@ -119,5 +180,81 @@ mod tests {
         assert_eq!(rel.ids.len(), 3); // rels {0,1,2}, 0 twice
         let idx0 = rel.ids.iter().position(|&i| i == 0).unwrap();
         assert_eq!(&rel.rows[idx0 * 3..(idx0 + 1) * 3], &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn bytes_moved_is_four_bytes_per_value() {
+        // regression for the GPU ledger math: gather() returns f32 counts,
+        // every byte count billed to the ledger must go through bytes_moved
+        assert_eq!(bytes_moved(0), 0);
+        assert_eq!(bytes_moved(1), 4);
+        assert_eq!(bytes_moved(1000), 4000);
+        let shape = StepShape { batch: 4, chunks: 2, neg_k: 2, dim: 3 };
+        let entities = crate::store::DenseStore::uniform(10, 3, 1.0, 1);
+        let relations = crate::store::DenseStore::uniform(5, 3, 1.0, 2);
+        let batch = Batch {
+            heads: vec![1, 2, 3, 1],
+            rels: vec![0, 1, 0, 2],
+            tails: vec![4, 5, 6, 7],
+            neg_heads: vec![8, 9, 8, 9],
+            neg_tails: vec![0, 1, 2, 3],
+            chunks: 2,
+            neg_k: 2,
+        };
+        let mut buf = BatchBuffers::new(&shape, 3);
+        let moved = buf.gather(&batch, &entities, &relations);
+        let buffer_f32s =
+            (buf.h.len() + buf.r.len() + buf.t.len() + buf.neg_h.len() + buf.neg_t.len()) as u64;
+        assert_eq!(bytes_moved(moved), buffer_f32s * 4);
+    }
+
+    #[test]
+    fn patch_rows_repairs_only_dirty_ids() {
+        let shape = StepShape { batch: 2, chunks: 1, neg_k: 2, dim: 3 };
+        let entities = crate::store::DenseStore::uniform(10, 3, 1.0, 3);
+        let relations = crate::store::DenseStore::uniform(5, 3, 1.0, 4);
+        let batch = Batch {
+            heads: vec![1, 2],
+            rels: vec![0, 1],
+            tails: vec![3, 4],
+            neg_heads: vec![5, 6],
+            neg_tails: vec![7, 1],
+            chunks: 1,
+            neg_k: 2,
+        };
+        let mut buf = BatchBuffers::new(&shape, 3);
+        buf.gather(&batch, &entities, &relations);
+
+        // mutate rows 1 (head + neg_tail) and relation 1 behind the buffer
+        entities.set_row(1, &[9.0, 9.0, 9.0]);
+        relations.set_row(1, &[7.0, 7.0, 7.0]);
+        let stale_tail = buf.t.clone();
+
+        let ent_dirty: HashSet<u64> = [1].into_iter().collect();
+        let rel_dirty: HashSet<u64> = [1].into_iter().collect();
+        let (ent_moved, rel_moved) =
+            buf.patch_rows(&batch, &entities, &relations, &ent_dirty, &rel_dirty);
+        // entity 1 appears twice (heads[0], neg_tails[1]); relation 1 once
+        assert_eq!(ent_moved, 2 * 3);
+        assert_eq!(rel_moved, 3);
+        assert_eq!(&buf.h[0..3], &[9.0, 9.0, 9.0]);
+        assert_eq!(&buf.neg_t[3..6], &[9.0, 9.0, 9.0]);
+        assert_eq!(&buf.r[3..6], &[7.0, 7.0, 7.0]);
+        // untouched sections keep their gathered values
+        assert_eq!(buf.t, stale_tail);
+        // a patched buffer equals a fresh gather (the equivalence invariant)
+        let mut fresh = BatchBuffers::new(&shape, 3);
+        fresh.gather(&batch, &entities, &relations);
+        assert_eq!(buf.h, fresh.h);
+        assert_eq!(buf.r, fresh.r);
+        assert_eq!(buf.t, fresh.t);
+        assert_eq!(buf.neg_h, fresh.neg_h);
+        assert_eq!(buf.neg_t, fresh.neg_t);
+
+        // empty dirty sets are free
+        assert_eq!(
+            buf.patch_rows(&batch, &entities, &relations, &HashSet::new(), &HashSet::new()),
+            (0, 0)
+        );
     }
 }

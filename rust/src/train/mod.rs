@@ -1,6 +1,8 @@
 //! Training engine: the paper's §3 pipeline on one machine.
 //!
 //! * [`batch`] — gather/scatter between the global tables and step buffers;
+//! * [`prefetch`] — the async prefetch pipeline: sample+gather one batch
+//!   ahead on a helper thread, overlapped with compute (§3.5);
 //! * [`updater`] — async entity-gradient updaters (§3.5);
 //! * [`sync`] — periodic barriers + relation-partition reshuffles (§3.6);
 //! * [`device`] — the multi-GPU transfer ledger (DESIGN.md substitution);
@@ -11,6 +13,7 @@
 
 pub mod batch;
 pub mod device;
+pub mod prefetch;
 pub mod sync;
 pub mod updater;
 pub mod worker;

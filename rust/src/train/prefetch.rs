@@ -1,0 +1,331 @@
+//! Async prefetch pipeline (paper §3.5: "overlap computations with
+//! memory accesses").
+//!
+//! The sequential worker loop is `sample → gather → compute → update`;
+//! with the mmap/sharded backends the gather phase is a visible chunk of
+//! every step. [`Prefetcher`] turns the loop into a two-stage pipeline: a
+//! helper thread owns the sampler cursors and a small pool of
+//! [`BatchBuffers`], and runs sample(N+1) + gather(N+1) while the worker
+//! computes step N. Hand-off is a bounded two-slot channel pair — filled
+//! buffers flow worker-ward, consumed buffers flow back for reuse — so
+//! the pipeline allocates nothing per step and its depth (and therefore
+//! its staleness) is a hard bound, not a queue that can grow.
+//!
+//! # Determinism and staleness
+//!
+//! The helper thread samples from *cloned* cursors ([`PositiveSampler`] /
+//! [`NegativeSampler`] are `Clone` with full RNG state), so the id
+//! sequence is exactly the one the sequential loop would draw. Gathers,
+//! however, run ahead of updates: buffer N+1 may be read before update N
+//! lands. Every prefetched buffer is therefore stamped with the worker's
+//! `applied`-update counter (read with `Acquire` *before* the gather
+//! starts); the worker keeps the id sets of its last few updates and,
+//! on receiving a buffer, re-gathers just the rows written since the
+//! stamp ([`BatchBuffers::patch_rows`]). Under synchronous updates and a
+//! single worker this repairs the race exactly — prefetch on/off is
+//! byte-identical (see `rust/tests/prefetch_tests.rs`). Under async
+//! updates or multiple workers, staleness is bounded by the pipeline
+//! depth, which is the same Hogwild contract the async updater already
+//! accepts.
+//!
+//! # Epoch-boundary resets
+//!
+//! When the relation partition is reshuffled at a sync barrier (§3.4),
+//! the worker sends the new index set through a control channel and bumps
+//! a generation counter. Batches sampled under the old generation are
+//! discarded on receipt (their buffers recycled), so the pipeline
+//! restarts cleanly without tearing down the thread.
+
+use super::batch::BatchBuffers;
+use crate::kg::TripletStore;
+use crate::models::step::StepShape;
+use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
+use crate::store::EmbeddingStore;
+use crate::util::timer::PhaseTimes;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::thread::{Scope, ScopedJoinHandle};
+
+/// A sampled + gathered batch, ready for compute.
+pub struct PrefetchedBatch {
+    pub batch: Batch,
+    pub buf: BatchBuffers,
+    /// f32 values moved by the prefetched gather (ledger accounting)
+    pub moved: u64,
+    /// the worker's applied-update counter observed *before* the gather
+    /// began: updates with index >= this stamp may not be reflected in
+    /// the buffer and must be patched
+    pub gathered_at: u64,
+    /// sampler epoch after drawing this batch. Consumers must track
+    /// epochs by value (`last.max(epoch)`), never by a crossing flag: a
+    /// crossing carried by a batch discarded during a generation reset
+    /// would be lost with a flag, silently skipping a reshuffle.
+    pub epoch: u64,
+    generation: u64,
+}
+
+enum Ctrl {
+    /// Install a new positive index set (epoch-boundary reshuffle) and
+    /// start a new generation.
+    Reset(Vec<u32>),
+}
+
+/// Worker-side handle of the prefetch pipeline. Dropping it (or calling
+/// [`Prefetcher::finish`]) closes the channels and stops the thread.
+pub struct Prefetcher<'scope> {
+    out_rx: Receiver<PrefetchedBatch>,
+    free_tx: SyncSender<BatchBuffers>,
+    ctrl_tx: Sender<Ctrl>,
+    generation: u64,
+    handle: Option<ScopedJoinHandle<'scope, PhaseTimes>>,
+}
+
+impl<'scope> Prefetcher<'scope> {
+    /// Spawn the prefetch thread inside `scope`, taking ownership of the
+    /// sampler cursors. `depth` buffers circulate (2 = classic double
+    /// buffering); `applied` is the worker's completed-update counter used
+    /// to stamp gathers for patching.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_scoped<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        mut pos: PositiveSampler,
+        mut neg: NegativeSampler,
+        triplets: &'env TripletStore,
+        entities: Arc<dyn EmbeddingStore>,
+        relations: Arc<dyn EmbeddingStore>,
+        shape: StepShape,
+        rel_dim: usize,
+        depth: usize,
+        applied: Arc<AtomicU64>,
+    ) -> Prefetcher<'scope> {
+        let depth = depth.max(2);
+        let (out_tx, out_rx) = sync_channel::<PrefetchedBatch>(depth);
+        let (free_tx, free_rx) = sync_channel::<BatchBuffers>(depth);
+        let (ctrl_tx, ctrl_rx) = std::sync::mpsc::channel::<Ctrl>();
+        for _ in 0..depth {
+            free_tx.send(BatchBuffers::new(&shape, rel_dim)).expect("seeding buffer pool");
+        }
+
+        let handle = std::thread::Builder::new()
+            .name("dglke-prefetch".into())
+            .spawn_scoped(scope, move || {
+                let mut pt = PhaseTimes::new();
+                let mut generation = 0u64;
+                let mut idx_buf: Vec<u32> = Vec::with_capacity(shape.batch);
+                // hold the buffer across the control drain so a reset
+                // arriving while we were blocked on the pool is applied
+                // before we sample with it
+                while let Ok(mut buf) = free_rx.recv() {
+                    loop {
+                        match ctrl_rx.try_recv() {
+                            Ok(Ctrl::Reset(indices)) => {
+                                pos.reset_indices(indices);
+                                generation += 1;
+                            }
+                            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                        }
+                    }
+                    let gathered_at = applied.load(Ordering::Acquire);
+                    pt.time("prefetch.sample", || pos.next_batch(shape.batch, &mut idx_buf));
+                    let batch = pt.time("prefetch.sample", || neg.assemble(triplets, &idx_buf));
+                    let moved = pt.time("prefetch.gather", || {
+                        buf.gather(&batch, &*entities, &*relations)
+                    });
+                    let pb = PrefetchedBatch {
+                        batch,
+                        buf,
+                        moved,
+                        gathered_at,
+                        epoch: pos.epoch(),
+                        generation,
+                    };
+                    if out_tx.send(pb).is_err() {
+                        break; // worker finished
+                    }
+                }
+                pt
+            })
+            .expect("spawn prefetch thread");
+
+        Prefetcher { out_rx, free_tx, ctrl_tx, generation: 0, handle: Some(handle) }
+    }
+
+    /// Receive the next batch of the current generation, transparently
+    /// discarding (and recycling) batches sampled before the last reset.
+    /// Blocks while the pipeline is behind — that time is the pipeline
+    /// stall the worker bills to its `prefetch` phase.
+    pub fn recv(&mut self) -> Result<PrefetchedBatch> {
+        loop {
+            let pb = self
+                .out_rx
+                .recv()
+                .map_err(|_| anyhow!("prefetch thread terminated unexpectedly"))?;
+            if pb.generation == self.generation {
+                return Ok(pb);
+            }
+            let _ = self.free_tx.send(pb.buf); // stale: recycle and retry
+        }
+    }
+
+    /// Return a consumed batch's buffers to the pool so the prefetch
+    /// thread can refill them.
+    pub fn recycle(&self, pb: PrefetchedBatch) {
+        let _ = self.free_tx.send(pb.buf);
+    }
+
+    /// Install a new positive index set (epoch-boundary relation
+    /// reshuffle). In-flight batches of the old generation are discarded
+    /// by [`Prefetcher::recv`].
+    pub fn reset_indices(&mut self, indices: Vec<u32>) {
+        self.generation += 1;
+        let _ = self.ctrl_tx.send(Ctrl::Reset(indices));
+    }
+
+    /// Stop the thread and return its accumulated [`PhaseTimes`]
+    /// (`prefetch.sample` / `prefetch.gather` — the overlapped, off-
+    /// critical-path work).
+    pub fn finish(mut self) -> PhaseTimes {
+        let handle = self.handle.take().expect("finish called once");
+        drop(self); // closes out_rx + free_tx: the thread's send/recv fails
+        handle.join().expect("prefetch thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator::{generate, GeneratorConfig};
+    use crate::sampler::NegativeConfig;
+    use crate::store::DenseStore;
+
+    fn setup() -> (crate::kg::TripletStore, Arc<dyn EmbeddingStore>, Arc<dyn EmbeddingStore>) {
+        let kg = generate(&GeneratorConfig::tiny(3));
+        let n_ent = kg.store.n_entities();
+        let n_rel = kg.store.n_relations();
+        (
+            kg.store,
+            Arc::new(DenseStore::uniform(n_ent, 8, 0.4, 1)),
+            Arc::new(DenseStore::uniform(n_rel, 8, 0.4, 2)),
+        )
+    }
+
+    const SHAPE: StepShape = StepShape { batch: 16, chunks: 4, neg_k: 4, dim: 8 };
+
+    fn samplers(store: &crate::kg::TripletStore) -> (PositiveSampler, NegativeSampler) {
+        let pos = PositiveSampler::over_all(store, 5);
+        let neg = NegativeSampler::new(
+            NegativeConfig { k: SHAPE.neg_k, chunk_size: SHAPE.chunk_size(), ..Default::default() },
+            store.n_entities(),
+            6,
+        );
+        (pos, neg)
+    }
+
+    #[test]
+    fn prefetched_stream_matches_sequential_stream() {
+        let (store, entities, relations) = setup();
+        let (pos, neg) = samplers(&store);
+        let (mut seq_pos, mut seq_neg) = (pos.clone(), neg.clone());
+        let applied = Arc::new(AtomicU64::new(0));
+
+        std::thread::scope(|s| {
+            let mut pf = Prefetcher::spawn_scoped(
+                s,
+                pos,
+                neg,
+                &store,
+                entities.clone(),
+                relations.clone(),
+                SHAPE,
+                8,
+                2,
+                applied.clone(),
+            );
+            let mut idx_buf = Vec::new();
+            let mut seq_buf = BatchBuffers::new(&SHAPE, 8);
+            for step in 0..40u64 {
+                let pb = pf.recv().unwrap();
+                seq_pos.next_batch(SHAPE.batch, &mut idx_buf);
+                let seq_batch = seq_neg.assemble(&store, &idx_buf);
+                assert_eq!(pb.batch.heads, seq_batch.heads, "step {step}");
+                assert_eq!(pb.batch.rels, seq_batch.rels);
+                assert_eq!(pb.batch.tails, seq_batch.tails);
+                assert_eq!(pb.batch.neg_heads, seq_batch.neg_heads);
+                assert_eq!(pb.batch.neg_tails, seq_batch.neg_tails);
+                let moved = seq_buf.gather(&seq_batch, &*entities, &*relations);
+                assert_eq!(pb.moved, moved);
+                assert_eq!(pb.buf.h, seq_buf.h);
+                assert_eq!(pb.buf.neg_t, seq_buf.neg_t);
+                applied.store(step + 1, Ordering::Release);
+                pf.recycle(pb);
+            }
+            let pt = pf.finish();
+            assert!(
+                pt.entries().iter().any(|(p, _)| *p == "prefetch.sample"),
+                "helper thread must report its sample phase"
+            );
+        });
+    }
+
+    #[test]
+    fn reset_discards_stale_generations() {
+        let (store, entities, relations) = setup();
+        let (pos, neg) = samplers(&store);
+        let applied = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            let mut pf = Prefetcher::spawn_scoped(
+                s, pos, neg, &store, entities, relations, SHAPE, 8, 2, applied,
+            );
+            // take one batch, then reset to a narrow index window
+            let pb = pf.recv().unwrap();
+            pf.recycle(pb);
+            let narrow: Vec<u32> = (0..20).collect();
+            pf.reset_indices(narrow.clone());
+            // everything received from now on must come from the new set
+            for _ in 0..10 {
+                let pb = pf.recv().unwrap();
+                // ids in the batch were drawn from indices 0..20 of the store
+                for &h in &pb.batch.heads {
+                    let found = narrow
+                        .iter()
+                        .any(|&i| store.get(i as usize).head as u64 == h);
+                    assert!(found, "head {h} not reachable from the reset index set");
+                }
+                pf.recycle(pb);
+            }
+            pf.finish();
+        });
+    }
+
+    #[test]
+    fn stamps_are_monotone_and_bounded_by_depth() {
+        let (store, entities, relations) = setup();
+        let (pos, neg) = samplers(&store);
+        let applied = Arc::new(AtomicU64::new(0));
+        let depth = 3usize;
+        std::thread::scope(|s| {
+            let mut pf = Prefetcher::spawn_scoped(
+                s, pos, neg, &store, entities, relations, SHAPE, 8, depth,
+                applied.clone(),
+            );
+            let mut last_stamp = 0u64;
+            for step in 0..30u64 {
+                let pb = pf.recv().unwrap();
+                assert!(pb.gathered_at >= last_stamp, "stamps must be monotone");
+                assert!(pb.gathered_at <= step, "gather cannot observe future updates");
+                // the pool bounds how far the gather can trail the consumer
+                assert!(
+                    step.saturating_sub(pb.gathered_at) <= depth as u64 + 1,
+                    "stamp {} too stale for step {step}",
+                    pb.gathered_at
+                );
+                last_stamp = pb.gathered_at;
+                applied.store(step + 1, Ordering::Release);
+                pf.recycle(pb);
+            }
+            pf.finish();
+        });
+    }
+}

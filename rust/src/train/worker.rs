@@ -12,20 +12,29 @@
 //!    dedicated async updater (§3.5) — or applies inline in sync mode,
 //! 5. crosses a barrier every `sync_interval` batches (§3.6), where the
 //!    leader reshuffles the relation partition at epoch boundaries (§3.4).
+//!
+//! With `prefetch` on, steps 1–2 run on a dedicated helper thread one
+//! batch ahead of compute (see [`super::prefetch`]): the worker receives
+//! sampled+gathered buffers from a two-slot channel, patches any rows its
+//! own updates dirtied since the gather, and bills the prefetched bytes
+//! as overlapped rather than critical-path transfer.
 
-use super::batch::{split_grads, BatchBuffers};
+use super::batch::{bytes_moved, split_grads, BatchBuffers};
 use super::device::{Hardware, TransferLedger};
+use super::prefetch::Prefetcher;
 use super::sync::SyncState;
 use super::updater::AsyncUpdater;
 use crate::kg::Dataset;
-use crate::models::step::StepShape;
+use crate::models::step::{StepGrads, StepShape};
 use crate::models::{LossCfg, ModelKind};
 use crate::partition::partition_relations;
 use crate::runtime::{BackendKind, Manifest, TrainBackend};
-use crate::sampler::{NegativeConfig, NegativeSampler, PositiveSampler};
+use crate::sampler::{Batch, NegativeConfig, NegativeSampler, PositiveSampler};
 use crate::store::{EmbeddingStore, SparseAdagrad, StoreConfig};
 use crate::util::timer::{PhaseTimes, Timer};
 use anyhow::Result;
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 #[derive(Clone, Debug)]
@@ -46,6 +55,12 @@ pub struct TrainConfig {
     pub neg_degree_frac: f64,
     /// overlap entity updates with next-batch compute (§3.5)
     pub async_update: bool,
+    /// overlap next-batch sample+gather with compute (§3.5) via the
+    /// prefetch pipeline
+    pub prefetch: bool,
+    /// buffers in flight when prefetching (clamped to >= 2 — classic
+    /// double buffering); also the staleness bound in batches
+    pub prefetch_depth: usize,
     /// bind relations to workers (§3.4); off = all workers sample all
     /// triplets and share all relations
     pub relation_partition: bool,
@@ -71,6 +86,8 @@ impl Default for TrainConfig {
             init_scale: 0.37,
             neg_degree_frac: 0.0,
             async_update: true,
+            prefetch: false,
+            prefetch_depth: 2,
             relation_partition: true,
             sync_interval: 1000,
             hardware: Hardware::Cpu,
@@ -309,6 +326,271 @@ fn loss_name(l: &LossCfg) -> &'static str {
     }
 }
 
+/// Per-worker state shared by the sequential and pipelined loop bodies:
+/// compute backend, update application, transfer billing, and the sync
+/// barrier. The two loops differ only in how a sampled+gathered batch
+/// arrives — drawn inline, or received from the prefetch thread.
+struct WorkerCtx<'a> {
+    dataset: &'a Dataset,
+    state: &'a ModelState,
+    cfg: &'a TrainConfig,
+    sync: &'a SyncState,
+    ledger: &'a TransferLedger,
+    w: usize,
+    backend: TrainBackend,
+    shape: StepShape,
+    rel_dim: usize,
+    updater: Option<AsyncUpdater>,
+    gpu: bool,
+    phases: PhaseTimes,
+    losses: Vec<(u64, f32)>,
+    last_epoch: u64,
+}
+
+impl WorkerCtx<'_> {
+    /// Bill a full-batch gather to the transfer ledger. Entity rows move
+    /// host→device every batch; relation rows only when relation
+    /// partitioning is off (§3.4 pins them on-GPU). A sequential gather
+    /// sits on the critical path (h2d); a prefetched gather overlaps the
+    /// previous batch's compute, so its bytes are credited as overlapped
+    /// instead (§3.5).
+    fn bill_gather(&mut self, batch: &Batch, moved: u64, overlapped: bool) {
+        if !self.gpu {
+            return;
+        }
+        let rel_bytes = bytes_moved((batch.rels.len() * self.rel_dim) as u64);
+        let ent_bytes = bytes_moved(moved) - rel_bytes;
+        if overlapped {
+            self.ledger.add_overlapped(ent_bytes);
+            if !self.cfg.relation_partition {
+                self.ledger.add_overlapped(rel_bytes);
+            }
+        } else {
+            self.ledger.add_h2d(ent_bytes);
+            if !self.cfg.relation_partition {
+                self.ledger.add_h2d(rel_bytes);
+            }
+        }
+    }
+
+    /// (3) fwd/bwd step + loss logging.
+    fn compute(&mut self, step: u64, buf: &BatchBuffers) -> Result<StepGrads> {
+        let backend = &self.backend;
+        let grads = self.phases.time("compute", || backend.step(&buf.inputs()))?;
+        if step % self.cfg.log_every as u64 == 0 {
+            self.losses.push((step, grads.loss));
+        }
+        Ok(grads)
+    }
+
+    /// (4) apply the update. Returns the unique (entity, relation) ids
+    /// written *inline* on this thread — what the pipelined loop must
+    /// patch in prefetched buffers. Entity ids are empty under async
+    /// updates (those land on the updater thread; Hogwild staleness).
+    fn update(&mut self, batch: &Batch, grads: &StepGrads) -> (Vec<u64>, Vec<u64>) {
+        let (state, cfg, ledger, updater) = (self.state, self.cfg, self.ledger, &self.updater);
+        let (gpu, dim, rel_dim) = (self.gpu, self.shape.dim, self.rel_dim);
+        self.phases.time("update", || {
+            let (ent_g, mut rel_g) = split_grads(batch, grads, dim, rel_dim);
+            if gpu && !cfg.relation_partition {
+                ledger.add_d2h(bytes_moved(rel_g.rows.len() as u64));
+            }
+            // split_grads pre-accumulated duplicates → unique fast path
+            state.rel_opt.apply_unique(&state.relations, &rel_g.ids, &rel_g.rows);
+            let rel_ids = std::mem::take(&mut rel_g.ids);
+            let ent_bytes = bytes_moved(ent_g.rows.len() as u64);
+            match updater {
+                Some(up) => {
+                    if gpu {
+                        ledger.add_overlapped(ent_bytes);
+                    }
+                    up.submit(ent_g);
+                    (Vec::new(), rel_ids)
+                }
+                None => {
+                    if gpu {
+                        ledger.add_d2h(ent_bytes);
+                    }
+                    state.ent_opt.apply_unique(&state.entities, &ent_g.ids, &ent_g.rows);
+                    (ent_g.ids, rel_ids)
+                }
+            }
+        })
+    }
+
+    /// (5) periodic synchronization. `reset` installs a recomputed triplet
+    /// assignment — directly into the sampler (sequential) or through the
+    /// prefetcher's control channel (pipelined).
+    fn sync_barrier(&mut self, step: u64, reset: &mut dyn FnMut(Vec<u32>)) {
+        if self.cfg.n_workers <= 1 || (step + 1) % self.cfg.sync_interval as u64 != 0 {
+            return;
+        }
+        let (dataset, cfg, sync, w) = (self.dataset, self.cfg, self.sync, self.w);
+        let (updater, last_epoch) = (&self.updater, self.last_epoch);
+        self.phases.time("sync", || {
+            if let Some(up) = updater {
+                up.flush();
+            }
+            let leader = sync.wait();
+            // epoch-boundary relation reshuffle (§3.4)
+            if cfg.relation_partition {
+                if leader && last_epoch > sync.partition_epoch() {
+                    sync.install_partition(
+                        partition_relations(&dataset.train, cfg.n_workers, cfg.seed ^ last_epoch),
+                        last_epoch,
+                    );
+                }
+                sync.wait();
+                if sync.partition_epoch() == last_epoch && last_epoch > 0 {
+                    reset(assignment(dataset, cfg, sync, w));
+                }
+            }
+        });
+    }
+}
+
+/// The classic sequential loop: sample → gather → compute → update, all
+/// on the worker thread.
+fn run_sequential(
+    ctx: &mut WorkerCtx<'_>,
+    mut pos: PositiveSampler,
+    mut neg: NegativeSampler,
+) -> Result<()> {
+    let mut buf = BatchBuffers::new(&ctx.shape, ctx.rel_dim);
+    let mut idx_buf: Vec<u32> = Vec::with_capacity(ctx.shape.batch);
+    for step in 0..ctx.cfg.batches_per_worker as u64 {
+        // (1) sample
+        let (shape, dataset) = (ctx.shape, ctx.dataset);
+        let crossed = ctx.phases.time("sample", || pos.next_batch(shape.batch, &mut idx_buf));
+        let batch = ctx.phases.time("sample", || neg.assemble(&dataset.train, &idx_buf));
+        if crossed {
+            ctx.last_epoch = pos.epoch();
+        }
+
+        // (2) gather
+        let state = ctx.state;
+        let moved =
+            ctx.phases.time("gather", || buf.gather(&batch, &state.entities, &state.relations));
+        ctx.bill_gather(&batch, moved, false);
+
+        // (3) compute + (4) update + (5) sync
+        let grads = ctx.compute(step, &buf)?;
+        ctx.update(&batch, &grads);
+        ctx.sync_barrier(step, &mut |indices| pos.reset_indices(indices));
+    }
+    Ok(())
+}
+
+/// Unique ids one update step wrote inline — the pipelined loop keeps a
+/// short window of these so it can repair prefetched buffers that were
+/// gathered before the step landed.
+struct WrittenIds {
+    step: u64,
+    ents: HashSet<u64>,
+    rels: HashSet<u64>,
+}
+
+/// The two-stage pipeline (§3.5): a prefetch thread runs sample(N+1) +
+/// gather(N+1) while this thread computes step N. The worker's only
+/// gather-path work is patching rows its own updates dirtied after the
+/// prefetched gather's stamp — which restores exact sequential semantics
+/// under synchronous updates (see [`super::prefetch`] module docs).
+fn run_pipelined<'a>(
+    ctx: &mut WorkerCtx<'a>,
+    pos: PositiveSampler,
+    neg: NegativeSampler,
+) -> Result<()> {
+    let depth = ctx.cfg.prefetch_depth.max(2);
+    let applied = Arc::new(AtomicU64::new(0));
+    let dataset: &'a Dataset = ctx.dataset;
+    let (entities, relations) = (ctx.state.entities.clone(), ctx.state.relations.clone());
+    let (shape, rel_dim) = (ctx.shape, ctx.rel_dim);
+    std::thread::scope(|s| -> Result<()> {
+        let mut pf = Prefetcher::spawn_scoped(
+            s,
+            pos,
+            neg,
+            &dataset.train,
+            entities,
+            relations,
+            shape,
+            rel_dim,
+            depth,
+            applied.clone(),
+        );
+        // ids written inline per recent step, newest at the back; sized
+        // so it always covers every update a live stamp can predate
+        let mut written: VecDeque<WrittenIds> = VecDeque::new();
+        // dirty-id scratch, reused across steps (hot loop: no allocation)
+        let mut ent_dirty: HashSet<u64> = HashSet::new();
+        let mut rel_dirty: HashSet<u64> = HashSet::new();
+        for step in 0..ctx.cfg.batches_per_worker as u64 {
+            // (1)+(2) arrive prefetched; blocking here is the pipeline stall
+            let mut pb = ctx.phases.time("prefetch", || pf.recv())?;
+            // track the sampler epoch by value, not by the crossed flag: a
+            // crossing carried by a batch discarded during a generation
+            // reset must still advance last_epoch, or this worker skips a
+            // reshuffle its peers perform
+            ctx.last_epoch = ctx.last_epoch.max(pb.epoch);
+            ctx.bill_gather(&pb.batch, pb.moved, true);
+
+            // (2b) patch rows written since the gather's stamp
+            debug_assert!(
+                match written.front() {
+                    Some(wr) => wr.step <= pb.gathered_at,
+                    None => true,
+                },
+                "patch window no longer covers stamp {}",
+                pb.gathered_at
+            );
+            ent_dirty.clear();
+            rel_dirty.clear();
+            for wr in &written {
+                if wr.step >= pb.gathered_at {
+                    ent_dirty.extend(wr.ents.iter().copied());
+                    rel_dirty.extend(wr.rels.iter().copied());
+                }
+            }
+            let state = ctx.state;
+            let (ent_patched, rel_patched) = ctx.phases.time("gather", || {
+                let (ents, rels) = (&*state.entities, &*state.relations);
+                pb.buf.patch_rows(&pb.batch, ents, rels, &ent_dirty, &rel_dirty)
+            });
+            if ctx.gpu {
+                // re-gathered rows are on the critical path, unlike the
+                // prefetched bulk; relation rows stay pinned on-GPU under
+                // §3.4 partitioning and never cross the link (mirroring
+                // bill_gather)
+                ctx.ledger.add_h2d(bytes_moved(ent_patched));
+                if !ctx.cfg.relation_partition {
+                    ctx.ledger.add_h2d(bytes_moved(rel_patched));
+                }
+            }
+
+            // (3) compute + (4) update
+            let grads = ctx.compute(step, &pb.buf)?;
+            let (ent_ids, rel_ids) = ctx.update(&pb.batch, &grads);
+            applied.store(step + 1, Ordering::Release);
+            written.push_back(WrittenIds {
+                step,
+                ents: ent_ids.into_iter().collect(),
+                rels: rel_ids.into_iter().collect(),
+            });
+            if written.len() > depth + 2 {
+                written.pop_front();
+            }
+            pf.recycle(pb);
+
+            // (5) sync; a reshuffle restarts the prefetch stream
+            ctx.sync_barrier(step, &mut |indices| pf.reset_indices(indices));
+        }
+        // fold the helper thread's (overlapped) sample/gather time into
+        // this worker's phase report
+        ctx.phases.merge(&pf.finish());
+        Ok(())
+    })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     dataset: &Dataset,
@@ -339,11 +621,11 @@ fn worker_loop(
         state.rel_dim
     );
 
-    let mut pos = PositiveSampler::over_indices(
+    let pos = PositiveSampler::over_indices(
         assignment(dataset, cfg, sync, w),
         cfg.seed ^ (w as u64 + 1),
     );
-    let mut neg = NegativeSampler::new(
+    let neg = NegativeSampler::new(
         NegativeConfig {
             k: shape.neg_k,
             chunk_size: shape.chunk_size(),
@@ -353,106 +635,44 @@ fn worker_loop(
         dataset.n_entities(),
         cfg.seed ^ (0x9e00 + w as u64),
     );
-    let mut buf = BatchBuffers::new(&shape, rel_dim);
     let updater = cfg
         .async_update
         .then(|| AsyncUpdater::spawn(state.entities.clone(), state.ent_opt.clone(), 4));
 
-    let gpu = cfg.hardware.is_gpu();
     let cpu_timer = crate::util::cputime::CpuTimer::new();
-    let mut phases = PhaseTimes::new();
-    let mut losses = Vec::new();
-    let mut idx_buf: Vec<u32> = Vec::with_capacity(shape.batch);
-    let mut last_epoch = 0u64;
-
-    for step in 0..cfg.batches_per_worker as u64 {
-        // (1) sample
-        let crossed = phases.time("sample", || pos.next_batch(shape.batch, &mut idx_buf));
-        let batch = phases.time("sample", || neg.assemble(&dataset.train, &idx_buf));
-        if crossed {
-            last_epoch = pos.epoch();
-        }
-
-        // (2) gather
-        let moved = phases.time("gather", || {
-            buf.gather(&batch, &state.entities, &state.relations)
-        });
-        if gpu {
-            // entity rows move host→device every batch; relation rows only
-            // when relation partitioning is off (§3.4 pins them on-GPU)
-            let rel_bytes = (batch.rels.len() * rel_dim * 4) as u64;
-            let ent_bytes = moved * 4 - rel_bytes;
-            ledger.add_h2d(ent_bytes);
-            if !cfg.relation_partition {
-                ledger.add_h2d(rel_bytes);
-            }
-        }
-
-        // (3) compute fwd/bwd
-        let grads = phases.time("compute", || backend.step(&buf.inputs()))?;
-        if step % cfg.log_every as u64 == 0 {
-            losses.push((step, grads.loss));
-        }
-
-        // (4) update
-        phases.time("update", || {
-            let (ent_g, rel_g) = split_grads(&batch, &grads, shape.dim, rel_dim);
-            if gpu && !cfg.relation_partition {
-                ledger.add_d2h((rel_g.rows.len() * 4) as u64);
-            }
-            // split_grads pre-accumulated duplicates → unique fast path
-            state.rel_opt.apply_unique(&state.relations, &rel_g.ids, &rel_g.rows);
-            let ent_bytes = (ent_g.rows.len() * 4) as u64;
-            match &updater {
-                Some(up) => {
-                    if gpu {
-                        ledger.add_overlapped(ent_bytes);
-                    }
-                    up.submit(ent_g);
-                }
-                None => {
-                    if gpu {
-                        ledger.add_d2h(ent_bytes);
-                    }
-                    state.ent_opt.apply_unique(&state.entities, &ent_g.ids, &ent_g.rows);
-                }
-            }
-        });
-
-        // (5) periodic synchronization
-        if cfg.n_workers > 1 && (step + 1) % cfg.sync_interval as u64 == 0 {
-            phases.time("sync", || {
-                if let Some(up) = &updater {
-                    up.flush();
-                }
-                let leader = sync.wait();
-                // epoch-boundary relation reshuffle (§3.4)
-                if cfg.relation_partition {
-                    if leader && last_epoch > sync.partition_epoch() {
-                        sync.install_partition(
-                            partition_relations(
-                                &dataset.train,
-                                cfg.n_workers,
-                                cfg.seed ^ last_epoch,
-                            ),
-                            last_epoch,
-                        );
-                    }
-                    sync.wait();
-                    if sync.partition_epoch() == last_epoch && last_epoch > 0 {
-                        pos.reset_indices(assignment(dataset, cfg, sync, w));
-                    }
-                }
-            });
-        }
+    let mut ctx = WorkerCtx {
+        dataset,
+        state,
+        cfg,
+        sync,
+        ledger,
+        w,
+        backend,
+        shape,
+        rel_dim,
+        updater,
+        gpu: cfg.hardware.is_gpu(),
+        phases: PhaseTimes::new(),
+        losses: Vec::new(),
+        last_epoch: 0,
+    };
+    if cfg.prefetch {
+        run_pipelined(&mut ctx, pos, neg)?;
+    } else {
+        run_sequential(&mut ctx, pos, neg)?;
     }
 
     let busy_secs = cpu_timer.elapsed().as_secs_f64();
-    if let Some(up) = updater {
+    if let Some(up) = ctx.updater.take() {
         up.flush();
         up.join();
     }
-    Ok(WorkerOut { phases, losses, batches: cfg.batches_per_worker as u64, busy_secs })
+    Ok(WorkerOut {
+        phases: ctx.phases,
+        losses: ctx.losses,
+        batches: cfg.batches_per_worker as u64,
+        busy_secs,
+    })
 }
 
 #[cfg(test)]
@@ -532,17 +752,64 @@ mod tests {
     #[test]
     fn async_overlap_moves_bytes_off_critical_path() {
         let dataset = Dataset::load("tiny", 5).unwrap();
-        let mk = |async_update: bool| {
+        let mk = |async_update: bool, prefetch: bool| {
             let mut cfg = tiny_cfg(1);
             cfg.hardware = Hardware::Gpu { pcie_gbps: 12.0 };
             cfg.async_update = async_update;
+            cfg.prefetch = prefetch;
             let state = ModelState::init(&dataset, cfg.model, 16, &cfg);
             run_training(&dataset, &state, None, &cfg).unwrap()
         };
-        let a = mk(true);
-        let s = mk(false);
+        let a = mk(true, false);
+        let s = mk(false, false);
         assert!(a.overlapped_bytes > 0);
         assert_eq!(s.overlapped_bytes, 0);
         assert!(a.d2h_bytes < s.d2h_bytes);
+        // the prefetch pipeline overlaps the gather h2d traffic on top of
+        // the async updater's d2h overlap: both knobs on credits strictly
+        // more overlapped bytes than either alone, and takes gather bytes
+        // off the critical path
+        let p = mk(false, true);
+        let ap = mk(true, true);
+        assert!(p.overlapped_bytes > 0, "prefetched gathers must be credited");
+        assert!(p.h2d_bytes < s.h2d_bytes, "{} vs {}", p.h2d_bytes, s.h2d_bytes);
+        assert!(ap.overlapped_bytes > a.overlapped_bytes);
+        assert!(ap.overlapped_bytes > p.overlapped_bytes);
+    }
+
+    #[test]
+    fn prefetch_pipeline_is_byte_identical_single_worker() {
+        // sync updates + 1 worker: the pipeline's patch protocol must
+        // reproduce the sequential loop bit for bit
+        let dataset = Dataset::load("tiny", 6).unwrap();
+        let mk = |prefetch: bool| {
+            let mut cfg = tiny_cfg(1);
+            cfg.async_update = false;
+            cfg.prefetch = prefetch;
+            cfg.batches_per_worker = 50;
+            let state = ModelState::init(&dataset, cfg.model, 16, &cfg);
+            let stats = run_training(&dataset, &state, None, &cfg).unwrap();
+            (stats.loss_curve, state.entities.snapshot(), state.relations.snapshot())
+        };
+        let (curve_off, ents_off, rels_off) = mk(false);
+        let (curve_on, ents_on, rels_on) = mk(true);
+        assert_eq!(curve_on, curve_off, "loss trajectory changed by prefetch");
+        assert_eq!(ents_on, ents_off, "entity table changed by prefetch");
+        assert_eq!(rels_on, rels_off, "relation table changed by prefetch");
+    }
+
+    #[test]
+    fn prefetch_multiworker_reshuffles_and_trains() {
+        // several epochs across barriers: exercises the prefetcher's
+        // generation reset on relation-partition reshuffle
+        let dataset = Dataset::load("tiny", 7).unwrap();
+        let mut cfg = tiny_cfg(2);
+        cfg.prefetch = true;
+        cfg.batches_per_worker = 60;
+        cfg.sync_interval = 10;
+        let state = ModelState::init(&dataset, cfg.model, 16, &cfg);
+        let stats = run_training(&dataset, &state, None, &cfg).unwrap();
+        assert_eq!(stats.total_batches, 120);
+        assert!(stats.mean_loss_tail < stats.loss_curve.first().unwrap().1);
     }
 }
