@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check check artifacts bench bench-smoke bench-prefetch clean
+.PHONY: build test fmt fmt-check check artifacts bench bench-smoke bench-prefetch bench-cache clean
 
 build:
 	$(CARGO) build --release
@@ -37,6 +37,11 @@ bench-smoke:
 # writes BENCH_prefetch.json (expected: mmap >= 1.2x, dense ~ wash).
 bench-prefetch:
 	QUICK=1 $(CARGO) bench --bench bench_prefetch
+
+# Hot-row cache gather/update latency (mmap: cache off / cold / warm);
+# writes BENCH_cache.json (expected: warm gather beats uncached mmap).
+bench-cache:
+	QUICK=1 $(CARGO) bench --bench bench_cache
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

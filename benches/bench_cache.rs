@@ -1,0 +1,158 @@
+//! Hot-row cache microbenchmark: gather and update latency on the mmap
+//! backend with the cache off / cold / warm. Writes `BENCH_cache.json`
+//! (`make bench-cache`) so the cache's win is tracked run-over-run.
+//!
+//! Expectation: a *warm* cache turns per-row `pread`/`pwrite` syscalls
+//! into user-space copies, so warm gather must beat uncached mmap gather
+//! (the acceptance bar); the *cold* pass prices the fill/evict overhead
+//! — it stays in the same ballpark as uncached because each miss is one
+//! backing-store read plus bookkeeping.
+//!
+//! QUICK=1 shrinks the table and pass count for smoke runs.
+
+use dglke::store::{CachedStore, EmbeddingStore, MmapStore};
+use dglke::util::json::Json;
+use dglke::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Time one pass over `batches`, reporting ms per batch.
+fn time_pass(batches: &[Vec<u64>], mut f: impl FnMut(&[u64])) -> f64 {
+    let t = Instant::now();
+    for b in batches {
+        f(b);
+    }
+    t.elapsed().as_secs_f64() * 1000.0 / batches.len().max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    let rows: usize = if quick { 50_000 } else { 200_000 };
+    let dim: usize = 64;
+    let n_ids: usize = 2048;
+    let iters = if quick { 16 } else { 64 };
+    // hot working set sized well under the cache; the cold stream spans
+    // the whole table so it misses (and evicts) continuously
+    let hot_rows: usize = 4096;
+    let capacity_rows: usize = 8192;
+
+    let mut rng = Rng::seed_from_u64(11);
+    let hot_ids: Vec<u64> =
+        rng.sample_distinct(rows, hot_rows).into_iter().map(|x| x as u64).collect();
+    let hot_batches: Vec<Vec<u64>> = (0..iters)
+        .map(|_| (0..n_ids).map(|_| hot_ids[rng.gen_index(hot_rows)]).collect())
+        .collect();
+    let cold_batches: Vec<Vec<u64>> = (0..iters)
+        .map(|_| (0..n_ids).map(|_| rng.gen_index(rows) as u64).collect())
+        .collect();
+
+    let tmp = |tag: &str| {
+        std::env::temp_dir().join(format!("dglke-bench-cache-{tag}-{}.f32", std::process::id()))
+    };
+    let mut out = vec![0f32; n_ids * dim];
+
+    println!(
+        "cache bench: rows={rows} dim={dim} batch_ids={n_ids} iters={iters} \
+         hot_rows={hot_rows} capacity_rows={capacity_rows}"
+    );
+
+    // uncached mmap baseline: one untimed pass warms the OS page cache,
+    // so the comparison is pread-from-page-cache vs user-space hit
+    let plain = MmapStore::create_ephemeral(&tmp("plain"), rows, dim)?;
+    time_pass(&hot_batches, |b| {
+        plain.gather(b, &mut out);
+    });
+    let gather_off_ms = time_pass(&hot_batches, |b| {
+        plain.gather(b, &mut out);
+    });
+    let update_off_ms = time_pass(&hot_batches, |b| {
+        for &id in b {
+            plain.update_row(id as usize, &mut |row| row[0] += 0.25);
+        }
+    });
+
+    // cold: a fresh cache fed the full-table stream — every batch is
+    // dominated by misses and evictions
+    let cold = CachedStore::with_capacity_rows(
+        Box::new(MmapStore::create_ephemeral(&tmp("cold"), rows, dim)?),
+        capacity_rows,
+    );
+    let gather_cold_ms = time_pass(&cold_batches, |b| {
+        cold.gather(b, &mut out);
+    });
+
+    // warm: working set resident after one untimed pass
+    let warm = CachedStore::with_capacity_rows(
+        Box::new(MmapStore::create_ephemeral(&tmp("warm"), rows, dim)?),
+        capacity_rows,
+    );
+    time_pass(&hot_batches, |b| {
+        warm.gather(b, &mut out);
+    });
+    let gather_warm_ms = time_pass(&hot_batches, |b| {
+        warm.gather(b, &mut out);
+    });
+    let update_warm_ms = time_pass(&hot_batches, |b| {
+        for &id in b {
+            warm.update_row(id as usize, &mut |row| row[0] += 0.25);
+        }
+    });
+    let stats = warm.cache_stats().expect("cached store reports stats");
+
+    let gather_speedup = gather_off_ms / gather_warm_ms.max(1e-9);
+    let update_speedup = update_off_ms / update_warm_ms.max(1e-9);
+    println!(
+        "  gather  off {gather_off_ms:8.3} ms   cold {gather_cold_ms:8.3} ms   \
+         warm {gather_warm_ms:8.3} ms   warm speedup {gather_speedup:5.2}x"
+    );
+    println!(
+        "  update  off {update_off_ms:8.3} ms   warm {update_warm_ms:8.3} ms   \
+         warm speedup {update_speedup:5.2}x"
+    );
+
+    let report = obj(vec![
+        ("rows", Json::Num(rows as f64)),
+        ("dim", Json::Num(dim as f64)),
+        ("batch_ids", Json::Num(n_ids as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("hot_rows", Json::Num(hot_rows as f64)),
+        ("capacity_rows", Json::Num(capacity_rows as f64)),
+        (
+            "gather_ms",
+            obj(vec![
+                ("mmap_uncached", Json::Num(gather_off_ms)),
+                ("cache_cold", Json::Num(gather_cold_ms)),
+                ("cache_warm", Json::Num(gather_warm_ms)),
+            ]),
+        ),
+        (
+            "update_ms",
+            obj(vec![
+                ("mmap_uncached", Json::Num(update_off_ms)),
+                ("cache_warm", Json::Num(update_warm_ms)),
+            ]),
+        ),
+        ("warm_gather_speedup", Json::Num(gather_speedup)),
+        ("warm_update_speedup", Json::Num(update_speedup)),
+        (
+            "warm_cache",
+            obj(vec![
+                ("hits", Json::Num(stats.hits as f64)),
+                ("misses", Json::Num(stats.misses as f64)),
+                ("evictions", Json::Num(stats.evictions as f64)),
+                ("write_backs", Json::Num(stats.write_backs as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_cache.json", report.to_string())?;
+    println!("[wrote BENCH_cache.json]");
+    Ok(())
+}

@@ -38,6 +38,12 @@ pub struct Report {
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
     pub overlapped_bytes: u64,
+    // hot-row cache counters (mmap storage with a cache budget; all zero
+    // otherwise)
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_write_backs: u64,
     // KVStore ledger (distributed mode)
     pub locality: f64,
     pub local_bytes: u64,
@@ -63,6 +69,10 @@ impl Report {
             h2d_bytes: stats.h2d_bytes,
             d2h_bytes: stats.d2h_bytes,
             overlapped_bytes: stats.overlapped_bytes,
+            cache_hits: stats.cache.hits,
+            cache_misses: stats.cache.misses,
+            cache_evictions: stats.cache.evictions,
+            cache_write_backs: stats.cache.write_backs,
             ..Default::default()
         }
     }
@@ -123,6 +133,10 @@ impl Report {
             ("h2d_bytes", Json::Num(self.h2d_bytes as f64)),
             ("d2h_bytes", Json::Num(self.d2h_bytes as f64)),
             ("overlapped_bytes", Json::Num(self.overlapped_bytes as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+            ("cache_write_backs", Json::Num(self.cache_write_backs as f64)),
             ("locality", Json::Num(self.locality)),
             ("local_bytes", Json::Num(self.local_bytes as f64)),
             ("remote_bytes", Json::Num(self.remote_bytes as f64)),
@@ -157,6 +171,17 @@ impl Report {
                 self.overlapped_bytes as f64 / 1e6
             ));
         }
+        if self.cache_hits + self.cache_misses > 0 {
+            s.push_str(&format!(
+                "\n  row cache: {} hits / {} misses ({:.1}% hit), {} evictions, {} write-backs",
+                self.cache_hits,
+                self.cache_misses,
+                100.0 * self.cache_hits as f64
+                    / (self.cache_hits + self.cache_misses).max(1) as f64,
+                self.cache_evictions,
+                self.cache_write_backs
+            ));
+        }
         if self.mode == "distributed" {
             s.push_str(&format!(
                 "\n  locality {:.3}; traffic local {:.1}MB remote {:.1}MB ({} remote reqs)",
@@ -187,12 +212,23 @@ mod tests {
             mean_loss_tail: 0.25,
             loss_curve: vec![(0, 0.9), (50, 0.3)],
             phases: vec![("compute".into(), 0.4)],
+            cache: crate::store::CacheStats {
+                hits: 90,
+                misses: 10,
+                evictions: 3,
+                write_backs: 5,
+            },
             ..Default::default()
         });
         r.metrics = Some(Metrics { hit10: 0.5, mrr: 0.25, n: 10, ..Default::default() });
         let j = Json::parse(&r.to_json_string()).unwrap();
         assert_eq!(j.get("total_batches").unwrap().as_usize(), Some(60));
         assert_eq!(j.get("mode").unwrap().as_str(), Some("single"));
+        assert_eq!(j.get("cache_hits").unwrap().as_usize(), Some(90));
+        assert_eq!(j.get("cache_misses").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("cache_evictions").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("cache_write_backs").unwrap().as_usize(), Some(5));
+        assert!(r.summary().contains("row cache: 90 hits"));
         assert_eq!(j.get("metrics").unwrap().get("n").unwrap().as_usize(), Some(10));
         let curve = j.get("loss_curve").unwrap().as_arr().unwrap();
         assert_eq!(curve.len(), 2);

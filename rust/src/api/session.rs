@@ -135,8 +135,11 @@ impl Session {
             dim
         );
         // in-memory budget: dense/sharded tables (embeddings + optimizer
-        // state) must fit. Only single-machine mmap runs are exempt —
-        // distributed runs materialize dense tables on the in-process
+        // state) must fit. Single-machine mmap runs keep their rows on
+        // disk, but they are *not* exempt wholesale — their resident set
+        // is the hot-row cache, so what must fit under the budget is the
+        // cache allowance (cache_mb, defaulting to budget_mb itself).
+        // Distributed runs materialize dense tables on the in-process
         // KVStore servers regardless of the declared backend.
         if let Some(mb) = spec.storage.budget_mb {
             let rel_dim = spec.model.rel_dim(dim);
@@ -145,7 +148,15 @@ impl Session {
             let budget = (mb * (1u64 << 20) as f64) as u64;
             let on_disk = spec.storage.backend == StoreBackendKind::Mmap
                 && matches!(spec.mode, ParallelMode::Single { .. });
-            if !on_disk {
+            if on_disk {
+                let cache = spec.storage.cache_total_bytes().unwrap_or(0);
+                anyhow::ensure!(
+                    cache <= budget,
+                    "storage.cache_mb ({} MiB) exceeds storage.budget_mb ({mb} MiB) — the \
+                     hot-row cache is the resident set of an mmap run, so it must fit the budget",
+                    spec.storage.cache_mb.unwrap_or(mb)
+                );
+            } else {
                 anyhow::ensure!(
                     need <= budget,
                     "embedding tables need {need} bytes but storage.budget_mb is {mb} MiB — \

@@ -37,8 +37,11 @@
 //!   "storage": {"backend": "dense",          // "dense" | "sharded" | "mmap"
 //!               "shards": 8,                 // sharded backend only
 //!               "dir": null,                 // mmap backing dir (null = temp)
-//!               "budget_mb": null},          // in-memory budget; tables over
+//!               "budget_mb": null,           // in-memory budget; tables over
 //!                                            // it must use the mmap backend
+//!               "cache_mb": null},           // mmap hot-row cache size
+//!                                            // (default: budget_mb; must
+//!                                            // not exceed it)
 //!   "seed": 0
 //! }
 //! ```
@@ -341,6 +344,7 @@ impl RunSpec {
                 self.storage.dir.as_ref().map(|d| Json::Str(d.clone())).unwrap_or(Json::Null),
             ),
             ("budget_mb", self.storage.budget_mb.map(Json::Num).unwrap_or(Json::Null)),
+            ("cache_mb", self.storage.cache_mb.map(Json::Num).unwrap_or(Json::Null)),
         ]);
         obj(vec![
             ("dataset", Json::Str(self.dataset.clone())),
@@ -491,11 +495,18 @@ impl RunSpec {
                         anyhow!("field \"storage.budget_mb\" must be a number")
                     })?),
                 };
+                let cache_mb = match s.get("cache_mb") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_f64().ok_or_else(|| {
+                        anyhow!("field \"storage.cache_mb\" must be a number")
+                    })?),
+                };
                 StoreConfig {
                     backend,
                     shards: get_usize(s, "shards", StoreConfig::default().shards)?,
                     dir,
                     budget_mb,
+                    cache_mb,
                 }
             }
         };
@@ -632,6 +643,7 @@ mod tests {
                 shards: 4,
                 dir: Some("/tmp/dglke-tables".into()),
                 budget_mb: Some(512.5),
+                cache_mb: Some(128.25),
             },
             seed: 99,
         };
@@ -653,6 +665,19 @@ mod tests {
         assert!(RunSpec::from_json_str(r#"{"storage": {"backend": "ssd"}}"#).is_err());
         // wrong-typed budget rejected, not silently dropped
         assert!(RunSpec::from_json_str(r#"{"storage": {"budget_mb": "256"}}"#).is_err());
+        // cache_mb parses, round-trips, and rejects wrong types
+        let spec = RunSpec::from_json_str(
+            r#"{"storage": {"backend": "mmap", "budget_mb": 64, "cache_mb": 16.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.storage.cache_mb, Some(16.5));
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        assert!(RunSpec::from_json_str(r#"{"storage": {"cache_mb": "big"}}"#).is_err());
+        // negative cache rejected by validation
+        let mut spec = RunSpec::default();
+        spec.storage.cache_mb = Some(-1.0);
+        assert!(spec.validate().is_err());
     }
 
     #[test]

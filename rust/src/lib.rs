@@ -37,7 +37,8 @@
 //! * Layer 3 (this crate): the paper's coordination contribution — graph &
 //!   relation partitioning, joint/degree-based/local negative sampling,
 //!   pluggable hogwild embedding storage ([`store::EmbeddingStore`]:
-//!   dense / sharded / file-backed mmap for larger-than-RAM tables) +
+//!   dense / sharded / file-backed mmap for larger-than-RAM tables, with
+//!   a budget-bounded hot-row cache [`store::CachedStore`]) +
 //!   sparse Adagrad, async gradient updaters, distributed KVStore,
 //!   multi-worker / many-core / distributed trainers, evaluation, and the
 //!   PBG/GraphVite baselines.

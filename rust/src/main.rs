@@ -31,6 +31,7 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --config spec.json (flags override) --dump-config --report out.json
           --storage dense|sharded|mmap --shards N --storage-dir DIR
           --budget-mb F (tables over the budget must use mmap)
+          --cache-mb F (mmap hot-row cache size; default budget-mb)
   train:  --workers N --batches N(per worker) --lr F --gpu (simulate GPUs)
           --margin F --adv-temp F --degree-frac F --no-async --no-rel-part
           --prefetch (overlap next-batch sample+gather with compute)
@@ -141,6 +142,9 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
     if let Some(v) = args.get("budget-mb") {
         spec.storage.budget_mb =
             Some(v.parse().with_context(|| format!("bad --budget-mb {v}"))?);
+    }
+    if let Some(v) = args.get("cache-mb") {
+        spec.storage.cache_mb = Some(v.parse().with_context(|| format!("bad --cache-mb {v}"))?);
     }
 
     if dist {

@@ -56,7 +56,26 @@ impl SparseAdagrad {
     /// Optimizer state on the same backend as its table, so state
     /// shards/spills alongside the embeddings.
     pub fn with_storage(cfg: &StoreConfig, label: &str, rows: usize, lr: f32) -> Result<Self> {
-        Ok(SparseAdagrad { state: cfg.opt_state(label, rows)?, lr, eps: 1e-10 })
+        Self::with_storage_cached(cfg, label, rows, lr, None)
+    }
+
+    /// Like [`SparseAdagrad::with_storage`], with this state table's
+    /// hot-row-cache byte share (mmap backend only; `None` = uncached).
+    /// The state is touched on every update of its table's rows, so it
+    /// deserves — and here gets — the same locality layer.
+    pub fn with_storage_cached(
+        cfg: &StoreConfig,
+        label: &str,
+        rows: usize,
+        lr: f32,
+        cache_bytes: Option<u64>,
+    ) -> Result<Self> {
+        Ok(SparseAdagrad { state: cfg.opt_state_cached(label, rows, cache_bytes)?, lr, eps: 1e-10 })
+    }
+
+    /// Hot-row-cache counters of the state store, when it has one.
+    pub fn cache_stats(&self) -> Option<super::CacheStats> {
+        self.state.cache_stats()
     }
 
     /// Apply one sparse update: for each (id, grad-row) pair, advance the

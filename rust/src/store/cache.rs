@@ -1,0 +1,634 @@
+//! Bounded hot-row cache: [`CachedStore`] wraps any [`EmbeddingStore`]
+//! with a user-space row cache so repeated touches of hot rows skip the
+//! backing store entirely.
+//!
+//! The paper's §3.5 observation is that KGE training at the 86M-entity
+//! scale is bound by random-access embedding reads/writes; every one of
+//! its optimizations increases data locality. The mmap backend pays a
+//! `pread`/`pwrite` syscall pair per touched row, so a skewed access
+//! distribution (real KGs are heavily power-law) leaves most of that
+//! syscall traffic re-reading the same hot rows. `CachedStore` keeps
+//! those rows in memory under an explicit byte budget:
+//!
+//! * **Clock / second-chance eviction**, keyed by row id. A hit sets the
+//!   slot's referenced bit; the clock hand clears bits until it finds an
+//!   unreferenced victim — LRU-approximate with O(1) state per slot.
+//! * **Write-back with per-row dirty bits.** `set_row`/`update_row` land
+//!   in the cache and mark the slot dirty; the backing store is written
+//!   only on eviction, [`EmbeddingStore::flush`], export, or drop. A
+//!   training run that re-updates a hot row N times issues one `pwrite`,
+//!   not N.
+//! * **Sharded lock stripes** (row id → stripe), so concurrency stays
+//!   Hogwild-correct at row granularity: two threads touching different
+//!   rows rarely contend, and a racing read of a row being written sees
+//!   either old or new bytes of *that row* — never another row's bytes
+//!   (the same byte-provenance guarantee the mmap backend documents, and
+//!   audited by the same test pattern below).
+//! * **Bulk writes bypass the cache.** `set_rows` (parallel init,
+//!   checkpoint load) goes straight to the backing store and invalidates
+//!   overlapping cached rows — streaming a table through the cache would
+//!   just evict the hot set.
+//!
+//! Sizing: the cache is built from `storage.budget_mb` (the run's
+//! resident-set budget; `storage.cache_mb` overrides it), split across
+//! the entity/relation/optimizer tables in proportion to their
+//! [`EmbeddingStore::table_bytes`] — see [`split_cache_budget`] and the
+//! wiring in `ModelState::init_with_storage`. `api::Session` enforces
+//! the bound *statically* at spec time (`cache_mb` must fit under
+//! `budget_mb`); `resident_bytes()` reports the filled slots at runtime
+//! for observability, and may exceed the configured capacity by up to
+//! `n_stripes - 1` rows of ceil-division slack.
+//!
+//! The prefetch pipeline (PR 3) composes with this for free: the helper
+//! thread's gather of batch N+1 warms the cache while batch N computes,
+//! so by the time the worker (or evaluator) touches those rows they are
+//! memory-resident — cache hits are credited as overlapped/zero-cost in
+//! the GPU transfer ledger (`train::worker::WorkerCtx::bill_gather`).
+
+use super::{CacheStats, EmbeddingStore};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sentinel row id for an empty slot.
+const EMPTY: usize = usize::MAX;
+
+/// Split a total cache byte budget across tables in proportion to their
+/// logical size, capping each share at the table itself (a cache larger
+/// than its table is wasted budget). The shares sum to at most
+/// `total_cache_bytes`.
+pub fn split_cache_budget(total_cache_bytes: u64, table_bytes: &[u64]) -> Vec<u64> {
+    let total: u128 = table_bytes.iter().map(|&b| b as u128).sum();
+    if total == 0 {
+        return vec![0; table_bytes.len()];
+    }
+    table_bytes
+        .iter()
+        .map(|&b| ((total_cache_bytes as u128 * b as u128 / total) as u64).min(b))
+        .collect()
+}
+
+struct Slot {
+    /// cached row id (`EMPTY` = slot storage exists but holds nothing)
+    row: usize,
+    /// second-chance bit: set on access, cleared by the clock hand
+    referenced: bool,
+    /// row differs from the backing store (write-back pending)
+    dirty: bool,
+}
+
+/// One lock stripe: an independent clock over `cap` slots for the rows
+/// that hash here. Slot `s` owns `data[s*dim..(s+1)*dim]`; slot storage
+/// is grown on demand so an idle cache costs no memory.
+struct Stripe {
+    index: HashMap<usize, usize>,
+    slots: Vec<Slot>,
+    data: Vec<f32>,
+    free: Vec<usize>,
+    hand: usize,
+    cap: usize,
+}
+
+impl Stripe {
+    fn slot_data(&mut self, s: usize, dim: usize) -> &mut [f32] {
+        &mut self.data[s * dim..(s + 1) * dim]
+    }
+}
+
+/// A bounded write-back row cache over any [`EmbeddingStore`]. See the
+/// module docs for the eviction policy and concurrency contract.
+pub struct CachedStore {
+    inner: Box<dyn EmbeddingStore>,
+    rows: usize,
+    dim: usize,
+    stripes: Vec<Mutex<Stripe>>,
+    capacity_rows: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    write_backs: AtomicU64,
+    /// slots with allocated storage (monotone up to capacity): the
+    /// cache's contribution to `resident_bytes`
+    resident_rows: AtomicU64,
+}
+
+impl CachedStore {
+    /// Wrap `inner` with a cache of at most `cache_bytes` of row payload
+    /// (bookkeeping overhead is not counted). Capacity is clamped to
+    /// `[1, inner.rows()]` rows; use [`CachedStore::with_capacity_rows`]
+    /// for an explicit row count.
+    pub fn new(inner: Box<dyn EmbeddingStore>, cache_bytes: u64) -> CachedStore {
+        let row_bytes = (inner.dim().max(1) * 4) as u64;
+        let cap = (cache_bytes / row_bytes) as usize;
+        Self::with_capacity_rows(inner, cap)
+    }
+
+    pub fn with_capacity_rows(inner: Box<dyn EmbeddingStore>, capacity_rows: usize) -> CachedStore {
+        let rows = inner.rows();
+        let dim = inner.dim();
+        let capacity_rows = capacity_rows.clamp(1, rows.max(1));
+        // enough stripes to keep Hogwild threads off each other's locks,
+        // but at least ~8 slots per stripe so the per-stripe clock has
+        // room for second chances
+        let n_stripes = (capacity_rows / 8).clamp(1, 64);
+        // ceil-divide so stripe caps sum to >= capacity (at most
+        // n_stripes - 1 rows over; the budget is a target, not an ABI)
+        let cap_per_stripe = capacity_rows.div_ceil(n_stripes);
+        let stripes = (0..n_stripes)
+            .map(|_| {
+                Mutex::new(Stripe {
+                    index: HashMap::new(),
+                    slots: Vec::new(),
+                    data: Vec::new(),
+                    free: Vec::new(),
+                    hand: 0,
+                    cap: cap_per_stripe,
+                })
+            })
+            .collect();
+        CachedStore {
+            inner,
+            rows,
+            dim,
+            stripes,
+            capacity_rows,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            write_backs: AtomicU64::new(0),
+            resident_rows: AtomicU64::new(0),
+        }
+    }
+
+    /// Cache capacity in rows (after clamping).
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
+    /// The wrapped store (tests/diagnostics — reads bypass the cache and
+    /// may be stale for dirty rows).
+    pub fn inner(&self) -> &dyn EmbeddingStore {
+        self.inner.as_ref()
+    }
+
+    #[inline]
+    fn stripe_of(&self, row: usize) -> &Mutex<Stripe> {
+        &self.stripes[row % self.stripes.len()]
+    }
+
+    /// Find or create a slot for `row` inside a locked stripe, evicting
+    /// (with write-back) if the stripe is full. The caller fills the
+    /// slot's data and inserts the index entry.
+    fn allocate(&self, st: &mut Stripe, row: usize) -> usize {
+        if let Some(s) = st.free.pop() {
+            st.slots[s].row = row;
+            return s;
+        }
+        if st.slots.len() < st.cap {
+            let s = st.slots.len();
+            st.slots.push(Slot { row, referenced: false, dirty: false });
+            st.data.resize((s + 1) * self.dim, 0.0);
+            self.resident_rows.fetch_add(1, Ordering::Relaxed);
+            return s;
+        }
+        // clock sweep: clear referenced bits until an unreferenced victim
+        loop {
+            let s = st.hand;
+            st.hand = (st.hand + 1) % st.slots.len();
+            if st.slots[s].referenced {
+                st.slots[s].referenced = false;
+                continue;
+            }
+            let victim = st.slots[s].row;
+            if st.slots[s].dirty {
+                let data = &st.data[s * self.dim..(s + 1) * self.dim];
+                self.inner.set_row(victim, data);
+                self.write_backs.fetch_add(1, Ordering::Relaxed);
+            }
+            st.index.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            st.slots[s] = Slot { row, referenced: false, dirty: false };
+            return s;
+        }
+    }
+
+    /// `read_row` that reports whether it was served from the cache.
+    fn read_row_tracked(&self, i: usize, out: &mut [f32]) -> bool {
+        debug_assert!(i < self.rows);
+        let mut st = self.stripe_of(i).lock().expect("cache stripe poisoned");
+        if let Some(&s) = st.index.get(&i) {
+            st.slots[s].referenced = true;
+            out.copy_from_slice(st.slot_data(s, self.dim));
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let s = self.allocate(&mut st, i);
+            self.inner.read_row(i, st.slot_data(s, self.dim));
+            st.slots[s].referenced = true;
+            st.index.insert(i, s);
+            out.copy_from_slice(st.slot_data(s, self.dim));
+            false
+        }
+    }
+
+    /// Write every dirty row back to the backing store (without forcing
+    /// the backing store's own flush).
+    fn write_back_all(&self) {
+        for stripe in &self.stripes {
+            let mut st = stripe.lock().expect("cache stripe poisoned");
+            for s in 0..st.slots.len() {
+                if st.slots[s].row != EMPTY && st.slots[s].dirty {
+                    let row = st.slots[s].row;
+                    self.inner.set_row(row, &st.data[s * self.dim..(s + 1) * self.dim]);
+                    st.slots[s].dirty = false;
+                    self.write_backs.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for CachedStore {
+    /// Dirty rows must reach the backing store even without an explicit
+    /// flush — a persistent-dir mmap table is expected to hold the final
+    /// values after the run.
+    fn drop(&mut self) {
+        self.write_back_all();
+    }
+}
+
+impl EmbeddingStore for CachedStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "cached"
+    }
+
+    fn read_row(&self, i: usize, out: &mut [f32]) {
+        self.read_row_tracked(i, out);
+    }
+
+    fn set_row(&self, i: usize, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.dim);
+        debug_assert!(i < self.rows);
+        let mut st = self.stripe_of(i).lock().expect("cache stripe poisoned");
+        let s = match st.index.get(&i) {
+            Some(&s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                // write-allocate: no need to read the old row, it is
+                // overwritten whole
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let s = self.allocate(&mut st, i);
+                st.index.insert(i, s);
+                s
+            }
+        };
+        st.slot_data(s, self.dim).copy_from_slice(values);
+        st.slots[s].referenced = true;
+        st.slots[s].dirty = true;
+    }
+
+    fn update_row(&self, i: usize, f: &mut dyn FnMut(&mut [f32])) {
+        debug_assert!(i < self.rows);
+        let mut st = self.stripe_of(i).lock().expect("cache stripe poisoned");
+        let s = match st.index.get(&i) {
+            Some(&s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let s = self.allocate(&mut st, i);
+                self.inner.read_row(i, st.slot_data(s, self.dim));
+                st.index.insert(i, s);
+                s
+            }
+        };
+        f(st.slot_data(s, self.dim));
+        st.slots[s].referenced = true;
+        st.slots[s].dirty = true;
+    }
+
+    /// Bulk writes stream past the cache (caching them would evict the
+    /// hot set); overlapping cached rows are invalidated, dirty or not —
+    /// the incoming rows overwrite them whole. Unlike the row-granular
+    /// ops, this is a quiescent-path API (parallel init writes disjoint
+    /// ranges into an empty cache; checkpoint load is single-threaded):
+    /// the backing write and the invalidation are not atomic, so a
+    /// concurrent row op or eviction inside the written range could
+    /// interleave between them.
+    fn set_rows(&self, first_row: usize, values: &[f32]) {
+        self.inner.set_rows(first_row, values);
+        let n = values.len() / self.dim.max(1);
+        let n_stripes = self.stripes.len();
+        for (k, stripe) in self.stripes.iter().enumerate() {
+            let mut st = stripe.lock().expect("cache stripe poisoned");
+            if st.index.is_empty() {
+                continue;
+            }
+            // walk only this stripe's rows of the range (row ≡ k mod
+            // n_stripes) — O(chunk rows), not O(cached rows)
+            let mut row = first_row + (k + n_stripes - first_row % n_stripes) % n_stripes;
+            while row < first_row + n {
+                if let Some(s) = st.index.remove(&row) {
+                    st.slots[s] = Slot { row: EMPTY, referenced: false, dirty: false };
+                    st.free.push(s);
+                }
+                row += n_stripes;
+            }
+        }
+    }
+
+    fn gather_hits(&self, ids: &[u64], out: &mut [f32]) -> (u64, u64) {
+        debug_assert_eq!(out.len(), ids.len() * self.dim);
+        let mut hit_values = 0u64;
+        for (j, &id) in ids.iter().enumerate() {
+            if self.read_row_tracked(id as usize, &mut out[j * self.dim..(j + 1) * self.dim]) {
+                hit_values += self.dim as u64;
+            }
+        }
+        ((ids.len() * self.dim) as u64, hit_values)
+    }
+
+    /// Backing residency plus the cache's filled slots — what the budget
+    /// gate in `api::Session` compares against `storage.budget_mb`.
+    fn resident_bytes(&self) -> u64 {
+        self.inner.resident_bytes()
+            + self.resident_rows.load(Ordering::Relaxed) * (self.dim as u64) * 4
+    }
+
+    fn table_bytes(&self) -> u64 {
+        self.inner.table_bytes()
+    }
+
+    /// Snapshot through the backing store after draining dirty rows — one
+    /// bulk path instead of `rows` cache lookups.
+    fn snapshot(&self) -> Vec<f32> {
+        self.write_back_all();
+        self.inner.snapshot()
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.write_back_all();
+        self.inner.flush()
+    }
+
+    /// Checkpoint export streams from the backing store (keeping the
+    /// mmap backend's no-table-sized-allocation property) after draining
+    /// dirty rows.
+    fn export_rows(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        self.write_back_all();
+        self.inner.export_rows(w)
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            write_backs: self.write_backs.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{DenseStore, MmapStore};
+    use crate::util::rng::Rng;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dglke-cache-test-{tag}-{}.f32", std::process::id()))
+    }
+
+    fn cached_mmap(tag: &str, rows: usize, dim: usize, capacity: usize) -> CachedStore {
+        let inner = MmapStore::create_ephemeral(&tmp_path(tag), rows, dim).unwrap();
+        CachedStore::with_capacity_rows(Box::new(inner), capacity)
+    }
+
+    #[test]
+    fn split_cache_budget_is_proportional_and_capped() {
+        // 4:2:1:1 tables, budget 40 → 20/10/5/5
+        assert_eq!(split_cache_budget(40, &[400, 200, 100, 100]), vec![20, 10, 5, 5]);
+        // budget above the tables: each share caps at its table
+        assert_eq!(split_cache_budget(10_000, &[400, 200]), vec![400, 200]);
+        // shares never exceed the budget in total
+        let shares = split_cache_budget(100, &[7, 13, 977]);
+        assert!(shares.iter().sum::<u64>() <= 100);
+        // empty tables
+        assert_eq!(split_cache_budget(100, &[0, 0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn random_ops_match_uncached_mirror() {
+        // the cache must be observationally invisible: a random op stream
+        // through a capacity-starved cache equals the same stream on a
+        // dense store
+        let cache = cached_mmap("mirror", 40, 3, 8);
+        let mirror = DenseStore::zeros(40, 3);
+        let mut rng = Rng::seed_from_u64(5);
+        let mut out_c = vec![0f32; 4 * 3];
+        let mut out_m = vec![0f32; 4 * 3];
+        for _ in 0..500 {
+            let i = rng.gen_index(40);
+            match rng.gen_index(4) {
+                0 => {
+                    let vals: Vec<f32> = (0..3).map(|_| rng.gen_normal()).collect();
+                    cache.set_row(i, &vals);
+                    mirror.set_row(i, &vals);
+                }
+                1 => {
+                    let delta = rng.gen_normal();
+                    let mut f = |row: &mut [f32]| {
+                        for x in row.iter_mut() {
+                            *x += delta;
+                        }
+                    };
+                    cache.update_row(i, &mut f);
+                    mirror.update_row(i, &mut f);
+                }
+                2 => {
+                    let ids: Vec<u64> = (0..4).map(|_| rng.gen_index(40) as u64).collect();
+                    cache.gather(&ids, &mut out_c);
+                    mirror.gather(&ids, &mut out_m);
+                    assert_eq!(out_c, out_m);
+                }
+                _ => assert_eq!(cache.row_vec(i), mirror.row_vec(i)),
+            }
+        }
+        assert_eq!(cache.snapshot(), mirror.snapshot());
+        let stats = cache.cache_stats().unwrap();
+        assert!(stats.hits > 0 && stats.misses > 0, "{stats:?}");
+        assert!(stats.evictions > 0, "capacity 8 over 40 rows must evict: {stats:?}");
+    }
+
+    #[test]
+    fn eviction_and_flush_persist_every_dirty_row() {
+        // write (dirty) far more rows than the cache holds: evictions
+        // write back their victims, and a final flush must persist the
+        // rest — after which the *backing* store holds every row
+        let path = tmp_path("writeback");
+        let inner = MmapStore::create(&path, 64, 2).unwrap();
+        let cache = CachedStore::with_capacity_rows(Box::new(inner), 7);
+        for i in 0..64 {
+            cache.set_row(i, &[i as f32, -(i as f32)]);
+        }
+        let stats = cache.cache_stats().unwrap();
+        assert!(stats.evictions >= 64 - 7, "{stats:?}");
+        assert!(stats.write_backs >= stats.evictions, "every dirty victim writes back");
+        cache.flush().unwrap();
+        // read the backing file directly: all 64 rows present
+        let direct = crate::util::bytes::bytes_to_f32(&std::fs::read(&path).unwrap());
+        for i in 0..64 {
+            assert_eq!(direct[i * 2..(i + 1) * 2], [i as f32, -(i as f32)], "row {i} lost");
+        }
+        drop(cache);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drop_writes_back_dirty_rows() {
+        let path = tmp_path("drop");
+        {
+            let inner = MmapStore::create(&path, 8, 2).unwrap();
+            let cache = CachedStore::with_capacity_rows(Box::new(inner), 8);
+            cache.set_row(3, &[1.5, 2.5]);
+            // no flush: drop alone must persist
+        }
+        let direct = crate::util::bytes::bytes_to_f32(&std::fs::read(&path).unwrap());
+        assert_eq!(direct[3 * 2..4 * 2], [1.5, 2.5]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn set_rows_bypasses_and_invalidates() {
+        let cache = cached_mmap("bulk", 16, 2, 8);
+        cache.set_row(4, &[9.0, 9.0]); // dirty cached row
+        cache.set_row(5, &[8.0, 8.0]);
+        let bulk: Vec<f32> = (0..8).map(|v| v as f32).collect(); // rows 3..7
+        cache.set_rows(3, &bulk);
+        // the bulk write wins over the previously-dirty cached rows
+        assert_eq!(cache.row_vec(4), vec![2.0, 3.0]);
+        assert_eq!(cache.row_vec(5), vec![4.0, 5.0]);
+        assert_eq!(cache.row_vec(3), vec![0.0, 1.0]);
+        // untouched rows unaffected
+        assert_eq!(cache.row_vec(0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn export_rows_sees_dirty_cache_rows() {
+        let cache = cached_mmap("export", 6, 2, 4);
+        for i in 0..6 {
+            cache.set_row(i, &[i as f32, 0.5]);
+        }
+        let mut bytes = Vec::new();
+        cache.export_rows(&mut bytes).unwrap();
+        assert_eq!(crate::util::bytes::bytes_to_f32(&bytes), cache.snapshot());
+    }
+
+    #[test]
+    fn resident_bytes_reports_cache_residency() {
+        let cache = cached_mmap("resident", 100, 4, 10);
+        assert_eq!(cache.resident_bytes(), 0, "cold cache holds nothing");
+        let mut out = vec![0f32; 4];
+        for i in 0..5 {
+            cache.read_row(i, &mut out);
+        }
+        assert_eq!(cache.resident_bytes(), 5 * 4 * 4);
+        // residency saturates at capacity even when more rows stream by
+        for i in 0..100 {
+            cache.read_row(i, &mut out);
+        }
+        assert!(cache.resident_bytes() <= (cache.capacity_rows() as u64 + 64) * 4 * 4);
+        assert!(cache.table_bytes() == 100 * 4 * 4);
+    }
+
+    #[test]
+    fn second_chance_keeps_hot_rows() {
+        // one stripe (capacity < stripes cap): rows 0..4 cached, row 0
+        // kept hot via the referenced bit; streaming rows through must
+        // evict around it
+        let cache = cached_mmap("clock", 32, 1, 4);
+        let mut out = [0f32];
+        cache.set_row(0, &[7.0]);
+        for i in 1..32 {
+            cache.read_row(0, &mut out); // keep row 0 referenced
+            cache.read_row(i, &mut out);
+        }
+        let before = cache.cache_stats().unwrap();
+        cache.read_row(0, &mut out);
+        let after = cache.cache_stats().unwrap();
+        assert_eq!(out, [7.0]);
+        assert_eq!(after.hits, before.hits + 1, "hot row 0 must still be cached");
+    }
+
+    #[test]
+    fn concurrent_gather_races_stay_value_level_through_cache() {
+        // the byte-provenance audit from store::mmap, through the cached
+        // path, with a capacity-starved cache so the race crosses fills,
+        // hits, evictions, and write-backs: a racing gather may see old
+        // or new bytes of the row it reads — never another row's bytes,
+        // a short read, or a fault. Every byte written to row r carries r
+        // in its low 6 bits (generation in the high 2).
+        let pattern = |row: usize, g: usize| -> f32 {
+            let b = (row as u8) | (((g % 4) as u8) << 6);
+            f32::from_bits(u32::from_le_bytes([b; 4]))
+        };
+        let cache = cached_mmap("race", 64, 8, 16);
+        for row in 0..64 {
+            cache.set_row(row, &[pattern(row, 0); 8]);
+        }
+        let ids: Vec<u64> = (0..64).collect();
+        crate::util::threadpool::scoped_map(2, |w| {
+            if w == 0 {
+                for g in 1..=50 {
+                    for row in 0..64usize {
+                        cache.set_row(row, &[pattern(row, g); 8]);
+                    }
+                }
+            } else {
+                let mut out = vec![0f32; 64 * 8];
+                for _ in 0..200 {
+                    cache.gather(&ids, &mut out);
+                    for (j, lanes) in out.chunks_exact(8).enumerate() {
+                        for &v in lanes {
+                            for byte in v.to_bits().to_le_bytes() {
+                                assert_eq!(
+                                    (byte & 0x3F) as usize,
+                                    j,
+                                    "row {j} holds a byte written to another row"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        let stats = cache.cache_stats().unwrap();
+        assert!(stats.evictions > 0, "the audit must cross evictions: {stats:?}");
+    }
+
+    #[test]
+    fn gather_hits_counts_cached_values() {
+        let cache = cached_mmap("hits", 20, 4, 20);
+        let ids: Vec<u64> = (0..10).collect();
+        let mut out = vec![0f32; 10 * 4];
+        let (moved, hit) = cache.gather_hits(&ids, &mut out);
+        assert_eq!(moved, 10 * 4);
+        assert_eq!(hit, 0, "cold cache: all misses");
+        let (moved, hit) = cache.gather_hits(&ids, &mut out);
+        assert_eq!(moved, 10 * 4);
+        assert_eq!(hit, 10 * 4, "warm cache: all hits");
+    }
+}

@@ -54,7 +54,9 @@ impl MmapStore {
             .truncate(true)
             .open(path)
             .with_context(|| format!("creating mmap store {}", path.display()))?;
-        file.set_len((rows * dim * 4) as u64)
+        // size in u64: rows * dim * 4 overflows usize on 32-bit targets
+        // for >4 GiB tables (Freebase at dim 400 is ~138 GiB)
+        file.set_len(rows as u64 * dim as u64 * 4)
             .with_context(|| format!("sizing mmap store {}", path.display()))?;
         Ok(MmapStore { file, path: path.to_path_buf(), rows, dim })
     }
@@ -77,10 +79,13 @@ impl MmapStore {
         &self.path
     }
 
+    /// Byte offset of row `i`, computed in `u64` *before* any narrowing:
+    /// `i * dim * 4` in `usize` wraps on 32-bit targets once the table
+    /// crosses 4 GiB, silently aliasing distant rows.
     #[inline]
     fn offset(&self, i: usize) -> u64 {
         debug_assert!(i < self.rows);
-        (i * self.dim * 4) as u64
+        i as u64 * self.dim as u64 * 4
     }
 }
 
@@ -116,7 +121,10 @@ impl EmbeddingStore for MmapStore {
 
     /// One positioned write per chunk instead of one syscall per row.
     fn set_rows(&self, first_row: usize, values: &[f32]) {
-        debug_assert!(first_row * self.dim + values.len() <= self.rows * self.dim);
+        debug_assert!(
+            first_row as u64 * self.dim as u64 + values.len() as u64
+                <= self.rows as u64 * self.dim as u64
+        );
         self.file
             .write_all_at(crate::util::bytes::f32_as_bytes(values), self.offset(first_row))
             .expect("MmapStore: backing-file write failed");
@@ -144,11 +152,14 @@ impl EmbeddingStore for MmapStore {
     }
 
     fn export_rows(&self, w: &mut dyn std::io::Write) -> Result<()> {
-        let total = (self.rows * self.dim * 4) as u64;
-        let mut buf = vec![0u8; (1usize << 20).min(total.max(1) as usize)];
+        let total = self.rows as u64 * self.dim as u64 * 4;
+        // chunk math stays in u64 until after the min with the (<= 1 MiB)
+        // buffer length — `total as usize` would wrap on 32-bit targets
+        // for >4 GiB tables and stall the copy loop
+        let mut buf = vec![0u8; total.clamp(1, 1 << 20) as usize];
         let mut off = 0u64;
         while off < total {
-            let n = ((total - off) as usize).min(buf.len());
+            let n = (total - off).min(buf.len() as u64) as usize;
             self.file
                 .read_exact_at(&mut buf[..n], off)
                 .with_context(|| format!("exporting mmap store {}", self.path.display()))?;
@@ -253,6 +264,30 @@ mod tests {
             }
         });
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn offsets_past_4gib_stay_exact() {
+        // regression for the usize-before-u64 offset arithmetic: at
+        // rows*dim*4 > u32::MAX the last row's byte offset exceeds 2^32,
+        // which a 32-bit usize multiply would have wrapped into the
+        // start of the file. The file is sparse, so the 4 GiB footprint
+        // is logical, not physical — only the touched pages cost disk.
+        let dim = 1024usize;
+        let rows = (1usize << 20) + 1; // rows*dim*4 = 4 GiB + 4 KiB > u32::MAX
+        let t = MmapStore::create_ephemeral(&tmp_path("4gib"), rows, dim).unwrap();
+        assert_eq!(t.table_bytes(), 4 * rows as u64 * dim as u64);
+        assert!(t.table_bytes() > u32::MAX as u64);
+        let marker: Vec<f32> = (0..dim).map(|k| k as f32 + 0.5).collect();
+        let head = vec![-1.0f32; dim];
+        t.set_row(rows - 1, &marker); // offset 2^32 exactly
+        t.set_row(0, &head);
+        assert_eq!(t.row_vec(rows - 1), marker, "last row must not alias the file head");
+        assert_eq!(t.row_vec(0), head);
+        // a row past the 4 GiB line round-trips through update_row too
+        t.update_row(rows - 1, &mut |row| row[0] = 7.0);
+        assert_eq!(t.row_vec(rows - 1)[0], 7.0);
+        assert_eq!(t.row_vec(rows - 2), vec![0.0; dim], "neighbor stays untouched");
     }
 
     #[test]

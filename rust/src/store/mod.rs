@@ -14,6 +14,11 @@
 //! * [`MmapStore`] — file-backed rows for larger-than-RAM tables, with
 //!   streaming (no full-table clone) checkpoint export.
 //!
+//! Mmap tables (and their optimizer state) are wrapped in a
+//! budget-bounded hot-row cache ([`CachedStore`]) when the config
+//! carries a cache budget (`cache_mb`, defaulting to `budget_mb`) — see
+//! the `cache` module docs.
+//!
 //! [`SparseAdagrad`] keeps its per-row state behind the same trait, so
 //! optimizer state shards/spills alongside its table. [`SparseGrads`] is
 //! the sparse-gradient container shared by the trainers and the KVStore
@@ -25,12 +30,14 @@
 //! byte-identically from the same spec (see `rust/tests/storage_tests.rs`).
 
 pub mod adagrad;
+pub mod cache;
 pub mod dense;
 pub mod gradients;
 pub mod mmap;
 pub mod sharded;
 
 pub use adagrad::SparseAdagrad;
+pub use cache::{split_cache_budget, CachedStore};
 pub use dense::DenseStore;
 pub use gradients::SparseGrads;
 pub use mmap::MmapStore;
@@ -83,7 +90,8 @@ pub trait EmbeddingStore: Send + Sync {
         }
     }
 
-    /// Bytes resident in RAM for this table (0 when rows live on disk).
+    /// Bytes resident in RAM for this table (0 when rows live on disk;
+    /// a [`CachedStore`] reports its filled cache slots).
     fn resident_bytes(&self) -> u64;
 
     /// Gather rows `ids` into `out` (`[ids.len(), dim]`, row-major).
@@ -95,18 +103,41 @@ pub trait EmbeddingStore: Send + Sync {
         }
     }
 
+    /// Like [`EmbeddingStore::gather`], but also reports how many of the
+    /// gathered f32 values were served from a hot-row cache — `(values
+    /// moved, values hit)`. The GPU transfer ledger credits hit values as
+    /// zero-cost/overlapped rather than critical-path h2d traffic.
+    /// Cacheless backends move everything and hit nothing.
+    fn gather_hits(&self, ids: &[u64], out: &mut [f32]) -> (u64, u64) {
+        self.gather(ids, out);
+        ((ids.len() * self.dim()) as u64, 0)
+    }
+
+    /// Hit/miss/eviction/write-back counters, when this store has a
+    /// hot-row cache in front of it (`None` otherwise). Counters are
+    /// cumulative over the store's lifetime.
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+
+    /// Element count of the table. `usize` because it sizes in-memory
+    /// buffers; on 32-bit targets a table can exceed it — size *bytes*
+    /// (checkpoint framing, budget math) from [`EmbeddingStore::table_bytes`],
+    /// which computes in `u64`, never from this.
     fn n_params(&self) -> usize {
         self.rows() * self.dim()
     }
 
     /// Total logical table size in bytes (independent of residency).
+    /// Computed in `u64` — `rows * dim * 4` can exceed `usize` on 32-bit
+    /// targets at Freebase scale.
     fn table_bytes(&self) -> u64 {
-        (self.n_params() * 4) as u64
+        self.rows() as u64 * self.dim() as u64 * 4
     }
 
     /// Number of bytes a gather of `n` rows moves (for the transfer ledger).
     fn gather_bytes(&self, n: usize) -> u64 {
-        (n * self.dim() * 4) as u64
+        n as u64 * self.dim() as u64 * 4
     }
 
     /// Owned copy of row `i` (tests, cold paths).
@@ -159,9 +190,50 @@ pub trait EmbeddingStore: Send + Sync {
 
 /// Rows per bulk-I/O chunk (~256 KiB) for a `dim`-wide table — the one
 /// formula shared by parallel init, checkpoint export, and checkpoint
-/// load, so chunk-size tuning happens in exactly one place.
+/// load, so chunk-size tuning happens in exactly one place. Rounds
+/// *down* to stay at or under the 256 KiB target (minimum one row, so
+/// wide tables still make progress).
 pub fn chunk_rows_for(dim: usize, rows: usize) -> usize {
-    ((1usize << 16) / dim.max(1) + 1).min(rows.max(1))
+    ((1usize << 16) / dim.max(1)).max(1).min(rows.max(1))
+}
+
+/// Hot-row-cache counters reported by [`EmbeddingStore::cache_stats`]
+/// (cumulative over the store's lifetime) and surfaced per-run in
+/// `api::Report`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// row accesses served from the cache
+    pub hits: u64,
+    /// row accesses that had to touch the backing store (or allocate)
+    pub misses: u64,
+    /// rows displaced by the clock sweep
+    pub evictions: u64,
+    /// dirty rows written back (on eviction, flush, export, or drop)
+    pub write_backs: u64,
+}
+
+impl CacheStats {
+    pub fn accumulate(&mut self, o: CacheStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.evictions += o.evictions;
+        self.write_backs += o.write_backs;
+    }
+
+    /// Counter delta since an `earlier` snapshot (per-run accounting
+    /// over cumulative counters).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            write_backs: self.write_backs.saturating_sub(earlier.write_backs),
+        }
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
 }
 
 /// Which [`EmbeddingStore`] implementation a [`StoreConfig`] builds.
@@ -204,13 +276,26 @@ pub struct StoreConfig {
     pub dir: Option<String>,
     /// optional in-memory budget in MiB (fractional allowed). Runs whose
     /// tables would exceed it must use the mmap backend; enforced by
-    /// `api::Session`.
+    /// `api::Session`. For mmap runs this also sizes the hot-row cache
+    /// (unless [`StoreConfig::cache_mb`] overrides it).
     pub budget_mb: Option<f64>,
+    /// hot-row cache size in MiB for mmap tables (fractional allowed),
+    /// overriding the `budget_mb`-derived default. Must not exceed
+    /// `budget_mb` when both are set (the cache *is* the resident set of
+    /// an mmap run). Ignored by the in-memory backends, which are their
+    /// own cache.
+    pub cache_mb: Option<f64>,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        StoreConfig { backend: StoreBackendKind::Dense, shards: 8, dir: None, budget_mb: None }
+        StoreConfig {
+            backend: StoreBackendKind::Dense,
+            shards: 8,
+            dir: None,
+            budget_mb: None,
+            cache_mb: None,
+        }
     }
 }
 
@@ -239,7 +324,23 @@ impl StoreConfig {
         if let Some(mb) = self.budget_mb {
             anyhow::ensure!(mb > 0.0, "storage.budget_mb must be positive");
         }
+        if let Some(mb) = self.cache_mb {
+            anyhow::ensure!(mb > 0.0, "storage.cache_mb must be positive");
+        }
         Ok(())
+    }
+
+    /// Total hot-row-cache byte budget for this config: `cache_mb` when
+    /// set, else `budget_mb` (an mmap run's budget is exactly its cache
+    /// allowance — the rows themselves live on disk). `None` for the
+    /// in-memory backends or when neither knob is set. Callers holding
+    /// several tables split this with [`split_cache_budget`].
+    pub fn cache_total_bytes(&self) -> Option<u64> {
+        if self.backend != StoreBackendKind::Mmap {
+            return None;
+        }
+        let mb = self.cache_mb.or(self.budget_mb)?;
+        Some((mb * (1u64 << 20) as f64) as u64)
     }
 
     /// Fill in runtime defaults: clamp the shard count and create the
@@ -257,8 +358,19 @@ impl StoreConfig {
         Ok(cfg)
     }
 
-    fn build(&self, label: &str, rows: usize, dim: usize) -> Result<Box<dyn EmbeddingStore>> {
-        Ok(match self.backend {
+    /// `cache_bytes` is this *table's* share of the cache budget (the
+    /// proportional split across a model's tables happens in the caller,
+    /// which is the only place that sees every table) — `None` or a
+    /// sub-row share builds uncached. Only mmap tables are wrapped: the
+    /// in-memory backends are their own cache.
+    fn build(
+        &self,
+        label: &str,
+        rows: usize,
+        dim: usize,
+        cache_bytes: Option<u64>,
+    ) -> Result<Box<dyn EmbeddingStore>> {
+        let store: Box<dyn EmbeddingStore> = match self.backend {
             StoreBackendKind::Dense => Box::new(DenseStore::zeros(rows, dim)),
             StoreBackendKind::Sharded => {
                 Box::new(ShardedStore::zeros(rows, dim, self.shards.max(1)))
@@ -279,12 +391,22 @@ impl StoreConfig {
                     Box::new(MmapStore::create_ephemeral(&path, rows, dim)?)
                 }
             },
+        };
+        Ok(match cache_bytes {
+            Some(bytes)
+                if self.backend == StoreBackendKind::Mmap
+                    && rows > 0
+                    && bytes >= dim.max(1) as u64 * 4 =>
+            {
+                Box::new(CachedStore::new(store, bytes))
+            }
+            _ => store,
         })
     }
 
     /// Build a zero-initialized table.
     pub fn zeros(&self, label: &str, rows: usize, dim: usize) -> Result<Arc<dyn EmbeddingStore>> {
-        Ok(Arc::from(self.build(label, rows, dim)?))
+        Ok(Arc::from(self.build(label, rows, dim, None)?))
     }
 
     /// Build a table initialized uniform in `[-init_scale, init_scale]`
@@ -297,7 +419,21 @@ impl StoreConfig {
         init_scale: f32,
         seed: u64,
     ) -> Result<Arc<dyn EmbeddingStore>> {
-        let store = self.build(label, rows, dim)?;
+        self.uniform_cached(label, rows, dim, init_scale, seed, None)
+    }
+
+    /// Like [`StoreConfig::uniform`], with an explicit hot-row-cache byte
+    /// share for this table (mmap backend only; `None` = uncached).
+    pub fn uniform_cached(
+        &self,
+        label: &str,
+        rows: usize,
+        dim: usize,
+        init_scale: f32,
+        seed: u64,
+        cache_bytes: Option<u64>,
+    ) -> Result<Arc<dyn EmbeddingStore>> {
+        let store = self.build(label, rows, dim, cache_bytes)?;
         init_uniform_rows(store.as_ref(), init_scale, seed);
         Ok(Arc::from(store))
     }
@@ -305,7 +441,18 @@ impl StoreConfig {
     /// Build optimizer state (one scalar per row) on the same backend, so
     /// state shards/spills alongside its table.
     pub fn opt_state(&self, label: &str, rows: usize) -> Result<Box<dyn EmbeddingStore>> {
-        self.build(label, rows, 1)
+        self.opt_state_cached(label, rows, None)
+    }
+
+    /// Like [`StoreConfig::opt_state`], with this state table's hot-row
+    /// cache byte share (mmap backend only; `None` = uncached).
+    pub fn opt_state_cached(
+        &self,
+        label: &str,
+        rows: usize,
+        cache_bytes: Option<u64>,
+    ) -> Result<Box<dyn EmbeddingStore>> {
+        self.build(label, rows, 1, cache_bytes)
     }
 }
 
@@ -467,6 +614,57 @@ mod tests {
         assert!(StoreConfig { budget_mb: Some(0.0), ..StoreConfig::default() }
             .validate()
             .is_err());
+        assert!(StoreConfig { cache_mb: Some(-2.0), ..StoreConfig::default() }
+            .validate()
+            .is_err());
         assert!(StoreConfig::sharded(4).validate().is_ok());
+    }
+
+    #[test]
+    fn chunk_rows_stay_at_or_under_256kib() {
+        // regression: the old formula added +1, overshooting the target
+        // by one row (and dim=1 tables chunked at 256 KiB + 4 B)
+        let target = 1usize << 18; // 256 KiB
+        for dim in [1, 3, 17, 64, 100, 65_536, 70_000] {
+            let chunk = chunk_rows_for(dim, usize::MAX);
+            assert!(chunk >= 1, "dim {dim}: must make progress");
+            assert!(
+                chunk == 1 || chunk * dim * 4 <= target,
+                "dim {dim}: chunk {chunk} rows = {} bytes overshoots 256 KiB",
+                chunk * dim * 4
+            );
+        }
+        assert_eq!(chunk_rows_for(1, usize::MAX), 1 << 16, "dim=1 chunks at exactly 256 KiB");
+        assert_eq!(chunk_rows_for(64, usize::MAX), 1024, "exact division must not round up");
+        // still clamped to the table
+        assert_eq!(chunk_rows_for(4, 10), 10);
+        assert_eq!(chunk_rows_for(4, 0), 1);
+    }
+
+    #[test]
+    fn cache_total_bytes_resolution() {
+        let mmap = StoreConfig { backend: StoreBackendKind::Mmap, ..StoreConfig::default() };
+        assert_eq!(mmap.cache_total_bytes(), None, "no budget, no cache");
+        let budgeted = StoreConfig { budget_mb: Some(2.0), ..mmap.clone() };
+        assert_eq!(budgeted.cache_total_bytes(), Some(2 << 20), "budget sizes the cache");
+        let overridden = StoreConfig { cache_mb: Some(0.5), ..budgeted };
+        assert_eq!(overridden.cache_total_bytes(), Some(1 << 19), "cache_mb wins");
+        // in-memory backends never cache
+        let dense = StoreConfig { budget_mb: Some(2.0), ..StoreConfig::default() };
+        assert_eq!(dense.cache_total_bytes(), None);
+    }
+
+    #[test]
+    fn cached_mmap_table_matches_uncached_init() {
+        let cfg = StoreConfig { backend: StoreBackendKind::Mmap, ..StoreConfig::default() };
+        let plain = cfg.uniform("plain", 33, 7, 0.5, 42).unwrap();
+        let cached = cfg.uniform_cached("cached", 33, 7, 0.5, 42, Some(16 * 7 * 4)).unwrap();
+        assert_eq!(cached.backend_name(), "cached");
+        assert!(cached.cache_stats().is_some());
+        assert_eq!(cached.snapshot(), plain.snapshot());
+        // a sub-row share builds uncached instead of a degenerate cache
+        let tiny = cfg.uniform_cached("tiny", 33, 7, 0.5, 42, Some(3)).unwrap();
+        assert_eq!(tiny.backend_name(), "mmap");
+        assert!(tiny.cache_stats().is_none());
     }
 }

@@ -16,6 +16,22 @@ pub fn bytes_moved(values: u64) -> u64 {
     values * std::mem::size_of::<f32>() as u64
 }
 
+/// Volume accounting of one [`BatchBuffers::gather`]: total f32 values
+/// moved, and how many of them a hot-row cache served (entity vs
+/// relation, because they bill differently under §3.4 relation
+/// pinning). Hit values are credited as overlapped/zero-cost in the GPU
+/// transfer ledger — a cached row never crosses the host/device link on
+/// the critical path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GatherVolume {
+    /// all f32 values gathered (the `bytes_moved` basis)
+    pub values: u64,
+    /// entity values served from a hot-row cache
+    pub ent_hit_values: u64,
+    /// relation values served from a hot-row cache
+    pub rel_hit_values: u64,
+}
+
 /// Reusable gather buffers for one worker. Plain owned `Vec`s, so a
 /// buffer set can be handed to a prefetch thread, filled there, and sent
 /// back over a channel (the pipeline's double-buffer protocol) without
@@ -41,20 +57,24 @@ impl BatchBuffers {
     }
 
     /// Gather all embeddings of `batch` from the global tables (any
-    /// storage backend). Returns the number of f32 values moved (for the
-    /// transfer ledger).
+    /// storage backend). Returns the f32 volume moved and the cache-hit
+    /// share (for the transfer ledger).
     pub fn gather(
         &mut self,
         batch: &Batch,
         entities: &dyn EmbeddingStore,
         relations: &dyn EmbeddingStore,
-    ) -> u64 {
-        entities.gather(&batch.heads, &mut self.h);
-        relations.gather(&batch.rels, &mut self.r);
-        entities.gather(&batch.tails, &mut self.t);
-        entities.gather(&batch.neg_heads, &mut self.neg_h);
-        entities.gather(&batch.neg_tails, &mut self.neg_t);
-        (self.h.len() + self.r.len() + self.t.len() + self.neg_h.len() + self.neg_t.len()) as u64
+    ) -> GatherVolume {
+        let (hv, hh) = entities.gather_hits(&batch.heads, &mut self.h);
+        let (rv, rh) = relations.gather_hits(&batch.rels, &mut self.r);
+        let (tv, th) = entities.gather_hits(&batch.tails, &mut self.t);
+        let (nhv, nhh) = entities.gather_hits(&batch.neg_heads, &mut self.neg_h);
+        let (ntv, nth) = entities.gather_hits(&batch.neg_tails, &mut self.neg_t);
+        GatherVolume {
+            values: hv + rv + tv + nhv + ntv,
+            ent_hit_values: hh + th + nhh + nth,
+            rel_hit_values: rh,
+        }
     }
 
     /// Re-gather the rows of `batch` whose ids appear in `ent_dirty` /
@@ -156,7 +176,8 @@ mod tests {
         };
         let mut buf = BatchBuffers::new(&shape, 3);
         let moved = buf.gather(&batch, &entities, &relations);
-        assert_eq!(moved as usize, 4 * 3 * 3 + 2 * 2 * 3 * 2);
+        assert_eq!(moved.values as usize, 4 * 3 * 3 + 2 * 2 * 3 * 2);
+        assert_eq!(moved.ent_hit_values + moved.rel_hit_values, 0, "dense stores never hit");
         assert_eq!(&buf.h[0..3], entities.row(1));
         assert_eq!(&buf.r[3..6], relations.row(1));
         assert_eq!(&buf.neg_t[0..3], entities.row(0));
@@ -205,7 +226,36 @@ mod tests {
         let moved = buf.gather(&batch, &entities, &relations);
         let buffer_f32s =
             (buf.h.len() + buf.r.len() + buf.t.len() + buf.neg_h.len() + buf.neg_t.len()) as u64;
-        assert_eq!(bytes_moved(moved), buffer_f32s * 4);
+        assert_eq!(bytes_moved(moved.values), buffer_f32s * 4);
+    }
+
+    #[test]
+    fn gather_volume_separates_ent_and_rel_hits() {
+        // cached mmap tables: a second gather of the same batch is all
+        // hits, split between the entity and relation sections
+        let shape = StepShape { batch: 2, chunks: 1, neg_k: 2, dim: 3 };
+        let cfg = crate::store::StoreConfig {
+            backend: crate::store::StoreBackendKind::Mmap,
+            ..Default::default()
+        };
+        let entities = cfg.uniform_cached("gv-ents", 10, 3, 1.0, 1, Some(10 * 3 * 4)).unwrap();
+        let relations = cfg.uniform_cached("gv-rels", 5, 3, 1.0, 2, Some(5 * 3 * 4)).unwrap();
+        let batch = Batch {
+            heads: vec![1, 2],
+            rels: vec![0, 1],
+            tails: vec![3, 4],
+            neg_heads: vec![5, 6],
+            neg_tails: vec![7, 8],
+            chunks: 1,
+            neg_k: 2,
+        };
+        let mut buf = BatchBuffers::new(&shape, 3);
+        let cold = buf.gather(&batch, &*entities, &*relations);
+        assert_eq!(cold.ent_hit_values + cold.rel_hit_values, 0, "cold cache");
+        let warm = buf.gather(&batch, &*entities, &*relations);
+        assert_eq!(warm.values, cold.values);
+        assert_eq!(warm.ent_hit_values, (8 * 3) as u64, "8 entity rows re-served");
+        assert_eq!(warm.rel_hit_values, (2 * 3) as u64, "2 relation rows re-served");
     }
 
     #[test]

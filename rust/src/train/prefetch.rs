@@ -36,7 +36,7 @@
 //! discarded on receipt (their buffers recycled), so the pipeline
 //! restarts cleanly without tearing down the thread.
 
-use super::batch::BatchBuffers;
+use super::batch::{BatchBuffers, GatherVolume};
 use crate::kg::TripletStore;
 use crate::models::step::StepShape;
 use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
@@ -52,8 +52,9 @@ use std::thread::{Scope, ScopedJoinHandle};
 pub struct PrefetchedBatch {
     pub batch: Batch,
     pub buf: BatchBuffers,
-    /// f32 values moved by the prefetched gather (ledger accounting)
-    pub moved: u64,
+    /// f32 volume moved by the prefetched gather, with its cache-hit
+    /// share (ledger accounting)
+    pub moved: GatherVolume,
     /// the worker's applied-update counter observed *before* the gather
     /// began: updates with index >= this stamp may not be reflected in
     /// the buffer and must be patched

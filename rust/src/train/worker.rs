@@ -19,7 +19,7 @@
 //! own updates dirtied since the gather, and bills the prefetched bytes
 //! as overlapped rather than critical-path transfer.
 
-use super::batch::{bytes_moved, split_grads, BatchBuffers};
+use super::batch::{bytes_moved, split_grads, BatchBuffers, GatherVolume};
 use super::device::{Hardware, TransferLedger};
 use super::prefetch::Prefetcher;
 use super::sync::SyncState;
@@ -30,7 +30,7 @@ use crate::models::{LossCfg, ModelKind};
 use crate::partition::partition_relations;
 use crate::runtime::{BackendKind, Manifest, TrainBackend};
 use crate::sampler::{Batch, NegativeConfig, NegativeSampler, PositiveSampler};
-use crate::store::{EmbeddingStore, SparseAdagrad, StoreConfig};
+use crate::store::{split_cache_budget, CacheStats, EmbeddingStore, SparseAdagrad, StoreConfig};
 use crate::util::timer::{PhaseTimes, Timer};
 use anyhow::Result;
 use std::collections::{HashSet, VecDeque};
@@ -131,7 +131,10 @@ impl ModelState {
     /// Initialize on an explicit storage backend. Row init is per-row
     /// seeded, so every backend yields byte-identical starting tables for
     /// the same seed; optimizer state is built on the same backend so it
-    /// shards/spills alongside its table.
+    /// shards/spills alongside its table. For mmap storage with a cache
+    /// budget (`storage.cache_mb`, defaulting to `storage.budget_mb`),
+    /// every table — embeddings *and* AdaGrad state — gets a hot-row
+    /// cache sized by its share of the total table bytes.
     #[allow(clippy::too_many_arguments)]
     pub fn init_with_storage(
         dataset: &Dataset,
@@ -144,32 +147,50 @@ impl ModelState {
     ) -> Result<Self> {
         let storage = storage.resolved()?;
         let rel_dim = model.rel_dim(dim);
+        let (n_ent, n_rel) = (dataset.n_entities(), dataset.n_relations());
+        // proportional cache split: [entities, relations, ent_opt, rel_opt]
+        let cache = match storage.cache_total_bytes() {
+            Some(total) => {
+                let tables = [
+                    n_ent as u64 * dim as u64 * 4,
+                    n_rel as u64 * rel_dim as u64 * 4,
+                    n_ent as u64 * 4,
+                    n_rel as u64 * 4,
+                ];
+                split_cache_budget(total, &tables).into_iter().map(Some).collect()
+            }
+            None => vec![None; 4],
+        };
         Ok(ModelState {
-            entities: storage.uniform(
+            entities: storage.uniform_cached(
                 "entities",
-                dataset.n_entities(),
+                n_ent,
                 dim,
                 init_scale,
                 seed ^ 0xE,
+                cache[0],
             )?,
-            relations: storage.uniform(
+            relations: storage.uniform_cached(
                 "relations",
-                dataset.n_relations(),
+                n_rel,
                 rel_dim,
                 init_scale,
                 seed ^ 0xF,
+                cache[1],
             )?,
-            ent_opt: Arc::new(SparseAdagrad::with_storage(
+            ent_opt: Arc::new(SparseAdagrad::with_storage_cached(
                 &storage,
                 "entities.opt",
-                dataset.n_entities(),
+                n_ent,
                 lr,
+                cache[2],
             )?),
-            rel_opt: Arc::new(SparseAdagrad::with_storage(
+            rel_opt: Arc::new(SparseAdagrad::with_storage_cached(
                 &storage,
                 "relations.opt",
-                dataset.n_relations(),
+                n_rel,
                 lr,
+                cache[3],
             )?),
             dim,
             rel_dim,
@@ -195,6 +216,25 @@ impl ModelState {
     pub fn n_params(&self) -> usize {
         self.entities.n_params() + self.relations.n_params()
     }
+
+    /// Summed hot-row-cache counters across the embedding tables and
+    /// their optimizer state (zero when nothing is cached). Cumulative;
+    /// `run_training` reports the per-run delta.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in [
+            self.entities.cache_stats(),
+            self.relations.cache_stats(),
+            self.ent_opt.cache_stats(),
+            self.rel_opt.cache_stats(),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            total.accumulate(s);
+        }
+        total
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -219,6 +259,8 @@ pub struct TrainStats {
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
     pub overlapped_bytes: u64,
+    /// hot-row-cache counters over this run (all zero when uncached)
+    pub cache: CacheStats,
 }
 
 struct WorkerOut {
@@ -259,6 +301,7 @@ pub fn run_training(
         .then(|| partition_relations(&dataset.train, cfg.n_workers, cfg.seed));
     let sync = SyncState::new(cfg.n_workers, initial_part);
     let ledger = TransferLedger::new();
+    let cache_before = state.cache_stats();
 
     let timer = Timer::new();
     let outs: Vec<Result<WorkerOut>> = crate::util::threadpool::scoped_map(cfg.n_workers, |w| {
@@ -316,6 +359,7 @@ pub fn run_training(
         h2d_bytes: ledger.h2d.load(std::sync::atomic::Ordering::Relaxed),
         d2h_bytes: ledger.d2h.load(std::sync::atomic::Ordering::Relaxed),
         overlapped_bytes: ledger.overlapped.load(std::sync::atomic::Ordering::Relaxed),
+        cache: state.cache_stats().since(&cache_before),
     })
 }
 
@@ -351,24 +395,28 @@ impl WorkerCtx<'_> {
     /// Bill a full-batch gather to the transfer ledger. Entity rows move
     /// host→device every batch; relation rows only when relation
     /// partitioning is off (§3.4 pins them on-GPU). A sequential gather
-    /// sits on the critical path (h2d); a prefetched gather overlaps the
-    /// previous batch's compute, so its bytes are credited as overlapped
-    /// instead (§3.5).
-    fn bill_gather(&mut self, batch: &Batch, moved: u64, overlapped: bool) {
+    /// sits on the critical path (h2d) — except its hot-row-cache hits,
+    /// which never leave memory and are credited as overlapped/zero-cost
+    /// alongside the moved bytes; a prefetched gather overlaps the
+    /// previous batch's compute, so all its bytes are credited as
+    /// overlapped (§3.5).
+    fn bill_gather(&mut self, batch: &Batch, vol: GatherVolume, overlapped: bool) {
         if !self.gpu {
             return;
         }
-        let rel_bytes = bytes_moved((batch.rels.len() * self.rel_dim) as u64);
-        let ent_bytes = bytes_moved(moved) - rel_bytes;
+        let rel_values = (batch.rels.len() * self.rel_dim) as u64;
+        let ent_values = vol.values - rel_values;
         if overlapped {
-            self.ledger.add_overlapped(ent_bytes);
+            self.ledger.add_overlapped(bytes_moved(ent_values));
             if !self.cfg.relation_partition {
-                self.ledger.add_overlapped(rel_bytes);
+                self.ledger.add_overlapped(bytes_moved(rel_values));
             }
         } else {
-            self.ledger.add_h2d(ent_bytes);
+            self.ledger.add_h2d(bytes_moved(ent_values - vol.ent_hit_values));
+            self.ledger.add_overlapped(bytes_moved(vol.ent_hit_values));
             if !self.cfg.relation_partition {
-                self.ledger.add_h2d(rel_bytes);
+                self.ledger.add_h2d(bytes_moved(rel_values - vol.rel_hit_values));
+                self.ledger.add_overlapped(bytes_moved(vol.rel_hit_values));
             }
         }
     }
@@ -469,9 +517,10 @@ fn run_sequential(
 
         // (2) gather
         let state = ctx.state;
-        let moved =
-            ctx.phases.time("gather", || buf.gather(&batch, &state.entities, &state.relations));
-        ctx.bill_gather(&batch, moved, false);
+        let vol = ctx
+            .phases
+            .time("gather", || buf.gather(&batch, &*state.entities, &*state.relations));
+        ctx.bill_gather(&batch, vol, false);
 
         // (3) compute + (4) update + (5) sync
         let grads = ctx.compute(step, &buf)?;

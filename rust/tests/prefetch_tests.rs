@@ -52,10 +52,18 @@ fn train_snapshot(spec: RunSpec) -> (Vec<(u64, f32)>, Vec<f32>, Vec<f32>) {
 #[test]
 fn prefetch_is_byte_identical_on_all_backends() {
     let dir = tmp_dir("equiv");
+    // the hot-row cache (cache_mb) rides the same equivalence matrix:
+    // capacity-starved so the run crosses fills, hits, evictions, and
+    // write-backs while staying byte-identical
+    let cached_mmap = StoreConfig {
+        cache_mb: Some(0.004),
+        ..StoreConfig::mmap(dir.join("cached").to_string_lossy().into_owned())
+    };
     let configs = [
         ("dense", StoreConfig::dense()),
         ("sharded", StoreConfig::sharded(3)),
         ("mmap", StoreConfig::mmap(dir.join("mmap").to_string_lossy().into_owned())),
+        ("cached mmap", cached_mmap),
     ];
     for (name, storage) in configs {
         let (curve_off, ents_off, rels_off) = train_snapshot(spec_with(storage.clone(), false));
@@ -64,6 +72,70 @@ fn prefetch_is_byte_identical_on_all_backends() {
         assert_eq!(ents_on, ents_off, "{name}: entity table changed by prefetch");
         assert_eq!(rels_on, rels_off, "{name}: relation table changed by prefetch");
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_is_byte_identical_across_prefetch_matrix() {
+    // the acceptance matrix: cached vs uncached mmap, prefetch on and
+    // off (sync updates, 1 worker) — all four runs must be byte-identical
+    let dir = tmp_dir("cache-matrix");
+    let uncached = StoreConfig::mmap(dir.join("plain").to_string_lossy().into_owned());
+    let cached = StoreConfig {
+        cache_mb: Some(0.004),
+        ..StoreConfig::mmap(dir.join("cached").to_string_lossy().into_owned())
+    };
+    let base = train_snapshot(spec_with(uncached.clone(), false));
+    for (tag, storage, prefetch) in [
+        ("uncached+prefetch", uncached, true),
+        ("cached", cached.clone(), false),
+        ("cached+prefetch", cached, true),
+    ] {
+        let got = train_snapshot(spec_with(storage, prefetch));
+        assert_eq!(got.0, base.0, "{tag}: loss trajectory diverged");
+        assert_eq!(got.1, base.1, "{tag}: entity table diverged");
+        assert_eq!(got.2, base.2, "{tag}: relation table diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prefetch_warms_cache_and_credits_hits_as_overlapped() {
+    // prefetch + cache composition, GPU ledger view: with the pipeline
+    // on, gathers (including their cache hits) are off the critical
+    // path; the cache on top must not add critical-path h2d bytes
+    let dir = tmp_dir("warm");
+    let cached = StoreConfig {
+        cache_mb: Some(0.004),
+        ..StoreConfig::mmap(dir.join("t").to_string_lossy().into_owned())
+    };
+    let run = |storage: StoreConfig, prefetch: bool| {
+        let mut spec = spec_with(storage, prefetch);
+        spec.mode = ParallelMode::Single { workers: 1, gpu: true };
+        let mut session = Session::from_spec(spec).unwrap();
+        session.train().unwrap()
+    };
+    // sequential cached run: hits are credited as overlapped instead of
+    // h2d, so h2d shrinks and overlapped grows vs the uncached run
+    let plain = run(StoreConfig::mmap(dir.join("p").to_string_lossy().into_owned()), false);
+    let seq = run(cached.clone(), false);
+    assert!(seq.cache_hits > 0, "sequential cached run must hit");
+    assert!(
+        seq.h2d_bytes < plain.h2d_bytes,
+        "cache hits must come off the critical path: {} vs {}",
+        seq.h2d_bytes,
+        plain.h2d_bytes
+    );
+    assert!(seq.overlapped_bytes > plain.overlapped_bytes);
+    // total gathered volume is conserved between the two ledgers
+    assert_eq!(
+        seq.h2d_bytes + seq.overlapped_bytes,
+        plain.h2d_bytes + plain.overlapped_bytes
+    );
+    // pipelined cached run: the helper thread's gathers warm the cache
+    let pipe = run(cached, true);
+    assert!(pipe.cache_hits > 0, "prefetched gathers must warm the cache");
+    assert!(pipe.overlapped_bytes > 0);
     std::fs::remove_dir_all(&dir).ok();
 }
 

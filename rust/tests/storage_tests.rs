@@ -118,6 +118,98 @@ fn budget_gate_routes_big_tables_to_mmap() {
 }
 
 #[test]
+fn budget_gate_bounds_mmap_cache_residency() {
+    // regression for the wholesale mmap exemption: an mmap run is gated
+    // on its *cache* residency, so a cache_mb above budget_mb must be
+    // rejected while a conforming cache passes
+    let dir = tmp_dir("cache-gate");
+    let mut spec = spec_with_storage(StoreConfig::mmap(dir.to_string_lossy().into_owned()));
+    spec.storage.budget_mb = Some(0.25);
+    spec.storage.cache_mb = Some(1.0); // cache > budget: resident set too big
+    let err = Session::from_spec(spec).unwrap_err();
+    assert!(
+        err.to_string().contains("cache"),
+        "error must name the cache as the resident set: {err}"
+    );
+
+    // cache within budget: builds, trains, and actually caches
+    let mut spec = spec_with_storage(StoreConfig::mmap(dir.to_string_lossy().into_owned()));
+    spec.storage.budget_mb = Some(0.25);
+    spec.storage.cache_mb = Some(0.125);
+    let mut session = Session::from_spec(spec).unwrap();
+    assert_eq!(session.state().entities.backend_name(), "cached");
+    let report = session.train().unwrap();
+    assert!(report.cache_hits + report.cache_misses > 0, "cache saw no traffic");
+    // the dense/sharded arm of the gate is untouched: a budget below the
+    // table bytes still rejects a dense run of the same shape
+    let mut spec = spec_with_storage(StoreConfig::dense());
+    spec.storage.budget_mb = Some(0.001);
+    assert!(Session::from_spec(spec).is_err(), "dense tables exceed ~1 KiB");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cached_mmap_trains_byte_identical_and_reports_hits() {
+    // the cache must be semantically invisible: a cache-starved cached
+    // run equals the uncached (and dense) run byte for byte, while the
+    // Report surfaces nonzero hit counters on the warm table
+    let dir = tmp_dir("cached-equiv");
+    let mut dense_session = Session::from_spec(spec_with_storage(StoreConfig::dense())).unwrap();
+    dense_session.train().unwrap();
+
+    let mut spec =
+        spec_with_storage(StoreConfig::mmap(dir.join("cached").to_string_lossy().into_owned()));
+    // ~4 KiB against ~14 KiB of tables: capacity-starved, forces the
+    // full hit/miss/evict/write-back cycle
+    spec.storage.cache_mb = Some(0.004);
+    let mut cached_session = Session::from_spec(spec).unwrap();
+    assert_eq!(cached_session.state().entities.backend_name(), "cached");
+    let report = cached_session.train().unwrap();
+
+    assert_eq!(
+        cached_session.state().entities.snapshot(),
+        dense_session.state().entities.snapshot(),
+        "hot-row cache changed the entity table"
+    );
+    assert_eq!(
+        cached_session.state().relations.snapshot(),
+        dense_session.state().relations.snapshot(),
+        "hot-row cache changed the relation table"
+    );
+    // warm-table counters surface in the Report (and its JSON)
+    assert!(report.cache_hits > 0, "a training run re-touches rows: hits expected");
+    assert!(report.cache_misses > 0);
+    assert!(report.cache_evictions > 0, "a starved cache must evict");
+    assert!(report.cache_write_backs > 0, "dirty victims must write back");
+    let j = dglke::util::json::Json::parse(&report.to_json_string()).unwrap();
+    assert!(j.get("cache_hits").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("cache_evictions").unwrap().as_f64().is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cached_mmap_checkpoint_exports_dirty_rows() {
+    // write-back cache + streaming export: the checkpoint must include
+    // rows still dirty in the cache
+    let dir = tmp_dir("cached-ckpt");
+    let mut spec =
+        spec_with_storage(StoreConfig::mmap(dir.join("tables").to_string_lossy().into_owned()));
+    spec.storage.cache_mb = Some(0.05);
+    let mut session = Session::from_spec(spec).unwrap();
+    session.train().unwrap();
+    let ckpt = dir.join("ckpt");
+    session.export_embeddings(&ckpt).unwrap();
+
+    let mut dense_session = Session::from_spec(spec_with_storage(StoreConfig::dense())).unwrap();
+    dense_session.load_checkpoint(&ckpt).unwrap();
+    assert_eq!(
+        dense_session.state().entities.snapshot(),
+        session.state().entities.snapshot()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sharded_store_flush_and_placement() {
     let spec = spec_with_storage(StoreConfig::sharded(4));
     let session = Session::from_spec(spec).unwrap();
