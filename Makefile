@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check check artifacts bench bench-smoke bench-prefetch bench-cache clean
+.PHONY: build test fmt fmt-check check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist clean
 
 build:
 	$(CARGO) build --release
@@ -42,6 +42,12 @@ bench-prefetch:
 # writes BENCH_cache.json (expected: warm gather beats uncached mmap).
 bench-cache:
 	QUICK=1 $(CARGO) bench --bench bench_cache
+
+# Distributed comms: sync vs pipelined vs pipelined+prefetch KVStore
+# client on random vs METIS partitions; writes BENCH_dist.json (expected:
+# pipelined+prefetch cuts per-batch time vs sync on the random partition).
+bench-dist:
+	QUICK=1 $(CARGO) bench --bench bench_dist
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

@@ -1,0 +1,142 @@
+//! Distributed comms benchmark: per-batch critical-path time and remote
+//! traffic for the sync round-trip client vs the pipelined client vs
+//! pipelined + distributed prefetch, on random (remote-heavy) and METIS
+//! (locality-optimized) partitions. Writes `BENCH_dist.json`
+//! (`make bench-dist`).
+//!
+//! Expectation: on the random partition, where a large share of every
+//! batch's pulls cross TCP, pipelined+prefetch comms cut the per-batch
+//! critical-path time vs the sync client — the pull wave fans out to all
+//! servers at once, pushes stop blocking the trainer, and the prefetch
+//! helper moves the whole pull off the critical path. On METIS most
+//! traffic is a shared-memory memcpy, so the gap narrows.
+//!
+//! QUICK=1 shrinks the batch count for smoke runs.
+
+use dglke::dist::{run_distributed, DistConfig, DistStats, PartitionStrategy};
+use dglke::kg::Dataset;
+use dglke::models::step::StepShape;
+use dglke::runtime::BackendKind;
+use dglke::util::json::Json;
+use std::collections::BTreeMap;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn run_once(
+    dataset: &Dataset,
+    partition: PartitionStrategy,
+    pipelined: bool,
+    prefetch: bool,
+    batches: usize,
+    shape: StepShape,
+) -> anyhow::Result<DistStats> {
+    let cfg = DistConfig {
+        backend: BackendKind::Native,
+        shape: Some(shape),
+        machines: 2,
+        trainers_per_machine: 1,
+        servers_per_machine: 1,
+        partition,
+        batches_per_trainer: batches,
+        lr: 0.1,
+        log_every: batches.max(1),
+        pipelined,
+        inflight: 8,
+        prefetch,
+        prefetch_depth: 2,
+        seed: 7,
+        ..Default::default()
+    };
+    let (stats, mut cluster) = run_distributed(dataset, None, &cfg)?;
+    cluster.shutdown();
+    Ok(stats)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    let dataset = Dataset::load("fb15k-syn", 3)?;
+    let shape = StepShape { batch: 256, chunks: 32, neg_k: 16, dim: 32 };
+    let batches = if quick { 40 } else { 150 };
+
+    println!(
+        "dist comms bench: dataset={} entities={} shape=(b={} nc={} k={} d={}) \
+         2 machines x 1 trainer, {} batches/trainer",
+        dataset.name,
+        dataset.n_entities(),
+        shape.batch,
+        shape.chunks,
+        shape.neg_k,
+        shape.dim,
+        batches
+    );
+
+    let modes: [(&str, bool, bool); 3] =
+        [("sync", false, false), ("pipelined", true, false), ("pipelined_prefetch", true, true)];
+    let mut partitions = BTreeMap::new();
+    for strategy in [PartitionStrategy::Random, PartitionStrategy::Metis] {
+        let mut sync_ms = 0.0;
+        let mut mode_objs = BTreeMap::new();
+        for (name, pipelined, prefetch) in modes {
+            let stats = run_once(&dataset, strategy, pipelined, prefetch, batches, shape)?;
+            let batch_ms = stats.wall_secs * 1000.0 / batches as f64;
+            if name == "sync" {
+                sync_ms = batch_ms;
+            }
+            let speedup = if batch_ms > 0.0 { sync_ms / batch_ms } else { 0.0 };
+            println!(
+                "  {:7} {name:18} batch {batch_ms:7.3} ms  speedup {speedup:5.2}x  \
+                 remote {:7.2} MB ({:5.2} MB overlapped)  locality {:.3}",
+                strategy.name(),
+                stats.remote_bytes as f64 / 1e6,
+                stats.remote_overlapped_bytes as f64 / 1e6,
+                stats.locality,
+            );
+            mode_objs.insert(
+                name.to_string(),
+                obj(vec![
+                    ("batch_ms", Json::Num(batch_ms)),
+                    ("speedup_vs_sync", Json::Num(speedup)),
+                    ("remote_mb", Json::Num(stats.remote_bytes as f64 / 1e6)),
+                    (
+                        "remote_overlapped_mb",
+                        Json::Num(stats.remote_overlapped_bytes as f64 / 1e6),
+                    ),
+                    (
+                        "remote_critical_mb",
+                        Json::Num(
+                            stats.remote_bytes.saturating_sub(stats.remote_overlapped_bytes)
+                                as f64
+                                / 1e6,
+                        ),
+                    ),
+                    ("local_mb", Json::Num(stats.local_bytes as f64 / 1e6)),
+                    ("remote_requests", Json::Num(stats.remote_requests as f64)),
+                    ("locality", Json::Num(stats.locality)),
+                ]),
+            );
+        }
+        partitions.insert(strategy.name().to_string(), Json::Obj(mode_objs));
+    }
+
+    let report = obj(vec![
+        ("dataset", Json::Str(dataset.name.clone())),
+        ("entities", Json::Num(dataset.n_entities() as f64)),
+        ("machines", Json::Num(2.0)),
+        ("trainers_per_machine", Json::Num(1.0)),
+        ("batch", Json::Num(shape.batch as f64)),
+        ("neg_k", Json::Num(shape.neg_k as f64)),
+        ("dim", Json::Num(shape.dim as f64)),
+        ("batches", Json::Num(batches as f64)),
+        ("inflight", Json::Num(8.0)),
+        ("partitions", Json::Obj(partitions)),
+    ]);
+    std::fs::write("BENCH_dist.json", report.to_string())?;
+    println!("[wrote BENCH_dist.json]");
+    Ok(())
+}

@@ -25,6 +25,6 @@ pub mod spec;
 pub use report::Report;
 pub use session::{load_default_manifest, resolve_shape, ResolvedShape, Session, SessionBuilder};
 pub use spec::{
-    EvalProtocolSpec, EvalSpec, LossSpec, ParallelMode, PipelineSpec, RunSpec,
+    CommSpec, EvalProtocolSpec, EvalSpec, LossSpec, ParallelMode, PipelineSpec, RunSpec,
     DEFAULT_NATIVE_SHAPE,
 };

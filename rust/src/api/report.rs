@@ -49,6 +49,10 @@ pub struct Report {
     pub local_bytes: u64,
     pub remote_bytes: u64,
     pub remote_requests: u64,
+    /// remote bytes moved off the trainers' critical path (prefetch-helper
+    /// pulls, fire-and-forget pushes); critical-path remote traffic is
+    /// `remote_bytes - remote_overlapped_bytes`
+    pub remote_overlapped_bytes: u64,
     /// eval metrics, when the spec requested evaluation
     pub metrics: Option<Metrics>,
     /// the spec that produced this report (provenance), in JSON form
@@ -90,6 +94,7 @@ impl Report {
             local_bytes: stats.local_bytes,
             remote_bytes: stats.remote_bytes,
             remote_requests: stats.remote_requests,
+            remote_overlapped_bytes: stats.remote_overlapped_bytes,
             ..Default::default()
         }
     }
@@ -141,6 +146,7 @@ impl Report {
             ("local_bytes", Json::Num(self.local_bytes as f64)),
             ("remote_bytes", Json::Num(self.remote_bytes as f64)),
             ("remote_requests", Json::Num(self.remote_requests as f64)),
+            ("remote_overlapped_bytes", Json::Num(self.remote_overlapped_bytes as f64)),
             ("metrics", metrics),
             ("spec", self.spec.clone().unwrap_or(Json::Null)),
         ])
@@ -184,10 +190,13 @@ impl Report {
         }
         if self.mode == "distributed" {
             s.push_str(&format!(
-                "\n  locality {:.3}; traffic local {:.1}MB remote {:.1}MB ({} remote reqs)",
+                "\n  locality {:.3}; traffic local {:.1}MB remote {:.1}MB \
+                 ({:.1}MB overlapped, {:.1}MB critical, {} remote reqs)",
                 self.locality,
                 self.local_bytes as f64 / 1e6,
                 self.remote_bytes as f64 / 1e6,
+                self.remote_overlapped_bytes as f64 / 1e6,
+                self.remote_bytes.saturating_sub(self.remote_overlapped_bytes) as f64 / 1e6,
                 self.remote_requests
             ));
         }
@@ -233,5 +242,30 @@ mod tests {
         let curve = j.get("loss_curve").unwrap().as_arr().unwrap();
         assert_eq!(curve.len(), 2);
         assert!(r.summary().contains("60 batches"));
+    }
+
+    #[test]
+    fn dist_report_surfaces_net_ledger() {
+        let r = Report::from_dist(&DistStats {
+            wall_secs: 2.0,
+            total_batches: 80,
+            locality: 0.75,
+            local_bytes: 4_000_000,
+            remote_bytes: 2_000_000,
+            remote_requests: 160,
+            remote_overlapped_bytes: 1_500_000,
+            ..Default::default()
+        });
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("distributed"));
+        assert_eq!(j.get("local_bytes").unwrap().as_usize(), Some(4_000_000));
+        assert_eq!(j.get("remote_bytes").unwrap().as_usize(), Some(2_000_000));
+        assert_eq!(j.get("remote_requests").unwrap().as_usize(), Some(160));
+        assert_eq!(j.get("remote_overlapped_bytes").unwrap().as_usize(), Some(1_500_000));
+        let s = r.summary();
+        assert!(s.contains("remote 2.0MB"), "{s}");
+        assert!(s.contains("1.5MB overlapped"), "{s}");
+        assert!(s.contains("0.5MB critical"), "{s}");
+        assert!(s.contains("160 remote reqs"), "{s}");
     }
 }

@@ -270,6 +270,10 @@ impl Session {
                     seed: self.spec.seed,
                     log_every: self.spec.log_every,
                     storage: self.spec.storage.clone(),
+                    pipelined: self.spec.comm.pipelined,
+                    inflight: self.spec.comm.inflight,
+                    prefetch: self.spec.pipeline.prefetch,
+                    prefetch_depth: self.spec.pipeline.depth,
                 };
                 let (stats, mut cluster) =
                     run_distributed(&self.dataset, self.manifest.as_ref(), &cfg)?;
@@ -543,7 +547,9 @@ impl SessionBuilder {
     }
 
     /// Overlap next-batch sample+gather with compute (§3.5). Helps when
-    /// gather latency is visible (mmap/sharded storage); a wash on dense.
+    /// gather latency is visible — mmap/sharded storage on one machine,
+    /// and *especially* distributed trainers, whose gather is a KVStore
+    /// network pull; a wash on dense in-memory tables.
     pub fn prefetch(mut self, on: bool) -> Self {
         self.spec.pipeline.prefetch = on;
         self
@@ -552,6 +558,20 @@ impl SessionBuilder {
     /// Prefetch buffers in flight (>= 2; also the staleness bound).
     pub fn prefetch_depth(mut self, depth: usize) -> Self {
         self.spec.pipeline.depth = depth;
+        self
+    }
+
+    /// Use the async/pipelined KVStore client in distributed mode (§3.6):
+    /// concurrent pull fan-out across servers, pipelined tagged frames,
+    /// fire-and-forget pushes behind a drain barrier.
+    pub fn comm_pipelined(mut self, on: bool) -> Self {
+        self.spec.comm.pipelined = on;
+        self
+    }
+
+    /// In-flight frames per remote KVStore connection (>= 1).
+    pub fn comm_inflight(mut self, inflight: usize) -> Self {
+        self.spec.comm.inflight = inflight;
         self
     }
 

@@ -22,9 +22,14 @@
 //!   "neg_degree_frac": 0.0,                  // §3.3 degree-based negatives
 //!   "async_update": true,                    // §3.5 (single-machine only)
 //!   "pipeline": {"prefetch": false,          // §3.5 overlap next-batch
-//!                "depth": 2},                //   sample+gather with compute;
-//!                                            //   depth = buffers in flight
-//!                                            //   (>= 2, double buffering)
+//!                "depth": 2},                //   sample+gather (single) or
+//!                                            //   sample+pull (distributed)
+//!                                            //   with compute; depth =
+//!                                            //   buffers in flight (>= 2)
+//!   "comm": {"pipelined": false,             // §3.6 async KVStore client:
+//!            "inflight": 8},                 //   concurrent pull fan-out,
+//!                                            //   pipelined frames, fire-and-
+//!                                            //   forget pushes (distributed)
 //!   "relation_partition": true,              // §3.4 (single-machine only)
 //!   "sync_interval": 500,                    // §3.6 barrier period
 //!   "log_every": 50,
@@ -100,6 +105,27 @@ pub struct PipelineSpec {
 impl Default for PipelineSpec {
     fn default() -> Self {
         PipelineSpec { prefetch: false, depth: 2 }
+    }
+}
+
+/// Distributed KVStore comms configuration (§3.6). `pipelined` swaps the
+/// synchronous per-round-trip client for the async one: per-server I/O
+/// worker threads fan a batch's pull out to all owning servers
+/// concurrently, up to `inflight` request-tagged frames ride each
+/// connection, and gradient pushes are fire-and-forget behind a drain
+/// barrier at epoch/run end. Single-trainer runs are byte-identical
+/// either way (per-connection frame ordering); see
+/// `rust/tests/dist_comm_tests.rs`. Ignored in single-machine mode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommSpec {
+    pub pipelined: bool,
+    /// in-flight frames per remote connection (>= 1)
+    pub inflight: usize,
+}
+
+impl Default for CommSpec {
+    fn default() -> Self {
+        CommSpec { pipelined: false, inflight: 8 }
     }
 }
 
@@ -180,9 +206,12 @@ pub struct RunSpec {
     pub init_scale: f32,
     pub neg_degree_frac: f64,
     pub async_update: bool,
-    /// async prefetch pipeline (single-machine only; distributed trainers
-    /// gather from the KVStore and ignore it)
+    /// async prefetch pipeline: overlap next-batch sample+gather (single
+    /// machine) or sample+KVStore-pull (distributed) with compute
     pub pipeline: PipelineSpec,
+    /// distributed KVStore comms (async/pipelined client); ignored in
+    /// single-machine mode
+    pub comm: CommSpec,
     pub relation_partition: bool,
     pub sync_interval: usize,
     pub log_every: usize,
@@ -213,6 +242,7 @@ impl Default for RunSpec {
             neg_degree_frac: 0.0,
             async_update: true,
             pipeline: PipelineSpec::default(),
+            comm: CommSpec::default(),
             relation_partition: true,
             sync_interval: 500,
             log_every: 50,
@@ -371,6 +401,13 @@ impl RunSpec {
                     ("depth", Json::Num(self.pipeline.depth as f64)),
                 ]),
             ),
+            (
+                "comm",
+                obj(vec![
+                    ("pipelined", Json::Bool(self.comm.pipelined)),
+                    ("inflight", Json::Num(self.comm.inflight as f64)),
+                ]),
+            ),
             ("relation_partition", Json::Bool(self.relation_partition)),
             ("sync_interval", Json::Num(self.sync_interval as f64)),
             ("log_every", Json::Num(self.log_every as f64)),
@@ -478,6 +515,14 @@ impl RunSpec {
             },
         };
 
+        let comm = match j.get("comm") {
+            None | Some(Json::Null) => CommSpec::default(),
+            Some(c) => CommSpec {
+                pipelined: get_bool(c, "pipelined", CommSpec::default().pipelined)?,
+                inflight: get_usize(c, "inflight", CommSpec::default().inflight)?,
+            },
+        };
+
         let storage = match j.get("storage") {
             None | Some(Json::Null) => StoreConfig::default(),
             Some(s) => {
@@ -524,6 +569,7 @@ impl RunSpec {
             neg_degree_frac: get_f64(j, "neg_degree_frac", d.neg_degree_frac)?,
             async_update: get_bool(j, "async_update", d.async_update)?,
             pipeline,
+            comm,
             relation_partition: get_bool(j, "relation_partition", d.relation_partition)?,
             sync_interval: get_usize(j, "sync_interval", d.sync_interval)?,
             log_every: get_usize(j, "log_every", d.log_every)?,
@@ -578,6 +624,12 @@ impl RunSpec {
              more than 16 only grows staleness), got {}",
             self.pipeline.depth
         );
+        anyhow::ensure!(
+            (1..=64).contains(&self.comm.inflight),
+            "comm.inflight must be in [1, 64] (frames in flight per connection; \
+             more than 64 only grows memory and ack latency), got {}",
+            self.comm.inflight
+        );
         self.storage.validate()?;
         anyhow::ensure!(
             self.seed <= (1u64 << 53),
@@ -629,6 +681,7 @@ mod tests {
             neg_degree_frac: 0.25,
             async_update: false,
             pipeline: PipelineSpec { prefetch: true, depth: 3 },
+            comm: CommSpec { pipelined: true, inflight: 16 },
             relation_partition: false,
             sync_interval: 64,
             log_every: 5,
@@ -705,6 +758,34 @@ mod tests {
         spec.pipeline.depth = 17;
         assert!(spec.validate().is_err(), "depth 17 exceeds the staleness cap");
         spec.pipeline.depth = 2;
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn comm_spec_parses_and_validates() {
+        // absent → sync client, inflight 8
+        let spec = RunSpec::from_json_str("{}").unwrap();
+        assert_eq!(spec.comm, CommSpec::default());
+        assert!(!spec.comm.pipelined);
+        // partial object fills defaults
+        let spec = RunSpec::from_json_str(r#"{"comm": {"pipelined": true}}"#).unwrap();
+        assert_eq!(spec.comm, CommSpec { pipelined: true, inflight: 8 });
+        // explicit inflight round-trips
+        let spec =
+            RunSpec::from_json_str(r#"{"comm": {"pipelined": true, "inflight": 4}}"#).unwrap();
+        assert_eq!(spec.comm.inflight, 4);
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        // wrong types rejected
+        assert!(RunSpec::from_json_str(r#"{"comm": {"pipelined": "yes"}}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"comm": {"inflight": "deep"}}"#).is_err());
+        // inflight bounds enforced by validate
+        let mut spec = RunSpec::default();
+        spec.comm.inflight = 0;
+        assert!(spec.validate().is_err(), "a zero window cannot make progress");
+        spec.comm.inflight = 65;
+        assert!(spec.validate().is_err(), "inflight past the cap");
+        spec.comm.inflight = 1;
         assert!(spec.validate().is_ok());
     }
 

@@ -17,6 +17,7 @@
 //!    server applies the optimizer (communication/optimizer overlap).
 
 use crate::kg::Dataset;
+use crate::kvstore::comm::{patch_batch, pull_batch, CommHandle, DistPrefetcher};
 use crate::kvstore::{KvCluster, TableId};
 use crate::models::step::StepShape;
 use crate::models::{LossCfg, ModelKind};
@@ -27,6 +28,7 @@ use crate::store::SparseGrads;
 use crate::train::batch::{split_grads, BatchBuffers};
 use crate::util::timer::Timer;
 use anyhow::{bail, Result};
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// How entities (and with them, triplets) are placed on machines.
@@ -80,6 +82,17 @@ pub struct DistConfig {
     pub log_every: usize,
     /// storage backend for the per-server embedding shards
     pub storage: crate::store::StoreConfig,
+    /// use the async KVStore client (§3.6 overlap): per-server I/O worker
+    /// threads, concurrent pull fan-out, pipelined tagged frames, and
+    /// fire-and-forget pushes behind a drain barrier
+    pub pipelined: bool,
+    /// in-flight frames per remote connection for the async client
+    pub inflight: usize,
+    /// pull batch N+1 through a helper thread while batch N computes —
+    /// the PR-3 prefetch pipeline extended to the network gather
+    pub prefetch: bool,
+    /// prefetch buffers in flight (>= 2; also the staleness bound)
+    pub prefetch_depth: usize,
 }
 
 impl Default for DistConfig {
@@ -102,6 +115,10 @@ impl Default for DistConfig {
             seed: 0,
             log_every: 50,
             storage: crate::store::StoreConfig::default(),
+            pipelined: false,
+            inflight: 8,
+            prefetch: false,
+            prefetch_depth: 2,
         }
     }
 }
@@ -119,6 +136,10 @@ pub struct DistStats {
     /// bytes that crossed TCP
     pub remote_bytes: u64,
     pub remote_requests: u64,
+    /// remote bytes moved off the trainers' critical path (prefetch-helper
+    /// pulls, fire-and-forget pushes); critical-path remote traffic is
+    /// `remote_bytes - remote_overlapped_bytes`
+    pub remote_overlapped_bytes: u64,
     pub loss_curve: Vec<(u64, f32)>,
     pub mean_loss_tail: f32,
 }
@@ -149,9 +170,10 @@ fn resolve_dims(
     }
 }
 
-struct TrainerOut {
-    losses: Vec<(u64, f32)>,
-    batches: u64,
+/// Per-trainer result of [`run_trainer`].
+pub struct TrainerOut {
+    pub losses: Vec<(u64, f32)>,
+    pub batches: u64,
 }
 
 /// Run distributed training. Returns stats plus the still-running cluster so
@@ -165,6 +187,7 @@ pub fn run_distributed(
     anyhow::ensure!(cfg.machines >= 1, "machines must be >= 1");
     anyhow::ensure!(cfg.trainers_per_machine >= 1, "trainers_per_machine must be >= 1");
     anyhow::ensure!(cfg.servers_per_machine >= 1, "servers_per_machine must be >= 1");
+    anyhow::ensure!(cfg.inflight >= 1, "inflight must be >= 1");
 
     let partition = match cfg.partition {
         PartitionStrategy::Metis => {
@@ -216,13 +239,11 @@ pub fn run_distributed(
     let outs: Vec<Result<TrainerOut>> = crate::util::threadpool::scoped_map(n_trainers, |t| {
         let machine = t / cfg.trainers_per_machine;
         let lane = t % cfg.trainers_per_machine;
-        trainer_loop(
+        run_trainer(
             dataset,
             manifest,
             cfg,
             &cluster,
-            shape_override,
-            rel_dim,
             machine,
             lane,
             &machine_triplets[machine],
@@ -261,6 +282,7 @@ pub fn run_distributed(
             .ledger
             .remote_requests
             .load(std::sync::atomic::Ordering::Relaxed),
+        remote_overlapped_bytes: cluster.ledger.overlapped(),
         mean_loss_tail: if tail.is_empty() {
             f32::NAN
         } else {
@@ -271,20 +293,41 @@ pub fn run_distributed(
     Ok((stats, cluster))
 }
 
+/// Build a trainer's KVStore handle under the config's comm mode.
+fn make_comm(
+    cluster: &KvCluster,
+    machine: usize,
+    cfg: &DistConfig,
+    overlap_pulls: bool,
+) -> Result<Box<dyn CommHandle>> {
+    if cfg.pipelined {
+        Ok(Box::new(cluster.async_client(machine, cfg.inflight, overlap_pulls)?))
+    } else {
+        let mut client = cluster.client(machine)?;
+        client.set_overlap_pulls(overlap_pulls);
+        Ok(Box::new(client))
+    }
+}
+
+/// Drive one trainer over an existing cluster. Public because the
+/// async↔sync equivalence tests need a *single* trainer against a
+/// multi-machine cluster — a shape `DistConfig` cannot express (its
+/// trainer count is per machine). `run_distributed` calls this once per
+/// trainer thread. Ends with a [`CommHandle::drain`] barrier, so no
+/// gradient is left in flight when it returns.
 #[allow(clippy::too_many_arguments)]
-fn trainer_loop(
+pub fn run_trainer(
     dataset: &Dataset,
     manifest: Option<&Manifest>,
     cfg: &DistConfig,
     cluster: &KvCluster,
-    shape_override: Option<StepShape>,
-    rel_dim: usize,
     machine: usize,
     lane: usize,
     machine_idx: &[usize],
     local_pool: Option<Arc<Vec<u32>>>,
     trainer_id: usize,
 ) -> Result<TrainerOut> {
+    let (shape_override, _, rel_dim) = resolve_dims(cfg, manifest)?;
     // backend per trainer thread (the PJRT client is !Send)
     let backend = TrainBackend::create(
         cfg.backend,
@@ -295,7 +338,7 @@ fn trainer_loop(
         shape_override,
     )?;
     let shape = backend.shape();
-    let mut client = cluster.client(machine)?;
+    let mut comm = make_comm(cluster, machine, cfg, false)?;
 
     // strided split of the machine's triplets among its trainer lanes
     let mut my_idx: Vec<u32> = machine_idx
@@ -307,8 +350,8 @@ fn trainer_loop(
     if my_idx.is_empty() {
         my_idx = machine_idx.iter().map(|&i| i as u32).collect();
     }
-    let mut pos = PositiveSampler::over_indices(my_idx, cfg.seed ^ (trainer_id as u64 + 1));
-    let mut neg = NegativeSampler::new(
+    let pos = PositiveSampler::over_indices(my_idx, cfg.seed ^ (trainer_id as u64 + 1));
+    let neg = NegativeSampler::new(
         NegativeConfig {
             k: shape.neg_k,
             chunk_size: shape.chunk_size(),
@@ -319,6 +362,36 @@ fn trainer_loop(
         cfg.seed ^ (0xD157 + trainer_id as u64),
     );
 
+    let out = if cfg.prefetch {
+        run_trainer_pipelined(
+            dataset, cfg, cluster, &backend, shape, rel_dim, machine, &mut *comm, pos, neg,
+            trainer_id,
+        )?
+    } else {
+        run_trainer_plain(dataset, cfg, &backend, shape, rel_dim, &mut *comm, pos, neg, trainer_id)?
+    };
+
+    // run-end barrier: every fire-and-forget push must be applied before
+    // the caller dumps/evaluates the cluster
+    comm.drain()?;
+    Ok(out)
+}
+
+/// The sequential trainer loop: sample → pull → compute → push, all on
+/// this thread. Under the async client the pull is still a concurrent
+/// wave across servers and the pushes are fire-and-forget.
+#[allow(clippy::too_many_arguments)]
+fn run_trainer_plain(
+    dataset: &Dataset,
+    cfg: &DistConfig,
+    backend: &TrainBackend,
+    shape: StepShape,
+    rel_dim: usize,
+    comm: &mut dyn CommHandle,
+    mut pos: PositiveSampler,
+    mut neg: NegativeSampler,
+    trainer_id: usize,
+) -> Result<TrainerOut> {
     let mut buf = BatchBuffers::new(&shape, rel_dim);
     let mut idx_buf: Vec<u32> = Vec::with_capacity(shape.batch);
     let mut losses = Vec::new();
@@ -328,12 +401,8 @@ fn trainer_loop(
         pos.next_batch(shape.batch, &mut idx_buf);
         let batch = neg.assemble(&dataset.train, &idx_buf);
 
-        // (2) pull embeddings through the KVStore
-        client.pull(TableId::Entities, &batch.heads, shape.dim, &mut buf.h)?;
-        client.pull(TableId::Relations, &batch.rels, rel_dim, &mut buf.r)?;
-        client.pull(TableId::Entities, &batch.tails, shape.dim, &mut buf.t)?;
-        client.pull(TableId::Entities, &batch.neg_heads, shape.dim, &mut buf.neg_h)?;
-        client.pull(TableId::Entities, &batch.neg_tails, shape.dim, &mut buf.neg_t)?;
+        // (2) pull embeddings through the KVStore, one fan-out wave
+        pull_batch(comm, &batch, &mut buf, shape.dim, rel_dim)?;
 
         // (3) fwd/bwd
         let grads = backend.step(&buf.inputs())?;
@@ -344,10 +413,131 @@ fn trainer_loop(
         // (4) push sparse gradients; the owning server applies AdaGrad
         let (ent_g, rel_g): (SparseGrads, SparseGrads) =
             split_grads(&batch, &grads, shape.dim, rel_dim);
-        client.push(TableId::Entities, &ent_g.ids, shape.dim, &ent_g.rows)?;
-        client.push(TableId::Relations, &rel_g.ids, rel_dim, &rel_g.rows)?;
+        comm.push(TableId::Entities, &ent_g.ids, shape.dim, &ent_g.rows)?;
+        comm.push(TableId::Relations, &rel_g.ids, rel_dim, &rel_g.rows)?;
     }
 
+    Ok(TrainerOut { losses, batches: cfg.batches_per_trainer as u64 })
+}
+
+/// Unique ids one step pushed — the pipelined loop keeps a window of
+/// these so it can repair prefetched pulls that raced those pushes.
+struct PushedIds {
+    step: u64,
+    ents: std::collections::HashSet<u64>,
+    rels: std::collections::HashSet<u64>,
+}
+
+/// Advance the applied-push stamp past every step whose pushes have been
+/// acked (applied server-side). The prefetch helper reads `applied` to
+/// stamp its pulls: a stamp `S` must prove all pushes of steps `< S` were
+/// visible to the pull, which is exactly what the per-connection mark
+/// test guarantees (a global completed count would not — a fast link's
+/// completions could stand in for a lagging link's un-acked push).
+fn advance_applied(
+    marks: &mut VecDeque<(u64, Vec<u64>)>,
+    comm: &dyn CommHandle,
+    applied: &std::sync::atomic::AtomicU64,
+) {
+    while let Some((step, mark)) = marks.front() {
+        if comm.pushes_complete(mark) {
+            applied.store(step + 1, std::sync::atomic::Ordering::Release);
+            marks.pop_front();
+        } else {
+            break;
+        }
+    }
+}
+
+/// The two-stage distributed pipeline: a helper thread (with its own
+/// KVStore handle) samples and pulls batch N+1 while this thread computes
+/// batch N, mirroring `train::worker::run_pipelined` with the gather
+/// replaced by a network pull. Rows this trainer pushed at or after a
+/// batch's stamp are re-pulled on the trainer's *own* handle (ordered
+/// after its pushes per connection) before compute — which keeps a
+/// 1-trainer run byte-identical to the sequential loop; with several
+/// trainers, staleness is bounded by the pipeline depth, the same Hogwild
+/// contract as single-machine async updates.
+#[allow(clippy::too_many_arguments)]
+fn run_trainer_pipelined(
+    dataset: &Dataset,
+    cfg: &DistConfig,
+    cluster: &KvCluster,
+    backend: &TrainBackend,
+    shape: StepShape,
+    rel_dim: usize,
+    machine: usize,
+    comm: &mut dyn CommHandle,
+    pos: PositiveSampler,
+    neg: NegativeSampler,
+    trainer_id: usize,
+) -> Result<TrainerOut> {
+    let helper_comm = make_comm(cluster, machine, cfg, true)?;
+    let depth = cfg.prefetch_depth.max(2);
+    let applied = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut losses = Vec::new();
+    std::thread::scope(|s| -> Result<()> {
+        let mut pf = DistPrefetcher::spawn_scoped(
+            s,
+            pos,
+            neg,
+            &dataset.train,
+            helper_comm,
+            shape,
+            rel_dim,
+            depth,
+            applied.clone(),
+        );
+        // ids pushed per recent step, newest at the back; pruned as the
+        // stamp advances (stamps are monotone), so it always covers
+        // exactly the steps a live prefetched pull can have missed
+        let mut pushed: VecDeque<PushedIds> = VecDeque::new();
+        // (step, per-link push mark after that step) awaiting acks
+        let mut marks: VecDeque<(u64, Vec<u64>)> = VecDeque::new();
+        let mut ent_dirty: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        let mut rel_dirty: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for step in 0..cfg.batches_per_trainer as u64 {
+            // fold in acks that arrived while we were computing
+            advance_applied(&mut marks, &*comm, &applied);
+
+            // (1)+(2) arrive prefetched; blocking here is the pipeline stall
+            let mut pb = pf.recv()?;
+
+            // (2b) re-pull rows pushed at or after the pull's stamp
+            pushed.retain(|p| p.step >= pb.gathered_at);
+            ent_dirty.clear();
+            rel_dirty.clear();
+            for p in &pushed {
+                ent_dirty.extend(p.ents.iter().copied());
+                rel_dirty.extend(p.rels.iter().copied());
+            }
+            patch_batch(comm, &pb.batch, &mut pb.buf, shape.dim, rel_dim, &ent_dirty, &rel_dirty)?;
+
+            // (3) fwd/bwd
+            let grads = backend.step(&pb.buf.inputs())?;
+            if trainer_id == 0 && step % cfg.log_every.max(1) as u64 == 0 {
+                losses.push((step, grads.loss));
+            }
+
+            // (4) push sparse gradients
+            let (ent_g, rel_g): (SparseGrads, SparseGrads) =
+                split_grads(&pb.batch, &grads, shape.dim, rel_dim);
+            comm.push(TableId::Entities, &ent_g.ids, shape.dim, &ent_g.rows)?;
+            comm.push(TableId::Relations, &rel_g.ids, rel_dim, &rel_g.rows)?;
+            marks.push_back((step, comm.push_mark()));
+            // synchronous clients complete pushes inline — advance now so
+            // the helper's next stamp is as fresh as possible
+            advance_applied(&mut marks, &*comm, &applied);
+            pushed.push_back(PushedIds {
+                step,
+                ents: ent_g.ids.into_iter().collect(),
+                rels: rel_g.ids.into_iter().collect(),
+            });
+            pf.recycle(pb);
+        }
+        pf.finish();
+        Ok(())
+    })?;
     Ok(TrainerOut { losses, batches: cfg.batches_per_trainer as u64 })
 }
 
@@ -400,6 +590,43 @@ mod tests {
             metis.remote_bytes,
             random.remote_bytes
         );
+    }
+
+    #[test]
+    fn pipelined_comm_trains_and_bills_overlap() {
+        let dataset = Dataset::load("tiny", 14).unwrap();
+        let cfg = DistConfig { pipelined: true, inflight: 4, ..tiny_cfg() };
+        let (stats, mut cluster) = run_distributed(&dataset, None, &cfg).unwrap();
+        cluster.shutdown();
+        assert_eq!(stats.total_batches, 2 * 2 * 20);
+        let first = stats.loss_curve.first().unwrap().1;
+        assert!(stats.mean_loss_tail < first, "{} -> {}", first, stats.mean_loss_tail);
+        // fire-and-forget pushes are off the critical path
+        assert!(stats.remote_overlapped_bytes > 0);
+        assert!(stats.remote_overlapped_bytes <= stats.remote_bytes);
+    }
+
+    #[test]
+    fn distributed_prefetch_trains() {
+        let dataset = Dataset::load("tiny", 15).unwrap();
+        let cfg = DistConfig { pipelined: true, prefetch: true, prefetch_depth: 2, ..tiny_cfg() };
+        let (stats, mut cluster) = run_distributed(&dataset, None, &cfg).unwrap();
+        cluster.shutdown();
+        assert_eq!(stats.total_batches, 2 * 2 * 20);
+        let first = stats.loss_curve.first().unwrap().1;
+        assert!(stats.mean_loss_tail < first, "{} -> {}", first, stats.mean_loss_tail);
+        // helper pulls + async pushes both overlap
+        assert!(stats.remote_overlapped_bytes > 0);
+    }
+
+    #[test]
+    fn sync_client_bills_no_overlap() {
+        let dataset = Dataset::load("tiny", 16).unwrap();
+        let cfg = DistConfig { batches_per_trainer: 5, ..tiny_cfg() };
+        let (stats, mut cluster) = run_distributed(&dataset, None, &cfg).unwrap();
+        cluster.shutdown();
+        assert!(stats.remote_bytes > 0);
+        assert_eq!(stats.remote_overlapped_bytes, 0);
     }
 
     #[test]

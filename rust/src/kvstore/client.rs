@@ -17,11 +17,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Remote/local traffic counters shared across a run's clients.
+///
+/// `remote_bytes` is every byte that crossed TCP; `overlapped_bytes` is
+/// the subset moved *off the trainer's critical path* — prefetch-helper
+/// pulls running under the previous batch's compute, and fire-and-forget
+/// pushes drained by the async client's I/O threads. The critical-path
+/// remote traffic of a run is `remote_bytes - overlapped_bytes`.
 #[derive(Debug, Default)]
 pub struct NetLedger {
     pub local_bytes: AtomicU64,
     pub remote_bytes: AtomicU64,
     pub remote_requests: AtomicU64,
+    pub overlapped_bytes: AtomicU64,
 }
 
 impl NetLedger {
@@ -35,6 +42,10 @@ impl NetLedger {
 
     pub fn remote(&self) -> u64 {
         self.remote_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn overlapped(&self) -> u64 {
+        self.overlapped_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -54,6 +65,9 @@ pub struct KvClient {
     /// scratch: per-server slot lists
     pull_slots: Vec<Vec<u64>>,
     pull_back: Vec<Vec<usize>>, // positions into the unique-id list
+    /// bill remote pull traffic as overlapped (set on prefetch-helper
+    /// clients, whose pulls run under the trainer's compute)
+    overlap_pulls: bool,
 }
 
 impl KvClient {
@@ -85,20 +99,18 @@ impl KvClient {
             ledger,
             pull_slots: vec![Vec::new(); n],
             pull_back: vec![Vec::new(); n],
+            overlap_pulls: false,
         })
     }
 
+    /// Bill this client's remote pull traffic as overlapped — for clients
+    /// owned by a prefetch helper, whose pulls run off the critical path.
+    pub fn set_overlap_pulls(&mut self, on: bool) {
+        self.overlap_pulls = on;
+    }
+
     fn server_and_slot(&self, table: TableId, id: u64) -> (usize, u64) {
-        match table {
-            TableId::Entities => (
-                self.placement.ent_server[id as usize] as usize,
-                self.placement.ent_slot[id as usize] as u64,
-            ),
-            TableId::Relations => (
-                self.placement.rel_server[id as usize] as usize,
-                self.placement.rel_slot[id as usize] as u64,
-            ),
-        }
+        self.placement.server_and_slot(table, id)
     }
 
     /// Pull rows for (possibly duplicated) `ids` into `out[ids.len(), dim]`.
@@ -143,6 +155,9 @@ impl KvClient {
                 Link::Remote(stream) => {
                     self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
                     self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    if self.overlap_pulls {
+                        self.ledger.overlapped_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    }
                     write_frame(stream, OP_PULL, &encode_pull(table, &slots))?;
                     let (op, payload) = read_frame(stream)?;
                     if op != OP_OK {

@@ -1,0 +1,1013 @@
+//! Asynchronous, pipelined KVStore communication (paper §3.6; PBG's
+//! background parameter exchange).
+//!
+//! The synchronous [`KvClient`] serializes every remote operation into a
+//! blocking TCP round trip: a batch's five pull sections hit each owning
+//! server one at a time, and every gradient push stalls the trainer until
+//! the server acks. This module is the asynchronous counterpart:
+//!
+//! * [`CommHandle`] — the trait both clients implement, so the
+//!   distributed trainer loop is written once against pulls, pushes, a
+//!   [`CommHandle::drain`] barrier, and push-progress marks;
+//! * [`AsyncKvClient`] — per-server I/O worker threads (a writer/reader
+//!   pair per remote connection) behind request-tagged frames
+//!   (`OP_TPULL`/`OP_TPUSH`/`OP_TOK`). A pull wave fans out to all owning
+//!   servers before collecting any response; up to `inflight` frames ride
+//!   each connection concurrently; pushes are fire-and-forget under that
+//!   bounded window, with `drain()` as the explicit epoch/run-end barrier
+//!   guaranteeing no gradient is left in flight;
+//! * [`DistPrefetcher`] — the distributed extension of the PR-3 prefetch
+//!   pipeline ([`crate::train::prefetch`]): a helper thread owning cloned
+//!   sampler cursors and its *own* comm handle pulls batch N+1's rows
+//!   while the trainer computes batch N, stamping each batch with the
+//!   trainer's applied-push counter so dirtied rows can be re-pulled
+//!   (patched) before compute.
+//!
+//! # Ordering and exactness
+//!
+//! Per remote server, one client owns one connection and its writer
+//! thread writes frames in submission order; the server applies them in
+//! frame order. A pull submitted after a push on the same handle is
+//! therefore always answered with the pushed state — which is what makes
+//! a *single-trainer* run under the async client byte-identical to the
+//! sequential client, and what makes patch re-pulls (issued on the
+//! trainer's own handle, after its pushes) exact. The prefetch helper
+//! pulls on a separate handle and may race the trainer's pushes; its
+//! batches carry an applied-push stamp, and the trainer re-pulls every
+//! row it pushed at or after that stamp. `applied` only advances past a
+//! step once that step's pushes are *acked* (applied server-side), so a
+//! stamp `S` proves the helper's pull observed all pushes of steps `< S`.
+//! See `rust/tests/dist_comm_tests.rs` for the equivalence matrix.
+
+use super::client::{KvClient, NetLedger};
+use super::placement::Placement;
+use super::protocol::*;
+use super::server::ServerState;
+use crate::kg::TripletStore;
+use crate::models::step::StepShape;
+use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
+use crate::train::batch::BatchBuffers;
+use crate::util::bytes::Reader;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{JoinHandle, Scope, ScopedJoinHandle};
+
+/// One pull request of a wave: gather rows of `ids` (duplicates allowed)
+/// into `out[ids.len(), dim]`.
+pub struct PullReq<'a> {
+    pub table: TableId,
+    pub ids: &'a [u64],
+    pub dim: usize,
+    pub out: &'a mut [f32],
+}
+
+/// What a distributed trainer needs from its KVStore client — implemented
+/// by the synchronous [`KvClient`] and the pipelined [`AsyncKvClient`],
+/// so `dist::run_trainer` is written once.
+pub trait CommHandle: Send {
+    /// Pull rows for (possibly duplicated) `ids` into `out[ids.len(), dim]`.
+    fn pull(&mut self, table: TableId, ids: &[u64], dim: usize, out: &mut [f32]) -> Result<()>;
+
+    /// Issue several pulls as one wave. The async client dispatches every
+    /// request to every owning server before collecting any response
+    /// (cross-server fan-out + per-connection pipelining); the sync
+    /// client runs them in order.
+    fn pull_all(&mut self, reqs: &mut [PullReq<'_>]) -> Result<()>;
+
+    /// Push (already accumulated) gradient rows; the owning server
+    /// applies AdaGrad. The async client returns as soon as the frames
+    /// are queued (bounded by its in-flight window).
+    fn push(&mut self, table: TableId, ids: &[u64], dim: usize, rows: &[f32]) -> Result<()>;
+
+    /// Block until every previously submitted push has been applied and
+    /// acked server-side. The epoch/run-end barrier: after `drain()`, no
+    /// gradient is in flight.
+    fn drain(&mut self) -> Result<()>;
+
+    /// Opaque completion mark: the per-connection submitted-push counts
+    /// as of this call. Hand it back to [`CommHandle::pushes_complete`]
+    /// to ask whether everything submitted before the mark has been
+    /// applied server-side.
+    fn push_mark(&self) -> Vec<u64>;
+
+    /// True once every push submitted before `mark` has been acked
+    /// (applied server-side). Acks are FIFO *per connection*, so the
+    /// comparison is per-connection counts — a single global completed
+    /// count would be unsound: a fast link's completions could mask a
+    /// lagging link's un-acked push. The pipelined trainer uses this to
+    /// advance the applied-push stamp the prefetch helper reads.
+    fn pushes_complete(&self, mark: &[u64]) -> bool;
+}
+
+impl CommHandle for KvClient {
+    fn pull(&mut self, table: TableId, ids: &[u64], dim: usize, out: &mut [f32]) -> Result<()> {
+        KvClient::pull(self, table, ids, dim, out)
+    }
+
+    fn pull_all(&mut self, reqs: &mut [PullReq<'_>]) -> Result<()> {
+        for r in reqs {
+            KvClient::pull(self, r.table, r.ids, r.dim, r.out)?;
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, table: TableId, ids: &[u64], dim: usize, rows: &[f32]) -> Result<()> {
+        debug_assert_eq!(rows.len(), ids.len() * dim);
+        KvClient::push(self, table, ids, dim, rows)
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        Ok(()) // every push already completed synchronously
+    }
+
+    fn push_mark(&self) -> Vec<u64> {
+        Vec::new() // nothing is ever in flight
+    }
+
+    fn pushes_complete(&self, _mark: &[u64]) -> bool {
+        true
+    }
+}
+
+/// A request handed to a remote link's writer thread.
+enum Req {
+    Pull { table: TableId, slots: Vec<u64>, reply: SyncSender<PullResp> },
+    Push { table: TableId, slots: Vec<u64>, rows: Vec<f32> },
+    Drain { ack: SyncSender<()> },
+}
+
+/// Pull responses cross a channel; errors travel as strings (the vendored
+/// anyhow error is Send, but a plain string keeps the worker side free of
+/// error-chain plumbing).
+type PullResp = std::result::Result<Vec<f32>, String>;
+
+/// Window of written-but-unanswered frames, shared by a link's writer
+/// (pushes back, bounded at `inflight`) and reader (pops front).
+struct PendQueue {
+    q: VecDeque<Pending>,
+    /// writer hung up; reader exits once the queue empties
+    closed: bool,
+    /// I/O failed; both sides bail out and pending replies error
+    failed: bool,
+}
+
+enum Pending {
+    Pull { tag: u32, reply: SyncSender<PullResp> },
+    Push { tag: u32 },
+    /// barrier marker: everything queued before it has been answered
+    Drain { ack: SyncSender<()> },
+    /// final marker: the writer sent OP_STOP; read the ack and exit
+    Stop,
+}
+
+struct LinkShared {
+    pq: Mutex<PendQueue>,
+    nonempty: Condvar,
+    space: Condvar,
+}
+
+impl LinkShared {
+    fn fail(&self) {
+        let mut pq = self.pq.lock().unwrap();
+        pq.failed = true;
+        // deliver the failure to everything still waiting
+        while let Some(p) = pq.q.pop_front() {
+            match p {
+                Pending::Pull { reply, .. } => {
+                    let _ = reply.send(Err("kvstore connection failed".into()));
+                }
+                // dropping the ack sender makes the waiting drain()/recv fail
+                Pending::Drain { .. } | Pending::Push { .. } | Pending::Stop => {}
+            }
+        }
+        drop(pq);
+        self.nonempty.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// One remote server connection: writer + reader thread pair.
+struct RemoteLink {
+    req_tx: Option<SyncSender<Req>>,
+    writer: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl RemoteLink {
+    fn send(&self, req: Req) -> Result<()> {
+        self.req_tx
+            .as_ref()
+            .expect("link already shut down")
+            .send(req)
+            .map_err(|_| anyhow!("kvstore I/O worker terminated"))
+    }
+}
+
+enum AsyncLink {
+    /// same machine: direct shared-memory access (as in [`KvClient`])
+    Local(Arc<ServerState>),
+    Remote(RemoteLink),
+}
+
+/// Pipelined, fan-out KVStore client: one writer/reader thread pair per
+/// remote server, request-tagged frames, a bounded in-flight window per
+/// connection, fire-and-forget pushes, and an explicit [`drain`] barrier.
+///
+/// [`drain`]: CommHandle::drain
+pub struct AsyncKvClient {
+    pub machine: usize,
+    placement: Arc<Placement>,
+    links: Vec<AsyncLink>,
+    ledger: Arc<NetLedger>,
+    /// bill this client's remote *pull* traffic as overlapped — set for
+    /// the prefetch helper, whose pulls run under the trainer's compute
+    overlap_pulls: bool,
+    /// pushes applied inline on local shards (complete by construction)
+    local_pushes: u64,
+    /// per-link push ops submitted (remote links only; local stay 0)
+    submitted_per_link: Vec<u64>,
+    /// per-link push acks, incremented by that link's reader thread; acks
+    /// are FIFO per connection, which is what makes per-link counts a
+    /// sound completion test (see [`CommHandle::pushes_complete`])
+    acked_per_link: Vec<Arc<AtomicU64>>,
+}
+
+impl AsyncKvClient {
+    /// Connect a pipelined client on `machine`; `inflight` bounds the
+    /// written-but-unanswered frames per remote connection (>= 1).
+    pub fn connect(
+        machine: usize,
+        placement: Arc<Placement>,
+        states: &[Arc<ServerState>],
+        addrs: &[std::net::SocketAddr],
+        ledger: Arc<NetLedger>,
+        inflight: usize,
+        overlap_pulls: bool,
+    ) -> Result<AsyncKvClient> {
+        let n = placement.n_servers();
+        anyhow::ensure!(states.len() == n && addrs.len() == n);
+        let inflight = inflight.max(1);
+        let mut acked_per_link = Vec::with_capacity(n);
+        let mut links = Vec::with_capacity(n);
+        for s in 0..n {
+            acked_per_link.push(Arc::new(AtomicU64::new(0)));
+            if placement.machine_of_server(s) == machine {
+                links.push(AsyncLink::Local(states[s].clone()));
+                continue;
+            }
+            let wr = TcpStream::connect(addrs[s])?;
+            wr.set_nodelay(true)?;
+            let rd = wr.try_clone()?;
+            let shared = Arc::new(LinkShared {
+                pq: Mutex::new(PendQueue { q: VecDeque::new(), closed: false, failed: false }),
+                nonempty: Condvar::new(),
+                space: Condvar::new(),
+            });
+            let (req_tx, req_rx) = sync_channel::<Req>(inflight);
+            let w_shared = shared.clone();
+            let writer = std::thread::Builder::new()
+                .name(format!("dglke-kv-wr{s}"))
+                .spawn(move || writer_loop(wr, req_rx, w_shared, inflight))?;
+            let r_acked = acked_per_link[s].clone();
+            let reader = std::thread::Builder::new()
+                .name(format!("dglke-kv-rd{s}"))
+                .spawn(move || reader_loop(rd, shared, r_acked))?;
+            links.push(AsyncLink::Remote(RemoteLink {
+                req_tx: Some(req_tx),
+                writer: Some(writer),
+                reader: Some(reader),
+            }));
+        }
+        Ok(AsyncKvClient {
+            machine,
+            placement,
+            links,
+            ledger,
+            overlap_pulls,
+            local_pushes: 0,
+            submitted_per_link: vec![0; n],
+            acked_per_link,
+        })
+    }
+
+    /// `(submitted, completed)` push-op totals across all links —
+    /// diagnostics and the drain-barrier assertions; the stamp gating
+    /// uses the per-link [`CommHandle::push_mark`] instead (a global
+    /// count cannot say *which* pushes completed).
+    pub fn push_marks(&self) -> (u64, u64) {
+        let submitted = self.local_pushes + self.submitted_per_link.iter().sum::<u64>();
+        let acked = self.local_pushes
+            + self.acked_per_link.iter().map(|a| a.load(Ordering::Acquire)).sum::<u64>();
+        (submitted, acked)
+    }
+}
+
+/// Scatter/collection bookkeeping of one in-flight pull wave entry.
+struct WavePart {
+    back: Vec<usize>, // positions into the unique-row buffer
+    n_slots: usize,
+    rx: Receiver<PullResp>,
+}
+
+struct Wave {
+    index: HashMap<u64, usize>,
+    rows: Vec<f32>,
+    parts: Vec<WavePart>,
+}
+
+impl CommHandle for AsyncKvClient {
+    fn pull(&mut self, table: TableId, ids: &[u64], dim: usize, out: &mut [f32]) -> Result<()> {
+        let mut reqs = [PullReq { table, ids, dim, out }];
+        self.pull_all(&mut reqs)
+    }
+
+    /// Two phases: dispatch every remote request of every wave entry
+    /// (local shards are served inline — a memcpy), then collect. All
+    /// servers work their requests concurrently while this thread blocks
+    /// on the first response.
+    fn pull_all(&mut self, reqs: &mut [PullReq<'_>]) -> Result<()> {
+        let n = self.links.len();
+        let mut waves: Vec<Wave> = Vec::with_capacity(reqs.len());
+        for req in reqs.iter_mut() {
+            debug_assert_eq!(req.out.len(), req.ids.len() * req.dim);
+            // dedup: each unique row crosses the wire once per wave entry
+            let mut unique: Vec<u64> = Vec::with_capacity(req.ids.len());
+            let mut index: HashMap<u64, usize> = HashMap::with_capacity(req.ids.len());
+            for &id in req.ids {
+                index.entry(id).or_insert_with(|| {
+                    unique.push(id);
+                    unique.len() - 1
+                });
+            }
+            // group by owning server
+            let mut slots: Vec<Vec<u64>> = vec![Vec::new(); n];
+            let mut back: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for (u, &id) in unique.iter().enumerate() {
+                let (s, slot) = self.placement.server_and_slot(req.table, id);
+                slots[s].push(slot);
+                back[s].push(u);
+            }
+            let mut rows = vec![0f32; unique.len() * req.dim];
+            let mut parts = Vec::new();
+            for s in 0..n {
+                if slots[s].is_empty() {
+                    continue;
+                }
+                let nbytes = (slots[s].len() * req.dim * 4 + slots[s].len() * 8) as u64;
+                match &self.links[s] {
+                    AsyncLink::Local(state) => {
+                        self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                        let mut tmp = vec![0f32; slots[s].len() * req.dim];
+                        state.pull_local(req.table, &slots[s], &mut tmp);
+                        for (j, &u) in back[s].iter().enumerate() {
+                            rows[u * req.dim..(u + 1) * req.dim]
+                                .copy_from_slice(&tmp[j * req.dim..(j + 1) * req.dim]);
+                        }
+                    }
+                    AsyncLink::Remote(link) => {
+                        self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                        self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                        if self.overlap_pulls {
+                            self.ledger.overlapped_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                        }
+                        let (tx, rx) = sync_channel(1);
+                        let n_slots = slots[s].len();
+                        link.send(Req::Pull {
+                            table: req.table,
+                            slots: std::mem::take(&mut slots[s]),
+                            reply: tx,
+                        })?;
+                        parts.push(WavePart { back: std::mem::take(&mut back[s]), n_slots, rx });
+                    }
+                }
+            }
+            waves.push(Wave { index, rows, parts });
+        }
+        // collect responses and scatter to caller layout
+        for (req, wave) in reqs.iter_mut().zip(waves.iter_mut()) {
+            for part in wave.parts.drain(..) {
+                let rows_part = part
+                    .rx
+                    .recv()
+                    .map_err(|_| anyhow!("kvstore connection lost during pull"))?
+                    .map_err(|e| anyhow!("server pull failed: {e}"))?;
+                anyhow::ensure!(
+                    rows_part.len() == part.n_slots * req.dim,
+                    "bad pull response size: {} values for {} slots of dim {}",
+                    rows_part.len(),
+                    part.n_slots,
+                    req.dim
+                );
+                for (j, &u) in part.back.iter().enumerate() {
+                    wave.rows[u * req.dim..(u + 1) * req.dim]
+                        .copy_from_slice(&rows_part[j * req.dim..(j + 1) * req.dim]);
+                }
+            }
+            for (j, &id) in req.ids.iter().enumerate() {
+                let u = wave.index[&id];
+                req.out[j * req.dim..(j + 1) * req.dim]
+                    .copy_from_slice(&wave.rows[u * req.dim..(u + 1) * req.dim]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fire-and-forget under the bounded in-flight window: remote frames
+    /// are queued to the owning link's writer and acked in the
+    /// background; local shards apply inline. Returns once queued —
+    /// [`CommHandle::drain`] is the completion barrier.
+    fn push(&mut self, table: TableId, ids: &[u64], dim: usize, rows: &[f32]) -> Result<()> {
+        debug_assert_eq!(rows.len(), ids.len() * dim);
+        let n = self.links.len();
+        let mut slots: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut data: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for (j, &id) in ids.iter().enumerate() {
+            let (s, slot) = self.placement.server_and_slot(table, id);
+            slots[s].push(slot);
+            data[s].extend_from_slice(&rows[j * dim..(j + 1) * dim]);
+        }
+        for s in 0..n {
+            if slots[s].is_empty() {
+                continue;
+            }
+            let nbytes = (data[s].len() * 4 + slots[s].len() * 8) as u64;
+            match &self.links[s] {
+                AsyncLink::Local(state) => {
+                    self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    state.push_local(table, &slots[s], &data[s]);
+                    self.local_pushes += 1;
+                }
+                AsyncLink::Remote(link) => {
+                    self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    // a queued push is off the critical path: its wire time
+                    // overlaps the trainer's next sample/pull/compute
+                    self.ledger.overlapped_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.submitted_per_link[s] += 1;
+                    link.send(Req::Push {
+                        table,
+                        slots: std::mem::take(&mut slots[s]),
+                        rows: std::mem::take(&mut data[s]),
+                    })?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        // fan the barrier out, then wait — links drain concurrently
+        let mut acks = Vec::new();
+        for link in &self.links {
+            if let AsyncLink::Remote(link) = link {
+                let (tx, rx) = sync_channel(1);
+                link.send(Req::Drain { ack: tx })?;
+                acks.push(rx);
+            }
+        }
+        for rx in acks {
+            rx.recv().map_err(|_| anyhow!("kvstore connection lost during drain"))?;
+        }
+        Ok(())
+    }
+
+    fn push_mark(&self) -> Vec<u64> {
+        self.submitted_per_link.clone()
+    }
+
+    fn pushes_complete(&self, mark: &[u64]) -> bool {
+        mark.iter()
+            .zip(&self.acked_per_link)
+            .all(|(&m, acked)| acked.load(Ordering::Acquire) >= m)
+    }
+}
+
+impl Drop for AsyncKvClient {
+    fn drop(&mut self) {
+        for link in &mut self.links {
+            if let AsyncLink::Remote(l) = link {
+                // closing the request channel makes the writer finish the
+                // queued work, send OP_STOP, and close the pending queue;
+                // the reader answers everything outstanding and exits
+                l.req_tx.take();
+                if let Some(h) = l.writer.take() {
+                    let _ = h.join();
+                }
+                if let Some(h) = l.reader.take() {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}
+
+/// Append to the pending window, waiting while it is full. Returns false
+/// (delivering the failure to `p`'s waiter) when the link has failed.
+fn enqueue(shared: &LinkShared, p: Pending, inflight: usize) -> bool {
+    let mut pq = shared.pq.lock().unwrap();
+    while pq.q.len() >= inflight && !pq.failed {
+        pq = shared.space.wait(pq).unwrap();
+    }
+    if pq.failed {
+        if let Pending::Pull { reply, .. } = p {
+            let _ = reply.send(Err("kvstore connection failed".into()));
+        }
+        return false;
+    }
+    pq.q.push_back(p);
+    drop(pq);
+    shared.nonempty.notify_one();
+    true
+}
+
+/// Writer half of a remote link: turns queued requests into tagged wire
+/// frames, in submission order, under the bounded pending window. The
+/// pending entry is queued *before* the frame is written so the reader
+/// can never see an unmatched response.
+fn writer_loop(mut wr: TcpStream, rx: Receiver<Req>, shared: Arc<LinkShared>, inflight: usize) {
+    let mut next_tag: u32 = 0;
+    let mut tag = || {
+        let t = next_tag;
+        next_tag = next_tag.wrapping_add(1);
+        t
+    };
+    while let Ok(req) = rx.recv() {
+        let ok = match req {
+            Req::Pull { table, slots, reply } => {
+                let t = tag();
+                enqueue(&shared, Pending::Pull { tag: t, reply }, inflight)
+                    && write_frame(&mut wr, OP_TPULL, &prepend_tag(t, &encode_pull(table, &slots)))
+                        .is_ok()
+            }
+            Req::Push { table, slots, rows } => {
+                let t = tag();
+                enqueue(&shared, Pending::Push { tag: t }, inflight)
+                    && write_frame(
+                        &mut wr,
+                        OP_TPUSH,
+                        &prepend_tag(t, &encode_push(table, &slots, &rows)),
+                    )
+                    .is_ok()
+            }
+            Req::Drain { ack } => enqueue(&shared, Pending::Drain { ack }, inflight),
+        };
+        if !ok {
+            // a failed write leaves the peer's response stream broken: tear
+            // the socket down so the (possibly blocked) reader errors out
+            shared.fail();
+            let _ = wr.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+    }
+    // client hung up: say goodbye, then close the window
+    if enqueue(&shared, Pending::Stop, inflight) {
+        let _ = write_frame(&mut wr, OP_STOP, &[]);
+    }
+    let mut pq = shared.pq.lock().unwrap();
+    pq.closed = true;
+    drop(pq);
+    shared.nonempty.notify_all();
+}
+
+/// Reader half of a remote link: consumes responses independently of
+/// writer progress (no write/read deadlock however deep the pipeline),
+/// matching each against the front of the pending window and verifying
+/// its echoed tag.
+fn reader_loop(mut rd: TcpStream, shared: Arc<LinkShared>, acked: Arc<AtomicU64>) {
+    loop {
+        let p = {
+            let mut pq = shared.pq.lock().unwrap();
+            loop {
+                if pq.failed {
+                    return;
+                }
+                if let Some(p) = pq.q.pop_front() {
+                    shared.space.notify_one();
+                    break p;
+                }
+                if pq.closed {
+                    return;
+                }
+                pq = shared.nonempty.wait(pq).unwrap();
+            }
+        };
+        match p {
+            Pending::Drain { ack } => {
+                // everything queued before the marker has been answered
+                let _ = ack.send(());
+            }
+            Pending::Stop => {
+                let _ = read_frame(&mut rd); // the server's STOP ack
+                return;
+            }
+            Pending::Pull { tag, reply } => match read_tagged_ok(&mut rd, tag) {
+                Ok(inner) => {
+                    let rows = Reader::new(&inner).f32_vec().map_err(|e| e.to_string());
+                    let _ = reply.send(rows);
+                }
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                    shared.fail();
+                    return;
+                }
+            },
+            Pending::Push { tag } => match read_tagged_ok(&mut rd, tag) {
+                Ok(_) => {
+                    acked.fetch_add(1, Ordering::Release);
+                }
+                Err(_) => {
+                    shared.fail();
+                    return;
+                }
+            },
+        }
+    }
+}
+
+fn read_tagged_ok(rd: &mut TcpStream, want_tag: u32) -> std::result::Result<Vec<u8>, String> {
+    let (op, payload) = read_frame(rd).map_err(|e| e.to_string())?;
+    if op != OP_TOK {
+        return Err(format!("server error (op {op:#x})"));
+    }
+    let (tag, inner) = split_tag(&payload).map_err(|e| e.to_string())?;
+    if tag != want_tag {
+        return Err(format!("response tag {tag} does not match expected {want_tag}"));
+    }
+    Ok(inner.to_vec())
+}
+
+/// Pull all five sections of a batch through `comm` as one wave (the
+/// distributed analogue of [`BatchBuffers::gather`]).
+pub fn pull_batch(
+    comm: &mut dyn CommHandle,
+    batch: &Batch,
+    buf: &mut BatchBuffers,
+    dim: usize,
+    rel_dim: usize,
+) -> Result<()> {
+    let BatchBuffers { h, r, t, neg_h, neg_t } = buf;
+    let rels = PullReq {
+        table: TableId::Relations,
+        ids: &batch.rels,
+        dim: rel_dim,
+        out: r.as_mut_slice(),
+    };
+    let mut reqs = [
+        PullReq { table: TableId::Entities, ids: &batch.heads, dim, out: h.as_mut_slice() },
+        rels,
+        PullReq { table: TableId::Entities, ids: &batch.tails, dim, out: t.as_mut_slice() },
+        PullReq { table: TableId::Entities, ids: &batch.neg_heads, dim, out: neg_h.as_mut_slice() },
+        PullReq { table: TableId::Entities, ids: &batch.neg_tails, dim, out: neg_t.as_mut_slice() },
+    ];
+    comm.pull_all(&mut reqs)
+}
+
+/// Re-pull the rows of `batch` whose ids appear in the dirty sets — the
+/// ids this trainer pushed since the prefetched pull's stamp — and patch
+/// them into `buf` (the distributed analogue of
+/// [`BatchBuffers::patch_rows`]). Issued on the *trainer's* handle, after
+/// its pushes, so per-server frame ordering guarantees the re-pulled rows
+/// reflect every applied update. The re-pull sits on the critical path
+/// and is billed by the pull itself (a trainer handle never overlaps).
+pub fn patch_batch(
+    comm: &mut dyn CommHandle,
+    batch: &Batch,
+    buf: &mut BatchBuffers,
+    dim: usize,
+    rel_dim: usize,
+    ent_dirty: &HashSet<u64>,
+    rel_dirty: &HashSet<u64>,
+) -> Result<()> {
+    if ent_dirty.is_empty() && rel_dirty.is_empty() {
+        return Ok(());
+    }
+    struct Sect<'a> {
+        table: TableId,
+        d: usize,
+        pos: Vec<usize>,
+        ids: Vec<u64>,
+        out: &'a mut Vec<f32>,
+    }
+    let mut work: Vec<Sect<'_>> = Vec::with_capacity(5);
+    {
+        let BatchBuffers { h, r, t, neg_h, neg_t } = buf;
+        let sections: [(&[u64], &mut Vec<f32>, &HashSet<u64>, usize, TableId); 5] = [
+            (&batch.heads, h, ent_dirty, dim, TableId::Entities),
+            (&batch.tails, t, ent_dirty, dim, TableId::Entities),
+            (&batch.neg_heads, neg_h, ent_dirty, dim, TableId::Entities),
+            (&batch.neg_tails, neg_t, ent_dirty, dim, TableId::Entities),
+            (&batch.rels, r, rel_dirty, rel_dim, TableId::Relations),
+        ];
+        for (ids, out, dirty, d, table) in sections {
+            let mut pos = Vec::new();
+            let mut sel = Vec::new();
+            for (j, &id) in ids.iter().enumerate() {
+                if dirty.contains(&id) {
+                    pos.push(j);
+                    sel.push(id);
+                }
+            }
+            if !sel.is_empty() {
+                work.push(Sect { table, d, pos, ids: sel, out });
+            }
+        }
+    }
+    if work.is_empty() {
+        return Ok(());
+    }
+    let mut tmps: Vec<Vec<f32>> =
+        work.iter().map(|s| vec![0f32; s.ids.len() * s.d]).collect();
+    {
+        let mut reqs: Vec<PullReq<'_>> = work
+            .iter()
+            .zip(tmps.iter_mut())
+            .map(|(s, tmp)| PullReq {
+                table: s.table,
+                ids: &s.ids,
+                dim: s.d,
+                out: tmp.as_mut_slice(),
+            })
+            .collect();
+        comm.pull_all(&mut reqs)?;
+    }
+    for (s, tmp) in work.iter_mut().zip(tmps.iter()) {
+        for (k, &j) in s.pos.iter().enumerate() {
+            s.out[j * s.d..(j + 1) * s.d].copy_from_slice(&tmp[k * s.d..(k + 1) * s.d]);
+        }
+    }
+    Ok(())
+}
+
+/// A sampled batch with its pulled embeddings, produced by
+/// [`DistPrefetcher`] one step ahead of compute.
+pub struct DistBatch {
+    pub batch: Batch,
+    pub buf: BatchBuffers,
+    /// the trainer's applied-push counter observed *before* the pull
+    /// began: rows pushed at or after this step may be stale and must be
+    /// patched ([`patch_batch`])
+    pub gathered_at: u64,
+}
+
+/// Distributed prefetch pipeline: a helper thread owning cloned sampler
+/// cursors and its own comm handle runs sample(N+1) + pull(N+1) while the
+/// trainer computes step N — the PR-3 [`crate::train::prefetch`] pipeline
+/// with the gather replaced by a KVStore pull wave, where the overlap
+/// matters even more (the gather is network I/O, not a memcpy).
+pub struct DistPrefetcher<'scope> {
+    out_rx: Receiver<std::result::Result<DistBatch, String>>,
+    free_tx: SyncSender<BatchBuffers>,
+    handle: Option<ScopedJoinHandle<'scope, ()>>,
+}
+
+impl<'scope> DistPrefetcher<'scope> {
+    /// Spawn the helper inside `scope`, taking ownership of the sampler
+    /// cursors and `comm` (the helper's own connections — its pulls must
+    /// not serialize behind the trainer's traffic). `depth` buffers
+    /// circulate (>= 2, double buffering); `applied` is the trainer's
+    /// acked-push step counter used to stamp pulls for patching.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_scoped<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        mut pos: PositiveSampler,
+        mut neg: NegativeSampler,
+        triplets: &'env TripletStore,
+        mut comm: Box<dyn CommHandle>,
+        shape: StepShape,
+        rel_dim: usize,
+        depth: usize,
+        applied: Arc<AtomicU64>,
+    ) -> DistPrefetcher<'scope> {
+        let depth = depth.max(2);
+        let (out_tx, out_rx) = sync_channel::<std::result::Result<DistBatch, String>>(depth);
+        let (free_tx, free_rx) = sync_channel::<BatchBuffers>(depth);
+        for _ in 0..depth {
+            free_tx.send(BatchBuffers::new(&shape, rel_dim)).expect("seeding buffer pool");
+        }
+        let handle = std::thread::Builder::new()
+            .name("dglke-dist-prefetch".into())
+            .spawn_scoped(scope, move || {
+                let mut idx_buf: Vec<u32> = Vec::with_capacity(shape.batch);
+                while let Ok(mut buf) = free_rx.recv() {
+                    let gathered_at = applied.load(Ordering::Acquire);
+                    pos.next_batch(shape.batch, &mut idx_buf);
+                    let batch = neg.assemble(triplets, &idx_buf);
+                    match pull_batch(&mut *comm, &batch, &mut buf, shape.dim, rel_dim) {
+                        Ok(()) => {
+                            if out_tx.send(Ok(DistBatch { batch, buf, gathered_at })).is_err() {
+                                break; // trainer finished
+                            }
+                        }
+                        Err(e) => {
+                            let _ = out_tx.send(Err(e.to_string()));
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn dist prefetch thread");
+        DistPrefetcher { out_rx, free_tx, handle: Some(handle) }
+    }
+
+    /// Receive the next prefetched batch. Blocking here is the pipeline
+    /// stall; pull errors on the helper surface here.
+    pub fn recv(&mut self) -> Result<DistBatch> {
+        self.out_rx
+            .recv()
+            .map_err(|_| anyhow!("dist prefetch thread terminated unexpectedly"))?
+            .map_err(|e| anyhow!("prefetch pull failed: {e}"))
+    }
+
+    /// Return a consumed batch's buffers to the pool.
+    pub fn recycle(&self, b: DistBatch) {
+        let _ = self.free_tx.send(b.buf);
+    }
+
+    /// Stop the helper thread (its comm handle drops with it).
+    pub fn finish(mut self) {
+        let handle = self.handle.take().expect("finish called once");
+        drop(self); // closes out_rx + free_tx: the helper's send/recv fails
+        handle.join().expect("dist prefetch thread panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::server::KvServer;
+    use crate::store::EmbeddingStore;
+
+    /// 2 machines × 1 server, 10 entities striped, 4 relations, dim 4.
+    fn cluster() -> (Vec<KvServer>, Arc<Placement>, Vec<Arc<ServerState>>, Vec<std::net::SocketAddr>)
+    {
+        let entity_machine: Vec<u32> = (0..10).map(|i| (i % 2) as u32).collect();
+        let placement = Arc::new(Placement::build(&entity_machine, 4, 2, 1, 3));
+        let mut servers = Vec::new();
+        let mut states = Vec::new();
+        let mut addrs = Vec::new();
+        for s in 0..2 {
+            let state = Arc::new(ServerState::init(
+                &placement.ent_ids_of_server[s],
+                &placement.rel_ids_of_server[s],
+                4,
+                4,
+                0.5,
+                0.1,
+                99,
+            ));
+            let server = KvServer::start(state.clone()).unwrap();
+            addrs.push(server.addr);
+            states.push(state);
+            servers.push(server);
+        }
+        (servers, placement, states, addrs)
+    }
+
+    fn async_client(
+        placement: &Arc<Placement>,
+        states: &[Arc<ServerState>],
+        addrs: &[std::net::SocketAddr],
+        ledger: Arc<NetLedger>,
+        inflight: usize,
+        overlap: bool,
+    ) -> AsyncKvClient {
+        AsyncKvClient::connect(0, placement.clone(), states, addrs, ledger, inflight, overlap)
+            .unwrap()
+    }
+
+    #[test]
+    fn async_pull_matches_sync_pull() {
+        let (_servers, placement, states, addrs) = cluster();
+        let sync_ledger = Arc::new(NetLedger::new());
+        let async_ledger = Arc::new(NetLedger::new());
+        let mut sync_c =
+            KvClient::connect(0, placement.clone(), &states, &addrs, sync_ledger.clone()).unwrap();
+        let mut async_c = async_client(&placement, &states, &addrs, async_ledger.clone(), 4, false);
+        let ids = [0u64, 3, 3, 7, 2, 9, 1];
+        let mut a = vec![0f32; ids.len() * 4];
+        let mut b = vec![0f32; ids.len() * 4];
+        sync_c.pull(TableId::Entities, &ids, 4, &mut a).unwrap();
+        CommHandle::pull(&mut async_c, TableId::Entities, &ids, 4, &mut b).unwrap();
+        assert_eq!(a, b);
+        // identical byte accounting on both paths
+        assert_eq!(sync_ledger.remote(), async_ledger.remote());
+        assert_eq!(sync_ledger.local(), async_ledger.local());
+        assert_eq!(async_ledger.overlapped(), 0, "critical-path client bills no overlap");
+    }
+
+    #[test]
+    fn pull_wave_fans_out_and_pipelines() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut c = async_client(&placement, &states, &addrs, ledger, 2, false);
+        // many more waves than the in-flight window, values verified
+        // against the server shards directly
+        for round in 0..30u64 {
+            let ids: Vec<u64> = (0..10).map(|i| (i + round) % 10).collect();
+            let rel_ids: Vec<u64> = (0..4).collect();
+            let mut ents = vec![0f32; ids.len() * 4];
+            let mut rels = vec![0f32; rel_ids.len() * 4];
+            {
+                let mut reqs = [
+                    PullReq { table: TableId::Entities, ids: &ids, dim: 4, out: &mut ents[..] },
+                    PullReq {
+                        table: TableId::Relations,
+                        ids: &rel_ids,
+                        dim: 4,
+                        out: &mut rels[..],
+                    },
+                ];
+                c.pull_all(&mut reqs).unwrap();
+            }
+            for (j, &id) in ids.iter().enumerate() {
+                let (s, slot) = placement.server_and_slot(TableId::Entities, id);
+                assert_eq!(
+                    &ents[j * 4..(j + 1) * 4],
+                    states[s].ents.row_vec(slot as usize).as_slice()
+                );
+            }
+            for (j, &id) in rel_ids.iter().enumerate() {
+                let (s, slot) = placement.server_and_slot(TableId::Relations, id);
+                assert_eq!(
+                    &rels[j * 4..(j + 1) * 4],
+                    states[s].rels.row_vec(slot as usize).as_slice()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fire_and_forget_push_lands_after_drain() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut c = async_client(&placement, &states, &addrs, ledger, 4, false);
+        // entity 1 is remote from machine 0
+        let (s, slot) = placement.server_and_slot(TableId::Entities, 1);
+        let before = states[s].ents.row_vec(slot as usize);
+        for _ in 0..20 {
+            CommHandle::push(&mut c, TableId::Entities, &[1], 4, &[0.1, 0.1, 0.1, 0.1]).unwrap();
+        }
+        c.drain().unwrap();
+        let (submitted, completed) = c.push_marks();
+        assert_eq!(submitted, 20);
+        assert_eq!(completed, 20, "drain must wait for every ack");
+        assert_ne!(states[s].ents.row_vec(slot as usize), before);
+    }
+
+    #[test]
+    fn per_link_marks_gate_on_remote_acks() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut c = async_client(&placement, &states, &addrs, ledger, 4, false);
+        let m0 = c.push_mark();
+        assert!(c.pushes_complete(&m0), "nothing in flight: the empty mark is complete");
+        // one remote (entity 1) and one local (entity 0) push; the local
+        // completes inline, and must not be able to stand in for the
+        // remote ack — the mark is per link, not a fungible total
+        CommHandle::push(&mut c, TableId::Entities, &[1], 4, &[0.2; 4]).unwrap();
+        let m1 = c.push_mark();
+        CommHandle::push(&mut c, TableId::Entities, &[0], 4, &[0.2; 4]).unwrap();
+        let (s_remote, _) = placement.server_and_slot(TableId::Entities, 1);
+        assert_eq!(m1[s_remote], 1, "mark records the remote link's submitted count");
+        c.drain().unwrap();
+        assert!(c.pushes_complete(&m1), "after drain every mark is complete");
+        assert!(c.pushes_complete(&c.push_mark()));
+        let (submitted, acked) = c.push_marks();
+        assert_eq!(submitted, 2, "one remote op (entity 1) + one local op (entity 0)");
+        assert_eq!(submitted, acked);
+    }
+
+    #[test]
+    fn push_then_pull_on_same_handle_sees_update() {
+        // per-connection frame ordering: a pull submitted after a push is
+        // answered with the pushed state, without any drain in between
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut c = async_client(&placement, &states, &addrs, ledger, 4, false);
+        let mut before = vec![0f32; 4];
+        CommHandle::pull(&mut c, TableId::Entities, &[1], 4, &mut before).unwrap();
+        CommHandle::push(&mut c, TableId::Entities, &[1], 4, &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        let mut after = vec![0f32; 4];
+        CommHandle::pull(&mut c, TableId::Entities, &[1], 4, &mut after).unwrap();
+        assert_ne!(after, before);
+        let (s, slot) = placement.server_and_slot(TableId::Entities, 1);
+        assert_eq!(after, states[s].ents.row_vec(slot as usize));
+    }
+
+    #[test]
+    fn overlap_client_bills_overlapped_pulls() {
+        let (_servers, placement, states, addrs) = cluster();
+        let ledger = Arc::new(NetLedger::new());
+        let mut c = async_client(&placement, &states, &addrs, ledger.clone(), 4, true);
+        let ids: Vec<u64> = (0..10).collect();
+        let mut out = vec![0f32; 10 * 4];
+        CommHandle::pull(&mut c, TableId::Entities, &ids, 4, &mut out).unwrap();
+        assert!(ledger.overlapped() > 0);
+        assert_eq!(ledger.overlapped(), ledger.remote(), "all remote pulls were overlapped");
+        assert!(ledger.local() > 0, "local shard still served inline");
+    }
+}

@@ -6,14 +6,21 @@
 //! * server-side sparse AdaGrad (gradient communication overlapped with
 //!   local optimizer work);
 //! * a [`NetLedger`] counting local vs remote traffic — the quantity the
-//!   METIS partitioning of §3.2 minimizes.
+//!   METIS partitioning of §3.2 minimizes — split into critical-path and
+//!   overlapped bytes;
+//! * [`comm`] — the asynchronous client: per-server I/O worker threads,
+//!   request-tagged pipelined frames, fire-and-forget pushes behind a
+//!   [`comm::CommHandle::drain`] barrier, and the distributed prefetch
+//!   pipeline.
 
 pub mod client;
+pub mod comm;
 pub mod placement;
 pub mod protocol;
 pub mod server;
 
 pub use client::{KvClient, NetLedger};
+pub use comm::{AsyncKvClient, CommHandle, DistPrefetcher, PullReq};
 pub use placement::Placement;
 pub use protocol::TableId;
 pub use server::{KvServer, ServerState};
@@ -113,6 +120,27 @@ impl KvCluster {
             &self.states,
             &self.addrs,
             self.ledger.clone(),
+        )
+    }
+
+    /// New pipelined/async client homed on `machine`. `inflight` bounds
+    /// the unanswered frames per remote connection; `overlap_pulls` bills
+    /// the client's remote pull traffic as overlapped (set for prefetch
+    /// helpers, whose pulls run under the trainer's compute).
+    pub fn async_client(
+        &self,
+        machine: usize,
+        inflight: usize,
+        overlap_pulls: bool,
+    ) -> Result<AsyncKvClient> {
+        AsyncKvClient::connect(
+            machine,
+            self.placement.clone(),
+            &self.states,
+            &self.addrs,
+            self.ledger.clone(),
+            inflight,
+            overlap_pulls,
         )
     }
 

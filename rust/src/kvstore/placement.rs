@@ -93,6 +93,18 @@ impl Placement {
         server / self.servers_per_machine
     }
 
+    /// Owning server and within-server slot of one embedding row.
+    pub fn server_and_slot(&self, table: crate::kvstore::TableId, id: u64) -> (usize, u64) {
+        match table {
+            crate::kvstore::TableId::Entities => {
+                (self.ent_server[id as usize] as usize, self.ent_slot[id as usize] as u64)
+            }
+            crate::kvstore::TableId::Relations => {
+                (self.rel_server[id as usize] as usize, self.rel_slot[id as usize] as u64)
+            }
+        }
+    }
+
     /// Entities resident on `machine` (the local negative-sampling pool).
     pub fn entities_of_machine(&self, machine: usize) -> Vec<u32> {
         self.ent_server

@@ -5,6 +5,12 @@
 //! PUSH applies gradients server-side (the server owns the optimizer,
 //! like DGL-KE's KVStore), PING measures round trips, STOP shuts a
 //! connection down.
+//!
+//! The pipelined client (`kvstore::comm`) uses the *tagged* variants
+//! TPULL/TPUSH: their payload starts with a `u32` request tag that the
+//! server echoes back in its TOK response, so a connection can carry many
+//! in-flight frames and the reader can match (and verify) each response
+//! against the request window without waiting for round trips.
 
 use crate::util::bytes::{Reader, Writer};
 use anyhow::{bail, Result};
@@ -14,7 +20,13 @@ pub const OP_PULL: u8 = 1;
 pub const OP_PUSH: u8 = 2;
 pub const OP_PING: u8 = 3;
 pub const OP_STOP: u8 = 4;
+/// Tagged pull: payload = `[u32 tag][pull payload]`, answered by OP_TOK.
+pub const OP_TPULL: u8 = 5;
+/// Tagged push: payload = `[u32 tag][push payload]`, answered by OP_TOK.
+pub const OP_TPUSH: u8 = 6;
 pub const OP_OK: u8 = 0x80;
+/// Tagged OK: payload = `[u32 tag][response payload]`.
+pub const OP_TOK: u8 = 0x81;
 pub const OP_ERR: u8 = 0xFF;
 
 /// Table selector within a server.
@@ -45,6 +57,10 @@ pub fn write_frame(stream: &mut impl Write, opcode: u8, payload: &[u8]) -> Resul
 }
 
 /// Read one frame; returns (opcode, payload). Caps frames at 1 GiB.
+///
+/// The opcode byte is read separately from the length-prefixed body so
+/// the payload lands directly at offset 0 of its buffer (a former
+/// `buf.remove(0)` here memmoved every payload byte — O(len) per frame).
 pub fn read_frame(stream: &mut impl Read) -> Result<(u8, Vec<u8>)> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
@@ -52,11 +68,27 @@ pub fn read_frame(stream: &mut impl Read) -> Result<(u8, Vec<u8>)> {
     if len == 0 || len > (1 << 30) {
         bail!("bad frame length {len}");
     }
-    let mut buf = vec![0u8; len];
+    let mut op = [0u8; 1];
+    stream.read_exact(&mut op)?;
+    let mut buf = vec![0u8; len - 1];
     stream.read_exact(&mut buf)?;
-    let op = buf[0];
-    buf.remove(0);
-    Ok((op, buf))
+    Ok((op[0], buf))
+}
+
+/// Prefix `inner` with a little-endian request tag (TPULL/TPUSH payloads).
+pub fn prepend_tag(tag: u32, inner: &[u8]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(4 + inner.len());
+    v.extend_from_slice(&tag.to_le_bytes());
+    v.extend_from_slice(inner);
+    v
+}
+
+/// Split a tagged payload into (tag, inner payload).
+pub fn split_tag(payload: &[u8]) -> Result<(u32, &[u8])> {
+    if payload.len() < 4 {
+        bail!("tagged frame too short ({} bytes)", payload.len());
+    }
+    Ok((u32::from_le_bytes(payload[..4].try_into().unwrap()), &payload[4..]))
 }
 
 /// PULL request: (table, slots).
@@ -118,6 +150,37 @@ mod tests {
         assert_eq!(t, TableId::Entities);
         assert_eq!(slots, vec![7]);
         assert_eq!(rows, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn empty_payload_frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_STOP, &[]).unwrap();
+        let (op, payload) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(op, OP_STOP);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn tagged_payload_roundtrip() {
+        let inner = encode_pull(TableId::Entities, &[9, 2, 6]);
+        let tagged = prepend_tag(0xDEAD_BEEF, &inner);
+        let (tag, rest) = split_tag(&tagged).unwrap();
+        assert_eq!(tag, 0xDEAD_BEEF);
+        assert_eq!(rest, inner.as_slice());
+        let (t, slots) = decode_pull(rest).unwrap();
+        assert_eq!(t, TableId::Entities);
+        assert_eq!(slots, vec![9, 2, 6]);
+    }
+
+    #[test]
+    fn short_tagged_payload_rejected() {
+        assert!(split_tag(&[1, 2]).is_err());
+        assert!(split_tag(&[]).is_err());
+        // exactly a tag, empty inner payload, is fine
+        let (tag, rest) = split_tag(&7u32.to_le_bytes()).unwrap();
+        assert_eq!(tag, 7);
+        assert!(rest.is_empty());
     }
 
     #[test]

@@ -222,6 +222,28 @@ fn serve_connection(mut stream: TcpStream, state: &ServerState) -> Result<()> {
                 state.push_local(t, &slots, &rows);
                 write_frame(&mut stream, OP_OK, &[])?;
             }
+            // tagged variants (pipelined client): echo the request tag in
+            // the response so many frames can be in flight per connection
+            OP_TPULL => {
+                let (tag, inner) = split_tag(&payload)?;
+                let (t, slots) = decode_pull(inner)?;
+                let dim = match t {
+                    TableId::Entities => state.ents.dim(),
+                    TableId::Relations => state.rels.dim(),
+                };
+                let mut rows = vec![0f32; slots.len() * dim];
+                state.pull_local(t, &slots, &mut rows);
+                let mut w = crate::util::bytes::Writer::with_capacity(rows.len() * 4 + 12);
+                w.u32(tag);
+                w.f32_slice(&rows);
+                write_frame(&mut stream, OP_TOK, &w.buf)?;
+            }
+            OP_TPUSH => {
+                let (tag, inner) = split_tag(&payload)?;
+                let (t, slots, rows) = decode_push(inner)?;
+                state.push_local(t, &slots, &rows);
+                write_frame(&mut stream, OP_TOK, &tag.to_le_bytes())?;
+            }
             OP_PING => {
                 write_frame(&mut stream, OP_OK, &payload)?;
             }
@@ -301,6 +323,39 @@ mod tests {
             let _ = read_frame(&mut stream);
         });
         assert!(server.state.pulls.load(Ordering::Relaxed) >= 80);
+    }
+
+    #[test]
+    fn tagged_frames_pipeline_on_one_connection() {
+        let server = toy_server();
+        // the push (tag 8) follows the pulls on the wire, so every pull
+        // must be answered with the pre-push table contents
+        let expect: Vec<Vec<f32>> = (0..3).map(|i| server.state.ents.row_vec(i)).collect();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        // write a burst of tagged requests before reading any response
+        for tag in 0..8u32 {
+            let inner = encode_pull(TableId::Entities, &[(tag % 3) as u64]);
+            write_frame(&mut stream, OP_TPULL, &prepend_tag(tag, &inner)).unwrap();
+        }
+        let inner = encode_push(TableId::Entities, &[0], &[0.5, 0.5, 0.5, 0.5]);
+        write_frame(&mut stream, OP_TPUSH, &prepend_tag(8, &inner)).unwrap();
+        // responses come back in order, each echoing its tag
+        for tag in 0..8u32 {
+            let (op, payload) = read_frame(&mut stream).unwrap();
+            assert_eq!(op, OP_TOK);
+            let (rtag, rest) = split_tag(&payload).unwrap();
+            assert_eq!(rtag, tag);
+            let rows = crate::util::bytes::Reader::new(rest).f32_vec().unwrap();
+            assert_eq!(rows, expect[(tag % 3) as usize]);
+        }
+        let (op, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(op, OP_TOK);
+        assert_eq!(split_tag(&payload).unwrap().0, 8);
+        // the acked push must have been applied
+        assert_ne!(server.state.ents.row_vec(0), expect[0]);
+        write_frame(&mut stream, OP_STOP, &[]).unwrap();
+        let _ = read_frame(&mut stream);
     }
 
     #[test]

@@ -39,6 +39,10 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --sync-interval N --log-every N --eval --sampled-eval
   dist-train: --machines N --trainers N --servers N --random-partition
           --no-local-negatives --batches N --eval
+          --pipelined-comm (async KVStore client: concurrent pull fan-out,
+          pipelined frames, fire-and-forget pushes + drain barrier)
+          --inflight N (frames in flight per connection, default 8)
+          --prefetch / --prefetch-depth N (pull batch N+1 during compute)
   partition: --machines N
   gen-data: --out DIR
   eval-only: --dim N
@@ -126,6 +130,10 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
         spec.pipeline.prefetch = true;
     }
     spec.pipeline.depth = args.parse_or("prefetch-depth", spec.pipeline.depth)?;
+    if args.flag("pipelined-comm") {
+        spec.comm.pipelined = true;
+    }
+    spec.comm.inflight = args.parse_or("inflight", spec.comm.inflight)?;
     if args.flag("no-rel-part") {
         spec.relation_partition = false;
     }

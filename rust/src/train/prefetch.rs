@@ -11,6 +11,11 @@
 //! the pipeline allocates nothing per step and its depth (and therefore
 //! its staleness) is a hard bound, not a queue that can grow.
 //!
+//! Distributed trainers run the same pipeline with the gather replaced by
+//! a KVStore pull wave — see [`crate::kvstore::comm::DistPrefetcher`],
+//! which reuses this module's stamp + patch-on-update protocol against
+//! the trainer's applied-*push* counter.
+//!
 //! # Determinism and staleness
 //!
 //! The helper thread samples from *cloned* cursors ([`PositiveSampler`] /
