@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist clean
+.PHONY: build test fmt fmt-check lint loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist clean
 
 build:
 	$(CARGO) build --release
@@ -18,8 +18,37 @@ fmt:
 fmt-check:
 	$(CARGO) fmt --check
 
+# Repo-specific static analysis (narrowing casts in byte math, the
+# unsafe budget, unwrap bans in kvstore/prefetch, the Relaxed-ordering
+# allowlist). Config: unsafe-budget.toml + relaxed-allowlist.toml.
+lint:
+	$(CARGO) run -p xtask -- lint
+
+# Loom-style model checking: reruns rust/tests/loom_tests.rs with the
+# util::sync shim's seeded schedule perturbation (48 interleavings per
+# test by default; LOOM_MAX_ITERS=n to change).
+loom:
+	RUSTFLAGS="--cfg loom" $(CARGO) test --test loom_tests
+
+# Miri over the race-free unit-test subset (needs a nightly toolchain
+# with the miri component). Hogwild tests are excluded by the filter:
+# the intentional RacyCell race is UB by the letter of the model and is
+# policed by quarantine instead (docs/CONCURRENCY.md).
+miri:
+	MIRIFLAGS=-Zmiri-disable-isolation $(CARGO) +nightly miri test --lib \
+	    util:: kvstore::protocol store::racy store::dense train::batch
+
+# ThreadSanitizer over the concurrency unit tests (nightly + build-std).
+# Known benign reports are suppressed via tsan-suppressions.txt, which
+# names ONLY the quarantined store::racy Hogwild cell.
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread --cfg tsan" \
+	TSAN_OPTIONS="suppressions=$(CURDIR)/tsan-suppressions.txt" \
+	$(CARGO) +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu --lib \
+	    store:: train::sync kvstore:: util::
+
 # Tier-1 verification: what CI runs.
-check: build test fmt-check
+check: build test fmt-check lint
 
 # AOT-compile the JAX/Pallas train+eval artifacts (writes
 # $(ARTIFACTS_DIR)/manifest.json + HLO text files). Requires jax.

@@ -393,6 +393,8 @@ impl Session {
             let mut len8 = [0u8; 8];
             rd.read_exact(&mut len8)
                 .with_context(|| format!("decoding {}", path.display()))?;
+            // lint:allow(narrowing-cast) — guarded: the ensure! below
+            // rejects any header that does not exactly match the table
             let n_values = u64::from_le_bytes(len8) as usize;
             anyhow::ensure!(
                 n_values == table.n_params(),
@@ -412,9 +414,7 @@ impl Session {
                 let take = chunk_rows.min(rows - row);
                 let n_values = take * dim;
                 // decode straight into the reused f32 buffer (LE hosts)
-                let bytes = unsafe {
-                    std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, n_values * 4)
-                };
+                let bytes = crate::util::bytes::f32_as_bytes_mut(&mut buf[..n_values]);
                 rd.read_exact(bytes)
                     .with_context(|| format!("decoding {}", path.display()))?;
                 table.set_rows(row, &buf[..n_values]);

@@ -27,8 +27,7 @@ use crate::train::worker::ModelState;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use anyhow::Result;
-use std::cell::UnsafeCell;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Debug)]
 pub struct PbgConfig {
@@ -77,16 +76,18 @@ pub struct PbgStats {
 }
 
 /// Dense AdaGrad state over the full relation table (PBG treats relation
-/// parameters as dense model weights).
+/// parameters as dense model weights). The accumulator sits behind a
+/// plain `Mutex`: the full-table walk below dwarfs the lock cost, and the
+/// PBG baseline's conflict-free block schedule rarely contends — no
+/// reason for Hogwild aliasing off the hot path.
 struct DenseRelOptimizer {
-    state: UnsafeCell<Vec<f32>>,
+    state: Mutex<Vec<f32>>,
     lr: f32,
 }
-unsafe impl Sync for DenseRelOptimizer {}
 
 impl DenseRelOptimizer {
     fn new(rows: usize, lr: f32) -> Self {
-        DenseRelOptimizer { state: UnsafeCell::new(vec![0f32; rows]), lr }
+        DenseRelOptimizer { state: Mutex::new(vec![0f32; rows]), lr }
     }
 
     /// Full-table pass: every row is read and written (grad rows for the
@@ -95,7 +96,10 @@ impl DenseRelOptimizer {
     #[allow(clippy::erasing_op)]
     fn apply_dense(&self, table: &dyn EmbeddingStore, sparse_ids: &[u64], sparse_rows: &[f32]) {
         let dim = table.dim();
-        let state = unsafe { &mut *self.state.get() };
+        let mut state = match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         // index sparse grads
         let mut grad_of = std::collections::HashMap::with_capacity(sparse_ids.len());
         for (j, &id) in sparse_ids.iter().enumerate() {

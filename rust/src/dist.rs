@@ -437,11 +437,14 @@ struct PushedIds {
 fn advance_applied(
     marks: &mut VecDeque<(u64, Vec<u64>)>,
     comm: &dyn CommHandle,
-    applied: &std::sync::atomic::AtomicU64,
+    applied: &crate::util::sync::atomic::AtomicU64,
 ) {
     while let Some((step, mark)) = marks.front() {
         if comm.pushes_complete(mark) {
-            applied.store(step + 1, std::sync::atomic::Ordering::Release);
+            // Release: pairs with the helper's Acquire load when stamping a
+            // pull — a helper that reads stamp `S` also observes everything
+            // the acks of steps `< S` made visible (docs/CONCURRENCY.md).
+            applied.store(step + 1, crate::util::sync::atomic::Ordering::Release);
             marks.pop_front();
         } else {
             break;
@@ -474,7 +477,7 @@ fn run_trainer_pipelined(
 ) -> Result<TrainerOut> {
     let helper_comm = make_comm(cluster, machine, cfg, true)?;
     let depth = cfg.prefetch_depth.max(2);
-    let applied = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let applied = Arc::new(crate::util::sync::atomic::AtomicU64::new(0));
     let mut losses = Vec::new();
     std::thread::scope(|s| -> Result<()> {
         let mut pf = DistPrefetcher::spawn_scoped(
@@ -487,7 +490,7 @@ fn run_trainer_pipelined(
             rel_dim,
             depth,
             applied.clone(),
-        );
+        )?;
         // ids pushed per recent step, newest at the back; pruned as the
         // stamp advances (stamps are monotone), so it always covers
         // exactly the steps a live prefetched pull can have missed
@@ -535,7 +538,7 @@ fn run_trainer_pipelined(
             });
             pf.recycle(pb);
         }
-        pf.finish();
+        pf.finish()?;
         Ok(())
     })?;
     Ok(TrainerOut { losses, batches: cfg.batches_per_trainer as u64 })

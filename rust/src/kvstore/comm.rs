@@ -43,17 +43,18 @@ use super::client::{KvClient, NetLedger};
 use super::placement::Placement;
 use super::protocol::*;
 use super::server::ServerState;
+use super::window::{InflightWindow, PopOutcome};
 use crate::kg::TripletStore;
 use crate::models::step::StepShape;
 use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
 use crate::train::batch::BatchBuffers;
 use crate::util::bytes::Reader;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use anyhow::{anyhow, Result};
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::{JoinHandle, Scope, ScopedJoinHandle};
 
 /// One pull request of a wave: gather rows of `ids` (duplicates allowed)
@@ -145,16 +146,7 @@ enum Req {
 /// error-chain plumbing).
 type PullResp = std::result::Result<Vec<f32>, String>;
 
-/// Window of written-but-unanswered frames, shared by a link's writer
-/// (pushes back, bounded at `inflight`) and reader (pops front).
-struct PendQueue {
-    q: VecDeque<Pending>,
-    /// writer hung up; reader exits once the queue empties
-    closed: bool,
-    /// I/O failed; both sides bail out and pending replies error
-    failed: bool,
-}
-
+/// A written-but-unanswered frame in a link's [`InflightWindow`].
 enum Pending {
     Pull { tag: u32, reply: SyncSender<PullResp> },
     Push { tag: u32 },
@@ -164,29 +156,19 @@ enum Pending {
     Stop,
 }
 
-struct LinkShared {
-    pq: Mutex<PendQueue>,
-    nonempty: Condvar,
-    space: Condvar,
+/// Deliver a link failure to whoever waits on a pending entry. Pulls get
+/// an explicit error; for drains, dropping the ack sender makes the
+/// waiting `drain()`'s recv fail.
+fn deliver_failure(p: Pending) {
+    if let Pending::Pull { reply, .. } = p {
+        let _ = reply.send(Err("kvstore connection failed".into()));
+    }
 }
 
-impl LinkShared {
-    fn fail(&self) {
-        let mut pq = self.pq.lock().unwrap();
-        pq.failed = true;
-        // deliver the failure to everything still waiting
-        while let Some(p) = pq.q.pop_front() {
-            match p {
-                Pending::Pull { reply, .. } => {
-                    let _ = reply.send(Err("kvstore connection failed".into()));
-                }
-                // dropping the ack sender makes the waiting drain()/recv fail
-                Pending::Drain { .. } | Pending::Push { .. } | Pending::Stop => {}
-            }
-        }
-        drop(pq);
-        self.nonempty.notify_all();
-        self.space.notify_all();
+/// Fail the window and deliver the failure to every drained entry.
+fn fail_link(win: &InflightWindow<Pending>) {
+    for p in win.fail() {
+        deliver_failure(p);
     }
 }
 
@@ -201,7 +183,7 @@ impl RemoteLink {
     fn send(&self, req: Req) -> Result<()> {
         self.req_tx
             .as_ref()
-            .expect("link already shut down")
+            .ok_or_else(|| anyhow!("kvstore link already shut down"))?
             .send(req)
             .map_err(|_| anyhow!("kvstore I/O worker terminated"))
     }
@@ -262,20 +244,16 @@ impl AsyncKvClient {
             let wr = TcpStream::connect(addrs[s])?;
             wr.set_nodelay(true)?;
             let rd = wr.try_clone()?;
-            let shared = Arc::new(LinkShared {
-                pq: Mutex::new(PendQueue { q: VecDeque::new(), closed: false, failed: false }),
-                nonempty: Condvar::new(),
-                space: Condvar::new(),
-            });
+            let win = Arc::new(InflightWindow::<Pending>::new(inflight));
             let (req_tx, req_rx) = sync_channel::<Req>(inflight);
-            let w_shared = shared.clone();
+            let w_win = win.clone();
             let writer = std::thread::Builder::new()
                 .name(format!("dglke-kv-wr{s}"))
-                .spawn(move || writer_loop(wr, req_rx, w_shared, inflight))?;
+                .spawn(move || writer_loop(wr, req_rx, w_win))?;
             let r_acked = acked_per_link[s].clone();
             let reader = std::thread::Builder::new()
                 .name(format!("dglke-kv-rd{s}"))
-                .spawn(move || reader_loop(rd, shared, r_acked))?;
+                .spawn(move || reader_loop(rd, win, r_acked))?;
             links.push(AsyncLink::Remote(RemoteLink {
                 req_tx: Some(req_tx),
                 writer: Some(writer),
@@ -505,30 +483,11 @@ impl Drop for AsyncKvClient {
     }
 }
 
-/// Append to the pending window, waiting while it is full. Returns false
-/// (delivering the failure to `p`'s waiter) when the link has failed.
-fn enqueue(shared: &LinkShared, p: Pending, inflight: usize) -> bool {
-    let mut pq = shared.pq.lock().unwrap();
-    while pq.q.len() >= inflight && !pq.failed {
-        pq = shared.space.wait(pq).unwrap();
-    }
-    if pq.failed {
-        if let Pending::Pull { reply, .. } = p {
-            let _ = reply.send(Err("kvstore connection failed".into()));
-        }
-        return false;
-    }
-    pq.q.push_back(p);
-    drop(pq);
-    shared.nonempty.notify_one();
-    true
-}
-
 /// Writer half of a remote link: turns queued requests into tagged wire
 /// frames, in submission order, under the bounded pending window. The
 /// pending entry is queued *before* the frame is written so the reader
 /// can never see an unmatched response.
-fn writer_loop(mut wr: TcpStream, rx: Receiver<Req>, shared: Arc<LinkShared>, inflight: usize) {
+fn writer_loop(mut wr: TcpStream, rx: Receiver<Req>, win: Arc<InflightWindow<Pending>>) {
     let mut next_tag: u32 = 0;
     let mut tag = || {
         let t = next_tag;
@@ -539,61 +498,60 @@ fn writer_loop(mut wr: TcpStream, rx: Receiver<Req>, shared: Arc<LinkShared>, in
         let ok = match req {
             Req::Pull { table, slots, reply } => {
                 let t = tag();
-                enqueue(&shared, Pending::Pull { tag: t, reply }, inflight)
-                    && write_frame(&mut wr, OP_TPULL, &prepend_tag(t, &encode_pull(table, &slots)))
-                        .is_ok()
+                match win.enqueue(Pending::Pull { tag: t, reply }) {
+                    Ok(()) => write_frame(
+                        &mut wr,
+                        OP_TPULL,
+                        &prepend_tag(t, &encode_pull(table, &slots)),
+                    )
+                    .is_ok(),
+                    Err(p) => {
+                        deliver_failure(p);
+                        false
+                    }
+                }
             }
             Req::Push { table, slots, rows } => {
                 let t = tag();
-                enqueue(&shared, Pending::Push { tag: t }, inflight)
-                    && write_frame(
+                match win.enqueue(Pending::Push { tag: t }) {
+                    Ok(()) => write_frame(
                         &mut wr,
                         OP_TPUSH,
                         &prepend_tag(t, &encode_push(table, &slots, &rows)),
                     )
-                    .is_ok()
+                    .is_ok(),
+                    Err(p) => {
+                        deliver_failure(p);
+                        false
+                    }
+                }
             }
-            Req::Drain { ack } => enqueue(&shared, Pending::Drain { ack }, inflight),
+            Req::Drain { ack } => win.enqueue(Pending::Drain { ack }).is_ok(),
         };
         if !ok {
             // a failed write leaves the peer's response stream broken: tear
             // the socket down so the (possibly blocked) reader errors out
-            shared.fail();
+            fail_link(&win);
             let _ = wr.shutdown(std::net::Shutdown::Both);
             return;
         }
     }
     // client hung up: say goodbye, then close the window
-    if enqueue(&shared, Pending::Stop, inflight) {
+    if win.enqueue(Pending::Stop).is_ok() {
         let _ = write_frame(&mut wr, OP_STOP, &[]);
     }
-    let mut pq = shared.pq.lock().unwrap();
-    pq.closed = true;
-    drop(pq);
-    shared.nonempty.notify_all();
+    win.close();
 }
 
 /// Reader half of a remote link: consumes responses independently of
 /// writer progress (no write/read deadlock however deep the pipeline),
 /// matching each against the front of the pending window and verifying
 /// its echoed tag.
-fn reader_loop(mut rd: TcpStream, shared: Arc<LinkShared>, acked: Arc<AtomicU64>) {
+fn reader_loop(mut rd: TcpStream, win: Arc<InflightWindow<Pending>>, acked: Arc<AtomicU64>) {
     loop {
-        let p = {
-            let mut pq = shared.pq.lock().unwrap();
-            loop {
-                if pq.failed {
-                    return;
-                }
-                if let Some(p) = pq.q.pop_front() {
-                    shared.space.notify_one();
-                    break p;
-                }
-                if pq.closed {
-                    return;
-                }
-                pq = shared.nonempty.wait(pq).unwrap();
-            }
+        let p = match win.pop() {
+            PopOutcome::Entry(p) => p,
+            PopOutcome::Closed | PopOutcome::Failed => return,
         };
         match p {
             Pending::Drain { ack } => {
@@ -611,16 +569,20 @@ fn reader_loop(mut rd: TcpStream, shared: Arc<LinkShared>, acked: Arc<AtomicU64>
                 }
                 Err(e) => {
                     let _ = reply.send(Err(e));
-                    shared.fail();
+                    fail_link(&win);
                     return;
                 }
             },
             Pending::Push { tag } => match read_tagged_ok(&mut rd, tag) {
                 Ok(_) => {
+                    // Release: pairs with the Acquire in pushes_complete /
+                    // push_marks — an observer that sees ack count >= mark
+                    // also sees the server-side effects of those pushes
+                    // (see docs/CONCURRENCY.md §acked_per_link).
                     acked.fetch_add(1, Ordering::Release);
                 }
                 Err(_) => {
-                    shared.fail();
+                    fail_link(&win);
                     return;
                 }
             },
@@ -781,12 +743,16 @@ impl<'scope> DistPrefetcher<'scope> {
         rel_dim: usize,
         depth: usize,
         applied: Arc<AtomicU64>,
-    ) -> DistPrefetcher<'scope> {
+    ) -> Result<DistPrefetcher<'scope>> {
         let depth = depth.max(2);
         let (out_tx, out_rx) = sync_channel::<std::result::Result<DistBatch, String>>(depth);
         let (free_tx, free_rx) = sync_channel::<BatchBuffers>(depth);
         for _ in 0..depth {
-            free_tx.send(BatchBuffers::new(&shape, rel_dim)).expect("seeding buffer pool");
+            // the channel was just created with capacity `depth`: a send
+            // can only fail if the receiver was dropped, which it wasn't
+            free_tx
+                .send(BatchBuffers::new(&shape, rel_dim))
+                .map_err(|_| anyhow!("dist prefetch buffer pool channel closed during seeding"))?;
         }
         let handle = std::thread::Builder::new()
             .name("dglke-dist-prefetch".into())
@@ -809,8 +775,8 @@ impl<'scope> DistPrefetcher<'scope> {
                     }
                 }
             })
-            .expect("spawn dist prefetch thread");
-        DistPrefetcher { out_rx, free_tx, handle: Some(handle) }
+            .map_err(|e| anyhow!("spawning dist prefetch thread: {e}"))?;
+        Ok(DistPrefetcher { out_rx, free_tx, handle: Some(handle) })
     }
 
     /// Receive the next prefetched batch. Blocking here is the pipeline
@@ -828,10 +794,11 @@ impl<'scope> DistPrefetcher<'scope> {
     }
 
     /// Stop the helper thread (its comm handle drops with it).
-    pub fn finish(mut self) {
-        let handle = self.handle.take().expect("finish called once");
+    pub fn finish(mut self) -> Result<()> {
+        let handle =
+            self.handle.take().ok_or_else(|| anyhow!("dist prefetcher already finished"))?;
         drop(self); // closes out_rx + free_tx: the helper's send/recv fails
-        handle.join().expect("dist prefetch thread panicked");
+        handle.join().map_err(|_| anyhow!("dist prefetch thread panicked"))
     }
 }
 

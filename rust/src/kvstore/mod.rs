@@ -18,9 +18,11 @@ pub mod comm;
 pub mod placement;
 pub mod protocol;
 pub mod server;
+pub mod window;
 
 pub use client::{KvClient, NetLedger};
 pub use comm::{AsyncKvClient, CommHandle, DistPrefetcher, PullReq};
+pub use window::{InflightWindow, PopOutcome};
 pub use placement::Placement;
 pub use protocol::TableId;
 pub use server::{KvServer, ServerState};

@@ -64,6 +64,8 @@ pub fn write_frame(stream: &mut impl Write, opcode: u8, payload: &[u8]) -> Resul
 pub fn read_frame(stream: &mut impl Read) -> Result<(u8, Vec<u8>)> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
+    // lint:allow(narrowing-cast) — u32 → usize cannot truncate on the
+    // supported (>= 32-bit) targets, and the bound check below caps it
     let len = u32::from_le_bytes(len_buf) as usize;
     if len == 0 || len > (1 << 30) {
         bail!("bad frame length {len}");
@@ -88,7 +90,9 @@ pub fn split_tag(payload: &[u8]) -> Result<(u32, &[u8])> {
     if payload.len() < 4 {
         bail!("tagged frame too short ({} bytes)", payload.len());
     }
-    Ok((u32::from_le_bytes(payload[..4].try_into().unwrap()), &payload[4..]))
+    let mut tag = [0u8; 4];
+    tag.copy_from_slice(&payload[..4]); // length checked above
+    Ok((u32::from_le_bytes(tag), &payload[4..]))
 }
 
 /// PULL request: (table, slots).

@@ -53,6 +53,9 @@ impl ServerState {
             seed,
             &StoreConfig::dense(),
         )
+        // lint:allow(unwrap-ban) — startup path; the dense backend's init
+        // is infallible (no files, no allocation beyond Vec), so a panic
+        // here means a programming error, not an I/O condition to handle
         .expect("dense server shard init cannot fail")
     }
 
@@ -160,6 +163,10 @@ impl KvServer {
                 // accept loop; connection threads detach and exit on STOP /
                 // socket close
                 for conn in listener.incoming() {
+                    // Relaxed: the stop flag is a pure shutdown signal — no
+                    // data is published through it; the self-connect poke in
+                    // shutdown() guarantees one more accept() wakeup after
+                    // the store (docs/CONCURRENCY.md, "Relaxed allowlist")
                     if accept_stop.load(Ordering::Relaxed) {
                         break;
                     }
@@ -171,6 +178,11 @@ impl KvServer {
                                 .spawn(move || {
                                     let _ = serve_connection(stream, &st);
                                 })
+                                // lint:allow(unwrap-ban) — thread-spawn
+                                // failure (OOM-level) inside the detached
+                                // accept loop has no channel back to the
+                                // caller; a loud panic beats a server that
+                                // silently stops accepting
                                 .expect("spawn conn thread");
                         }
                         Err(_) => break,

@@ -1,0 +1,230 @@
+//! Bounded in-flight request window of one remote KVStore link.
+//!
+//! Extracted from `comm.rs` so the invariants can be model-checked
+//! without a TCP socket in the loop (`rust/tests/loom_tests.rs`): the
+//! window is the *entire* synchronization between a link's writer thread
+//! (enqueues a pending entry per written frame, bounded at `capacity`)
+//! and its reader thread (pops the front entry per response frame).
+//!
+//! Invariants (cataloged in docs/CONCURRENCY.md, verified under loom):
+//!
+//! * **FIFO matching** — entries pop in enqueue order, which is frame
+//!   submission order; the reader can therefore match each response to
+//!   the front entry and verify its echoed tag.
+//! * **Drain sees every prior push** — a barrier entry enqueued after N
+//!   pushes is popped only after those N entries, so acking it proves
+//!   every prior frame was answered.
+//! * **No deadlock at a full window** — `enqueue` blocks on `space`,
+//!   which every pop signals; `fail` wakes both sides.
+//! * **Failure delivery** — after `fail()`, every blocked or future
+//!   `enqueue` returns its entry to the caller (who delivers the error
+//!   to any waiting reply channel) and `pop` reports `Failed`; nothing
+//!   blocks forever on a dead link.
+//!
+//! Lock order: the single internal mutex is the only lock held; callers
+//! never hold it (entries are returned by value), so the window cannot
+//! participate in a lock cycle.
+
+use crate::util::sync::{Condvar, Mutex, MutexGuard};
+use std::collections::VecDeque;
+
+struct WindowState<T> {
+    q: VecDeque<T>,
+    /// producer hung up; consumers exit once the queue empties
+    closed: bool,
+    /// I/O failed; both sides bail out
+    failed: bool,
+}
+
+/// Outcome of [`InflightWindow::pop`].
+pub enum PopOutcome<T> {
+    Entry(T),
+    /// closed and fully drained
+    Closed,
+    /// the link failed; the failing side already drained the queue
+    Failed,
+}
+
+/// Bounded FIFO window shared by a link's writer (pushes back) and reader
+/// (pops front). See the module docs for the invariants.
+pub struct InflightWindow<T> {
+    state: Mutex<WindowState<T>>,
+    nonempty: Condvar,
+    space: Condvar,
+    capacity: usize,
+}
+
+impl<T> InflightWindow<T> {
+    /// A window admitting at most `capacity` (>= 1) in-flight entries.
+    pub fn new(capacity: usize) -> Self {
+        InflightWindow {
+            state: Mutex::new(WindowState { q: VecDeque::new(), closed: false, failed: false }),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Poison-tolerant lock: a panicking peer thread must not turn every
+    /// subsequent window op into a panic of its own — the I/O loops
+    /// degrade to the `failed` path instead (no `.unwrap()` in
+    /// helper-thread code, enforced by `xtask lint`).
+    fn lock_state(&self) -> MutexGuard<'_, WindowState<T>> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Append an entry, blocking while the window is full. Returns the
+    /// entry back when the link has failed, so the caller can deliver the
+    /// failure to whoever waits on it.
+    pub fn enqueue(&self, entry: T) -> Result<(), T> {
+        let mut st = self.lock_state();
+        while st.q.len() >= self.capacity && !st.failed {
+            st = match self.space.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        if st.failed {
+            return Err(entry);
+        }
+        st.q.push_back(entry);
+        drop(st);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Pop the oldest entry, blocking while the window is empty and
+    /// neither closed nor failed.
+    pub fn pop(&self) -> PopOutcome<T> {
+        let mut st = self.lock_state();
+        loop {
+            if st.failed {
+                return PopOutcome::Failed;
+            }
+            if let Some(p) = st.q.pop_front() {
+                drop(st);
+                self.space.notify_one();
+                return PopOutcome::Entry(p);
+            }
+            if st.closed {
+                return PopOutcome::Closed;
+            }
+            st = match self.nonempty.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Mark the link failed, wake everything blocked on it, and hand the
+    /// still-queued entries to the caller for failure delivery.
+    pub fn fail(&self) -> Vec<T> {
+        let mut st = self.lock_state();
+        st.failed = true;
+        let drained: Vec<T> = st.q.drain(..).collect();
+        drop(st);
+        self.nonempty.notify_all();
+        self.space.notify_all();
+        drained
+    }
+
+    /// Producer hang-up: consumers drain the remaining entries, then see
+    /// [`PopOutcome::Closed`].
+    pub fn close(&self) {
+        let mut st = self.lock_state();
+        st.closed = true;
+        drop(st);
+        self.nonempty.notify_all();
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.lock_state().failed
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock_state().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_fifo_order() {
+        let w = InflightWindow::new(8);
+        for i in 0..5 {
+            w.enqueue(i).map_err(|_| "failed").unwrap();
+        }
+        for i in 0..5 {
+            match w.pop() {
+                PopOutcome::Entry(v) => assert_eq!(v, i),
+                _ => panic!("expected entry {i}"),
+            }
+        }
+        w.close();
+        assert!(matches!(w.pop(), PopOutcome::Closed));
+    }
+
+    #[test]
+    fn full_window_blocks_until_pop() {
+        let w = InflightWindow::new(2);
+        w.enqueue(0u32).map_err(|_| "failed").unwrap();
+        w.enqueue(1).map_err(|_| "failed").unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // blocks until the consumer below makes space
+                w.enqueue(2).map_err(|_| "failed").unwrap();
+                w.close();
+            });
+            let mut seen = Vec::new();
+            loop {
+                match w.pop() {
+                    PopOutcome::Entry(v) => seen.push(v),
+                    PopOutcome::Closed => break,
+                    PopOutcome::Failed => panic!("window failed"),
+                }
+            }
+            assert_eq!(seen, vec![0, 1, 2]);
+        });
+        assert!(w.is_empty());
+        assert_eq!(w.capacity(), 2);
+    }
+
+    #[test]
+    fn fail_drains_and_rejects() {
+        let w = InflightWindow::new(4);
+        w.enqueue("a").map_err(|_| "failed").unwrap();
+        w.enqueue("b").map_err(|_| "failed").unwrap();
+        let drained = w.fail();
+        assert_eq!(drained, vec!["a", "b"]);
+        assert!(w.is_failed());
+        assert_eq!(w.enqueue("c"), Err("c"));
+        assert!(matches!(w.pop(), PopOutcome::Failed));
+    }
+
+    #[test]
+    fn fail_releases_blocked_producer() {
+        let w = InflightWindow::new(1);
+        w.enqueue(0u8).map_err(|_| "failed").unwrap();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| w.enqueue(1)); // blocks: window full
+            // give the producer a moment to block, then fail the link
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let drained = w.fail();
+            assert_eq!(drained, vec![0]);
+            assert_eq!(h.join().unwrap(), Err(1), "blocked enqueue must get its entry back");
+        });
+    }
+}

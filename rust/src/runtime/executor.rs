@@ -32,8 +32,7 @@ impl XlaRuntime {
 
 fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
     debug_assert_eq!(data.len(), dims.iter().product::<usize>());
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let bytes = crate::util::bytes::f32_as_bytes(data);
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
 }
 

@@ -46,10 +46,10 @@
 //! the GPU transfer ledger (`train::worker::WorkerCtx::bill_gather`).
 
 use super::{CacheStats, EmbeddingStore};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// Sentinel row id for an empty slot.
 const EMPTY: usize = usize::MAX;
@@ -104,12 +104,18 @@ pub struct CachedStore {
     dim: usize,
     stripes: Vec<Mutex<Stripe>>,
     capacity_rows: usize,
+    // Memory-ordering audit (docs/CONCURRENCY.md, "Relaxed allowlist"):
+    // all five counters below are statistics only — nothing reads them to
+    // decide data visibility, and every mutation happens while the owning
+    // stripe lock is (or was just) held, so `Relaxed` is sufficient. The
+    // cache's *data* consistency comes entirely from the stripe mutexes.
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     write_backs: AtomicU64,
     /// slots with allocated storage (monotone up to capacity): the
-    /// cache's contribution to `resident_bytes`
+    /// cache's contribution to `resident_bytes` — advisory observability,
+    /// not a gate (the budget is enforced statically at spec time)
     resident_rows: AtomicU64,
 }
 
@@ -120,6 +126,8 @@ impl CachedStore {
     /// for an explicit row count.
     pub fn new(inner: Box<dyn EmbeddingStore>, cache_bytes: u64) -> CachedStore {
         let row_bytes = (inner.dim().max(1) * 4) as u64;
+        // lint:allow(narrowing-cast) — the quotient is clamped to
+        // [1, rows] by with_capacity_rows immediately below
         let cap = (cache_bytes / row_bytes) as usize;
         Self::with_capacity_rows(inner, cap)
     }

@@ -11,24 +11,23 @@
 //! Safety contract: races on individual f32 lanes may produce stale or
 //! torn values — that is *by design* (same as the paper/PyTorch shared
 //! tensors); it never produces out-of-bounds access, and `f32` loads and
-//! stores on x86-64 are individually atomic at the hardware level.
+//! stores on x86-64 are individually atomic at the hardware level. The
+//! aliasing itself lives in [`crate::store::racy::RacyCell`] — the one
+//! quarantined site the sanitizer lanes suppress (docs/CONCURRENCY.md,
+//! "Intentional races").
 
+use super::racy::RacyCell;
 use super::EmbeddingStore;
-use std::cell::UnsafeCell;
 
 pub struct DenseStore {
-    data: UnsafeCell<Vec<f32>>,
+    data: RacyCell<Vec<f32>>,
     rows: usize,
     dim: usize,
 }
 
-// Hogwild: see module docs.
-unsafe impl Sync for DenseStore {}
-unsafe impl Send for DenseStore {}
-
 impl DenseStore {
     pub fn zeros(rows: usize, dim: usize) -> Self {
-        DenseStore { data: UnsafeCell::new(vec![0f32; rows * dim]), rows, dim }
+        DenseStore { data: RacyCell::new(vec![0f32; rows * dim]), rows, dim }
     }
 
     /// DGL-KE-style init: uniform in [-init_scale, init_scale), per-row
@@ -43,8 +42,12 @@ impl DenseStore {
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.rows);
+        // SAFETY: RacyCell Hogwild contract (store::racy module docs /
+        // docs/CONCURRENCY.md): the view may race with writers at f32
+        // granularity; `i < rows` keeps the slice in bounds; the Vec is
+        // never reallocated after construction.
         unsafe {
-            let v = &*self.data.get();
+            let v = self.data.get_ref();
             std::slice::from_raw_parts(v.as_ptr().add(i * self.dim), self.dim)
         }
     }
@@ -52,13 +55,16 @@ impl DenseStore {
     /// Mutable view of row `i`.
     ///
     /// # Safety
-    /// Caller must accept Hogwild races: concurrent writers to the same row
-    /// interleave at f32 granularity.
+    /// Caller must accept Hogwild races (the [`crate::store::racy`]
+    /// contract): concurrent writers to the same row interleave at f32
+    /// granularity.
     #[allow(clippy::mut_from_ref)]
     #[inline]
     pub unsafe fn row_mut(&self, i: usize) -> &mut [f32] {
         debug_assert!(i < self.rows);
-        let v = &mut *self.data.get();
+        // SAFETY: propagates the caller's acceptance of the RacyCell
+        // contract; bounds and no-realloc as in `row`.
+        let v = self.data.get_mut();
         std::slice::from_raw_parts_mut(v.as_mut_ptr().add(i * self.dim), self.dim)
     }
 }
@@ -84,6 +90,7 @@ impl EmbeddingStore for DenseStore {
     #[inline]
     fn set_row(&self, i: usize, values: &[f32]) {
         debug_assert_eq!(values.len(), self.dim);
+        // SAFETY: Hogwild write under the RacyCell contract (row_mut docs).
         unsafe {
             self.row_mut(i).copy_from_slice(values);
         }
@@ -91,6 +98,7 @@ impl EmbeddingStore for DenseStore {
 
     #[inline]
     fn update_row(&self, i: usize, f: &mut dyn FnMut(&mut [f32])) {
+        // SAFETY: Hogwild read-modify-write under the RacyCell contract.
         f(unsafe { self.row_mut(i) });
     }
 
@@ -103,19 +111,23 @@ impl EmbeddingStore for DenseStore {
 
     fn set_rows(&self, first_row: usize, values: &[f32]) {
         debug_assert!(first_row * self.dim + values.len() <= self.rows * self.dim);
+        // SAFETY: bulk Hogwild write under the RacyCell contract; the
+        // debug_assert bounds the copy inside the backing Vec.
         unsafe {
-            let v = &mut *self.data.get();
+            let v = self.data.get_mut();
             let dst = v.as_mut_ptr().add(first_row * self.dim);
             std::ptr::copy_nonoverlapping(values.as_ptr(), dst, values.len());
         }
     }
 
     fn resident_bytes(&self) -> u64 {
-        (self.rows * self.dim * 4) as u64
+        self.rows as u64 * self.dim as u64 * 4
     }
 
     fn snapshot(&self) -> Vec<f32> {
-        unsafe { (*self.data.get()).clone() }
+        // SAFETY: Hogwild read under the RacyCell contract — the clone may
+        // observe in-flight writes, value-level stale as documented.
+        unsafe { self.data.get_ref().clone() }
     }
 }
 

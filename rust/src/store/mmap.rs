@@ -104,11 +104,8 @@ impl EmbeddingStore for MmapStore {
 
     fn read_row(&self, i: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.dim);
-        let bytes = unsafe {
-            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
-        };
         self.file
-            .read_exact_at(bytes, self.offset(i))
+            .read_exact_at(crate::util::bytes::f32_as_bytes_mut(out), self.offset(i))
             .expect("MmapStore: backing-file read failed");
     }
 

@@ -34,6 +34,7 @@ pub mod cache;
 pub mod dense;
 pub mod gradients;
 pub mod mmap;
+pub mod racy;
 pub mod sharded;
 
 pub use adagrad::SparseAdagrad;

@@ -1,0 +1,106 @@
+//! The quarantined Hogwild cell: **every** intentional data race in this
+//! repo flows through [`RacyCell`].
+//!
+//! The paper trains Hogwild (§2, citing [14]): multiple trainer threads
+//! read and write rows of the shared embedding tensors without locks,
+//! accepting benign races because large entity counts make row collisions
+//! rare. That is undefined behavior by the letter of the Rust memory
+//! model, so it is *contained* here rather than scattered: sanitizer
+//! lanes (Miri, ThreadSanitizer) quarantine exactly this type — see
+//! `tsan-suppressions.txt` and the `miri`/`tsan` CI jobs — which makes
+//! any race *outside* `RacyCell` a hard CI failure instead of noise.
+//! The full contract is cataloged in `docs/CONCURRENCY.md` ("Intentional
+//! races").
+//!
+//! Contract accepted by every caller of the unsafe accessors:
+//!
+//! * Aliased `&mut` views may exist concurrently; racing writes to the
+//!   same f32 lane interleave at 4-byte granularity (x86-64 aligned
+//!   loads/stores are individually atomic at hardware level) — stale or
+//!   mixed-lane values are possible, torn *bytes within one f32* are not
+//!   on the supported targets.
+//! * Accesses must stay in bounds of the wrapped value; the cell adds no
+//!   bounds of its own.
+//! * The wrapped value must never be structurally mutated through the
+//!   cell (no `Vec` growth/realloc) while shared — callers only mutate
+//!   element contents.
+
+use std::cell::UnsafeCell;
+
+/// A `Sync` cell handing out intentionally-racy views of its contents.
+/// See the module docs for the Hogwild contract.
+pub struct RacyCell<T>(UnsafeCell<T>);
+
+// SAFETY: RacyCell exists to permit cross-thread aliased access as a
+// deliberate Hogwild policy (module docs; docs/CONCURRENCY.md). `T: Send`
+// bounds keep non-thread-safe payloads (Rc, etc.) out. This is the one
+// sanctioned `unsafe impl` pair for shared mutation in the repo.
+unsafe impl<T: Send> Sync for RacyCell<T> {}
+// SAFETY: the cell owns its value; moving it between threads is as safe
+// as moving `T` itself.
+unsafe impl<T: Send> Send for RacyCell<T> {}
+
+impl<T> RacyCell<T> {
+    pub const fn new(value: T) -> Self {
+        RacyCell(UnsafeCell::new(value))
+    }
+
+    /// Raw pointer to the contents (always safe to form; dereferencing is
+    /// subject to the module contract).
+    #[inline]
+    pub fn get_ptr(&self) -> *mut T {
+        self.0.get()
+    }
+
+    /// Shared view that may observe concurrent writes.
+    ///
+    /// # Safety
+    /// Caller accepts the module-level Hogwild contract: the view races
+    /// with concurrent `get_mut` writers at f32/word granularity.
+    #[inline]
+    pub unsafe fn get_ref(&self) -> &T {
+        &*self.0.get()
+    }
+
+    /// Aliased mutable view.
+    ///
+    /// # Safety
+    /// Caller accepts the module-level Hogwild contract: other `&mut`
+    /// views of the same value may exist concurrently; no structural
+    /// mutation (e.g. `Vec` realloc) is allowed, only element writes.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn get_mut(&self) -> &mut T {
+        &mut *self.0.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_read_write_roundtrip() {
+        let c = RacyCell::new(vec![0f32; 4]);
+        unsafe { c.get_mut()[2] = 7.5 };
+        assert_eq!(unsafe { c.get_ref() }[2], 7.5);
+        assert_eq!(unsafe { c.get_ref() }.len(), 4);
+    }
+
+    #[test]
+    fn disjoint_concurrent_writes_all_land() {
+        // Disjoint-index writes are race-free even under the quarantine
+        // type (each lane has exactly one writer) — Miri-clean.
+        let c = RacyCell::new(vec![0u32; 32]);
+        crate::util::threadpool::scoped_map(4, |w| {
+            for i in 0..8 {
+                let idx = w * 8 + i;
+                unsafe { c.get_mut()[idx] = idx as u32 };
+            }
+        });
+        let v = unsafe { c.get_ref() };
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+}

@@ -47,10 +47,10 @@ use crate::models::step::StepShape;
 use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
 use crate::store::EmbeddingStore;
 use crate::util::timer::PhaseTimes;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use crate::util::sync::Arc;
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
-use std::sync::Arc;
 use std::thread::{Scope, ScopedJoinHandle};
 
 /// A sampled + gathered batch, ready for compute.
@@ -105,13 +105,17 @@ impl<'scope> Prefetcher<'scope> {
         rel_dim: usize,
         depth: usize,
         applied: Arc<AtomicU64>,
-    ) -> Prefetcher<'scope> {
+    ) -> Result<Prefetcher<'scope>> {
         let depth = depth.max(2);
         let (out_tx, out_rx) = sync_channel::<PrefetchedBatch>(depth);
         let (free_tx, free_rx) = sync_channel::<BatchBuffers>(depth);
-        let (ctrl_tx, ctrl_rx) = std::sync::mpsc::channel::<Ctrl>();
+        let (ctrl_tx, ctrl_rx) = crate::util::sync::mpsc::channel::<Ctrl>();
         for _ in 0..depth {
-            free_tx.send(BatchBuffers::new(&shape, rel_dim)).expect("seeding buffer pool");
+            // capacity == depth and free_rx is alive, so this only fails
+            // if the runtime is already broken — surface it, don't panic
+            free_tx
+                .send(BatchBuffers::new(&shape, rel_dim))
+                .map_err(|_| anyhow!("prefetch buffer pool channel closed during seeding"))?;
         }
 
         let handle = std::thread::Builder::new()
@@ -153,9 +157,9 @@ impl<'scope> Prefetcher<'scope> {
                 }
                 pt
             })
-            .expect("spawn prefetch thread");
+            .map_err(|e| anyhow!("spawning prefetch thread: {e}"))?;
 
-        Prefetcher { out_rx, free_tx, ctrl_tx, generation: 0, handle: Some(handle) }
+        Ok(Prefetcher { out_rx, free_tx, ctrl_tx, generation: 0, handle: Some(handle) })
     }
 
     /// Receive the next batch of the current generation, transparently
@@ -192,10 +196,13 @@ impl<'scope> Prefetcher<'scope> {
     /// Stop the thread and return its accumulated [`PhaseTimes`]
     /// (`prefetch.sample` / `prefetch.gather` — the overlapped, off-
     /// critical-path work).
-    pub fn finish(mut self) -> PhaseTimes {
-        let handle = self.handle.take().expect("finish called once");
+    pub fn finish(mut self) -> Result<PhaseTimes> {
+        let handle = self
+            .handle
+            .take()
+            .ok_or_else(|| anyhow!("prefetcher already finished"))?;
         drop(self); // closes out_rx + free_tx: the thread's send/recv fails
-        handle.join().expect("prefetch thread panicked")
+        handle.join().map_err(|_| anyhow!("prefetch thread panicked"))
     }
 }
 
@@ -248,7 +255,8 @@ mod tests {
                 8,
                 2,
                 applied.clone(),
-            );
+            )
+            .unwrap();
             let mut idx_buf = Vec::new();
             let mut seq_buf = BatchBuffers::new(&SHAPE, 8);
             for step in 0..40u64 {
@@ -267,7 +275,7 @@ mod tests {
                 applied.store(step + 1, Ordering::Release);
                 pf.recycle(pb);
             }
-            let pt = pf.finish();
+            let pt = pf.finish().unwrap();
             assert!(
                 pt.entries().iter().any(|(p, _)| *p == "prefetch.sample"),
                 "helper thread must report its sample phase"
@@ -283,7 +291,8 @@ mod tests {
         std::thread::scope(|s| {
             let mut pf = Prefetcher::spawn_scoped(
                 s, pos, neg, &store, entities, relations, SHAPE, 8, 2, applied,
-            );
+            )
+            .unwrap();
             // take one batch, then reset to a narrow index window
             let pb = pf.recv().unwrap();
             pf.recycle(pb);
@@ -301,7 +310,7 @@ mod tests {
                 }
                 pf.recycle(pb);
             }
-            pf.finish();
+            pf.finish().unwrap();
         });
     }
 
@@ -315,7 +324,8 @@ mod tests {
             let mut pf = Prefetcher::spawn_scoped(
                 s, pos, neg, &store, entities, relations, SHAPE, 8, depth,
                 applied.clone(),
-            );
+            )
+            .unwrap();
             let mut last_stamp = 0u64;
             for step in 0..30u64 {
                 let pb = pf.recv().unwrap();
@@ -331,7 +341,7 @@ mod tests {
                 applied.store(step + 1, Ordering::Release);
                 pf.recycle(pb);
             }
-            pf.finish();
+            pf.finish().unwrap();
         });
     }
 }

@@ -6,7 +6,7 @@
 //! coordination point for per-epoch relation-partition reshuffles (§3.4).
 
 use crate::partition::RelationPartition;
-use std::sync::{Barrier, RwLock};
+use crate::util::sync::{Barrier, RwLock};
 
 /// Shared sync state for one training run.
 pub struct SyncState {

@@ -32,9 +32,9 @@ use crate::runtime::{BackendKind, Manifest, TrainBackend};
 use crate::sampler::{Batch, NegativeConfig, NegativeSampler, PositiveSampler};
 use crate::store::{split_cache_budget, CacheStats, EmbeddingStore, SparseAdagrad, StoreConfig};
 use crate::util::timer::{PhaseTimes, Timer};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 use anyhow::Result;
 use std::collections::{HashSet, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 #[derive(Clone, Debug)]
@@ -566,7 +566,7 @@ fn run_pipelined<'a>(
             rel_dim,
             depth,
             applied.clone(),
-        );
+        )?;
         // ids written inline per recent step, newest at the back; sized
         // so it always covers every update a live stamp can predate
         let mut written: VecDeque<WrittenIds> = VecDeque::new();
@@ -635,7 +635,7 @@ fn run_pipelined<'a>(
         }
         // fold the helper thread's (overlapped) sample/gather time into
         // this worker's phase report
-        ctx.phases.merge(&pf.finish());
+        ctx.phases.merge(&pf.finish()?);
         Ok(())
     })
 }

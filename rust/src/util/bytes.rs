@@ -143,8 +143,32 @@ impl<'a> Reader<'a> {
 }
 
 /// Reinterpret an f32 slice as bytes (for bulk I/O of embedding rows).
+///
+/// This and [`f32_as_bytes_mut`] are the repo's *only* sanctioned
+/// slice-reinterpret sites — every bulk f32↔byte view (mmap row I/O,
+/// checkpoint load, PJRT literal upload) routes through them so the
+/// soundness argument is audited once (see `unsafe-budget.toml`).
+/// Byte order is the host's; all on-disk/wire users are little-endian
+/// by protocol contract.
 pub fn f32_as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: `f32` is a plain-old-data type with no padding or invalid
+    // bit patterns, so any f32 is 4 valid bytes. The output pointer and
+    // length cover exactly the input slice (align 4 → align 1 is always
+    // valid; `len * 4` cannot overflow because the slice already occupies
+    // `len * 4` addressable bytes). Lifetime and aliasing mirror the
+    // input `&[f32]` borrow.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Mutable byte view of an f32 slice (decode straight into a reused f32
+/// buffer: mmap `read_row`, checkpoint load). Same audited contract as
+/// [`f32_as_bytes`].
+pub fn f32_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    // SAFETY: as in `f32_as_bytes`, plus: every byte pattern is a valid
+    // f32 bit pattern, so arbitrary writes through the byte view leave
+    // the f32 slice initialized and valid. The unique `&mut` borrow of
+    // the input is threaded through to the output, so no aliasing.
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4) }
 }
 
 /// Copy bytes into an f32 vec (len must be a multiple of 4).
@@ -205,5 +229,14 @@ mod tests {
     fn f32_bytes_roundtrip() {
         let v = vec![1.0f32, -2.5, 3.25];
         assert_eq!(bytes_to_f32(f32_as_bytes(&v)), v);
+    }
+
+    #[test]
+    fn f32_bytes_mut_writes_through() {
+        let src = [1.0f32, -2.5, 3.25];
+        let mut dst = vec![0f32; 3];
+        f32_as_bytes_mut(&mut dst).copy_from_slice(f32_as_bytes(&src));
+        assert_eq!(dst, src);
+        assert_eq!(f32_as_bytes_mut(&mut dst).len(), 12);
     }
 }

@@ -5,6 +5,7 @@ pub mod alias;
 pub mod bytes;
 pub mod cputime;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 pub mod json;
 pub mod timer;

@@ -1,0 +1,320 @@
+//! Synchronization abstraction layer for loom-style model checking.
+//!
+//! Every concurrency-critical module (`store::cache`, `store::racy`,
+//! `train::prefetch`, `train::sync`, `kvstore::window`, `kvstore::comm`)
+//! imports its primitives from here instead of `std::sync`:
+//!
+//! * **Normal builds** (`cfg(not(loom))`): pure re-exports of `std::sync`
+//!   — zero-cost, type-identical to using std directly.
+//! * **Model-checking builds** (`RUSTFLAGS="--cfg loom"`): drop-in
+//!   wrapper types that delegate to std but inject deterministic,
+//!   seed-varied scheduling perturbation (`yield`/short sleeps) at every
+//!   synchronization point, and a [`model`] runner that executes a test
+//!   closure under many distinct perturbation seeds.
+//!
+//! The wrappers are API-compatible with the `loom` crate's model for the
+//! subset this repo uses, so when a vendored `loom` becomes available the
+//! `cfg(loom)` arm can re-export `loom::sync` instead with no call-site
+//! changes. Until then the harness is a *bounded stress exploration*, not
+//! an exhaustive interleaving proof: it widens the schedule space far
+//! beyond what a bare `cargo test` run explores (every lock acquisition,
+//! atomic op, and channel op is a potential preemption point), which is
+//! what catches lost-wakeup, lost-write-back, and ordering bugs in
+//! practice. The invariants each loom test checks are cataloged in
+//! `docs/CONCURRENCY.md`.
+//!
+//! Tests live in `rust/tests/loom_tests.rs` (gated `#![cfg(loom)]`) and
+//! run via `make loom`.
+
+#[cfg(not(loom))]
+mod imp {
+    pub use std::sync::atomic;
+    pub use std::sync::mpsc;
+    pub use std::sync::{
+        Arc, Barrier, BarrierWaitResult, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+        RwLockWriteGuard,
+    };
+
+    /// Scheduling perturbation point — a no-op outside loom builds.
+    #[inline(always)]
+    pub fn explore() {}
+
+    /// Run `f` once (the loom build runs it under many schedules).
+    pub fn model<F: FnMut()>(mut f: F) {
+        f();
+    }
+}
+
+#[cfg(loom)]
+mod imp {
+    use std::cell::Cell;
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    use std::sync::atomic::AtomicU64 as StdAtomicU64;
+    use std::sync::atomic::Ordering as StdOrdering;
+    use std::time::Duration;
+
+    pub use std::sync::{
+        Arc, BarrierWaitResult, MutexGuard, RwLockReadGuard, RwLockWriteGuard,
+    };
+
+    /// Seed of the current model iteration (0 outside [`model`]).
+    static MODEL_SEED: StdAtomicU64 = StdAtomicU64::new(0);
+
+    thread_local! {
+        static RNG: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Scheduling perturbation point: with per-thread seeded xorshift
+    /// state, sometimes yield, sometimes briefly sleep, usually proceed.
+    /// Called by every wrapper on every synchronization operation.
+    pub fn explore() {
+        RNG.with(|r| {
+            let mut s = r.get();
+            if s == 0 {
+                // lazily mix the model seed with this thread's identity so
+                // sibling threads diverge within one iteration
+                let mut h = DefaultHasher::new();
+                std::thread::current().id().hash(&mut h);
+                s = (MODEL_SEED.load(StdOrdering::Relaxed) ^ h.finish()) | 1;
+            }
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            r.set(s);
+            match s % 16 {
+                0..=4 => std::thread::yield_now(),
+                5 => std::thread::sleep(Duration::from_micros(s % 61)),
+                _ => {}
+            }
+        });
+    }
+
+    /// Run `f` under many perturbation seeds (default 48; override with
+    /// `LOOM_MAX_ITERS`). The analogue of `loom::model`.
+    pub fn model<F: FnMut()>(mut f: F) {
+        let iters: u64 = std::env::var("LOOM_MAX_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48);
+        for i in 0..iters {
+            MODEL_SEED.store(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i + 1), StdOrdering::Relaxed);
+            RNG.with(|r| r.set(0)); // reseed the driver thread per iteration
+            f();
+        }
+    }
+
+    pub struct Mutex<T>(std::sync::Mutex<T>);
+
+    impl<T> Mutex<T> {
+        pub const fn new(v: T) -> Self {
+            Mutex(std::sync::Mutex::new(v))
+        }
+
+        pub fn lock(&self) -> std::sync::LockResult<MutexGuard<'_, T>> {
+            explore();
+            let g = self.0.lock();
+            explore();
+            g
+        }
+    }
+
+    pub struct Condvar(std::sync::Condvar);
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Condvar(std::sync::Condvar::new())
+        }
+
+        pub fn wait<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+        ) -> std::sync::LockResult<MutexGuard<'a, T>> {
+            explore();
+            self.0.wait(guard)
+        }
+
+        pub fn notify_one(&self) {
+            explore();
+            self.0.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            explore();
+            self.0.notify_all();
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    pub struct RwLock<T>(std::sync::RwLock<T>);
+
+    impl<T> RwLock<T> {
+        pub const fn new(v: T) -> Self {
+            RwLock(std::sync::RwLock::new(v))
+        }
+
+        pub fn read(&self) -> std::sync::LockResult<RwLockReadGuard<'_, T>> {
+            explore();
+            self.0.read()
+        }
+
+        pub fn write(&self) -> std::sync::LockResult<RwLockWriteGuard<'_, T>> {
+            explore();
+            self.0.write()
+        }
+    }
+
+    pub struct Barrier(std::sync::Barrier);
+
+    impl Barrier {
+        pub fn new(n: usize) -> Self {
+            Barrier(std::sync::Barrier::new(n))
+        }
+
+        pub fn wait(&self) -> BarrierWaitResult {
+            explore();
+            let r = self.0.wait();
+            explore();
+            r
+        }
+    }
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! perturbed_atomic {
+            ($name:ident, $inner:path, $ty:ty) => {
+                #[derive(Default)]
+                pub struct $name($inner);
+
+                impl $name {
+                    pub const fn new(v: $ty) -> Self {
+                        $name(<$inner>::new(v))
+                    }
+
+                    pub fn load(&self, o: Ordering) -> $ty {
+                        super::explore();
+                        self.0.load(o)
+                    }
+
+                    pub fn store(&self, v: $ty, o: Ordering) {
+                        super::explore();
+                        self.0.store(v, o);
+                        super::explore();
+                    }
+
+                    pub fn fetch_add(&self, v: $ty, o: Ordering) -> $ty {
+                        super::explore();
+                        let r = self.0.fetch_add(v, o);
+                        super::explore();
+                        r
+                    }
+
+                    pub fn fetch_sub(&self, v: $ty, o: Ordering) -> $ty {
+                        super::explore();
+                        let r = self.0.fetch_sub(v, o);
+                        super::explore();
+                        r
+                    }
+                }
+            };
+        }
+
+        perturbed_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        perturbed_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+        #[derive(Default)]
+        pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+        impl AtomicBool {
+            pub const fn new(v: bool) -> Self {
+                AtomicBool(std::sync::atomic::AtomicBool::new(v))
+            }
+
+            pub fn load(&self, o: Ordering) -> bool {
+                super::explore();
+                self.0.load(o)
+            }
+
+            pub fn store(&self, v: bool, o: Ordering) {
+                super::explore();
+                self.0.store(v, o);
+                super::explore();
+            }
+        }
+    }
+
+    pub mod mpsc {
+        pub use std::sync::mpsc::{RecvError, SendError, TryRecvError, TrySendError};
+
+        pub struct Sender<T>(std::sync::mpsc::Sender<T>);
+
+        impl<T> Clone for Sender<T> {
+            fn clone(&self) -> Self {
+                Sender(self.0.clone())
+            }
+        }
+
+        impl<T> Sender<T> {
+            pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+                super::explore();
+                self.0.send(v)
+            }
+        }
+
+        pub struct SyncSender<T>(std::sync::mpsc::SyncSender<T>);
+
+        impl<T> Clone for SyncSender<T> {
+            fn clone(&self) -> Self {
+                SyncSender(self.0.clone())
+            }
+        }
+
+        impl<T> SyncSender<T> {
+            pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+                super::explore();
+                let r = self.0.send(v);
+                super::explore();
+                r
+            }
+
+            pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+                super::explore();
+                self.0.try_send(v)
+            }
+        }
+
+        pub struct Receiver<T>(std::sync::mpsc::Receiver<T>);
+
+        impl<T> Receiver<T> {
+            pub fn recv(&self) -> Result<T, RecvError> {
+                super::explore();
+                let r = self.0.recv();
+                super::explore();
+                r
+            }
+
+            pub fn try_recv(&self) -> Result<T, TryRecvError> {
+                super::explore();
+                self.0.try_recv()
+            }
+        }
+
+        pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+            let (tx, rx) = std::sync::mpsc::channel();
+            (Sender(tx), Receiver(rx))
+        }
+
+        pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+            let (tx, rx) = std::sync::mpsc::sync_channel(bound);
+            (SyncSender(tx), Receiver(rx))
+        }
+    }
+}
+
+pub use imp::*;

@@ -1,0 +1,305 @@
+//! Concurrency model tests over `util::sync` (PR 6).
+//!
+//! Every test body runs under [`model`], which executes it once on the
+//! plain std primitives under normal `cargo test`, and many times under
+//! seeded schedule perturbation when the tree is built with
+//! `RUSTFLAGS="--cfg loom"` (`make loom`). The perturbed world injects
+//! yields/sleeps at every lock acquisition, atomic access, and channel
+//! op, exploring interleavings a single run would never hit; the shim is
+//! API-compatible with the real `loom` crate so these tests can move to
+//! exhaustive exploration unchanged once that dependency is available.
+//!
+//! Each test encodes one contract from docs/CONCURRENCY.md:
+//!
+//! 1. cache: no write-back is lost when eviction races `flush()`
+//! 2. cache: row updates are exact across eviction/refill cycles
+//! 3. prefetch: the applied-push stamp (Release) publishes the pushes it
+//!    counts to an Acquire reader — a patch never trusts a pre-stamp row
+//! 4. kvstore window: a drain barrier observes every prior push
+//! 5. kvstore window: a full in-flight window cannot deadlock
+//! 6. kvstore window: link failure neither loses nor duplicates entries
+//! 7. trainer barrier: exactly one leader per crossing
+//! 8. kvstore acks: per-link marks (Release/Acquire) publish server
+//!    effects — completion of a mark proves the pushes it counts applied
+
+use dglke::kvstore::{InflightWindow, PopOutcome};
+use dglke::store::{CachedStore, DenseStore, EmbeddingStore};
+use dglke::train::sync::SyncState;
+use dglke::util::sync::atomic::{AtomicU64, Ordering};
+use dglke::util::sync::{explore, model, Arc};
+
+/// 1. The write-back cache races a writer (forcing evictions, each
+/// writing back its dirty victim) against repeated `flush()` calls. No
+/// interleaving may lose a dirty row: after the dust settles, the
+/// *backing* store holds every written value.
+#[test]
+fn cache_concurrent_evict_flush_loses_no_writeback() {
+    model(|| {
+        // 48 rows through a 5-row, single-stripe cache: ~43 evictions
+        let cache = CachedStore::with_capacity_rows(Box::new(DenseStore::zeros(48, 2)), 5);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..48 {
+                    cache.set_row(i, &[i as f32, -(i as f32)]);
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..16 {
+                    explore();
+                    cache.flush().expect("dense-backed flush cannot fail");
+                }
+            });
+        });
+        cache.flush().expect("dense-backed flush cannot fail");
+        for i in 0..48 {
+            assert_eq!(
+                cache.inner().row_vec(i),
+                vec![i as f32, -(i as f32)],
+                "row {i}: write-back lost under concurrent evict+flush"
+            );
+        }
+    });
+}
+
+/// 2. Two threads increment every row through a capacity-starved cache,
+/// so increments land on cached rows, evicted-then-refilled rows, and
+/// rows mid-write-back. The stripe lock makes each read-modify-write
+/// atomic: the final count is exact, never lost or doubled.
+#[test]
+fn cache_concurrent_updates_are_exact() {
+    model(|| {
+        let cache = CachedStore::with_capacity_rows(Box::new(DenseStore::zeros(16, 1)), 3);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        for i in 0..16 {
+                            cache.update_row(i, &mut |row| row[0] += 1.0);
+                        }
+                    }
+                });
+            }
+        });
+        for i in 0..16 {
+            assert_eq!(cache.row_vec(i), vec![16.0], "row {i}: lost or doubled update");
+        }
+    });
+}
+
+/// 3. The prefetch-stamp protocol (train::prefetch, kvstore's
+/// DistPrefetcher, dist::advance_applied): the trainer applies a step's
+/// pushes, then advances `applied` with Release; the helper stamps each
+/// pull with an Acquire load. A stamp of S must prove the effects of all
+/// steps < S are visible — that is exactly what lets the trainer re-pull
+/// only rows pushed at or after the stamp (a "pre-stamp" row is
+/// guaranteed fresh and is never patched).
+#[test]
+fn applied_stamp_release_acquire_publishes_pushes() {
+    model(|| {
+        let applied = Arc::new(AtomicU64::new(0));
+        let pushes_applied = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            let stamp = applied.clone();
+            let srv = pushes_applied.clone();
+            s.spawn(move || {
+                for step in 1..=64u64 {
+                    srv.fetch_add(1, Ordering::Relaxed); // step's push applies
+                    stamp.store(step, Ordering::Release); // then the stamp advances
+                }
+            });
+            for _ in 0..64 {
+                explore();
+                let stamp = applied.load(Ordering::Acquire);
+                let seen = pushes_applied.load(Ordering::Relaxed);
+                assert!(
+                    seen >= stamp,
+                    "stamp {stamp} observed but only {seen} pushes visible: \
+                     a patch would trust a stale pre-stamp row"
+                );
+            }
+        });
+    });
+}
+
+enum Entry {
+    Push(u64),
+    /// barrier carrying the push count it must observe
+    Drain(u64),
+}
+
+/// 4. The drain barrier: an entry enqueued after N pushes pops only
+/// after all N — `drain()`'s ack therefore proves every prior push was
+/// answered. This is the FIFO half of the CommHandle::drain contract.
+#[test]
+fn window_drain_observes_every_prior_push() {
+    model(|| {
+        let win = Arc::new(InflightWindow::new(4));
+        std::thread::scope(|s| {
+            let w = win.clone();
+            s.spawn(move || {
+                let mut sent = 0u64;
+                for _ in 0..6 {
+                    for _ in 0..5 {
+                        sent += 1;
+                        assert!(w.enqueue(Entry::Push(sent)).is_ok());
+                    }
+                    assert!(w.enqueue(Entry::Drain(sent)).is_ok());
+                }
+                w.close();
+            });
+            let mut acked = 0u64;
+            loop {
+                match win.pop() {
+                    PopOutcome::Entry(Entry::Push(n)) => {
+                        assert_eq!(n, acked + 1, "push popped out of order");
+                        acked = n;
+                    }
+                    PopOutcome::Entry(Entry::Drain(expect)) => {
+                        assert_eq!(acked, expect, "drain popped before a prior push");
+                    }
+                    PopOutcome::Closed => break,
+                    PopOutcome::Failed => panic!("window failed"),
+                }
+            }
+            assert_eq!(acked, 30, "pushes lost");
+        });
+    });
+}
+
+/// 5. A window far smaller than the traffic it carries: the producer
+/// blocks on `space`, the consumer on `nonempty`, and every schedule
+/// must still move all 64 entries through in order — no lost-wakeup
+/// deadlock at the full-window boundary.
+#[test]
+fn full_inflight_window_never_deadlocks() {
+    model(|| {
+        let win = Arc::new(InflightWindow::new(2));
+        std::thread::scope(|s| {
+            let w = win.clone();
+            s.spawn(move || {
+                for i in 0..64u64 {
+                    assert!(w.enqueue(i).is_ok());
+                }
+                w.close();
+            });
+            let mut expect = 0u64;
+            loop {
+                match win.pop() {
+                    PopOutcome::Entry(v) => {
+                        assert_eq!(v, expect);
+                        expect += 1;
+                    }
+                    PopOutcome::Closed => break,
+                    PopOutcome::Failed => panic!("window failed"),
+                }
+            }
+            assert_eq!(expect, 64);
+        });
+    });
+}
+
+/// 6. Link failure: whatever the interleaving, every successfully
+/// enqueued entry is accounted for exactly once — popped by the reader
+/// or drained by `fail()` for failure delivery — and the blocked/next
+/// producer gets its entry back. Nothing is lost, nothing delivered
+/// twice, nothing blocks forever.
+#[test]
+fn window_failure_neither_loses_nor_duplicates_entries() {
+    model(|| {
+        let win = Arc::new(InflightWindow::new(2));
+        let mut popped = Vec::new();
+        let (enqueued, rejected, drained) = std::thread::scope(|s| {
+            let w = win.clone();
+            let producer = s.spawn(move || {
+                for i in 0..1000u64 {
+                    explore();
+                    if let Err(v) = w.enqueue(i) {
+                        return (i, Some(v));
+                    }
+                }
+                (1000, None)
+            });
+            for _ in 0..5 {
+                match win.pop() {
+                    PopOutcome::Entry(v) => popped.push(v),
+                    _ => panic!("window closed/failed before the reader was done"),
+                }
+            }
+            let drained = win.fail();
+            let (enqueued, rejected) = producer.join().expect("producer panicked");
+            (enqueued, rejected, drained)
+        });
+        // capacity 2 + 5 pops: the producer can never complete all 1000
+        let rejected = rejected.expect("producer must eventually hit the failed window");
+        assert_eq!(rejected, enqueued, "rejected entry returns to its caller");
+        let mut seen = popped;
+        seen.extend(drained);
+        let expect: Vec<u64> = (0..enqueued).collect();
+        assert_eq!(seen, expect, "every enqueued entry popped or drained exactly once");
+    });
+}
+
+/// 7. The trainer barrier (train::sync): every crossing elects exactly
+/// one leader, under any schedule — the leader slot is what serializes
+/// relation-partition reshuffles.
+#[test]
+fn barrier_elects_exactly_one_leader_per_crossing() {
+    model(|| {
+        let sync = SyncState::new(3, None);
+        let leaders = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        explore();
+                        if sync.wait() {
+                            leaders.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::Relaxed), 8, "one leader per crossing");
+    });
+}
+
+/// 8. Per-link ack marks (kvstore::comm): each link's reader applies a
+/// push's server-side effect, then acks with a Release increment; the
+/// trainer's `pushes_complete` does Acquire loads per link. Once a mark
+/// reads complete, the effects of every push it counts must be visible —
+/// on *every* link: a fast link's acks must not stand in for a slow one.
+#[test]
+fn per_link_ack_marks_publish_server_effects() {
+    model(|| {
+        let acked: Vec<Arc<AtomicU64>> = (0..2).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let effects: Vec<Arc<AtomicU64>> = (0..2).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let mark = [16u64, 16u64];
+        std::thread::scope(|s| {
+            for link in 0..2 {
+                let a = acked[link].clone();
+                let e = effects[link].clone();
+                s.spawn(move || {
+                    for _ in 0..16 {
+                        explore();
+                        e.fetch_add(1, Ordering::Relaxed); // server applies the push
+                        a.fetch_add(1, Ordering::Release); // then the reader acks it
+                    }
+                });
+            }
+            loop {
+                let complete =
+                    mark.iter().zip(&acked).all(|(&m, a)| a.load(Ordering::Acquire) >= m);
+                if complete {
+                    for (link, e) in effects.iter().enumerate() {
+                        assert!(
+                            e.load(Ordering::Relaxed) >= 16,
+                            "link {link}: mark complete but its pushes are not visible"
+                        );
+                    }
+                    break;
+                }
+                std::thread::yield_now();
+            }
+        });
+    });
+}

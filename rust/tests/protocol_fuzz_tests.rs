@@ -1,0 +1,163 @@
+//! Property/fuzz tests for the KVStore wire protocol (PR 6).
+//!
+//! The framing layer is the one place a remote peer's bytes reach this
+//! process before any validation, so it must be total: for ANY byte
+//! input, `read_frame`/`split_tag`/decode either return a value or a
+//! clean `Err` — never a panic, never an over-allocation, never a read
+//! past the buffer. These tests drive the codecs with a seeded RNG
+//! (deterministic, reproducible by seed) through the adversarial cases:
+//! truncated frames, empty payloads, oversized length prefixes, flipped
+//! bytes, and interleaved tagged frames on one stream.
+
+use dglke::kvstore::protocol::{
+    decode_pull, decode_push, encode_pull, encode_push, prepend_tag, read_frame, split_tag,
+    write_frame, TableId, OP_TOK, OP_TPULL, OP_TPUSH,
+};
+use dglke::util::rng::Rng;
+use std::io::Cursor;
+
+/// Round-trip: anything written by `write_frame` is read back verbatim.
+#[test]
+fn frame_roundtrip_arbitrary_payloads() {
+    let mut rng = Rng::seed_from_u64(0xF2A3E);
+    for _ in 0..200 {
+        let n = rng.gen_index(2048);
+        let payload: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let op = (rng.next_u32() % 255) as u8;
+        let mut wire = Vec::new();
+        write_frame(&mut wire, op, &payload).unwrap();
+        let (got_op, got_payload) = read_frame(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(got_op, op);
+        assert_eq!(got_payload, payload);
+    }
+}
+
+/// An empty payload is legal (OP_STOP sends one): len counts the opcode.
+#[test]
+fn empty_payload_frame_roundtrips() {
+    let mut wire = Vec::new();
+    write_frame(&mut wire, 4, &[]).unwrap();
+    assert_eq!(wire, [1, 0, 0, 0, 4], "len=1 counts only the opcode byte");
+    let (op, payload) = read_frame(&mut Cursor::new(&wire)).unwrap();
+    assert_eq!(op, 4);
+    assert!(payload.is_empty());
+}
+
+/// Truncating a valid frame at EVERY byte boundary yields Err, not a
+/// panic or a short read passed off as success.
+#[test]
+fn truncated_frames_error_at_every_cut() {
+    let mut wire = Vec::new();
+    let payload: Vec<u8> = (0u8..64).collect();
+    write_frame(&mut wire, 7, &payload).unwrap();
+    for cut in 0..wire.len() {
+        let r = read_frame(&mut Cursor::new(&wire[..cut]));
+        assert!(r.is_err(), "cut at {cut}/{} must error", wire.len());
+    }
+    // the full buffer still parses
+    assert!(read_frame(&mut Cursor::new(&wire)).is_ok());
+}
+
+/// Oversized or zero length prefixes are rejected before any allocation:
+/// a hostile 1 GiB+ header must not OOM the server.
+#[test]
+fn hostile_length_prefixes_are_rejected() {
+    for len in [0u32, (1 << 30) + 1, u32::MAX] {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&len.to_le_bytes());
+        wire.extend_from_slice(&[1, 0xAA, 0xBB]);
+        let r = read_frame(&mut Cursor::new(&wire));
+        assert!(r.is_err(), "length {len} must be rejected");
+    }
+    // an in-range length whose body never arrives: clean EOF error
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&1000u32.to_le_bytes());
+    wire.push(1);
+    assert!(read_frame(&mut Cursor::new(&wire)).is_err(), "EOF before body");
+}
+
+/// split_tag: total on arbitrary inputs; exact inverse of prepend_tag.
+#[test]
+fn tag_split_is_total_and_inverts_prepend() {
+    let mut rng = Rng::seed_from_u64(0x7A6);
+    for _ in 0..200 {
+        let n = rng.gen_index(256);
+        let inner: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let tag = rng.next_u32();
+        let tagged = prepend_tag(tag, &inner);
+        let (got_tag, got_inner) = split_tag(&tagged).unwrap();
+        assert_eq!(got_tag, tag);
+        assert_eq!(got_inner, &inner[..]);
+    }
+    // shorter than a tag: clean error, any byte content
+    for n in 0..4usize {
+        let short: Vec<u8> = vec![0xFF; n];
+        assert!(split_tag(&short).is_err(), "{n}-byte payload must be too short");
+    }
+}
+
+/// Pull/push payload decoders survive random byte flips: every outcome
+/// is Ok or Err, and an Ok must round-trip its own re-encoding.
+#[test]
+fn decoders_are_total_under_byte_flips() {
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let slots: Vec<u64> = (0..17).collect();
+    let rows: Vec<f32> = (0..17 * 4).map(|i| i as f32 * 0.25).collect();
+    let pull = encode_pull(TableId::Entities, &slots);
+    let push = encode_push(TableId::Relations, &slots, &rows);
+    for _ in 0..500 {
+        let mut p = pull.clone();
+        let i = rng.gen_index(p.len());
+        p[i] ^= (rng.next_u32() % 255 + 1) as u8;
+        if let Ok((table, got_slots)) = decode_pull(&p) {
+            let re = encode_pull(table, &got_slots);
+            assert_eq!(decode_pull(&re).unwrap().1, got_slots);
+        }
+        let mut q = push.clone();
+        let i = rng.gen_index(q.len());
+        q[i] ^= (rng.next_u32() % 255 + 1) as u8;
+        if let Ok((table, got_slots, got_rows)) = decode_push(&q) {
+            let re = encode_push(table, &got_slots, &got_rows);
+            let (_, s2, r2) = decode_push(&re).unwrap();
+            assert_eq!(s2, got_slots);
+            assert_eq!(r2.len(), got_rows.len());
+        }
+    }
+    // truncation at every boundary is also total
+    for cut in 0..push.len() {
+        let _ = decode_push(&push[..cut]); // must not panic
+        let _ = decode_pull(&pull[..cut.min(pull.len())]);
+    }
+}
+
+/// Many tagged frames interleaved on one stream parse back in order with
+/// their tags intact — the invariant the pipelined reader relies on to
+/// match responses against its in-flight window.
+#[test]
+fn interleaved_tagged_frames_keep_order_and_tags() {
+    let mut rng = Rng::seed_from_u64(0x51D);
+    let mut wire = Vec::new();
+    let mut expect = Vec::new();
+    for tag in 0..100u32 {
+        let kind = rng.gen_index(3);
+        let (op, inner) = match kind {
+            0 => (OP_TPULL, encode_pull(TableId::Entities, &[tag as u64, 7, 7])),
+            1 => {
+                let rows: Vec<f32> = (0..8).map(|_| rng.gen_f32()).collect();
+                (OP_TPUSH, encode_push(TableId::Relations, &[1, 2], &rows))
+            }
+            _ => (OP_TOK, vec![rng.next_u32() as u8; rng.gen_index(31)]),
+        };
+        write_frame(&mut wire, op, &prepend_tag(tag, &inner)).unwrap();
+        expect.push((op, tag, inner));
+    }
+    let mut cursor = Cursor::new(&wire);
+    for (op, tag, inner) in expect {
+        let (got_op, payload) = read_frame(&mut cursor).unwrap();
+        assert_eq!(got_op, op);
+        let (got_tag, got_inner) = split_tag(&payload).unwrap();
+        assert_eq!(got_tag, tag, "tags must survive interleaving in order");
+        assert_eq!(got_inner, &inner[..]);
+    }
+    assert!(read_frame(&mut cursor).is_err(), "stream fully consumed");
+}
