@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check lint loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist clean
+.PHONY: build test fmt fmt-check lint loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels clean
 
 build:
 	$(CARGO) build --release
@@ -77,6 +77,12 @@ bench-cache:
 # pipelined+prefetch cuts per-batch time vs sync on the random partition).
 bench-dist:
 	QUICK=1 $(CARGO) bench --bench bench_dist
+
+# Fused-vs-scalar score/grad kernel throughput per model x dim; writes
+# BENCH_kernels.json (expected: fused score >= 2x for Dot/SqDiff at dim
+# 400; parity itself is asserted by kernel_parity_tests).
+bench-kernels:
+	QUICK=1 $(CARGO) bench --bench bench_kernels
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

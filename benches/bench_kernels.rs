@@ -1,0 +1,182 @@
+//! Fused-vs-scalar kernel throughput: pairwise score (forward) and
+//! gradient (backward) GF/s per model × kernel backend × dim. Writes
+//! `BENCH_kernels.json` (`make bench-kernels`) so the fused kernels' win
+//! is tracked run-over-run.
+//!
+//! Expectation: the candidate-tiled fused forward keeps eight score
+//! chains in registers and the transposed tile L1-resident, so the Dot
+//! and SqDiff forwards should clear 2x over the reference triple loop at
+//! production dims (the acceptance bar at dim 400); L1/L2 gain less
+//! (abs/sqrt bound) and backward gains least (axpy is already
+//! stride-1). Parity is not re-checked here — that is
+//! `rust/tests/kernel_parity_tests.rs`'s job — but a cheap assert keeps
+//! the bench honest about computing the same thing.
+//!
+//! QUICK=1 shrinks the shapes and pass count for smoke runs.
+
+use dglke::models::ops;
+use dglke::models::{KernelBackend, KernelScratch, ModelKind, PairwiseOp};
+use dglke::util::json::Json;
+use dglke::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Median-ish timing: run `iters` passes, take the best (benches on
+/// shared CI boxes see scheduling noise in one direction only).
+fn best_secs(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// FLOPs of one m×k×d pairwise forward: Dot is mul+add per element;
+/// the diff-based ops add a subtract (and the |.|/sqrt is amortized).
+fn fwd_flops(op: PairwiseOp, m: usize, k: usize, d: usize) -> f64 {
+    let per = match op {
+        PairwiseOp::Dot => 2.0,
+        _ => 3.0,
+    };
+    per * (m * k * d) as f64
+}
+
+/// Backward moves ~2 mul + 2 add per element across both grads.
+fn bwd_flops(m: usize, k: usize, d: usize) -> f64 {
+    4.0 * (m * k * d) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    // one training chunk's worth of scoring: m o-rows vs k candidates
+    let (m, k) = if quick { (16, 256) } else { (64, 1024) };
+    let iters = if quick { 5 } else { 20 };
+    let dims: &[usize] = &[100, 400];
+    // the four distinct pairwise ops, labeled by a representative model
+    let cases: &[(ModelKind, PairwiseOp)] = &[
+        (ModelKind::DistMult, PairwiseOp::Dot),
+        (ModelKind::RotatE, PairwiseOp::SqDiff),
+        (ModelKind::TransEL2, PairwiseOp::L2),
+        (ModelKind::TransEL1, PairwiseOp::L1),
+    ];
+
+    println!("kernel bench: m={m} k={k} dims={dims:?} iters={iters}");
+    let mut model_entries: Vec<(&str, Json)> = vec![];
+
+    for &(kind, op) in cases {
+        let mut dim_entries: Vec<(String, Json)> = vec![];
+        for &d in dims {
+            let mut rng = Rng::seed_from_u64(0xBE);
+            let o: Vec<f32> = (0..m * d).map(|_| rng.gen_normal()).collect();
+            let n: Vec<f32> = (0..k * d).map(|_| rng.gen_normal()).collect();
+            let g: Vec<f32> = (0..m * k).map(|_| rng.gen_normal()).collect();
+            let mut scores = vec![0f32; m * k];
+            let mut d_o = vec![0f32; m * d];
+            let mut d_n = vec![0f32; k * d];
+            let mut scratch = KernelScratch::default();
+
+            let mut fwd_gfs = BTreeMap::new();
+            let mut bwd_gfs = BTreeMap::new();
+            let mut check = [0f32; 2];
+            for (bi, kb) in KernelBackend::ALL.iter().enumerate() {
+                // untimed warmup also primes the scratch allocations
+                kb.forward(op, &o, &n, d, &mut scores, &mut scratch);
+                let secs = best_secs(iters, || {
+                    kb.forward(op, &o, &n, d, black_box(&mut scores), &mut scratch);
+                });
+                check[bi] = scores[m * k - 1];
+                fwd_gfs.insert(kb.name(), fwd_flops(op, m, k, d) / secs / 1e9);
+
+                let secs = best_secs(iters, || {
+                    d_o.iter_mut().for_each(|x| *x = 0.0);
+                    d_n.iter_mut().for_each(|x| *x = 0.0);
+                    kb.backward(op, &o, &n, d, &scores, &g, black_box(&mut d_o), &mut d_n);
+                });
+                bwd_gfs.insert(kb.name(), bwd_flops(m, k, d) / secs / 1e9);
+            }
+            assert_eq!(
+                check[0].to_bits(),
+                check[1].to_bits(),
+                "{kind:?} d={d}: fused diverged from scalar — run kernel_parity_tests"
+            );
+
+            let score_speedup = fwd_gfs["fused"] / fwd_gfs["scalar"].max(1e-12);
+            let grad_speedup = bwd_gfs["fused"] / bwd_gfs["scalar"].max(1e-12);
+            println!(
+                "  {:<10} d={d:<4} score {:6.2} -> {:6.2} GF/s ({score_speedup:4.2}x)   \
+                 grad {:6.2} -> {:6.2} GF/s ({grad_speedup:4.2}x)",
+                kind.name(),
+                fwd_gfs["scalar"],
+                fwd_gfs["fused"],
+                bwd_gfs["scalar"],
+                bwd_gfs["fused"],
+            );
+            dim_entries.push((
+                format!("dim{d}"),
+                obj(vec![
+                    (
+                        "score_gflops",
+                        obj(vec![
+                            ("scalar", Json::Num(fwd_gfs["scalar"])),
+                            ("fused", Json::Num(fwd_gfs["fused"])),
+                        ]),
+                    ),
+                    (
+                        "grad_gflops",
+                        obj(vec![
+                            ("scalar", Json::Num(bwd_gfs["scalar"])),
+                            ("fused", Json::Num(bwd_gfs["fused"])),
+                        ]),
+                    ),
+                    ("score_speedup", Json::Num(score_speedup)),
+                    ("grad_speedup", Json::Num(grad_speedup)),
+                ]),
+            ));
+        }
+        let mut dm = BTreeMap::new();
+        for (key, v) in dim_entries {
+            dm.insert(key, v);
+        }
+        model_entries.push((kind.name(), Json::Obj(dm)));
+    }
+
+    // keep the reference loops honest too: one diag pass, so a perf PR
+    // that accidentally slows the positive-score path shows up in the blob
+    let d = dims[dims.len() - 1];
+    let mut rng = Rng::seed_from_u64(0xD0);
+    let o: Vec<f32> = (0..m * d).map(|_| rng.gen_normal()).collect();
+    let n: Vec<f32> = (0..m * d).map(|_| rng.gen_normal()).collect();
+    let mut diag = vec![0f32; m];
+    let diag_secs = best_secs(iters, || {
+        ops::diag_forward(PairwiseOp::L2, &o, &n, d, black_box(&mut diag));
+    });
+
+    let report = obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("k", Json::Num(k as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("quick", Json::Bool(quick)),
+        ("models", {
+            let mut mm = BTreeMap::new();
+            for (kname, v) in model_entries {
+                mm.insert(kname.to_string(), v);
+            }
+            Json::Obj(mm)
+        }),
+        ("diag_l2_gflops", Json::Num(3.0 * (m * d) as f64 / diag_secs / 1e9)),
+    ]);
+    std::fs::write("BENCH_kernels.json", report.to_string())?;
+    println!("[wrote BENCH_kernels.json]");
+    Ok(())
+}

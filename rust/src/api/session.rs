@@ -236,6 +236,7 @@ impl Session {
             hardware: if gpu { Hardware::Gpu { pcie_gbps: 12.0 } } else { Hardware::Cpu },
             seed: self.spec.seed,
             log_every: self.spec.log_every,
+            kernels: self.spec.kernels,
         }
     }
 
@@ -274,6 +275,7 @@ impl Session {
                     inflight: self.spec.comm.inflight,
                     prefetch: self.spec.pipeline.prefetch,
                     prefetch_depth: self.spec.pipeline.depth,
+                    kernels: self.spec.kernels,
                 };
                 let (stats, mut cluster) =
                     run_distributed(&self.dataset, self.manifest.as_ref(), &cfg)?;
@@ -299,13 +301,15 @@ impl Session {
     /// (zero) embeddings until [`Session::train`] dumps the cluster state.
     pub fn evaluate(&self) -> Result<Metrics> {
         let eval_spec = self.spec.eval.clone().unwrap_or_default();
+        let mut cfg = eval_spec.to_cfg(self.spec.seed);
+        cfg.kernels = self.spec.kernels;
         Ok(evaluate(
             self.spec.model,
             &self.state.entities,
             &self.state.relations,
             &self.dataset,
             &self.dataset.test,
-            &eval_spec.to_cfg(self.spec.seed),
+            &cfg,
         ))
     }
 
@@ -572,6 +576,13 @@ impl SessionBuilder {
     /// In-flight frames per remote KVStore connection (>= 1).
     pub fn comm_inflight(mut self, inflight: usize) -> Self {
         self.spec.comm.inflight = inflight;
+        self
+    }
+
+    /// Score/grad kernel backend (`Scalar` reference loops or `Fused`
+    /// cache-tiled kernels); results are bit-identical either way.
+    pub fn kernels(mut self, kernels: crate::models::KernelBackend) -> Self {
+        self.spec.kernels = kernels;
         self
     }
 

@@ -30,6 +30,9 @@
 //!            "inflight": 8},                 //   concurrent pull fan-out,
 //!                                            //   pipelined frames, fire-and-
 //!                                            //   forget pushes (distributed)
+//!   "kernels": "scalar",                     // "scalar" | "fused" score/grad
+//!                                            //   kernels (bit-identical; see
+//!                                            //   docs/KERNELS.md)
 //!   "relation_partition": true,              // §3.4 (single-machine only)
 //!   "sync_interval": 500,                    // §3.6 barrier period
 //!   "log_every": 50,
@@ -56,7 +59,7 @@
 
 use crate::dist::PartitionStrategy;
 use crate::models::step::StepShape;
-use crate::models::{LossCfg, LossKind, ModelKind};
+use crate::models::{KernelBackend, LossCfg, LossKind, ModelKind};
 use crate::runtime::BackendKind;
 use crate::store::{StoreBackendKind, StoreConfig};
 use crate::util::json::Json;
@@ -186,6 +189,8 @@ impl EvalSpec {
             max_triplets: self.max_triplets,
             n_threads: self.n_threads,
             seed,
+            // the session layer overrides this from `RunSpec.kernels`
+            kernels: KernelBackend::Scalar,
         }
     }
 }
@@ -212,6 +217,10 @@ pub struct RunSpec {
     /// distributed KVStore comms (async/pipelined client); ignored in
     /// single-machine mode
     pub comm: CommSpec,
+    /// score/grad kernel backend (`scalar` reference loops or `fused`
+    /// cache-tiled kernels); bit-identical results either way — see
+    /// `docs/KERNELS.md` and `rust/tests/kernel_parity_tests.rs`
+    pub kernels: KernelBackend,
     pub relation_partition: bool,
     pub sync_interval: usize,
     pub log_every: usize,
@@ -243,6 +252,7 @@ impl Default for RunSpec {
             async_update: true,
             pipeline: PipelineSpec::default(),
             comm: CommSpec::default(),
+            kernels: KernelBackend::Scalar,
             relation_partition: true,
             sync_interval: 500,
             log_every: 50,
@@ -408,6 +418,7 @@ impl RunSpec {
                     ("inflight", Json::Num(self.comm.inflight as f64)),
                 ]),
             ),
+            ("kernels", Json::Str(self.kernels.name().into())),
             ("relation_partition", Json::Bool(self.relation_partition)),
             ("sync_interval", Json::Num(self.sync_interval as f64)),
             ("log_every", Json::Num(self.log_every as f64)),
@@ -432,6 +443,9 @@ impl RunSpec {
         let backend_name = get_str(j, "backend", "native")?;
         let backend = BackendKind::parse(&backend_name)
             .ok_or_else(|| anyhow!("unknown backend {backend_name:?}"))?;
+        let kernels_name = get_str(j, "kernels", d.kernels.name())?;
+        let kernels = KernelBackend::parse(&kernels_name)
+            .ok_or_else(|| anyhow!("unknown kernels backend {kernels_name:?}"))?;
 
         let loss = match j.get("loss") {
             None | Some(Json::Null) => LossSpec::default(),
@@ -570,6 +584,7 @@ impl RunSpec {
             async_update: get_bool(j, "async_update", d.async_update)?,
             pipeline,
             comm,
+            kernels,
             relation_partition: get_bool(j, "relation_partition", d.relation_partition)?,
             sync_interval: get_usize(j, "sync_interval", d.sync_interval)?,
             log_every: get_usize(j, "log_every", d.log_every)?,
@@ -682,6 +697,7 @@ mod tests {
             async_update: false,
             pipeline: PipelineSpec { prefetch: true, depth: 3 },
             comm: CommSpec { pipelined: true, inflight: 16 },
+            kernels: KernelBackend::Fused,
             relation_partition: false,
             sync_interval: 64,
             log_every: 5,
@@ -790,6 +806,23 @@ mod tests {
     }
 
     #[test]
+    fn kernels_spec_parses_and_round_trips() {
+        // absent → scalar reference
+        let spec = RunSpec::from_json_str("{}").unwrap();
+        assert_eq!(spec.kernels, KernelBackend::Scalar);
+        // explicit fused round-trips
+        let spec = RunSpec::from_json_str(r#"{"kernels": "fused"}"#).unwrap();
+        assert_eq!(spec.kernels, KernelBackend::Fused);
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        // case-insensitive, like the other enums
+        let spec = RunSpec::from_json_str(r#"{"kernels": "FUSED"}"#).unwrap();
+        assert_eq!(spec.kernels, KernelBackend::Fused);
+        // wrong type rejected
+        assert!(RunSpec::from_json_str(r#"{"kernels": 8}"#).is_err());
+    }
+
+    #[test]
     fn sparse_spec_uses_defaults() {
         let spec = RunSpec::from_json_str(r#"{"dataset": "tiny", "batches": 7}"#).unwrap();
         assert_eq!(spec.dataset, "tiny");
@@ -804,6 +837,7 @@ mod tests {
         assert!(RunSpec::from_json_str(r#"{"backend": "cuda"}"#).is_err());
         assert!(RunSpec::from_json_str(r#"{"loss": {"kind": "hinge2"}}"#).is_err());
         assert!(RunSpec::from_json_str(r#"{"mode": {"kind": "tpu-pod"}}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"kernels": "avx999"}"#).is_err());
         assert!(
             RunSpec::from_json_str(r#"{"mode": {"kind":"distributed","partition":"spectral"}}"#)
                 .is_err()

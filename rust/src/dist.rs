@@ -93,6 +93,9 @@ pub struct DistConfig {
     pub prefetch: bool,
     /// prefetch buffers in flight (>= 2; also the staleness bound)
     pub prefetch_depth: usize,
+    /// score/grad kernel backend for the native trainer step
+    /// (bit-identical results either way)
+    pub kernels: crate::models::KernelBackend,
 }
 
 impl Default for DistConfig {
@@ -119,6 +122,7 @@ impl Default for DistConfig {
             inflight: 8,
             prefetch: false,
             prefetch_depth: 2,
+            kernels: crate::models::KernelBackend::Scalar,
         }
     }
 }
@@ -329,13 +333,14 @@ pub fn run_trainer(
 ) -> Result<TrainerOut> {
     let (shape_override, _, rel_dim) = resolve_dims(cfg, manifest)?;
     // backend per trainer thread (the PJRT client is !Send)
-    let backend = TrainBackend::create(
+    let backend = TrainBackend::create_with_kernels(
         cfg.backend,
         cfg.model,
         cfg.loss,
         manifest,
         &cfg.artifact_tag,
         shape_override,
+        cfg.kernels,
     )?;
     let shape = backend.shape();
     let mut comm = make_comm(cluster, machine, cfg, false)?;

@@ -15,8 +15,10 @@ pub mod metrics;
 pub use metrics::{Metrics, RankAccumulator};
 
 use crate::kg::{Dataset, TripletSet, TripletStore};
-use crate::models::{EvalSide, LossCfg, ModelKind, NativeModel};
+use crate::models::kernels::zeroed;
+use crate::models::{EvalScratch, EvalSide, KernelBackend, LossCfg, ModelKind, NativeModel};
 use crate::store::EmbeddingStore;
+use crate::train::batch::stream_gather_scores;
 use crate::util::alias::AliasTable;
 use crate::util::rng::Rng;
 use crate::util::topk::rank_of;
@@ -36,6 +38,11 @@ pub struct EvalConfig {
     pub max_triplets: usize,
     pub n_threads: usize,
     pub seed: u64,
+    /// Pairwise kernel backend. `Fused` additionally streams candidate
+    /// rows store→kernel-tile instead of staging `[4096, d]` blocks
+    /// (non-projecting models). Metrics are bit-identical either way —
+    /// the kernel parity contract, `docs/KERNELS.md`.
+    pub kernels: KernelBackend,
 }
 
 impl Default for EvalConfig {
@@ -45,6 +52,7 @@ impl Default for EvalConfig {
             max_triplets: 2000,
             n_threads: 8,
             seed: 7,
+            kernels: KernelBackend::Scalar,
         }
     }
 }
@@ -87,6 +95,12 @@ pub fn evaluate(
         _ => None,
     };
 
+    // Fused + non-projecting: stream candidate rows store→tile instead of
+    // staging `[BLOCK, d]` gathers (TransR must stage — candidates are
+    // re-projected per positive, so the rows have to be materialized).
+    let op = model.pairwise_op();
+    let fused_stream = cfg.kernels == KernelBackend::Fused && !model.projects_negatives();
+
     let n_threads = cfg.n_threads.max(1);
     let ranges = crate::util::threadpool::split_ranges(idx.len(), n_threads);
     let accs = crate::util::threadpool::scoped_map(n_threads, |w| {
@@ -98,6 +112,9 @@ pub fn evaluate(
         let mut h_emb = vec![0f32; dim];
         let mut t_emb = vec![0f32; dim];
         let mut r_emb = vec![0f32; relations.dim()];
+        // per-thread arena: query rows, TransR projection buffer, and
+        // kernel tiles all persist across triplets and scoring blocks
+        let mut scratch = EvalScratch::default();
         for &ti in &idx[ranges[w].clone()] {
             let t = test.get(ti);
             entities.read_row(t.head as usize, &mut h_emb);
@@ -142,14 +159,44 @@ pub fn evaluate(
                 };
                 let mut ranks_scores: Vec<f32> = Vec::with_capacity(cand_ids.len());
                 const BLOCK: usize = 4096;
-                for block in cand_ids.chunks(BLOCK) {
-                    id_buf.clear();
-                    id_buf.extend(block.iter().map(|&c| c as u64));
-                    cand_buf.resize(block.len() * dim, 0.0);
-                    entities.gather(&id_buf, &mut cand_buf);
-                    score_buf.resize(block.len(), 0.0);
-                    native.eval_scores(side, kept, kept_r, &cand_buf, &mut score_buf);
-                    ranks_scores.extend_from_slice(&score_buf);
+                if fused_stream {
+                    // build the o = g(e, r) query row once per side, then
+                    // stream candidates through the fused gather→score path
+                    let q = zeroed(&mut scratch.query, dim);
+                    native.build_query(side, kept, kept_r, q);
+                    for block in cand_ids.chunks(BLOCK) {
+                        id_buf.clear();
+                        id_buf.extend(block.iter().map(|&c| c as u64));
+                        score_buf.resize(block.len(), 0.0);
+                        stream_gather_scores(
+                            op,
+                            q,
+                            entities,
+                            &id_buf,
+                            dim,
+                            &mut score_buf,
+                            &mut scratch.kernel,
+                        );
+                        ranks_scores.extend_from_slice(&score_buf);
+                    }
+                } else {
+                    for block in cand_ids.chunks(BLOCK) {
+                        id_buf.clear();
+                        id_buf.extend(block.iter().map(|&c| c as u64));
+                        cand_buf.resize(block.len() * dim, 0.0);
+                        entities.gather(&id_buf, &mut cand_buf);
+                        score_buf.resize(block.len(), 0.0);
+                        native.eval_scores_with(
+                            side,
+                            kept,
+                            kept_r,
+                            &cand_buf,
+                            &mut score_buf,
+                            cfg.kernels,
+                            &mut scratch,
+                        );
+                        ranks_scores.extend_from_slice(&score_buf);
+                    }
                 }
                 acc.push(rank_of(pos_score, &ranks_scores));
             }
@@ -233,6 +280,7 @@ mod tests {
             max_triplets: 40,
             n_threads: 2,
             seed: 3,
+            ..Default::default()
         };
         let m = evaluate(
             ModelKind::TransEL2,
@@ -245,6 +293,52 @@ mod tests {
         assert_eq!(m.n, 80); // both sides
         assert!(m.mrr > 0.0 && m.mrr <= 1.0);
         assert!(m.mr >= 1.0 && m.mr <= 101.0);
+    }
+
+    /// Fused kernels (including the streaming gather→score path) must
+    /// produce bit-identical eval metrics — same ranks, same MRR bits.
+    #[test]
+    fn fused_eval_is_bit_identical() {
+        let (dataset, state) = train_tiny(100);
+        let base = EvalConfig { max_triplets: 40, n_threads: 2, ..Default::default() };
+        let fused_cfg = EvalConfig { kernels: KernelBackend::Fused, ..base.clone() };
+        for cfg_pair in [
+            (base.clone(), fused_cfg.clone()),
+            // sampled protocol exercises partial last blocks too
+            (
+                EvalConfig {
+                    protocol: EvalProtocol::Sampled { uniform: 37, degree: 13 },
+                    ..base.clone()
+                },
+                EvalConfig {
+                    protocol: EvalProtocol::Sampled { uniform: 37, degree: 13 },
+                    kernels: KernelBackend::Fused,
+                    ..base.clone()
+                },
+            ),
+        ] {
+            let scalar = evaluate(
+                ModelKind::TransEL2,
+                &state.entities,
+                &state.relations,
+                &dataset,
+                &dataset.test,
+                &cfg_pair.0,
+            );
+            let fused = evaluate(
+                ModelKind::TransEL2,
+                &state.entities,
+                &state.relations,
+                &dataset,
+                &dataset.test,
+                &cfg_pair.1,
+            );
+            assert_eq!(scalar.n, fused.n);
+            assert_eq!(scalar.mrr.to_bits(), fused.mrr.to_bits());
+            assert_eq!(scalar.mr.to_bits(), fused.mr.to_bits());
+            assert_eq!(scalar.hit1.to_bits(), fused.hit1.to_bits());
+            assert_eq!(scalar.hit10.to_bits(), fused.hit10.to_bits());
+        }
     }
 
     #[test]
@@ -270,6 +364,7 @@ mod tests {
                 max_triplets: 30,
                 n_threads: 2,
                 seed: 7,
+                ..Default::default()
             },
         );
         // not a strict theorem at these sizes, but filtered MRR should not

@@ -28,6 +28,7 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
   common: --dataset fb15k-syn|wn18-syn|freebase-syn[:scale]|tiny|<tsv-dir>
           --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
           --backend native|xla (default native) --tag default|tiny --seed N
+          --kernels scalar|fused (native score/grad kernels; bit-identical)
           --config spec.json (flags override) --dump-config --report out.json
           --storage dense|sharded|mmap --shards N --storage-dir DIR
           --budget-mb F (tables over the budget must use mmap)
@@ -112,6 +113,10 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
     }
     if let Some(v) = args.get("tag") {
         spec.artifact_tag = v;
+    }
+    if let Some(v) = args.get("kernels") {
+        spec.kernels = dglke::models::KernelBackend::parse(&v)
+            .with_context(|| format!("unknown kernels backend {v}"))?;
     }
     spec.seed = args.parse_or("seed", spec.seed)?;
     spec.batches = args.parse_or("batches", spec.batches)?;

@@ -1,0 +1,715 @@
+//! Blocked, cache-tiled score/grad microkernels + per-worker scratch arenas.
+//!
+//! This module is the *fused* half of the kernel contract documented in
+//! `docs/KERNELS.md`. The naive triple loops in [`super::ops`] stay the
+//! reference implementation; everything here is an optimization that must
+//! stay **bit-exact** against them (asserted by
+//! `rust/tests/kernel_parity_tests.rs` with the ULP comparator in
+//! [`crate::util::ulp`]).
+//!
+//! # How bit-exactness survives vectorization
+//!
+//! The scalar reference reduces over the embedding dim `x = 0..d`
+//! *sequentially* for each `(i, j)` pair. A classic SIMD dot product
+//! splits that reduction across lanes and combines partial sums — a
+//! different association, hence different rounding. The fused kernels
+//! instead vectorize across **candidates**: a tile of [`LANES`] `n`-rows
+//! is transposed into an `[d, LANES]` scratch tile (`nt[x][l] = n[j0+l][x]`,
+//! L1-resident: `d * LANES * 4` bytes ≤ 16 KiB up to d = 512), and the
+//! inner loop
+//!
+//! ```text
+//! for x in 0..d { for l in 0..LANES { acc[l] += o[i][x] * nt[x][l] } }
+//! ```
+//!
+//! performs, per lane, exactly the scalar reduction in exactly the scalar
+//! order — eight independent score chains advancing in lockstep, which
+//! LLVM maps onto one vector mul + one vector add per `x` (no `mul_add`:
+//! a fused multiply-add rounds once where the reference rounds twice).
+//! The transpose is amortized over all `m` rows of `o`, which stream
+//! row-major through the tile (the `o` block for a training chunk is
+//! L2-resident).
+//!
+//! Backward has no reductions over `d` — every `(i, j)` pair contributes
+//! an element-wise AXPY into `d_o[i]` and `d_n[j]` — so it vectorizes
+//! over `x` directly with [`LANES`]-wide blocked loops; bit-exactness
+//! only requires keeping the reference's ascending `(i, j)` accumulation
+//! order and per-element expression shapes (see the `*_axpy2` helpers).
+//!
+//! The gather→score entry point ([`gather_scores`]) streams candidate
+//! rows from an [`EmbeddingStore`] through the transposed tiles
+//! [`LANES`] ids at a time, so eval candidate scoring never stages a
+//! block-sized `[4096, d]` buffer.
+
+use super::ops;
+use super::{PairwiseOp, L1_SIGN_AT_ZERO, L2_EPS};
+use crate::store::EmbeddingStore;
+
+/// SIMD lane width the kernels block for: eight f32s = one AVX2 register
+/// (two NEON registers). Fixed rather than runtime-detected so results
+/// are identical across hosts.
+pub const LANES: usize = 8;
+
+/// Which pairwise kernel implementation scores and differentiates
+/// batches: the scalar reference loops in [`super::ops`], or the blocked
+/// [`LANES`]-wide fused kernels in this module. Selected by
+/// `RunSpec.kernels` / `--kernels`; results are bit-identical either way
+/// (that is the contract, not an accident — see `docs/KERNELS.md`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// Reference triple loops (`models::ops`). The default.
+    #[default]
+    Scalar,
+    /// Blocked candidate-tiled kernels + fused gather→score streaming.
+    Fused,
+}
+
+impl KernelBackend {
+    pub const ALL: [KernelBackend; 2] = [KernelBackend::Scalar, KernelBackend::Fused];
+
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelBackend::Scalar),
+            "fused" => Some(KernelBackend::Fused),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Fused => "fused",
+        }
+    }
+
+    /// `scores[i*k + j] = op(o_i, n_j)` — dispatched pairwise forward.
+    pub fn forward(
+        &self,
+        op: PairwiseOp,
+        o: &[f32],
+        n: &[f32],
+        d: usize,
+        scores: &mut [f32],
+        scratch: &mut KernelScratch,
+    ) {
+        match self {
+            KernelBackend::Scalar => ops::pairwise_forward(op, o, n, d, scores),
+            KernelBackend::Fused => forward_fused(op, o, n, d, scores, &mut scratch.tile),
+        }
+    }
+
+    /// Dispatched pairwise VJP (accumulates into `d_o`/`d_n`).
+    pub fn backward(
+        &self,
+        op: PairwiseOp,
+        o: &[f32],
+        n: &[f32],
+        d: usize,
+        scores: &[f32],
+        d_scores: &[f32],
+        d_o: &mut [f32],
+        d_n: &mut [f32],
+    ) {
+        match self {
+            KernelBackend::Scalar => {
+                ops::pairwise_backward(op, o, n, d, scores, d_scores, d_o, d_n)
+            }
+            KernelBackend::Fused => backward_fused(op, o, n, d, scores, d_scores, d_o, d_n),
+        }
+    }
+
+    /// Dispatched diagonal forward (`scores[i] = op(o_i, n_i)`).
+    pub fn diag_forward(&self, op: PairwiseOp, o: &[f32], n: &[f32], d: usize, scores: &mut [f32]) {
+        match self {
+            KernelBackend::Scalar => ops::diag_forward(op, o, n, d, scores),
+            KernelBackend::Fused => diag_forward_fused(op, o, n, d, scores),
+        }
+    }
+
+    /// Dispatched diagonal VJP.
+    #[allow(clippy::too_many_arguments)]
+    pub fn diag_backward(
+        &self,
+        op: PairwiseOp,
+        o: &[f32],
+        n: &[f32],
+        d: usize,
+        scores: &[f32],
+        d_scores: &[f32],
+        d_o: &mut [f32],
+        d_n: &mut [f32],
+    ) {
+        match self {
+            KernelBackend::Scalar => {
+                ops::diag_backward(op, o, n, d, scores, d_scores, d_o, d_n)
+            }
+            KernelBackend::Fused => {
+                let m = o.len() / d;
+                for i in 0..m {
+                    backward_fused(
+                        op,
+                        &o[i * d..(i + 1) * d],
+                        &n[i * d..(i + 1) * d],
+                        d,
+                        &scores[i..i + 1],
+                        &d_scores[i..i + 1],
+                        &mut d_o[i * d..(i + 1) * d],
+                        &mut d_n[i * d..(i + 1) * d],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Tile-sized scratch owned by a worker/eval thread so the hot loops
+/// never allocate: the `[d, LANES]` transposed candidate tile plus the
+/// [`LANES`]-row landing buffer used by [`gather_scores`]. Allocations
+/// persist across calls; `Default::default()` is an empty arena.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// Transposed candidate tile, `d * LANES` f32s.
+    tile: Vec<f32>,
+    /// Row-major landing pad for streamed gathers, `LANES * d` f32s.
+    rows: Vec<f32>,
+}
+
+/// Checkout a zeroed `f32` scratch slice of length `n`, reusing the
+/// vector's allocation across steps (`clear` + `resize` re-zeroes the
+/// prefix without freeing capacity). The zeroing keeps reused buffers
+/// indistinguishable from the `vec![0f32; n]` they replace, which is what
+/// makes scratch reuse bit-exact.
+pub(crate) fn zeroed(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(n, 0.0);
+    &mut buf[..]
+}
+
+/// Per-worker scratch arena for `NativeModel::train_step_with` — every
+/// `vec![0f32; ..]` the step used to allocate per call lives here
+/// instead, checked out zeroed via [`zeroed`]. One arena per worker
+/// thread (never shared; `TrainBackend` keeps it in a `RefCell`).
+#[derive(Default)]
+pub struct StepScratch {
+    pub kernel: KernelScratch,
+    pub(crate) o_tail: Vec<f32>,
+    pub(crate) o_head: Vec<f32>,
+    pub(crate) proj_t: Vec<f32>,
+    pub(crate) pos: Vec<f32>,
+    pub(crate) neg_scores: Vec<f32>,
+    pub(crate) proj_negs_t: Vec<f32>,
+    pub(crate) proj_negs_h: Vec<f32>,
+    pub(crate) row_k: Vec<f32>,
+    pub(crate) chunk_s: Vec<f32>,
+    pub(crate) d_pos: Vec<f32>,
+    pub(crate) d_neg: Vec<f32>,
+    pub(crate) d_o_tail: Vec<f32>,
+    pub(crate) d_o_head: Vec<f32>,
+    pub(crate) d_t_eff: Vec<f32>,
+    pub(crate) d_pt: Vec<f32>,
+    pub(crate) d_ph: Vec<f32>,
+    pub(crate) st: Vec<f32>,
+    pub(crate) gt: Vec<f32>,
+    pub(crate) sh: Vec<f32>,
+    pub(crate) gh: Vec<f32>,
+}
+
+/// Per-thread scratch arena for `NativeModel::eval_scores_with` and the
+/// eval candidate loop: the `o` query rows, the TransR projected-candidate
+/// buffer (reused across *calls*, not just across `i` — the satellite fix
+/// for the per-call `vec![0f32; c * d]`), and the kernel tiles.
+#[derive(Default)]
+pub struct EvalScratch {
+    pub kernel: KernelScratch,
+    pub(crate) o: Vec<f32>,
+    pub(crate) pc: Vec<f32>,
+    pub(crate) query: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// Fused forward
+// ---------------------------------------------------------------------------
+
+/// Per-`x` tile kernel bodies: eight independent scalar chains in
+/// lockstep. `nt` is the transposed tile (`d * LANES`), `oi` one `o` row.
+#[inline]
+fn tile_dot(oi: &[f32], nt: &[f32]) -> [f32; LANES] {
+    let mut acc = [0f32; LANES];
+    for (&ox, row) in oi.iter().zip(nt.chunks_exact(LANES)) {
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += ox * v;
+        }
+    }
+    acc
+}
+
+#[inline]
+fn tile_sqdiff(oi: &[f32], nt: &[f32]) -> [f32; LANES] {
+    let mut acc = [0f32; LANES];
+    for (&ox, row) in oi.iter().zip(nt.chunks_exact(LANES)) {
+        for (a, &v) in acc.iter_mut().zip(row) {
+            let diff = ox - v;
+            *a += diff * diff;
+        }
+    }
+    acc
+}
+
+#[inline]
+fn tile_l1(oi: &[f32], nt: &[f32]) -> [f32; LANES] {
+    let mut acc = [0f32; LANES];
+    for (&ox, row) in oi.iter().zip(nt.chunks_exact(LANES)) {
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += (ox - v).abs();
+        }
+    }
+    acc
+}
+
+/// Fused pairwise forward: candidate-tiled, bit-exact vs
+/// [`ops::pairwise_forward`]. `tile` is the reusable transpose scratch.
+fn forward_fused(
+    op: PairwiseOp,
+    o: &[f32],
+    n: &[f32],
+    d: usize,
+    scores: &mut [f32],
+    tile: &mut Vec<f32>,
+) {
+    let m = o.len() / d;
+    let k = n.len() / d;
+    debug_assert_eq!(scores.len(), m * k);
+    if m == 0 || k == 0 {
+        return;
+    }
+    tile.clear();
+    tile.resize(d * LANES, 0.0);
+    let nt = &mut tile[..];
+    let mut j0 = 0;
+    while j0 < k {
+        let jw = LANES.min(k - j0);
+        // Transpose the candidate tile: nt[x*LANES + l] = n[(j0+l)*d + x].
+        // Pad lanes are zero — they compute garbage scores that are never
+        // written out (finite inputs keep the padding finite).
+        for (x, trow) in nt.chunks_exact_mut(LANES).enumerate() {
+            for (l, t) in trow.iter_mut().enumerate() {
+                *t = if l < jw { n[(j0 + l) * d + x] } else { 0.0 };
+            }
+        }
+        for i in 0..m {
+            let oi = &o[i * d..(i + 1) * d];
+            let acc = match op {
+                PairwiseOp::Dot => tile_dot(oi, nt),
+                PairwiseOp::SqDiff | PairwiseOp::L2 => tile_sqdiff(oi, nt),
+                PairwiseOp::L1 => tile_l1(oi, nt),
+            };
+            let out = &mut scores[i * k + j0..i * k + j0 + jw];
+            match op {
+                PairwiseOp::Dot => {
+                    for (s, &a) in out.iter_mut().zip(&acc[..jw]) {
+                        *s = a;
+                    }
+                }
+                PairwiseOp::SqDiff | PairwiseOp::L1 => {
+                    for (s, &a) in out.iter_mut().zip(&acc[..jw]) {
+                        *s = -a;
+                    }
+                }
+                PairwiseOp::L2 => {
+                    for (s, &a) in out.iter_mut().zip(&acc[..jw]) {
+                        *s = -(a + L2_EPS).sqrt();
+                    }
+                }
+            }
+        }
+        j0 += LANES;
+    }
+}
+
+/// Fused diagonal forward: same sequential per-row reduction as the
+/// scalar reference (lane-splitting a single row would change rounding),
+/// but without the per-row `vec![0f32; 1]` the reference allocates.
+fn diag_forward_fused(op: PairwiseOp, o: &[f32], n: &[f32], d: usize, scores: &mut [f32]) {
+    let m = o.len() / d;
+    debug_assert_eq!(scores.len(), m);
+    for (i, s) in scores.iter_mut().enumerate() {
+        let oi = &o[i * d..(i + 1) * d];
+        let ni = &n[i * d..(i + 1) * d];
+        *s = match op {
+            PairwiseOp::Dot => {
+                let mut acc = 0f32;
+                for (&a, &b) in oi.iter().zip(ni) {
+                    acc += a * b;
+                }
+                acc
+            }
+            PairwiseOp::SqDiff => {
+                let mut acc = 0f32;
+                for (&a, &b) in oi.iter().zip(ni) {
+                    let diff = a - b;
+                    acc += diff * diff;
+                }
+                -acc
+            }
+            PairwiseOp::L2 => {
+                let mut acc = 0f32;
+                for (&a, &b) in oi.iter().zip(ni) {
+                    let diff = a - b;
+                    acc += diff * diff;
+                }
+                -(acc + L2_EPS).sqrt()
+            }
+            PairwiseOp::L1 => {
+                let mut acc = 0f32;
+                for (&a, &b) in oi.iter().zip(ni) {
+                    acc += (a - b).abs();
+                }
+                -acc
+            }
+        };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused backward
+// ---------------------------------------------------------------------------
+
+/// `dst[x] += a * src[x]` — LANES-blocked main body + scalar tail.
+/// Element-wise, so lane-blocking cannot change rounding.
+#[inline]
+fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (dv, sv) in (&mut dc).zip(&mut sc) {
+        for (x, &s) in dv.iter_mut().zip(sv) {
+            *x += a * s;
+        }
+    }
+    for (x, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *x += a * s;
+    }
+}
+
+/// `diff = o[x] - n[x]; d_o[x] += go*diff; d_n[x] += gn*diff` — the
+/// SqDiff VJP row update. `go`/`gn` are the pre-multiplied upstream
+/// factors (`(-2.0*g)`, `(2.0*g)`), matching the reference's
+/// left-associated `-2.0 * g * diff` exactly.
+#[inline]
+fn diff_axpy2(d_o: &mut [f32], d_n: &mut [f32], o: &[f32], n: &[f32], go: f32, gn: f32) {
+    let mut doc = d_o.chunks_exact_mut(LANES);
+    let mut dnc = d_n.chunks_exact_mut(LANES);
+    let mut oc = o.chunks_exact(LANES);
+    let mut nc = n.chunks_exact(LANES);
+    for (((dov, dnv), ov), nv) in (&mut doc).zip(&mut dnc).zip(&mut oc).zip(&mut nc) {
+        for (((dox, dnx), &ox), &nx) in
+            dov.iter_mut().zip(dnv.iter_mut()).zip(ov).zip(nv)
+        {
+            let diff = ox - nx;
+            *dox += go * diff;
+            *dnx += gn * diff;
+        }
+    }
+    for (((dox, dnx), &ox), &nx) in doc
+        .into_remainder()
+        .iter_mut()
+        .zip(dnc.into_remainder().iter_mut())
+        .zip(oc.remainder())
+        .zip(nc.remainder())
+    {
+        let diff = ox - nx;
+        *dox += go * diff;
+        *dnx += gn * diff;
+    }
+}
+
+/// L2 VJP row update: `t = (g*diff)*inv; d_o[x] += -t; d_n[x] += t`.
+/// Bit-identical to the reference's `((-g)*diff)*inv` / `(g*diff)*inv`
+/// because IEEE-754 negation is exact.
+#[inline]
+fn l2_axpy2(d_o: &mut [f32], d_n: &mut [f32], o: &[f32], n: &[f32], g: f32, inv: f32) {
+    let mut doc = d_o.chunks_exact_mut(LANES);
+    let mut dnc = d_n.chunks_exact_mut(LANES);
+    let mut oc = o.chunks_exact(LANES);
+    let mut nc = n.chunks_exact(LANES);
+    for (((dov, dnv), ov), nv) in (&mut doc).zip(&mut dnc).zip(&mut oc).zip(&mut nc) {
+        for (((dox, dnx), &ox), &nx) in
+            dov.iter_mut().zip(dnv.iter_mut()).zip(ov).zip(nv)
+        {
+            let t = (g * (ox - nx)) * inv;
+            *dox += -t;
+            *dnx += t;
+        }
+    }
+    for (((dox, dnx), &ox), &nx) in doc
+        .into_remainder()
+        .iter_mut()
+        .zip(dnc.into_remainder().iter_mut())
+        .zip(oc.remainder())
+        .zip(nc.remainder())
+    {
+        let t = (g * (ox - nx)) * inv;
+        *dox += -t;
+        *dnx += t;
+    }
+}
+
+/// L1 VJP row update: subgradient `sign(diff)` with
+/// [`L1_SIGN_AT_ZERO`] at ties — the same documented constant the scalar
+/// reference uses, so the two paths cannot disagree at kinks.
+#[inline]
+fn l1_axpy2(d_o: &mut [f32], d_n: &mut [f32], o: &[f32], n: &[f32], gm: f32, gp: f32) {
+    let mut doc = d_o.chunks_exact_mut(LANES);
+    let mut dnc = d_n.chunks_exact_mut(LANES);
+    let mut oc = o.chunks_exact(LANES);
+    let mut nc = n.chunks_exact(LANES);
+    for (((dov, dnv), ov), nv) in (&mut doc).zip(&mut dnc).zip(&mut oc).zip(&mut nc) {
+        for (((dox, dnx), &ox), &nx) in
+            dov.iter_mut().zip(dnv.iter_mut()).zip(ov).zip(nv)
+        {
+            let s = if ox == nx { L1_SIGN_AT_ZERO } else { (ox - nx).signum() };
+            *dox += gm * s;
+            *dnx += gp * s;
+        }
+    }
+    for (((dox, dnx), &ox), &nx) in doc
+        .into_remainder()
+        .iter_mut()
+        .zip(dnc.into_remainder().iter_mut())
+        .zip(oc.remainder())
+        .zip(nc.remainder())
+    {
+        let s = if ox == nx { L1_SIGN_AT_ZERO } else { (ox - nx).signum() };
+        *dox += gm * s;
+        *dnx += gp * s;
+    }
+}
+
+/// Fused pairwise VJP: same ascending `(i, j)` accumulation order as
+/// [`ops::pairwise_backward`], with the per-row element updates blocked
+/// into [`LANES`]-wide chunks.
+#[allow(clippy::too_many_arguments)]
+fn backward_fused(
+    op: PairwiseOp,
+    o: &[f32],
+    n: &[f32],
+    d: usize,
+    scores: &[f32],
+    d_scores: &[f32],
+    d_o: &mut [f32],
+    d_n: &mut [f32],
+) {
+    let m = o.len() / d;
+    let k = n.len() / d;
+    debug_assert_eq!(d_scores.len(), m * k);
+    for i in 0..m {
+        let oi = &o[i * d..(i + 1) * d];
+        for j in 0..k {
+            let g = d_scores[i * k + j];
+            if g == 0.0 {
+                continue;
+            }
+            let nj = &n[j * d..(j + 1) * d];
+            // Split borrows: d_o row i and d_n row j never alias (separate
+            // output buffers), so reborrow per pair.
+            let do_row = &mut d_o[i * d..(i + 1) * d];
+            let dn_row = &mut d_n[j * d..(j + 1) * d];
+            match op {
+                PairwiseOp::Dot => {
+                    axpy(do_row, nj, g);
+                    axpy(dn_row, oi, g);
+                }
+                PairwiseOp::SqDiff => {
+                    diff_axpy2(do_row, dn_row, oi, nj, -2.0 * g, 2.0 * g);
+                }
+                PairwiseOp::L2 => {
+                    let norm = -scores[i * k + j]; // = sqrt(S+eps) > 0
+                    let inv = 1.0 / norm;
+                    l2_axpy2(do_row, dn_row, oi, nj, g, inv);
+                }
+                PairwiseOp::L1 => {
+                    l1_axpy2(do_row, dn_row, oi, nj, -g, g);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused gather→score
+// ---------------------------------------------------------------------------
+
+/// Stream candidate rows from `store` straight through kernel tiles,
+/// scoring each against the single query row `o` (`o.len() == d`) —
+/// the fused gather→score path used by eval candidate scoring. Rows land
+/// [`LANES`] at a time in a tile-sized buffer instead of a full
+/// block-sized staging buffer. Returns `(values moved, values hit)`
+/// exactly as a staged [`EmbeddingStore::gather_hits`] over `ids` would,
+/// so transfer-ledger accounting is identical between the paths.
+///
+/// Scores are bit-identical to `gather` + [`ops::pairwise_forward`]:
+/// the same rows flow through [`forward_fused`], which bit-matches the
+/// scalar reference.
+pub fn gather_scores(
+    op: PairwiseOp,
+    o: &[f32],
+    store: &dyn EmbeddingStore,
+    ids: &[u64],
+    d: usize,
+    scores: &mut [f32],
+    scratch: &mut KernelScratch,
+) -> (u64, u64) {
+    debug_assert_eq!(o.len(), d);
+    debug_assert_eq!(scores.len(), ids.len());
+    let KernelScratch { tile, rows } = scratch;
+    rows.clear();
+    rows.resize(LANES * d, 0.0);
+    let mut values = 0u64;
+    let mut hits = 0u64;
+    for (tid, stile) in ids.chunks(LANES).zip(scores.chunks_mut(LANES)) {
+        let rbuf = &mut rows[..tid.len() * d];
+        let (v, h) = store.gather_hits(tid, rbuf);
+        values += v;
+        hits += h;
+        forward_fused(op, o, rbuf, d, stile, tile);
+    }
+    (values, hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::DenseStore;
+    use crate::util::rng::Rng;
+    use crate::util::ulp::max_ulp_distance;
+
+    const OPS: [PairwiseOp; 4] =
+        [PairwiseOp::Dot, PairwiseOp::SqDiff, PairwiseOp::L2, PairwiseOp::L1];
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_normal()).collect()
+    }
+
+    #[test]
+    fn fused_forward_bit_matches_scalar() {
+        let mut rng = Rng::seed_from_u64(7);
+        for op in OPS {
+            for &(m, k, d) in &[(3usize, 10usize, 5usize), (1, 8, 16), (4, 9, 17), (2, 1, 1)] {
+                let o = randvec(&mut rng, m * d);
+                let n = randvec(&mut rng, k * d);
+                let mut want = vec![0f32; m * k];
+                ops::pairwise_forward(op, &o, &n, d, &mut want);
+                let mut got = vec![0f32; m * k];
+                let mut scratch = KernelScratch::default();
+                KernelBackend::Fused.forward(op, &o, &n, d, &mut got, &mut scratch);
+                assert_eq!(max_ulp_distance(&want, &got), 0, "{op:?} m={m} k={k} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_backward_bit_matches_scalar() {
+        let mut rng = Rng::seed_from_u64(11);
+        for op in OPS {
+            let (m, k, d) = (3usize, 7usize, 13usize);
+            let o = randvec(&mut rng, m * d);
+            let n = randvec(&mut rng, k * d);
+            let mut scores = vec![0f32; m * k];
+            ops::pairwise_forward(op, &o, &n, d, &mut scores);
+            let mut g = randvec(&mut rng, m * k);
+            g[2] = 0.0; // exercise the g == 0 skip
+            let (mut do_a, mut dn_a) = (vec![0f32; m * d], vec![0f32; k * d]);
+            ops::pairwise_backward(op, &o, &n, d, &scores, &g, &mut do_a, &mut dn_a);
+            let (mut do_b, mut dn_b) = (vec![0f32; m * d], vec![0f32; k * d]);
+            KernelBackend::Fused
+                .backward(op, &o, &n, d, &scores, &g, &mut do_b, &mut dn_b);
+            assert_eq!(max_ulp_distance(&do_a, &do_b), 0, "{op:?} d_o");
+            assert_eq!(max_ulp_distance(&dn_a, &dn_b), 0, "{op:?} d_n");
+        }
+    }
+
+    #[test]
+    fn fused_diag_bit_matches_scalar() {
+        let mut rng = Rng::seed_from_u64(13);
+        for op in OPS {
+            let (m, d) = (5usize, 9usize);
+            let o = randvec(&mut rng, m * d);
+            let n = randvec(&mut rng, m * d);
+            let mut want = vec![0f32; m];
+            ops::diag_forward(op, &o, &n, d, &mut want);
+            let mut got = vec![0f32; m];
+            KernelBackend::Fused.diag_forward(op, &o, &n, d, &mut got);
+            assert_eq!(max_ulp_distance(&want, &got), 0, "{op:?} diag fwd");
+
+            let g = randvec(&mut rng, m);
+            let (mut do_a, mut dn_a) = (vec![0f32; m * d], vec![0f32; m * d]);
+            ops::diag_backward(op, &o, &n, d, &want, &g, &mut do_a, &mut dn_a);
+            let (mut do_b, mut dn_b) = (vec![0f32; m * d], vec![0f32; m * d]);
+            KernelBackend::Fused
+                .diag_backward(op, &o, &n, d, &want, &g, &mut do_b, &mut dn_b);
+            assert_eq!(max_ulp_distance(&do_a, &do_b), 0, "{op:?} diag d_o");
+            assert_eq!(max_ulp_distance(&dn_a, &dn_b), 0, "{op:?} diag d_n");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_change_results() {
+        let mut rng = Rng::seed_from_u64(17);
+        let mut scratch = KernelScratch::default();
+        // Bigger shape first so the second call reuses a larger buffer.
+        for &(m, k, d) in &[(4usize, 20usize, 32usize), (2, 3, 5)] {
+            let o = randvec(&mut rng, m * d);
+            let n = randvec(&mut rng, k * d);
+            let mut want = vec![0f32; m * k];
+            ops::pairwise_forward(PairwiseOp::Dot, &o, &n, d, &mut want);
+            let mut got = vec![0f32; m * k];
+            KernelBackend::Fused.forward(PairwiseOp::Dot, &o, &n, d, &mut got, &mut scratch);
+            assert_eq!(want, got);
+        }
+    }
+
+    #[test]
+    fn gather_scores_matches_staged_gather() {
+        let d = 6;
+        let store = DenseStore::uniform(30, d, 1.0, 42);
+        let ids: Vec<u64> = vec![3, 0, 29, 7, 7, 15, 1, 22, 9, 4, 28]; // 11 ids: full tile + tail
+        let mut rng = Rng::seed_from_u64(23);
+        let o = randvec(&mut rng, d);
+        for op in OPS {
+            // staged reference: gather the whole block, then scalar-score it
+            let mut staged = vec![0f32; ids.len() * d];
+            store.gather(&ids, &mut staged);
+            let mut want = vec![0f32; ids.len()];
+            ops::pairwise_forward(op, &o, &staged, d, &mut want);
+
+            let mut got = vec![0f32; ids.len()];
+            let mut scratch = KernelScratch::default();
+            let (values, hits) =
+                gather_scores(op, &o, &store, &ids, d, &mut got, &mut scratch);
+            assert_eq!(max_ulp_distance(&want, &got), 0, "{op:?} streamed vs staged");
+            assert_eq!(values, (ids.len() * d) as u64);
+            assert_eq!(hits, 0); // DenseStore has no cache in front
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let mut scratch = KernelScratch::default();
+        let mut scores: Vec<f32> = vec![];
+        let two = [1.0f32, 2.0];
+        KernelBackend::Fused.forward(PairwiseOp::Dot, &[], &two, 2, &mut scores, &mut scratch);
+        KernelBackend::Fused.forward(PairwiseOp::L2, &two, &[], 2, &mut scores, &mut scratch);
+        let (mut d_o, mut d_n) = (vec![0f32; 2], vec![0f32; 0]);
+        KernelBackend::Fused
+            .backward(PairwiseOp::L1, &[1.0, 2.0], &[], 2, &[], &[], &mut d_o, &mut d_n);
+        assert_eq!(d_o, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kb in KernelBackend::ALL {
+            assert_eq!(KernelBackend::parse(kb.name()), Some(kb));
+        }
+        assert_eq!(KernelBackend::parse("FUSED"), Some(KernelBackend::Fused));
+        assert_eq!(KernelBackend::parse("avx999"), None);
+    }
+}

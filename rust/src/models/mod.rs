@@ -17,14 +17,22 @@
 //! fallback backend, and the scorer used by pure-coordinator benches.
 
 pub mod builders;
+pub mod kernels;
 pub mod loss;
 pub mod ops;
 pub mod step;
 
+pub use kernels::{EvalScratch, KernelBackend, KernelScratch, StepScratch};
 pub use loss::{LossKind, LossCfg};
 pub use step::{EvalSide, NativeModel, StepGrads, StepInputs};
 
 pub const L2_EPS: f32 = 1e-12;
+
+/// Subgradient of `|x|` at `x == 0`, used by the L1 backward pass.
+/// Pinned to `0.0` (jax's `sign` convention) and shared by the scalar
+/// reference and the fused kernels so the two paths cannot disagree at
+/// kinks; `rust/tests/kernel_parity_tests.rs` pins the choice.
+pub const L1_SIGN_AT_ZERO: f32 = 0.0;
 
 /// The seven score functions of paper Table 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

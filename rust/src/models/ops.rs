@@ -146,8 +146,12 @@ pub fn pairwise_backward(
                     }
                     for x in 0..d {
                         let s = (o[i * d + x] - n[j * d + x]).signum();
-                        // signum(0) = 0 to match jax's sign convention
-                        let s = if o[i * d + x] == n[j * d + x] { 0.0 } else { s };
+                        // subgradient at the kink: see models::L1_SIGN_AT_ZERO
+                        let s = if o[i * d + x] == n[j * d + x] {
+                            super::L1_SIGN_AT_ZERO
+                        } else {
+                            s
+                        };
                         d_o[i * d + x] += -g * s;
                         d_n[j * d + x] += g * s;
                     }

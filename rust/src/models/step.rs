@@ -7,8 +7,8 @@
 //! gather/scatter and the optimizer.
 
 use super::builders::{build_o, build_o_backward, project_negs, project_negs_backward, Side};
+use super::kernels::{zeroed, EvalScratch, KernelBackend, StepScratch};
 use super::loss::{loss_and_grad, LossCfg};
-use super::ops::{diag_backward, diag_forward, pairwise_backward, pairwise_forward};
 use super::ModelKind;
 
 /// Shapes of one training step: B = nc·cs positives, each chunk of cs
@@ -80,8 +80,29 @@ impl NativeModel {
         self.kind.rel_dim(self.dim)
     }
 
-    /// Forward+backward of one mini-batch. See module docs for layout.
+    /// Forward+backward of one mini-batch with the scalar reference
+    /// kernels and a throwaway scratch arena. Convenience wrapper around
+    /// [`NativeModel::train_step_with`] for tests and cold paths; the
+    /// training workers hold a per-worker [`StepScratch`] and select the
+    /// kernel backend from the spec.
     pub fn train_step(&self, shape: &StepShape, inp: &StepInputs<'_>) -> StepGrads {
+        self.train_step_with(shape, inp, KernelBackend::Scalar, &mut StepScratch::default())
+    }
+
+    /// Forward+backward of one mini-batch. See module docs for layout.
+    ///
+    /// `kb` selects the pairwise kernels (scalar reference vs fused —
+    /// results are bit-identical, see `docs/KERNELS.md`); `scratch` is the
+    /// per-worker arena replacing every per-call `vec![0f32; ..]` on the
+    /// hot path. Only the returned [`StepGrads`] buffers are allocated
+    /// here.
+    pub fn train_step_with(
+        &self,
+        shape: &StepShape,
+        inp: &StepInputs<'_>,
+        kb: KernelBackend,
+        scratch: &mut StepScratch,
+    ) -> StepGrads {
         let d = self.dim;
         let rd = self.rel_dim();
         let b = shape.batch;
@@ -96,31 +117,37 @@ impl NativeModel {
         debug_assert_eq!(inp.neg_t.len(), nc * k * d);
 
         // ---- forward ----
-        let mut o_tail = vec![0f32; b * d];
-        build_o(self.kind, Side::Tail, inp.h, inp.r, d, &mut o_tail);
-        let mut o_head = vec![0f32; b * d];
-        build_o(self.kind, Side::Head, inp.t, inp.r, d, &mut o_head);
+        let o_tail = zeroed(&mut scratch.o_tail, b * d);
+        build_o(self.kind, Side::Tail, inp.h, inp.r, d, o_tail);
+        let o_head = zeroed(&mut scratch.o_head, b * d);
+        build_o(self.kind, Side::Head, inp.t, inp.r, d, o_head);
 
         // positives: pairwise(o_tail_i, proj_i(t_i))
         let projecting = self.kind.projects_negatives();
-        let mut proj_t = if projecting { vec![0f32; b * d] } else { Vec::new() };
+        let proj_t = zeroed(&mut scratch.proj_t, if projecting { b * d } else { 0 });
         if projecting {
             for i in 0..b {
-                let mut out = vec![0f32; d];
-                project_negs(self.kind, &inp.r[i * rd..(i + 1) * rd], &inp.t[i * d..(i + 1) * d], d, &mut out);
-                proj_t[i * d..(i + 1) * d].copy_from_slice(&out);
+                project_negs(
+                    self.kind,
+                    &inp.r[i * rd..(i + 1) * rd],
+                    &inp.t[i * d..(i + 1) * d],
+                    d,
+                    &mut proj_t[i * d..(i + 1) * d],
+                );
             }
         }
-        let t_eff: &[f32] = if projecting { &proj_t } else { inp.t };
-        let mut pos = vec![0f32; b];
-        diag_forward(op, &o_tail, t_eff, d, &mut pos);
+        let t_eff: &[f32] = if projecting { proj_t } else { inp.t };
+        let pos = zeroed(&mut scratch.pos, b);
+        kb.diag_forward(op, o_tail, t_eff, d, pos);
 
         // negatives: per chunk, pairwise(o rows, negs). TransR projects the
         // chunk negatives per positive row.
         // proj_neg_t[c] layout: [cs, k, d] when projecting, else unused.
-        let mut neg_scores = vec![0f32; b * 2 * k]; // [B, 2K]: tail side then head side
-        let mut proj_negs_t = if projecting { vec![0f32; b * k * d] } else { Vec::new() };
-        let mut proj_negs_h = if projecting { vec![0f32; b * k * d] } else { Vec::new() };
+        let neg_scores = zeroed(&mut scratch.neg_scores, b * 2 * k); // [B, 2K]: tail then head
+        let proj_negs_t = zeroed(&mut scratch.proj_negs_t, if projecting { b * k * d } else { 0 });
+        let proj_negs_h = zeroed(&mut scratch.proj_negs_h, if projecting { b * k * d } else { 0 });
+        let s_row = zeroed(&mut scratch.row_k, k); // per-row scores (projecting path)
+        let s_chunk = zeroed(&mut scratch.chunk_s, cs * k); // chunk scores (GEMM path)
         for c in 0..nc {
             let rows = c * cs..(c + 1) * cs;
             let nt = &inp.neg_t[c * k * d..(c + 1) * k * d];
@@ -130,33 +157,46 @@ impl NativeModel {
                     let r_row = &inp.r[i * rd..(i + 1) * rd];
                     let pt = &mut proj_negs_t[i * k * d..(i + 1) * k * d];
                     project_negs(self.kind, r_row, nt, d, pt);
-                    let mut s = vec![0f32; k];
-                    pairwise_forward(op, &o_tail[i * d..(i + 1) * d], pt, d, &mut s);
-                    neg_scores[i * 2 * k..i * 2 * k + k].copy_from_slice(&s);
+                    kb.forward(op, &o_tail[i * d..(i + 1) * d], pt, d, s_row, &mut scratch.kernel);
+                    neg_scores[i * 2 * k..i * 2 * k + k].copy_from_slice(s_row);
                     let ph = &mut proj_negs_h[i * k * d..(i + 1) * k * d];
                     project_negs(self.kind, r_row, nh, d, ph);
-                    pairwise_forward(op, &o_head[i * d..(i + 1) * d], ph, d, &mut s);
-                    neg_scores[i * 2 * k + k..(i + 1) * 2 * k].copy_from_slice(&s);
+                    kb.forward(op, &o_head[i * d..(i + 1) * d], ph, d, s_row, &mut scratch.kernel);
+                    neg_scores[i * 2 * k + k..(i + 1) * 2 * k].copy_from_slice(s_row);
                 }
             } else {
                 // chunk-level GEMM-shaped pairwise
-                let mut s = vec![0f32; cs * k];
-                pairwise_forward(op, &o_tail[rows.start * d..rows.end * d], nt, d, &mut s);
+                kb.forward(
+                    op,
+                    &o_tail[rows.start * d..rows.end * d],
+                    nt,
+                    d,
+                    s_chunk,
+                    &mut scratch.kernel,
+                );
                 for (li, i) in rows.clone().enumerate() {
-                    neg_scores[i * 2 * k..i * 2 * k + k].copy_from_slice(&s[li * k..(li + 1) * k]);
+                    neg_scores[i * 2 * k..i * 2 * k + k]
+                        .copy_from_slice(&s_chunk[li * k..(li + 1) * k]);
                 }
-                pairwise_forward(op, &o_head[rows.start * d..rows.end * d], nh, d, &mut s);
+                kb.forward(
+                    op,
+                    &o_head[rows.start * d..rows.end * d],
+                    nh,
+                    d,
+                    s_chunk,
+                    &mut scratch.kernel,
+                );
                 for (li, i) in rows.clone().enumerate() {
                     neg_scores[i * 2 * k + k..(i + 1) * 2 * k]
-                        .copy_from_slice(&s[li * k..(li + 1) * k]);
+                        .copy_from_slice(&s_chunk[li * k..(li + 1) * k]);
                 }
             }
         }
 
         // ---- loss ----
-        let mut d_pos = vec![0f32; b];
-        let mut d_neg = vec![0f32; b * 2 * k];
-        let loss = loss_and_grad(&self.loss, &pos, &neg_scores, 2 * k, &mut d_pos, &mut d_neg);
+        let d_pos = zeroed(&mut scratch.d_pos, b);
+        let d_neg = zeroed(&mut scratch.d_neg, b * 2 * k);
+        let loss = loss_and_grad(&self.loss, pos, neg_scores, 2 * k, d_pos, d_neg);
 
         // ---- backward ----
         let mut g = StepGrads {
@@ -167,13 +207,13 @@ impl NativeModel {
             d_neg_h: vec![0f32; nc * k * d],
             d_neg_t: vec![0f32; nc * k * d],
         };
-        let mut d_o_tail = vec![0f32; b * d];
-        let mut d_o_head = vec![0f32; b * d];
+        let d_o_tail = zeroed(&mut scratch.d_o_tail, b * d);
+        let d_o_head = zeroed(&mut scratch.d_o_head, b * d);
 
         // positives → d_o_tail, d_t (through projection if TransR)
         {
-            let mut d_t_eff = vec![0f32; b * d];
-            diag_backward(op, &o_tail, t_eff, d, &pos, &d_pos, &mut d_o_tail, &mut d_t_eff);
+            let d_t_eff = zeroed(&mut scratch.d_t_eff, b * d);
+            kb.diag_backward(op, o_tail, t_eff, d, pos, d_pos, d_o_tail, d_t_eff);
             if projecting {
                 for i in 0..b {
                     project_negs_backward(
@@ -203,8 +243,8 @@ impl NativeModel {
                     let pt = &proj_negs_t[i * k * d..(i + 1) * k * d];
                     let st = &neg_scores[i * 2 * k..i * 2 * k + k];
                     let gt = &d_neg[i * 2 * k..i * 2 * k + k];
-                    let mut d_pt = vec![0f32; k * d];
-                    pairwise_backward(
+                    let d_pt = zeroed(&mut scratch.d_pt, k * d);
+                    kb.backward(
                         op,
                         &o_tail[i * d..(i + 1) * d],
                         pt,
@@ -212,14 +252,14 @@ impl NativeModel {
                         st,
                         gt,
                         &mut d_o_tail[i * d..(i + 1) * d],
-                        &mut d_pt,
+                        d_pt,
                     );
                     project_negs_backward(
                         self.kind,
                         r_row,
                         nt,
                         d,
-                        &d_pt,
+                        d_pt,
                         &mut g.d_neg_t[c * k * d..(c + 1) * k * d],
                         &mut g.d_r[i * rd..(i + 1) * rd],
                     );
@@ -227,8 +267,8 @@ impl NativeModel {
                     let ph = &proj_negs_h[i * k * d..(i + 1) * k * d];
                     let sh = &neg_scores[i * 2 * k + k..(i + 1) * 2 * k];
                     let gh = &d_neg[i * 2 * k + k..(i + 1) * 2 * k];
-                    let mut d_ph = vec![0f32; k * d];
-                    pairwise_backward(
+                    let d_ph = zeroed(&mut scratch.d_ph, k * d);
+                    kb.backward(
                         op,
                         &o_head[i * d..(i + 1) * d],
                         ph,
@@ -236,24 +276,24 @@ impl NativeModel {
                         sh,
                         gh,
                         &mut d_o_head[i * d..(i + 1) * d],
-                        &mut d_ph,
+                        d_ph,
                     );
                     project_negs_backward(
                         self.kind,
                         r_row,
                         nh,
                         d,
-                        &d_ph,
+                        d_ph,
                         &mut g.d_neg_h[c * k * d..(c + 1) * k * d],
                         &mut g.d_r[i * rd..(i + 1) * rd],
                     );
                 }
             } else {
                 // reassemble chunk score/grad blocks [cs,k]
-                let mut st = vec![0f32; cs * k];
-                let mut gt = vec![0f32; cs * k];
-                let mut sh = vec![0f32; cs * k];
-                let mut gh = vec![0f32; cs * k];
+                let st = zeroed(&mut scratch.st, cs * k);
+                let gt = zeroed(&mut scratch.gt, cs * k);
+                let sh = zeroed(&mut scratch.sh, cs * k);
+                let gh = zeroed(&mut scratch.gh, cs * k);
                 for (li, i) in rows.clone().enumerate() {
                     st[li * k..(li + 1) * k]
                         .copy_from_slice(&neg_scores[i * 2 * k..i * 2 * k + k]);
@@ -263,23 +303,23 @@ impl NativeModel {
                     gh[li * k..(li + 1) * k]
                         .copy_from_slice(&d_neg[i * 2 * k + k..(i + 1) * 2 * k]);
                 }
-                pairwise_backward(
+                kb.backward(
                     op,
                     &o_tail[rows.start * d..rows.end * d],
                     nt,
                     d,
-                    &st,
-                    &gt,
+                    st,
+                    gt,
                     &mut d_o_tail[rows.start * d..rows.end * d],
                     &mut g.d_neg_t[c * k * d..(c + 1) * k * d],
                 );
-                pairwise_backward(
+                kb.backward(
                     op,
                     &o_head[rows.start * d..rows.end * d],
                     nh,
                     d,
-                    &sh,
-                    &gh,
+                    sh,
+                    gh,
                     &mut d_o_head[rows.start * d..rows.end * d],
                     &mut g.d_neg_h[c * k * d..(c + 1) * k * d],
                 );
@@ -304,35 +344,73 @@ impl NativeModel {
         cand: &[f32],
         scores: &mut [f32],
     ) {
+        self.eval_scores_with(
+            side,
+            e,
+            r,
+            cand,
+            scores,
+            KernelBackend::Scalar,
+            &mut EvalScratch::default(),
+        );
+    }
+
+    /// [`NativeModel::eval_scores`] with an explicit kernel backend and a
+    /// reusable per-thread scratch arena: the `o` query rows and the
+    /// TransR projected-candidate buffer persist across calls instead of
+    /// being reallocated per scoring block.
+    pub fn eval_scores_with(
+        &self,
+        side: EvalSide,
+        e: &[f32],
+        r: &[f32],
+        cand: &[f32],
+        scores: &mut [f32],
+        kb: KernelBackend,
+        scratch: &mut EvalScratch,
+    ) {
         let d = self.dim;
         let rd = self.rel_dim();
         let m = e.len() / d;
         let c = cand.len() / d;
         debug_assert_eq!(scores.len(), m * c);
         let op = self.kind.pairwise_op();
+        let o = zeroed(&mut scratch.o, m * d);
+        self.build_query(side, e, r, o);
+        if self.kind.projects_negatives() {
+            let pc = zeroed(&mut scratch.pc, c * d);
+            for i in 0..m {
+                project_negs(self.kind, &r[i * rd..(i + 1) * rd], cand, d, pc);
+                kb.forward(
+                    op,
+                    &o[i * d..(i + 1) * d],
+                    pc,
+                    d,
+                    &mut scores[i * c..(i + 1) * c],
+                    &mut scratch.kernel,
+                );
+            }
+        } else {
+            kb.forward(op, o, cand, d, scores, &mut scratch.kernel);
+        }
+    }
+
+    /// Build the `o = g(e, r)` query rows for eval scoring without scoring
+    /// anything. The fused gather→score eval path builds the query once
+    /// per (triplet, side) and streams candidate rows through
+    /// `kernels::gather_scores` instead of staging a scoring block.
+    pub fn build_query(&self, side: EvalSide, e: &[f32], r: &[f32], o: &mut [f32]) {
         let bside = match side {
             EvalSide::Tail => Side::Tail,
             EvalSide::Head => Side::Head,
         };
-        let mut o = vec![0f32; m * d];
-        build_o(self.kind, bside, e, r, d, &mut o);
-        if self.kind.projects_negatives() {
-            let mut pc = vec![0f32; c * d];
-            for i in 0..m {
-                project_negs(self.kind, &r[i * rd..(i + 1) * rd], cand, d, &mut pc);
-                pairwise_forward(op, &o[i * d..(i + 1) * d], &pc, d, &mut scores[i * c..(i + 1) * c]);
-            }
-        } else {
-            pairwise_forward(op, &o, cand, d, scores);
-        }
+        build_o(self.kind, bside, e, r, self.dim, o);
     }
 
     /// Score a single triplet (used by tests and spot checks).
     pub fn score_one(&self, h: &[f32], r: &[f32], t: &[f32]) -> f32 {
-        let d = self.dim;
         let mut s = vec![0f32; 1];
         self.eval_scores(EvalSide::Tail, h, r, t, &mut s);
-        let _ = d;
         s[0]
     }
 }
@@ -465,6 +543,35 @@ mod tests {
             let mut s = vec![0f32; 1];
             model.eval_scores(EvalSide::Head, &t, &r, &h, &mut s);
             assert!((tail - s[0]).abs() < 1e-4, "{kind:?} tail={tail} head={}", s[0]);
+        }
+    }
+
+    /// The fused kernels must produce a bit-identical step (loss and every
+    /// gradient tensor) for every model, with the scratch arena reused
+    /// across models to stress checkout re-zeroing.
+    #[test]
+    fn train_step_fused_bit_matches_scalar() {
+        use crate::models::kernels::{KernelBackend, StepScratch};
+        use crate::util::ulp::max_ulp_distance;
+        let s = shape();
+        let mut scratch = StepScratch::default();
+        for kind in ModelKind::ALL {
+            let model = NativeModel::new(kind, s.dim, LossCfg::default());
+            let mut rng = Rng::seed_from_u64(kind as u64 + 900);
+            let (h, r, t, nh, nt) = make_inputs(&mut rng, kind, &s);
+            let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+            let a = model.train_step(&s, &inp);
+            let b = model.train_step_with(&s, &inp, KernelBackend::Fused, &mut scratch);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{kind:?} loss");
+            for (name, x, y) in [
+                ("d_h", &a.d_h, &b.d_h),
+                ("d_r", &a.d_r, &b.d_r),
+                ("d_t", &a.d_t, &b.d_t),
+                ("d_neg_h", &a.d_neg_h, &b.d_neg_h),
+                ("d_neg_t", &a.d_neg_t, &b.d_neg_t),
+            ] {
+                assert_eq!(max_ulp_distance(x, y), 0, "{kind:?} {name}");
+            }
         }
     }
 

@@ -8,8 +8,9 @@
 use super::artifacts::Manifest;
 use super::executor::{TrainExecutor, XlaRuntime};
 use crate::models::step::{StepGrads, StepInputs, StepShape};
-use crate::models::{LossCfg, LossKind, ModelKind, NativeModel};
+use crate::models::{KernelBackend, LossCfg, LossKind, ModelKind, NativeModel, StepScratch};
 use anyhow::Result;
+use std::cell::RefCell;
 
 /// Which backend trainers use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,12 +35,21 @@ impl BackendKind {
 /// (the XLA client must not cross threads).
 pub enum TrainBackend {
     Xla(TrainExecutor),
-    Native { model: NativeModel, shape: StepShape },
+    Native {
+        model: NativeModel,
+        shape: StepShape,
+        /// score/grad kernel selection for the native step
+        kernels: KernelBackend,
+        /// per-worker scratch arena reused across steps. `RefCell` is
+        /// sound here: the backend is constructed inside its worker
+        /// thread and never shared (the XLA client is `!Send` anyway).
+        scratch: RefCell<StepScratch>,
+    },
 }
 
 impl TrainBackend {
-    /// Build for a worker. `tag` selects the artifact shape family
-    /// ("default" or "tiny").
+    /// Build for a worker with the scalar reference kernels. `tag`
+    /// selects the artifact shape family ("default" or "tiny").
     pub fn create(
         kind: BackendKind,
         model: ModelKind,
@@ -47,6 +57,29 @@ impl TrainBackend {
         manifest: Option<&Manifest>,
         tag: &str,
         shape_override: Option<StepShape>,
+    ) -> Result<TrainBackend> {
+        Self::create_with_kernels(
+            kind,
+            model,
+            loss,
+            manifest,
+            tag,
+            shape_override,
+            KernelBackend::Scalar,
+        )
+    }
+
+    /// Build for a worker with an explicit kernel backend (native only;
+    /// the XLA path compiles its own kernels).
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_with_kernels(
+        kind: BackendKind,
+        model: ModelKind,
+        loss: LossCfg,
+        manifest: Option<&Manifest>,
+        tag: &str,
+        shape_override: Option<StepShape>,
+        kernels: KernelBackend,
     ) -> Result<TrainBackend> {
         match kind {
             BackendKind::Xla => {
@@ -63,7 +96,12 @@ impl TrainBackend {
             BackendKind::Native => {
                 let shape = shape_override
                     .ok_or_else(|| anyhow::anyhow!("native backend needs an explicit shape"))?;
-                Ok(TrainBackend::Native { model: NativeModel::new(model, shape.dim, loss), shape })
+                Ok(TrainBackend::Native {
+                    model: NativeModel::new(model, shape.dim, loss),
+                    shape,
+                    kernels,
+                    scratch: RefCell::new(StepScratch::default()),
+                })
             }
         }
     }
@@ -85,7 +123,9 @@ impl TrainBackend {
     pub fn step(&self, inp: &StepInputs<'_>) -> Result<StepGrads> {
         match self {
             TrainBackend::Xla(e) => e.step(inp),
-            TrainBackend::Native { model, shape } => Ok(model.train_step(shape, inp)),
+            TrainBackend::Native { model, shape, kernels, scratch } => {
+                Ok(model.train_step_with(shape, inp, *kernels, &mut scratch.borrow_mut()))
+            }
         }
     }
 }
@@ -125,6 +165,39 @@ mod tests {
             .unwrap();
         assert!(g.loss.is_finite());
         assert_eq!(g.d_h.len(), 8 * 8);
+    }
+
+    #[test]
+    fn fused_native_backend_matches_scalar() {
+        let shape = StepShape { batch: 8, chunks: 2, neg_k: 4, dim: 8 };
+        let mk_backend = |kernels| {
+            TrainBackend::create_with_kernels(
+                BackendKind::Native,
+                ModelKind::TransEL2,
+                LossCfg::default(),
+                None,
+                "tiny",
+                Some(shape),
+                kernels,
+            )
+            .unwrap()
+        };
+        let scalar = mk_backend(KernelBackend::Scalar);
+        let fused = mk_backend(KernelBackend::Fused);
+        let mut rng = crate::util::rng::Rng::seed_from_u64(9);
+        let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.gen_normal()).collect() };
+        let (h, r, t) = (mk(8 * 8), mk(8 * 8), mk(8 * 8));
+        let (nh, nt) = (mk(2 * 4 * 8), mk(2 * 4 * 8));
+        let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+        // two steps each, so the fused backend's scratch arena is reused
+        for _ in 0..2 {
+            let a = scalar.step(&inp).unwrap();
+            let b = fused.step(&inp).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.d_h, b.d_h);
+            assert_eq!(a.d_t, b.d_t);
+            assert_eq!(a.d_r, b.d_r);
+        }
     }
 
     #[test]

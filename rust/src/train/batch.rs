@@ -4,7 +4,9 @@
 //!
 //! Buffers are reused across batches — no allocation on the hot loop.
 
+use crate::models::kernels::{self, KernelScratch};
 use crate::models::step::{StepGrads, StepInputs, StepShape};
+use crate::models::PairwiseOp;
 use crate::sampler::Batch;
 use crate::store::{EmbeddingStore, SparseGrads};
 use std::collections::HashSet;
@@ -138,6 +140,26 @@ fn patch_section(
     }
 }
 
+/// Fused gather→score over entity candidates: stream `ids` rows from the
+/// store through kernel tiles (`models::kernels::gather_scores`), scoring
+/// each against the single query row `o`, with the same [`GatherVolume`]
+/// accounting a staged [`EmbeddingStore::gather_hits`] + scalar scoring
+/// pass would report — billing lives here, next to the staged path, so
+/// the two can't drift. Scores are bit-identical to the staged path (the
+/// kernel parity contract, `docs/KERNELS.md`).
+pub fn stream_gather_scores(
+    op: PairwiseOp,
+    o: &[f32],
+    entities: &dyn EmbeddingStore,
+    ids: &[u64],
+    d: usize,
+    scores: &mut [f32],
+    scratch: &mut KernelScratch,
+) -> GatherVolume {
+    let (values, ent_hit_values) = kernels::gather_scores(op, o, entities, ids, d, scores, scratch);
+    GatherVolume { values, ent_hit_values, rel_hit_values: 0 }
+}
+
 /// Split step gradients into entity-sparse and relation-sparse updates,
 /// folding duplicate ids (exact accumulation, like DGL-KE's index_add_).
 pub fn split_grads(batch: &Batch, grads: &StepGrads, dim: usize, rel_dim: usize) -> (SparseGrads, SparseGrads) {
@@ -256,6 +278,65 @@ mod tests {
         assert_eq!(warm.values, cold.values);
         assert_eq!(warm.ent_hit_values, (8 * 3) as u64, "8 entity rows re-served");
         assert_eq!(warm.rel_hit_values, (2 * 3) as u64, "2 relation rows re-served");
+    }
+
+    #[test]
+    fn stream_gather_scores_matches_staged_path() {
+        let d = 3;
+        let entities = crate::store::DenseStore::uniform(10, d, 1.0, 1);
+        let ids: Vec<u64> = vec![1, 4, 9, 0, 2, 7, 3, 5, 8, 6]; // full tile + tail
+        let o = vec![0.3f32, -1.2, 0.8];
+        for op in [PairwiseOp::Dot, PairwiseOp::SqDiff, PairwiseOp::L2, PairwiseOp::L1] {
+            let mut staged = vec![0f32; ids.len() * d];
+            entities.gather(&ids, &mut staged);
+            let mut want = vec![0f32; ids.len()];
+            crate::models::ops::pairwise_forward(op, &o, &staged, d, &mut want);
+
+            let mut got = vec![0f32; ids.len()];
+            let mut scratch = KernelScratch::default();
+            let vol = stream_gather_scores(op, &o, &entities, &ids, d, &mut got, &mut scratch);
+            assert_eq!(want, got, "{op:?} streamed vs staged");
+            assert_eq!(vol.values, (ids.len() * d) as u64);
+            assert_eq!(vol.ent_hit_values, 0, "dense stores never hit");
+            assert_eq!(vol.rel_hit_values, 0);
+        }
+    }
+
+    #[test]
+    fn stream_gather_scores_credits_cache_hits() {
+        // cached mmap table: a second streaming pass over the same ids is
+        // all hits, exactly like a staged warm gather
+        let d = 3;
+        let cfg = crate::store::StoreConfig {
+            backend: crate::store::StoreBackendKind::Mmap,
+            ..Default::default()
+        };
+        let entities = cfg.uniform_cached("sgs-ents", 10, d, 1.0, 1, Some(10 * 3 * 4)).unwrap();
+        let ids: Vec<u64> = vec![0, 1, 2, 3, 4, 5, 6, 7, 8];
+        let o = vec![1.0f32, 0.0, -1.0];
+        let mut scores = vec![0f32; ids.len()];
+        let mut scratch = KernelScratch::default();
+        let cold = stream_gather_scores(
+            PairwiseOp::Dot,
+            &o,
+            &*entities,
+            &ids,
+            d,
+            &mut scores,
+            &mut scratch,
+        );
+        assert_eq!(cold.ent_hit_values, 0, "cold cache");
+        let warm = stream_gather_scores(
+            PairwiseOp::Dot,
+            &o,
+            &*entities,
+            &ids,
+            d,
+            &mut scores,
+            &mut scratch,
+        );
+        assert_eq!(warm.values, cold.values);
+        assert_eq!(warm.ent_hit_values, warm.values, "warm pass fully served from cache");
     }
 
     #[test]

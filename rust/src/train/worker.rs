@@ -70,6 +70,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// record loss every this many batches (per worker 0)
     pub log_every: usize,
+    /// score/grad kernel backend for the native step (bit-identical
+    /// results either way; `Fused` is the cache-tiled fast path)
+    pub kernels: crate::models::KernelBackend,
 }
 
 impl Default for TrainConfig {
@@ -93,6 +96,7 @@ impl Default for TrainConfig {
             hardware: Hardware::Cpu,
             seed: 0,
             log_every: 50,
+            kernels: crate::models::KernelBackend::Scalar,
         }
     }
 }
@@ -651,13 +655,14 @@ fn worker_loop(
     w: usize,
 ) -> Result<WorkerOut> {
     // backend is created inside the worker thread (PJRT client is !Send)
-    let backend = TrainBackend::create(
+    let backend = TrainBackend::create_with_kernels(
         cfg.backend,
         cfg.model,
         cfg.loss,
         manifest,
         &cfg.artifact_tag,
         cfg.shape,
+        cfg.kernels,
     )?;
     let shape = backend.shape();
     let rel_dim = backend.rel_dim();

@@ -10,3 +10,4 @@ pub mod threadpool;
 pub mod json;
 pub mod timer;
 pub mod topk;
+pub mod ulp;

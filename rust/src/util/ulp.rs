@@ -1,0 +1,98 @@
+//! f32 ULP (units in the last place) distance — the comparator behind the
+//! kernel parity goldens (`docs/KERNELS.md`).
+//!
+//! The fused kernels in `models::kernels` promise bit-exactness against the
+//! scalar reference for `Dot`/`SqDiff`/`L1` and a drift bound of at most
+//! 2 ULP for `L2`. "ULP distance" here is the number of representable
+//! `f32` values strictly between two floats, computed on the monotone
+//! integer mapping of IEEE-754 bit patterns (negative floats are mapped
+//! below positives, so the distance is well defined across zero).
+
+/// Map an `f32`'s bit pattern onto a monotonically increasing `i64`:
+/// ordering the mapped values matches ordering the floats (with
+/// `-0.0 == 0.0` one step apart, the standard lexicographic convention).
+fn monotone_bits(x: f32) -> i64 {
+    let b = x.to_bits() as i64;
+    if b < 0x8000_0000 {
+        b
+    } else {
+        // negative floats: flip to descending-magnitude order below zero
+        0x8000_0000i64 - b
+    }
+}
+
+/// ULP distance between two finite `f32`s. `0` means bit-identical (or
+/// `+0.0` vs `-0.0` after one step — callers comparing exact bits should
+/// use `to_bits` equality). NaNs and infinities never compare close:
+/// any non-finite operand yields `i64::MAX` unless both are bit-equal.
+pub fn ulp_distance(a: f32, b: f32) -> i64 {
+    if a.to_bits() == b.to_bits() {
+        return 0;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return i64::MAX;
+    }
+    (monotone_bits(a) - monotone_bits(b)).abs()
+}
+
+/// `true` when `a` and `b` are within `max_ulp` representable values of
+/// each other (see [`ulp_distance`]).
+pub fn within_ulp(a: f32, b: f32, max_ulp: i64) -> bool {
+    ulp_distance(a, b) <= max_ulp
+}
+
+/// Maximum ULP distance across two equal-length slices (panics on length
+/// mismatch — a parity harness comparing different shapes is a test bug).
+pub fn max_ulp_distance(a: &[f32], b: &[f32]) -> i64 {
+    assert_eq!(a.len(), b.len(), "ulp comparison over mismatched lengths");
+    a.iter().zip(b).map(|(&x, &y)| ulp_distance(x, y)).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_bits_are_zero_ulp() {
+        assert_eq!(ulp_distance(1.5, 1.5), 0);
+        assert_eq!(ulp_distance(-0.0, -0.0), 0);
+        assert_eq!(ulp_distance(f32::NAN, f32::NAN), 0); // same payload
+    }
+
+    #[test]
+    fn adjacent_floats_are_one_ulp() {
+        let x = 1.0f32;
+        let next = f32::from_bits(x.to_bits() + 1);
+        assert_eq!(ulp_distance(x, next), 1);
+        let y = -2.5f32;
+        let next = f32::from_bits(y.to_bits() + 1); // toward -inf in bits
+        assert_eq!(ulp_distance(y, next), 1);
+    }
+
+    #[test]
+    fn distance_crosses_zero() {
+        // -0.0 and +0.0 are one step apart; the smallest positive and
+        // smallest negative subnormals are two steps apart
+        assert_eq!(ulp_distance(0.0, -0.0), 1);
+        let tiny_pos = f32::from_bits(1);
+        let tiny_neg = f32::from_bits(0x8000_0001);
+        assert_eq!(ulp_distance(tiny_pos, tiny_neg), 2);
+        assert!(within_ulp(tiny_pos, tiny_neg, 2));
+        assert!(!within_ulp(tiny_pos, tiny_neg, 1));
+    }
+
+    #[test]
+    fn non_finite_never_close() {
+        assert_eq!(ulp_distance(f32::INFINITY, f32::MAX), i64::MAX);
+        assert_eq!(ulp_distance(f32::NAN, 0.0), i64::MAX);
+    }
+
+    #[test]
+    fn slice_max_takes_the_worst_pair() {
+        let a = [1.0f32, 2.0, 3.0];
+        let mut b = a;
+        b[1] = f32::from_bits(b[1].to_bits() + 2);
+        assert_eq!(max_ulp_distance(&a, &b), 2);
+        assert_eq!(max_ulp_distance(&[], &[]), 0);
+    }
+}

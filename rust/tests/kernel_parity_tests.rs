@@ -1,0 +1,307 @@
+//! Fused-vs-scalar kernel parity goldens (see `docs/KERNELS.md`).
+//!
+//! The scalar loops in `models::ops` are the reference; the fused kernels
+//! in `models::kernels` are an optimization that must stay **bit-exact**
+//! against them. These tests sweep the shape grid (odd dims, tile tails,
+//! empty inputs), every pairwise op, every model's full train step, eval
+//! scoring (including the TransR projected path), and a whole session —
+//! each asserting equality at the bit level with the ULP comparator in
+//! `util::ulp`.
+//!
+//! ULP policy: the contract allows the L2 forward up to 2 ULP of slack
+//! (a sqrt sits after the reduction), but the candidate-tiled design
+//! preserves the exact scalar reduction order, so in practice every op —
+//! L2 included — lands at 0 ULP; the assertions pin the stronger result
+//! where they can.
+
+use dglke::models::ops;
+use dglke::models::step::{StepInputs, StepShape};
+use dglke::models::{
+    kernels, EvalScratch, EvalSide, KernelBackend, KernelScratch, LossCfg, ModelKind,
+    NativeModel, PairwiseOp, StepScratch, L1_SIGN_AT_ZERO,
+};
+use dglke::util::rng::Rng;
+use dglke::util::ulp::max_ulp_distance;
+
+const OPS: [PairwiseOp; 4] =
+    [PairwiseOp::Dot, PairwiseOp::SqDiff, PairwiseOp::L2, PairwiseOp::L1];
+
+/// Dims that cover every tile regime: sub-lane, exact lane, lane+1,
+/// multi-tile with tails, and a production-ish width.
+const DIMS: [usize; 13] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 63];
+const BIG_DIMS: [usize; 2] = [64, 100];
+const SIZES: [usize; 3] = [1, 3, 8];
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_normal()).collect()
+}
+
+fn forward_pair(
+    op: PairwiseOp,
+    o: &[f32],
+    n: &[f32],
+    d: usize,
+    m: usize,
+    k: usize,
+    scratch: &mut KernelScratch,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut want = vec![0f32; m * k];
+    ops::pairwise_forward(op, o, n, d, &mut want);
+    let mut got = vec![0f32; m * k];
+    KernelBackend::Fused.forward(op, o, n, d, &mut got, scratch);
+    (want, got)
+}
+
+#[test]
+fn forward_backward_parity_over_shape_grid() {
+    let mut rng = Rng::seed_from_u64(0xD1);
+    let mut scratch = KernelScratch::default();
+    for op in OPS {
+        for d in DIMS.iter().chain(BIG_DIMS.iter()).copied() {
+            for m in SIZES {
+                for k in SIZES {
+                    let o = randvec(&mut rng, m * d);
+                    let n = randvec(&mut rng, k * d);
+                    let (want, got) = forward_pair(op, &o, &n, d, m, k, &mut scratch);
+                    assert_eq!(
+                        max_ulp_distance(&want, &got),
+                        0,
+                        "{op:?} forward m={m} k={k} d={d}"
+                    );
+
+                    // backward off the scalar forward scores, with a zero
+                    // upstream entry when there is room (the g == 0 skip)
+                    let mut g = randvec(&mut rng, m * k);
+                    if let Some(slot) = g.get_mut(1) {
+                        *slot = 0.0;
+                    }
+                    let (mut do_a, mut dn_a) = (vec![0f32; m * d], vec![0f32; k * d]);
+                    ops::pairwise_backward(op, &o, &n, d, &want, &g, &mut do_a, &mut dn_a);
+                    let (mut do_b, mut dn_b) = (vec![0f32; m * d], vec![0f32; k * d]);
+                    KernelBackend::Fused
+                        .backward(op, &o, &n, d, &want, &g, &mut do_b, &mut dn_b);
+                    assert_eq!(
+                        max_ulp_distance(&do_a, &do_b),
+                        0,
+                        "{op:?} d_o m={m} k={k} d={d}"
+                    );
+                    assert_eq!(
+                        max_ulp_distance(&dn_a, &dn_b),
+                        0,
+                        "{op:?} d_n m={m} k={k} d={d}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_shapes_are_noops_on_both_paths() {
+    let d = 4;
+    let mut scratch = KernelScratch::default();
+    for op in OPS {
+        // m == 0
+        let n = vec![1.0f32; 2 * d];
+        let mut scores: Vec<f32> = vec![];
+        KernelBackend::Fused.forward(op, &[], &n, d, &mut scores, &mut scratch);
+        ops::pairwise_forward(op, &[], &n, d, &mut scores);
+        // k == 0
+        let o = vec![1.0f32; 3 * d];
+        KernelBackend::Fused.forward(op, &o, &[], d, &mut scores, &mut scratch);
+        ops::pairwise_forward(op, &o, &[], d, &mut scores);
+        // backward with k == 0 must leave d_o untouched
+        let mut d_o = vec![0f32; 3 * d];
+        let mut d_n: Vec<f32> = vec![];
+        KernelBackend::Fused.backward(op, &o, &[], d, &[], &[], &mut d_o, &mut d_n);
+        assert!(d_o.iter().all(|&x| x == 0.0), "{op:?} empty-k backward wrote d_o");
+    }
+}
+
+#[test]
+fn l1_subgradient_at_ties_is_the_shared_constant() {
+    // The documented choice: sign(0) := 0.0 on both paths. A tie between
+    // o and n must contribute exactly -g * 0 / g * 0 — i.e. nothing —
+    // to the gradients, bit-identically scalar vs fused.
+    assert_eq!(L1_SIGN_AT_ZERO, 0.0);
+    let d = 9; // odd: the tie below lands in both lane body and tail runs
+    let (m, k) = (2, 3);
+    let mut rng = Rng::seed_from_u64(0x11);
+    let mut o = randvec(&mut rng, m * d);
+    let mut n = randvec(&mut rng, k * d);
+    // plant exact ties: row 0 of o equals row 1 of n entirely, plus one
+    // scattered tied element in the lane tail
+    for x in 0..d {
+        n[d + x] = o[x];
+    }
+    o[d + 8] = 0.5;
+    n[2 * d + 8] = 0.5;
+    let mut scores = vec![0f32; m * k];
+    ops::pairwise_forward(PairwiseOp::L1, &o, &n, d, &mut scores);
+    let g = vec![1.0f32; m * k]; // all pairs active
+    let (mut do_a, mut dn_a) = (vec![0f32; m * d], vec![0f32; k * d]);
+    ops::pairwise_backward(PairwiseOp::L1, &o, &n, d, &scores, &g, &mut do_a, &mut dn_a);
+    let (mut do_b, mut dn_b) = (vec![0f32; m * d], vec![0f32; k * d]);
+    KernelBackend::Fused
+        .backward(PairwiseOp::L1, &o, &n, d, &scores, &g, &mut do_b, &mut dn_b);
+    assert_eq!(max_ulp_distance(&do_a, &do_b), 0, "L1 tie d_o");
+    assert_eq!(max_ulp_distance(&dn_a, &dn_b), 0, "L1 tie d_n");
+    // and the tied pair really did contribute zero: a fully-tied (i=0,
+    // j=1) pair with every other j also tied at x=8 would otherwise show
+    // up here
+    let tied_contrib: f32 = (0..d).map(|x| do_a[x].abs()).sum::<f32>();
+    assert!(tied_contrib.is_finite());
+}
+
+#[test]
+fn diag_parity_over_dims() {
+    let mut rng = Rng::seed_from_u64(0x21);
+    for op in OPS {
+        for d in DIMS {
+            let m = 4;
+            let o = randvec(&mut rng, m * d);
+            let n = randvec(&mut rng, m * d);
+            let mut want = vec![0f32; m];
+            ops::diag_forward(op, &o, &n, d, &mut want);
+            let mut got = vec![0f32; m];
+            KernelBackend::Fused.diag_forward(op, &o, &n, d, &mut got);
+            assert_eq!(max_ulp_distance(&want, &got), 0, "{op:?} diag d={d}");
+
+            let g = randvec(&mut rng, m);
+            let (mut do_a, mut dn_a) = (vec![0f32; m * d], vec![0f32; m * d]);
+            ops::diag_backward(op, &o, &n, d, &want, &g, &mut do_a, &mut dn_a);
+            let (mut do_b, mut dn_b) = (vec![0f32; m * d], vec![0f32; m * d]);
+            KernelBackend::Fused.diag_backward(op, &o, &n, d, &want, &g, &mut do_b, &mut dn_b);
+            assert_eq!(max_ulp_distance(&do_a, &do_b), 0, "{op:?} diag d_o d={d}");
+            assert_eq!(max_ulp_distance(&dn_a, &dn_b), 0, "{op:?} diag d_n d={d}");
+        }
+    }
+}
+
+#[test]
+fn train_step_parity_for_every_model() {
+    let shape = StepShape { batch: 8, chunks: 2, neg_k: 4, dim: 8 };
+    let mut scratch = StepScratch::default(); // reused across all models
+    for kind in ModelKind::ALL {
+        let model = NativeModel::new(kind, shape.dim, LossCfg::default());
+        let rd = model.rel_dim();
+        let mut rng = Rng::seed_from_u64(0x31);
+        let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.gen_normal()).collect() };
+        let h = mk(shape.batch * shape.dim);
+        let r = mk(shape.batch * rd);
+        let t = mk(shape.batch * shape.dim);
+        let nh = mk(shape.chunks * shape.neg_k * shape.dim);
+        let nt = mk(shape.chunks * shape.neg_k * shape.dim);
+        let inp = StepInputs { h: &h, r: &r, t: &t, neg_h: &nh, neg_t: &nt };
+        let a = model.train_step(&shape, &inp);
+        let b = model.train_step_with(&shape, &inp, KernelBackend::Fused, &mut scratch);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{kind:?} loss");
+        for (name, x, y) in [
+            ("d_h", &a.d_h, &b.d_h),
+            ("d_r", &a.d_r, &b.d_r),
+            ("d_t", &a.d_t, &b.d_t),
+            ("d_neg_h", &a.d_neg_h, &b.d_neg_h),
+            ("d_neg_t", &a.d_neg_t, &b.d_neg_t),
+        ] {
+            assert_eq!(max_ulp_distance(x, y), 0, "{kind:?} {name}");
+        }
+    }
+}
+
+#[test]
+fn eval_scores_parity_including_transr() {
+    let d = 8;
+    let c = 21; // blocks of 8 + tail
+    for kind in ModelKind::ALL {
+        let model = NativeModel::new(kind, d, LossCfg::default());
+        let rd = model.rel_dim();
+        let m = 3;
+        let mut rng = Rng::seed_from_u64(0x41);
+        let e = randvec(&mut rng, m * d);
+        let r = randvec(&mut rng, m * rd);
+        let cand = randvec(&mut rng, c * d);
+        for side in [EvalSide::Tail, EvalSide::Head] {
+            let mut want = vec![0f32; m * c];
+            model.eval_scores(side, &e, &r, &cand, &mut want);
+            let mut got = vec![0f32; m * c];
+            let mut scratch = EvalScratch::default();
+            model.eval_scores_with(
+                side,
+                &e,
+                &r,
+                &cand,
+                &mut got,
+                KernelBackend::Fused,
+                &mut scratch,
+            );
+            assert_eq!(max_ulp_distance(&want, &got), 0, "{kind:?} {side:?}");
+        }
+    }
+}
+
+#[test]
+fn streamed_gather_scores_match_staged_for_all_ops() {
+    use dglke::store::{DenseStore, EmbeddingStore};
+    let d = 7;
+    let store = DenseStore::uniform(50, d, 1.0, 5);
+    let ids: Vec<u64> = (0..19).map(|i| (i * 7) % 50).collect();
+    let mut rng = Rng::seed_from_u64(0x51);
+    let o = randvec(&mut rng, d);
+    for op in OPS {
+        let mut staged = vec![0f32; ids.len() * d];
+        store.gather(&ids, &mut staged);
+        let mut want = vec![0f32; ids.len()];
+        ops::pairwise_forward(op, &o, &staged, d, &mut want);
+        let mut got = vec![0f32; ids.len()];
+        let mut scratch = KernelScratch::default();
+        kernels::gather_scores(op, &o, &store, &ids, d, &mut got, &mut scratch);
+        assert_eq!(max_ulp_distance(&want, &got), 0, "{op:?} streamed");
+    }
+}
+
+/// End-to-end: a whole training run + evaluation under `--kernels fused`
+/// is bit-identical to the scalar run. One worker, synchronous updates —
+/// the deterministic regime where "bit-identical" is well-defined.
+#[test]
+fn session_level_fused_run_is_bit_identical() {
+    use dglke::api::Session;
+
+    let run = |kernels: KernelBackend| {
+        let mut session = Session::builder()
+            .dataset("tiny")
+            .model(ModelKind::TransEL2)
+            .workers(1)
+            .async_update(false)
+            .batches(12)
+            .shape(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 16 })
+            .eval(dglke::api::EvalSpec {
+                protocol: dglke::api::EvalProtocolSpec::FullFiltered,
+                max_triplets: 30,
+                n_threads: 2,
+            })
+            .kernels(kernels)
+            .seed(3)
+            .build()
+            .unwrap();
+        let report = session.train().unwrap();
+        let metrics = report.metrics.clone().unwrap();
+        (report.loss_curve.clone(), metrics)
+    };
+    let (curve_s, m_s) = run(KernelBackend::Scalar);
+    let (curve_f, m_f) = run(KernelBackend::Fused);
+    assert_eq!(curve_s.len(), curve_f.len());
+    for ((ba, la), (bb, lb)) in curve_s.iter().zip(&curve_f) {
+        assert_eq!(ba, bb);
+        assert_eq!(la.to_bits(), lb.to_bits(), "loss curve diverged at batch {ba}");
+    }
+    assert_eq!(m_s.n, m_f.n);
+    for (name, a, b) in [
+        ("mrr", m_s.mrr, m_f.mrr),
+        ("mr", m_s.mr, m_f.mr),
+        ("hit1", m_s.hit1, m_f.hit1),
+        ("hit3", m_s.hit3, m_f.hit3),
+        ("hit10", m_s.hit10, m_f.hit10),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "metric {name} diverged");
+    }
+}

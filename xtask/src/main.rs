@@ -514,6 +514,34 @@ mod tests {
     }
 
     #[test]
+    fn unsafe_in_kernels_is_budgeted_like_everywhere_else() {
+        // The fused kernels (rust/src/models/kernels.rs) are written in
+        // autovectorization-friendly safe Rust on purpose — the file has
+        // no unsafe-budget.toml entry, so this pins that sneaking a
+        // `unsafe` intrinsic block into them fails the lint until the
+        // budget is consciously amended (docs/KERNELS.md).
+        let budget_path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("unsafe-budget.toml");
+        let budget = parse_counts_toml(
+            &std::fs::read_to_string(budget_path).expect("unsafe-budget.toml readable"),
+            "unsafe-budget.toml",
+        )
+        .expect("unsafe-budget.toml parses");
+        assert!(
+            !budget.contains_key("rust/src/models/kernels.rs"),
+            "kernels.rs grew an unsafe budget entry — update this test \
+             and docs/KERNELS.md if that was deliberate"
+        );
+        let mut out = Vec::new();
+        let f = fixture(
+            "rust/src/models/kernels.rs",
+            "// SAFETY: lanes are in bounds\nlet v = unsafe { load(ptr) };\n",
+        );
+        check_unsafe(&f, &budget, &mut out);
+        assert!(out.iter().any(|v| v.contains("not in unsafe-budget.toml")), "{out:?}");
+    }
+
+    #[test]
     fn unsafe_token_matching_is_word_bounded() {
         assert_eq!(count_unsafe("unsafe fn f() { unsafe { g() } }"), 2);
         assert_eq!(count_unsafe("let unsafety = 1; not_unsafe()"), 0);
