@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check lint loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels clean
+.PHONY: build test fmt fmt-check lint loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels bench-serve clean
 
 build:
 	$(CARGO) build --release
@@ -19,8 +19,9 @@ fmt-check:
 	$(CARGO) fmt --check
 
 # Repo-specific static analysis (narrowing casts in byte math, the
-# unsafe budget, unwrap bans in kvstore/prefetch, the Relaxed-ordering
-# allowlist). Config: unsafe-budget.toml + relaxed-allowlist.toml.
+# unsafe budget, unwrap bans in kvstore/serve/prefetch, the
+# Relaxed-ordering allowlist). Config: unsafe-budget.toml +
+# relaxed-allowlist.toml.
 lint:
 	$(CARGO) run -p xtask -- lint
 
@@ -83,6 +84,12 @@ bench-dist:
 # 400; parity itself is asserted by kernel_parity_tests).
 bench-kernels:
 	QUICK=1 $(CARGO) bench --bench bench_kernels
+
+# Serving latency/throughput: snapshot cold-open + first batch vs warm
+# steady state, per kernel backend; writes BENCH_serve.json (p50/p95
+# batch latency, QPS — see docs/SERVING.md).
+bench-serve:
+	QUICK=1 $(CARGO) bench --bench bench_serve
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

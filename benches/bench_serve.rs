@@ -1,0 +1,197 @@
+//! Serving latency/throughput benchmark: snapshot cold-open plus first
+//! batch vs warm steady state through the worker pool, per kernel
+//! backend. Writes `BENCH_serve.json` (`make bench-serve`) so request
+//! latency (p50/p95 per batch) and QPS are tracked run-over-run.
+//!
+//! Expectation: cold open is dominated by manifest validation + mmap
+//! setup and stays in single-digit milliseconds regardless of table size
+//! (zero-copy — no table read happens until the first query); warm fused
+//! serving beats warm scalar serving because candidate rows stream
+//! store→tile once instead of being staged through a gather buffer.
+//!
+//! QUICK=1 shrinks the table and pass count for smoke runs.
+
+use dglke::kg::vocab::Vocab;
+use dglke::models::{KernelBackend, ModelKind};
+use dglke::serve::{
+    vocab_hash, CheckpointManifest, Query, ServeConfig, ServeHandle, ServeScratch, Snapshot,
+    SnapshotOptions, TableInfo, FORMAT_VERSION,
+};
+use dglke::util::bytes::f32_as_bytes;
+use dglke::util::json::Json;
+use dglke::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Write one table file in checkpoint framing: [u64 n_values][LE f32...].
+fn write_table(path: &Path, rows: usize, dim: usize, rng: &mut Rng) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&((rows * dim) as u64).to_le_bytes())?;
+    let mut row = vec![0f32; dim];
+    for _ in 0..rows {
+        for v in row.iter_mut() {
+            *v = rng.gen_f32() - 0.5;
+        }
+        w.write_all(f32_as_bytes(&row))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Fabricate a format-2 checkpoint directly (no training run): the bench
+/// prices serving, not SGD.
+fn make_checkpoint(dir: &Path, n: usize, m: usize, dim: usize) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut rng = Rng::seed_from_u64(17);
+    write_table(&dir.join("entities.f32"), n, dim, &mut rng)?;
+    write_table(&dir.join("relations.f32"), m, dim, &mut rng)?;
+    let manifest = CheckpointManifest {
+        format_version: FORMAT_VERSION,
+        model: ModelKind::TransEL2,
+        dataset: "bench-synth".to_string(),
+        dim,
+        rel_dim: dim,
+        n_entities: n,
+        n_relations: m,
+        seed: 17,
+        entity_vocab_hash: vocab_hash(&Vocab::synthetic("e", n)),
+        relation_vocab_hash: vocab_hash(&Vocab::synthetic("r", m)),
+        entities: TableInfo::single("entities.f32", n, dim),
+        relations: TableInfo::single("relations.f32", m, dim),
+    };
+    manifest.save(dir)
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    let n_entities: usize = if quick { 20_000 } else { 100_000 };
+    let n_relations: usize = 200;
+    let dim: usize = if quick { 32 } else { 64 };
+    let batches: usize = if quick { 32 } else { 128 };
+    let batch_queries: usize = if quick { 64 } else { 256 };
+    let threads: usize = 4;
+    let topk: usize = 10;
+
+    let dir =
+        std::env::temp_dir().join(format!("dglke-bench-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    make_checkpoint(&dir, n_entities, n_relations, dim)?;
+
+    let mut rng = Rng::seed_from_u64(23);
+    let traffic: Vec<Vec<Query>> = (0..batches)
+        .map(|_| {
+            (0..batch_queries)
+                .map(|i| {
+                    let e = rng.gen_index(n_entities) as u64;
+                    let r = rng.gen_index(n_relations) as u64;
+                    if i % 2 == 0 {
+                        Query::tail(e, r)
+                    } else {
+                        Query::head(e, r)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    println!(
+        "serve bench: entities={n_entities} relations={n_relations} dim={dim} \
+         batches={batches}x{batch_queries} threads={threads} topk={topk}"
+    );
+
+    // cold: open (manifest validation + mmap, no table read) then the
+    // first batch, which faults the touched pages in
+    let t = Instant::now();
+    let cold = Snapshot::open(&dir)?;
+    let open_ms = t.elapsed().as_secs_f64() * 1000.0;
+    let mut scratch = ServeScratch::default();
+    let t = Instant::now();
+    let first = cold.query_batch(&traffic[0], topk, &mut scratch)?;
+    let first_batch_ms = t.elapsed().as_secs_f64() * 1000.0;
+    anyhow::ensure!(first.len() == batch_queries, "cold batch answered");
+    drop(cold);
+    println!("  cold    open {open_ms:8.3} ms   first batch {first_batch_ms:8.3} ms");
+
+    let mut kernel_reports = Vec::new();
+    for kernels in [KernelBackend::Scalar, KernelBackend::Fused] {
+        let snap = Snapshot::open_with(&dir, &SnapshotOptions { cache_mb: None, kernels })?;
+        let handle = ServeHandle::start(
+            snap,
+            &ServeConfig { threads, batch: batch_queries, topk },
+        );
+        // one untimed pass warms the page cache and worker scratch
+        for b in traffic.iter().take(4.min(batches)) {
+            handle.submit(b, topk)?;
+        }
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(batches);
+        let t_all = Instant::now();
+        for b in &traffic {
+            let t = Instant::now();
+            let got = handle.submit(b, topk)?;
+            lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+            debug_assert_eq!(got.len(), batch_queries);
+        }
+        let wall_s = t_all.elapsed().as_secs_f64();
+        let qps = (batches * batch_queries) as f64 / wall_s.max(1e-9);
+        lat_ms.sort_by(|a, b| a.total_cmp(b));
+        let p50 = percentile(&lat_ms, 0.50);
+        let p95 = percentile(&lat_ms, 0.95);
+        let name = match kernels {
+            KernelBackend::Scalar => "scalar",
+            _ => "fused",
+        };
+        println!(
+            "  {name:6}  batch p50 {p50:8.3} ms   p95 {p95:8.3} ms   {qps:10.0} qps"
+        );
+        kernel_reports.push((
+            name,
+            obj(vec![
+                ("batch_p50_ms", Json::Num(p50)),
+                ("batch_p95_ms", Json::Num(p95)),
+                ("qps", Json::Num(qps)),
+            ]),
+        ));
+        handle.shutdown();
+    }
+
+    let report = obj(vec![
+        ("entities", Json::Num(n_entities as f64)),
+        ("relations", Json::Num(n_relations as f64)),
+        ("dim", Json::Num(dim as f64)),
+        ("batches", Json::Num(batches as f64)),
+        ("batch_queries", Json::Num(batch_queries as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("topk", Json::Num(topk as f64)),
+        (
+            "cold",
+            obj(vec![
+                ("open_ms", Json::Num(open_ms)),
+                ("first_batch_ms", Json::Num(first_batch_ms)),
+            ]),
+        ),
+        ("warm", Json::Obj(kernel_reports.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+    ]);
+    std::fs::write("BENCH_serve.json", report.to_string())?;
+    println!("[wrote BENCH_serve.json]");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

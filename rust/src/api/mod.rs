@@ -26,5 +26,5 @@ pub use report::Report;
 pub use session::{load_default_manifest, resolve_shape, ResolvedShape, Session, SessionBuilder};
 pub use spec::{
     CommSpec, EvalProtocolSpec, EvalSpec, LossSpec, ParallelMode, PipelineSpec, RunSpec,
-    DEFAULT_NATIVE_SHAPE,
+    ServeSpec, DEFAULT_NATIVE_SHAPE,
 };

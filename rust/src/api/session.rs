@@ -11,6 +11,10 @@ use crate::eval::{evaluate, Metrics};
 use crate::kg::Dataset;
 use crate::models::step::StepShape;
 use crate::runtime::{artifacts, BackendKind, Manifest};
+use crate::serve::manifest::{
+    read_chunk_into, vocab_hash, CheckpointManifest, ChunkInfo, TableInfo, FORMAT_VERSION,
+    TABLE_HEADER_BYTES,
+};
 use crate::store::{EmbeddingStore, StoreBackendKind};
 use crate::train::worker::ModelState;
 use crate::train::{run_training, Hardware, TrainConfig};
@@ -313,12 +317,37 @@ impl Session {
         ))
     }
 
-    /// Export the embedding tables to `dir` as a checkpoint:
-    /// `checkpoint.json` (metadata) + `entities.f32` / `relations.f32`
-    /// (length-prefixed little-endian f32 rows). Rows are *streamed*
-    /// through a bounded buffer ([`EmbeddingStore::export_rows`]) — no
-    /// full-table clone, so checkpointing an mmap-backed table never
-    /// allocates table-sized memory.
+    /// The format-2 manifest describing this session's tables under the
+    /// given chunk layout (see `serve::manifest`): model, dims, counts,
+    /// and order-sensitive vocab hashes, so a [`crate::serve::Snapshot`]
+    /// can refuse a checkpoint from a different dataset build.
+    fn build_manifest(&self, entities: TableInfo, relations: TableInfo) -> CheckpointManifest {
+        CheckpointManifest {
+            format_version: FORMAT_VERSION,
+            model: self.spec.model,
+            dataset: self.spec.dataset.clone(),
+            dim: self.dim(),
+            rel_dim: self.state.rel_dim,
+            n_entities: self.dataset.n_entities(),
+            n_relations: self.dataset.n_relations(),
+            seed: self.spec.seed,
+            entity_vocab_hash: vocab_hash(&self.dataset.entities),
+            relation_vocab_hash: vocab_hash(&self.dataset.relations),
+            entities,
+            relations,
+        }
+    }
+
+    /// Export the embedding tables to `dir` as a versioned checkpoint:
+    /// `manifest.json` (format 2: model, dims, vocab hashes, chunk list —
+    /// what `serve::Snapshot` opens), `checkpoint.json` (legacy format-1
+    /// metadata, kept so pre-manifest readers still work), and
+    /// `entities.f32` / `relations.f32` (length-prefixed little-endian
+    /// f32 rows — byte-identical to the legacy layout). Rows are
+    /// *streamed* through a bounded buffer
+    /// ([`EmbeddingStore::export_rows`]) — no full-table clone, so
+    /// checkpointing an mmap-backed table never allocates table-sized
+    /// memory.
     pub fn export_embeddings(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
@@ -348,17 +377,155 @@ impl Session {
             table.export_rows(&mut w)?;
             w.flush()?;
         }
-        Ok(())
+        let manifest = self.build_manifest(
+            TableInfo::single("entities.f32", self.state.entities.rows(), self.dim()),
+            TableInfo::single("relations.f32", self.state.relations.rows(), self.state.rel_dim),
+        );
+        manifest.save(dir)
+    }
+
+    /// Like [`Session::export_embeddings`] but splitting each table into
+    /// chunk files of at most `chunk_rows` rows (`entities.00000.f32`,
+    /// `entities.00001.f32`, …). Chunked checkpoints are manifest-only —
+    /// no `checkpoint.json` is written, because legacy readers cannot
+    /// reassemble chunks. Useful when a single table file would exceed a
+    /// filesystem or transfer size limit.
+    pub fn export_embeddings_chunked(&self, dir: &Path, chunk_rows: usize) -> Result<()> {
+        anyhow::ensure!(chunk_rows >= 1, "chunk_rows must be >= 1");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let mut infos = Vec::new();
+        for (stem, table) in
+            [("entities", &self.state.entities), ("relations", &self.state.relations)]
+        {
+            let rows = table.rows();
+            let dim = table.dim();
+            let mut chunks = Vec::new();
+            let mut first = 0usize;
+            let mut index = 0usize;
+            let mut row_buf = vec![0f32; dim];
+            while first < rows || (rows == 0 && index == 0) {
+                let take = chunk_rows.min(rows - first.min(rows));
+                let file = format!("{stem}.{index:05}.f32");
+                let path = dir.join(&file);
+                let f = std::fs::File::create(&path)
+                    .with_context(|| format!("creating {}", path.display()))?;
+                let mut w = std::io::BufWriter::new(f);
+                use std::io::Write;
+                w.write_all(&((take * dim) as u64).to_le_bytes())?;
+                for i in first..first + take {
+                    table.read_row(i, &mut row_buf);
+                    w.write_all(crate::util::bytes::f32_as_bytes(&row_buf))?;
+                }
+                w.flush()?;
+                chunks.push(ChunkInfo { file, rows: take });
+                first += take;
+                index += 1;
+                if rows == 0 {
+                    break;
+                }
+            }
+            infos.push(TableInfo { rows, dim, chunks });
+        }
+        let relations = infos.pop().ok_or_else(|| anyhow!("missing relations table info"))?;
+        let entities = infos.pop().ok_or_else(|| anyhow!("missing entities table info"))?;
+        self.build_manifest(entities, relations).save(dir)
     }
 
     /// Load a checkpoint previously written by [`Session::export_embeddings`]
-    /// into this session's embedding tables. The checkpoint must match the
-    /// session's model, dims, and table sizes. Optimizer state is reset.
+    /// (or its chunked variant) into this session's embedding tables. The
+    /// checkpoint must match the session's model, dims, table sizes, and —
+    /// for format-2 checkpoints — vocabulary hashes. Optimizer state is
+    /// reset. All validation (format version, metadata consistency, file
+    /// sizes, chunk headers) happens *before* any table row is mutated, so
+    /// a rejected checkpoint leaves the session state untouched.
     pub fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        if dir.join("manifest.json").exists() {
+            self.load_checkpoint_v2(dir)
+        } else {
+            self.load_checkpoint_legacy(dir)
+        }
+    }
+
+    /// Format-2 path: `manifest.json` + chunk files.
+    fn load_checkpoint_v2(&mut self, dir: &Path) -> Result<()> {
+        let manifest = CheckpointManifest::load(dir)?;
+        manifest
+            .validate()
+            .with_context(|| format!("inconsistent manifest in {}", dir.display()))?;
+        anyhow::ensure!(
+            manifest.model == self.spec.model,
+            "checkpoint model {:?} does not match session model {:?}",
+            manifest.model.name(),
+            self.spec.model.name()
+        );
+        anyhow::ensure!(
+            manifest.dim == self.dim(),
+            "checkpoint dim {} does not match session dim {}",
+            manifest.dim,
+            self.dim()
+        );
+        anyhow::ensure!(
+            manifest.rel_dim == self.state.rel_dim,
+            "checkpoint rel_dim {} does not match session rel_dim {}",
+            manifest.rel_dim,
+            self.state.rel_dim
+        );
+        anyhow::ensure!(
+            manifest.n_entities == self.dataset.n_entities(),
+            "checkpoint has {} entities, dataset has {}",
+            manifest.n_entities,
+            self.dataset.n_entities()
+        );
+        anyhow::ensure!(
+            manifest.n_relations == self.dataset.n_relations(),
+            "checkpoint has {} relations, dataset has {}",
+            manifest.n_relations,
+            self.dataset.n_relations()
+        );
+        anyhow::ensure!(
+            manifest.entity_vocab_hash == vocab_hash(&self.dataset.entities),
+            "checkpoint entity vocabulary does not match this dataset build \
+             (hash {} vs {}) — ids would be silently remapped",
+            manifest.entity_vocab_hash,
+            vocab_hash(&self.dataset.entities)
+        );
+        anyhow::ensure!(
+            manifest.relation_vocab_hash == vocab_hash(&self.dataset.relations),
+            "checkpoint relation vocabulary does not match this dataset build"
+        );
+        // every chunk file's existence, exact size, and header — before
+        // the first set_rows
+        manifest.validate_files(dir)?;
+        for (table_info, table) in [
+            (&manifest.entities, &self.state.entities),
+            (&manifest.relations, &self.state.relations),
+        ] {
+            let mut first = 0usize;
+            for chunk in &table_info.chunks {
+                read_chunk_into(&dir.join(&chunk.file), first, chunk.rows, table_info.dim, table.as_ref())?;
+                first += chunk.rows;
+            }
+        }
+        Ok(())
+    }
+
+    /// Legacy format-1 path: `checkpoint.json` + single-file tables. The
+    /// `version` field is required and must be exactly 1 — earlier builds
+    /// trusted whatever `checkpoint.json` said and would happily stream a
+    /// future-format or truncated file into the tables.
+    fn load_checkpoint_legacy(&mut self, dir: &Path) -> Result<()> {
         let meta_path = dir.join("checkpoint.json");
         let text = std::fs::read_to_string(&meta_path)
             .with_context(|| format!("reading {}", meta_path.display()))?;
         let meta = Json::parse(&text).map_err(|e| anyhow!("bad checkpoint.json: {e}"))?;
+        let version = meta.get("version").and_then(Json::as_f64);
+        anyhow::ensure!(
+            version == Some(1.0),
+            "checkpoint.json declares format version {} (this build reads legacy version 1, \
+             or format {FORMAT_VERSION} via manifest.json)",
+            version.map(|v| v.to_string()).unwrap_or_else(|| "<missing>".to_string())
+        );
         let meta_usize = |k: &str| -> Result<usize> {
             meta.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("checkpoint missing {k}"))
         };
@@ -383,6 +550,23 @@ impl Session {
             meta_usize("n_relations")? == self.dataset.n_relations(),
             "checkpoint relation count mismatch"
         );
+        // validate both files' exact on-disk size before mutating either
+        // table — a truncated entities.f32 must not leave relations
+        // half-loaded (or vice versa)
+        for (file, table) in
+            [("entities.f32", &self.state.entities), ("relations.f32", &self.state.relations)]
+        {
+            let path = dir.join(file);
+            let need = TABLE_HEADER_BYTES + table.n_params() as u64 * 4;
+            let len = std::fs::metadata(&path)
+                .with_context(|| format!("reading {}", path.display()))?
+                .len();
+            anyhow::ensure!(
+                len == need,
+                "{}: file is {len} bytes, table needs {need} (truncated checkpoint?)",
+                path.display()
+            );
+        }
         for (file, table) in
             [("entities.f32", &self.state.entities), ("relations.f32", &self.state.relations)]
         {
@@ -614,6 +798,24 @@ impl SessionBuilder {
     /// Embedding-storage backend (dense / sharded / mmap).
     pub fn storage(mut self, storage: crate::store::StoreConfig) -> Self {
         self.spec.storage = storage;
+        self
+    }
+
+    /// Worker threads for the `dglke serve` request loop.
+    pub fn serve_threads(mut self, threads: usize) -> Self {
+        self.spec.serve.threads = threads;
+        self
+    }
+
+    /// Max queries handed to one serve worker as one job.
+    pub fn serve_batch(mut self, batch: usize) -> Self {
+        self.spec.serve.batch = batch;
+        self
+    }
+
+    /// Default top-k depth for served queries.
+    pub fn serve_topk(mut self, topk: usize) -> Self {
+        self.spec.serve.topk = topk;
         self
     }
 

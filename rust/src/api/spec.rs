@@ -50,6 +50,10 @@
 //!               "cache_mb": null},           // mmap hot-row cache size
 //!                                            // (default: budget_mb; must
 //!                                            // not exceed it)
+//!   "serve": {"threads": 2,                  // `dglke serve` request loop:
+//!             "batch": 64,                   //   worker threads, queries per
+//!             "topk": 10},                   //   dispatched job, default k
+//!                                            //   (see docs/SERVING.md)
 //!   "seed": 0
 //! }
 //! ```
@@ -129,6 +133,26 @@ pub struct CommSpec {
 impl Default for CommSpec {
     fn default() -> Self {
         CommSpec { pipelined: false, inflight: 8 }
+    }
+}
+
+/// Serving request-loop configuration for `dglke serve`: the shape of the
+/// [`crate::serve::ServeHandle`] worker pool answering top-k queries
+/// against a checkpoint snapshot. Ignored by training/eval runs; see
+/// `docs/SERVING.md`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// worker threads answering queries
+    pub threads: usize,
+    /// max queries handed to one worker as one job
+    pub batch: usize,
+    /// default top-k depth when the caller doesn't pass one
+    pub topk: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec { threads: 2, batch: 64, topk: 10 }
     }
 }
 
@@ -231,6 +255,8 @@ pub struct RunSpec {
     pub eval: Option<EvalSpec>,
     /// embedding-storage backend (dense / sharded / mmap) and its knobs
     pub storage: StoreConfig,
+    /// `dglke serve` request-loop shape; ignored by training/eval
+    pub serve: ServeSpec,
     /// limited to 2^53 so the JSON round-trip (f64 numbers) is exact;
     /// `validate()` rejects larger seeds
     pub seed: u64,
@@ -259,6 +285,7 @@ impl Default for RunSpec {
             shape: None,
             eval: None,
             storage: StoreConfig::default(),
+            serve: ServeSpec::default(),
             seed: 0,
         }
     }
@@ -425,6 +452,14 @@ impl RunSpec {
             ("shape", self.shape.as_ref().map(shape_to_json).unwrap_or(Json::Null)),
             ("eval", eval),
             ("storage", storage),
+            (
+                "serve",
+                obj(vec![
+                    ("threads", Json::Num(self.serve.threads as f64)),
+                    ("batch", Json::Num(self.serve.batch as f64)),
+                    ("topk", Json::Num(self.serve.topk as f64)),
+                ]),
+            ),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -537,6 +572,15 @@ impl RunSpec {
             },
         };
 
+        let serve = match j.get("serve") {
+            None | Some(Json::Null) => ServeSpec::default(),
+            Some(s) => ServeSpec {
+                threads: get_usize(s, "threads", ServeSpec::default().threads)?,
+                batch: get_usize(s, "batch", ServeSpec::default().batch)?,
+                topk: get_usize(s, "topk", ServeSpec::default().topk)?,
+            },
+        };
+
         let storage = match j.get("storage") {
             None | Some(Json::Null) => StoreConfig::default(),
             Some(s) => {
@@ -591,6 +635,7 @@ impl RunSpec {
             shape,
             eval,
             storage,
+            serve,
             seed: get_usize(j, "seed", d.seed as usize)? as u64,
         })
     }
@@ -646,6 +691,17 @@ impl RunSpec {
             self.comm.inflight
         );
         self.storage.validate()?;
+        anyhow::ensure!(
+            (1..=256).contains(&self.serve.threads),
+            "serve.threads must be in [1, 256], got {}",
+            self.serve.threads
+        );
+        anyhow::ensure!(
+            (1..=65536).contains(&self.serve.batch),
+            "serve.batch must be in [1, 65536], got {}",
+            self.serve.batch
+        );
+        anyhow::ensure!(self.serve.topk >= 1, "serve.topk must be >= 1");
         anyhow::ensure!(
             self.seed <= (1u64 << 53),
             "seed {} exceeds 2^53 and would not survive the JSON round-trip",
@@ -714,6 +770,7 @@ mod tests {
                 budget_mb: Some(512.5),
                 cache_mb: Some(128.25),
             },
+            serve: ServeSpec { threads: 4, batch: 32, topk: 100 },
             seed: 99,
         };
         let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
@@ -802,6 +859,39 @@ mod tests {
         spec.comm.inflight = 65;
         assert!(spec.validate().is_err(), "inflight past the cap");
         spec.comm.inflight = 1;
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn serve_spec_parses_and_validates() {
+        // absent → 2 threads, batch 64, topk 10
+        let spec = RunSpec::from_json_str("{}").unwrap();
+        assert_eq!(spec.serve, ServeSpec::default());
+        // partial object fills defaults
+        let spec = RunSpec::from_json_str(r#"{"serve": {"threads": 8}}"#).unwrap();
+        assert_eq!(spec.serve, ServeSpec { threads: 8, batch: 64, topk: 10 });
+        // explicit values round-trip
+        let spec =
+            RunSpec::from_json_str(r#"{"serve": {"threads": 3, "batch": 7, "topk": 1}}"#).unwrap();
+        assert_eq!(spec.serve, ServeSpec { threads: 3, batch: 7, topk: 1 });
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        // wrong types rejected
+        assert!(RunSpec::from_json_str(r#"{"serve": {"threads": "many"}}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"serve": {"topk": true}}"#).is_err());
+        // bounds enforced by validate
+        let mut spec = RunSpec::default();
+        spec.serve.threads = 0;
+        assert!(spec.validate().is_err(), "a threadless pool cannot serve");
+        spec.serve.threads = 257;
+        assert!(spec.validate().is_err(), "threads past the cap");
+        spec.serve.threads = 1;
+        spec.serve.batch = 0;
+        assert!(spec.validate().is_err(), "empty jobs make no progress");
+        spec.serve.batch = 1;
+        spec.serve.topk = 0;
+        assert!(spec.validate().is_err(), "top-0 answers nothing");
+        spec.serve.topk = 1;
         assert!(spec.validate().is_ok());
     }
 

@@ -54,6 +54,22 @@ impl RankAccumulator {
     }
 }
 
+/// Total order over candidate scores: descending score, ascending index on
+/// ties. This is the reference ranking the offline evaluator implies and the
+/// serving path must reproduce — `util::topk::top_k_indices(scores, k)` is
+/// defined to equal `full_ranking(scores)[..k]`, and the serve parity suite
+/// (`rust/tests/serve_tests.rs`) holds both to it bit-for-bit.
+pub fn full_ranking(scores: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
 /// The five numbers every accuracy table in the paper reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Metrics {
@@ -103,6 +119,20 @@ mod tests {
         a.merge(b);
         assert_eq!(a.len(), 2);
         assert_eq!(a.metrics().hit3, 1.0);
+    }
+
+    #[test]
+    fn full_ranking_orders_desc_with_index_tiebreak() {
+        let scores = [0.5f32, 2.0, 0.5, -1.0, 2.0];
+        assert_eq!(full_ranking(&scores), vec![1, 4, 0, 2, 3]);
+        assert_eq!(full_ranking(&[]), Vec::<usize>::new());
+        // agrees with util::topk on every prefix
+        for k in 0..=scores.len() {
+            assert_eq!(
+                crate::util::topk::top_k_indices(&scores, k),
+                full_ranking(&scores)[..k].to_vec()
+            );
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 pub mod metrics;
 
-pub use metrics::{Metrics, RankAccumulator};
+pub use metrics::{full_ranking, Metrics, RankAccumulator};
 
 use crate::kg::{Dataset, TripletSet, TripletStore};
 use crate::models::kernels::zeroed;

@@ -62,6 +62,7 @@ pub mod partition;
 pub mod repro;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod store;
 pub mod train;
 pub mod models;

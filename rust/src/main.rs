@@ -7,6 +7,8 @@
 //!   partition   inspect METIS vs random partition quality
 //!   gen-data    materialize a synthetic dataset as TSV
 //!   eval-only   evaluate random-init embeddings (sanity floor)
+//!   serve       answer top-k link-prediction queries from a checkpoint
+//!               (versioned snapshot + threaded request loop)
 //!   repro       regenerate the paper's accuracy tables (table4..table9)
 //!
 //! `train` and `dist-train` are thin flag→`RunSpec` translators over the
@@ -15,7 +17,7 @@
 //! as JSON without running, and `--report out.json` writes the run's
 //! `Report` JSON. Every flag has a default; unknown flags error out.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use dglke::api::{EvalProtocolSpec, EvalSpec, ParallelMode, RunSpec, Session};
 use dglke::cli::Args;
 use dglke::dist::PartitionStrategy;
@@ -24,7 +26,7 @@ use dglke::models::ModelKind;
 use dglke::partition::{GraphPartition, MetisConfig};
 use dglke::runtime::BackendKind;
 
-const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|repro> [--flags]
+const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|serve|repro> [--flags]
   common: --dataset fb15k-syn|wn18-syn|freebase-syn[:scale]|tiny|<tsv-dir>
           --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
           --backend native|xla (default native) --tag default|tiny --seed N
@@ -38,6 +40,7 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --prefetch (overlap next-batch sample+gather with compute)
           --prefetch-depth N (buffers in flight, >= 2)
           --sync-interval N --log-every N --eval --sampled-eval
+          --export DIR (write a versioned checkpoint after training)
   dist-train: --machines N --trainers N --servers N --random-partition
           --no-local-negatives --batches N --eval
           --pipelined-comm (async KVStore client: concurrent pull fan-out,
@@ -47,6 +50,11 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
   partition: --machines N
   gen-data: --out DIR
   eval-only: --dim N
+  serve:  --checkpoint DIR (required; written by train --export DIR)
+          --threads N --batch N --topk K (overlay spec.serve)
+          --kernels scalar|fused --cache-mb F (snapshot hot-row cache)
+          --queries N (seeded demo queries to answer, default 256)
+          --report out.json (latency/QPS summary)
   repro:  --exp table4..table9|all --scale F --out DIR";
 
 fn main() -> Result<()> {
@@ -59,6 +67,7 @@ fn main() -> Result<()> {
         "partition" => cmd_partition(args),
         "gen-data" => cmd_gen_data(args),
         "eval-only" => cmd_eval_only(args),
+        "serve" => cmd_serve(args),
         "repro" => cmd_repro(args),
         _ => {
             if args.flag("help") || cmd.is_empty() {
@@ -205,6 +214,7 @@ fn cmd_run(mut args: Args, dist: bool) -> Result<()> {
     let spec = spec_from_flags(&mut args, dist)?;
     let dump = args.flag("dump-config");
     let report_path = args.get("report");
+    let export_dir = args.get("export");
     args.finish()?;
 
     if dump {
@@ -233,6 +243,10 @@ fn cmd_run(mut args: Args, dist: bool) -> Result<()> {
         std::fs::write(&path, report.to_json_string())
             .with_context(|| format!("writing report {path}"))?;
         println!("[wrote {path}]");
+    }
+    if let Some(dir) = export_dir {
+        session.export_embeddings(std::path::Path::new(&dir))?;
+        println!("[exported checkpoint to {dir} — serve it with: dglke serve --checkpoint {dir}]");
     }
     Ok(())
 }
@@ -302,6 +316,126 @@ fn cmd_eval_only(mut args: Args) -> Result<()> {
     );
     let m = session.evaluate()?;
     println!("eval ({} ranks, both sides): {}", m.n, m.row());
+    Ok(())
+}
+
+/// `serve`: open a checkpoint as a read-only snapshot, spin up the
+/// threaded request loop, and answer a seeded batch of demo queries,
+/// reporting latency and throughput. The serving building blocks
+/// (`serve::Snapshot`, `serve::ServeHandle`) are library API; this
+/// command is their operational smoke test.
+fn cmd_serve(mut args: Args) -> Result<()> {
+    use dglke::serve::{Query, ServeConfig, ServeHandle, Snapshot, SnapshotOptions};
+
+    let ckpt = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("serve requires --checkpoint DIR\n{USAGE}"))?;
+    let mut spec = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading spec file {path}"))?;
+            RunSpec::from_json_str(&text).with_context(|| format!("parsing spec file {path}"))?
+        }
+        None => RunSpec::default(),
+    };
+    spec.serve.threads = args.parse_or("threads", spec.serve.threads)?;
+    spec.serve.batch = args.parse_or("batch", spec.serve.batch)?;
+    spec.serve.topk = args.parse_or("topk", spec.serve.topk)?;
+    if let Some(v) = args.get("kernels") {
+        spec.kernels = dglke::models::KernelBackend::parse(&v)
+            .with_context(|| format!("unknown kernels backend {v}"))?;
+    }
+    let cache_mb = match args.get("cache-mb") {
+        Some(v) => Some(v.parse().with_context(|| format!("bad --cache-mb {v}"))?),
+        None => spec.storage.cache_mb,
+    };
+    let n_queries = args.parse_or("queries", 256usize)?;
+    let report_path = args.get("report");
+    args.finish()?;
+    spec.validate()?;
+
+    let opts = SnapshotOptions { cache_mb, kernels: spec.kernels };
+    let t_open = std::time::Instant::now();
+    let snapshot = Snapshot::open_with(std::path::Path::new(&ckpt), &opts)?;
+    let open_ms = t_open.elapsed().as_secs_f64() * 1e3;
+    let (n_e, n_r) = (snapshot.n_entities() as u64, snapshot.n_relations() as u64);
+    println!(
+        "serving {} checkpoint {} ({} entities x dim {}, {} relations; opened in {:.1} ms)",
+        snapshot.manifest().model.name(),
+        ckpt,
+        n_e,
+        snapshot.dim(),
+        n_r,
+        open_ms
+    );
+    let cfg = ServeConfig {
+        threads: spec.serve.threads,
+        batch: spec.serve.batch,
+        topk: spec.serve.topk,
+    };
+    let handle = ServeHandle::start(snapshot, &cfg);
+
+    // seeded demo traffic: splitmix-style id stream, alternating sides
+    let mut state = spec.seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut next = move || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        state >> 11
+    };
+    let queries: Vec<Query> = (0..n_queries)
+        .map(|i| {
+            let (e, r) = (next() % n_e.max(1), next() % n_r.max(1));
+            if i % 2 == 0 {
+                Query::tail(e, r)
+            } else {
+                Query::head(e, r)
+            }
+        })
+        .collect();
+
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for chunk in queries.chunks(cfg.batch.max(1)) {
+        let t = std::time::Instant::now();
+        let answers = handle.submit(chunk, cfg.topk)?;
+        anyhow::ensure!(answers.len() == chunk.len(), "short reply from serve pool");
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pct = |p: f64| -> f64 {
+        if lat_ms.is_empty() {
+            return 0.0;
+        }
+        let idx = ((lat_ms.len() as f64 - 1.0) * p).round() as usize;
+        lat_ms[idx.min(lat_ms.len() - 1)]
+    };
+    let qps = if total_s > 0.0 { n_queries as f64 / total_s } else { 0.0 };
+    println!(
+        "answered {} queries (top-{}) on {} threads in {:.3}s: {:.0} QPS, \
+         batch latency p50 {:.2} ms / p95 {:.2} ms",
+        handle.served(),
+        cfg.topk,
+        cfg.threads,
+        total_s,
+        qps,
+        pct(0.50),
+        pct(0.95)
+    );
+    if let Some(path) = report_path {
+        let mut m = std::collections::BTreeMap::new();
+        let num = |v: f64| dglke::util::json::Json::Num(v);
+        m.insert("queries".to_string(), num(n_queries as f64));
+        m.insert("topk".to_string(), num(cfg.topk as f64));
+        m.insert("threads".to_string(), num(cfg.threads as f64));
+        m.insert("open_ms".to_string(), num(open_ms));
+        m.insert("qps".to_string(), num(qps));
+        m.insert("batch_p50_ms".to_string(), num(pct(0.50)));
+        m.insert("batch_p95_ms".to_string(), num(pct(0.95)));
+        std::fs::write(&path, dglke::util::json::Json::Obj(m).to_string())
+            .with_context(|| format!("writing report {path}"))?;
+        println!("[wrote {path}]");
+    }
+    handle.shutdown();
     Ok(())
 }
 

@@ -1,0 +1,513 @@
+//! Versioned checkpoint manifests (`manifest.json`).
+//!
+//! A format-2 checkpoint directory contains:
+//!
+//! * `manifest.json` — this manifest: format version, model kind, dims,
+//!   table counts, vocab hashes, and the chunked table file list;
+//! * one or more table chunk files (`entities.f32`, `relations.f32`, or
+//!   `entities.00000.f32` … when exported chunked), each framed as
+//!   `[u64 LE value-count][LE f32 rows]` — the same framing format-1
+//!   checkpoints used, so a single-chunk format-2 checkpoint's table
+//!   files are byte-identical to the legacy layout;
+//! * `checkpoint.json` — the legacy format-1 metadata, still written by
+//!   single-file exports so pre-manifest readers keep working.
+//!
+//! Everything here validates *before* anyone touches table bytes: a
+//! loader first checks the format version, then the manifest's internal
+//! consistency ([`CheckpointManifest::validate`]), then every chunk
+//! file's existence, size, and header
+//! ([`CheckpointManifest::validate_files`]) — so a truncated or
+//! mismatched checkpoint is rejected with context and without partially
+//! mutating the destination tables.
+
+use crate::kg::Vocab;
+use crate::models::ModelKind;
+use crate::store::{chunk_rows_for, EmbeddingStore};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Current checkpoint format version. Format 1 is the legacy
+/// `checkpoint.json`-only layout (no manifest, no vocab hashes); format 2
+/// adds `manifest.json` with chunked tables. Loaders reject anything
+/// newer (can't know the layout) and manifests claiming anything older
+/// (format 1 has no manifest by definition, so an old version number in
+/// a manifest means the file is corrupt or hand-edited).
+pub const FORMAT_VERSION: u64 = 2;
+
+/// Every table chunk file starts with a `u64` little-endian value count.
+pub const TABLE_HEADER_BYTES: u64 = 8;
+
+/// One table chunk file: `rows` consecutive rows in `file`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkInfo {
+    /// file name relative to the checkpoint directory
+    pub file: String,
+    pub rows: usize,
+}
+
+/// One embedding table: total shape plus its ordered chunk list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableInfo {
+    pub rows: usize,
+    pub dim: usize,
+    pub chunks: Vec<ChunkInfo>,
+}
+
+impl TableInfo {
+    /// A single-file table (the layout `export_embeddings` writes).
+    pub fn single(file: &str, rows: usize, dim: usize) -> TableInfo {
+        TableInfo { rows, dim, chunks: vec![ChunkInfo { file: file.to_string(), rows }] }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("rows".to_string(), Json::Num(self.rows as f64));
+        m.insert("dim".to_string(), Json::Num(self.dim as f64));
+        m.insert(
+            "chunks".to_string(),
+            Json::Arr(
+                self.chunks
+                    .iter()
+                    .map(|c| {
+                        let mut cm = BTreeMap::new();
+                        cm.insert("file".to_string(), Json::Str(c.file.clone()));
+                        cm.insert("rows".to_string(), Json::Num(c.rows as f64));
+                        Json::Obj(cm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    fn from_json(label: &str, j: &Json) -> Result<TableInfo> {
+        let rows = req_usize(j, "rows").with_context(|| format!("manifest table {label}"))?;
+        let dim = req_usize(j, "dim").with_context(|| format!("manifest table {label}"))?;
+        let chunks_json = j
+            .get("chunks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest table {label} missing chunks array"))?;
+        let mut chunks = Vec::with_capacity(chunks_json.len());
+        for (i, c) in chunks_json.iter().enumerate() {
+            let file = c
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest table {label} chunk {i} missing file"))?
+                .to_string();
+            let rows =
+                req_usize(c, "rows").with_context(|| format!("manifest table {label} chunk {i}"))?;
+            chunks.push(ChunkInfo { file, rows });
+        }
+        Ok(TableInfo { rows, dim, chunks })
+    }
+}
+
+/// The `manifest.json` of a format-2 checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointManifest {
+    pub format_version: u64,
+    pub model: ModelKind,
+    pub dataset: String,
+    pub dim: usize,
+    pub rel_dim: usize,
+    pub n_entities: usize,
+    pub n_relations: usize,
+    pub seed: u64,
+    /// [`vocab_hash`] of the entity vocabulary (names in id order)
+    pub entity_vocab_hash: String,
+    /// [`vocab_hash`] of the relation vocabulary
+    pub relation_vocab_hash: String,
+    pub entities: TableInfo,
+    pub relations: TableInfo,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing or non-numeric {key:?}"))
+}
+
+impl CheckpointManifest {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("format_version".to_string(), Json::Num(self.format_version as f64));
+        m.insert("model".to_string(), Json::Str(self.model.name().to_string()));
+        m.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        m.insert("dim".to_string(), Json::Num(self.dim as f64));
+        m.insert("rel_dim".to_string(), Json::Num(self.rel_dim as f64));
+        m.insert("n_entities".to_string(), Json::Num(self.n_entities as f64));
+        m.insert("n_relations".to_string(), Json::Num(self.n_relations as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("entity_vocab_hash".to_string(), Json::Str(self.entity_vocab_hash.clone()));
+        m.insert("relation_vocab_hash".to_string(), Json::Str(self.relation_vocab_hash.clone()));
+        m.insert("entities".to_string(), self.entities.to_json());
+        m.insert("relations".to_string(), self.relations.to_json());
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<CheckpointManifest> {
+        let format_version = j
+            .get("format_version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest missing format_version"))?
+            as u64;
+        if format_version != FORMAT_VERSION {
+            bail!(
+                "unsupported checkpoint format version {format_version} (this build reads \
+                 version {FORMAT_VERSION}; re-export the checkpoint with a matching build)"
+            );
+        }
+        let model_name = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing model"))?;
+        let model = ModelKind::parse(model_name)
+            .ok_or_else(|| anyhow!("manifest names unknown model {model_name:?}"))?;
+        let dataset =
+            j.get("dataset").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let req_str = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        Ok(CheckpointManifest {
+            format_version,
+            model,
+            dataset,
+            dim: req_usize(j, "dim")?,
+            rel_dim: req_usize(j, "rel_dim")?,
+            n_entities: req_usize(j, "n_entities")?,
+            n_relations: req_usize(j, "n_relations")?,
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            entity_vocab_hash: req_str("entity_vocab_hash")?,
+            relation_vocab_hash: req_str("relation_vocab_hash")?,
+            entities: TableInfo::from_json("entities", j.get("entities").unwrap_or(&Json::Null))?,
+            relations: TableInfo::from_json(
+                "relations",
+                j.get("relations").unwrap_or(&Json::Null),
+            )?,
+        })
+    }
+
+    /// Read and parse `dir/manifest.json`, including the format-version
+    /// gate (a stale or future version is rejected with context).
+    pub fn load(dir: &Path) -> Result<CheckpointManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("bad manifest.json in {}: {e}", dir.display()))?;
+        Self::from_json(&json).with_context(|| format!("validating {}", path.display()))
+    }
+
+    /// Write `dir/manifest.json`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Internal consistency: dims agree with the model, table shapes
+    /// agree with the counts, chunk row sums cover each table exactly.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.model.validate_dim(self.dim),
+            "manifest dim {} is invalid for model {}",
+            self.dim,
+            self.model.name()
+        );
+        anyhow::ensure!(
+            self.rel_dim == self.model.rel_dim(self.dim),
+            "manifest rel_dim {} does not match model {} at dim {} (expected {})",
+            self.rel_dim,
+            self.model.name(),
+            self.dim,
+            self.model.rel_dim(self.dim)
+        );
+        for (label, table, rows, dim) in [
+            ("entities", &self.entities, self.n_entities, self.dim),
+            ("relations", &self.relations, self.n_relations, self.rel_dim),
+        ] {
+            anyhow::ensure!(
+                table.rows == rows,
+                "manifest {label} table has {} rows but n_{label} is {rows}",
+                table.rows
+            );
+            anyhow::ensure!(
+                table.dim == dim,
+                "manifest {label} table dim {} does not match declared dim {dim}",
+                table.dim
+            );
+            anyhow::ensure!(!table.chunks.is_empty(), "manifest {label} table has no chunks");
+            let sum: usize = table.chunks.iter().map(|c| c.rows).sum();
+            anyhow::ensure!(
+                sum == table.rows,
+                "manifest {label} chunks sum to {sum} rows, table declares {}",
+                table.rows
+            );
+        }
+        Ok(())
+    }
+
+    /// Check every chunk file on disk — existence, exact size, and the
+    /// `u64` value-count header — *before* any loader mutates a table.
+    pub fn validate_files(&self, dir: &Path) -> Result<()> {
+        for (label, table) in [("entities", &self.entities), ("relations", &self.relations)] {
+            for chunk in &table.chunks {
+                let path = dir.join(&chunk.file);
+                let values = chunk.rows as u64 * table.dim as u64;
+                let need = TABLE_HEADER_BYTES + values * 4;
+                let len = std::fs::metadata(&path)
+                    .with_context(|| {
+                        format!("{label} chunk {} missing from {}", chunk.file, dir.display())
+                    })?
+                    .len();
+                anyhow::ensure!(
+                    len == need,
+                    "{}: {label} chunk is {len} bytes, manifest expects {need} \
+                     ({} rows x {} values; truncated or tampered checkpoint?)",
+                    path.display(),
+                    chunk.rows,
+                    table.dim
+                );
+                let mut header = [0u8; 8];
+                {
+                    use std::io::Read;
+                    let mut f = std::fs::File::open(&path)
+                        .with_context(|| format!("opening {}", path.display()))?;
+                    f.read_exact(&mut header)
+                        .with_context(|| format!("reading header of {}", path.display()))?;
+                }
+                let declared = u64::from_le_bytes(header);
+                anyhow::ensure!(
+                    declared == values,
+                    "{}: chunk header declares {declared} values, manifest expects {values}",
+                    path.display()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Order-sensitive FNV-1a 64 over a vocabulary's names in id order, with
+/// a separator byte between names so `["ab","c"]` and `["a","bc"]` hash
+/// differently. Rendered as a hex string because JSON numbers (f64)
+/// cannot carry 64 bits.
+pub fn vocab_hash(v: &Vocab) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for id in 0..v.len() {
+        if let Some(name) = v.name(id as u32) {
+            for &b in name.as_bytes() {
+                mix(b);
+            }
+        }
+        mix(0xFF);
+    }
+    format!("fnv1a:{h:016x}")
+}
+
+/// Stream one chunk file's rows into `table` starting at `first_row`,
+/// through a bounded ~256 KiB buffer. The header and size must already
+/// have been checked ([`CheckpointManifest::validate_files`]); this
+/// re-verifies the header as a cheap belt-and-suspenders.
+pub fn read_chunk_into(
+    path: &Path,
+    first_row: usize,
+    rows: usize,
+    dim: usize,
+    table: &dyn EmbeddingStore,
+) -> Result<()> {
+    let f =
+        std::fs::File::open(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut rd = std::io::BufReader::new(f);
+    use std::io::Read;
+    let mut len8 = [0u8; 8];
+    rd.read_exact(&mut len8).with_context(|| format!("decoding {}", path.display()))?;
+    let declared = u64::from_le_bytes(len8);
+    anyhow::ensure!(
+        declared == rows as u64 * dim as u64,
+        "{}: header declares {declared} values, expected {} rows x {dim}",
+        path.display(),
+        rows
+    );
+    if rows == 0 || dim == 0 {
+        return Ok(());
+    }
+    let chunk_rows = chunk_rows_for(dim, rows);
+    let mut buf = vec![0f32; chunk_rows * dim];
+    let mut row = 0;
+    while row < rows {
+        let take = chunk_rows.min(rows - row);
+        let n_values = take * dim;
+        let bytes = crate::util::bytes::f32_as_bytes_mut(&mut buf[..n_values]);
+        rd.read_exact(bytes).with_context(|| format!("decoding {}", path.display()))?;
+        table.set_rows(first_row + row, &buf[..n_values]);
+        row += take;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::DenseStore;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("dglke-manifest-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> CheckpointManifest {
+        CheckpointManifest {
+            format_version: FORMAT_VERSION,
+            model: ModelKind::TransEL2,
+            dataset: "tiny".to_string(),
+            dim: 16,
+            rel_dim: 16,
+            n_entities: 200,
+            n_relations: 8,
+            seed: 7,
+            entity_vocab_hash: "fnv1a:0000000000000001".to_string(),
+            relation_vocab_hash: "fnv1a:0000000000000002".to_string(),
+            entities: TableInfo::single("entities.f32", 200, 16),
+            relations: TableInfo::single("relations.f32", 8, 16),
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = sample();
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(CheckpointManifest::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn chunked_json_round_trip() {
+        let mut m = sample();
+        m.entities.chunks = vec![
+            ChunkInfo { file: "entities.00000.f32".to_string(), rows: 150 },
+            ChunkInfo { file: "entities.00001.f32".to_string(), rows: 50 },
+        ];
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let back = CheckpointManifest::from_json(&j).unwrap();
+        assert_eq!(back, m);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_stale_and_future_versions() {
+        for bad in [0.0, 1.0, 3.0, 99.0] {
+            let mut j = match sample().to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            j.insert("format_version".to_string(), Json::Num(bad));
+            let err = CheckpointManifest::from_json(&Json::Obj(j)).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("unsupported checkpoint format version"),
+                "{err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_catches_shape_lies() {
+        let mut m = sample();
+        m.n_entities = 201;
+        assert!(m.validate().is_err(), "row count mismatch");
+        let mut m = sample();
+        m.entities.chunks[0].rows = 199;
+        assert!(m.validate().is_err(), "chunk sum mismatch");
+        let mut m = sample();
+        m.rel_dim = 17;
+        assert!(m.validate().is_err(), "rel_dim mismatch");
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_files_checks_size_and_header() {
+        let dir = tmp_dir("files");
+        let m = CheckpointManifest {
+            n_entities: 3,
+            n_relations: 2,
+            dim: 4,
+            rel_dim: 4,
+            entities: TableInfo::single("entities.f32", 3, 4),
+            relations: TableInfo::single("relations.f32", 2, 4),
+            ..sample()
+        };
+        for (file, values) in [("entities.f32", 12u64), ("relations.f32", 8u64)] {
+            let mut bytes = values.to_le_bytes().to_vec();
+            bytes.extend(std::iter::repeat(0u8).take(values as usize * 4));
+            std::fs::write(dir.join(file), &bytes).unwrap();
+        }
+        m.validate_files(&dir).unwrap();
+        // truncate one file → rejected
+        let full = std::fs::read(dir.join("entities.f32")).unwrap();
+        std::fs::write(dir.join("entities.f32"), &full[..full.len() - 4]).unwrap();
+        assert!(m.validate_files(&dir).is_err());
+        // right size, lying header → rejected
+        let mut lying = full.clone();
+        lying[..8].copy_from_slice(&99u64.to_le_bytes());
+        std::fs::write(dir.join("entities.f32"), &lying).unwrap();
+        let err = m.validate_files(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("header declares"), "{err:#}");
+        // missing file → rejected
+        std::fs::write(dir.join("entities.f32"), &full).unwrap();
+        std::fs::remove_file(dir.join("relations.f32")).unwrap();
+        assert!(m.validate_files(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn vocab_hash_is_order_and_boundary_sensitive() {
+        let mut a = Vocab::new();
+        a.intern("ab");
+        a.intern("c");
+        let mut b = Vocab::new();
+        b.intern("a");
+        b.intern("bc");
+        let mut c = Vocab::new();
+        c.intern("c");
+        c.intern("ab");
+        let ha = vocab_hash(&a);
+        assert_ne!(ha, vocab_hash(&b), "boundary-sensitive");
+        assert_ne!(ha, vocab_hash(&c), "order-sensitive");
+        assert_eq!(ha, vocab_hash(&a.clone()), "deterministic");
+        assert!(ha.starts_with("fnv1a:") && ha.len() == 6 + 16);
+    }
+
+    #[test]
+    fn read_chunk_into_streams_rows() {
+        let dir = tmp_dir("chunk");
+        let rows = 5usize;
+        let dim = 3usize;
+        let mut bytes = ((rows * dim) as u64).to_le_bytes().to_vec();
+        let mut expect = Vec::new();
+        for i in 0..rows * dim {
+            let v = i as f32 * 0.25;
+            bytes.extend_from_slice(&v.to_le_bytes());
+            expect.push(v);
+        }
+        let path = dir.join("t.f32");
+        std::fs::write(&path, &bytes).unwrap();
+        let table = DenseStore::zeros(rows + 2, dim);
+        read_chunk_into(&path, 2, rows, dim, &table).unwrap();
+        assert_eq!(table.snapshot()[2 * dim..], expect[..]);
+        assert_eq!(table.row_vec(0), vec![0.0; dim], "rows before first_row untouched");
+        // lying header is rejected
+        bytes[..8].copy_from_slice(&7u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_chunk_into(&path, 0, rows, dim, &table).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,32 @@
+//! Serving subsystem: versioned checkpoint snapshots + hot-swap top-k
+//! inference.
+//!
+//! A training [`crate::api::Session`] exports a **versioned checkpoint**
+//! (`manifest.json` + chunked table files, [`manifest`]); [`Snapshot`]
+//! opens one read-only through the mmap store layer — zero-copy, instant
+//! load regardless of table size — and answers batched link-prediction
+//! queries `(h, r, ?)` / `(?, r, t)` with the same blocked scoring loop
+//! as the offline evaluator, so served top-k results are bit-identical
+//! to offline eval rankings (`rust/tests/serve_tests.rs` is the parity
+//! gate).
+//!
+//! [`ServeHandle`] runs a pool of worker threads over one [`Swap`] latch:
+//! [`ServeHandle::publish`] atomically hot-swaps the snapshot under live
+//! traffic, with per-job atomicity (no query ever sees a torn mix of old
+//! and new tables — loom contracts 9–10 in `docs/CONCURRENCY.md`).
+//! [`protocol`] frames query batches and replies for the wire, total
+//! over hostile input.
+//!
+//! See `docs/SERVING.md` for the checkpoint format and operational
+//! guide; `dglke serve --checkpoint DIR` is the CLI entry point.
+
+pub mod manifest;
+pub mod protocol;
+pub mod server;
+pub mod snapshot;
+pub mod swap;
+
+pub use manifest::{vocab_hash, CheckpointManifest, ChunkInfo, TableInfo, FORMAT_VERSION};
+pub use server::{ServeConfig, ServeHandle};
+pub use snapshot::{Query, ServeScratch, Snapshot, SnapshotOptions, TopK};
+pub use swap::Swap;

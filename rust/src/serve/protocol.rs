@@ -1,0 +1,248 @@
+//! Wire framing for serve requests/replies, reusing the KVStore frame
+//! layer (`[u32 len][u8 opcode][payload]`, 1 GiB cap).
+//!
+//! Payload layout (little-endian throughout):
+//!
+//! * query batch (`OP_SQUERY`): `[u32 k][u64 n][n × (u8 side, u64 e,
+//!   u64 r)]` with side 0 = tail-corruption `(e, r, ?)`, 1 =
+//!   head-corruption `(?, r, e)`;
+//! * reply (`OP_SREPLY`): `[u64 n][n × (u64-len-prefixed ids,
+//!   u64-len-prefixed f32 scores)]`.
+//!
+//! Decoders are total over hostile input — length prefixes are checked
+//! against the remaining payload *before* any allocation, unknown side
+//! bytes and trailing garbage are rejected — and
+//! `rust/tests/protocol_fuzz_tests.rs` fuzzes truncation at every cut.
+
+use super::snapshot::{Query, TopK};
+use crate::kvstore::protocol::{read_frame, write_frame};
+use crate::models::EvalSide;
+use crate::util::bytes::{Reader, Writer};
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+/// Opcode for a serve query-batch frame (KVStore opcodes stay below
+/// 0x10; replies mirror the 0x80 ack bit convention).
+pub const OP_SQUERY: u8 = 0x10;
+/// Opcode for a serve reply frame.
+pub const OP_SREPLY: u8 = 0x90;
+
+/// Hard cap on queries (or replies) per frame: a hostile length prefix
+/// larger than this is rejected before any allocation.
+pub const MAX_BATCH: usize = 1 << 20;
+
+/// Bytes of one encoded query: side tag + two ids.
+const QUERY_BYTES: usize = 1 + 8 + 8;
+
+/// Encode a query batch with its requested top-k depth.
+pub fn encode_query_batch(k: u32, queries: &[Query]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(4 + 8 + queries.len() * QUERY_BYTES);
+    w.u32(k);
+    w.u64(queries.len() as u64);
+    for q in queries {
+        w.u8(match q.side {
+            EvalSide::Tail => 0,
+            EvalSide::Head => 1,
+        });
+        w.u64(q.e);
+        w.u64(q.r);
+    }
+    w.buf
+}
+
+/// Decode a query batch; total over arbitrary input.
+pub fn decode_query_batch(payload: &[u8]) -> Result<(u32, Vec<Query>)> {
+    let mut r = Reader::new(payload);
+    let k = r.u32()?;
+    let n = r.u64()?;
+    if n > MAX_BATCH as u64 {
+        bail!("query batch declares {n} queries, cap is {MAX_BATCH}");
+    }
+    // lint:allow(narrowing-cast) — guarded: n <= MAX_BATCH (1 << 20)
+    let n = n as usize;
+    if n > r.remaining() / QUERY_BYTES {
+        bail!("query batch declares {n} queries but only {} payload bytes remain", r.remaining());
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let side = match r.u8()? {
+            0 => EvalSide::Tail,
+            1 => EvalSide::Head,
+            b => bail!("bad query side tag {b}"),
+        };
+        let e = r.u64()?;
+        let rel = r.u64()?;
+        out.push(Query { side, e, r: rel });
+    }
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after query batch", r.remaining());
+    }
+    Ok((k, out))
+}
+
+/// Encode a reply: one [`TopK`] per submitted query, in order.
+pub fn encode_reply(results: &[TopK]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(results.len() as u64);
+    for t in results {
+        w.u64_slice(&t.ids);
+        w.f32_slice(&t.scores);
+    }
+    w.buf
+}
+
+/// Decode a reply; total over arbitrary input.
+pub fn decode_reply(payload: &[u8]) -> Result<Vec<TopK>> {
+    let mut r = Reader::new(payload);
+    let n = r.u64()?;
+    if n > MAX_BATCH as u64 {
+        bail!("reply declares {n} results, cap is {MAX_BATCH}");
+    }
+    // lint:allow(narrowing-cast) — guarded: n <= MAX_BATCH (1 << 20)
+    let n = n as usize;
+    // each result carries at least its two u64 length prefixes
+    if n > r.remaining() / 16 {
+        bail!("reply declares {n} results but only {} payload bytes remain", r.remaining());
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ids = r.u64_vec()?;
+        let scores = r.f32_vec()?;
+        if ids.len() != scores.len() {
+            bail!("reply result has {} ids but {} scores", ids.len(), scores.len());
+        }
+        out.push(TopK { ids, scores });
+    }
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after reply", r.remaining());
+    }
+    Ok(out)
+}
+
+/// Write one query-batch frame to a stream.
+pub fn write_query_batch(stream: &mut impl Write, k: u32, queries: &[Query]) -> Result<()> {
+    write_frame(stream, OP_SQUERY, &encode_query_batch(k, queries))
+}
+
+/// Read one query-batch frame from a stream.
+pub fn read_query_batch(stream: &mut impl Read) -> Result<(u32, Vec<Query>)> {
+    let (op, payload) = read_frame(stream)?;
+    if op != OP_SQUERY {
+        bail!("expected OP_SQUERY frame, got opcode {op:#04x}");
+    }
+    decode_query_batch(&payload)
+}
+
+/// Write one reply frame to a stream.
+pub fn write_reply(stream: &mut impl Write, results: &[TopK]) -> Result<()> {
+    write_frame(stream, OP_SREPLY, &encode_reply(results))
+}
+
+/// Read one reply frame from a stream.
+pub fn read_reply(stream: &mut impl Read) -> Result<Vec<TopK>> {
+    let (op, payload) = read_frame(stream)?;
+    if op != OP_SREPLY {
+        bail!("expected OP_SREPLY frame, got opcode {op:#04x}");
+    }
+    decode_reply(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_queries() -> Vec<Query> {
+        vec![Query::tail(3, 1), Query::head(u64::MAX, 0), Query::tail(0, u64::MAX)]
+    }
+
+    #[test]
+    fn query_batch_round_trip() {
+        let qs = sample_queries();
+        let (k, back) = decode_query_batch(&encode_query_batch(7, &qs)).unwrap();
+        assert_eq!(k, 7);
+        assert_eq!(back, qs);
+        // empty batch and k = 0 are legal on the wire
+        let (k, back) = decode_query_batch(&encode_query_batch(0, &[])).unwrap();
+        assert_eq!((k, back.len()), (0, 0));
+    }
+
+    #[test]
+    fn reply_round_trip() {
+        let reply = vec![
+            TopK { ids: vec![5, 1, 9], scores: vec![0.5, 0.25, -1.0] },
+            TopK { ids: vec![], scores: vec![] },
+        ];
+        assert_eq!(decode_reply(&encode_reply(&reply)).unwrap(), reply);
+        assert_eq!(decode_reply(&encode_reply(&[])).unwrap(), Vec::<TopK>::new());
+    }
+
+    #[test]
+    fn hostile_lengths_rejected_before_alloc() {
+        // query count far beyond the payload
+        let mut w = crate::util::bytes::Writer::new();
+        w.u32(1);
+        w.u64(u64::MAX / 2);
+        assert!(decode_query_batch(&w.buf).is_err());
+        // above the cap but with a plausible-looking payload prefix
+        let mut w = crate::util::bytes::Writer::new();
+        w.u32(1);
+        w.u64((MAX_BATCH + 1) as u64);
+        assert!(decode_query_batch(&w.buf).is_err());
+        // reply count lies too
+        let mut w = crate::util::bytes::Writer::new();
+        w.u64(u64::MAX - 1);
+        assert!(decode_reply(&w.buf).is_err());
+    }
+
+    #[test]
+    fn truncation_at_every_cut_errors() {
+        let full = encode_query_batch(5, &sample_queries());
+        for cut in 0..full.len() {
+            assert!(decode_query_batch(&full[..cut]).is_err(), "cut {cut}");
+        }
+        let reply = encode_reply(&[TopK { ids: vec![1, 2], scores: vec![0.1, 0.2] }]);
+        for cut in 0..reply.len() {
+            assert!(decode_reply(&reply[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_side_and_trailing_bytes_rejected() {
+        let mut buf = encode_query_batch(1, &sample_queries());
+        buf[12] = 9; // first query's side tag
+        assert!(decode_query_batch(&buf).is_err());
+        let mut buf = encode_query_batch(1, &sample_queries());
+        buf.push(0);
+        assert!(decode_query_batch(&buf).is_err());
+        let mut buf = encode_reply(&[TopK { ids: vec![1], scores: vec![0.5] }]);
+        buf.push(0);
+        assert!(decode_reply(&buf).is_err());
+    }
+
+    #[test]
+    fn mismatched_reply_lengths_rejected() {
+        let mut w = crate::util::bytes::Writer::new();
+        w.u64(1);
+        w.u64_slice(&[1, 2]);
+        w.f32_slice(&[0.5]);
+        assert!(decode_reply(&w.buf).is_err());
+    }
+
+    #[test]
+    fn stream_frames_round_trip() {
+        let qs = sample_queries();
+        let mut wire = Vec::new();
+        write_query_batch(&mut wire, 3, &qs).unwrap();
+        let reply = vec![TopK { ids: vec![2], scores: vec![1.5] }];
+        write_reply(&mut wire, &reply).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (k, back) = read_query_batch(&mut cursor).unwrap();
+        assert_eq!((k, back), (3, qs));
+        assert_eq!(read_reply(&mut cursor).unwrap(), reply);
+        // wrong opcode order is rejected
+        let mut wire2 = Vec::new();
+        write_reply(&mut wire2, &reply).unwrap();
+        let mut cursor2 = std::io::Cursor::new(wire2);
+        assert!(read_query_batch(&mut cursor2).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Threaded request loop: a pool of workers answering batched top-k
+//! queries against the current [`Snapshot`], with hot-swap publishing.
+//!
+//! Each worker owns a long-lived [`ServeScratch`] (no steady-state
+//! allocation) and pins the snapshot *once per job*: a job's queries are
+//! all answered by one snapshot, so a publish that lands mid-storm flips
+//! whole jobs from the old answer set to the new one and never mixes
+//! epochs within a job. A multi-job [`ServeHandle::submit`] may span a
+//! publish — per-job atomicity is the contract (`docs/SERVING.md`).
+//!
+//! Built on `util::sync` channels/atomics so `make loom` perturbs the
+//! handoff; the swap latch itself is model-checked separately
+//! (`serve::swap`, loom contracts 9–10).
+
+use super::snapshot::{Query, ServeScratch, Snapshot, TopK};
+use super::swap::Swap;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{mpsc, Arc, Mutex};
+use anyhow::{anyhow, bail, Result};
+use std::thread::JoinHandle;
+
+/// Request-loop shape: worker threads, queries per dispatched job, and
+/// the default top-k depth (`RunSpec.serve` carries the same knobs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub threads: usize,
+    /// max queries handed to one worker as one job
+    pub batch: usize,
+    /// default k for entry points that don't pass one explicitly
+    pub topk: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { threads: 2, batch: 64, topk: 10 }
+    }
+}
+
+/// One unit of worker work: a slice of a submitted batch.
+struct Job {
+    queries: Vec<Query>,
+    k: usize,
+    /// position of this job's chunk within the submit call
+    slot: usize,
+    reply: mpsc::Sender<(usize, Result<Vec<TopK>, String>)>,
+}
+
+/// Handle to a running serve pool. Dropping it (or calling
+/// [`ServeHandle::shutdown`]) closes the queue and joins the workers.
+pub struct ServeHandle {
+    swap: Arc<Swap<Snapshot>>,
+    /// `None` once shut down — dropping the sender is what stops workers
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    batch: usize,
+    served: Arc<AtomicU64>,
+}
+
+impl ServeHandle {
+    /// Spawn `cfg.threads` workers serving `snapshot`.
+    pub fn start(snapshot: Snapshot, cfg: &ServeConfig) -> ServeHandle {
+        let swap = Arc::new(Swap::new(Arc::new(snapshot)));
+        let served = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..cfg.threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let swap = Arc::clone(&swap);
+                let served = Arc::clone(&served);
+                std::thread::spawn(move || {
+                    let mut scratch = ServeScratch::default();
+                    loop {
+                        // hold the receiver lock only for the dequeue, so
+                        // idle workers don't serialize busy ones
+                        let job = {
+                            let guard = match rx.lock() {
+                                Ok(g) => g,
+                                Err(poisoned) => poisoned.into_inner(),
+                            };
+                            guard.recv()
+                        };
+                        let job = match job {
+                            Ok(j) => j,
+                            Err(_) => break, // queue closed: shutdown
+                        };
+                        // pin one snapshot for the whole job — a publish
+                        // mid-job cannot mix old and new answers
+                        let snap = swap.load();
+                        let res = snap.query_batch(&job.queries, job.k, &mut scratch);
+                        served.fetch_add(job.queries.len() as u64, Ordering::Release);
+                        // a submit() that already bailed dropped its
+                        // receiver; that's fine, the job is abandoned
+                        let _ =
+                            job.reply.send((job.slot, res.map_err(|e| format!("{e:#}"))));
+                    }
+                })
+            })
+            .collect();
+        ServeHandle { swap, tx: Some(tx), workers, batch: cfg.batch.max(1), served }
+    }
+
+    /// Answer `queries` (top `k` each), fanning chunks of `batch` across
+    /// the worker pool and reassembling results in submission order.
+    pub fn submit(&self, queries: &[Query], k: usize) -> Result<Vec<TopK>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("serve handle is shut down"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut n_jobs = 0usize;
+        for (slot, chunk) in queries.chunks(self.batch).enumerate() {
+            let job = Job { queries: chunk.to_vec(), k, slot, reply: reply_tx.clone() };
+            if tx.send(job).is_err() {
+                bail!("serve workers have shut down");
+            }
+            n_jobs += 1;
+        }
+        drop(reply_tx);
+        let mut slots: Vec<Option<Vec<TopK>>> = vec![None; n_jobs];
+        for _ in 0..n_jobs {
+            let (slot, res) = reply_rx
+                .recv()
+                .map_err(|_| anyhow!("serve worker exited without replying"))?;
+            match res {
+                Ok(answers) => slots[slot] = Some(answers),
+                Err(e) => bail!("serve query failed: {e}"),
+            }
+        }
+        Ok(slots.into_iter().flatten().flatten().collect())
+    }
+
+    /// Hot-swap to a new snapshot; in-flight jobs finish on the old one.
+    /// Returns the new epoch.
+    pub fn publish(&self, snapshot: Snapshot) -> u64 {
+        self.swap.publish(Arc::new(snapshot))
+    }
+
+    /// The snapshot new jobs will be served from.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.swap.load()
+    }
+
+    /// Publishes completed so far (0 = still the starting snapshot).
+    pub fn epoch(&self) -> u64 {
+        self.swap.epoch()
+    }
+
+    /// Total queries answered (across all workers and snapshots).
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Acquire)
+    }
+
+    /// Close the queue and join every worker.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx = None; // closes the channel; workers break out of recv
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}

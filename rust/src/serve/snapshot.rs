@@ -1,0 +1,508 @@
+//! Read-only [`Snapshot`] over a versioned checkpoint: zero-copy table
+//! access and batched top-k link-prediction queries.
+//!
+//! Opening a snapshot never reads table bytes into memory up front — each
+//! chunk file is viewed through [`MmapStore::open_at`] positioned I/O
+//! behind its 8-byte header, so a larger-than-RAM checkpoint serves
+//! instantly (optionally with a bounded hot-row cache in front, the PR 4
+//! machinery reused read-side). Scoring mirrors the offline evaluator
+//! (`eval::evaluate`) block-for-block — same `BLOCK`, same fused-vs-staged
+//! dispatch, same kernels — so served scores are bit-identical to offline
+//! eval scores; `rust/tests/serve_tests.rs` holds the two paths together.
+
+use super::manifest::{CheckpointManifest, TableInfo, TABLE_HEADER_BYTES};
+use crate::models::kernels::zeroed;
+use crate::models::{EvalScratch, EvalSide, KernelBackend, LossCfg, NativeModel};
+use crate::store::{split_cache_budget, CachedStore, EmbeddingStore, MmapStore};
+use crate::train::batch::stream_gather_scores;
+use crate::util::topk::top_k_indices;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Candidate block size — pinned to the offline evaluator's blocking.
+/// Per-candidate scoring math is blocking-independent, but keeping the
+/// constants identical makes "mirrors eval" checkable by inspection.
+const BLOCK: usize = 4096;
+
+/// How to open a [`Snapshot`].
+#[derive(Clone, Debug)]
+pub struct SnapshotOptions {
+    /// Optional hot-row cache budget (MiB, fractional allowed), split
+    /// proportionally across the entity/relation tables like a training
+    /// run's `storage.cache_mb`. `None` = raw positioned I/O per row.
+    pub cache_mb: Option<f64>,
+    /// Score kernel backend. Results are bit-identical either way (the
+    /// kernel parity contract); `Fused` streams candidate rows
+    /// store→tile and is the serving default.
+    pub kernels: KernelBackend,
+}
+
+impl Default for SnapshotOptions {
+    fn default() -> Self {
+        SnapshotOptions { cache_mb: None, kernels: KernelBackend::Fused }
+    }
+}
+
+/// One link-prediction request: score every entity as the missing slot.
+/// `Tail` asks `(e, r, ?)` (e is the head); `Head` asks `(?, r, e)`
+/// (e is the tail).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Query {
+    pub side: EvalSide,
+    pub e: u64,
+    pub r: u64,
+}
+
+impl Query {
+    /// `(h, r, ?)`
+    pub fn tail(h: u64, r: u64) -> Query {
+        Query { side: EvalSide::Tail, e: h, r }
+    }
+
+    /// `(?, r, t)`
+    pub fn head(t: u64, r: u64) -> Query {
+        Query { side: EvalSide::Head, e: t, r }
+    }
+}
+
+/// Top-k answer: entity ids in rank order (descending score, ascending
+/// id on ties — exactly `eval::metrics::full_ranking`'s prefix) with
+/// their scores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopK {
+    pub ids: Vec<u64>,
+    pub scores: Vec<f32>,
+}
+
+/// Per-worker scratch arena for snapshot queries: query/candidate/score
+/// buffers and the kernel tile scratch all persist across requests, so
+/// the steady-state request path does not allocate.
+#[derive(Default)]
+pub struct ServeScratch {
+    eval: EvalScratch,
+    e_row: Vec<f32>,
+    r_row: Vec<f32>,
+    scores: Vec<f32>,
+    ids: Vec<u64>,
+    cand: Vec<f32>,
+}
+
+/// A read-only view of one checkpoint, shareable across worker threads.
+pub struct Snapshot {
+    manifest: CheckpointManifest,
+    entities: Arc<dyn EmbeddingStore>,
+    relations: Arc<dyn EmbeddingStore>,
+    native: NativeModel,
+    kernels: KernelBackend,
+}
+
+impl Snapshot {
+    /// Open with defaults (fused kernels, no cache).
+    pub fn open(dir: &Path) -> Result<Snapshot> {
+        Self::open_with(dir, &SnapshotOptions::default())
+    }
+
+    /// Open a checkpoint directory: manifest load (format-version gate),
+    /// internal validation, and full on-disk file validation all happen
+    /// before the first query can run.
+    pub fn open_with(dir: &Path, opts: &SnapshotOptions) -> Result<Snapshot> {
+        let manifest = CheckpointManifest::load(dir)?;
+        manifest
+            .validate()
+            .with_context(|| format!("inconsistent manifest in {}", dir.display()))?;
+        manifest.validate_files(dir)?;
+        let mut entities = open_table(dir, &manifest.entities)?;
+        let mut relations = open_table(dir, &manifest.relations)?;
+        if let Some(mb) = opts.cache_mb {
+            let total = (mb * (1u64 << 20) as f64) as u64;
+            let shares =
+                split_cache_budget(total, &[entities.table_bytes(), relations.table_bytes()]);
+            entities = maybe_cache(entities, shares.first().copied().unwrap_or(0));
+            relations = maybe_cache(relations, shares.get(1).copied().unwrap_or(0));
+        }
+        let native = NativeModel::new(manifest.model, manifest.dim, LossCfg::default());
+        Ok(Snapshot {
+            manifest,
+            entities: Arc::from(entities),
+            relations: Arc::from(relations),
+            native,
+            kernels: opts.kernels,
+        })
+    }
+
+    pub fn manifest(&self) -> &CheckpointManifest {
+        &self.manifest
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.entities.rows()
+    }
+
+    pub fn n_relations(&self) -> usize {
+        self.relations.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.native.dim
+    }
+
+    pub fn kernels(&self) -> KernelBackend {
+        self.kernels
+    }
+
+    pub fn entities(&self) -> &Arc<dyn EmbeddingStore> {
+        &self.entities
+    }
+
+    pub fn relations(&self) -> &Arc<dyn EmbeddingStore> {
+        &self.relations
+    }
+
+    /// Score every entity as the missing slot of `q` and return the top
+    /// `k` (clamped to the vocab size) in rank order.
+    pub fn query(&self, q: &Query, k: usize, scratch: &mut ServeScratch) -> Result<TopK> {
+        let n = self.entities.rows();
+        anyhow::ensure!(
+            (q.e as usize) < n,
+            "entity id {} out of range (checkpoint has {n} entities)",
+            q.e
+        );
+        anyhow::ensure!(
+            (q.r as usize) < self.relations.rows(),
+            "relation id {} out of range (checkpoint has {} relations)",
+            q.r,
+            self.relations.rows()
+        );
+        let dim = self.native.dim;
+        scratch.e_row.clear();
+        scratch.e_row.resize(dim, 0.0);
+        self.entities.read_row(q.e as usize, &mut scratch.e_row);
+        scratch.r_row.clear();
+        scratch.r_row.resize(self.relations.dim(), 0.0);
+        self.relations.read_row(q.r as usize, &mut scratch.r_row);
+        self.score_all(q.side, scratch);
+        let top = top_k_indices(&scratch.scores, k.min(n));
+        let mut ids = Vec::with_capacity(top.len());
+        let mut scores = Vec::with_capacity(top.len());
+        for &i in &top {
+            ids.push(i as u64);
+            scores.push(scratch.scores[i]);
+        }
+        Ok(TopK { ids, scores })
+    }
+
+    /// [`Snapshot::query`] over a batch, reusing one scratch arena.
+    pub fn query_batch(
+        &self,
+        queries: &[Query],
+        k: usize,
+        scratch: &mut ServeScratch,
+    ) -> Result<Vec<TopK>> {
+        let mut out = Vec::with_capacity(queries.len());
+        for q in queries {
+            out.push(self.query(q, k, scratch)?);
+        }
+        Ok(out)
+    }
+
+    /// Fill `scratch.scores` with the score of every entity id as the
+    /// corrupted slot. This is the offline evaluator's scoring loop with
+    /// the candidate set fixed to `0..n_entities`: same block size, same
+    /// fused-stream condition, same kernel entry points — so each
+    /// candidate's score is bit-identical to what `eval::evaluate`
+    /// computes for it.
+    fn score_all(&self, side: EvalSide, scratch: &mut ServeScratch) {
+        let n = self.entities.rows();
+        let dim = self.native.dim;
+        let op = self.native.kind.pairwise_op();
+        let fused_stream =
+            self.kernels == KernelBackend::Fused && !self.native.kind.projects_negatives();
+        scratch.scores.clear();
+        scratch.scores.resize(n, 0.0);
+        if fused_stream {
+            // build the o = g(e, r) query row once, then stream candidate
+            // rows store→kernel-tile without staging [BLOCK, d] gathers
+            let q = zeroed(&mut scratch.eval.query, dim);
+            self.native.build_query(side, &scratch.e_row, &scratch.r_row, q);
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + BLOCK).min(n);
+                scratch.ids.clear();
+                scratch.ids.extend((start as u64)..(end as u64));
+                stream_gather_scores(
+                    op,
+                    q,
+                    self.entities.as_ref(),
+                    &scratch.ids,
+                    dim,
+                    &mut scratch.scores[start..end],
+                    &mut scratch.eval.kernel,
+                );
+                start = end;
+            }
+        } else {
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + BLOCK).min(n);
+                scratch.ids.clear();
+                scratch.ids.extend((start as u64)..(end as u64));
+                scratch.cand.clear();
+                scratch.cand.resize((end - start) * dim, 0.0);
+                self.entities.gather(&scratch.ids, &mut scratch.cand);
+                self.native.eval_scores_with(
+                    side,
+                    &scratch.e_row,
+                    &scratch.r_row,
+                    &scratch.cand,
+                    &mut scratch.scores[start..end],
+                    self.kernels,
+                    &mut scratch.eval,
+                );
+                start = end;
+            }
+        }
+    }
+}
+
+fn maybe_cache(store: Box<dyn EmbeddingStore>, share: u64) -> Box<dyn EmbeddingStore> {
+    let min_share = store.dim().max(1) as u64 * 4;
+    if store.rows() > 0 && share >= min_share {
+        Box::new(CachedStore::new(store, share))
+    } else {
+        store
+    }
+}
+
+/// Open one table's chunk files as an [`EmbeddingStore`]: a single chunk
+/// is an [`MmapStore`] directly; multiple chunks compose into a
+/// [`ChunkedTable`].
+fn open_table(dir: &Path, info: &TableInfo) -> Result<Box<dyn EmbeddingStore>> {
+    let mut chunks = Vec::with_capacity(info.chunks.len());
+    let mut starts = Vec::with_capacity(info.chunks.len());
+    let mut first = 0usize;
+    for c in &info.chunks {
+        let path = dir.join(&c.file);
+        starts.push(first);
+        chunks.push(MmapStore::open_at(&path, TABLE_HEADER_BYTES, c.rows, info.dim)?);
+        first += c.rows;
+    }
+    if chunks.len() == 1 {
+        if let Some(only) = chunks.pop() {
+            return Ok(Box::new(only));
+        }
+    }
+    Ok(Box::new(ChunkedTable { chunks, starts, rows: info.rows, dim: info.dim }))
+}
+
+/// Several consecutive [`MmapStore`] chunks presented as one read-only
+/// table. Row `i` lives in the chunk whose start is the greatest `<= i`.
+struct ChunkedTable {
+    chunks: Vec<MmapStore>,
+    /// first global row of each chunk (starts[0] == 0, ascending)
+    starts: Vec<usize>,
+    rows: usize,
+    dim: usize,
+}
+
+impl EmbeddingStore for ChunkedTable {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "snapshot"
+    }
+
+    fn read_row(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows);
+        let c = self.starts.partition_point(|&s| s <= i) - 1;
+        self.chunks[c].read_row(i - self.starts[c], out);
+    }
+
+    fn set_row(&self, _i: usize, _values: &[f32]) {
+        panic!("snapshot tables are read-only");
+    }
+
+    fn update_row(&self, _i: usize, _f: &mut dyn FnMut(&mut [f32])) {
+        panic!("snapshot tables are read-only");
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.resident_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelKind;
+    use crate::serve::manifest::{ChunkInfo, FORMAT_VERSION};
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("dglke-snapshot-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Write a chunk file with the standard header; row r value j is
+    /// `base + r + j/10`.
+    fn write_chunk(path: &std::path::Path, first_row: usize, rows: usize, dim: usize) {
+        let mut bytes = ((rows * dim) as u64).to_le_bytes().to_vec();
+        for r in 0..rows {
+            for j in 0..dim {
+                bytes.extend_from_slice(
+                    &((first_row + r) as f32 + j as f32 / 10.0).to_le_bytes(),
+                );
+            }
+        }
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    /// A minimal on-disk checkpoint: 6 entities in two chunks (4 + 2),
+    /// 2 relations in one chunk, TransE-L2 dim 4.
+    fn write_fixture(dir: &std::path::Path) -> CheckpointManifest {
+        write_chunk(&dir.join("entities.00000.f32"), 0, 4, 4);
+        write_chunk(&dir.join("entities.00001.f32"), 4, 2, 4);
+        write_chunk(&dir.join("relations.f32"), 100, 2, 4);
+        let m = CheckpointManifest {
+            format_version: FORMAT_VERSION,
+            model: ModelKind::TransEL2,
+            dataset: "fixture".to_string(),
+            dim: 4,
+            rel_dim: 4,
+            n_entities: 6,
+            n_relations: 2,
+            seed: 0,
+            entity_vocab_hash: "fnv1a:0000000000000000".to_string(),
+            relation_vocab_hash: "fnv1a:0000000000000000".to_string(),
+            entities: TableInfo {
+                rows: 6,
+                dim: 4,
+                chunks: vec![
+                    ChunkInfo { file: "entities.00000.f32".to_string(), rows: 4 },
+                    ChunkInfo { file: "entities.00001.f32".to_string(), rows: 2 },
+                ],
+            },
+            relations: TableInfo::single("relations.f32", 2, 4),
+        };
+        m.save(dir).unwrap();
+        m
+    }
+
+    #[test]
+    fn chunked_table_maps_rows_across_chunks() {
+        let dir = tmp_dir("chunks");
+        let m = write_fixture(&dir);
+        let table = open_table(&dir, &m.entities).unwrap();
+        assert_eq!(table.backend_name(), "snapshot");
+        assert_eq!(table.rows(), 6);
+        for i in 0..6 {
+            assert_eq!(
+                table.row_vec(i),
+                vec![i as f32, i as f32 + 0.1, i as f32 + 0.2, i as f32 + 0.3],
+                "row {i}"
+            );
+        }
+        // single-chunk tables come back as a bare mmap view
+        let rels = open_table(&dir, &m.relations).unwrap();
+        assert_eq!(rels.backend_name(), "mmap");
+        assert_eq!(rels.row_vec(1)[0], 101.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only")]
+    fn chunked_table_rejects_writes() {
+        let dir = tmp_dir("readonly");
+        let m = write_fixture(&dir);
+        let table = open_table(&dir, &m.entities).unwrap();
+        let cleanup = scopeguard(dir);
+        table.set_row(0, &[0.0; 4]);
+        drop(cleanup);
+    }
+
+    fn scopeguard(dir: std::path::PathBuf) -> impl Drop {
+        struct G(std::path::PathBuf);
+        impl Drop for G {
+            fn drop(&mut self) {
+                std::fs::remove_dir_all(&self.0).ok();
+            }
+        }
+        G(dir)
+    }
+
+    #[test]
+    fn snapshot_queries_and_bounds() {
+        let dir = tmp_dir("query");
+        write_fixture(&dir);
+        for kernels in [KernelBackend::Scalar, KernelBackend::Fused] {
+            let snap = Snapshot::open_with(
+                &dir,
+                &SnapshotOptions { cache_mb: None, kernels },
+            )
+            .unwrap();
+            assert_eq!(snap.n_entities(), 6);
+            let mut scratch = ServeScratch::default();
+            // k clamps to the vocab and ranks every entity
+            let top = snap.query(&Query::tail(0, 0), 100, &mut scratch).unwrap();
+            assert_eq!(top.ids.len(), 6);
+            // scores are in rank order
+            for w in top.scores.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+            // out-of-range ids are rejected, not panicked on
+            assert!(snap.query(&Query::tail(6, 0), 1, &mut scratch).is_err());
+            assert!(snap.query(&Query::head(0, 2), 1, &mut scratch).is_err());
+            // empty batch is fine
+            assert_eq!(snap.query_batch(&[], 3, &mut scratch).unwrap().len(), 0);
+        }
+        // scalar and fused agree bit-for-bit
+        let mut answers = Vec::new();
+        for kernels in [KernelBackend::Scalar, KernelBackend::Fused] {
+            let snap =
+                Snapshot::open_with(&dir, &SnapshotOptions { cache_mb: None, kernels }).unwrap();
+            let mut scratch = ServeScratch::default();
+            let qs: Vec<Query> =
+                (0..6).flat_map(|e| [Query::tail(e, 0), Query::head(e, 1)]).collect();
+            answers.push(snap.query_batch(&qs, 6, &mut scratch).unwrap());
+        }
+        for (a, b) in answers[0].iter().zip(&answers[1]) {
+            assert_eq!(a.ids, b.ids);
+            let ab: Vec<u32> = a.scores.iter().map(|s| s.to_bits()).collect();
+            let bb: Vec<u32> = b.scores.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cached_snapshot_answers_identically() {
+        let dir = tmp_dir("cached");
+        write_fixture(&dir);
+        let plain = Snapshot::open(&dir).unwrap();
+        let cached = Snapshot::open_with(
+            &dir,
+            &SnapshotOptions { cache_mb: Some(1.0), ..SnapshotOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(cached.entities().backend_name(), "cached");
+        let mut s1 = ServeScratch::default();
+        let mut s2 = ServeScratch::default();
+        for q in [Query::tail(3, 1), Query::head(5, 0)] {
+            let a = plain.query(&q, 6, &mut s1).unwrap();
+            let b = cached.query(&q, 6, &mut s2).unwrap();
+            assert_eq!(a, b);
+            // twice more, to serve from a warm cache
+            assert_eq!(cached.query(&q, 6, &mut s2).unwrap(), a);
+        }
+        assert!(cached.entities().cache_stats().map(|s| s.hits > 0).unwrap_or(false));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,139 @@
+//! Atomic snapshot hot-swap: an arc-swap-style epoch latch on
+//! `util::sync`, so `make loom` perturbs it (contracts 9–10 in
+//! `docs/CONCURRENCY.md`).
+//!
+//! The representation is deliberately boring — `Mutex<Arc<T>>` plus an
+//! `AtomicU64` epoch — because boring is what the loom harness can
+//! actually explore. The lock is held only long enough to clone or
+//! replace one `Arc` (no snapshot construction, no I/O), so publishers
+//! never block readers for more than a pointer copy; once a reader holds
+//! its `Arc`, it works wait-free on that snapshot for as long as it
+//! likes while publishes proceed underneath.
+//!
+//! Ordering: the epoch uses `Release` on publish and `Acquire` on probe
+//! — never `Relaxed` (xtask's relaxed-ordering lint allowlist does not
+//! include this file, by design) — so a probed epoch value is never
+//! newer than the snapshot contents a subsequent [`Swap::load_with_epoch`]
+//! observes. The (arc, epoch) pair itself is made consistent by reading
+//! and writing both under the one mutex.
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex, MutexGuard};
+
+/// Shared slot holding the current snapshot and its publish epoch.
+pub struct Swap<T> {
+    current: Mutex<Arc<T>>,
+    epoch: AtomicU64,
+}
+
+impl<T> Swap<T> {
+    /// Wrap an initial snapshot at epoch 0.
+    pub fn new(initial: Arc<T>) -> Swap<T> {
+        Swap { current: Mutex::new(initial), epoch: AtomicU64::new(0) }
+    }
+
+    /// Poison-tolerant lock: a reader/publisher that panicked while
+    /// holding the lock left a fully-replaced-or-untouched `Arc` (the
+    /// critical sections are single pointer assignments), so the data is
+    /// still coherent and later callers proceed.
+    fn lock_current(&self) -> MutexGuard<'_, Arc<T>> {
+        match self.current.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Clone the current snapshot handle. The returned `Arc` stays valid
+    /// (and unchanged) for as long as the caller holds it, regardless of
+    /// how many publishes happen afterwards — readers can never observe
+    /// a torn or half-swapped snapshot.
+    pub fn load(&self) -> Arc<T> {
+        Arc::clone(&self.lock_current())
+    }
+
+    /// Snapshot handle plus the epoch it was published at. Both are read
+    /// under one lock acquisition, so the pair is always consistent with
+    /// some publish — never a new epoch with an old snapshot or vice
+    /// versa.
+    pub fn load_with_epoch(&self) -> (Arc<T>, u64) {
+        let guard = self.lock_current();
+        let snap = Arc::clone(&guard);
+        let epoch = self.epoch.load(Ordering::Acquire);
+        (snap, epoch)
+    }
+
+    /// Replace the current snapshot and bump the epoch. Returns the new
+    /// epoch. In-flight readers keep their old `Arc`s; the old snapshot
+    /// is dropped when the last of them finishes.
+    pub fn publish(&self, next: Arc<T>) -> u64 {
+        let mut guard = self.lock_current();
+        *guard = next;
+        // Release pairs with the Acquire probes: anyone who observes the
+        // new epoch value afterwards also observes the new arc on their
+        // next load (the mutex orders the arc write before this bump).
+        self.epoch.fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Wait-free staleness probe (no lock): how many publishes have
+    /// completed. Never overtakes what [`Swap::load_with_epoch`] would
+    /// return — a probe followed by a load sees an epoch >= the probe.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_bumps_epoch_and_replaces() {
+        let swap = Swap::new(Arc::new(10u64));
+        assert_eq!(swap.epoch(), 0);
+        assert_eq!(*swap.load(), 10);
+        assert_eq!(swap.publish(Arc::new(11)), 1);
+        assert_eq!(swap.publish(Arc::new(12)), 2);
+        let (snap, epoch) = swap.load_with_epoch();
+        assert_eq!((*snap, epoch), (12, 2));
+    }
+
+    #[test]
+    fn readers_keep_their_snapshot_across_publishes() {
+        let swap = Swap::new(Arc::new(vec![1, 2, 3]));
+        let held = swap.load();
+        swap.publish(Arc::new(vec![4, 5, 6]));
+        assert_eq!(*held, vec![1, 2, 3], "old arc unchanged");
+        assert_eq!(*swap.load(), vec![4, 5, 6], "new loads see the publish");
+    }
+
+    #[test]
+    fn concurrent_swaps_never_tear() {
+        // Threaded smoke version of loom contract 9: every observed
+        // snapshot is internally uniform, and (snap, epoch) pairs match.
+        let swap = Arc::new(Swap::new(Arc::new(vec![0u64; 4])));
+        std::thread::scope(|s| {
+            let publisher = Arc::clone(&swap);
+            s.spawn(move || {
+                for e in 1..=200u64 {
+                    publisher.publish(Arc::new(vec![e; 4]));
+                }
+            });
+            for _ in 0..3 {
+                let reader = Arc::clone(&swap);
+                s.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..400 {
+                        let probed = reader.epoch();
+                        let (snap, epoch) = reader.load_with_epoch();
+                        assert!(snap.iter().all(|&v| v == snap[0]), "torn snapshot {snap:?}");
+                        assert_eq!(snap[0], epoch, "epoch/content pairing");
+                        assert!(epoch >= probed, "probe overtook contents");
+                        assert!(epoch >= last, "epoch went backwards");
+                        last = epoch;
+                    }
+                });
+            }
+        });
+        assert_eq!(swap.epoch(), 200);
+    }
+}

@@ -35,6 +35,10 @@ pub struct MmapStore {
     path: PathBuf,
     rows: usize,
     dim: usize,
+    /// Byte offset of row 0 in the backing file. 0 for tables created by
+    /// this store; non-zero for read-only views over checkpoint table
+    /// files, whose rows sit behind a length header ([`MmapStore::open_at`]).
+    base: u64,
 }
 
 thread_local! {
@@ -58,7 +62,38 @@ impl MmapStore {
         // for >4 GiB tables (Freebase at dim 400 is ~138 GiB)
         file.set_len(rows as u64 * dim as u64 * 4)
             .with_context(|| format!("sizing mmap store {}", path.display()))?;
-        Ok(MmapStore { file, path: path.to_path_buf(), rows, dim })
+        Ok(MmapStore { file, path: path.to_path_buf(), rows, dim, base: 0 })
+    }
+
+    /// Open an *existing* file as a read-only `rows × dim` table whose
+    /// row 0 starts `base` bytes into the file — the zero-copy load path
+    /// of the serving layer, which views checkpoint table files (rows
+    /// behind an 8-byte length header) in place instead of streaming
+    /// them into a fresh table. The file must be at least
+    /// `base + rows * dim * 4` bytes; short files are rejected here, so
+    /// a truncated checkpoint fails at open time, not mid-query.
+    ///
+    /// The store is opened without write permission: the row-write
+    /// methods (`set_row` / `set_rows` / `update_row`) panic if called,
+    /// which is the documented I/O-error contract of this backend —
+    /// snapshot tables are immutable by construction.
+    pub fn open_at(path: &Path, base: u64, rows: usize, dim: usize) -> Result<MmapStore> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .open(path)
+            .with_context(|| format!("opening mmap table {}", path.display()))?;
+        let need = base + rows as u64 * dim as u64 * 4;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        anyhow::ensure!(
+            len >= need,
+            "{}: file is {len} bytes but a {rows}x{dim} table at offset {base} needs {need} \
+             (truncated checkpoint?)",
+            path.display()
+        );
+        Ok(MmapStore { file, path: path.to_path_buf(), rows, dim, base })
     }
 
     /// Like [`MmapStore::create`], but the backing file is unlinked
@@ -85,7 +120,7 @@ impl MmapStore {
     #[inline]
     fn offset(&self, i: usize) -> u64 {
         debug_assert!(i < self.rows);
-        i as u64 * self.dim as u64 * 4
+        self.base + i as u64 * self.dim as u64 * 4
     }
 }
 
@@ -158,7 +193,7 @@ impl EmbeddingStore for MmapStore {
         while off < total {
             let n = (total - off).min(buf.len() as u64) as usize;
             self.file
-                .read_exact_at(&mut buf[..n], off)
+                .read_exact_at(&mut buf[..n], self.base + off)
                 .with_context(|| format!("exporting mmap store {}", self.path.display()))?;
             w.write_all(&buf[..n])?;
             off += n as u64;
@@ -285,6 +320,38 @@ mod tests {
         t.update_row(rows - 1, &mut |row| row[0] = 7.0);
         assert_eq!(t.row_vec(rows - 1)[0], 7.0);
         assert_eq!(t.row_vec(rows - 2), vec![0.0; dim], "neighbor stays untouched");
+    }
+
+    #[test]
+    fn open_at_views_rows_behind_a_header() {
+        // checkpoint table layout: [u64 n_values][rows] — open_at(base=8)
+        // must see exactly the rows, never the header bytes
+        let path = tmp_path("openat");
+        let rows = 6usize;
+        let dim = 3usize;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((rows * dim) as u64).to_le_bytes());
+        for i in 0..rows {
+            for k in 0..dim {
+                bytes.extend_from_slice(&(i as f32 * 10.0 + k as f32).to_le_bytes());
+            }
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let t = MmapStore::open_at(&path, 8, rows, dim).unwrap();
+        assert_eq!(t.rows(), rows);
+        assert_eq!(t.dim(), dim);
+        for i in 0..rows {
+            assert_eq!(t.row_vec(i), vec![i as f32 * 10.0, i as f32 * 10.0 + 1.0, i as f32 * 10.0 + 2.0]);
+        }
+        // export streams the rows, not the header
+        let mut exported = Vec::new();
+        t.export_rows(&mut exported).unwrap();
+        assert_eq!(exported, bytes[8..].to_vec());
+        // a short file is rejected at open time
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = MmapStore::open_at(&path, 8, rows, dim).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

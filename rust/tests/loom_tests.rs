@@ -21,8 +21,13 @@
 //! 7. trainer barrier: exactly one leader per crossing
 //! 8. kvstore acks: per-link marks (Release/Acquire) publish server
 //!    effects — completion of a mark proves the pushes it counts applied
+//! 9. serve swap: readers see old or new snapshot in full, never a torn
+//!    mix — a publish replaces the whole `Arc` or nothing
+//! 10. serve swap: the wait-free epoch probe never overtakes the
+//!     contents — a probe followed by a load sees contents >= the probe
 
 use dglke::kvstore::{InflightWindow, PopOutcome};
+use dglke::serve::Swap;
 use dglke::store::{CachedStore, DenseStore, EmbeddingStore};
 use dglke::train::sync::SyncState;
 use dglke::util::sync::atomic::{AtomicU64, Ordering};
@@ -299,6 +304,86 @@ fn per_link_ack_marks_publish_server_effects() {
                     break;
                 }
                 std::thread::yield_now();
+            }
+        });
+    });
+}
+
+/// 9. The serving hot-swap latch (serve::Swap): a publisher replaces the
+/// snapshot while readers load it. Every loaded snapshot must be
+/// internally uniform — all elements from the same publish — because a
+/// publish swaps one `Arc`, never bytes inside a live snapshot. This is
+/// the latch half of the serve_tests query-storm guarantee (the other
+/// half, per-job snapshot pinning, lives in serve::server).
+#[test]
+fn swap_readers_see_whole_snapshots_never_torn() {
+    model(|| {
+        let swap = Arc::new(Swap::new(Arc::new(vec![0u64; 4])));
+        std::thread::scope(|s| {
+            let w = swap.clone();
+            s.spawn(move || {
+                for v in 1..=24u64 {
+                    let epoch = w.publish(Arc::new(vec![v; 4]));
+                    assert_eq!(epoch, v, "publishes are serialized, epochs count them");
+                }
+            });
+            for _ in 0..2 {
+                let r = swap.clone();
+                s.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..24 {
+                        explore();
+                        let snap = r.load();
+                        assert!(
+                            snap.iter().all(|&x| x == snap[0]),
+                            "torn snapshot: {snap:?}"
+                        );
+                        // a reader never travels back in time
+                        assert!(snap[0] >= last, "snapshot regressed {last} -> {}", snap[0]);
+                        last = snap[0];
+                    }
+                });
+            }
+        });
+        assert_eq!(swap.epoch(), 24);
+    });
+}
+
+/// 10. The wait-free staleness probe: `epoch()` is bumped with Release
+/// *after* the contents swap (both under the publish lock), and probed
+/// with Acquire — so an observed epoch is a floor for what any
+/// subsequent load returns, and `load_with_epoch` pairs contents and
+/// epoch exactly. A probe that overtook the contents would make a
+/// freshness check pass on a stale snapshot.
+#[test]
+fn swap_epoch_probe_never_overtakes_contents() {
+    model(|| {
+        let swap = Arc::new(Swap::new(Arc::new(vec![0u64; 2])));
+        std::thread::scope(|s| {
+            let w = swap.clone();
+            s.spawn(move || {
+                for v in 1..=24u64 {
+                    w.publish(Arc::new(vec![v; 2]));
+                }
+            });
+            let mut last_probe = 0u64;
+            for _ in 0..24 {
+                explore();
+                // paired read: contents and epoch under one latch
+                let (snap, epoch) = swap.load_with_epoch();
+                assert_eq!(snap[0], epoch, "contents and epoch out of step");
+                // independent probe first, load second: the probe is a
+                // floor for the later load's contents
+                let probe = swap.epoch();
+                assert!(probe >= epoch, "epoch went backwards");
+                assert!(probe >= last_probe, "probe not monotonic");
+                last_probe = probe;
+                let later = swap.load();
+                assert!(
+                    later[0] >= probe,
+                    "probe {probe} overtook contents {}",
+                    later[0]
+                );
             }
         });
     });

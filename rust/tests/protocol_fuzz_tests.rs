@@ -8,6 +8,12 @@
 //! (deterministic, reproducible by seed) through the adversarial cases:
 //! truncated frames, empty payloads, oversized length prefixes, flipped
 //! bytes, and interleaved tagged frames on one stream.
+//!
+//! The serving request/response codecs (`serve::protocol`) ride the same
+//! framing and face the same adversary, so they get the same treatment
+//! below: seeded round-trips, byte-flip totality, truncation at every
+//! cut, and hostile count prefixes that must be rejected before any
+//! allocation.
 
 use dglke::kvstore::protocol::{
     decode_pull, decode_push, encode_pull, encode_push, prepend_tag, read_frame, split_tag,
@@ -160,4 +166,163 @@ fn interleaved_tagged_frames_keep_order_and_tags() {
         assert_eq!(got_inner, &inner[..]);
     }
     assert!(read_frame(&mut cursor).is_err(), "stream fully consumed");
+}
+
+mod serve_codec {
+    use dglke::serve::protocol::{
+        decode_query_batch, decode_reply, encode_query_batch, encode_reply, read_query_batch,
+        read_reply, write_query_batch, write_reply, MAX_BATCH, OP_SQUERY,
+    };
+    use dglke::serve::{Query, TopK};
+    use dglke::util::rng::Rng;
+    use std::io::Cursor;
+
+    fn arbitrary_queries(rng: &mut Rng, n: usize) -> Vec<Query> {
+        (0..n)
+            .map(|_| {
+                let e = ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64;
+                let r = rng.next_u32() as u64;
+                if rng.gen_index(2) == 0 {
+                    Query::tail(e, r)
+                } else {
+                    Query::head(e, r)
+                }
+            })
+            .collect()
+    }
+
+    /// Round-trip: arbitrary batches (including empty) survive
+    /// encode/decode verbatim — sides, full-width u64 ids, and k.
+    #[test]
+    fn query_batch_roundtrips_arbitrary_batches() {
+        let mut rng = Rng::seed_from_u64(0x5E21E);
+        for _ in 0..200 {
+            let n = rng.gen_index(64);
+            let queries = arbitrary_queries(&mut rng, n);
+            let k = rng.next_u32();
+            let wire = encode_query_batch(k, &queries);
+            // [u32 k][u64 n] header + 17 bytes (side tag + two ids) each
+            assert_eq!(wire.len(), 12 + n * 17);
+            let (got_k, got) = decode_query_batch(&wire).unwrap();
+            assert_eq!(got_k, k);
+            assert_eq!(got, queries);
+        }
+        // the empty batch is legal on the wire (servers answer it with an
+        // empty reply rather than erroring)
+        let wire = encode_query_batch(10, &[]);
+        let (k, got) = decode_query_batch(&wire).unwrap();
+        assert_eq!((k, got.len()), (10, 0));
+    }
+
+    /// Totality under byte flips: every outcome is Ok or Err — no panic,
+    /// no over-allocation — and an Ok must round-trip its re-encoding.
+    #[test]
+    fn query_decoder_is_total_under_byte_flips() {
+        let mut rng = Rng::seed_from_u64(0xFACADE);
+        let queries = arbitrary_queries(&mut rng, 23);
+        let wire = encode_query_batch(5, &queries);
+        for _ in 0..500 {
+            let mut w = wire.clone();
+            let i = rng.gen_index(w.len());
+            w[i] ^= (rng.next_u32() % 255 + 1) as u8;
+            if let Ok((k, got)) = decode_query_batch(&w) {
+                let re = encode_query_batch(k, &got);
+                assert_eq!(decode_query_batch(&re).unwrap(), (k, got));
+            }
+        }
+        // truncation at EVERY cut is a clean Err (the full buffer parses)
+        for cut in 0..wire.len() {
+            assert!(decode_query_batch(&wire[..cut]).is_err(), "cut at {cut}");
+        }
+        assert!(decode_query_batch(&wire).is_ok());
+    }
+
+    /// Hostile count prefixes are rejected before any allocation, and
+    /// malformed tails (bad side tag, trailing garbage) are caught.
+    #[test]
+    fn hostile_query_batches_are_rejected() {
+        // count over the hard cap
+        let mut wire = encode_query_batch(1, &[]);
+        wire[4..12].copy_from_slice(&((MAX_BATCH as u64) + 1).to_le_bytes());
+        assert!(decode_query_batch(&wire).is_err(), "over-cap count");
+        // count claiming more queries than bytes remain: must error
+        // without attempting the n*17-byte allocation
+        let mut wire = encode_query_batch(1, &[Query::tail(1, 2)]);
+        wire[4..12].copy_from_slice(&(u64::from(u32::MAX)).to_le_bytes());
+        assert!(decode_query_batch(&wire).is_err(), "count > remaining bytes");
+        // a side tag that is neither 0 nor 1
+        let mut wire = encode_query_batch(1, &[Query::tail(1, 2)]);
+        wire[12] = 7;
+        assert!(decode_query_batch(&wire).is_err(), "bad side tag");
+        // trailing bytes after the declared batch
+        let mut wire = encode_query_batch(1, &[Query::tail(1, 2)]);
+        wire.push(0);
+        assert!(decode_query_batch(&wire).is_err(), "trailing garbage");
+    }
+
+    /// Reply codec: round-trip, byte-flip totality, truncation at every
+    /// cut — ragged per-query result lengths included.
+    #[test]
+    fn reply_codec_is_total_and_roundtrips() {
+        let mut rng = Rng::seed_from_u64(0x2E91);
+        for _ in 0..100 {
+            let n = rng.gen_index(8);
+            let results: Vec<TopK> = (0..n)
+                .map(|_| {
+                    let k = rng.gen_index(12);
+                    TopK {
+                        ids: (0..k).map(|_| rng.next_u32() as u64).collect(),
+                        scores: (0..k).map(|_| rng.gen_f32()).collect(),
+                    }
+                })
+                .collect();
+            let wire = encode_reply(&results);
+            let got = decode_reply(&wire).unwrap();
+            assert_eq!(got, results);
+        }
+        let sample = encode_reply(&[
+            TopK { ids: vec![3, 1, 4], scores: vec![0.5, 0.25, 0.125] },
+            TopK { ids: vec![], scores: vec![] },
+        ]);
+        for _ in 0..500 {
+            let mut w = sample.clone();
+            let i = rng.gen_index(w.len());
+            w[i] ^= (rng.next_u32() % 255 + 1) as u8;
+            if let Ok(got) = decode_reply(&w) {
+                assert_eq!(decode_reply(&encode_reply(&got)).unwrap(), got);
+            }
+        }
+        for cut in 0..sample.len() {
+            assert!(decode_reply(&sample[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    /// Stream framing: a request/reply conversation over one stream, and
+    /// an opcode mismatch (a reply where a query was expected) errors
+    /// instead of misparsing.
+    #[test]
+    fn stream_helpers_frame_and_check_opcodes() {
+        let mut rng = Rng::seed_from_u64(0xC0FFEE);
+        let queries = arbitrary_queries(&mut rng, 9);
+        let results =
+            vec![TopK { ids: vec![1, 2], scores: vec![1.0, 0.5] }; 3];
+        let mut wire = Vec::new();
+        write_query_batch(&mut wire, 10, &queries).unwrap();
+        write_reply(&mut wire, &results).unwrap();
+        let mut cursor = Cursor::new(&wire);
+        let (k, got_q) = read_query_batch(&mut cursor).unwrap();
+        assert_eq!((k, got_q), (10, queries.clone()));
+        assert_eq!(read_reply(&mut cursor).unwrap(), results);
+        assert!(read_query_batch(&mut cursor).is_err(), "stream consumed");
+
+        // opcode mismatch both ways
+        let mut wire = Vec::new();
+        write_reply(&mut wire, &results).unwrap();
+        assert!(read_query_batch(&mut Cursor::new(&wire)).is_err(), "reply is not a query");
+        let mut wire = Vec::new();
+        write_query_batch(&mut wire, 1, &queries).unwrap();
+        // frame layout is [u32 len][opcode][payload]: byte 4 is the opcode
+        assert_eq!(wire[4], OP_SQUERY);
+        assert!(read_reply(&mut Cursor::new(&wire)).is_err(), "query is not a reply");
+    }
 }

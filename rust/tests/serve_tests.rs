@@ -1,0 +1,469 @@
+//! Serving subsystem gate (`serve::`): the offline/online parity harness
+//! plus checkpoint-rejection regressions and the hot-swap query storm.
+//!
+//! The core contract: a [`dglke::serve::Snapshot`] answering `(e, r, ?)` /
+//! `(?, r, e)` top-k queries over an exported checkpoint must produce
+//! **bit-identical** scores — and therefore identical ranks, with the
+//! offline tie-break (descending score, ascending id) — to what the
+//! offline evaluation pipeline computes from the live session state. The
+//! parity matrix covers all three storage backends x scalar/fused kernels
+//! x top-k depths {1, 10, vocab}.
+
+use dglke::api::{ParallelMode, RunSpec, Session};
+use dglke::eval::full_ranking;
+use dglke::models::step::StepShape;
+use dglke::models::{EvalScratch, KernelBackend, LossCfg, ModelKind, NativeModel};
+use dglke::runtime::BackendKind;
+use dglke::serve::{
+    CheckpointManifest, Query, ServeConfig, ServeHandle, ServeScratch, Snapshot, SnapshotOptions,
+    TopK, FORMAT_VERSION,
+};
+use dglke::store::{EmbeddingStore, StoreBackendKind, StoreConfig};
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dglke-serve-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Train a small deterministic session on the tiny dataset (200 entities,
+/// 8 relations): 1 worker, sync updates, so a given seed always produces
+/// the same embeddings.
+fn trained_session(storage: StoreConfig, seed: u64) -> Session {
+    let spec = RunSpec {
+        dataset: "tiny".into(),
+        model: ModelKind::TransEL2,
+        backend: BackendKind::Native,
+        mode: ParallelMode::Single { workers: 1, gpu: false },
+        batches: 30,
+        lr: 0.25,
+        log_every: 100,
+        async_update: false,
+        shape: Some(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 16 }),
+        storage,
+        seed,
+        ..Default::default()
+    };
+    let mut session = Session::from_spec(spec).unwrap();
+    session.train().unwrap();
+    session
+}
+
+/// Independent offline reference: gather every candidate row from the live
+/// session state, score with the *scalar* kernels (the reference path the
+/// fused kernels are parity-tested against), rank with
+/// `eval::full_ranking`, take the prefix. Shares no code with
+/// `Snapshot::query` beyond the model math itself.
+fn offline_topk(session: &Session, q: &Query, k: usize) -> TopK {
+    let state = session.state();
+    let dim = state.dim;
+    let n = state.entities.rows();
+    let native = NativeModel::new(session.spec().model, dim, LossCfg::default());
+    let mut e_row = vec![0f32; dim];
+    state.entities.read_row(q.e as usize, &mut e_row);
+    let mut r_row = vec![0f32; state.rel_dim];
+    state.relations.read_row(q.r as usize, &mut r_row);
+    let ids: Vec<u64> = (0..n as u64).collect();
+    let mut cand = vec![0f32; n * dim];
+    state.entities.gather(&ids, &mut cand);
+    let mut scores = vec![0f32; n];
+    let mut scratch = EvalScratch::default();
+    native.eval_scores_with(
+        q.side,
+        &e_row,
+        &r_row,
+        &cand,
+        &mut scores,
+        KernelBackend::Scalar,
+        &mut scratch,
+    );
+    let order = full_ranking(&scores);
+    let k = k.min(n);
+    TopK {
+        ids: order[..k].iter().map(|&i| i as u64).collect(),
+        scores: order[..k].iter().map(|&i| scores[i]).collect(),
+    }
+}
+
+fn bits(scores: &[f32]) -> Vec<u32> {
+    scores.iter().map(|s| s.to_bits()).collect()
+}
+
+fn sample_queries(n_entities: u64, n_relations: u64) -> Vec<Query> {
+    vec![
+        Query::tail(0, 0),
+        Query::head(0, 0),
+        Query::tail(n_entities - 1, n_relations - 1),
+        Query::head(n_entities / 2, n_relations / 2),
+        Query::tail(17, 3),
+        Query::head(42, 5),
+    ]
+}
+
+#[test]
+fn served_topk_matches_offline_ranks_across_backends_kernels_and_k() {
+    let storages = [
+        ("dense", StoreConfig { backend: StoreBackendKind::Dense, ..Default::default() }),
+        ("sharded", StoreConfig { backend: StoreBackendKind::Sharded, shards: 4, ..Default::default() }),
+        ("mmap", StoreConfig { backend: StoreBackendKind::Mmap, ..Default::default() }),
+    ];
+    for (tag, storage) in storages {
+        let session = trained_session(storage, 7);
+        let dir = tmp_dir(&format!("parity-{tag}"));
+        session.export_embeddings(&dir).unwrap();
+        let n = session.state().entities.rows();
+        let queries = sample_queries(n as u64, session.dataset().n_relations() as u64);
+        for kernels in [KernelBackend::Scalar, KernelBackend::Fused] {
+            let snap =
+                Snapshot::open_with(&dir, &SnapshotOptions { cache_mb: None, kernels }).unwrap();
+            let mut scratch = ServeScratch::default();
+            for k in [1usize, 10, n] {
+                for q in &queries {
+                    let served = snap.query(q, k, &mut scratch).unwrap();
+                    let offline = offline_topk(&session, q, k);
+                    assert_eq!(
+                        served.ids, offline.ids,
+                        "rank divergence: storage={tag} kernels={kernels:?} k={k} query={q:?}"
+                    );
+                    assert_eq!(
+                        bits(&served.scores),
+                        bits(&offline.scores),
+                        "score bits diverge: storage={tag} kernels={kernels:?} k={k} query={q:?}"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn cached_snapshot_preserves_parity() {
+    let session = trained_session(StoreConfig::default(), 7);
+    let dir = tmp_dir("parity-cached");
+    session.export_embeddings(&dir).unwrap();
+    let snap = Snapshot::open_with(
+        &dir,
+        &SnapshotOptions { cache_mb: Some(2.0), kernels: KernelBackend::Fused },
+    )
+    .unwrap();
+    let mut scratch = ServeScratch::default();
+    let queries = sample_queries(snap.n_entities() as u64, snap.n_relations() as u64);
+    // twice: cold pass fills the hot-row cache, warm pass serves from it
+    for pass in 0..2 {
+        for q in &queries {
+            let served = snap.query(q, 10, &mut scratch).unwrap();
+            let offline = offline_topk(&session, q, 10);
+            assert_eq!(served.ids, offline.ids, "pass {pass} query {q:?}");
+            assert_eq!(bits(&served.scores), bits(&offline.scores), "pass {pass}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn chunked_export_round_trips_and_serves_identically() {
+    let session = trained_session(StoreConfig::default(), 7);
+    let single = tmp_dir("chunked-single");
+    let chunked = tmp_dir("chunked-multi");
+    session.export_embeddings(&single).unwrap();
+    // 64-row chunks: entities (200 rows) split into 4 files
+    session.export_embeddings_chunked(&chunked, 64).unwrap();
+    assert!(chunked.join("entities.00003.f32").exists());
+    assert!(!chunked.join("checkpoint.json").exists(), "chunked exports are manifest-only");
+
+    let a = Snapshot::open(&single).unwrap();
+    let b = Snapshot::open(&chunked).unwrap();
+    let mut s1 = ServeScratch::default();
+    let mut s2 = ServeScratch::default();
+    for q in sample_queries(a.n_entities() as u64, a.n_relations() as u64) {
+        let ra = a.query(&q, 10, &mut s1).unwrap();
+        let rb = b.query(&q, 10, &mut s2).unwrap();
+        assert_eq!(ra.ids, rb.ids);
+        assert_eq!(bits(&ra.scores), bits(&rb.scores));
+    }
+
+    // a fresh session loads the chunked checkpoint back bit-for-bit
+    let mut fresh = trained_session(StoreConfig::default(), 999);
+    assert_ne!(fresh.state().entities.snapshot(), session.state().entities.snapshot());
+    fresh.load_checkpoint(&chunked).unwrap();
+    assert_eq!(fresh.state().entities.snapshot(), session.state().entities.snapshot());
+    assert_eq!(fresh.state().relations.snapshot(), session.state().relations.snapshot());
+
+    std::fs::remove_dir_all(&single).ok();
+    std::fs::remove_dir_all(&chunked).ok();
+}
+
+/// Regression: checkpoint loading used to trust whatever `checkpoint.json`
+/// said — no version field, no file-size validation — so a truncated or
+/// future-format checkpoint would stream garbage into the tables. Each
+/// rejection path below must fail *before* any table row is mutated.
+#[test]
+fn rejected_checkpoints_leave_state_untouched() {
+    let session = trained_session(StoreConfig::default(), 7);
+    let dir = tmp_dir("reject");
+    session.export_embeddings(&dir).unwrap();
+    let full_entities = std::fs::read(dir.join("entities.f32")).unwrap();
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+
+    let mut victim = trained_session(StoreConfig::default(), 999);
+    let before = victim.state().entities.snapshot();
+
+    // 1. truncated table file → rejected by both loaders, no mutation
+    std::fs::write(dir.join("entities.f32"), &full_entities[..full_entities.len() - 4]).unwrap();
+    let err = victim.load_checkpoint(&dir).unwrap_err();
+    assert!(format!("{err:?}").contains("bytes"), "{err:?}");
+    assert!(Snapshot::open(&dir).is_err());
+    assert_eq!(victim.state().entities.snapshot(), before, "no partial mutation");
+    std::fs::write(dir.join("entities.f32"), &full_entities).unwrap();
+
+    // 2. future manifest format version → rejected with the version message
+    // the Json writer renders compact: `"format_version":2`
+    let tampered = manifest_text.replace(
+        &format!("\"format_version\":{FORMAT_VERSION}"),
+        "\"format_version\":99",
+    );
+    assert_ne!(tampered, manifest_text, "replace must hit");
+    std::fs::write(dir.join("manifest.json"), &tampered).unwrap();
+    let err = victim.load_checkpoint(&dir).unwrap_err();
+    assert!(
+        format!("{err:?}").contains("unsupported checkpoint format version"),
+        "{err:?}"
+    );
+    assert!(Snapshot::open(&dir).is_err());
+    assert_eq!(victim.state().entities.snapshot(), before);
+
+    // 3. tampered vocab hash → rejected (ids would be silently remapped)
+    let tampered =
+        manifest_text.replace("\"entity_vocab_hash\":\"fnv1a:", "\"entity_vocab_hash\":\"fnv1a:f");
+    assert_ne!(tampered, manifest_text, "replace must hit");
+    std::fs::write(dir.join("manifest.json"), &tampered).unwrap();
+    let err = victim.load_checkpoint(&dir).unwrap_err();
+    assert!(format!("{err:?}").contains("vocabulary"), "{err:?}");
+    assert_eq!(victim.state().entities.snapshot(), before);
+    std::fs::write(dir.join("manifest.json"), &manifest_text).unwrap();
+
+    // 4. deleted chunk file → Snapshot::open and load both reject
+    std::fs::remove_file(dir.join("relations.f32")).unwrap();
+    assert!(victim.load_checkpoint(&dir).is_err());
+    assert!(Snapshot::open(&dir).is_err());
+    assert_eq!(victim.state().entities.snapshot(), before);
+    std::fs::write(dir.join("relations.f32"), std::fs::read(dir.join("entities.f32")).unwrap())
+        .unwrap();
+    // (restored with the wrong content/size on purpose: size check fires)
+    assert!(Snapshot::open(&dir).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression for the legacy (format-1, `checkpoint.json`-only) path: the
+/// version field is now required and validated, and file sizes are
+/// checked before mutation.
+#[test]
+fn legacy_checkpoint_version_and_size_validated() {
+    let session = trained_session(StoreConfig::default(), 7);
+    let dir = tmp_dir("legacy");
+    session.export_embeddings(&dir).unwrap();
+    // force the legacy path
+    std::fs::remove_file(dir.join("manifest.json")).unwrap();
+    let meta = std::fs::read_to_string(dir.join("checkpoint.json")).unwrap();
+
+    let mut victim = trained_session(StoreConfig::default(), 999);
+    let before = victim.state().entities.snapshot();
+
+    // the untampered legacy checkpoint still loads fine
+    victim.load_checkpoint(&dir).unwrap();
+    assert_eq!(victim.state().entities.snapshot(), session.state().entities.snapshot());
+
+    // stale/future version numbers are rejected
+    for bad in ["0", "2", "99"] {
+        let tampered = meta.replace("\"version\":1", &format!("\"version\":{bad}"));
+        assert_ne!(tampered, meta, "replace must hit");
+        std::fs::write(dir.join("checkpoint.json"), &tampered).unwrap();
+        let err = victim.load_checkpoint(&dir).unwrap_err();
+        assert!(format!("{err:?}").contains("format version"), "version {bad}: {err:?}");
+    }
+
+    // a checkpoint.json with no version field at all is rejected too
+    // (BTreeMap key order puts "version" last: `,"version":1}`)
+    let no_version = meta.replace(",\"version\":1", "");
+    assert_ne!(no_version, meta, "replace must hit");
+    std::fs::write(dir.join("checkpoint.json"), &no_version).unwrap();
+    let err = victim.load_checkpoint(&dir).unwrap_err();
+    assert!(format!("{err:?}").contains("format version"), "{err:?}");
+    std::fs::write(dir.join("checkpoint.json"), &meta).unwrap();
+
+    // truncated table rejected BEFORE either table is touched: truncate
+    // relations.f32 (loaded second) and verify entities were not mutated
+    let mut victim = trained_session(StoreConfig::default(), 999);
+    let rels = std::fs::read(dir.join("relations.f32")).unwrap();
+    std::fs::write(dir.join("relations.f32"), &rels[..rels.len() - 4]).unwrap();
+    let err = victim.load_checkpoint(&dir).unwrap_err();
+    assert!(format!("{err:?}").contains("truncated"), "{err:?}");
+    assert_eq!(victim.state().entities.snapshot(), before, "entities untouched");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_open_is_fully_validated_and_manifest_readable() {
+    let session = trained_session(StoreConfig::default(), 7);
+    let dir = tmp_dir("open");
+    session.export_embeddings(&dir).unwrap();
+    let m = CheckpointManifest::load(&dir).unwrap();
+    assert_eq!(m.format_version, FORMAT_VERSION);
+    assert_eq!(m.model, ModelKind::TransEL2);
+    assert_eq!((m.n_entities, m.n_relations, m.dim), (200, 8, 16));
+    m.validate().unwrap();
+    m.validate_files(&dir).unwrap();
+    // a directory without a manifest is not a servable checkpoint
+    let empty = tmp_dir("open-empty");
+    assert!(Snapshot::open(&empty).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&empty).ok();
+}
+
+#[test]
+fn serve_pool_matches_sequential_order_and_handles_edges() {
+    let session = trained_session(StoreConfig::default(), 7);
+    let dir = tmp_dir("pool");
+    session.export_embeddings(&dir).unwrap();
+
+    let reference = Snapshot::open(&dir).unwrap();
+    let n_e = reference.n_entities() as u64;
+    let n_r = reference.n_relations() as u64;
+    // 100 queries spread across ids and sides, fanned out as jobs of 7
+    // over 3 workers — results must come back in submission order
+    let queries: Vec<Query> = (0..100u64)
+        .map(|i| {
+            let (e, r) = (i * 13 % n_e, i * 5 % n_r);
+            if i % 2 == 0 {
+                Query::tail(e, r)
+            } else {
+                Query::head(e, r)
+            }
+        })
+        .collect();
+    let mut scratch = ServeScratch::default();
+    let expected = reference.query_batch(&queries, 10, &mut scratch).unwrap();
+
+    let served = Snapshot::open(&dir).unwrap();
+    let handle =
+        ServeHandle::start(served, &ServeConfig { threads: 3, batch: 7, topk: 10 });
+    let got = handle.submit(&queries, 10).unwrap();
+    assert_eq!(got.len(), expected.len());
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(g.ids, e.ids, "query {i} out of order or divergent");
+        assert_eq!(bits(&g.scores), bits(&e.scores), "query {i}");
+    }
+    assert_eq!(handle.served(), 100);
+    assert_eq!(handle.epoch(), 0, "no publishes happened");
+
+    // empty batch is a no-op
+    assert_eq!(handle.submit(&[], 10).unwrap().len(), 0);
+    // an out-of-range query surfaces as an error, not a panic or a hang
+    let err = handle.submit(&[Query::tail(n_e, 0)], 10).unwrap_err();
+    assert!(format!("{err:?}").contains("out of range"), "{err:?}");
+    // the pool still works after a failed job
+    assert_eq!(handle.submit(&queries[..5], 10).unwrap().len(), 5);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hot-swap under a query storm: workers pin one snapshot per job, so
+/// every answered batch must equal — in its entirety — either checkpoint
+/// A's answers or checkpoint B's answers. A torn mix (some queries
+/// answered from A, some from B, within one job) is the bug this test
+/// exists to catch; the loom model (`loom_tests.rs` contracts 9–10)
+/// checks the same property exhaustively on the latch itself.
+#[test]
+fn hot_swap_storm_never_serves_torn_answers() {
+    let session_a = trained_session(StoreConfig::default(), 7);
+    let session_b = trained_session(StoreConfig::default(), 8);
+    let dir_a = tmp_dir("swap-a");
+    let dir_b = tmp_dir("swap-b");
+    session_a.export_embeddings(&dir_a).unwrap();
+    session_b.export_embeddings(&dir_b).unwrap();
+
+    let probe = Snapshot::open(&dir_a).unwrap();
+    let n_e = probe.n_entities() as u64;
+    let n_r = probe.n_relations() as u64;
+    let queries = sample_queries(n_e, n_r);
+
+    let mut scratch = ServeScratch::default();
+    let expect_a = probe.query_batch(&queries, 10, &mut scratch).unwrap();
+    let expect_b = Snapshot::open(&dir_b)
+        .unwrap()
+        .query_batch(&queries, 10, &mut scratch)
+        .unwrap();
+    assert_ne!(
+        expect_a, expect_b,
+        "differently-seeded checkpoints must answer differently for the storm to mean anything"
+    );
+
+    // batch > queries.len() ⇒ each submit is exactly one job ⇒ per-job
+    // snapshot pinning makes the whole reply all-A or all-B
+    let cfg = ServeConfig { threads: 4, batch: 64, topk: 10 };
+    let handle = ServeHandle::start(Snapshot::open(&dir_a).unwrap(), &cfg);
+
+    std::thread::scope(|s| {
+        let publisher = s.spawn(|| {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+            for round in 0..20u64 {
+                // pace each swap against actual serving progress so every
+                // round overlaps live queries: 4 workers keep at most
+                // 4 jobs = 24 queries in flight, so a 50-query stride
+                // guarantees jobs dequeue on both sides of each publish
+                // (storm total is 4 x 50 x 6 = 1200 >= 20 x 50)
+                while handle.served() < (round + 1) * 50 {
+                    assert!(std::time::Instant::now() < deadline, "storm stalled");
+                    std::thread::yield_now();
+                }
+                let dir = if round % 2 == 0 { &dir_b } else { &dir_a };
+                let epoch = handle.publish(Snapshot::open(dir).unwrap());
+                assert_eq!(epoch, round + 1, "epochs count publishes");
+            }
+        });
+        let mut storms = Vec::new();
+        for _ in 0..4 {
+            storms.push(s.spawn(|| {
+                let (mut saw_a, mut saw_b) = (false, false);
+                for _ in 0..50 {
+                    let got = handle.submit(&queries, 10).unwrap();
+                    if got == expect_a {
+                        saw_a = true;
+                    } else if got == expect_b {
+                        saw_b = true;
+                    } else {
+                        panic!("torn answer: neither checkpoint A's nor B's reply");
+                    }
+                }
+                (saw_a, saw_b)
+            }));
+        }
+        publisher.join().unwrap();
+        let mut any_a = false;
+        let mut any_b = false;
+        for t in storms {
+            let (a, b) = t.join().unwrap();
+            any_a |= a;
+            any_b |= b;
+        }
+        // the storm overlapped the publishes: both answer sets were
+        // actually observed (20 alternating publishes across 200 submits)
+        assert!(any_a && any_b, "storm never overlapped a swap (saw_a={any_a} saw_b={any_b})");
+    });
+
+    assert_eq!(handle.epoch(), 20);
+    // after the storm the final snapshot (round 19 published dir_a) serves
+    let mut scratch = ServeScratch::default();
+    let final_ans = handle.snapshot().query_batch(&queries, 10, &mut scratch).unwrap();
+    assert_eq!(final_ans, expect_a);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}

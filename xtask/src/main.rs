@@ -262,7 +262,9 @@ fn check_unsafe(
 }
 
 fn unwrap_ban_applies(rel: &str) -> bool {
-    rel.starts_with("rust/src/kvstore/") || rel == "rust/src/train/prefetch.rs"
+    rel.starts_with("rust/src/kvstore/")
+        || rel.starts_with("rust/src/serve/")
+        || rel == "rust/src/train/prefetch.rs"
 }
 
 fn check_unwrap(file: &SourceFile, out: &mut Vec<String>) {
@@ -555,6 +557,10 @@ mod tests {
         assert_eq!(out.len(), 2, "{out:?}");
         out.clear();
         check_unwrap(&fixture("rust/src/train/prefetch.rs", body), &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        out.clear();
+        // the serving request loop is I/O-facing helper-thread code too
+        check_unwrap(&fixture("rust/src/serve/server.rs", body), &mut out);
         assert_eq!(out.len(), 2, "{out:?}");
         out.clear();
         // other modules are out of scope
