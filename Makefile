@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check lint loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels bench-serve clean
+.PHONY: build test fmt fmt-check lint analyze loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels bench-serve clean
 
 build:
 	$(CARGO) build --release
@@ -24,6 +24,13 @@ fmt-check:
 # relaxed-allowlist.toml.
 lint:
 	$(CARGO) run -p xtask -- lint
+
+# Syntax-aware static analysis (lexer + crate-local call graph):
+# lock-order/deadlock vs lock-order.toml, blocking-under-lock,
+# Release/Acquire pairing vs ordering-pairs.toml, and ledger-billing
+# completeness over the KV access sites. See docs/STATIC_ANALYSIS.md.
+analyze:
+	$(CARGO) run -p xtask -- analyze
 
 # Loom-style model checking: reruns rust/tests/loom_tests.rs with the
 # util::sync shim's seeded schedule perturbation (48 interleavings per
@@ -49,7 +56,7 @@ tsan:
 	    store:: train::sync kvstore:: util::
 
 # Tier-1 verification: what CI runs.
-check: build test fmt-check lint
+check: build test fmt-check lint analyze
 
 # AOT-compile the JAX/Pallas train+eval artifacts (writes
 # $(ARTIFACTS_DIR)/manifest.json + HLO text files). Requires jax.

@@ -151,6 +151,8 @@ impl KvCluster {
         let table = DenseStore::zeros(n_entities, dim);
         let mut buf = vec![0f32; dim];
         for s in 0..self.placement.n_servers() {
+            // lint:allow(ledger-billing) — shared-memory snapshot for
+            // eval/export after training; the ledger audits train traffic
             for (slot, &id) in self.placement.ent_ids_of_server[s].iter().enumerate() {
                 self.states[s].ents.read_row(slot, &mut buf);
                 table.set_row(id as usize, &buf);
@@ -164,6 +166,8 @@ impl KvCluster {
         let table = DenseStore::zeros(n_relations, rel_dim);
         let mut buf = vec![0f32; rel_dim];
         for s in 0..self.placement.n_servers() {
+            // lint:allow(ledger-billing) — shared-memory snapshot for
+            // eval/export after training; the ledger audits train traffic
             for (slot, &id) in self.placement.rel_ids_of_server[s].iter().enumerate() {
                 self.states[s].rels.read_row(slot, &mut buf);
                 table.set_row(id as usize, &buf);

@@ -26,7 +26,7 @@ use dglke::models::ModelKind;
 use dglke::partition::{GraphPartition, MetisConfig};
 use dglke::runtime::BackendKind;
 
-const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|serve|repro> [--flags]
+const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|serve|export|repro> [--flags]
   common: --dataset fb15k-syn|wn18-syn|freebase-syn[:scale]|tiny|<tsv-dir>
           --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
           --backend native|xla (default native) --tag default|tiny --seed N
@@ -55,6 +55,9 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --kernels scalar|fused --cache-mb F (snapshot hot-row cache)
           --queries N (seeded demo queries to answer, default 256)
           --report out.json (latency/QPS summary)
+  export: --checkpoint DIR (required) --tsv (entities.tsv/relations.tsv,
+          lossless: f32 Display round-trips the stored bits)
+          --out DIR (default: the checkpoint dir)
   repro:  --exp table4..table9|all --scale F --out DIR";
 
 fn main() -> Result<()> {
@@ -68,6 +71,7 @@ fn main() -> Result<()> {
         "gen-data" => cmd_gen_data(args),
         "eval-only" => cmd_eval_only(args),
         "serve" => cmd_serve(args),
+        "export" => cmd_export(args),
         "repro" => cmd_repro(args),
         _ => {
             if args.flag("help") || cmd.is_empty() {
@@ -436,6 +440,35 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         println!("[wrote {path}]");
     }
     handle.shutdown();
+    Ok(())
+}
+
+/// `dglke export --checkpoint DIR --tsv [--out DIR]`: convert a
+/// format-2 checkpoint to TSV. `serve::export_tsv` is the library API;
+/// this command is its operational wrapper.
+fn cmd_export(mut args: Args) -> Result<()> {
+    use dglke::serve::{export_tsv, Snapshot};
+
+    let ckpt = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("export requires --checkpoint DIR\n{USAGE}"))?;
+    let tsv = args.flag("tsv");
+    let out = args.get("out").unwrap_or_else(|| ckpt.clone());
+    args.finish()?;
+    if !tsv {
+        bail!("export: no format selected; pass --tsv\n{USAGE}");
+    }
+    let snapshot = Snapshot::open(std::path::Path::new(&ckpt))?;
+    println!(
+        "exporting {} checkpoint {} ({} entities x dim {}, {} relations)",
+        snapshot.manifest().model.name(),
+        ckpt,
+        snapshot.n_entities(),
+        snapshot.dim(),
+        snapshot.n_relations()
+    );
+    let (e_path, r_path) = export_tsv(&snapshot, std::path::Path::new(&out))?;
+    println!("[wrote {} and {}]", e_path.display(), r_path.display());
     Ok(())
 }
 

@@ -1,0 +1,174 @@
+//! TSV export from a format-2 checkpoint (`dglke export --tsv`).
+//!
+//! Writes `entities.tsv` / `relations.tsv`, one row per embedding:
+//! the row id, then `dim` tab-separated f32 values. Row ids are the
+//! canonical dense ids the trainer uses (the vocab stores only content
+//! hashes, not the original strings — `docs/SERVING.md`). Values are
+//! printed with Rust's `f32` `Display`, which is shortest-round-trip:
+//! parsing the text back with `str::parse::<f32>` reproduces the stored
+//! bits exactly, so the TSV is a lossless interchange format.
+
+use super::snapshot::Snapshot;
+use crate::store::EmbeddingStore;
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Export both tables of an opened snapshot as TSV into `out_dir`
+/// (created if missing). Returns the two file paths
+/// (`entities.tsv`, `relations.tsv`).
+pub fn export_tsv(snap: &Snapshot, out_dir: &Path) -> Result<(PathBuf, PathBuf)> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let ents = out_dir.join("entities.tsv");
+    let rels = out_dir.join("relations.tsv");
+    write_table_tsv(snap.entities(), &ents)?;
+    write_table_tsv(snap.relations(), &rels)?;
+    Ok((ents, rels))
+}
+
+/// Stream one table: `id\tv0\tv1...\n` per row, buffered writes, one
+/// scratch row — no table-sized allocation.
+fn write_table_tsv(table: &Arc<dyn EmbeddingStore>, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let dim = table.dim();
+    let mut row = vec![0f32; dim];
+    for i in 0..table.rows() {
+        // lint:allow(ledger-billing) — offline export streams the table
+        // once after training; the ledgers audit train/serve traffic
+        table.read_row(i, &mut row);
+        write!(w, "{i}")?;
+        for v in &row {
+            write!(w, "\t{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelKind;
+    use crate::serve::manifest::{CheckpointManifest, ChunkInfo, TableInfo, FORMAT_VERSION};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("dglke-export-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_chunk(path: &Path, vals: &[f32]) {
+        let mut bytes = (vals.len() as u64).to_le_bytes().to_vec();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    /// 4 entities x dim 3 split across two chunks, 2 relations x dim 3;
+    /// values chosen to stress Display round-trip: subnormals, repeating
+    /// fractions, large magnitudes, negative zero.
+    fn write_fixture(dir: &Path) -> CheckpointManifest {
+        let e: Vec<f32> = vec![
+            0.1,
+            1.0 / 3.0,
+            -2.5e10,
+            f32::MIN_POSITIVE,
+            1.0e-40, // subnormal
+            -0.0,
+            123456.78,
+            core::f32::consts::PI,
+            f32::MAX,
+            -1.0e-7,
+            2.0f32.powi(-24),
+            9.999999,
+        ];
+        write_chunk(&dir.join("entities.00000.f32"), &e[..9]);
+        write_chunk(&dir.join("entities.00001.f32"), &e[9..]);
+        write_chunk(&dir.join("relations.f32"), &[7.25, -0.333333343, 1e-5, 42.0, 0.0, -3.5]);
+        let m = CheckpointManifest {
+            format_version: FORMAT_VERSION,
+            model: ModelKind::TransEL2,
+            dataset: "fixture".to_string(),
+            dim: 3,
+            rel_dim: 3,
+            n_entities: 4,
+            n_relations: 2,
+            seed: 0,
+            entity_vocab_hash: "fnv1a:0000000000000000".to_string(),
+            relation_vocab_hash: "fnv1a:0000000000000000".to_string(),
+            entities: TableInfo {
+                rows: 4,
+                dim: 3,
+                chunks: vec![
+                    ChunkInfo { file: "entities.00000.f32".to_string(), rows: 3 },
+                    ChunkInfo { file: "entities.00001.f32".to_string(), rows: 1 },
+                ],
+            },
+            relations: TableInfo::single("relations.f32", 2, 3),
+        };
+        m.save(dir).unwrap();
+        m
+    }
+
+    fn parse_tsv(path: &Path) -> Vec<(usize, Vec<f32>)> {
+        std::fs::read_to_string(path)
+            .unwrap()
+            .lines()
+            .map(|line| {
+                let mut cols = line.split('\t');
+                let id: usize = cols.next().unwrap().parse().unwrap();
+                (id, cols.map(|c| c.parse::<f32>().unwrap()).collect())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tsv_round_trips_bit_exactly() {
+        let dir = tmp_dir("roundtrip");
+        write_fixture(&dir);
+        let snap = Snapshot::open(&dir).unwrap();
+        let out = dir.join("tsv");
+        let (e_path, r_path) = export_tsv(&snap, &out).unwrap();
+
+        for (path, table) in
+            [(&e_path, snap.entities().clone()), (&r_path, snap.relations().clone())]
+        {
+            let rows = parse_tsv(path);
+            assert_eq!(rows.len(), table.rows());
+            for (i, (id, vals)) in rows.iter().enumerate() {
+                assert_eq!(*id, i, "ids are dense row indices in order");
+                let want = table.row_vec(i);
+                assert_eq!(vals.len(), want.len());
+                for (a, b) in vals.iter().zip(&want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "row {i}: parsed {a:?} != stored {b:?} (Display must round-trip)"
+                    );
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn export_creates_out_dir_and_overwrites() {
+        let dir = tmp_dir("overwrite");
+        write_fixture(&dir);
+        let snap = Snapshot::open(&dir).unwrap();
+        let out = dir.join("deep").join("nested");
+        export_tsv(&snap, &out).unwrap();
+        // second export overwrites in place
+        let (e_path, _) = export_tsv(&snap, &out).unwrap();
+        assert_eq!(parse_tsv(&e_path).len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -347,6 +347,8 @@ pub fn read_chunk_into(
         let n_values = take * dim;
         let bytes = crate::util::bytes::f32_as_bytes_mut(&mut buf[..n_values]);
         rd.read_exact(bytes).with_context(|| format!("decoding {}", path.display()))?;
+        // lint:allow(ledger-billing) — one-time checkpoint decode at
+        // load; the ledgers audit training/serving traffic, not startup
         table.set_rows(first_row + row, &buf[..n_values]);
         row += take;
     }

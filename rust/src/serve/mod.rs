@@ -17,15 +17,20 @@
 //! [`protocol`] frames query batches and replies for the wire, total
 //! over hostile input.
 //!
+//! [`export`] converts a checkpoint to TSV (`dglke export --tsv`) for
+//! downstream tools; the text form round-trips the stored f32 bits.
+//!
 //! See `docs/SERVING.md` for the checkpoint format and operational
 //! guide; `dglke serve --checkpoint DIR` is the CLI entry point.
 
+pub mod export;
 pub mod manifest;
 pub mod protocol;
 pub mod server;
 pub mod snapshot;
 pub mod swap;
 
+pub use export::export_tsv;
 pub use manifest::{vocab_hash, CheckpointManifest, ChunkInfo, TableInfo, FORMAT_VERSION};
 pub use server::{ServeConfig, ServeHandle};
 pub use snapshot::{Query, ServeScratch, Snapshot, SnapshotOptions, TopK};

@@ -78,6 +78,10 @@ impl ServeHandle {
                                 Ok(g) => g,
                                 Err(poisoned) => poisoned.into_inner(),
                             };
+                            // lint:allow(blocking-under-lock) — the queue
+                            // mutex exists only to share this Receiver;
+                            // blocking in recv IS the idle state, and the
+                            // guard is dropped before the job runs
                             guard.recv()
                         };
                         let job = match job {

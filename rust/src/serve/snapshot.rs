@@ -177,6 +177,8 @@ impl Snapshot {
         let dim = self.native.dim;
         scratch.e_row.clear();
         scratch.e_row.resize(dim, 0.0);
+        // lint:allow(ledger-billing) — read-only serving path; the byte
+        // ledgers audit training traffic, queries are not billed
         self.entities.read_row(q.e as usize, &mut scratch.e_row);
         scratch.r_row.clear();
         scratch.r_row.resize(self.relations.dim(), 0.0);
@@ -249,6 +251,8 @@ impl Snapshot {
                 scratch.ids.extend((start as u64)..(end as u64));
                 scratch.cand.clear();
                 scratch.cand.resize((end - start) * dim, 0.0);
+                // lint:allow(ledger-billing) — read-only serving path;
+                // candidate gathers are query work, not billed traffic
                 self.entities.gather(&scratch.ids, &mut scratch.cand);
                 self.native.eval_scores_with(
                     side,
@@ -321,6 +325,8 @@ impl EmbeddingStore for ChunkedTable {
     fn read_row(&self, i: usize, out: &mut [f32]) {
         debug_assert!(i < self.rows);
         let c = self.starts.partition_point(|&s| s <= i) - 1;
+        // lint:allow(ledger-billing) — chunk indirection inside the
+        // read-only snapshot table; serving reads are not billed
         self.chunks[c].read_row(i - self.starts[c], out);
     }
 

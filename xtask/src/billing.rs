@@ -1,0 +1,175 @@
+//! Ledger-billing completeness pass.
+//!
+//! The byte-provenance reports (NetLedger / TransferLedger, docs/
+//! DISTRIBUTED.md) are only honest if every embedding-table access on a
+//! billed path actually reaches a billing wrapper. This pass enumerates
+//! `read_row/gather/set_row/update_row/set_rows/pull_all` call sites —
+//! plus `.pull(`/`.push(` whose first argument is a `TableId` (the KV
+//! client API; bare `Vec::push` is not an access) — inside `train/`,
+//! `dist.rs`, `kvstore/`, and `serve/`, and requires each to be one of:
+//!
+//! * **callee-billed** — every crate-local def of the called method is
+//!   billing-reachable (e.g. `KvClient::pull` bills internally, so any
+//!   `.pull(TableId::..)` call is covered);
+//! * **context-billed** — the enclosing fn touches a ledger itself, is
+//!   (transitively) called by one that does, or (transitively) calls
+//!   into one (the `run_sequential` -> `bill_gather` shape);
+//! * **allowed** — `lint:allow(ledger-billing)` with a one-line reason
+//!   (snapshot serving and checkpoint load are deliberately unbilled).
+//!
+//! The reachability is the conservative crate-local call graph — an
+//! unresolved call contributes nothing, so a genuinely new unbilled
+//! path shows up as a violation rather than vanishing into ambiguity.
+
+use crate::callgraph::{CallGraph, FnRef};
+use crate::lexer::{FileLex, Kind};
+use std::collections::BTreeSet;
+
+pub const BILLING: &str = "ledger-billing";
+
+/// Methods that move embedding bytes whenever they appear in scope.
+const ACCESS_ALWAYS: &[&str] =
+    &["read_row", "gather", "set_row", "update_row", "set_rows", "pull_all"];
+/// Methods that move bytes only as the KV client API (first arg TableId).
+const ACCESS_TABLEID: &[&str] = &["pull", "push"];
+/// Identifiers whose presence marks a fn as billing-aware.
+const BILL_MARKS: &[&str] =
+    &["bill_gather", "bytes_moved", "NetLedger", "TransferLedger", "ledger"];
+
+fn in_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/train/")
+        || rel.starts_with("rust/src/kvstore/")
+        || rel.starts_with("rust/src/serve/")
+        || rel == "rust/src/dist.rs"
+}
+
+pub fn check(files: &[FileLex], g: &CallGraph, out: &mut Vec<String>) {
+    // fns whose body touches a ledger directly
+    let mut direct: BTreeSet<FnRef> = BTreeSet::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, d) in f.fns.iter().enumerate() {
+            let body = &f.toks[d.body_start..d.end.min(f.toks.len())];
+            if body.iter().any(|t| t.kind == Kind::Id && BILL_MARKS.contains(&t.text.as_str())) {
+                direct.insert((fi, di));
+            }
+        }
+    }
+    // billing-reachable: bills directly, calls into billing (the wrapper
+    // shape), or is called from billing (the helper shape)
+    let closed = g.callers_closure(&direct);
+    let desc = g.descendants(&direct);
+
+    for (fi, f) in files.iter().enumerate() {
+        if !in_scope(&f.rel) {
+            continue;
+        }
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            if !toks[i].is(".")
+                || i + 2 >= toks.len()
+                || toks[i + 1].kind != Kind::Id
+                || !toks[i + 2].is("(")
+            {
+                continue;
+            }
+            let name = toks[i + 1].text.as_str();
+            let is_access = ACCESS_ALWAYS.contains(&name)
+                || (ACCESS_TABLEID.contains(&name)
+                    && toks.get(i + 3).is_some_and(|t| t.is_id("TableId")));
+            if !is_access {
+                continue;
+            }
+            let line = toks[i].line;
+            if f.has_allow(line, BILLING) {
+                continue;
+            }
+            // callee-billed: every crate def of this method bills
+            let callee_ok = g
+                .defs
+                .get(name)
+                .is_some_and(|defs| !defs.is_empty() && defs.iter().all(|r| closed.contains(r)));
+            // context-billed: the enclosing fn is billing-reachable
+            let ctx_ok = f.enclosing_fn(i).is_some_and(|d| {
+                let key = (fi, f.fns.iter().position(|x| std::ptr::eq(x, d)).unwrap());
+                direct.contains(&key) || closed.contains(&key) || desc.contains(&key)
+            });
+            if !callee_ok && !ctx_ok {
+                out.push(format!(
+                    "{}:{line}: [{BILLING}] `.{name}(` is not reachable from a billing wrapper \
+                     (bill_gather / bytes_moved / NetLedger) — bill the bytes it moves, or \
+                     lint:allow(ledger-billing) with a one-line reason",
+                    f.rel
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(srcs: &[(&str, &str)]) -> Vec<String> {
+        let files: Vec<FileLex> =
+            srcs.iter().map(|(rel, s)| FileLex::from_source(rel, s)).collect();
+        let g = CallGraph::build(&files);
+        let mut out = Vec::new();
+        check(&files, &g, &mut out);
+        out
+    }
+
+    #[test]
+    fn unbilled_gather_fires() {
+        let src = "fn rogue(store: &S, ids: &[u64], buf: &mut [f32]) { store.gather(ids, buf); }";
+        let out = run(&[("rust/src/train/rogue.rs", src)]);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("ledger-billing") && out[0].contains(".gather("), "{out:?}");
+    }
+
+    #[test]
+    fn billing_fn_and_its_helpers_are_covered() {
+        // the run_sequential shape: gather + bill_gather in one fn, and
+        // a helper the billing fn calls is covered transitively
+        let src = "fn run(store: &S, ids: &[u64], buf: &mut [f32], ctx: &Ctx) {\n\
+                     store.gather(ids, buf);\n\
+                     ctx.bill_gather(ids.len());\n\
+                     helper(store, ids, buf);\n\
+                   }\n\
+                   fn helper(store: &S, ids: &[u64], buf: &mut [f32]) { store.gather(ids, buf); }";
+        let out = run(&[("rust/src/train/ok.rs", src)]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn callee_that_bills_covers_its_callers() {
+        // KvClient::pull bills internally; `.pull(TableId::..)` anywhere
+        // in scope is therefore covered even in a non-billing fn
+        let kv = "impl KvClient { pub fn pull(&self, t: TableId, ids: &[u64], buf: &mut [f32]) {\n\
+                    self.ledger.add(ids.len());\n\
+                  } }";
+        let user = "fn plain(c: &KvClient, ids: &[u64], buf: &mut [f32]) {\n\
+                      c.pull(TableId::Entities, ids, buf);\n\
+                    }";
+        let out = run(&[("rust/src/kvstore/client.rs", kv), ("rust/src/dist.rs", user)]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn vec_push_is_not_a_kv_access() {
+        let src = "fn collect(v: &mut Vec<u64>) { v.push(1); }";
+        let out = run(&[("rust/src/train/x.rs", src)]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored_and_allow_escapes() {
+        let src = "fn free(store: &S, ids: &[u64], buf: &mut [f32]) { store.gather(ids, buf); }";
+        let out = run(&[("rust/src/eval/x.rs", src)]);
+        assert!(out.is_empty(), "{out:?}");
+        let allowed = "fn free(store: &S, ids: &[u64], buf: &mut [f32]) {\n\
+                       // lint:allow(ledger-billing) — read-only serving, no training ledger\n\
+                       store.gather(ids, buf); }";
+        let out = run(&[("rust/src/serve/x.rs", allowed)]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

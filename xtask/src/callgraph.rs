@@ -1,0 +1,256 @@
+//! Crate-local call graph over the lexed token streams.
+//!
+//! Resolution is deliberately conservative — a wrong edge in the
+//! lock-order pass is a build-breaking false positive, so a call is only
+//! resolved when the target is unambiguous:
+//!
+//! * `self.name(..)`  -> defs named `name` in the same file;
+//! * `Type::name(..)` -> defs named `name` in an `impl Type`, falling
+//!   back to a crate-wide unique def;
+//! * bare `name(..)`  -> same-file defs, else a crate-wide unique def
+//!   with a non-generic name;
+//! * `expr.name(..)`  -> a crate-wide unique def, and only when `name`
+//!   is not std/container vocabulary (`len`, `push`, `read`, ...) — a
+//!   "unique" crate def of `len` says nothing about `vec.len()`.
+//!
+//! Unresolved calls simply contribute no edges; the passes that consume
+//! the graph document this best-effort propagation.
+
+use crate::lexer::{is_keyword, FileLex, Kind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Method names too generic to resolve by crate-wide uniqueness.
+const COMMON_METHODS: &[&str] = &[
+    "new", "len", "is_empty", "push", "pop", "insert", "remove", "get", "clear", "drain", "iter",
+    "next", "read", "write", "lock", "flush", "join", "clone", "drop", "open", "create", "send",
+    "recv", "close", "start", "run", "load", "store", "finish", "wait", "contains", "set", "fail",
+    "reset", "init", "build", "default",
+];
+
+/// (file index, fn index) — a function definition in the crate.
+pub type FnRef = (usize, usize);
+
+pub struct CallGraph {
+    /// fn name -> every def with that name
+    pub defs: BTreeMap<String, Vec<FnRef>>,
+    /// resolved call edges per fn
+    pub calls: BTreeMap<FnRef, BTreeSet<FnRef>>,
+}
+
+impl CallGraph {
+    pub fn build(files: &[FileLex]) -> CallGraph {
+        let mut defs: BTreeMap<String, Vec<FnRef>> = BTreeMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (di, d) in f.fns.iter().enumerate() {
+                defs.entry(d.name.clone()).or_default().push((fi, di));
+            }
+        }
+        let mut g = CallGraph { defs, calls: BTreeMap::new() };
+        for (fi, f) in files.iter().enumerate() {
+            for (di, d) in f.fns.iter().enumerate() {
+                let mut out = BTreeSet::new();
+                let toks = &f.toks;
+                for i in d.body_start..d.end.min(toks.len()) {
+                    if toks[i].kind != Kind::Id
+                        || is_keyword(&toks[i].text)
+                        || i + 1 >= toks.len()
+                        || !toks[i + 1].is("(")
+                    {
+                        continue;
+                    }
+                    out.extend(g.resolve(files, fi, toks, i));
+                }
+                out.remove(&(fi, di)); // self-recursion adds nothing
+                g.calls.insert((fi, di), out);
+            }
+        }
+        g
+    }
+
+    /// Resolve the call whose name ident is at token `i` (followed by `(`).
+    pub fn resolve(
+        &self,
+        files: &[FileLex],
+        fi: usize,
+        toks: &[crate::lexer::Tok],
+        i: usize,
+    ) -> Vec<FnRef> {
+        let name = &toks[i].text;
+        let Some(cands) = self.defs.get(name) else {
+            return Vec::new();
+        };
+        let prev = if i >= 1 { toks[i - 1].text.as_str() } else { "" };
+        let prev2 = if i >= 2 { toks[i - 2].text.as_str() } else { "" };
+        if prev == "." {
+            // `self.name(` — receiver is plain `self`, not `x.self_field.`
+            let plain_self = prev2 == "self" && (i < 3 || !toks[i - 3].is("."));
+            if plain_self {
+                return cands.iter().copied().filter(|&(cf, _)| cf == fi).collect();
+            }
+            if COMMON_METHODS.contains(&name.as_str()) {
+                return Vec::new();
+            }
+            return if cands.len() == 1 { cands.clone() } else { Vec::new() };
+        }
+        if prev == ":" && prev2 == ":" {
+            let ty = if i >= 3 { toks[i - 3].text.as_str() } else { "" };
+            let by_ty: Vec<FnRef> = cands
+                .iter()
+                .copied()
+                .filter(|&(cf, cd)| files[cf].fns[cd].self_type.as_deref() == Some(ty))
+                .collect();
+            if !by_ty.is_empty() {
+                return by_ty;
+            }
+            return if cands.len() == 1 { cands.clone() } else { Vec::new() };
+        }
+        let same: Vec<FnRef> = cands.iter().copied().filter(|&(cf, _)| cf == fi).collect();
+        if !same.is_empty() {
+            return same;
+        }
+        if COMMON_METHODS.contains(&name.as_str()) {
+            return Vec::new();
+        }
+        if cands.len() == 1 { cands.clone() } else { Vec::new() }
+    }
+
+    /// Propagate per-fn facts to a transitive closure over call edges:
+    /// start from `seed(fn)` and union callees' sets until fixpoint.
+    pub fn propagate(
+        &self,
+        mut sets: BTreeMap<FnRef, BTreeSet<String>>,
+    ) -> BTreeMap<FnRef, BTreeSet<String>> {
+        loop {
+            let mut changed = false;
+            let keys: Vec<FnRef> = sets.keys().copied().collect();
+            for k in keys {
+                let mut add = BTreeSet::new();
+                for callee in self.calls.get(&k).into_iter().flatten() {
+                    if let Some(s) = sets.get(callee) {
+                        add.extend(s.iter().cloned());
+                    }
+                }
+                let cur = sets.entry(k).or_default();
+                let before = cur.len();
+                cur.extend(add);
+                changed |= cur.len() != before;
+            }
+            if !changed {
+                return sets;
+            }
+        }
+    }
+
+    /// Every fn transitively *called by* any fn in `roots`.
+    pub fn descendants(&self, roots: &BTreeSet<FnRef>) -> BTreeSet<FnRef> {
+        let mut seen = BTreeSet::new();
+        let mut work: Vec<FnRef> = roots.iter().copied().collect();
+        while let Some(k) = work.pop() {
+            for &c in self.calls.get(&k).into_iter().flatten() {
+                if seen.insert(c) {
+                    work.push(c);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Fns from which some fn in `targets` is reachable *downward* —
+    /// i.e. `targets` plus every fn that (transitively) calls into one.
+    pub fn callers_closure(&self, targets: &BTreeSet<FnRef>) -> BTreeSet<FnRef> {
+        let mut closed = targets.clone();
+        loop {
+            let mut changed = false;
+            for (k, callees) in &self.calls {
+                if !closed.contains(k) && callees.iter().any(|c| closed.contains(c)) {
+                    closed.insert(*k);
+                    changed = true;
+                }
+            }
+            if !changed {
+                return closed;
+            }
+        }
+    }
+}
+
+/// True when the fn's signature mentions a `*Guard` type: callers of
+/// such a helper hold a live guard (the `lock_state` / `lock_current`
+/// pattern); calls to any other lock-acquiring fn release before
+/// returning.
+pub fn is_guard_returning(f: &FileLex, d: &crate::lexer::FnDef) -> bool {
+    f.toks[d.start..d.body_start]
+        .iter()
+        .any(|t| t.kind == Kind::Id && t.text.contains("Guard"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::FileLex;
+
+    fn lexed(srcs: &[(&str, &str)]) -> Vec<FileLex> {
+        srcs.iter().map(|(rel, s)| FileLex::from_source(rel, s)).collect()
+    }
+
+    #[test]
+    fn resolves_self_path_and_unique_calls() {
+        let files = lexed(&[
+            (
+                "rust/src/a.rs",
+                "impl A { fn top(&self) { self.helper(); B::other(); distinctive(1); } \
+                 fn helper(&self) {} }",
+            ),
+            ("rust/src/b.rs", "impl B { fn other() {} }\nfn distinctive(x: u8) {}"),
+        ]);
+        let g = CallGraph::build(&files);
+        let top = (0usize, 0usize);
+        let callees = &g.calls[&top];
+        assert!(callees.contains(&(0, 1)), "self.helper -> same-file def");
+        assert!(callees.contains(&(1, 0)), "B::other -> impl B def");
+        assert!(callees.contains(&(1, 1)), "bare unique cross-file call");
+    }
+
+    #[test]
+    fn generic_method_names_do_not_resolve_by_uniqueness() {
+        // `win.len()` must NOT resolve to the crate's only `len` def —
+        // the receiver is almost always a std container.
+        let files = lexed(&[
+            ("rust/src/a.rs", "fn user(v: &[u8], w: &W) { v.len(); w.ambiguous(); }"),
+            ("rust/src/w.rs", "impl W { fn len(&self) {} fn ambiguous(&self) {} }"),
+            ("rust/src/x.rs", "impl X { fn ambiguous(&self) {} }"),
+        ]);
+        let g = CallGraph::build(&files);
+        let callees = &g.calls[&(0, 0)];
+        assert!(!callees.contains(&(1, 0)), "len is std vocabulary");
+        assert!(!callees.contains(&(1, 1)), "two `ambiguous` defs: unresolved");
+        assert!(!callees.contains(&(2, 0)));
+    }
+
+    #[test]
+    fn propagation_reaches_fixpoint_through_chains() {
+        let files = lexed(&[(
+            "rust/src/a.rs",
+            "fn leaf() {}\nfn mid() { leaf(); }\nfn top() { mid(); }",
+        )]);
+        let g = CallGraph::build(&files);
+        let mut seed: BTreeMap<FnRef, BTreeSet<String>> = BTreeMap::new();
+        for k in g.calls.keys() {
+            seed.insert(*k, BTreeSet::new());
+        }
+        seed.get_mut(&(0, 0)).unwrap().insert("fact".to_string());
+        let out = g.propagate(seed);
+        assert!(out[&(0, 2)].contains("fact"), "top inherits leaf's fact via mid");
+    }
+
+    #[test]
+    fn guard_returning_detection() {
+        let files = lexed(&[(
+            "rust/src/a.rs",
+            "impl A { fn lock_state(&self) -> MutexGuard<'_, u8> { self.m.lock() } \
+             fn plain(&self) -> u8 { 0 } }",
+        )]);
+        assert!(is_guard_returning(&files[0], &files[0].fns[0]));
+        assert!(!is_guard_returning(&files[0], &files[0].fns[1]));
+    }
+}

@@ -1,0 +1,329 @@
+//! Minimal TOML-subset parsers for the four checked-in manifests
+//! (`unsafe-budget.toml`, `relaxed-allowlist.toml`, `lock-order.toml`,
+//! `ordering-pairs.toml`). No dependencies; the supported grammar is
+//! exactly what the manifests use: comments, `[section]`, `[[array]]`
+//! tables, and `key = <int | "string" | ["a", "b"]>` (string arrays may
+//! span lines).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(usize),
+    Str(String),
+    List(Vec<String>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// header as written, e.g. `files`, `class`, `pair.applied-stamp`
+    pub name: String,
+    /// true for `[[name]]` array-of-tables entries
+    pub is_array: bool,
+    pub entries: Vec<(String, Value)>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn get_str(&self, key: &str, origin: &str) -> Result<String, String> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s.clone()),
+            _ => Err(format!("{origin}: [{}] missing string key `{key}`", self.name)),
+        }
+    }
+
+    pub fn get_list(&self, key: &str, origin: &str) -> Result<Vec<String>, String> {
+        match self.get(key) {
+            Some(Value::List(v)) => Ok(v.clone()),
+            _ => Err(format!("{origin}: [{}] missing list key `{key}`", self.name)),
+        }
+    }
+}
+
+fn unquote(s: &str, origin: &str, ln: usize) -> Result<String, String> {
+    let s = s.trim();
+    if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        Ok(s[1..s.len() - 1].to_string())
+    } else {
+        Err(format!("{origin}:{ln}: expected a double-quoted string, got `{s}`"))
+    }
+}
+
+/// Strip a trailing `# comment` that is outside any string literal.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse the manifest into a flat list of tables in file order.
+pub fn parse(text: &str, origin: &str) -> Result<Vec<Table>, String> {
+    let mut tables: Vec<Table> = Vec::new();
+    let mut lines = text.lines().enumerate().peekable();
+    while let Some((idx, raw)) = lines.next() {
+        let ln = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix("[[") {
+            let name = header
+                .strip_suffix("]]")
+                .ok_or_else(|| format!("{origin}:{ln}: malformed [[table]] header"))?;
+            tables.push(Table {
+                name: name.trim().to_string(),
+                is_array: true,
+                entries: Vec::new(),
+            });
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let name = header
+                .strip_suffix(']')
+                .ok_or_else(|| format!("{origin}:{ln}: malformed [table] header"))?;
+            tables.push(Table {
+                name: name.trim().to_string(),
+                is_array: false,
+                entries: Vec::new(),
+            });
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("{origin}:{ln}: expected `key = value`"))?;
+        let key = {
+            let k = key.trim();
+            if k.starts_with('"') {
+                unquote(k, origin, ln)?
+            } else {
+                k.to_string()
+            }
+        };
+        let mut val = val.trim().to_string();
+        // multi-line arrays: consume until the closing `]`
+        if val.starts_with('[') && !val.ends_with(']') {
+            for (_, cont) in lines.by_ref() {
+                let cont = strip_comment(cont).trim();
+                val.push(' ');
+                val.push_str(cont);
+                if cont.ends_with(']') {
+                    break;
+                }
+            }
+            if !val.ends_with(']') {
+                return Err(format!("{origin}:{ln}: unterminated array"));
+            }
+        }
+        let value = if val.starts_with('[') {
+            let inner = &val[1..val.len() - 1];
+            let mut items = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                items.push(unquote(part, origin, ln)?);
+            }
+            Value::List(items)
+        } else if val.starts_with('"') {
+            Value::Str(unquote(&val, origin, ln)?)
+        } else {
+            Value::Int(
+                val.parse()
+                    .map_err(|_| format!("{origin}:{ln}: expected an integer, got `{val}`"))?,
+            )
+        };
+        let table = tables
+            .last_mut()
+            .ok_or_else(|| format!("{origin}:{ln}: key before any [table] header"))?;
+        table.entries.push((key, value));
+    }
+    Ok(tables)
+}
+
+/// The PR-6 `[files]` / `"path" = count` shape shared by
+/// `unsafe-budget.toml` and `relaxed-allowlist.toml`.
+pub fn parse_counts(text: &str, origin: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut map = BTreeMap::new();
+    for t in parse(text, origin)? {
+        if t.name != "files" {
+            continue;
+        }
+        for (k, v) in t.entries {
+            match v {
+                Value::Int(n) => {
+                    map.insert(k, n);
+                }
+                _ => return Err(format!("{origin}: [files] entry {k:?} must be an integer")),
+            }
+        }
+    }
+    Ok(map)
+}
+
+/// A lock class from `lock-order.toml`: the named mutex/rwlock family a
+/// guard-acquisition site belongs to, keyed by (file, receiver ident).
+#[derive(Debug, Clone)]
+pub struct LockClass {
+    pub name: String,
+    pub file: String,
+    pub recv: Vec<String>,
+    pub doc: String,
+}
+
+/// A declared may-nest edge: holding `from` while acquiring `to` is legal.
+#[derive(Debug, Clone)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub why: String,
+}
+
+#[derive(Debug, Default)]
+pub struct LockOrder {
+    pub classes: Vec<LockClass>,
+    pub edges: Vec<LockEdge>,
+}
+
+pub fn parse_lock_order(text: &str, origin: &str) -> Result<LockOrder, String> {
+    let mut out = LockOrder::default();
+    for t in parse(text, origin)? {
+        match t.name.as_str() {
+            "class" => out.classes.push(LockClass {
+                name: t.get_str("name", origin)?,
+                file: t.get_str("file", origin)?,
+                recv: t.get_list("recv", origin)?,
+                doc: t.get_str("doc", origin)?,
+            }),
+            "edge" => out.edges.push(LockEdge {
+                from: t.get_str("from", origin)?,
+                to: t.get_str("to", origin)?,
+                why: t.get_str("why", origin)?,
+            }),
+            other => return Err(format!("{origin}: unknown table [[{other}]]")),
+        }
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for c in &out.classes {
+        if !seen.insert(c.name.clone()) {
+            return Err(format!("{origin}: duplicate class {:?}", c.name));
+        }
+    }
+    for e in &out.edges {
+        if !seen.contains(&e.from) || !seen.contains(&e.to) {
+            return Err(format!(
+                "{origin}: edge {} -> {} references an undeclared class",
+                e.from, e.to
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// One Release/Acquire pairing from `ordering-pairs.toml`. Site keys are
+/// `"<file>::<Type::fn>"`; a fn with two sites on the same side lists
+/// its key twice.
+#[derive(Debug, Clone)]
+pub struct OrderingPair {
+    pub name: String,
+    pub doc: String,
+    pub release: Vec<String>,
+    pub acquire: Vec<String>,
+}
+
+pub fn parse_ordering_pairs(text: &str, origin: &str) -> Result<Vec<OrderingPair>, String> {
+    let mut out = Vec::new();
+    for t in parse(text, origin)? {
+        let Some(name) = t.name.strip_prefix("pair.") else {
+            return Err(format!("{origin}: unexpected table [{}] (want [pair.<name>])", t.name));
+        };
+        let pair = OrderingPair {
+            name: name.to_string(),
+            doc: t.get_str("doc", origin)?,
+            release: t.get_list("release", origin)?,
+            acquire: t.get_list("acquire", origin)?,
+        };
+        if pair.release.is_empty() || pair.acquire.is_empty() {
+            return Err(format!(
+                "{origin}: [pair.{name}] must list at least one release and one acquire site \
+                 (a one-sided pair is an orphan by construction)"
+            ));
+        }
+        out.push(pair);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_shape_still_parses() {
+        let text = "# c\n[files]\n\"rust/src/a.rs\" = 3\n\"rust/src/b.rs\" = 0 # note\n";
+        let m = parse_counts(text, "t").unwrap();
+        assert_eq!(m.get("rust/src/a.rs"), Some(&3));
+        assert_eq!(m.get("rust/src/b.rs"), Some(&0));
+        assert!(parse_counts("[files]\nbad line\n", "t").is_err());
+        assert!(parse_counts("[files]\n\"a\" = x\n", "t").is_err());
+    }
+
+    #[test]
+    fn lock_order_shape() {
+        let text = "\
+[[class]]
+name = \"a.x\"
+file = \"rust/src/a.rs\"
+recv = [\"x\", \"x_of\"]
+doc = \"d\"
+
+[[class]]
+name = \"b.y\"
+file = \"rust/src/b.rs\"
+recv = [\"y\"]
+doc = \"d\"
+
+[[edge]]
+from = \"a.x\"
+to = \"b.y\"
+why = \"a calls into b under its stripe\"
+";
+        let lo = parse_lock_order(text, "t").unwrap();
+        assert_eq!(lo.classes.len(), 2);
+        assert_eq!(lo.classes[0].recv, vec!["x", "x_of"]);
+        assert_eq!(lo.edges.len(), 1);
+        // edges must reference declared classes
+        let bad = "[[edge]]\nfrom = \"a\"\nto = \"b\"\nwhy = \"w\"\n";
+        assert!(parse_lock_order(bad, "t").is_err());
+    }
+
+    #[test]
+    fn ordering_pairs_shape_and_multiline_arrays() {
+        let text = "\
+[pair.p]
+doc = \"d\"
+release = [
+    \"rust/src/a.rs::f\",  # trailing comment
+    \"rust/src/b.rs::T::g\",
+]
+acquire = [\"rust/src/c.rs::h\"]
+";
+        let pairs = parse_ordering_pairs(text, "t").unwrap();
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].release.len(), 2);
+        assert_eq!(pairs[0].release[1], "rust/src/b.rs::T::g");
+        // one-sided pair is rejected
+        let bad = "[pair.p]\ndoc = \"d\"\nrelease = [\"a\"]\nacquire = []\n";
+        assert!(parse_ordering_pairs(bad, "t").is_err());
+    }
+}

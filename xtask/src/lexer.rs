@@ -1,0 +1,688 @@
+//! Dependency-free Rust lexer shared by every lint/analyze pass.
+//!
+//! The PR-6 lint scanned comment-stripped *lines*, which cannot see lock
+//! scopes, function boundaries, or multi-line block comments. This module
+//! tokenizes a whole file instead — comment-, string-, raw-string- and
+//! char-literal-aware — then annotates brace depth and extracts `impl`
+//! blocks and `fn` bodies so passes can reason about nesting and
+//! attribute findings to an enclosing function.
+//!
+//! Scope policy: items behind a plain `#[cfg(test)]` attribute are
+//! dropped from the token stream (the whole item, not just the line), so
+//! passes never fire inside test modules regardless of where they sit in
+//! the file. Raw lines are kept alongside for `lint:allow(...)` /
+//! `SAFETY:` lookback, which is deliberately comment-based.
+
+/// How far above a flagged line a `lint:allow` comment may sit.
+pub const ALLOW_LOOKBACK: usize = 6;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Id,
+    Num,
+    Str,
+    CharLit,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub kind: Kind,
+    /// Brace depth; a `}` carries the depth of the block it closes.
+    pub depth: u32,
+}
+
+impl Tok {
+    fn new(text: impl Into<String>, line: usize, kind: Kind) -> Self {
+        Tok { text: text.into(), line, kind, depth: 0 }
+    }
+
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_id(&self, text: &str) -> bool {
+        self.kind == Kind::Id && self.text == text
+    }
+}
+
+pub const KEYWORDS: &[&str] = &[
+    "fn", "let", "if", "else", "match", "while", "for", "loop", "return", "impl", "struct",
+    "enum", "trait", "mod", "use", "pub", "const", "static", "type", "where", "unsafe", "move",
+    "ref", "mut", "dyn", "as", "in", "break", "continue", "self", "Self", "super", "crate",
+    "true", "false",
+];
+
+pub fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize Rust source. Comments vanish; string/char bodies survive as
+/// single opaque tokens so their contents can never look like code.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nested, may span lines)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte-raw strings: r"..", r#".."#, br#".."#
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            if b[j] == b'b' && j + 1 < n && b[j + 1] == b'r' {
+                j += 1;
+            }
+            if b[j] == b'r' {
+                let mut k = j + 1;
+                while k < n && b[k] == b'#' {
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    let hashes = k - (j + 1);
+                    let mut close = String::from("\"");
+                    close.push_str(&"#".repeat(hashes));
+                    let start = k + 1;
+                    let end = src[start..].find(&close).map(|p| start + p + close.len());
+                    let end = end.unwrap_or(n);
+                    line += src[i..end].matches('\n').count();
+                    toks.push(Tok::new(&src[i..end], line, Kind::Str));
+                    i = end;
+                    continue;
+                }
+            }
+            // plain byte string b"..."
+            if c == b'b' && i + 1 < n && b[i + 1] == b'"' {
+                let (end, nl) = scan_quoted(src, i + 1);
+                line += nl;
+                toks.push(Tok::new(&src[i..end], line, Kind::Str));
+                i = end;
+                continue;
+            }
+            // else: falls through to identifier handling below
+        }
+        if c == b'"' {
+            let (end, nl) = scan_quoted(src, i);
+            line += nl;
+            toks.push(Tok::new(&src[i..end], line, Kind::Str));
+            i = end;
+            continue;
+        }
+        if c == b'\'' {
+            // lifetime ('a) or char literal ('a', '\n', '{')
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' && j == i + 2 {
+                    toks.push(Tok::new(&src[i..j + 1], line, Kind::CharLit));
+                    i = j + 1;
+                } else {
+                    toks.push(Tok::new(&src[i..j], line, Kind::Lifetime));
+                    i = j;
+                }
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && b[j] != b'\'' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let end = (j + 1).min(n);
+            toks.push(Tok::new(&src[i..end], line, Kind::CharLit));
+            i = end;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok::new(&src[i..j], line, Kind::Id));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut seen_dot = false;
+            while j < n {
+                if is_ident_cont(b[j]) {
+                    j += 1;
+                } else if b[j] == b'.'
+                    && !seen_dot
+                    && j + 1 < n
+                    && b[j + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok::new(&src[i..j], line, Kind::Num));
+            i = j;
+            continue;
+        }
+        toks.push(Tok::new(&src[i..i + 1], line, Kind::Punct));
+        i += 1;
+    }
+    toks
+}
+
+/// Scan a `"..."` literal starting at the opening quote; returns
+/// (index past the closing quote, newlines inside).
+fn scan_quoted(src: &str, open: usize) -> (usize, usize) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut j = open + 1;
+    let mut nl = 0;
+    while j < n && b[j] != b'"' {
+        if b[j] == b'\\' {
+            j += 1;
+        }
+        if j < n && b[j] == b'\n' {
+            nl += 1;
+        }
+        j += 1;
+    }
+    ((j + 1).min(n), nl)
+}
+
+/// Drop tokens of items gated behind a plain `#[cfg(test)]` attribute
+/// (the attribute, any stacked attributes after it, and the item body).
+pub fn strip_test_items(toks: Vec<Tok>) -> Vec<Tok> {
+    let mut out = Vec::with_capacity(toks.len());
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if toks[i].is("#") && i + 1 < n && toks[i + 1].is("[") {
+            // collect the attribute's inner tokens
+            let mut j = i + 2;
+            let mut depth = 1;
+            let mut inner: Vec<&str> = Vec::new();
+            while j < n && depth > 0 {
+                if toks[j].is("[") {
+                    depth += 1;
+                } else if toks[j].is("]") {
+                    depth -= 1;
+                }
+                if depth > 0 {
+                    inner.push(&toks[j].text);
+                }
+                j += 1;
+            }
+            let is_cfg_test = inner.len() >= 4
+                && inner[0] == "cfg"
+                && inner[1] == "("
+                && inner[2] == "test"
+                && inner[3] == ")";
+            if !is_cfg_test {
+                out.extend_from_slice(&toks[i..j]);
+                i = j;
+                continue;
+            }
+            // skip stacked attributes after #[cfg(test)]
+            i = j;
+            while i < n && toks[i].is("#") && i + 1 < n && toks[i + 1].is("[") {
+                let mut d = 1;
+                i += 2;
+                while i < n && d > 0 {
+                    if toks[i].is("[") {
+                        d += 1;
+                    } else if toks[i].is("]") {
+                        d -= 1;
+                    }
+                    i += 1;
+                }
+            }
+            // skip the item: to the matching `}` of its first top-level
+            // `{`, or a `;` before any brace opens
+            let mut d = 0i32;
+            while i < n {
+                if toks[i].is("{") {
+                    d += 1;
+                } else if toks[i].is("}") {
+                    d -= 1;
+                    if d == 0 {
+                        i += 1;
+                        break;
+                    }
+                } else if toks[i].is(";") && d == 0 {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Annotate brace depth in place; a `}` carries the depth of the block
+/// it closes (so "kill guards acquired at depth >= this token's depth"
+/// is a single comparison).
+pub fn annotate_depth(toks: &mut [Tok]) {
+    let mut d: u32 = 0;
+    for t in toks.iter_mut() {
+        if t.text == "{" {
+            d += 1;
+            t.depth = d;
+        } else if t.text == "}" {
+            t.depth = d;
+            d = d.saturating_sub(1);
+        } else {
+            t.depth = d;
+        }
+    }
+}
+
+/// A function definition found in the token stream.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    pub name: String,
+    /// `impl` type the fn lives in, if any.
+    pub self_type: Option<String>,
+    /// token index of the `fn` keyword
+    pub start: usize,
+    /// token index of the body's `{`
+    pub body_start: usize,
+    /// token index just past the body's `}`
+    pub end: usize,
+    pub line: usize,
+}
+
+impl FnDef {
+    /// `Type::name` for methods, bare `name` for free functions.
+    pub fn key(&self) -> String {
+        match &self.self_type {
+            Some(t) => format!("{t}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// `impl` block brace ranges: (self type, `{` index, index past `}`).
+fn find_impls(toks: &[Tok]) -> Vec<(String, usize, usize)> {
+    let mut impls = Vec::new();
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if toks[i].is_id("impl") {
+            let mut j = i + 1;
+            // skip generic params
+            if j < n && toks[j].is("<") {
+                let mut d = 1;
+                j += 1;
+                while j < n && d > 0 {
+                    if toks[j].is("<") {
+                        d += 1;
+                    } else if toks[j].is(">") {
+                        d -= 1;
+                    }
+                    j += 1;
+                }
+            }
+            let mut after_for = None;
+            let mut body = None;
+            let mut k = j;
+            while k < n {
+                if toks[k].is("{") {
+                    body = Some(k);
+                    break;
+                }
+                if toks[k].is(";") {
+                    break;
+                }
+                if toks[k].is_id("for") {
+                    after_for = Some(k);
+                }
+                k += 1;
+            }
+            let Some(body) = body else {
+                i += 1;
+                continue;
+            };
+            // self type: first non-keyword ident after `for` (trait impls)
+            // or after `impl` (inherent impls), skipping generic args
+            let mut p = after_for.map(|f| f + 1).unwrap_or(j);
+            let mut ty = None;
+            while p < body {
+                let t = &toks[p];
+                if t.kind == Kind::Id && !is_keyword(&t.text) {
+                    ty = Some(t.text.clone());
+                    break;
+                }
+                if t.is("<") {
+                    let mut d = 1;
+                    p += 1;
+                    while p < body && d > 0 {
+                        if toks[p].is("<") {
+                            d += 1;
+                        } else if toks[p].is(">") {
+                            d -= 1;
+                        }
+                        p += 1;
+                    }
+                    continue;
+                }
+                p += 1;
+            }
+            let mut d = 1;
+            let mut e = body + 1;
+            while e < n && d > 0 {
+                if toks[e].is("{") {
+                    d += 1;
+                } else if toks[e].is("}") {
+                    d -= 1;
+                }
+                e += 1;
+            }
+            if let Some(ty) = ty {
+                impls.push((ty, body, e));
+            }
+            i = body + 1; // descend: nested fns are found by find_fns
+            continue;
+        }
+        i += 1;
+    }
+    impls
+}
+
+fn find_fns(toks: &[Tok], impls: &[(String, usize, usize)]) -> Vec<FnDef> {
+    let mut fns = Vec::new();
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if toks[i].is_id("fn") && i + 1 < n && toks[i + 1].kind == Kind::Id {
+            let name = toks[i + 1].text.clone();
+            let mut k = i + 2;
+            let mut paren = 0i32;
+            let mut body = None;
+            while k < n {
+                if toks[k].is("(") {
+                    paren += 1;
+                } else if toks[k].is(")") {
+                    paren -= 1;
+                } else if toks[k].is("{") && paren == 0 {
+                    body = Some(k);
+                    break;
+                } else if toks[k].is(";") && paren == 0 {
+                    break; // trait method signature, no body
+                }
+                k += 1;
+            }
+            if let Some(body) = body {
+                let mut d = 1;
+                let mut e = body + 1;
+                while e < n && d > 0 {
+                    if toks[e].is("{") {
+                        d += 1;
+                    } else if toks[e].is("}") {
+                        d -= 1;
+                    }
+                    e += 1;
+                }
+                // innermost enclosing impl wins
+                let mut self_type = None;
+                for (ty, s, t_end) in impls {
+                    if *s < i && i < *t_end {
+                        self_type = Some(ty.clone());
+                    }
+                }
+                fns.push(FnDef {
+                    name,
+                    self_type,
+                    start: i,
+                    body_start: body,
+                    end: e,
+                    line: toks[i].line,
+                });
+                i = body + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// One lexed source file: non-test token stream with depth annotations,
+/// fn table, and the raw lines (for allow/SAFETY lookback).
+pub struct FileLex {
+    /// repo-relative path with forward slashes
+    pub rel: String,
+    pub raw: Vec<String>,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnDef>,
+}
+
+impl FileLex {
+    pub fn from_source(rel: &str, text: &str) -> FileLex {
+        let mut toks = strip_test_items(lex(text));
+        annotate_depth(&mut toks);
+        let impls = find_impls(&toks);
+        let fns = find_fns(&toks, &impls);
+        FileLex {
+            rel: rel.to_string(),
+            raw: text.lines().map(str::to_string).collect(),
+            toks,
+            fns,
+        }
+    }
+
+    /// Innermost fn whose range contains token index `i`.
+    pub fn enclosing_fn(&self, i: usize) -> Option<&FnDef> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= i && i < f.end)
+            .max_by_key(|f| f.start)
+    }
+
+    /// `lint:allow(<rule>)` on the given 1-based line or up to
+    /// ALLOW_LOOKBACK lines above it.
+    pub fn has_allow(&self, line: usize, rule: &str) -> bool {
+        let marker = format!("lint:allow({rule})");
+        let hi = line.min(self.raw.len());
+        let lo = hi.saturating_sub(ALLOW_LOOKBACK + 1);
+        self.raw[lo..hi].iter().any(|l| l.contains(&marker))
+    }
+
+    /// Site key `"<rel>::<Type::fn>"` for the fn enclosing token `i`.
+    pub fn site_key(&self, i: usize) -> Option<String> {
+        self.enclosing_fn(i).map(|f| format!("{}::{}", self.rel, f.key()))
+    }
+}
+
+/// Lex every `rust/src/**.rs` under `root`, sorted by path.
+pub fn collect_sources(root: &std::path::Path) -> std::io::Result<Vec<FileLex>> {
+    let src = root.join("rust/src");
+    let mut files = Vec::new();
+    let mut stack = vec![src.clone()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = format!(
+                    "rust/src/{}",
+                    path.strip_prefix(&src).expect("path under rust/src").display()
+                )
+                .replace('\\', "/");
+                let text = std::fs::read_to_string(&path)?;
+                files.push(FileLex::from_source(&rel, &text));
+            }
+        }
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(files)
+}
+
+/// Receiver identifier of the method call whose `.` is at `dot`:
+/// `x.y.lock()` -> `y`; `self.stripe_of(i).lock()` -> `stripe_of`.
+pub fn recv_ident(toks: &[Tok], dot: usize) -> Option<&str> {
+    if dot == 0 {
+        return None;
+    }
+    let mut i = dot - 1;
+    if toks[i].is(")") {
+        let mut d = 1;
+        while i > 0 && d > 0 {
+            i -= 1;
+            if toks[i].is(")") {
+                d += 1;
+            } else if toks[i].is("(") {
+                d -= 1;
+            }
+        }
+        if i == 0 {
+            return None;
+        }
+        i -= 1;
+    }
+    (toks[i].kind == Kind::Id).then(|| toks[i].text.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_comment_spanning_lines_is_not_code() {
+        // the PR-6 code_part() bug: interior of a multi-line /* */ was
+        // scanned as code
+        let toks = lex("let a = 1;\n/* unsafe\n .unwrap()\n*/\nlet b = 2;");
+        assert!(!toks.iter().any(|t| t.text.contains("unsafe")));
+        assert!(!toks.iter().any(|t| t.text == "unwrap"));
+        assert!(toks.iter().any(|t| t.is_id("b") && t.line == 5));
+    }
+
+    #[test]
+    fn raw_string_with_slashes_does_not_truncate() {
+        // the other code_part() bug: `//` inside a raw string truncated
+        // the rest of the line, hiding real code after it
+        let toks = lex(r##"let u = r#"https://a"#; x.unwrap();"##);
+        assert!(toks.iter().any(|t| t.is_id("unwrap")));
+        // and the url itself is an opaque Str token, not code
+        assert!(toks.iter().any(|t| t.kind == Kind::Str && t.text.contains("https")));
+    }
+
+    #[test]
+    fn strings_chars_lifetimes_are_opaque() {
+        let toks = lex("let s = \"unsafe // x\"; let c = '\\n'; fn f<'a>(x: &'a u8) {}");
+        assert!(!toks.iter().any(|t| t.kind == Kind::Id && t.text == "unsafe"));
+        assert!(toks.iter().any(|t| t.kind == Kind::Lifetime && t.text == "'a"));
+        let toks = lex("let q = '\"'; let x = 1; // not in a string");
+        assert!(toks.iter().any(|t| t.is_id("x")));
+        assert!(!toks.iter().any(|t| t.text.contains("not in")));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* a /* b */ still comment */ let x = 1;");
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Id).count(), 2); // let, x
+    }
+
+    #[test]
+    fn cfg_test_items_are_stripped() {
+        let src = "fn live() { a(); }\n#[cfg(test)]\n\
+                   mod tests { fn t() { banned(); } }\nfn tail() {}";
+        let f = FileLex::from_source("rust/src/x.rs", src);
+        assert!(!f.toks.iter().any(|t| t.is_id("banned")));
+        assert!(f.toks.iter().any(|t| t.is_id("tail")));
+        assert_eq!(f.fns.len(), 2);
+        // non-test cfgs are kept
+        let src = "#[cfg(loom)]\nfn shim() { kept(); }";
+        let f = FileLex::from_source("rust/src/x.rs", src);
+        assert!(f.toks.iter().any(|t| t.is_id("kept")));
+    }
+
+    #[test]
+    fn fn_table_attributes_methods_to_impl_type() {
+        let src = "impl Foo { fn m(&self) { x(); } }\nfn free() {}\n\
+                   impl Bar for Foo { fn n(&self) {} }";
+        let f = FileLex::from_source("rust/src/x.rs", src);
+        let keys: Vec<String> = f.fns.iter().map(|d| d.key()).collect();
+        assert_eq!(keys, vec!["Foo::m", "free", "Foo::n"]);
+        let xi = f.toks.iter().position(|t| t.is_id("x")).unwrap();
+        assert_eq!(f.enclosing_fn(xi).unwrap().key(), "Foo::m");
+    }
+
+    #[test]
+    fn depth_and_recv_ident() {
+        let mut toks = lex("fn f() { { g(); } }");
+        annotate_depth(&mut toks);
+        let gi = toks.iter().position(|t| t.is_id("g")).unwrap();
+        assert_eq!(toks[gi].depth, 2);
+        let toks = lex("self.stripe_of(i).lock()");
+        let dot = toks.iter().rposition(|t| t.is(".")).unwrap();
+        assert_eq!(recv_ident(&toks, dot), Some("stripe_of"));
+        let toks = lex("self.state.lock()");
+        let dot = toks.iter().rposition(|t| t.is(".")).unwrap();
+        assert_eq!(recv_ident(&toks, dot), Some("state"));
+    }
+
+    #[test]
+    fn allow_lookback_window() {
+        let src = "a\nb\n// lint:allow(some-rule) — why\nc\nd\n";
+        let f = FileLex::from_source("rust/src/x.rs", src);
+        assert!(f.has_allow(3, "some-rule"));
+        assert!(f.has_allow(4, "some-rule"));
+        assert!(!f.has_allow(2, "some-rule"));
+        assert!(!f.has_allow(4, "other-rule"));
+    }
+}

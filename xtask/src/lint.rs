@@ -1,0 +1,498 @@
+//! The four PR-6 lint rules, ported from comment-stripped lines onto the
+//! shared token stream (`lexer`). Semantics are unchanged — same rule
+//! names, same allow/budget/ratchet behavior, same messages — but the
+//! scanner now understands multi-line block comments, raw strings, and
+//! `#[cfg(test)]` items anywhere in a file, which the old `code_part()`
+//! line stripper did not.
+
+use crate::config::parse_counts;
+use crate::lexer::{collect_sources, FileLex, Kind, Tok};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const NARROWING: &str = "narrowing-cast";
+pub const UNSAFE: &str = "unsafe-budget";
+pub const UNWRAP: &str = "unwrap-ban";
+pub const RELAXED: &str = "relaxed-ordering";
+
+/// How far above an `unsafe` a SAFETY contract may sit.
+const SAFETY_LOOKBACK: usize = 10;
+
+fn violation(file: &FileLex, line: usize, rule: &str, msg: &str) -> String {
+    let text = file.raw.get(line - 1).map(|s| s.trim()).unwrap_or("");
+    format!("{}:{line}: [{rule}] {msg}: {text}", file.rel)
+}
+
+/// Token indices grouped by source line, in order.
+fn lines_of(toks: &[Tok]) -> Vec<(usize, Vec<usize>)> {
+    let mut out: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        match out.last_mut() {
+            Some((ln, v)) if *ln == t.line => v.push(i),
+            _ => out.push((t.line, vec![i])),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- rules
+
+/// Byte-math markers on a line of tokens. `offsets[` is excluded: CSR
+/// offset *arrays* index by id, which is not byte math.
+fn is_byte_math(toks: &[Tok], idxs: &[usize]) -> bool {
+    for (k, &i) in idxs.iter().enumerate() {
+        let t = &toks[i];
+        if t.kind == Kind::Id && t.text.contains("byte") {
+            return true;
+        }
+        if t.kind == Kind::Id && t.text.contains("offset") {
+            let next_is_bracket = idxs
+                .get(k + 1)
+                .is_some_and(|&j| toks[j].is("["));
+            if !(t.text == "offsets" && next_is_bracket) {
+                return true;
+            }
+        }
+        if t.is("*") {
+            if let Some(&j) = idxs.get(k + 1) {
+                if toks[j].kind == Kind::Num && toks[j].text == "4" {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+pub fn check_narrowing(file: &FileLex, out: &mut Vec<String>) {
+    if file.rel.ends_with("util/bytes.rs") {
+        return; // the sanctioned home of byte reinterpretation
+    }
+    let toks = &file.toks;
+    for (line, idxs) in lines_of(toks) {
+        let has_cast = idxs.iter().enumerate().any(|(k, &i)| {
+            toks[i].is_id("as")
+                && idxs
+                    .get(k + 1)
+                    .is_some_and(|&j| toks[j].is_id("usize") || toks[j].is_id("u32"))
+        });
+        if has_cast && is_byte_math(toks, &idxs) && !file.has_allow(line, NARROWING) {
+            out.push(violation(
+                file,
+                line,
+                NARROWING,
+                "narrowing cast in offset/byte math (widen first: `i as u64 * dim as u64 * 4`)",
+            ));
+        }
+    }
+}
+
+fn has_safety_contract(file: &FileLex, line: usize) -> bool {
+    let hi = line.min(file.raw.len());
+    let lo = hi.saturating_sub(SAFETY_LOOKBACK + 1);
+    file.raw[lo..hi].iter().any(|l| l.contains("SAFETY") || l.contains("# Safety"))
+}
+
+pub fn check_unsafe(
+    file: &FileLex,
+    budget: &BTreeMap<String, usize>,
+    out: &mut Vec<String>,
+) -> usize {
+    let mut count = 0;
+    for (line, idxs) in lines_of(&file.toks) {
+        let n = idxs.iter().filter(|&&i| file.toks[i].is_id("unsafe")).count();
+        if n == 0 {
+            continue;
+        }
+        count += n;
+        if !has_safety_contract(file, line) && !file.has_allow(line, UNSAFE) {
+            out.push(violation(
+                file,
+                line,
+                UNSAFE,
+                "unsafe without a SAFETY: contract in the 10 lines above",
+            ));
+        }
+    }
+    match (count, budget.get(&file.rel)) {
+        (0, None) => {}
+        (n, Some(&b)) if n == b => {}
+        (n, Some(&b)) if n > b => out.push(format!(
+            "{}: [{UNSAFE}] {n} unsafe occurrence(s), budget is {b} — do not add unsafe; \
+             refactor or (exceptionally) raise the budget with review",
+            file.rel
+        )),
+        (n, Some(&b)) => out.push(format!(
+            "{}: [{UNSAFE}] {n} unsafe occurrence(s), budget is {b} — \
+             lower the budget in unsafe-budget.toml (the count may only go down)",
+            file.rel
+        )),
+        (n, None) => out.push(format!(
+            "{}: [{UNSAFE}] {n} unsafe occurrence(s) but the file is not in unsafe-budget.toml",
+            file.rel
+        )),
+    }
+    count
+}
+
+fn unwrap_ban_applies(rel: &str) -> bool {
+    rel.starts_with("rust/src/kvstore/")
+        || rel.starts_with("rust/src/serve/")
+        || rel == "rust/src/train/prefetch.rs"
+}
+
+pub fn check_unwrap(file: &FileLex, out: &mut Vec<String>) {
+    if !unwrap_ban_applies(&file.rel) {
+        return;
+    }
+    let toks = &file.toks;
+    for i in 0..toks.len() {
+        if !toks[i].is(".") || i + 2 >= toks.len() || !toks[i + 2].is("(") {
+            continue;
+        }
+        let hit = (toks[i + 1].is_id("unwrap")
+            && toks.get(i + 3).is_some_and(|t| t.is(")")))
+            || toks[i + 1].is_id("expect");
+        if hit && !file.has_allow(toks[i].line, UNWRAP) {
+            out.push(violation(
+                file,
+                toks[i].line,
+                UNWRAP,
+                "unwrap/expect in I/O-facing code (return a Result or recover from poison)",
+            ));
+        }
+    }
+}
+
+/// `<ident ending in Ordering>::Relaxed` — the suffix match keeps the
+/// loom shim's `StdOrdering::Relaxed` sites counted, as the old
+/// substring scan did.
+fn is_relaxed_site(toks: &[Tok], i: usize) -> bool {
+    toks[i].is_id("Relaxed")
+        && i >= 3
+        && toks[i - 1].is(":")
+        && toks[i - 2].is(":")
+        && toks[i - 3].kind == Kind::Id
+        && toks[i - 3].text.ends_with("Ordering")
+}
+
+pub fn check_relaxed(
+    file: &FileLex,
+    allow: &BTreeMap<String, usize>,
+    out: &mut Vec<String>,
+) -> usize {
+    let toks = &file.toks;
+    let mut count = 0;
+    let mut first = None;
+    for i in 0..toks.len() {
+        if is_relaxed_site(toks, i) && !file.has_allow(toks[i].line, RELAXED) {
+            count += 1;
+            first.get_or_insert(toks[i].line);
+        }
+    }
+    if count == 0 {
+        return 0;
+    }
+    match allow.get(&file.rel) {
+        Some(&max) if count <= max => {}
+        Some(&max) => out.push(format!(
+            "{}: [{RELAXED}] {count} Ordering::Relaxed site(s), allowlist permits {max} — \
+             new Relaxed uses need a docs/CONCURRENCY.md audit entry first",
+            file.rel
+        )),
+        None => out.push(violation(
+            file,
+            first.unwrap_or(1),
+            RELAXED,
+            "Ordering::Relaxed in a file absent from relaxed-allowlist.toml \
+             (audit it in docs/CONCURRENCY.md, then allowlist it)",
+        )),
+    }
+    count
+}
+
+// ---------------------------------------------------------------- driver
+
+pub fn run_lint(root: &Path) -> Result<Vec<String>, String> {
+    let budget_path = root.join("unsafe-budget.toml");
+    let allow_path = root.join("relaxed-allowlist.toml");
+    let budget = parse_counts(
+        &std::fs::read_to_string(&budget_path)
+            .map_err(|e| format!("{}: {e}", budget_path.display()))?,
+        "unsafe-budget.toml",
+    )?;
+    let allow = parse_counts(
+        &std::fs::read_to_string(&allow_path)
+            .map_err(|e| format!("{}: {e}", allow_path.display()))?,
+        "relaxed-allowlist.toml",
+    )?;
+    let files = collect_sources(root).map_err(|e| format!("scanning rust/src: {e}"))?;
+    Ok(lint_files(&files, &budget, &allow))
+}
+
+pub fn lint_files(
+    files: &[FileLex],
+    budget: &BTreeMap<String, usize>,
+    allow: &BTreeMap<String, usize>,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut seen_unsafe: BTreeMap<String, usize> = BTreeMap::new();
+    let mut seen_relaxed: BTreeMap<String, usize> = BTreeMap::new();
+    for file in files {
+        check_narrowing(file, &mut out);
+        check_unwrap(file, &mut out);
+        let u = check_unsafe(file, budget, &mut out);
+        if u > 0 {
+            seen_unsafe.insert(file.rel.clone(), u);
+        }
+        let r = check_relaxed(file, allow, &mut out);
+        if r > 0 {
+            seen_relaxed.insert(file.rel.clone(), r);
+        }
+    }
+    // stale config entries hide future regressions: flag them
+    for path in budget.keys() {
+        if !seen_unsafe.contains_key(path) {
+            out.push(format!(
+                "unsafe-budget.toml: [{UNSAFE}] stale entry {path:?} (file gone or unsafe-free) \
+                 — remove it"
+            ));
+        }
+    }
+    for path in allow.keys() {
+        if !seen_relaxed.contains_key(path) {
+            out.push(format!(
+                "relaxed-allowlist.toml: [{RELAXED}] stale entry {path:?} (file gone or \
+                 Relaxed-free) — remove it"
+            ));
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------ self-test
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(rel: &str, body: &str) -> FileLex {
+        FileLex::from_source(rel, body)
+    }
+
+    #[test]
+    fn narrowing_flags_seeded_violation() {
+        let f = fixture("rust/src/store/x.rs", "fn f() { let off = (i * dim * 4) as usize; }\n");
+        let mut out = Vec::new();
+        check_narrowing(&f, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("narrowing-cast"));
+    }
+
+    #[test]
+    fn narrowing_respects_allow_and_scope() {
+        // annotated site passes
+        let f = fixture(
+            "rust/src/store/x.rs",
+            "// lint:allow(narrowing-cast) — bounded by the clamp below\n\
+             fn f() { let off = (i * dim * 4) as usize; }\n",
+        );
+        let mut out = Vec::new();
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // util/bytes.rs is exempt wholesale
+        let f = fixture("rust/src/util/bytes.rs", "fn f() { let off = (i * dim * 4) as usize; }\n");
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // id-space casts (no byte-math marker) pass
+        let f = fixture(
+            "rust/src/kg/x.rs",
+            "fn f() { let id = v as usize; let n = k.len() as u32; }\n",
+        );
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // CSR offset arrays are id indexing, not byte math
+        let f =
+            fixture("rust/src/kg/x.rs", "fn f() { let lo = self.offsets[v as usize] as usize; }\n");
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn narrowing_ignores_test_modules_and_comments() {
+        let f = fixture(
+            "rust/src/store/x.rs",
+            "fn ok() {}\n#[cfg(test)]\nmod tests { fn t() { let off = (i * 4) as usize; } }\n",
+        );
+        let mut out = Vec::new();
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let f = fixture("rust/src/store/x.rs", "// old code: let off = (i * 4) as usize;\n");
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn narrowing_sees_through_block_comments_and_raw_strings() {
+        // regression for the code_part() bugs this module replaced:
+        // (1) a multi-line block comment's interior is not code
+        let f = fixture(
+            "rust/src/store/x.rs",
+            "fn f() {}\n/* disabled:\nlet off = (i * dim * 4) as usize;\n*/\n",
+        );
+        let mut out = Vec::new();
+        check_narrowing(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // (2) a raw string containing `//` no longer truncates the line:
+        // real code after it is still scanned
+        let f = fixture(
+            "rust/src/store/x.rs",
+            "fn f() { let u = r#\"https://x\"#; let off = (i * dim * 4) as usize; }\n",
+        );
+        check_narrowing(&f, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn unsafe_requires_safety_contract_and_budget() {
+        let mut budget = BTreeMap::new();
+        budget.insert("rust/src/store/x.rs".to_string(), 1);
+        // contract present, budget exact: clean
+        let f = fixture(
+            "rust/src/store/x.rs",
+            "// SAFETY: the slice outlives the call\nfn f() { let s = unsafe { mk() }; }\n",
+        );
+        let mut out = Vec::new();
+        assert_eq!(check_unsafe(&f, &budget, &mut out), 1);
+        assert!(out.is_empty(), "{out:?}");
+        // no contract: violation
+        let f = fixture("rust/src/store/x.rs", "fn f() { let s = unsafe { mk() }; }\n");
+        check_unsafe(&f, &budget, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("SAFETY"));
+    }
+
+    #[test]
+    fn unsafe_budget_is_a_ratchet() {
+        let mut out = Vec::new();
+        let mut budget = BTreeMap::new();
+        budget.insert("rust/src/store/x.rs".to_string(), 2);
+        let over = "// SAFETY: a\nfn a2() { unsafe { a() }; }\n// SAFETY: b\nfn b2() { unsafe { b() }; }\n\
+                    // SAFETY: c\nfn c2() { unsafe { c() }; }\n";
+        check_unsafe(&fixture("rust/src/store/x.rs", over), &budget, &mut out);
+        assert!(out.iter().any(|v| v.contains("budget is 2")), "{out:?}");
+        out.clear();
+        // under budget is ALSO an error: the count may only go down
+        let under = "// SAFETY: a\nfn a2() { unsafe { a() }; }\n";
+        check_unsafe(&fixture("rust/src/store/x.rs", under), &budget, &mut out);
+        assert!(out.iter().any(|v| v.contains("lower the budget")), "{out:?}");
+        out.clear();
+        // unsafe in a file the budget has never heard of
+        check_unsafe(&fixture("rust/src/store/y.rs", under), &budget, &mut out);
+        assert!(out.iter().any(|v| v.contains("not in unsafe-budget.toml")), "{out:?}");
+    }
+
+    #[test]
+    fn unsafe_in_kernels_is_budgeted_like_everywhere_else() {
+        // The fused kernels (rust/src/models/kernels.rs) are written in
+        // autovectorization-friendly safe Rust on purpose — the file has
+        // no unsafe-budget.toml entry, so this pins that sneaking a
+        // `unsafe` intrinsic block into them fails the lint until the
+        // budget is consciously amended (docs/KERNELS.md).
+        let budget_path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("unsafe-budget.toml");
+        let budget = parse_counts(
+            &std::fs::read_to_string(budget_path).expect("unsafe-budget.toml readable"),
+            "unsafe-budget.toml",
+        )
+        .expect("unsafe-budget.toml parses");
+        assert!(
+            !budget.contains_key("rust/src/models/kernels.rs"),
+            "kernels.rs grew an unsafe budget entry — update this test \
+             and docs/KERNELS.md if that was deliberate"
+        );
+        let mut out = Vec::new();
+        let f = fixture(
+            "rust/src/models/kernels.rs",
+            "// SAFETY: lanes are in bounds\nfn f() { let v = unsafe { load(ptr) }; }\n",
+        );
+        check_unsafe(&f, &budget, &mut out);
+        assert!(out.iter().any(|v| v.contains("not in unsafe-budget.toml")), "{out:?}");
+    }
+
+    #[test]
+    fn unsafe_token_matching_is_word_bounded() {
+        // `unsafety` / `not_unsafe` are single identifier tokens, never
+        // counted; string contents are opaque
+        let mut budget = BTreeMap::new();
+        budget.insert("rust/src/store/x.rs".to_string(), 2);
+        let f = fixture(
+            "rust/src/store/x.rs",
+            "// SAFETY: both\nunsafe fn f() { unsafe { g() } }\n\
+             fn h() { let unsafety = 1; not_unsafe(); let s = \"unsafe\"; }\n",
+        );
+        let mut out = Vec::new();
+        assert_eq!(check_unsafe(&f, &budget, &mut out), 2);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unwrap_ban_scoped_to_kvstore_serve_and_prefetch() {
+        let mut out = Vec::new();
+        let body = "fn f() { let v = rx.recv().unwrap(); let w = tx.send(x).expect(\"send\"); }\n";
+        check_unwrap(&fixture("rust/src/kvstore/comm.rs", body), &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        out.clear();
+        check_unwrap(&fixture("rust/src/train/prefetch.rs", body), &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        out.clear();
+        // the serving request loop is I/O-facing helper-thread code too
+        check_unwrap(&fixture("rust/src/serve/server.rs", body), &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        out.clear();
+        // other modules are out of scope
+        check_unwrap(&fixture("rust/src/store/cache.rs", body), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // annotated designed-panic passes
+        let annotated = "// lint:allow(unwrap-ban) — startup path, infallible by construction\n\
+                         fn f() { let v = init().expect(\"cannot fail\"); }\n";
+        check_unwrap(&fixture("rust/src/kvstore/server.rs", annotated), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // a `.unwrap()` inside a comment or string is not code
+        let masked = "fn f() { /* x.unwrap() */ let s = \".unwrap()\"; }\n";
+        check_unwrap(&fixture("rust/src/kvstore/server.rs", masked), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn relaxed_requires_allowlist_and_count() {
+        let mut allow = BTreeMap::new();
+        allow.insert("rust/src/store/cache.rs".to_string(), 2);
+        let mut out = Vec::new();
+        let two = "fn f() { hits.fetch_add(1, Ordering::Relaxed); \
+                   misses.load(Ordering::Relaxed); }\n";
+        assert_eq!(check_relaxed(&fixture("rust/src/store/cache.rs", two), &allow, &mut out), 2);
+        assert!(out.is_empty(), "{out:?}");
+        // one more than the allowlist records
+        let three = format!("{two}fn g() {{ evictions.load(Ordering::Relaxed); }}\n");
+        check_relaxed(&fixture("rust/src/store/cache.rs", &three), &allow, &mut out);
+        assert!(out.iter().any(|v| v.contains("allowlist permits 2")), "{out:?}");
+        out.clear();
+        // un-allowlisted file
+        check_relaxed(&fixture("rust/src/train/new.rs", two), &allow, &mut out);
+        assert!(out.iter().any(|v| v.contains("absent from relaxed-allowlist")), "{out:?}");
+    }
+
+    #[test]
+    fn relaxed_counts_reexported_ordering_aliases() {
+        // the loom shim writes `StdOrdering::Relaxed`; the old substring
+        // scan counted it and the allowlist budget includes it — the
+        // token scan must agree
+        let mut allow = BTreeMap::new();
+        allow.insert("rust/src/util/sync.rs".to_string(), 1);
+        let mut out = Vec::new();
+        let f = fixture("rust/src/util/sync.rs", "fn f() { SEED.load(StdOrdering::Relaxed); }\n");
+        assert_eq!(check_relaxed(&f, &allow, &mut out), 1);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,558 @@
+//! Lock-order / deadlock pass and blocking-under-lock pass.
+//!
+//! Both walk the same guard-scope simulation:
+//!
+//! * every empty-args `.lock()` / `.read()` / `.write()` call site is
+//!   classified by `(file, receiver ident)` against the `[[class]]`
+//!   tables of `lock-order.toml` (an unclassified `.lock()` is an error
+//!   — new mutexes must be declared; empty-args `.read()`/`.write()`
+//!   with no class are assumed to be `io::Read`/`io::Write` and skipped);
+//! * guard lifetime: a `let`-bound guard lives to the end of its block,
+//!   a temporary guard (`*x.write().unwrap() = v;`) dies at the `;` of
+//!   its statement;
+//! * calls are propagated through the crate-local call graph: calling a
+//!   fn that (transitively) acquires class C while holding class A is
+//!   the edge A -> C. Only fns returning a `*Guard` type leave a guard
+//!   live in the caller (`lock_state` / `lock_current` helpers);
+//! * every observed edge must be declared as an `[[edge]]` in
+//!   `lock-order.toml`; declared-but-unobserved edges are stale; the
+//!   declared edge relation must be acyclic (a cycle is a deadlock
+//!   recipe even if each edge looks locally reasonable);
+//! * while any guard is live, channel `recv`/`recv_timeout`, thread
+//!   `join`, CommHandle `drain()`, `wait_timeout`, and file-I/O calls
+//!   are flagged (`lint:allow(blocking-under-lock)` with a justification
+//!   escapes).
+//!
+//! `util/sync.rs` is exempt: it *implements* the lock shim the rest of
+//! the crate uses, so its `.lock()` sites are the mechanism, not users.
+
+use crate::callgraph::{is_guard_returning, CallGraph, FnRef};
+use crate::config::LockOrder;
+use crate::lexer::{is_keyword, recv_ident, FileLex, Kind};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const LOCK_ORDER: &str = "lock-order";
+pub const BLOCKING: &str = "blocking-under-lock";
+
+const LOCK_EXEMPT: &str = "rust/src/util/sync.rs";
+
+/// Methods that block the calling thread. `recv`/`join`/`drain` only
+/// count with empty args: `drain(..)` on a Vec is a range drain, not the
+/// CommHandle barrier, and `join("/")` is str::join.
+const BLOCKING_METHODS: &[&str] = &["recv", "recv_timeout", "join", "drain", "wait_timeout"];
+const BLOCKING_NEED_EMPTY: &[&str] = &["recv", "join", "drain"];
+/// File-I/O tokens that reach the kernel.
+const BLOCKING_IDENTS: &[&str] = &[
+    "read_to_string", "read_exact", "write_all", "sync_all", "create_dir_all", "remove_file",
+    "remove_dir_all", "OpenOptions",
+];
+
+struct Classifier<'a> {
+    /// (file, recv ident) -> class name
+    by_site: BTreeMap<(&'a str, &'a str), &'a str>,
+}
+
+impl<'a> Classifier<'a> {
+    fn new(cfg: &'a LockOrder) -> Self {
+        let mut by_site = BTreeMap::new();
+        for c in &cfg.classes {
+            for r in &c.recv {
+                by_site.insert((c.file.as_str(), r.as_str()), c.name.as_str());
+            }
+        }
+        Classifier { by_site }
+    }
+
+    fn classify(&self, rel: &str, recv: Option<&str>) -> Option<&'a str> {
+        recv.and_then(|r| self.by_site.get(&(rel, r)).copied())
+    }
+}
+
+/// Direct acquisitions per fn + unclassified-lock diagnostics + which
+/// classes were seen at all.
+fn direct_acquisitions(
+    files: &[FileLex],
+    cls: &Classifier,
+    out: &mut Vec<String>,
+    seen_classes: &mut BTreeSet<String>,
+) -> BTreeMap<FnRef, BTreeSet<String>> {
+    let mut acq: BTreeMap<FnRef, BTreeSet<String>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, _) in f.fns.iter().enumerate() {
+            acq.insert((fi, di), BTreeSet::new());
+        }
+        if f.rel == LOCK_EXEMPT {
+            continue;
+        }
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            if !toks[i].is(".") || i + 3 >= toks.len() || !toks[i + 2].is("(") {
+                continue;
+            }
+            let name = &toks[i + 1].text;
+            if toks[i + 1].kind != Kind::Id
+                || !(name == "lock" || name == "read" || name == "write")
+                || !toks[i + 3].is(")")
+            {
+                continue;
+            }
+            let class = cls.classify(&f.rel, recv_ident(toks, i));
+            match class {
+                Some(c) => {
+                    seen_classes.insert(c.to_string());
+                    if let Some(fnd) = f.enclosing_fn(i) {
+                        let key = (fi, f.fns.iter().position(|x| std::ptr::eq(x, fnd)).unwrap());
+                        acq.get_mut(&key).unwrap().insert(c.to_string());
+                    }
+                }
+                None if name == "lock" => {
+                    if !f.has_allow(toks[i].line, LOCK_ORDER) {
+                        out.push(format!(
+                            "{}:{}: [{LOCK_ORDER}] `.lock()` on an unclassified mutex — declare \
+                             a [[class]] for it in lock-order.toml (file + receiver ident)",
+                            f.rel,
+                            toks[i].line
+                        ));
+                    }
+                }
+                None => {} // classless .read()/.write(): io traits, not locks
+            }
+        }
+    }
+    acq
+}
+
+/// Files that declare a `Mutex<`/`RwLock<` must appear in some class —
+/// otherwise a brand-new lock never enters the analysis.
+fn check_declaration_coverage(files: &[FileLex], cfg: &LockOrder, out: &mut Vec<String>) {
+    let class_files: BTreeSet<&str> = cfg.classes.iter().map(|c| c.file.as_str()).collect();
+    for f in files {
+        if f.rel == LOCK_EXEMPT || class_files.contains(f.rel.as_str()) {
+            continue;
+        }
+        for (i, t) in f.toks.iter().enumerate() {
+            let is_lock_ty = (t.is_id("Mutex") || t.is_id("RwLock"))
+                && f.toks.get(i + 1).is_some_and(|n| n.is("<"));
+            if is_lock_ty && !f.has_allow(t.line, LOCK_ORDER) {
+                out.push(format!(
+                    "{}:{}: [{LOCK_ORDER}] {} declared in a file with no lock-order.toml class \
+                     — add a [[class]] so the deadlock pass can see it",
+                    f.rel, t.line, t.text
+                ));
+                break; // one per file is enough
+            }
+        }
+    }
+}
+
+/// DFS cycle check over the declared edge relation.
+fn check_cycles(cfg: &LockOrder, out: &mut Vec<String>) {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in &cfg.edges {
+        adj.entry(e.from.as_str()).or_default().push(e.to.as_str());
+    }
+    // 0 = white, 1 = on stack, 2 = done
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+    fn dfs<'a>(
+        n: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(n, 1);
+        stack.push(n);
+        for &m in adj.get(n).into_iter().flatten() {
+            match color.get(m).copied().unwrap_or(0) {
+                1 => {
+                    let pos = stack.iter().position(|&s| s == m).unwrap_or(0);
+                    let mut cyc: Vec<String> = stack[pos..].iter().map(|s| s.to_string()).collect();
+                    cyc.push(m.to_string());
+                    return Some(cyc);
+                }
+                0 => {
+                    if let Some(c) = dfs(m, adj, color, stack) {
+                        return Some(c);
+                    }
+                }
+                _ => {}
+            }
+        }
+        stack.pop();
+        color.insert(n, 2);
+        None
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for n in nodes {
+        if color.get(n).copied().unwrap_or(0) == 0 {
+            let mut stack = Vec::new();
+            if let Some(cyc) = dfs(n, &adj, &mut color, &mut stack) {
+                out.push(format!(
+                    "lock-order.toml: [{LOCK_ORDER}] declared edges form a cycle: {} — a \
+                     thread following one edge and a thread following another can deadlock; \
+                     break the cycle before declaring the new edge",
+                    cyc.join(" -> ")
+                ));
+                return;
+            }
+        }
+    }
+}
+
+/// The guard-scope walk shared by lock-order and blocking-under-lock.
+#[allow(clippy::too_many_arguments)]
+fn simulate(
+    files: &[FileLex],
+    g: &CallGraph,
+    cls: &Classifier,
+    trans: &BTreeMap<FnRef, BTreeSet<String>>,
+    found_edges: &mut BTreeMap<(String, String), String>,
+    out: &mut Vec<String>,
+) {
+    for (fi, f) in files.iter().enumerate() {
+        if f.rel == LOCK_EXEMPT {
+            continue;
+        }
+        let toks = &f.toks;
+        for d in &f.fns {
+            // (class, depth, let_bound)
+            let mut guards: Vec<(String, u32, bool)> = Vec::new();
+            let mut let_at: BTreeMap<u32, bool> = BTreeMap::new();
+            let mut i = d.body_start + 1;
+            while i < d.end.min(toks.len()) {
+                let t = &toks[i];
+                let dep = t.depth;
+                if t.is_id("let") {
+                    let_at.insert(dep, true);
+                }
+                if t.is(";") {
+                    guards.retain(|g| g.2 || g.1 != dep);
+                    let_at.insert(dep, false);
+                }
+                if t.is("}") {
+                    guards.retain(|g| g.1 < dep);
+                    let_at.remove(&dep);
+                }
+                // what does the expression at `t` acquire / block on?
+                let mut acquired: BTreeSet<String> = BTreeSet::new();
+                let mut held: BTreeSet<String> = BTreeSet::new();
+                let mut blocking: Option<String> = None;
+                if t.is(".")
+                    && i + 2 < toks.len()
+                    && toks[i + 1].kind == Kind::Id
+                    && toks[i + 2].is("(")
+                {
+                    let name = toks[i + 1].text.as_str();
+                    let empty = toks.get(i + 3).is_some_and(|x| x.is(")"));
+                    if (name == "lock" || name == "read" || name == "write") && empty {
+                        if let Some(c) = cls.classify(&f.rel, recv_ident(toks, i)) {
+                            acquired.insert(c.to_string());
+                            held.insert(c.to_string());
+                        }
+                    } else if BLOCKING_METHODS.contains(&name)
+                        && (!BLOCKING_NEED_EMPTY.contains(&name) || empty)
+                    {
+                        blocking = Some(format!(".{name}()"));
+                    } else {
+                        for target in g.resolve(files, fi, toks, i + 1) {
+                            if let Some(a) = trans.get(&target) {
+                                acquired.extend(a.iter().cloned());
+                                let tf = &files[target.0];
+                                if is_guard_returning(tf, &tf.fns[target.1]) {
+                                    held.extend(a.iter().cloned());
+                                }
+                            }
+                        }
+                    }
+                } else if t.kind == Kind::Id && BLOCKING_IDENTS.contains(&t.text.as_str()) {
+                    blocking = Some(t.text.clone());
+                } else if t.kind == Kind::Id
+                    && !is_keyword(&t.text)
+                    && toks.get(i + 1).is_some_and(|x| x.is("("))
+                    && (i == 0 || !toks[i - 1].is("."))
+                {
+                    for target in g.resolve(files, fi, toks, i) {
+                        if let Some(a) = trans.get(&target) {
+                            acquired.extend(a.iter().cloned());
+                            let tf = &files[target.0];
+                            if is_guard_returning(tf, &tf.fns[target.1]) {
+                                held.extend(a.iter().cloned());
+                            }
+                        }
+                    }
+                }
+                if let Some(b) = blocking {
+                    if !guards.is_empty() && !f.has_allow(t.line, BLOCKING) {
+                        let held_names: Vec<&str> = guards.iter().map(|g| g.0.as_str()).collect();
+                        out.push(format!(
+                            "{}:{}: [{BLOCKING}] {b} while holding {} (in `{}`) — a blocked \
+                             holder stalls every other user of the lock; drop the guard first \
+                             or lint:allow(blocking-under-lock) with a reason",
+                            f.rel,
+                            t.line,
+                            held_names.join(" + "),
+                            d.key()
+                        ));
+                    }
+                }
+                if !acquired.is_empty() {
+                    for gshared in &guards {
+                        for c in &acquired {
+                            found_edges.entry((gshared.0.clone(), c.clone())).or_insert_with(
+                                || format!("{}:{} in `{}`", f.rel, t.line, d.key()),
+                            );
+                        }
+                    }
+                    let lb = let_at.get(&dep).copied().unwrap_or(false);
+                    for c in held {
+                        guards.push((c, dep, lb));
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Run both passes. `cfg` is the parsed `lock-order.toml`.
+pub fn check(files: &[FileLex], g: &CallGraph, cfg: &LockOrder, out: &mut Vec<String>) {
+    let cls = Classifier::new(cfg);
+    let mut seen_classes = BTreeSet::new();
+    let direct = direct_acquisitions(files, &cls, out, &mut seen_classes);
+    check_declaration_coverage(files, cfg, out);
+
+    // stale classes: a manifest entry with no live acquisition site
+    for c in &cfg.classes {
+        if !seen_classes.contains(&c.name) {
+            out.push(format!(
+                "lock-order.toml: [{LOCK_ORDER}] stale class {:?} — no `.lock()/.read()/.write()` \
+                 site matches ({} recv {:?}); remove or update the entry",
+                c.name, c.file, c.recv
+            ));
+        }
+    }
+
+    check_cycles(cfg, out);
+
+    let trans = g.propagate(direct);
+    let mut found_edges: BTreeMap<(String, String), String> = BTreeMap::new();
+    simulate(files, g, &cls, &trans, &mut found_edges, out);
+
+    let declared: BTreeSet<(String, String)> =
+        cfg.edges.iter().map(|e| (e.from.clone(), e.to.clone())).collect();
+    for ((from, to), site) in &found_edges {
+        if !declared.contains(&(from.clone(), to.clone())) {
+            out.push(format!(
+                "{site}: [{LOCK_ORDER}] acquiring `{to}` while holding `{from}` — this nesting \
+                 edge is not declared in lock-order.toml; declare it (with a why) or restructure \
+                 so the outer guard is dropped first"
+            ));
+        }
+    }
+    for e in &cfg.edges {
+        if !found_edges.contains_key(&(e.from.clone(), e.to.clone())) {
+            out.push(format!(
+                "lock-order.toml: [{LOCK_ORDER}] stale edge {} -> {} — no source site nests \
+                 these locks anymore; remove the entry (the manifest must match reality)",
+                e.from, e.to
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_lock_order;
+
+    fn run(srcs: &[(&str, &str)], toml: &str) -> Vec<String> {
+        let files: Vec<FileLex> =
+            srcs.iter().map(|(rel, s)| FileLex::from_source(rel, s)).collect();
+        let g = CallGraph::build(&files);
+        let cfg = parse_lock_order(toml, "lock-order.toml").expect("fixture toml parses");
+        let mut out = Vec::new();
+        check(&files, &g, &cfg, &mut out);
+        out
+    }
+
+    const TWO_CLASSES: &str = "\
+[[class]]
+name = \"a.x\"
+file = \"rust/src/a.rs\"
+recv = [\"x\"]
+doc = \"d\"
+[[class]]
+name = \"a.y\"
+file = \"rust/src/a.rs\"
+recv = [\"y\"]
+doc = \"d\"
+";
+
+    #[test]
+    fn undeclared_nesting_edge_fires() {
+        let src = "struct S { x: Mutex<u8>, y: Mutex<u8> }\n\
+                   impl S { fn f(&self) { let gx = self.x.lock(); let gy = self.y.lock(); } }";
+        let out = run(&[("rust/src/a.rs", src)], TWO_CLASSES);
+        assert!(
+            out.iter().any(|v| v.contains("acquiring `a.y` while holding `a.x`")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn declared_edge_is_clean_and_stale_edge_fires() {
+        let src = "struct S { x: Mutex<u8>, y: Mutex<u8> }\n\
+                   impl S { fn f(&self) { let gx = self.x.lock(); let gy = self.y.lock(); } }";
+        let toml = format!(
+            "{TWO_CLASSES}[[edge]]\nfrom = \"a.x\"\nto = \"a.y\"\nwhy = \"w\"\n"
+        );
+        let out = run(&[("rust/src/a.rs", src)], &toml);
+        assert!(out.is_empty(), "{out:?}");
+        // sequential (non-nested) locking must NOT satisfy the edge
+        let seq = "struct S { x: Mutex<u8>, y: Mutex<u8> }\n\
+                   impl S { fn f(&self) { { let gx = self.x.lock(); } let gy = self.y.lock(); } }";
+        let out = run(&[("rust/src/a.rs", seq)], &toml);
+        assert!(out.iter().any(|v| v.contains("stale edge a.x -> a.y")), "{out:?}");
+    }
+
+    #[test]
+    fn declared_cycle_is_a_deadlock() {
+        // both orders exist in source AND are declared: the cycle check
+        // still fails the build — this is the classic AB/BA deadlock
+        let src = "struct S { x: Mutex<u8>, y: Mutex<u8> }\n\
+                   impl S { fn f(&self) { let gx = self.x.lock(); let gy = self.y.lock(); }\n\
+                            fn g(&self) { let gy = self.y.lock(); let gx = self.x.lock(); } }";
+        let toml = format!(
+            "{TWO_CLASSES}\
+             [[edge]]\nfrom = \"a.x\"\nto = \"a.y\"\nwhy = \"w\"\n\
+             [[edge]]\nfrom = \"a.y\"\nto = \"a.x\"\nwhy = \"w\"\n"
+        );
+        let out = run(&[("rust/src/a.rs", src)], &toml);
+        assert!(out.iter().any(|v| v.contains("cycle")), "{out:?}");
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        // `*x.write().unwrap() = v;` then `y.lock()` is sequential — the
+        // RwLock temporary cannot outlive its statement
+        let src = "struct S { x: RwLock<u8>, y: Mutex<u8> }\n\
+                   impl S { fn f(&self) { *self.x.write().unwrap() = 1; let gy = self.y.lock(); } }";
+        let toml = "\
+[[class]]
+name = \"a.x\"
+file = \"rust/src/a.rs\"
+recv = [\"x\"]
+doc = \"d\"
+[[class]]
+name = \"a.y\"
+file = \"rust/src/a.rs\"
+recv = [\"y\"]
+doc = \"d\"
+";
+        let out = run(&[("rust/src/a.rs", src)], toml);
+        assert!(!out.iter().any(|v| v.contains("while holding")), "{out:?}");
+    }
+
+    #[test]
+    fn edge_found_through_call_graph_and_guard_returning_helper() {
+        // lock_x returns a MutexGuard, so the caller holds `a.x` when it
+        // calls `self.touch_y()`, which locks `a.y` — cross-fn edge
+        let src = "struct S { x: Mutex<u8>, y: Mutex<u8> }\n\
+                   impl S {\n\
+                     fn lock_x(&self) -> MutexGuard<'_, u8> { self.x.lock() }\n\
+                     fn touch_y(&self) { let gy = self.y.lock(); }\n\
+                     fn f(&self) { let gx = self.lock_x(); self.touch_y(); }\n\
+                   }";
+        let out = run(&[("rust/src/a.rs", src)], TWO_CLASSES);
+        assert!(
+            out.iter().any(|v| v.contains("acquiring `a.y` while holding `a.x`")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn non_guard_returning_callee_releases_before_returning() {
+        // f calls two acquiring fns sequentially; neither returns a
+        // guard, so no nesting edge exists
+        let src = "struct S { x: Mutex<u8>, y: Mutex<u8> }\n\
+                   impl S {\n\
+                     fn touch_x(&self) { let gx = self.x.lock(); }\n\
+                     fn touch_y(&self) { let gy = self.y.lock(); }\n\
+                     fn f(&self) { self.touch_x(); self.touch_y(); }\n\
+                   }";
+        let out = run(&[("rust/src/a.rs", src)], TWO_CLASSES);
+        assert!(!out.iter().any(|v| v.contains("while holding")), "{out:?}");
+    }
+
+    #[test]
+    fn blocking_recv_under_guard_fires_and_allow_escapes() {
+        let one_class = "\
+[[class]]
+name = \"a.x\"
+file = \"rust/src/a.rs\"
+recv = [\"x\"]
+doc = \"d\"
+";
+        let src = "struct S { x: Mutex<Receiver<u8>> }\n\
+                   impl S { fn f(&self) { let g = self.x.lock(); let v = g.recv(); } }";
+        let out = run(&[("rust/src/a.rs", src)], one_class);
+        assert!(
+            out.iter().any(|v| v.contains("[blocking-under-lock]") && v.contains(".recv()")),
+            "{out:?}"
+        );
+        let allowed = "struct S { x: Mutex<Receiver<u8>> }\n\
+                       impl S { fn f(&self) { let g = self.x.lock();\n\
+                       // lint:allow(blocking-under-lock) — single-consumer dequeue by design\n\
+                       let v = g.recv(); } }";
+        let out = run(&[("rust/src/a.rs", allowed)], one_class);
+        assert!(out.is_empty(), "{out:?}");
+        // after the guard's block closes, recv is fine
+        let seq = "struct S { x: Mutex<u8>, rx: Receiver<u8> }\n\
+                   impl S { fn f(&self) { { let g = self.x.lock(); } let v = self.rx.recv(); } }";
+        let out = run(&[("rust/src/a.rs", seq)], one_class);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn file_io_and_range_drain_semantics() {
+        let one_class = "\
+[[class]]
+name = \"a.x\"
+file = \"rust/src/a.rs\"
+recv = [\"x\"]
+doc = \"d\"
+";
+        // file I/O under a guard fires
+        let src = "struct S { x: Mutex<u8> }\n\
+                   impl S { fn f(&self) { let g = self.x.lock(); fh.read_exact(&mut buf); } }";
+        let out = run(&[("rust/src/a.rs", src)], one_class);
+        assert!(out.iter().any(|v| v.contains("read_exact")), "{out:?}");
+        // Vec::drain(range) under a guard is NOT the blocking barrier
+        let src = "struct S { x: Mutex<u8> }\n\
+                   impl S { fn f(&self) { let g = self.x.lock(); v.drain(0..n); } }";
+        let out = run(&[("rust/src/a.rs", src)], one_class);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unclassified_lock_and_undeclared_mutex_file_fire() {
+        // a `.lock()` whose (file, recv) has no class
+        let src = "struct S { z: Mutex<u8> }\nimpl S { fn f(&self) { let g = self.z.lock(); } }";
+        let toml = "\
+[[class]]
+name = \"b.q\"
+file = \"rust/src/b.rs\"
+recv = [\"q\"]
+doc = \"d\"
+";
+        let srcs = [
+            ("rust/src/a.rs", src),
+            (
+                "rust/src/b.rs",
+                "struct T { q: Mutex<u8> }\nimpl T { fn f(&self) { let g = self.q.lock(); } }",
+            ),
+        ];
+        let out = run(&srcs, toml);
+        assert!(out.iter().any(|v| v.contains("unclassified mutex")), "{out:?}");
+        assert!(out.iter().any(|v| v.contains("no lock-order.toml class")), "{out:?}");
+    }
+}

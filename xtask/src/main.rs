@@ -1,46 +1,38 @@
-//! Repo-specific lint pass (PR 6): `cargo run -p xtask -- lint`.
+//! Repo-specific static analysis: `cargo run -p xtask -- <lint|analyze>`.
 //!
-//! Wired into `make check` and CI. Four rules, all scoped to
-//! `rust/src/**.rs` *outside* `#[cfg(test)]` modules (test modules are
-//! by convention the last item of a file, so scanning stops at the first
-//! `#[cfg(test)]` line):
+//! Both commands are wired into `make check` and CI, and both scan
+//! `rust/src/**.rs` through the shared syntax-aware lexer (`lexer.rs`):
+//! comment/string/raw-string/char-literal aware tokenization, brace-depth
+//! and fn-boundary tracking, `#[cfg(test)]` items excluded.
 //!
-//! * **narrowing-cast** — no `as usize` / `as u32` on lines doing
-//!   offset/byte arithmetic outside `util/bytes.rs`. This is the PR-4
-//!   mmap bug class: `(i * dim * 4) as u64` truncates before it widens;
-//!   byte math must widen first (`i as u64 * dim as u64 * 4`).
-//! * **unsafe-budget** — every `unsafe` must carry a `SAFETY:` (or
-//!   `# Safety` doc) contract within the 10 lines above it, and per-file
-//!   `unsafe` counts must exactly match `unsafe-budget.toml`. The budget
-//!   is a ratchet: a count below budget is also an error ("lower the
-//!   budget"), so the checked-in file always records the true count and
-//!   its diffs surface every change in review.
-//! * **unwrap-ban** — no `.unwrap()` / `.expect(` in `kvstore/` or
-//!   `train/prefetch.rs`: I/O-facing helper threads must degrade to the
-//!   failure path, not panic (a panicked writer poisons its link's locks
-//!   and strands the trainer mid-drain).
-//! * **relaxed-ordering** — `Ordering::Relaxed` only in files listed in
-//!   `relaxed-allowlist.toml`, at no more than the recorded count. The
-//!   allowlist encodes the audit of docs/CONCURRENCY.md: Relaxed is for
-//!   statistics counters only, never for data visibility.
+//! * `lint` — the four PR-6 rules (narrowing-cast, unsafe-budget,
+//!   unwrap-ban, relaxed-ordering), ported from the old line-regex
+//!   scanner onto the token stream with identical semantics. See
+//!   `lint.rs`.
+//! * `analyze` — four syntax-aware passes over the token stream and the
+//!   crate-local call graph (`callgraph.rs`):
+//!   lock-order/deadlock (`locks.rs`, checked against `lock-order.toml`),
+//!   blocking-under-lock (same walk), acquire-release pairing
+//!   (`ordering.rs`, checked against `ordering-pairs.toml`), and
+//!   ledger-billing completeness (`billing.rs`).
 //!
-//! Escape hatch: a line (or one of the 6 lines above it, for comment
-//! blocks) containing `lint:allow(<rule>)` exempts that site; the
-//! comment must say why.
+//! Escape hatch everywhere: a line (or one of the 6 lines above it)
+//! containing `lint:allow(<rule>)` exempts that site; the comment must
+//! say why. Manifests are ratchets: entries that no longer match a real
+//! source site are errors, so the checked-in files always record the
+//! truth. The pass catalog and manifest formats are documented in
+//! docs/STATIC_ANALYSIS.md.
 
-use std::collections::BTreeMap;
+mod billing;
+mod callgraph;
+mod config;
+mod lexer;
+mod lint;
+mod locks;
+mod ordering;
+
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
-
-const NARROWING: &str = "narrowing-cast";
-const UNSAFE: &str = "unsafe-budget";
-const UNWRAP: &str = "unwrap-ban";
-const RELAXED: &str = "relaxed-ordering";
-
-/// How far above a flagged line a `lint:allow` comment may sit.
-const ALLOW_LOOKBACK: usize = 6;
-/// How far above an `unsafe` a SAFETY contract may sit.
-const SAFETY_LOOKBACK: usize = 10;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -61,345 +53,48 @@ fn main() -> ExitCode {
         }
         i += 1;
     }
+    let run = |name: &str, result: Result<Vec<String>, String>| match result {
+        Ok(violations) if violations.is_empty() => {
+            println!("xtask {name}: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("xtask {name}: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask {name}: {e}");
+            ExitCode::FAILURE
+        }
+    };
     match cmd.as_deref() {
-        Some("lint") => match run_lint(&root) {
-            Ok(violations) if violations.is_empty() => {
-                println!("xtask lint: clean");
-                ExitCode::SUCCESS
-            }
-            Ok(violations) => {
-                for v in &violations {
-                    eprintln!("{v}");
-                }
-                eprintln!("xtask lint: {} violation(s)", violations.len());
-                ExitCode::FAILURE
-            }
-            Err(e) => {
-                eprintln!("xtask lint: {e}");
-                ExitCode::FAILURE
-            }
-        },
+        Some("lint") => run("lint", lint::run_lint(&root)),
+        Some("analyze") => run("analyze", run_analyze(&root)),
         _ => {
-            eprintln!("usage: cargo run -p xtask -- lint [--root <repo-root>]");
+            eprintln!("usage: cargo run -p xtask -- <lint|analyze> [--root <repo-root>]");
             ExitCode::FAILURE
         }
     }
 }
 
-/// One source file, pre-processed for scanning: raw lines plus their
-/// comment-stripped code part, truncated at the first `#[cfg(test)]`.
-struct SourceFile {
-    /// repo-relative path with forward slashes
-    rel: String,
-    raw: Vec<String>,
-    code: Vec<String>,
+fn read(root: &Path, name: &str) -> Result<String, String> {
+    let p = root.join(name);
+    std::fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))
 }
 
-/// Strip a line comment (`//` outside a string literal). Good enough for
-/// lexical scanning: tracks double-quote strings with backslash escapes;
-/// does not attempt block comments or raw strings (neither is used for
-/// the patterns these rules match).
-fn code_part(line: &str) -> String {
-    let bytes = line.as_bytes();
-    let mut in_str = false;
-    let mut i = 0;
-    while i < bytes.len() {
-        match bytes[i] {
-            b'\\' if in_str => i += 1, // skip the escaped char
-            b'"' => in_str = !in_str,
-            b'/' if !in_str && i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
-                return line[..i].to_string();
-            }
-            _ => {}
-        }
-        i += 1;
-    }
-    line.to_string()
-}
-
-fn load_source(path: &Path, rel: String) -> std::io::Result<SourceFile> {
-    let text = std::fs::read_to_string(path)?;
-    let mut raw = Vec::new();
-    for line in text.lines() {
-        if line.trim() == "#[cfg(test)]" {
-            break; // test modules are the last item of a file
-        }
-        raw.push(line.to_string());
-    }
-    let code = raw.iter().map(|l| code_part(l)).collect();
-    Ok(SourceFile { rel, raw, code })
-}
-
-fn collect_sources(root: &Path) -> std::io::Result<Vec<SourceFile>> {
-    let src = root.join("rust/src");
-    let mut files = Vec::new();
-    let mut stack = vec![src.clone()];
-    while let Some(dir) = stack.pop() {
-        for entry in std::fs::read_dir(&dir)? {
-            let entry = entry?;
-            let path = entry.path();
-            if path.is_dir() {
-                stack.push(path);
-            } else if path.extension().is_some_and(|e| e == "rs") {
-                let rel = format!(
-                    "rust/src/{}",
-                    path.strip_prefix(&src)
-                        .expect("path under rust/src")
-                        .display()
-                )
-                .replace('\\', "/");
-                files.push(load_source(&path, rel)?);
-            }
-        }
-    }
-    files.sort_by(|a, b| a.rel.cmp(&b.rel));
-    Ok(files)
-}
-
-/// `lint:allow(<rule>)` on the line itself or up to ALLOW_LOOKBACK lines
-/// above (multi-line justification comments).
-fn is_allowed(file: &SourceFile, idx: usize, rule: &str) -> bool {
-    let marker = format!("lint:allow({rule})");
-    let lo = idx.saturating_sub(ALLOW_LOOKBACK);
-    file.raw[lo..=idx].iter().any(|l| l.contains(&marker))
-}
-
-fn violation(file: &SourceFile, idx: usize, rule: &str, msg: &str) -> String {
-    format!("{}:{}: [{rule}] {msg}: {}", file.rel, idx + 1, file.raw[idx].trim())
-}
-
-// ---------------------------------------------------------------- rules
-
-/// Markers that identify a line as offset/byte arithmetic. `offsets[` is
-/// excluded: CSR offset *arrays* index by id, which is not byte math.
-fn is_byte_math(code: &str) -> bool {
-    code.contains("byte")
-        || code.contains("* 4")
-        || code.contains("*4")
-        || (code.contains("offset") && !code.contains("offsets["))
-}
-
-fn check_narrowing(file: &SourceFile, out: &mut Vec<String>) {
-    if file.rel.ends_with("util/bytes.rs") {
-        return; // the sanctioned home of byte reinterpretation
-    }
-    for (i, code) in file.code.iter().enumerate() {
-        let has_cast = code.contains(" as usize") || code.contains(" as u32");
-        if has_cast && is_byte_math(code) && !is_allowed(file, i, NARROWING) {
-            out.push(violation(
-                file,
-                i,
-                NARROWING,
-                "narrowing cast in offset/byte math (widen first: `i as u64 * dim as u64 * 4`)",
-            ));
-        }
-    }
-}
-
-/// Word-boundary occurrences of `unsafe` in a code line.
-fn count_unsafe(code: &str) -> usize {
-    let b = code.as_bytes();
-    let mut n = 0;
-    let mut from = 0;
-    while let Some(p) = code[from..].find("unsafe") {
-        let start = from + p;
-        let end = start + "unsafe".len();
-        let pre_ok = start == 0 || !(b[start - 1] as char).is_alphanumeric() && b[start - 1] != b'_';
-        let post_ok = end >= b.len() || !(b[end] as char).is_alphanumeric() && b[end] != b'_';
-        if pre_ok && post_ok {
-            n += 1;
-        }
-        from = end;
-    }
-    n
-}
-
-fn has_safety_contract(file: &SourceFile, idx: usize) -> bool {
-    let lo = idx.saturating_sub(SAFETY_LOOKBACK);
-    file.raw[lo..=idx].iter().any(|l| l.contains("SAFETY") || l.contains("# Safety"))
-}
-
-fn check_unsafe(
-    file: &SourceFile,
-    budget: &BTreeMap<String, usize>,
-    out: &mut Vec<String>,
-) -> usize {
-    let mut count = 0;
-    for (i, code) in file.code.iter().enumerate() {
-        let n = count_unsafe(code);
-        if n == 0 {
-            continue;
-        }
-        count += n;
-        if !has_safety_contract(file, i) && !is_allowed(file, i, UNSAFE) {
-            out.push(violation(
-                file,
-                i,
-                UNSAFE,
-                "unsafe without a SAFETY: contract in the 10 lines above",
-            ));
-        }
-    }
-    match (count, budget.get(&file.rel)) {
-        (0, None) => {}
-        (n, Some(&b)) if n == b => {}
-        (n, Some(&b)) if n > b => out.push(format!(
-            "{}: [{UNSAFE}] {n} unsafe occurrence(s), budget is {b} — do not add unsafe; \
-             refactor or (exceptionally) raise the budget with review",
-            file.rel
-        )),
-        (n, Some(&b)) => out.push(format!(
-            "{}: [{UNSAFE}] {n} unsafe occurrence(s), budget is {b} — \
-             lower the budget in unsafe-budget.toml (the count may only go down)",
-            file.rel
-        )),
-        (n, None) => out.push(format!(
-            "{}: [{UNSAFE}] {n} unsafe occurrence(s) but the file is not in unsafe-budget.toml",
-            file.rel
-        )),
-    }
-    count
-}
-
-fn unwrap_ban_applies(rel: &str) -> bool {
-    rel.starts_with("rust/src/kvstore/")
-        || rel.starts_with("rust/src/serve/")
-        || rel == "rust/src/train/prefetch.rs"
-}
-
-fn check_unwrap(file: &SourceFile, out: &mut Vec<String>) {
-    if !unwrap_ban_applies(&file.rel) {
-        return;
-    }
-    for (i, code) in file.code.iter().enumerate() {
-        if (code.contains(".unwrap()") || code.contains(".expect(")) && !is_allowed(file, i, UNWRAP)
-        {
-            out.push(violation(
-                file,
-                i,
-                UNWRAP,
-                "unwrap/expect in I/O-facing code (return a Result or recover from poison)",
-            ));
-        }
-    }
-}
-
-fn check_relaxed(
-    file: &SourceFile,
-    allow: &BTreeMap<String, usize>,
-    out: &mut Vec<String>,
-) -> usize {
-    let mut count = 0;
-    let mut first = None;
-    for (i, code) in file.code.iter().enumerate() {
-        let n = code.matches("Ordering::Relaxed").count();
-        if n > 0 {
-            if is_allowed(file, i, RELAXED) {
-                continue;
-            }
-            count += n;
-            first.get_or_insert(i);
-        }
-    }
-    if count == 0 {
-        return 0;
-    }
-    match allow.get(&file.rel) {
-        Some(&max) if count <= max => {}
-        Some(&max) => out.push(format!(
-            "{}: [{RELAXED}] {count} Ordering::Relaxed site(s), allowlist permits {max} — \
-             new Relaxed uses need a docs/CONCURRENCY.md audit entry first",
-            file.rel
-        )),
-        None => out.push(violation(
-            file,
-            first.unwrap_or(0),
-            RELAXED,
-            "Ordering::Relaxed in a file absent from relaxed-allowlist.toml \
-             (audit it in docs/CONCURRENCY.md, then allowlist it)",
-        )),
-    }
-    count
-}
-
-// ----------------------------------------------------- config file I/O
-
-/// Parse the TOML subset both config files use: comments, a `[files]`
-/// section, and `"quoted/path.rs" = <integer>` entries.
-fn parse_counts_toml(text: &str, origin: &str) -> Result<BTreeMap<String, usize>, String> {
-    let mut map = BTreeMap::new();
-    let mut in_files = false;
-    for (ln, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        if line.starts_with('[') {
-            in_files = line == "[files]";
-            continue;
-        }
-        if !in_files {
-            continue;
-        }
-        let (key, value) = line
-            .split_once('=')
-            .ok_or_else(|| format!("{origin}:{}: expected `\"path\" = count`", ln + 1))?;
-        let key = key.trim().trim_matches('"').to_string();
-        let value = value.trim().split('#').next().unwrap_or("").trim();
-        let count: usize = value
-            .parse()
-            .map_err(|_| format!("{origin}:{}: count must be an integer", ln + 1))?;
-        map.insert(key, count);
-    }
-    Ok(map)
-}
-
-fn run_lint(root: &Path) -> Result<Vec<String>, String> {
-    let budget_path = root.join("unsafe-budget.toml");
-    let allow_path = root.join("relaxed-allowlist.toml");
-    let budget = parse_counts_toml(
-        &std::fs::read_to_string(&budget_path)
-            .map_err(|e| format!("{}: {e}", budget_path.display()))?,
-        "unsafe-budget.toml",
-    )?;
-    let allow = parse_counts_toml(
-        &std::fs::read_to_string(&allow_path)
-            .map_err(|e| format!("{}: {e}", allow_path.display()))?,
-        "relaxed-allowlist.toml",
-    )?;
-    let files = collect_sources(root).map_err(|e| format!("scanning rust/src: {e}"))?;
+fn run_analyze(root: &Path) -> Result<Vec<String>, String> {
+    let lock_cfg = config::parse_lock_order(&read(root, "lock-order.toml")?, "lock-order.toml")?;
+    let pairs =
+        config::parse_ordering_pairs(&read(root, "ordering-pairs.toml")?, "ordering-pairs.toml")?;
+    let files = lexer::collect_sources(root).map_err(|e| format!("scanning rust/src: {e}"))?;
+    let g = callgraph::CallGraph::build(&files);
     let mut out = Vec::new();
-    let mut seen_unsafe: BTreeMap<String, usize> = BTreeMap::new();
-    let mut seen_relaxed: BTreeMap<String, usize> = BTreeMap::new();
-    for file in &files {
-        check_narrowing(file, &mut out);
-        check_unwrap(file, &mut out);
-        let u = check_unsafe(file, &budget, &mut out);
-        if u > 0 {
-            seen_unsafe.insert(file.rel.clone(), u);
-        }
-        let r = check_relaxed(file, &allow, &mut out);
-        if r > 0 {
-            seen_relaxed.insert(file.rel.clone(), r);
-        }
-    }
-    // stale config entries hide future regressions: flag them
-    for path in budget.keys() {
-        if !seen_unsafe.contains_key(path) {
-            out.push(format!(
-                "unsafe-budget.toml: [{UNSAFE}] stale entry {path:?} (file gone or unsafe-free) \
-                 — remove it"
-            ));
-        }
-    }
-    for path in allow.keys() {
-        if !seen_relaxed.contains_key(path) {
-            out.push(format!(
-                "relaxed-allowlist.toml: [{RELAXED}] stale entry {path:?} (file gone or \
-                 Relaxed-free) — remove it"
-            ));
-        }
-    }
+    locks::check(&files, &g, &lock_cfg, &mut out);
+    ordering::check(&files, &pairs, &mut out);
+    billing::check(&files, &g, &mut out);
     Ok(out)
 }
 
@@ -409,204 +104,43 @@ fn run_lint(root: &Path) -> Result<Vec<String>, String> {
 mod tests {
     use super::*;
 
-    fn fixture(rel: &str, body: &str) -> SourceFile {
-        let mut raw = Vec::new();
-        for line in body.lines() {
-            if line.trim() == "#[cfg(test)]" {
-                break;
-            }
-            raw.push(line.to_string());
-        }
-        let code = raw.iter().map(|l| code_part(l)).collect();
-        SourceFile { rel: rel.to_string(), raw, code }
-    }
-
-    #[test]
-    fn code_part_strips_comments_not_strings() {
-        assert_eq!(code_part("let x = 1; // as usize * 4"), "let x = 1; ");
-        assert_eq!(code_part(r#"let s = "https://a"; y"#), r#"let s = "https://a"; y"#);
-        assert_eq!(code_part("// pure comment"), "");
-    }
-
-    #[test]
-    fn narrowing_flags_seeded_violation() {
-        let f = fixture("rust/src/store/x.rs", "let off = (i * dim * 4) as usize;\n");
-        let mut out = Vec::new();
-        check_narrowing(&f, &mut out);
-        assert_eq!(out.len(), 1, "{out:?}");
-        assert!(out[0].contains("narrowing-cast"));
-    }
-
-    #[test]
-    fn narrowing_respects_allow_and_scope() {
-        // annotated site passes
-        let f = fixture(
-            "rust/src/store/x.rs",
-            "// lint:allow(narrowing-cast) — bounded by the clamp below\n\
-             let off = (i * dim * 4) as usize;\n",
-        );
-        let mut out = Vec::new();
-        check_narrowing(&f, &mut out);
-        assert!(out.is_empty(), "{out:?}");
-        // util/bytes.rs is exempt wholesale
-        let f = fixture("rust/src/util/bytes.rs", "let off = (i * dim * 4) as usize;\n");
-        check_narrowing(&f, &mut out);
-        assert!(out.is_empty(), "{out:?}");
-        // id-space casts (no byte-math marker) pass
-        let f = fixture("rust/src/kg/x.rs", "let id = v as usize;\nlet n = k.len() as u32;\n");
-        check_narrowing(&f, &mut out);
-        assert!(out.is_empty(), "{out:?}");
-        // CSR offset arrays are id indexing, not byte math
-        let f = fixture("rust/src/kg/x.rs", "let lo = self.offsets[v as usize] as usize;\n");
-        check_narrowing(&f, &mut out);
-        assert!(out.is_empty(), "{out:?}");
-    }
-
-    #[test]
-    fn narrowing_ignores_test_modules_and_comments() {
-        let f = fixture(
-            "rust/src/store/x.rs",
-            "fn ok() {}\n#[cfg(test)]\nmod tests { let off = (i * 4) as usize; }\n",
-        );
-        let mut out = Vec::new();
-        check_narrowing(&f, &mut out);
-        assert!(out.is_empty(), "{out:?}");
-        let f = fixture("rust/src/store/x.rs", "// old code: let off = (i * 4) as usize;\n");
-        check_narrowing(&f, &mut out);
-        assert!(out.is_empty(), "{out:?}");
-    }
-
-    #[test]
-    fn unsafe_requires_safety_contract_and_budget() {
-        let mut budget = BTreeMap::new();
-        budget.insert("rust/src/store/x.rs".to_string(), 1);
-        // contract present, budget exact: clean
-        let f = fixture(
-            "rust/src/store/x.rs",
-            "// SAFETY: the slice outlives the call\nlet s = unsafe { mk() };\n",
-        );
-        let mut out = Vec::new();
-        assert_eq!(check_unsafe(&f, &budget, &mut out), 1);
-        assert!(out.is_empty(), "{out:?}");
-        // no contract: violation
-        let f = fixture("rust/src/store/x.rs", "let s = unsafe { mk() };\n");
-        check_unsafe(&f, &budget, &mut out);
-        assert_eq!(out.len(), 1, "{out:?}");
-        assert!(out[0].contains("SAFETY"));
-    }
-
-    #[test]
-    fn unsafe_budget_is_a_ratchet() {
-        let mut out = Vec::new();
-        let mut budget = BTreeMap::new();
-        budget.insert("rust/src/store/x.rs".to_string(), 2);
-        let over = "// SAFETY: a\nunsafe { a() };\n// SAFETY: b\nunsafe { b() };\n\
-                    // SAFETY: c\nunsafe { c() };\n";
-        check_unsafe(&fixture("rust/src/store/x.rs", over), &budget, &mut out);
-        assert!(out.iter().any(|v| v.contains("budget is 2")), "{out:?}");
-        out.clear();
-        // under budget is ALSO an error: the count may only go down
-        let under = "// SAFETY: a\nunsafe { a() };\n";
-        check_unsafe(&fixture("rust/src/store/x.rs", under), &budget, &mut out);
-        assert!(out.iter().any(|v| v.contains("lower the budget")), "{out:?}");
-        out.clear();
-        // unsafe in a file the budget has never heard of
-        check_unsafe(&fixture("rust/src/store/y.rs", under), &budget, &mut out);
-        assert!(out.iter().any(|v| v.contains("not in unsafe-budget.toml")), "{out:?}");
-    }
-
-    #[test]
-    fn unsafe_in_kernels_is_budgeted_like_everywhere_else() {
-        // The fused kernels (rust/src/models/kernels.rs) are written in
-        // autovectorization-friendly safe Rust on purpose — the file has
-        // no unsafe-budget.toml entry, so this pins that sneaking a
-        // `unsafe` intrinsic block into them fails the lint until the
-        // budget is consciously amended (docs/KERNELS.md).
-        let budget_path =
-            Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("unsafe-budget.toml");
-        let budget = parse_counts_toml(
-            &std::fs::read_to_string(budget_path).expect("unsafe-budget.toml readable"),
-            "unsafe-budget.toml",
-        )
-        .expect("unsafe-budget.toml parses");
-        assert!(
-            !budget.contains_key("rust/src/models/kernels.rs"),
-            "kernels.rs grew an unsafe budget entry — update this test \
-             and docs/KERNELS.md if that was deliberate"
-        );
-        let mut out = Vec::new();
-        let f = fixture(
-            "rust/src/models/kernels.rs",
-            "// SAFETY: lanes are in bounds\nlet v = unsafe { load(ptr) };\n",
-        );
-        check_unsafe(&f, &budget, &mut out);
-        assert!(out.iter().any(|v| v.contains("not in unsafe-budget.toml")), "{out:?}");
-    }
-
-    #[test]
-    fn unsafe_token_matching_is_word_bounded() {
-        assert_eq!(count_unsafe("unsafe fn f() { unsafe { g() } }"), 2);
-        assert_eq!(count_unsafe("let unsafety = 1; not_unsafe()"), 0);
-    }
-
-    #[test]
-    fn unwrap_ban_scoped_to_kvstore_and_prefetch() {
-        let mut out = Vec::new();
-        let body = "let v = rx.recv().unwrap();\nlet w = tx.send(x).expect(\"send\");\n";
-        check_unwrap(&fixture("rust/src/kvstore/comm.rs", body), &mut out);
-        assert_eq!(out.len(), 2, "{out:?}");
-        out.clear();
-        check_unwrap(&fixture("rust/src/train/prefetch.rs", body), &mut out);
-        assert_eq!(out.len(), 2, "{out:?}");
-        out.clear();
-        // the serving request loop is I/O-facing helper-thread code too
-        check_unwrap(&fixture("rust/src/serve/server.rs", body), &mut out);
-        assert_eq!(out.len(), 2, "{out:?}");
-        out.clear();
-        // other modules are out of scope
-        check_unwrap(&fixture("rust/src/store/cache.rs", body), &mut out);
-        assert!(out.is_empty(), "{out:?}");
-        // annotated designed-panic passes
-        let annotated = "// lint:allow(unwrap-ban) — startup path, infallible by construction\n\
-                         let v = init().expect(\"cannot fail\");\n";
-        check_unwrap(&fixture("rust/src/kvstore/server.rs", annotated), &mut out);
-        assert!(out.is_empty(), "{out:?}");
-    }
-
-    #[test]
-    fn relaxed_requires_allowlist_and_count() {
-        let mut allow = BTreeMap::new();
-        allow.insert("rust/src/store/cache.rs".to_string(), 2);
-        let mut out = Vec::new();
-        let two = "hits.fetch_add(1, Ordering::Relaxed);\nmisses.load(Ordering::Relaxed);\n";
-        assert_eq!(check_relaxed(&fixture("rust/src/store/cache.rs", two), &allow, &mut out), 2);
-        assert!(out.is_empty(), "{out:?}");
-        // one more than the allowlist records
-        let three = format!("{two}evictions.load(Ordering::Relaxed);\n");
-        check_relaxed(&fixture("rust/src/store/cache.rs", &three), &allow, &mut out);
-        assert!(out.iter().any(|v| v.contains("allowlist permits 2")), "{out:?}");
-        out.clear();
-        // un-allowlisted file
-        check_relaxed(&fixture("rust/src/train/new.rs", two), &allow, &mut out);
-        assert!(out.iter().any(|v| v.contains("absent from relaxed-allowlist")), "{out:?}");
-    }
-
-    #[test]
-    fn counts_toml_subset_parses() {
-        let text = "# comment\n[files]\n\"rust/src/a.rs\" = 3\n\"rust/src/b.rs\" = 0 # note\n";
-        let m = parse_counts_toml(text, "t").unwrap();
-        assert_eq!(m.get("rust/src/a.rs"), Some(&3));
-        assert_eq!(m.get("rust/src/b.rs"), Some(&0));
-        assert!(parse_counts_toml("[files]\nbad line\n", "t").is_err());
-        assert!(parse_counts_toml("[files]\n\"a\" = x\n", "t").is_err());
-    }
-
-    /// End-to-end: the lint must pass on the real tree. This is the same
-    /// invocation `make lint` runs, executed from the workspace root.
+    /// End-to-end: the classic lint must pass on the real tree. This is
+    /// the same invocation `make lint` runs, from the workspace root.
     #[test]
     fn lint_is_clean_on_this_repo() {
         let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
-        let violations = run_lint(&root).expect("lint run failed");
+        let violations = lint::run_lint(&root).expect("lint run failed");
         assert!(violations.is_empty(), "lint violations:\n{}", violations.join("\n"));
+    }
+
+    /// End-to-end: the four analyze passes must pass on the real tree —
+    /// and because manifests are ratchets, this simultaneously proves
+    /// every lock-order.toml class/edge and every ordering-pairs.toml
+    /// entry corresponds to a real source site.
+    #[test]
+    fn analyze_is_clean_on_this_repo() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let violations = run_analyze(&root).expect("analyze run failed");
+        assert!(violations.is_empty(), "analyze violations:\n{}", violations.join("\n"));
+    }
+
+    /// The real tree has no declared lock-nesting edges: every lock in
+    /// the crate is leaf-ordered (docs/CONCURRENCY.md). If an [[edge]]
+    /// ever appears, this test makes the author read the deadlock
+    /// discussion there first.
+    #[test]
+    fn lock_order_manifest_declares_no_edges_today() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let cfg = config::parse_lock_order(
+            &read(&root, "lock-order.toml").unwrap(),
+            "lock-order.toml",
+        )
+        .unwrap();
+        assert!(
+            cfg.edges.is_empty(),
+            "a lock-nesting edge was declared — update docs/CONCURRENCY.md's lock-order \
+             section and this test if the leaf-only discipline is deliberately being relaxed"
+        );
+        assert!(!cfg.classes.is_empty());
     }
 }

@@ -1,0 +1,228 @@
+//! Acquire-release pairing pass.
+//!
+//! A `Release` store is only a synchronization point if some `Acquire`
+//! load observes it — and vice versa. Editing one side (or deleting it
+//! in a refactor) silently downgrades the other side to an expensive
+//! no-op. This pass forces every non-`Relaxed` atomic ordering site to
+//! be registered in `ordering-pairs.toml`, where each `[pair.<name>]`
+//! lists the Release sites and the Acquire sites that observe them, so
+//! neither side can change alone without a manifest diff in review.
+//!
+//! Site keys are `"<file>::<Type::fn>"` (the enclosing function) — the
+//! granularity that survives line churn but still moves when code moves.
+//! A fn with two sites on one side lists its key twice; counts must
+//! match exactly (stale or missing entries are errors, same ratchet
+//! discipline as `unsafe-budget.toml`). `AcqRel`/`SeqCst` have no
+//! two-sided representation here and are banned outright — this crate's
+//! protocols are all store-Release/load-Acquire (fetch_add(Release) on
+//! counters included); a genuine need would extend the manifest format
+//! first.
+
+use crate::config::OrderingPair;
+use crate::lexer::{FileLex, Kind};
+use std::collections::BTreeMap;
+
+pub const ORDERING: &str = "ordering-pairs";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Side {
+    Release,
+    Acquire,
+}
+
+/// Enumerate non-Relaxed ordering sites: `<*Ordering>::(Acquire|Release|
+/// AcqRel|SeqCst)`. The suffix match on the path ident keeps re-exported
+/// aliases (`StdOrdering`) visible, mirroring the Relaxed lint.
+fn sites(file: &FileLex) -> Vec<(usize, &'static str)> {
+    let toks = &file.toks;
+    let mut out = Vec::new();
+    for i in 3..toks.len() {
+        if toks[i].kind != Kind::Id {
+            continue;
+        }
+        let which = match toks[i].text.as_str() {
+            "Acquire" => "Acquire",
+            "Release" => "Release",
+            "AcqRel" => "AcqRel",
+            "SeqCst" => "SeqCst",
+            _ => continue,
+        };
+        if toks[i - 1].is(":")
+            && toks[i - 2].is(":")
+            && toks[i - 3].kind == Kind::Id
+            && toks[i - 3].text.ends_with("Ordering")
+        {
+            out.push((i, which));
+        }
+    }
+    out
+}
+
+pub fn check(files: &[FileLex], pairs: &[OrderingPair], out: &mut Vec<String>) {
+    // expected multiset per side: site key -> count
+    let mut expected: BTreeMap<(Side, String), usize> = BTreeMap::new();
+    for p in pairs {
+        for k in &p.release {
+            *expected.entry((Side::Release, k.clone())).or_default() += 1;
+        }
+        for k in &p.acquire {
+            *expected.entry((Side::Acquire, k.clone())).or_default() += 1;
+        }
+    }
+    let mut found: BTreeMap<(Side, String), usize> = BTreeMap::new();
+    for f in files {
+        for (i, which) in sites(f) {
+            let line = f.toks[i].line;
+            if f.has_allow(line, ORDERING) {
+                continue;
+            }
+            let side = match which {
+                "Release" => Side::Release,
+                "Acquire" => Side::Acquire,
+                other => {
+                    out.push(format!(
+                        "{}:{line}: [{ORDERING}] Ordering::{other} — this crate's protocols \
+                         are store-Release/load-Acquire only; if {other} is truly needed, \
+                         extend ordering-pairs.toml to model it first",
+                        f.rel
+                    ));
+                    continue;
+                }
+            };
+            let Some(key) = f.site_key(i) else {
+                out.push(format!(
+                    "{}:{line}: [{ORDERING}] {which} ordering outside any fn — cannot \
+                     attribute it to a pair",
+                    f.rel
+                ));
+                continue;
+            };
+            let n = found.entry((side, key.clone())).or_default();
+            *n += 1;
+            let budget = expected.get(&(side, key.clone())).copied().unwrap_or(0);
+            if *n > budget {
+                let (side_name, other) = if side == Side::Release {
+                    ("Release store", "Acquire load(s)")
+                } else {
+                    ("Acquire load", "Release store(s)")
+                };
+                out.push(format!(
+                    "{}:{line}: [{ORDERING}] {side_name} in `{key}` is not registered in \
+                     ordering-pairs.toml — add it to the pair naming the {other} it \
+                     synchronizes with (an unpaired side is an orphan)",
+                    f.rel
+                ));
+            }
+        }
+    }
+    // stale manifest entries: registered sites that no longer exist
+    for ((side, key), &want) in &expected {
+        let have = found.get(&(*side, key.clone())).copied().unwrap_or(0);
+        if have < want {
+            let side_name = if *side == Side::Release { "release" } else { "acquire" };
+            out.push(format!(
+                "ordering-pairs.toml: [{ORDERING}] stale {side_name} entry `{key}` \
+                 ({want} registered, {have} in source) — the paired protocol changed; \
+                 update the pair and re-audit its other side in docs/CONCURRENCY.md"
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_ordering_pairs;
+
+    fn run(srcs: &[(&str, &str)], toml: &str) -> Vec<String> {
+        let files: Vec<FileLex> =
+            srcs.iter().map(|(rel, s)| FileLex::from_source(rel, s)).collect();
+        let pairs = parse_ordering_pairs(toml, "ordering-pairs.toml").expect("fixture parses");
+        let mut out = Vec::new();
+        check(&files, &pairs, &mut out);
+        out
+    }
+
+    const PAIRED: &str = "\
+[pair.stamp]
+doc = \"d\"
+release = [\"rust/src/a.rs::W::publish\"]
+acquire = [\"rust/src/a.rs::W::observe\"]
+";
+
+    #[test]
+    fn registered_pair_is_clean() {
+        let src = "impl W {\n\
+                   fn publish(&self) { self.s.store(1, Ordering::Release); }\n\
+                   fn observe(&self) -> u64 { self.s.load(Ordering::Acquire) }\n\
+                   }";
+        let out = run(&[("rust/src/a.rs", src)], PAIRED);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn orphan_release_store_fires() {
+        let src = "impl W {\n\
+                   fn publish(&self) { self.s.store(1, Ordering::Release); }\n\
+                   fn observe(&self) -> u64 { self.s.load(Ordering::Acquire) }\n\
+                   fn sneak(&self) { self.t.store(2, Ordering::Release); }\n\
+                   }";
+        let out = run(&[("rust/src/a.rs", src)], PAIRED);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("Release store in `rust/src/a.rs::W::sneak`"), "{out:?}");
+        assert!(out[0].contains("orphan"), "{out:?}");
+    }
+
+    #[test]
+    fn deleting_one_side_is_a_stale_entry() {
+        // the Acquire side was refactored away: its manifest entry goes
+        // stale, so the dangling Release cannot survive review silently
+        let src = "impl W { fn publish(&self) { self.s.store(1, Ordering::Release); } }";
+        let out = run(&[("rust/src/a.rs", src)], PAIRED);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("stale acquire entry"), "{out:?}");
+    }
+
+    #[test]
+    fn counts_are_exact_per_fn() {
+        // two Acquire sites in one fn need the key listed twice
+        let src = "impl W {\n\
+                   fn publish(&self) { self.s.store(1, Ordering::Release); }\n\
+                   fn observe(&self) -> u64 { self.s.load(Ordering::Acquire) + self.s.load(Ordering::Acquire) }\n\
+                   }";
+        let out = run(&[("rust/src/a.rs", src)], PAIRED);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("not registered"), "{out:?}");
+        let doubled = "\
+[pair.stamp]
+doc = \"d\"
+release = [\"rust/src/a.rs::W::publish\"]
+acquire = [\"rust/src/a.rs::W::observe\", \"rust/src/a.rs::W::observe\"]
+";
+        let out = run(&[("rust/src/a.rs", src)], doubled);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn seqcst_is_banned_and_relaxed_ignored() {
+        let src = "impl W { fn publish(&self) { self.s.store(1, Ordering::SeqCst); \
+                   self.c.fetch_add(1, Ordering::Relaxed); } }";
+        let out = run(&[("rust/src/a.rs", src)], "");
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("SeqCst"), "{out:?}");
+    }
+
+    #[test]
+    fn fetch_add_release_counts_as_release() {
+        let toml = "\
+[pair.ctr]
+doc = \"d\"
+release = [\"rust/src/a.rs::bump\"]
+acquire = [\"rust/src/a.rs::read_total\"]
+";
+        let src = "fn bump(c: &AtomicU64) { c.fetch_add(1, Ordering::Release); }\n\
+                   fn read_total(c: &AtomicU64) -> u64 { c.load(Ordering::Acquire) }";
+        let out = run(&[("rust/src/a.rs", src)], toml);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}
