@@ -4,7 +4,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test fmt fmt-check lint analyze loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels bench-serve clean
+.PHONY: build test fmt fmt-check lint analyze loom miri tsan check artifacts bench bench-smoke bench-prefetch bench-cache bench-dist bench-kernels bench-serve bench-obs trace clean
 
 build:
 	$(CARGO) build --release
@@ -27,8 +27,9 @@ lint:
 
 # Syntax-aware static analysis (lexer + crate-local call graph):
 # lock-order/deadlock vs lock-order.toml, blocking-under-lock,
-# Release/Acquire pairing vs ordering-pairs.toml, and ledger-billing
-# completeness over the KV access sites. See docs/STATIC_ANALYSIS.md.
+# Release/Acquire pairing vs ordering-pairs.toml, ledger-billing
+# completeness over the KV access sites, and the metrics-registry
+# ratchet vs metrics-registry.toml. See docs/STATIC_ANALYSIS.md.
 analyze:
 	$(CARGO) run -p xtask -- analyze
 
@@ -97,6 +98,21 @@ bench-kernels:
 # batch latency, QPS — see docs/SERVING.md).
 bench-serve:
 	QUICK=1 $(CARGO) bench --bench bench_serve
+
+# Observability overhead: disabled/enabled span cost, counter bumps,
+# and the same tiny run with obs off vs on; writes BENCH_obs.json
+# (asserts the disabled span path stays under a generous 1 us ceiling —
+# the contract is "free when off", docs/OBSERVABILITY.md).
+bench-obs:
+	QUICK=1 $(CARGO) bench --bench bench_obs
+
+# Tracing smoke: a tiny traced run, then schema + span-nesting
+# validation of the emitted Chrome trace via `dglke trace-check`.
+trace:
+	$(CARGO) run --release --bin dglke -- train --dataset tiny --workers 1 \
+	    --batches 40 --log-every 10 --prefetch \
+	    --trace-path /tmp/dglke-trace-smoke.json
+	$(CARGO) run --release --bin dglke -- trace-check /tmp/dglke-trace-smoke.json
 
 # Paper-figure benches (skip gracefully without artifacts). QUICK=1 shrinks.
 bench:

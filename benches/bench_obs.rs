@@ -1,0 +1,153 @@
+//! Observability overhead benchmark: what a span costs when tracing is
+//! off (the price every hot loop pays, permanently), when it is on, and
+//! what a registry counter bump costs — plus the end-to-end check, the
+//! same tiny training run with obs off vs fully on. Writes
+//! `BENCH_obs.json` (`make bench-obs`) so the disabled-path cost is
+//! tracked run-over-run next to a host-class block.
+//!
+//! Expectation: the disabled path is one Relaxed load and a branch —
+//! single-digit nanoseconds. The bench asserts only a very generous
+//! ceiling (1 µs) so it never flakes on a loaded CI host; the number in
+//! the JSON is the real signal.
+//!
+//! QUICK=1 shrinks iteration counts for smoke runs.
+
+use dglke::api::{ObsSpec, ParallelMode, RunSpec, Session};
+use dglke::models::step::StepShape;
+use dglke::models::ModelKind;
+use dglke::obs::trace::{span, start, SpanId};
+use dglke::runtime::BackendKind;
+use dglke::util::json::Json;
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn tiny_spec(obs: ObsSpec, trace_dir: &std::path::Path) -> RunSpec {
+    let mut obs = obs;
+    if obs.trace {
+        obs.trace_path =
+            Some(trace_dir.join("bench-trace.json").to_string_lossy().into_owned());
+    }
+    RunSpec {
+        dataset: "tiny".into(),
+        model: ModelKind::TransEL2,
+        backend: BackendKind::Native,
+        mode: ParallelMode::Single { workers: 1, gpu: false },
+        batches: 200,
+        lr: 0.25,
+        log_every: 50,
+        async_update: false,
+        shape: Some(StepShape { batch: 32, chunks: 4, neg_k: 8, dim: 16 }),
+        seed: 5,
+        obs,
+        ..Default::default()
+    }
+}
+
+fn train_ms(spec: RunSpec) -> anyhow::Result<f64> {
+    let mut session = Session::from_spec(spec)?;
+    let t = Instant::now();
+    session.train()?;
+    Ok(t.elapsed().as_secs_f64() * 1000.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("QUICK").is_ok();
+    let span_iters: u64 = if quick { 1_000_000 } else { 10_000_000 };
+    // enabled spans land in the per-thread buffer (capacity 1<<16
+    // events, 2 per span): stay under it so nothing is dropped
+    let enabled_iters: u64 = 20_000;
+
+    let dir = std::env::temp_dir().join(format!("dglke-bench-obs-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    println!("obs bench: span_iters={span_iters} enabled_iters={enabled_iters} quick={quick}");
+
+    // disabled path: tracing off, every span() is a Relaxed load + branch
+    let t = Instant::now();
+    for _ in 0..span_iters {
+        black_box(span(black_box(SpanId::Compute)));
+    }
+    let disabled_span_ns = t.elapsed().as_secs_f64() * 1e9 / span_iters as f64;
+    println!("  span, tracing off   {disabled_span_ns:9.2} ns/op");
+    anyhow::ensure!(
+        disabled_span_ns < 1_000.0,
+        "disabled span path costs {disabled_span_ns:.1} ns — the 'free when off' \
+         contract (docs/OBSERVABILITY.md) is broken"
+    );
+
+    // enabled path: two timestamped buffer pushes per span
+    let guard = start();
+    let t = Instant::now();
+    for _ in 0..enabled_iters {
+        black_box(span(black_box(SpanId::Compute)));
+    }
+    let enabled_span_ns = t.elapsed().as_secs_f64() * 1e9 / enabled_iters as f64;
+    let data = guard.finish();
+    println!("  span, tracing on    {enabled_span_ns:9.2} ns/op ({} events)", 2 * enabled_iters);
+
+    // serialization cost, while we hold a buffer worth of real events
+    let t = Instant::now();
+    let json = data.to_chrome_json();
+    let export_ms = t.elapsed().as_secs_f64() * 1000.0;
+    println!("  chrome export       {export_ms:9.3} ms ({} bytes)", json.len());
+
+    // registry counter bump: one Relaxed fetch_add
+    let counter = dglke::obs::metrics::global().counter("bench.obs.add");
+    let t = Instant::now();
+    for i in 0..span_iters {
+        counter.add(black_box(i & 1));
+    }
+    let counter_add_ns = t.elapsed().as_secs_f64() * 1e9 / span_iters as f64;
+    println!("  counter.add         {counter_add_ns:9.2} ns/op");
+
+    // end to end: identical tiny run, obs fully off vs trace+metrics on
+    let off_ms = train_ms(tiny_spec(ObsSpec::default(), &dir))?;
+    let on_ms = train_ms(tiny_spec(
+        ObsSpec { trace: true, trace_path: None, metrics: true },
+        &dir,
+    ))?;
+    let overhead_pct = (on_ms - off_ms) / off_ms.max(1e-9) * 100.0;
+    println!("  train obs off       {off_ms:9.3} ms");
+    println!("  train obs on        {on_ms:9.3} ms  ({overhead_pct:+.1}%)");
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    let report = obj(vec![
+        ("span_iters", Json::Num(span_iters as f64)),
+        ("enabled_iters", Json::Num(enabled_iters as f64)),
+        ("disabled_span_ns", Json::Num(disabled_span_ns)),
+        ("enabled_span_ns", Json::Num(enabled_span_ns)),
+        ("chrome_export_ms", Json::Num(export_ms)),
+        ("counter_add_ns", Json::Num(counter_add_ns)),
+        (
+            "train",
+            obj(vec![
+                ("batches", Json::Num(200.0)),
+                ("off_ms", Json::Num(off_ms)),
+                ("on_ms", Json::Num(on_ms)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![
+                ("cores", Json::Num(cores as f64)),
+                ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+                ("os", Json::Str(std::env::consts::OS.to_string())),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_obs.json", report.to_string())?;
+    println!("[wrote BENCH_obs.json]");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

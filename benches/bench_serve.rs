@@ -1,7 +1,10 @@
 //! Serving latency/throughput benchmark: snapshot cold-open plus first
 //! batch vs warm steady state through the worker pool, per kernel
 //! backend. Writes `BENCH_serve.json` (`make bench-serve`) so request
-//! latency (p50/p95 per batch) and QPS are tracked run-over-run.
+//! latency (p50/p95/p99 per batch) and QPS are tracked run-over-run,
+//! alongside the serve pool's own `obs::metrics` histograms
+//! (`ServeHandle::latencies`) and a host-class block (core count,
+//! arch/os) so numbers from different machines aren't compared blindly.
 //!
 //! Expectation: cold open is dominated by manifest validation + mmap
 //! setup and stays in single-digit milliseconds regardless of table size
@@ -155,24 +158,45 @@ fn main() -> anyhow::Result<()> {
         lat_ms.sort_by(|a, b| a.total_cmp(b));
         let p50 = percentile(&lat_ms, 0.50);
         let p95 = percentile(&lat_ms, 0.95);
+        let p99 = percentile(&lat_ms, 0.99);
         let name = match kernels {
             KernelBackend::Scalar => "scalar",
             _ => "fused",
         };
         println!(
-            "  {name:6}  batch p50 {p50:8.3} ms   p95 {p95:8.3} ms   {qps:10.0} qps"
+            "  {name:6}  batch p50 {p50:8.3} ms   p95 {p95:8.3} ms   p99 {p99:8.3} ms \
+             {qps:10.0} qps"
         );
+        // the handle's own log-2 histograms (serve.*_ns): bucket-upper-
+        // bound percentiles, so coarser than the sorted-sample figures
+        // above but directly comparable to `--metrics-out` snapshots
+        let lats = handle.latencies();
+        let histo = |h: &dglke::obs::metrics::HistogramSnapshot| {
+            obj(vec![
+                ("count", Json::Num(h.count as f64)),
+                ("p50_ns", Json::Num(h.percentile(0.50))),
+                ("p95_ns", Json::Num(h.percentile(0.95))),
+                ("p99_ns", Json::Num(h.percentile(0.99))),
+                ("mean_ns", Json::Num(h.mean())),
+            ])
+        };
         kernel_reports.push((
             name,
             obj(vec![
                 ("batch_p50_ms", Json::Num(p50)),
                 ("batch_p95_ms", Json::Num(p95)),
+                ("batch_p99_ms", Json::Num(p99)),
                 ("qps", Json::Num(qps)),
+                ("queue", histo(&lats.queue_ns)),
+                ("score", histo(&lats.score_ns)),
+                ("batch", histo(&lats.batch_ns)),
+                ("query", histo(&lats.query_ns)),
             ]),
         ));
         handle.shutdown();
     }
 
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
     let report = obj(vec![
         ("entities", Json::Num(n_entities as f64)),
         ("relations", Json::Num(n_relations as f64)),
@@ -181,6 +205,16 @@ fn main() -> anyhow::Result<()> {
         ("batch_queries", Json::Num(batch_queries as f64)),
         ("threads", Json::Num(threads as f64)),
         ("topk", Json::Num(topk as f64)),
+        ("checkpoint_seed", Json::Num(17.0)),
+        ("traffic_seed", Json::Num(23.0)),
+        (
+            "host",
+            obj(vec![
+                ("cores", Json::Num(cores as f64)),
+                ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+                ("os", Json::Str(std::env::consts::OS.to_string())),
+            ]),
+        ),
         (
             "cold",
             obj(vec![

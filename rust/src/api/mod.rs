@@ -25,6 +25,6 @@ pub mod spec;
 pub use report::Report;
 pub use session::{load_default_manifest, resolve_shape, ResolvedShape, Session, SessionBuilder};
 pub use spec::{
-    CommSpec, EvalProtocolSpec, EvalSpec, LossSpec, ParallelMode, PipelineSpec, RunSpec,
-    ServeSpec, DEFAULT_NATIVE_SHAPE,
+    CommSpec, EvalProtocolSpec, EvalSpec, LossSpec, ObsSpec, ParallelMode, PipelineSpec,
+    RunSpec, ServeSpec, DEFAULT_NATIVE_SHAPE,
 };

@@ -55,6 +55,10 @@ pub struct Report {
     pub remote_overlapped_bytes: u64,
     /// eval metrics, when the spec requested evaluation
     pub metrics: Option<Metrics>,
+    /// `obs::metrics` registry snapshot, when the spec set `obs.metrics`
+    /// (see `docs/OBSERVABILITY.md`); `Snapshot::from_json` inverts the
+    /// serialized form exactly
+    pub obs_metrics: Option<crate::obs::metrics::Snapshot>,
     /// the spec that produced this report (provenance), in JSON form
     pub spec: Option<Json>,
 }
@@ -148,6 +152,10 @@ impl Report {
             ("remote_requests", Json::Num(self.remote_requests as f64)),
             ("remote_overlapped_bytes", Json::Num(self.remote_overlapped_bytes as f64)),
             ("metrics", metrics),
+            (
+                "obs_metrics",
+                self.obs_metrics.as_ref().map(|s| s.to_json()).unwrap_or(Json::Null),
+            ),
             ("spec", self.spec.clone().unwrap_or(Json::Null)),
         ])
     }
@@ -242,6 +250,27 @@ mod tests {
         let curve = j.get("loss_curve").unwrap().as_arr().unwrap();
         assert_eq!(curve.len(), 2);
         assert!(r.summary().contains("60 batches"));
+    }
+
+    #[test]
+    fn obs_metrics_snapshot_round_trips_through_report() {
+        use crate::obs::metrics::{HistogramSnapshot, Snapshot};
+        let mut snap = Snapshot::default();
+        snap.counters.insert("store.cache.hits".into(), 90);
+        snap.gauges.insert("store.cache.resident_rows".into(), 12);
+        snap.histograms.insert(
+            "serve.query_ns".into(),
+            HistogramSnapshot { count: 3, sum: 900, buckets: vec![(9, 3)] },
+        );
+        let mut r = Report::default();
+        r.obs_metrics = Some(snap.clone());
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        let back = Snapshot::from_json(j.get("obs_metrics").unwrap()).unwrap();
+        assert_eq!(back, snap);
+        // absent → null, not a missing key
+        let r = Report::default();
+        let j = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(j.get("obs_metrics"), Some(&Json::Null));
     }
 
     #[test]

@@ -250,6 +250,10 @@ impl Session {
     /// distributed runs they are dumped out of the KVStore cluster), so
     /// [`Session::evaluate`] and [`Session::export_embeddings`] see them.
     pub fn train(&mut self) -> Result<Report> {
+        // claim the process-wide trace collector before any worker can
+        // emit a span; finish (and write the file) after every worker
+        // has joined, which run_training/run_distributed guarantee
+        let trace_guard = if self.spec.obs.trace { Some(crate::obs::trace::start()) } else { None };
         let mut report = match self.spec.mode {
             ParallelMode::Single { workers, gpu } => {
                 let cfg = self.train_config(workers, gpu);
@@ -292,6 +296,22 @@ impl Session {
                 Report::from_dist(&stats)
             }
         };
+        if let Some(guard) = trace_guard {
+            let data = guard.finish();
+            if data.dropped > 0 {
+                println!("[obs] trace buffers overflowed: {} events dropped", data.dropped);
+            }
+            let path = self.spec.obs.trace_path.as_deref().unwrap_or("trace.json");
+            std::fs::write(path, data.to_chrome_json())
+                .with_context(|| format!("writing trace to {path}"))?;
+            println!(
+                "[obs] wrote {} trace events to {path} (open in Perfetto / chrome://tracing)",
+                data.event_count()
+            );
+        }
+        if self.spec.obs.metrics {
+            report.obs_metrics = Some(crate::obs::metrics::global().snapshot());
+        }
         if self.spec.eval.is_some() {
             report.metrics = Some(self.evaluate()?);
         }
@@ -816,6 +836,26 @@ impl SessionBuilder {
     /// Default top-k depth for served queries.
     pub fn serve_topk(mut self, topk: usize) -> Self {
         self.spec.serve.topk = topk;
+        self
+    }
+
+    /// Record tracing spans during `train()` and write Chrome trace-event
+    /// JSON (to `obs.trace_path`, default `trace.json`) when it finishes.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.spec.obs.trace = on;
+        self
+    }
+
+    /// Where the trace JSON is written (implies nothing unless `trace`
+    /// is also set).
+    pub fn trace_path(mut self, path: impl Into<String>) -> Self {
+        self.spec.obs.trace_path = Some(path.into());
+        self
+    }
+
+    /// Attach an `obs::metrics` registry snapshot to the train `Report`.
+    pub fn obs_metrics(mut self, on: bool) -> Self {
+        self.spec.obs.metrics = on;
         self
     }
 

@@ -54,6 +54,10 @@
 //!             "batch": 64,                   //   worker threads, queries per
 //!             "topk": 10},                   //   dispatched job, default k
 //!                                            //   (see docs/SERVING.md)
+//!   "obs": {"trace": false,                  // span tracing → Chrome trace
+//!           "trace_path": null,              //   JSON (null = trace.json)
+//!           "metrics": false},               // registry snapshot in Report
+//!                                            //   (see docs/OBSERVABILITY.md)
 //!   "seed": 0
 //! }
 //! ```
@@ -154,6 +158,23 @@ impl Default for ServeSpec {
     fn default() -> Self {
         ServeSpec { threads: 2, batch: 64, topk: 10 }
     }
+}
+
+/// Observability configuration (`obs::trace` spans + `obs::metrics`
+/// registry snapshots). Both default to off; either way training output
+/// is byte-identical — spans and metrics observe, they never steer (the
+/// equivalence matrix in `rust/tests/obs_tests.rs` enforces this). See
+/// `docs/OBSERVABILITY.md`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ObsSpec {
+    /// record begin/end spans and write Chrome trace-event JSON at the
+    /// end of the run
+    pub trace: bool,
+    /// where the trace JSON goes (`None` = `trace.json` in the cwd);
+    /// only meaningful with `trace: true`
+    pub trace_path: Option<String>,
+    /// attach a metrics-registry snapshot to the run's `Report`
+    pub metrics: bool,
 }
 
 /// Hardware/parallelism mode of a run.
@@ -257,6 +278,9 @@ pub struct RunSpec {
     pub storage: StoreConfig,
     /// `dglke serve` request-loop shape; ignored by training/eval
     pub serve: ServeSpec,
+    /// tracing spans + metrics snapshot (both off by default; never
+    /// affect training output)
+    pub obs: ObsSpec,
     /// limited to 2^53 so the JSON round-trip (f64 numbers) is exact;
     /// `validate()` rejects larger seeds
     pub seed: u64,
@@ -286,6 +310,7 @@ impl Default for RunSpec {
             eval: None,
             storage: StoreConfig::default(),
             serve: ServeSpec::default(),
+            obs: ObsSpec::default(),
             seed: 0,
         }
     }
@@ -460,6 +485,21 @@ impl RunSpec {
                     ("topk", Json::Num(self.serve.topk as f64)),
                 ]),
             ),
+            (
+                "obs",
+                obj(vec![
+                    ("trace", Json::Bool(self.obs.trace)),
+                    (
+                        "trace_path",
+                        self.obs
+                            .trace_path
+                            .as_ref()
+                            .map(|p| Json::Str(p.clone()))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("metrics", Json::Bool(self.obs.metrics)),
+                ]),
+            ),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -581,6 +621,22 @@ impl RunSpec {
             },
         };
 
+        let obs = match j.get("obs") {
+            None | Some(Json::Null) => ObsSpec::default(),
+            Some(o) => {
+                let trace_path = match o.get("trace_path") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Str(p)) => Some(p.clone()),
+                    Some(_) => bail!("field \"obs.trace_path\" must be a string"),
+                };
+                ObsSpec {
+                    trace: get_bool(o, "trace", false)?,
+                    trace_path,
+                    metrics: get_bool(o, "metrics", false)?,
+                }
+            }
+        };
+
         let storage = match j.get("storage") {
             None | Some(Json::Null) => StoreConfig::default(),
             Some(s) => {
@@ -636,6 +692,7 @@ impl RunSpec {
             eval,
             storage,
             serve,
+            obs,
             seed: get_usize(j, "seed", d.seed as usize)? as u64,
         })
     }
@@ -702,6 +759,11 @@ impl RunSpec {
             self.serve.batch
         );
         anyhow::ensure!(self.serve.topk >= 1, "serve.topk must be >= 1");
+        anyhow::ensure!(
+            self.obs.trace_path.is_none() || self.obs.trace,
+            "obs.trace_path is set but obs.trace is false — enable tracing \
+             or drop the path"
+        );
         anyhow::ensure!(
             self.seed <= (1u64 << 53),
             "seed {} exceeds 2^53 and would not survive the JSON round-trip",
@@ -771,6 +833,11 @@ mod tests {
                 cache_mb: Some(128.25),
             },
             serve: ServeSpec { threads: 4, batch: 32, topk: 100 },
+            obs: ObsSpec {
+                trace: true,
+                trace_path: Some("/tmp/dglke-trace.json".into()),
+                metrics: true,
+            },
             seed: 99,
         };
         let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
@@ -892,6 +959,35 @@ mod tests {
         spec.serve.topk = 0;
         assert!(spec.validate().is_err(), "top-0 answers nothing");
         spec.serve.topk = 1;
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn obs_spec_parses_and_validates() {
+        // absent → everything off
+        let spec = RunSpec::from_json_str("{}").unwrap();
+        assert_eq!(spec.obs, ObsSpec::default());
+        assert!(!spec.obs.trace && !spec.obs.metrics);
+        // partial object fills defaults
+        let spec = RunSpec::from_json_str(r#"{"obs": {"trace": true}}"#).unwrap();
+        assert_eq!(spec.obs, ObsSpec { trace: true, trace_path: None, metrics: false });
+        assert!(spec.validate().is_ok());
+        // explicit path round-trips
+        let spec = RunSpec::from_json_str(
+            r#"{"obs": {"trace": true, "trace_path": "out/t.json", "metrics": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.obs.trace_path.as_deref(), Some("out/t.json"));
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        // wrong types rejected
+        assert!(RunSpec::from_json_str(r#"{"obs": {"trace": "on"}}"#).is_err());
+        assert!(RunSpec::from_json_str(r#"{"obs": {"trace_path": 7}}"#).is_err());
+        // a path without tracing is a config mistake, not a silent no-op
+        let mut spec = RunSpec::default();
+        spec.obs.trace_path = Some("t.json".into());
+        assert!(spec.validate().is_err(), "trace_path without trace");
+        spec.obs.trace = true;
         assert!(spec.validate().is_ok());
     }
 

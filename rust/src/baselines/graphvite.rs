@@ -81,7 +81,7 @@ pub fn run_graphvite(
     cfg: &GraphViteConfig,
 ) -> Result<GraphViteStats> {
     let ledger = TransferLedger::new();
-    let episodes_counter = std::sync::atomic::AtomicU64::new(0);
+    let episodes_counter = crate::obs::metrics::global().counter("baseline.graphvite.episodes");
     let timer = Timer::new();
 
     let outs: Vec<Result<Vec<(u64, f32)>>> =
@@ -126,7 +126,7 @@ pub fn run_graphvite(
                 if episode_triplets.len() < shape.batch {
                     continue; // too sparse; resample
                 }
-                episodes_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                episodes_counter.inc();
 
                 // --- copy-in: episode embeddings to the "GPU buffer" ---
                 let mut ent_buf = vec![0f32; shape.dim];
@@ -227,9 +227,9 @@ pub fn run_graphvite(
         total_batches: total,
         triplets_per_sec: (total * b) as f64 / wall.max(1e-9),
         loss_curve: losses,
-        episodes: episodes_counter.into_inner(),
-        h2d_bytes: ledger.h2d.load(std::sync::atomic::Ordering::Relaxed),
-        d2h_bytes: ledger.d2h.load(std::sync::atomic::Ordering::Relaxed),
+        episodes: episodes_counter.get(),
+        h2d_bytes: ledger.h2d.get(),
+        d2h_bytes: ledger.d2h.get(),
     })
 }
 

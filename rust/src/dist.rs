@@ -282,10 +282,7 @@ pub fn run_distributed(
         locality,
         local_bytes: cluster.ledger.local(),
         remote_bytes: cluster.ledger.remote(),
-        remote_requests: cluster
-            .ledger
-            .remote_requests
-            .load(std::sync::atomic::Ordering::Relaxed),
+        remote_requests: cluster.ledger.remote_requests.get(),
         remote_overlapped_bytes: cluster.ledger.overlapped(),
         mean_loss_tail: if tail.is_empty() {
             f32::NAN
@@ -442,6 +439,7 @@ struct PushedIds {
 fn advance_applied(
     marks: &mut VecDeque<(u64, Vec<u64>)>,
     comm: &dyn CommHandle,
+    // lint:allow(metrics-registry) — applied stamp (Release/Acquire), not a stat
     applied: &crate::util::sync::atomic::AtomicU64,
 ) {
     while let Some((step, mark)) = marks.front() {
@@ -482,6 +480,7 @@ fn run_trainer_pipelined(
 ) -> Result<TrainerOut> {
     let helper_comm = make_comm(cluster, machine, cfg, true)?;
     let depth = cfg.prefetch_depth.max(2);
+    // lint:allow(metrics-registry) — applied stamp (Release/Acquire), not a stat
     let applied = Arc::new(crate::util::sync::atomic::AtomicU64::new(0));
     let mut losses = Vec::new();
     std::thread::scope(|s| -> Result<()> {

@@ -9,11 +9,11 @@
 use super::placement::Placement;
 use super::protocol::*;
 use super::server::ServerState;
+use crate::obs::metrics::{global, Counter};
 use crate::util::bytes::Reader;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Remote/local traffic counters shared across a run's clients.
@@ -22,30 +22,44 @@ use std::sync::Arc;
 /// the subset moved *off the trainer's critical path* — prefetch-helper
 /// pulls running under the previous batch's compute, and fire-and-forget
 /// pushes drained by the async client's I/O threads. The critical-path
-/// remote traffic of a run is `remote_bytes - overlapped_bytes`.
-#[derive(Debug, Default)]
+/// remote traffic of a run is `remote_bytes - overlapped_bytes`. Each
+/// counter is a private `obs::metrics` cell registered under `kv.net.*`,
+/// so the per-run totals read here also show up — summed across
+/// ledgers — in metrics snapshots.
+#[derive(Debug)]
 pub struct NetLedger {
-    pub local_bytes: AtomicU64,
-    pub remote_bytes: AtomicU64,
-    pub remote_requests: AtomicU64,
-    pub overlapped_bytes: AtomicU64,
+    pub local_bytes: Counter,
+    pub remote_bytes: Counter,
+    pub remote_requests: Counter,
+    pub overlapped_bytes: Counter,
+}
+
+impl Default for NetLedger {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl NetLedger {
     pub fn new() -> Self {
-        Self::default()
+        NetLedger {
+            local_bytes: global().counter("kv.net.local_bytes"),
+            remote_bytes: global().counter("kv.net.remote_bytes"),
+            remote_requests: global().counter("kv.net.remote_requests"),
+            overlapped_bytes: global().counter("kv.net.overlapped_bytes"),
+        }
     }
 
     pub fn local(&self) -> u64 {
-        self.local_bytes.load(Ordering::Relaxed)
+        self.local_bytes.get()
     }
 
     pub fn remote(&self) -> u64 {
-        self.remote_bytes.load(Ordering::Relaxed)
+        self.remote_bytes.get()
     }
 
     pub fn overlapped(&self) -> u64 {
-        self.overlapped_bytes.load(Ordering::Relaxed)
+        self.overlapped_bytes.get()
     }
 }
 
@@ -145,7 +159,7 @@ impl KvClient {
             let nbytes = (slots.len() * dim * 4 + slots.len() * 8) as u64;
             match &mut self.links[s] {
                 Link::Local(state) => {
-                    self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.local_bytes.add(nbytes);
                     let mut tmp = vec![0f32; slots.len() * dim];
                     state.pull_local(table, &slots, &mut tmp);
                     for (j, &u) in self.pull_back[s].iter().enumerate() {
@@ -153,10 +167,10 @@ impl KvClient {
                     }
                 }
                 Link::Remote(stream) => {
-                    self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
-                    self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    self.ledger.remote_bytes.add(nbytes);
+                    self.ledger.remote_requests.inc();
                     if self.overlap_pulls {
-                        self.ledger.overlapped_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                        self.ledger.overlapped_bytes.add(nbytes);
                     }
                     write_frame(stream, OP_PULL, &encode_pull(table, &slots))?;
                     let (op, payload) = read_frame(stream)?;
@@ -199,12 +213,12 @@ impl KvClient {
             let nbytes = (data[s].len() * 4 + slots[s].len() * 8) as u64;
             match &mut self.links[s] {
                 Link::Local(state) => {
-                    self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.local_bytes.add(nbytes);
                     state.push_local(table, &slots[s], &data[s]);
                 }
                 Link::Remote(stream) => {
-                    self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
-                    self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    self.ledger.remote_bytes.add(nbytes);
+                    self.ledger.remote_requests.inc();
                     write_frame(stream, OP_PUSH, &encode_push(table, &slots[s], &data[s]))?;
                     let (op, _) = read_frame(stream)?;
                     if op != OP_OK {

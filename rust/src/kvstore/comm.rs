@@ -46,6 +46,7 @@ use super::server::ServerState;
 use super::window::{InflightWindow, PopOutcome};
 use crate::kg::TripletStore;
 use crate::models::step::StepShape;
+use crate::obs::trace::{span, SpanId};
 use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
 use crate::train::batch::BatchBuffers;
 use crate::util::bytes::Reader;
@@ -215,6 +216,8 @@ pub struct AsyncKvClient {
     /// per-link push acks, incremented by that link's reader thread; acks
     /// are FIFO per connection, which is what makes per-link counts a
     /// sound completion test (see [`CommHandle::pushes_complete`])
+    // lint:allow(metrics-registry) — flow-control cell (Release/Acquire
+    // ack protocol), not a stat; audited under `acked-per-link` pairing
     acked_per_link: Vec<Arc<AtomicU64>>,
 }
 
@@ -236,6 +239,7 @@ impl AsyncKvClient {
         let mut acked_per_link = Vec::with_capacity(n);
         let mut links = Vec::with_capacity(n);
         for s in 0..n {
+            // lint:allow(metrics-registry) — ack flow-control cell, see field doc
             acked_per_link.push(Arc::new(AtomicU64::new(0)));
             if placement.machine_of_server(s) == machine {
                 links.push(AsyncLink::Local(states[s].clone()));
@@ -308,6 +312,7 @@ impl CommHandle for AsyncKvClient {
     /// servers work their requests concurrently while this thread blocks
     /// on the first response.
     fn pull_all(&mut self, reqs: &mut [PullReq<'_>]) -> Result<()> {
+        let _wave_span = span(SpanId::KvPullWave);
         let n = self.links.len();
         let mut waves: Vec<Wave> = Vec::with_capacity(reqs.len());
         for req in reqs.iter_mut() {
@@ -338,7 +343,7 @@ impl CommHandle for AsyncKvClient {
                 let nbytes = (slots[s].len() * req.dim * 4 + slots[s].len() * 8) as u64;
                 match &self.links[s] {
                     AsyncLink::Local(state) => {
-                        self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                        self.ledger.local_bytes.add(nbytes);
                         let mut tmp = vec![0f32; slots[s].len() * req.dim];
                         state.pull_local(req.table, &slots[s], &mut tmp);
                         for (j, &u) in back[s].iter().enumerate() {
@@ -347,10 +352,10 @@ impl CommHandle for AsyncKvClient {
                         }
                     }
                     AsyncLink::Remote(link) => {
-                        self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
-                        self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                        self.ledger.remote_bytes.add(nbytes);
+                        self.ledger.remote_requests.inc();
                         if self.overlap_pulls {
-                            self.ledger.overlapped_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                            self.ledger.overlapped_bytes.add(nbytes);
                         }
                         let (tx, rx) = sync_channel(1);
                         let n_slots = slots[s].len();
@@ -399,6 +404,7 @@ impl CommHandle for AsyncKvClient {
     /// background; local shards apply inline. Returns once queued —
     /// [`CommHandle::drain`] is the completion barrier.
     fn push(&mut self, table: TableId, ids: &[u64], dim: usize, rows: &[f32]) -> Result<()> {
+        let _push_span = span(SpanId::KvPush);
         debug_assert_eq!(rows.len(), ids.len() * dim);
         let n = self.links.len();
         let mut slots: Vec<Vec<u64>> = vec![Vec::new(); n];
@@ -415,16 +421,16 @@ impl CommHandle for AsyncKvClient {
             let nbytes = (data[s].len() * 4 + slots[s].len() * 8) as u64;
             match &self.links[s] {
                 AsyncLink::Local(state) => {
-                    self.ledger.local_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.local_bytes.add(nbytes);
                     state.push_local(table, &slots[s], &data[s]);
                     self.local_pushes += 1;
                 }
                 AsyncLink::Remote(link) => {
-                    self.ledger.remote_bytes.fetch_add(nbytes, Ordering::Relaxed);
-                    self.ledger.remote_requests.fetch_add(1, Ordering::Relaxed);
+                    self.ledger.remote_bytes.add(nbytes);
+                    self.ledger.remote_requests.inc();
                     // a queued push is off the critical path: its wire time
                     // overlaps the trainer's next sample/pull/compute
-                    self.ledger.overlapped_bytes.fetch_add(nbytes, Ordering::Relaxed);
+                    self.ledger.overlapped_bytes.add(nbytes);
                     self.submitted_per_link[s] += 1;
                     link.send(Req::Push {
                         table,
@@ -438,6 +444,7 @@ impl CommHandle for AsyncKvClient {
     }
 
     fn drain(&mut self) -> Result<()> {
+        let _drain_span = span(SpanId::KvDrain);
         // fan the barrier out, then wait — links drain concurrently
         let mut acks = Vec::new();
         for link in &self.links {
@@ -547,6 +554,7 @@ fn writer_loop(mut wr: TcpStream, rx: Receiver<Req>, win: Arc<InflightWindow<Pen
 /// writer progress (no write/read deadlock however deep the pipeline),
 /// matching each against the front of the pending window and verifying
 /// its echoed tag.
+// lint:allow(metrics-registry) — ack flow-control cell, see acked_per_link
 fn reader_loop(mut rd: TcpStream, win: Arc<InflightWindow<Pending>>, acked: Arc<AtomicU64>) {
     loop {
         let p = match win.pop() {
@@ -742,6 +750,7 @@ impl<'scope> DistPrefetcher<'scope> {
         shape: StepShape,
         rel_dim: usize,
         depth: usize,
+        // lint:allow(metrics-registry) — applied stamp (Release/Acquire), not a stat
         applied: Arc<AtomicU64>,
     ) -> Result<DistPrefetcher<'scope>> {
         let depth = depth.max(2);

@@ -10,10 +10,11 @@
 //!   speak the frame protocol; one service thread per connection.
 
 use super::protocol::*;
+use crate::obs::metrics::{global, Counter};
 use crate::store::{EmbeddingStore, SparseAdagrad, StoreConfig};
 use anyhow::Result;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// In-memory state of one server (shared-memory fast path operates on
@@ -26,9 +27,10 @@ pub struct ServerState {
     pub rels: Arc<dyn EmbeddingStore>,
     pub ent_opt: SparseAdagrad,
     pub rel_opt: SparseAdagrad,
-    /// ops served (pulls, pushes) — diagnostics
-    pub pulls: AtomicU64,
-    pub pushes: AtomicU64,
+    /// ops served (pulls, pushes) — diagnostics; registry cells under
+    /// `kv.server.*`, read per-shard via `.get()`
+    pub pulls: Counter,
+    pub pushes: Counter,
 }
 
 impl ServerState {
@@ -113,8 +115,8 @@ impl ServerState {
             )?,
             ents,
             rels,
-            pulls: AtomicU64::new(0),
-            pushes: AtomicU64::new(0),
+            pulls: global().counter("kv.server.pulls"),
+            pushes: global().counter("kv.server.pushes"),
         })
     }
 
@@ -127,13 +129,13 @@ impl ServerState {
 
     /// Shared-memory pull: copy rows at `slots` into `out`.
     pub fn pull_local(&self, t: TableId, slots: &[u64], out: &mut [f32]) {
-        self.pulls.fetch_add(1, Ordering::Relaxed);
+        self.pulls.inc();
         self.table(t).gather(slots, out);
     }
 
     /// Shared-memory push: apply AdaGrad to rows at `slots`.
     pub fn push_local(&self, t: TableId, slots: &[u64], rows: &[f32]) {
-        self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.pushes.inc();
         match t {
             TableId::Entities => self.ent_opt.apply(self.ents.as_ref(), slots, rows),
             TableId::Relations => self.rel_opt.apply(self.rels.as_ref(), slots, rows),
@@ -334,7 +336,7 @@ mod tests {
             write_frame(&mut stream, OP_STOP, &[]).unwrap();
             let _ = read_frame(&mut stream);
         });
-        assert!(server.state.pulls.load(Ordering::Relaxed) >= 80);
+        assert!(server.state.pulls.get() >= 80);
     }
 
     #[test]

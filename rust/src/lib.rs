@@ -58,6 +58,7 @@ pub mod dist;
 pub mod eval;
 pub mod kg;
 pub mod kvstore;
+pub mod obs;
 pub mod partition;
 pub mod repro;
 pub mod runtime;

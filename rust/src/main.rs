@@ -10,6 +10,7 @@
 //!   serve       answer top-k link-prediction queries from a checkpoint
 //!               (versioned snapshot + threaded request loop)
 //!   repro       regenerate the paper's accuracy tables (table4..table9)
+//!   trace-check validate a Chrome-trace JSON written by --trace
 //!
 //! `train` and `dist-train` are thin flag→`RunSpec` translators over the
 //! library's `api::Session`: `--config run.json` loads a spec file (any
@@ -26,7 +27,7 @@ use dglke::models::ModelKind;
 use dglke::partition::{GraphPartition, MetisConfig};
 use dglke::runtime::BackendKind;
 
-const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|serve|export|repro> [--flags]
+const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only|serve|export|repro|trace-check> [--flags]
   common: --dataset fb15k-syn|wn18-syn|freebase-syn[:scale]|tiny|<tsv-dir>
           --model transe_l1|transe_l2|distmult|complex|rescal|rotate|transr
           --backend native|xla (default native) --tag default|tiny --seed N
@@ -35,6 +36,10 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
           --storage dense|sharded|mmap --shards N --storage-dir DIR
           --budget-mb F (tables over the budget must use mmap)
           --cache-mb F (mmap hot-row cache size; default budget-mb)
+          --trace (record spans; write Chrome trace JSON after the run)
+          --trace-path FILE (implies --trace; default trace.json)
+          --metrics-out FILE (write the obs::metrics snapshot as JSON;
+          implies attaching it to the run report)
   train:  --workers N --batches N(per worker) --lr F --gpu (simulate GPUs)
           --margin F --adv-temp F --degree-frac F --no-async --no-rel-part
           --prefetch (overlap next-batch sample+gather with compute)
@@ -58,7 +63,8 @@ const USAGE: &str = "usage: dglke <train|dist-train|partition|gen-data|eval-only
   export: --checkpoint DIR (required) --tsv (entities.tsv/relations.tsv,
           lossless: f32 Display round-trips the stored bits)
           --out DIR (default: the checkpoint dir)
-  repro:  --exp table4..table9|all --scale F --out DIR";
+  repro:  --exp table4..table9|all --scale F --out DIR
+  trace-check: dglke trace-check FILE (schema + span-nesting validation)";
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -73,6 +79,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(args),
         "export" => cmd_export(args),
         "repro" => cmd_repro(args),
+        "trace-check" => cmd_trace_check(args),
         _ => {
             if args.flag("help") || cmd.is_empty() {
                 println!("{USAGE}");
@@ -172,6 +179,13 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
     if let Some(v) = args.get("cache-mb") {
         spec.storage.cache_mb = Some(v.parse().with_context(|| format!("bad --cache-mb {v}"))?);
     }
+    if args.flag("trace") {
+        spec.obs.trace = true;
+    }
+    if let Some(v) = args.get("trace-path") {
+        spec.obs.trace = true;
+        spec.obs.trace_path = Some(v);
+    }
 
     if dist {
         let (mut machines, mut trainers, mut servers, mut partition, mut local_negatives) =
@@ -215,10 +229,14 @@ fn spec_from_flags(args: &mut Args, dist: bool) -> Result<RunSpec> {
 
 /// `train` and `dist-train`: flag→spec translation + `Session` run.
 fn cmd_run(mut args: Args, dist: bool) -> Result<()> {
-    let spec = spec_from_flags(&mut args, dist)?;
+    let mut spec = spec_from_flags(&mut args, dist)?;
     let dump = args.flag("dump-config");
     let report_path = args.get("report");
     let export_dir = args.get("export");
+    let metrics_out = args.get("metrics-out");
+    if metrics_out.is_some() {
+        spec.obs.metrics = true;
+    }
     args.finish()?;
 
     if dump {
@@ -246,6 +264,15 @@ fn cmd_run(mut args: Args, dist: bool) -> Result<()> {
     if let Some(path) = report_path {
         std::fs::write(&path, report.to_json_string())
             .with_context(|| format!("writing report {path}"))?;
+        println!("[wrote {path}]");
+    }
+    if let Some(path) = metrics_out {
+        let snap = report
+            .obs_metrics
+            .clone()
+            .unwrap_or_else(|| dglke::obs::metrics::global().snapshot());
+        std::fs::write(&path, snap.to_json().to_string())
+            .with_context(|| format!("writing metrics snapshot {path}"))?;
         println!("[wrote {path}]");
     }
     if let Some(dir) = export_dir {
@@ -416,14 +443,29 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let qps = if total_s > 0.0 { n_queries as f64 / total_s } else { 0.0 };
     println!(
         "answered {} queries (top-{}) on {} threads in {:.3}s: {:.0} QPS, \
-         batch latency p50 {:.2} ms / p95 {:.2} ms",
+         batch latency p50 {:.2} ms / p95 {:.2} ms / p99 {:.2} ms",
         handle.served(),
         cfg.topk,
         cfg.threads,
         total_s,
         qps,
         pct(0.50),
-        pct(0.95)
+        pct(0.95),
+        pct(0.99)
+    );
+    // the handle's obs::metrics histograms: per-job queue/score and
+    // whole-submit latency (log-2 buckets, so ~2x resolution)
+    let lats = handle.latencies();
+    let us = |ns: f64| ns / 1e3;
+    println!(
+        "histograms (us): queue p50 {:.0} p99 {:.0} | score p50 {:.0} p99 {:.0} | \
+         query p50 {:.0} p99 {:.0}",
+        us(lats.queue_ns.percentile(0.50)),
+        us(lats.queue_ns.percentile(0.99)),
+        us(lats.score_ns.percentile(0.50)),
+        us(lats.score_ns.percentile(0.99)),
+        us(lats.query_ns.percentile(0.50)),
+        us(lats.query_ns.percentile(0.99))
     );
     if let Some(path) = report_path {
         let mut m = std::collections::BTreeMap::new();
@@ -435,6 +477,23 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         m.insert("qps".to_string(), num(qps));
         m.insert("batch_p50_ms".to_string(), num(pct(0.50)));
         m.insert("batch_p95_ms".to_string(), num(pct(0.95)));
+        m.insert("batch_p99_ms".to_string(), num(pct(0.99)));
+        for (name, h) in [
+            ("queue", &lats.queue_ns),
+            ("score", &lats.score_ns),
+            ("batch", &lats.batch_ns),
+            ("query", &lats.query_ns),
+        ] {
+            m.insert(format!("{name}_p50_ns"), num(h.percentile(0.50)));
+            m.insert(format!("{name}_p95_ns"), num(h.percentile(0.95)));
+            m.insert(format!("{name}_p99_ns"), num(h.percentile(0.99)));
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+        m.insert("host_cores".to_string(), num(cores as f64));
+        m.insert(
+            "host_arch".to_string(),
+            dglke::util::json::Json::Str(std::env::consts::ARCH.to_string()),
+        );
         std::fs::write(&path, dglke::util::json::Json::Obj(m).to_string())
             .with_context(|| format!("writing report {path}"))?;
         println!("[wrote {path}]");
@@ -469,6 +528,30 @@ fn cmd_export(mut args: Args) -> Result<()> {
     );
     let (e_path, r_path) = export_tsv(&snapshot, std::path::Path::new(&out))?;
     println!("[wrote {} and {}]", e_path.display(), r_path.display());
+    Ok(())
+}
+
+/// `dglke trace-check FILE`: schema + per-thread span-nesting validation
+/// of a Chrome-trace JSON written by `--trace` (library API:
+/// `obs::trace::validate_chrome_trace`). Exits non-zero on an invalid
+/// trace, so `make trace` can gate on it.
+fn cmd_trace_check(mut args: Args) -> Result<()> {
+    let file = args
+        .positional()
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("trace-check requires a trace FILE\n{USAGE}"))?;
+    args.finish()?;
+    let text =
+        std::fs::read_to_string(&file).with_context(|| format!("reading trace {file}"))?;
+    let check = dglke::obs::trace::validate_chrome_trace(&text)
+        .map_err(|e| anyhow!("{file}: invalid trace: {e}"))?;
+    println!(
+        "{file}: valid Chrome trace — {} events, {} threads, {} complete spans",
+        check.events,
+        check.threads,
+        check.intervals.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,488 @@
+//! Process-wide metrics registry: named counters, gauges, and log-2
+//! histograms behind cheap cloneable handles.
+//!
+//! Design:
+//!
+//! * A handle owns its own atomic cell(s); constructing one through
+//!   [`Registry::counter`] / [`Registry::gauge`] /
+//!   [`Registry::histogram`] registers the cell under a dotted name.
+//!   Several instances may register the same name (one `CachedStore`
+//!   per run, a `NetLedger` per client); [`Registry::snapshot`] sums
+//!   same-named cells, while each owner keeps reading its private cell
+//!   for per-instance reports — exactly the semantics the old ad-hoc
+//!   struct counters had, so converting them is behavior-preserving.
+//! * All cell traffic is `Ordering::Relaxed`: metrics are statistics,
+//!   never data publication (relaxed-allowlist.toml; audit table in
+//!   docs/CONCURRENCY.md). Nothing may branch on a metric to decide
+//!   data visibility.
+//! * Zero dependencies; snapshots serialize through `util::json` and
+//!   round-trip losslessly ([`Snapshot::from_json`]), which is how they
+//!   ride inside `api::Report` and `dglke … --metrics-out FILE`.
+//!
+//! Naming scheme is `<area>.<object>.<stat>` (`store.cache.hits`,
+//! `kv.net.remote_bytes`, `serve.score_ns`); the catalog lives in
+//! docs/OBSERVABILITY.md. Histograms bucket by bit width (bucket 0
+//! holds exactly 0; bucket `b >= 1` holds `2^(b-1) ..= 2^b - 1`), so
+//! one 65-slot array spans the full `u64` range with ~2x resolution —
+//! coarse, but allocation-free and mergeable by addition.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Number of histogram buckets: one per possible bit width of a `u64`,
+/// plus bucket 0 for the value zero.
+pub const HISTO_BUCKETS: usize = 65;
+
+/// Bucket index for a recorded value: its bit width (0 for 0).
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive `(lo, hi)` value range covered by bucket `b`.
+pub fn bucket_bounds(b: usize) -> (u64, u64) {
+    match b {
+        0 => (0, 0),
+        64 => (1 << 63, u64::MAX),
+        _ => (1 << (b - 1), (1 << b) - 1),
+    }
+}
+
+/// Monotonically increasing count.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// An unregistered counter (for tests / default-constructed structs).
+    pub fn detached() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A level that can move both ways (e.g. cache resident rows).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn detached() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-2-bucketed histogram cells shared by a [`Histogram`] handle and
+/// the registry.
+#[derive(Debug)]
+pub struct HistoCells {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl HistoCells {
+    fn new() -> HistoCells {
+        HistoCells {
+            buckets: (0..HISTO_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = Vec::new();
+        for (b, cell) in self.buckets.iter().enumerate() {
+            let n = cell.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push((b, n));
+            }
+        }
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Distribution of recorded values (typically durations in ns).
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistoCells>);
+
+impl Histogram {
+    pub fn detached() -> Histogram {
+        Histogram(Arc::new(HistoCells::new()))
+    }
+
+    pub fn record(&self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `v` with multiplicity `n` (e.g. a per-query time applied
+    /// to every query of a batch) at the cost of one bucket update.
+    pub fn record_n(&self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.0.buckets[bucket_of(v)].fetch_add(n, Ordering::Relaxed);
+        self.0.count.fetch_add(n, Ordering::Relaxed);
+        self.0.sum.fetch_add(v.saturating_mul(n), Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.0.snapshot()
+    }
+}
+
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistoCells>),
+}
+
+/// The registry proper: a name -> cell multimap. Registration is rare
+/// (struct construction); the handles never touch the lock again.
+pub struct Registry {
+    inner: Mutex<Vec<(String, Cell)>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(Vec::new()) }
+    }
+
+    fn entries(&self) -> MutexGuard<'_, Vec<(String, Cell)>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let c = Counter::detached();
+        self.entries().push((name.to_string(), Cell::Counter(c.0.clone())));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let g = Gauge::detached();
+        self.entries().push((name.to_string(), Cell::Gauge(g.0.clone())));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let h = Histogram::detached();
+        self.entries().push((name.to_string(), Cell::Histogram(h.0.clone())));
+        h
+    }
+
+    /// Sum every registered cell by name. Cumulative over the process
+    /// lifetime — per-run deltas belong to the owning structs, which
+    /// keep their own handles.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for (name, cell) in self.entries().iter() {
+            match cell {
+                Cell::Counter(c) => {
+                    *snap.counters.entry(name.clone()).or_insert(0) +=
+                        c.load(Ordering::Relaxed);
+                }
+                Cell::Gauge(g) => {
+                    *snap.gauges.entry(name.clone()).or_insert(0) +=
+                        g.load(Ordering::Relaxed);
+                }
+                Cell::Histogram(h) => {
+                    snap.histograms
+                        .entry(name.clone())
+                        .or_insert_with(HistogramSnapshot::default)
+                        .merge(&h.snapshot());
+                }
+            }
+        }
+        snap
+    }
+}
+
+/// The process-wide registry instance every subsystem registers into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ------------------------------------------------------------- snapshot
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// Sparse `(bucket, count)` pairs, ascending by bucket.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistogramSnapshot {
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        let mut merged: BTreeMap<usize, u64> = self.buckets.iter().copied().collect();
+        for &(b, n) in &other.buckets {
+            *merged.entry(b).or_insert(0) += n;
+        }
+        self.buckets = merged.into_iter().collect();
+    }
+
+    /// The p-quantile (`0.0 ..= 1.0`) as the upper bound of the bucket
+    /// holding the target rank — a conservative (never-understated)
+    /// latency figure with log-2 resolution.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0);
+        let mut cum = 0.0;
+        for &(b, n) in &self.buckets {
+            cum += n as f64;
+            if cum >= target {
+                return bucket_bounds(b).1 as f64;
+            }
+        }
+        bucket_bounds(HISTO_BUCKETS - 1).1 as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// A point-in-time reading of the whole registry, JSON round-trippable.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        let num_map = |m: &BTreeMap<String, u64>| {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect())
+        };
+        let histos = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    let buckets = Json::Arr(
+                        h.buckets
+                            .iter()
+                            .map(|&(b, n)| {
+                                Json::Arr(vec![Json::Num(b as f64), Json::Num(n as f64)])
+                            })
+                            .collect(),
+                    );
+                    (
+                        k.clone(),
+                        obj(vec![
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", Json::Num(h.sum as f64)),
+                            ("buckets", buckets),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("counters", num_map(&self.counters)),
+            ("gauges", num_map(&self.gauges)),
+            ("histograms", histos),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Snapshot, String> {
+        let num_map = |j: Option<&Json>, what: &str| -> Result<BTreeMap<String, u64>, String> {
+            let mut out = BTreeMap::new();
+            if let Some(Json::Obj(m)) = j {
+                for (k, v) in m {
+                    let n = v.as_f64().ok_or_else(|| format!("{what}.{k}: not a number"))?;
+                    out.insert(k.clone(), n as u64);
+                }
+            }
+            Ok(out)
+        };
+        let mut snap = Snapshot {
+            counters: num_map(j.get("counters"), "counters")?,
+            gauges: num_map(j.get("gauges"), "gauges")?,
+            histograms: BTreeMap::new(),
+        };
+        if let Some(Json::Obj(m)) = j.get("histograms") {
+            for (k, v) in m {
+                let count = v.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let sum = v.get("sum").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let mut buckets = Vec::new();
+                for pair in v.get("buckets").and_then(Json::as_arr).unwrap_or(&[]) {
+                    let p = pair.as_arr().ok_or_else(|| format!("histograms.{k}: bad bucket"))?;
+                    if p.len() != 2 {
+                        return Err(format!("histograms.{k}: bucket pair has {} items", p.len()));
+                    }
+                    let b = p[0].as_usize().ok_or_else(|| format!("histograms.{k}: bad index"))?;
+                    let n =
+                        p[1].as_f64().ok_or_else(|| format!("histograms.{k}: bad count"))? as u64;
+                    buckets.push((b, n));
+                }
+                snap.histograms.insert(k.clone(), HistogramSnapshot { count, sum, buckets });
+            }
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_math_bounds_every_value() {
+        // property: every value lands in exactly the bucket whose
+        // inclusive bounds contain it
+        let mut x: u64 = 0x2545_F491_4F6C_DD1D;
+        let mut probe = |v: u64| {
+            let b = bucket_of(v);
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= v && v <= hi, "v={v} b={b} lo={lo} hi={hi}");
+            if b > 0 {
+                let (plo, phi) = bucket_bounds(b - 1);
+                assert!(phi < lo && plo <= phi, "buckets must tile without overlap");
+            }
+        };
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 255, 256, u64::MAX - 1, u64::MAX] {
+            probe(v);
+        }
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            probe(x);
+            probe(x >> (x % 64));
+        }
+        // bucket bounds tile the full u64 range
+        assert_eq!(bucket_bounds(0), (0, 0));
+        assert_eq!(bucket_bounds(1), (1, 1));
+        assert_eq!(bucket_bounds(64).1, u64::MAX);
+        for b in 1..HISTO_BUCKETS {
+            assert_eq!(bucket_bounds(b).0, bucket_bounds(b - 1).1 + 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotonic_and_conservative() {
+        let h = Histogram::detached();
+        for v in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        let p50 = s.percentile(0.50);
+        let p95 = s.percentile(0.95);
+        let p99 = s.percentile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of nine 1s is bucket(1)'s upper bound = 1
+        assert_eq!(p50, 1.0);
+        // the outlier dominates the tail; upper bound never understates
+        assert!(p99 >= 1000.0);
+        // empty histogram
+        assert_eq!(HistogramSnapshot::default().percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn record_n_matches_n_records() {
+        let a = Histogram::detached();
+        let b = Histogram::detached();
+        for _ in 0..7 {
+            a.record(300);
+        }
+        b.record_n(300, 7);
+        assert_eq!(a.snapshot(), b.snapshot());
+        b.record_n(300, 0); // no-op
+        assert_eq!(a.snapshot(), b.snapshot());
+    }
+
+    #[test]
+    fn registry_sums_same_named_cells() {
+        let r = Registry::new();
+        let c1 = r.counter("t.hits");
+        let c2 = r.counter("t.hits");
+        let g = r.gauge("t.resident");
+        let h1 = r.histogram("t.lat");
+        let h2 = r.histogram("t.lat");
+        c1.add(3);
+        c2.add(4);
+        g.add(10);
+        g.sub(4);
+        h1.record(5);
+        h2.record(500);
+        let s = r.snapshot();
+        assert_eq!(s.counters.get("t.hits"), Some(&7));
+        assert_eq!(s.gauges.get("t.resident"), Some(&6));
+        let lat = s.histograms.get("t.lat").expect("histogram registered");
+        assert_eq!(lat.count, 2);
+        assert_eq!(lat.sum, 505);
+        // the handles' private cells stay per-instance
+        assert_eq!(c1.get(), 3);
+        assert_eq!(c2.get(), 4);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let r = Registry::new();
+        r.counter("a.b").add(42);
+        r.gauge("c.d").set(17);
+        let h = r.histogram("e.f");
+        h.record(0);
+        h.record(9);
+        h.record_n(1 << 40, 3);
+        let snap = r.snapshot();
+        let text = snap.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&text).expect("parses")).expect("decodes");
+        assert_eq!(snap, back);
+    }
+}

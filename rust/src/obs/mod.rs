@@ -1,0 +1,26 @@
+//! Unified observability layer: metrics registry + tracing spans.
+//!
+//! DGL-KE's claims are about *where time and bytes go* — overlap of
+//! compute with memory access, reduced communication, high operation
+//! efficiency (PAPER.md §3). This module makes that visible from one
+//! run instead of end-of-run aggregates only:
+//!
+//! * [`metrics`] — a process-wide registry of named counters, gauges,
+//!   and log-2 histograms behind cheap cloneable handles. It absorbs
+//!   the formerly ad-hoc `AtomicU64` stats (`CachedStore` hit/miss,
+//!   `NetLedger` traffic, `TransferLedger` PCIe bytes, serve counters)
+//!   and snapshots into `api::Report` JSON and `--metrics-out`.
+//! * [`trace`] — thread-scoped begin/end span events on a monotonic
+//!   clock, pushed into per-thread lock-free buffers and drained to
+//!   Chrome trace-event JSON (open in Perfetto / `chrome://tracing`).
+//!   Enabled by `RunSpec.obs.trace` / `--trace`; a disabled span costs
+//!   one relaxed load and a branch.
+//!
+//! Contract (docs/OBSERVABILITY.md): observability on vs off is
+//! byte-identical for training outputs — spans and metrics observe,
+//! they never steer. The equivalence matrix in
+//! `rust/tests/obs_tests.rs` enforces this the same way the prefetch
+//! and kernel matrices do.
+
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,561 @@
+//! Tracing spans: begin/end events on a monotonic clock, pushed into
+//! per-thread lock-free buffers and exported as Chrome trace-event JSON
+//! (load the file in Perfetto or `chrome://tracing` to *see* the
+//! prefetch pipeline overlapping batch N+1 with batch N).
+//!
+//! ## Hot-path contract
+//!
+//! [`span`] with tracing disabled is one `Relaxed` load and a branch —
+//! nothing else. Enabled, a span is two pushes into this thread's
+//! [`SpanBuf`]: a slot write published by a `Release` store of the
+//! length, which the drain side reads back with `Acquire`
+//! (ordering-pairs.toml `trace-buf-len`; loom contract 11 in
+//! `rust/tests/loom_tests.rs` proves a drain never reads a half-written
+//! record and loses nothing once the writer has quiesced). Buffers are
+//! append-only and fixed-capacity; overflow increments a drop counter
+//! instead of blocking or reallocating, so tracing can never stall a
+//! worker.
+//!
+//! ## Lifecycle
+//!
+//! One trace session at a time: [`start`] claims the global collector
+//! (waiting out any concurrent session — test processes run sessions in
+//! parallel), instrumented threads lazily register a buffer on their
+//! first span, and [`TraceGuard::finish`] disables collection, drains
+//! every buffer, and returns the [`TraceData`] to serialize. Threads
+//! must quiesce (scoped-join, `ServeHandle::shutdown`) before `finish`
+//! — events raced past the drain are dropped, never torn. Timestamps
+//! are per-thread strictly monotonic by construction (ties bump by
+//! 1 ns), which [`validate_chrome_trace`] checks along with the schema.
+//!
+//! Span identity is the closed [`SpanId`] catalog, not free strings —
+//! an event is two `u64`s and the name table ships with the binary.
+//! The catalog and instrumented seams are listed in
+//! docs/OBSERVABILITY.md.
+
+use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Mutex};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Events a single thread can buffer before new ones are counted as
+/// dropped instead (64 Ki events = 32 Ki spans ≈ a long traced run).
+pub const BUF_CAPACITY: usize = 1 << 16;
+
+/// The span catalog. Keep `SPAN_NAMES` index-aligned with the
+/// discriminants; docs/OBSERVABILITY.md documents each seam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanId {
+    TrainEpoch = 0,
+    TrainBatch = 1,
+    Sample = 2,
+    Gather = 3,
+    Compute = 4,
+    Update = 5,
+    SyncBarrier = 6,
+    PrefetchSample = 7,
+    PrefetchGather = 8,
+    PrefetchPatch = 9,
+    KvPullWave = 10,
+    KvPush = 11,
+    KvDrain = 12,
+    ServeRequest = 13,
+    ServeScore = 14,
+    ServeReassemble = 15,
+    SwapPublish = 16,
+}
+
+pub const SPAN_NAMES: [&str; 17] = [
+    "train.epoch",
+    "train.batch",
+    "train.sample",
+    "train.gather",
+    "train.compute",
+    "train.update",
+    "train.sync",
+    "prefetch.sample",
+    "prefetch.gather",
+    "prefetch.patch",
+    "kv.pull_wave",
+    "kv.push",
+    "kv.drain",
+    "serve.request",
+    "serve.score",
+    "serve.reassemble",
+    "swap.publish",
+];
+
+impl SpanId {
+    pub fn name(self) -> &'static str {
+        SPAN_NAMES[self as usize]
+    }
+}
+
+fn name_of(id: u64) -> &'static str {
+    usize::try_from(id).ok().and_then(|i| SPAN_NAMES.get(i)).copied().unwrap_or("unknown")
+}
+
+// ------------------------------------------------------------- SpanBuf
+
+struct Slot {
+    ts: AtomicU64,
+    code: AtomicU64,
+}
+
+/// Fixed-capacity single-writer event buffer. The owning thread appends
+/// with [`push`](SpanBuf::push); any thread may [`drain`](SpanBuf::drain)
+/// a consistent prefix at any time. A record becomes visible only via
+/// the `Release` store of `len` after both of its words are written, so
+/// a drain can observe "not yet" but never "half".
+pub struct SpanBuf {
+    tid: u64,
+    slots: Vec<Slot>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl SpanBuf {
+    pub fn with_capacity(tid: u64, cap: usize) -> SpanBuf {
+        SpanBuf {
+            tid,
+            slots: (0..cap)
+                .map(|_| Slot { ts: AtomicU64::new(0), code: AtomicU64::new(0) })
+                .collect(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    /// Append one event. Single-writer: only the owning thread calls
+    /// this. Returns false (and counts a drop) when full.
+    pub fn push(&self, ts: u64, code: u64) -> bool {
+        let i = self.len.load(Ordering::Relaxed);
+        if i >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        self.slots[i].ts.store(ts, Ordering::Relaxed);
+        self.slots[i].code.store(code, Ordering::Relaxed);
+        self.len.store(i + 1, Ordering::Release);
+        true
+    }
+
+    /// Read the published prefix. The `Acquire` on `len` pairs with
+    /// `push`'s `Release`, making every slot below it fully visible.
+    pub fn drain(&self) -> Vec<(u64, u64)> {
+        let n = self.len.load(Ordering::Acquire);
+        self.slots[..n]
+            .iter()
+            .map(|s| (s.ts.load(Ordering::Relaxed), s.code.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+// -------------------------------------------------------- global state
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SESSION: AtomicU64 = AtomicU64::new(0);
+
+struct TraceState {
+    active: bool,
+    start: Option<Instant>,
+    bufs: Vec<Arc<SpanBuf>>,
+}
+
+static STATE: Mutex<TraceState> =
+    Mutex::new(TraceState { active: false, start: None, bufs: Vec::new() });
+
+struct ThreadTrace {
+    session: u64,
+    base: Instant,
+    last_ts: u64,
+    buf: Arc<SpanBuf>,
+}
+
+thread_local! {
+    static TLS: RefCell<Option<ThreadTrace>> = const { RefCell::new(None) };
+}
+
+/// Owns the active trace session; dropping without [`finish`] discards
+/// the collected events and frees the collector.
+pub struct TraceGuard {
+    done: bool,
+}
+
+/// Claim the collector and start recording. Blocks while another trace
+/// session is active (sessions are process-global; parallel test
+/// processes each get their own).
+pub fn start() -> TraceGuard {
+    loop {
+        {
+            let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+            if !st.active {
+                st.active = true;
+                st.start = Some(Instant::now());
+                st.bufs = Vec::new();
+                SESSION.fetch_add(1, Ordering::Relaxed);
+                ENABLED.store(true, Ordering::Relaxed);
+                return TraceGuard { done: false };
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+
+/// True while a trace session is recording.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+impl TraceGuard {
+    /// Stop recording and drain every thread's buffer. Call after the
+    /// instrumented threads have quiesced (joined or barriered) so
+    /// nothing is still appending.
+    pub fn finish(mut self) -> TraceData {
+        self.done = true;
+        ENABLED.store(false, Ordering::Relaxed);
+        let bufs = {
+            let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+            st.active = false;
+            st.start = None;
+            std::mem::take(&mut st.bufs)
+        };
+        let mut threads = Vec::new();
+        let mut dropped = 0;
+        for b in bufs {
+            dropped += b.dropped();
+            threads.push(DrainedThread { tid: b.tid(), events: b.drain() });
+        }
+        TraceData { threads, dropped }
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            ENABLED.store(false, Ordering::Relaxed);
+            let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+            st.active = false;
+            st.start = None;
+            st.bufs = Vec::new();
+        }
+    }
+}
+
+fn push_event(id: SpanId, end: bool) {
+    TLS.with(|cell| {
+        let mut tls = cell.borrow_mut();
+        let cur = SESSION.load(Ordering::Relaxed);
+        let stale = match tls.as_ref() {
+            Some(t) => t.session != cur,
+            None => true,
+        };
+        if stale {
+            // first span of this thread in this session: register a buffer
+            let bound = {
+                let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+                match (st.active, st.start) {
+                    (true, Some(base)) => {
+                        let tid = st.bufs.len() as u64 + 1;
+                        let buf = Arc::new(SpanBuf::with_capacity(tid, BUF_CAPACITY));
+                        st.bufs.push(buf.clone());
+                        Some(ThreadTrace { session: cur, base, last_ts: 0, buf })
+                    }
+                    _ => None, // session ended between the enabled check and here
+                }
+            };
+            match bound {
+                Some(t) => *tls = Some(t),
+                None => return,
+            }
+        }
+        if let Some(t) = tls.as_mut() {
+            let raw = u64::try_from(t.base.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            // strictly monotonic per thread: coincident readings bump 1 ns
+            let ts = raw.max(t.last_ts + 1);
+            t.last_ts = ts;
+            let code = ((id as u64) << 1) | u64::from(end);
+            t.buf.push(ts, code);
+        }
+    });
+}
+
+/// RAII span: records a begin event now and the matching end event on
+/// drop. With tracing off this is a single relaxed load and a branch.
+pub struct Span {
+    armed: bool,
+    id: SpanId,
+}
+
+#[inline]
+pub fn span(id: SpanId) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { armed: false, id };
+    }
+    push_event(id, false);
+    Span { armed: true, id }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            push_event(self.id, true);
+        }
+    }
+}
+
+// -------------------------------------------------------------- export
+
+struct DrainedThread {
+    tid: u64,
+    events: Vec<(u64, u64)>,
+}
+
+/// Everything a finished trace session collected.
+pub struct TraceData {
+    threads: Vec<DrainedThread>,
+    /// Events lost to full buffers (0 in any healthy run).
+    pub dropped: u64,
+}
+
+impl TraceData {
+    pub fn event_count(&self) -> usize {
+        self.threads.iter().map(|t| t.events.len()).sum()
+    }
+
+    /// Serialize as Chrome trace-event JSON (the `traceEvents` array of
+    /// `B`/`E` duration events; `ts` is microseconds).
+    pub fn to_chrome_json(&self) -> String {
+        let mut events = Vec::with_capacity(self.event_count());
+        for th in &self.threads {
+            for &(ts, code) in &th.events {
+                let mut e = BTreeMap::new();
+                e.insert("name".to_string(), Json::Str(name_of(code >> 1).to_string()));
+                e.insert("cat".to_string(), Json::Str("dglke".to_string()));
+                e.insert(
+                    "ph".to_string(),
+                    Json::Str(if code & 1 == 1 { "E" } else { "B" }.to_string()),
+                );
+                e.insert("pid".to_string(), Json::Num(1.0));
+                e.insert("tid".to_string(), Json::Num(th.tid as f64));
+                e.insert("ts".to_string(), Json::Num(ts as f64 / 1000.0));
+                events.push(Json::Obj(e));
+            }
+        }
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(events));
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        Json::Obj(top).to_string()
+    }
+}
+
+// ----------------------------------------------------------- validator
+
+/// A completed (begin, end) pair recovered from a trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanInterval {
+    pub name: String,
+    pub tid: u64,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+/// Validation result: counts plus the recovered span intervals.
+#[derive(Debug, Default)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub threads: usize,
+    pub intervals: Vec<SpanInterval>,
+}
+
+impl TraceCheck {
+    /// True if some completed span whose name starts with `a` overlaps
+    /// in time with a span starting with `b` on a *different* thread —
+    /// the pipeline-overlap evidence the trace exists to show.
+    pub fn overlap_exists(&self, a: &str, b: &str) -> bool {
+        self.intervals.iter().any(|x| {
+            x.name.starts_with(a)
+                && self.intervals.iter().any(|y| {
+                    y.name.starts_with(b)
+                        && y.tid != x.tid
+                        && x.start_us < y.end_us
+                        && y.start_us < x.end_us
+                })
+        })
+    }
+}
+
+/// Check a Chrome trace-event JSON document: schema fields present,
+/// every `B` matched by an `E` of the same name in stack order, and
+/// per-thread timestamps strictly increasing. Used by the trace tests
+/// and `dglke trace-check`.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck, String> {
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e:?}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing top-level traceEvents array".to_string())?;
+    let mut check = TraceCheck::default();
+    let mut stacks: BTreeMap<u64, Vec<(String, f64)>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let field = |k: &str| e.get(k).ok_or_else(|| format!("event {i}: missing `{k}`"));
+        let name = field("name")?
+            .as_str()
+            .ok_or_else(|| format!("event {i}: `name` is not a string"))?
+            .to_string();
+        let ph = field("ph")?
+            .as_str()
+            .ok_or_else(|| format!("event {i}: `ph` is not a string"))?;
+        field("pid")?.as_f64().ok_or_else(|| format!("event {i}: `pid` is not a number"))?;
+        let tid = field("tid")?
+            .as_f64()
+            .ok_or_else(|| format!("event {i}: `tid` is not a number"))? as u64;
+        let ts = field("ts")?
+            .as_f64()
+            .ok_or_else(|| format!("event {i}: `ts` is not a number"))?;
+        if let Some(&prev) = last_ts.get(&tid) {
+            if ts <= prev {
+                return Err(format!(
+                    "event {i}: tid {tid} timestamp {ts} not strictly after {prev}"
+                ));
+            }
+        }
+        last_ts.insert(tid, ts);
+        match ph {
+            "B" => stacks.entry(tid).or_default().push((name, ts)),
+            "E" => {
+                let (open, start) = stacks
+                    .entry(tid)
+                    .or_default()
+                    .pop()
+                    .ok_or_else(|| format!("event {i}: E `{name}` on tid {tid} with no open B"))?;
+                if open != name {
+                    return Err(format!(
+                        "event {i}: E `{name}` closes B `{open}` on tid {tid} (bad nesting)"
+                    ));
+                }
+                check.intervals.push(SpanInterval { name, tid, start_us: start, end_us: ts });
+            }
+            other => return Err(format!("event {i}: ph `{other}` (only B/E are emitted)")),
+        }
+        check.events += 1;
+    }
+    for (tid, stack) in &stacks {
+        if let Some((name, _)) = stack.last() {
+            return Err(format!("tid {tid}: B `{name}` never closed"));
+        }
+    }
+    check.threads = last_ts.len();
+    Ok(check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_buf_push_drain_round_trip() {
+        let b = SpanBuf::with_capacity(7, 8);
+        assert!(b.push(1, 10));
+        assert!(b.push(2, 11));
+        assert_eq!(b.drain(), vec![(1, 10), (2, 11)]);
+        assert_eq!(b.tid(), 7);
+        assert_eq!(b.dropped(), 0);
+    }
+
+    #[test]
+    fn span_buf_overflow_counts_drops() {
+        let b = SpanBuf::with_capacity(1, 2);
+        assert!(b.push(1, 0));
+        assert!(b.push(2, 0));
+        assert!(!b.push(3, 0));
+        assert!(!b.push(4, 0));
+        assert_eq!(b.drain().len(), 2);
+        assert_eq!(b.dropped(), 2);
+    }
+
+    /// One test drives the whole global lifecycle: the collector is
+    /// process-wide, so splitting these into parallel #[test]s would
+    /// race each other through ENABLED.
+    #[test]
+    fn session_records_and_exports_valid_chrome_json() {
+        // no session yet: spans must not register buffers or events
+        let inert = span(SpanId::Compute);
+        assert!(!inert.armed);
+        drop(inert);
+
+        let guard = start();
+        {
+            let _epoch = span(SpanId::TrainEpoch);
+            for _ in 0..3 {
+                let _b = span(SpanId::TrainBatch);
+                let _g = span(SpanId::Gather);
+            }
+        }
+        let helper = std::thread::spawn(|| {
+            let _p = span(SpanId::PrefetchGather);
+        });
+        helper.join().expect("helper joins");
+        let data = guard.finish();
+        assert_eq!(data.dropped, 0);
+        assert_eq!(data.event_count(), (1 + 3 * 2 + 1) * 2);
+        let text = data.to_chrome_json();
+        let check = validate_chrome_trace(&text).expect("well-formed");
+        assert_eq!(check.events, data.event_count());
+        assert_eq!(check.threads, 2);
+        assert!(check.intervals.iter().any(|i| i.name == "prefetch.gather"));
+        // collector is free again
+        let g2 = start();
+        drop(g2);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace("[1,2,3]").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\": 3}").is_err());
+        // unmatched B
+        let open = r#"{"traceEvents":[{"name":"a","cat":"c","ph":"B","pid":1,"tid":1,"ts":1.0}]}"#;
+        assert!(validate_chrome_trace(open).unwrap_err().contains("never closed"));
+        // E closing the wrong name
+        let cross = r#"{"traceEvents":[
+            {"name":"a","cat":"c","ph":"B","pid":1,"tid":1,"ts":1.0},
+            {"name":"b","cat":"c","ph":"E","pid":1,"tid":1,"ts":2.0}]}"#;
+        assert!(validate_chrome_trace(cross).unwrap_err().contains("bad nesting"));
+        // non-monotonic per-thread timestamps
+        let warp = r#"{"traceEvents":[
+            {"name":"a","cat":"c","ph":"B","pid":1,"tid":1,"ts":2.0},
+            {"name":"a","cat":"c","ph":"E","pid":1,"tid":1,"ts":2.0}]}"#;
+        assert!(validate_chrome_trace(warp).unwrap_err().contains("strictly"));
+    }
+
+    #[test]
+    fn overlap_detection_requires_distinct_threads() {
+        let mk = |name: &str, tid, s, e| SpanInterval {
+            name: name.to_string(),
+            tid,
+            start_us: s,
+            end_us: e,
+        };
+        let mut c = TraceCheck::default();
+        c.intervals = vec![mk("prefetch.gather", 2, 0.0, 5.0), mk("train.compute", 1, 3.0, 8.0)];
+        assert!(c.overlap_exists("prefetch.", "train.compute"));
+        // same thread: sequential by definition, not pipeline overlap
+        c.intervals = vec![mk("prefetch.gather", 1, 0.0, 5.0), mk("train.compute", 1, 3.0, 8.0)];
+        assert!(!c.overlap_exists("prefetch.", "train.compute"));
+        // disjoint in time
+        c.intervals = vec![mk("prefetch.gather", 2, 0.0, 2.0), mk("train.compute", 1, 3.0, 8.0)];
+        assert!(!c.overlap_exists("prefetch.", "train.compute"));
+    }
+}

@@ -32,6 +32,6 @@ pub mod swap;
 
 pub use export::export_tsv;
 pub use manifest::{vocab_hash, CheckpointManifest, ChunkInfo, TableInfo, FORMAT_VERSION};
-pub use server::{ServeConfig, ServeHandle};
+pub use server::{ServeConfig, ServeHandle, ServeLatencies};
 pub use snapshot::{Query, ServeScratch, Snapshot, SnapshotOptions, TopK};
 pub use swap::Swap;

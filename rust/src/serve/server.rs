@@ -8,16 +8,21 @@
 //! epochs within a job. A multi-job [`ServeHandle::submit`] may span a
 //! publish — per-job atomicity is the contract (`docs/SERVING.md`).
 //!
-//! Built on `util::sync` channels/atomics so `make loom` perturbs the
-//! handoff; the swap latch itself is model-checked separately
-//! (`serve::swap`, loom contracts 9–10).
+//! Built on `util::sync` channels so `make loom` perturbs the handoff;
+//! the swap latch itself is model-checked separately (`serve::swap`,
+//! loom contracts 9–10). Served/error counts and queue/score/batch/query
+//! latency histograms live in the `obs::metrics` registry (`serve.*`);
+//! per-handle reads go through [`ServeHandle::served`] /
+//! [`ServeHandle::latencies`].
 
 use super::snapshot::{Query, ServeScratch, Snapshot, TopK};
 use super::swap::Swap;
-use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::metrics::{global, Counter, Histogram, HistogramSnapshot};
+use crate::obs::trace::{span, SpanId};
 use crate::util::sync::{mpsc, Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Request-loop shape: worker threads, queries per dispatched job, and
 /// the default top-k depth (`RunSpec.serve` carries the same knobs).
@@ -42,7 +47,26 @@ struct Job {
     k: usize,
     /// position of this job's chunk within the submit call
     slot: usize,
+    /// when `submit` put the job on the queue — the worker's dequeue
+    /// timestamp minus this is the job's queue latency
+    enqueued: Instant,
     reply: mpsc::Sender<(usize, Result<Vec<TopK>, String>)>,
+}
+
+/// Point-in-time latency distributions for one [`ServeHandle`], in
+/// nanoseconds. Each field is a log-2 histogram snapshot; use
+/// [`HistogramSnapshot::percentile`] for p50/p95/p99 (values are bucket
+/// upper bounds, so ~2× resolution).
+#[derive(Clone, Debug)]
+pub struct ServeLatencies {
+    /// enqueue → worker dequeue, per job
+    pub queue_ns: HistogramSnapshot,
+    /// snapshot scoring (`query_batch`), per job
+    pub score_ns: HistogramSnapshot,
+    /// enqueue → reply sent (queue + score), per job
+    pub batch_ns: HistogramSnapshot,
+    /// whole `submit` call including reassembly, per call
+    pub query_ns: HistogramSnapshot,
 }
 
 /// Handle to a running serve pool. Dropping it (or calling
@@ -53,21 +77,35 @@ pub struct ServeHandle {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     batch: usize,
-    served: Arc<AtomicU64>,
+    served: Counter,
+    errors: Counter,
+    queue_ns: Histogram,
+    score_ns: Histogram,
+    batch_ns: Histogram,
+    query_ns: Histogram,
 }
 
 impl ServeHandle {
     /// Spawn `cfg.threads` workers serving `snapshot`.
     pub fn start(snapshot: Snapshot, cfg: &ServeConfig) -> ServeHandle {
         let swap = Arc::new(Swap::new(Arc::new(snapshot)));
-        let served = Arc::new(AtomicU64::new(0));
+        let served = global().counter("serve.served");
+        let errors = global().counter("serve.errors");
+        let queue_ns = global().histogram("serve.queue_ns");
+        let score_ns = global().histogram("serve.score_ns");
+        let batch_ns = global().histogram("serve.batch_ns");
+        let query_ns = global().histogram("serve.query_ns");
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..cfg.threads.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let swap = Arc::clone(&swap);
-                let served = Arc::clone(&served);
+                let served = served.clone();
+                let errors = errors.clone();
+                let queue_ns = queue_ns.clone();
+                let score_ns = score_ns.clone();
+                let batch_ns = batch_ns.clone();
                 std::thread::spawn(move || {
                     let mut scratch = ServeScratch::default();
                     loop {
@@ -88,11 +126,22 @@ impl ServeHandle {
                             Ok(j) => j,
                             Err(_) => break, // queue closed: shutdown
                         };
+                        queue_ns.record(job.enqueued.elapsed().as_nanos() as u64);
                         // pin one snapshot for the whole job — a publish
                         // mid-job cannot mix old and new answers
                         let snap = swap.load();
-                        let res = snap.query_batch(&job.queries, job.k, &mut scratch);
-                        served.fetch_add(job.queries.len() as u64, Ordering::Release);
+                        let scored_at = Instant::now();
+                        let res = {
+                            let _s = span(SpanId::ServeScore);
+                            snap.query_batch(&job.queries, job.k, &mut scratch)
+                        };
+                        score_ns.record(scored_at.elapsed().as_nanos() as u64);
+                        if res.is_err() {
+                            errors.inc();
+                        } else {
+                            served.add(job.queries.len() as u64);
+                        }
+                        batch_ns.record(job.enqueued.elapsed().as_nanos() as u64);
                         // a submit() that already bailed dropped its
                         // receiver; that's fine, the job is abandoned
                         let _ =
@@ -101,20 +150,39 @@ impl ServeHandle {
                 })
             })
             .collect();
-        ServeHandle { swap, tx: Some(tx), workers, batch: cfg.batch.max(1), served }
+        ServeHandle {
+            swap,
+            tx: Some(tx),
+            workers,
+            batch: cfg.batch.max(1),
+            served,
+            errors,
+            queue_ns,
+            score_ns,
+            batch_ns,
+            query_ns,
+        }
     }
 
     /// Answer `queries` (top `k` each), fanning chunks of `batch` across
     /// the worker pool and reassembling results in submission order.
     pub fn submit(&self, queries: &[Query], k: usize) -> Result<Vec<TopK>> {
+        let _request = span(SpanId::ServeRequest);
         if queries.is_empty() {
             return Ok(Vec::new());
         }
+        let submitted_at = Instant::now();
         let tx = self.tx.as_ref().ok_or_else(|| anyhow!("serve handle is shut down"))?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let mut n_jobs = 0usize;
         for (slot, chunk) in queries.chunks(self.batch).enumerate() {
-            let job = Job { queries: chunk.to_vec(), k, slot, reply: reply_tx.clone() };
+            let job = Job {
+                queries: chunk.to_vec(),
+                k,
+                slot,
+                enqueued: Instant::now(),
+                reply: reply_tx.clone(),
+            };
             if tx.send(job).is_err() {
                 bail!("serve workers have shut down");
             }
@@ -122,16 +190,21 @@ impl ServeHandle {
         }
         drop(reply_tx);
         let mut slots: Vec<Option<Vec<TopK>>> = vec![None; n_jobs];
-        for _ in 0..n_jobs {
-            let (slot, res) = reply_rx
-                .recv()
-                .map_err(|_| anyhow!("serve worker exited without replying"))?;
-            match res {
-                Ok(answers) => slots[slot] = Some(answers),
-                Err(e) => bail!("serve query failed: {e}"),
+        let answers = {
+            let _s = span(SpanId::ServeReassemble);
+            for _ in 0..n_jobs {
+                let (slot, res) = reply_rx
+                    .recv()
+                    .map_err(|_| anyhow!("serve worker exited without replying"))?;
+                match res {
+                    Ok(answers) => slots[slot] = Some(answers),
+                    Err(e) => bail!("serve query failed: {e}"),
+                }
             }
-        }
-        Ok(slots.into_iter().flatten().flatten().collect())
+            slots.into_iter().flatten().flatten().collect()
+        };
+        self.query_ns.record(submitted_at.elapsed().as_nanos() as u64);
+        Ok(answers)
     }
 
     /// Hot-swap to a new snapshot; in-flight jobs finish on the old one.
@@ -152,7 +225,24 @@ impl ServeHandle {
 
     /// Total queries answered (across all workers and snapshots).
     pub fn served(&self) -> u64 {
-        self.served.load(Ordering::Acquire)
+        self.served.get()
+    }
+
+    /// Jobs whose scoring failed (the submit call sees the error too).
+    pub fn errors(&self) -> u64 {
+        self.errors.get()
+    }
+
+    /// Snapshot of this handle's latency histograms (ns). The same
+    /// distributions are visible — summed across handles — in
+    /// `obs::metrics` snapshots under `serve.*_ns`.
+    pub fn latencies(&self) -> ServeLatencies {
+        ServeLatencies {
+            queue_ns: self.queue_ns.snapshot(),
+            score_ns: self.score_ns.snapshot(),
+            batch_ns: self.batch_ns.snapshot(),
+            query_ns: self.query_ns.snapshot(),
+        }
     }
 
     /// Close the queue and join every worker.

@@ -23,12 +23,15 @@ use crate::util::sync::{Arc, Mutex, MutexGuard};
 /// Shared slot holding the current snapshot and its publish epoch.
 pub struct Swap<T> {
     current: Mutex<Arc<T>>,
+    // lint:allow(metrics-registry) — epoch handshake cell (Release store /
+    // Acquire load, `swap-epoch` pair), not a stat
     epoch: AtomicU64,
 }
 
 impl<T> Swap<T> {
     /// Wrap an initial snapshot at epoch 0.
     pub fn new(initial: Arc<T>) -> Swap<T> {
+        // lint:allow(metrics-registry) — epoch handshake cell, see field doc
         Swap { current: Mutex::new(initial), epoch: AtomicU64::new(0) }
     }
 
@@ -66,6 +69,9 @@ impl<T> Swap<T> {
     /// epoch. In-flight readers keep their old `Arc`s; the old snapshot
     /// is dropped when the last of them finishes.
     pub fn publish(&self, next: Arc<T>) -> u64 {
+        // span ends after the guard drops (locals drop in reverse order),
+        // so the traced interval covers the full swap critical section
+        let _span = crate::obs::trace::span(crate::obs::trace::SpanId::SwapPublish);
         let mut guard = self.lock_current();
         *guard = next;
         // Release pairs with the Acquire probes: anyone who observes the

@@ -46,7 +46,7 @@
 //! the GPU transfer ledger (`train::worker::WorkerCtx::bill_gather`).
 
 use super::{CacheStats, EmbeddingStore};
-use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::metrics::{global, Counter, Gauge};
 use crate::util::sync::Mutex;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -104,19 +104,19 @@ pub struct CachedStore {
     dim: usize,
     stripes: Vec<Mutex<Stripe>>,
     capacity_rows: usize,
-    // Memory-ordering audit (docs/CONCURRENCY.md, "Relaxed allowlist"):
-    // all five counters below are statistics only — nothing reads them to
+    // All five counters below are statistics only — nothing reads them to
     // decide data visibility, and every mutation happens while the owning
-    // stripe lock is (or was just) held, so `Relaxed` is sufficient. The
-    // cache's *data* consistency comes entirely from the stripe mutexes.
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-    write_backs: AtomicU64,
+    // stripe lock is (or was just) held. They live in the `obs::metrics`
+    // registry (Relaxed internally) under `store.cache.*`; the cache's
+    // *data* consistency comes entirely from the stripe mutexes.
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+    write_backs: Counter,
     /// slots with allocated storage (monotone up to capacity): the
     /// cache's contribution to `resident_bytes` — advisory observability,
     /// not a gate (the budget is enforced statically at spec time)
-    resident_rows: AtomicU64,
+    resident_rows: Gauge,
 }
 
 impl CachedStore {
@@ -161,11 +161,11 @@ impl CachedStore {
             dim,
             stripes,
             capacity_rows,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            write_backs: AtomicU64::new(0),
-            resident_rows: AtomicU64::new(0),
+            hits: global().counter("store.cache.hits"),
+            misses: global().counter("store.cache.misses"),
+            evictions: global().counter("store.cache.evictions"),
+            write_backs: global().counter("store.cache.write_backs"),
+            resident_rows: global().gauge("store.cache.resident_rows"),
         }
     }
 
@@ -197,7 +197,7 @@ impl CachedStore {
             let s = st.slots.len();
             st.slots.push(Slot { row, referenced: false, dirty: false });
             st.data.resize((s + 1) * self.dim, 0.0);
-            self.resident_rows.fetch_add(1, Ordering::Relaxed);
+            self.resident_rows.add(1);
             return s;
         }
         // clock sweep: clear referenced bits until an unreferenced victim
@@ -212,10 +212,10 @@ impl CachedStore {
             if st.slots[s].dirty {
                 let data = &st.data[s * self.dim..(s + 1) * self.dim];
                 self.inner.set_row(victim, data);
-                self.write_backs.fetch_add(1, Ordering::Relaxed);
+                self.write_backs.inc();
             }
             st.index.remove(&victim);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evictions.inc();
             st.slots[s] = Slot { row, referenced: false, dirty: false };
             return s;
         }
@@ -228,10 +228,10 @@ impl CachedStore {
         if let Some(&s) = st.index.get(&i) {
             st.slots[s].referenced = true;
             out.copy_from_slice(st.slot_data(s, self.dim));
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.inc();
             true
         } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.misses.inc();
             let s = self.allocate(&mut st, i);
             self.inner.read_row(i, st.slot_data(s, self.dim));
             st.slots[s].referenced = true;
@@ -251,7 +251,7 @@ impl CachedStore {
                     let row = st.slots[s].row;
                     self.inner.set_row(row, &st.data[s * self.dim..(s + 1) * self.dim]);
                     st.slots[s].dirty = false;
-                    self.write_backs.fetch_add(1, Ordering::Relaxed);
+                    self.write_backs.inc();
                 }
             }
         }
@@ -290,13 +290,13 @@ impl EmbeddingStore for CachedStore {
         let mut st = self.stripe_of(i).lock().expect("cache stripe poisoned");
         let s = match st.index.get(&i) {
             Some(&s) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 s
             }
             None => {
                 // write-allocate: no need to read the old row, it is
                 // overwritten whole
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.inc();
                 let s = self.allocate(&mut st, i);
                 st.index.insert(i, s);
                 s
@@ -312,11 +312,11 @@ impl EmbeddingStore for CachedStore {
         let mut st = self.stripe_of(i).lock().expect("cache stripe poisoned");
         let s = match st.index.get(&i) {
             Some(&s) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 s
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.inc();
                 let s = self.allocate(&mut st, i);
                 self.inner.read_row(i, st.slot_data(s, self.dim));
                 st.index.insert(i, s);
@@ -372,8 +372,7 @@ impl EmbeddingStore for CachedStore {
     /// Backing residency plus the cache's filled slots — what the budget
     /// gate in `api::Session` compares against `storage.budget_mb`.
     fn resident_bytes(&self) -> u64 {
-        self.inner.resident_bytes()
-            + self.resident_rows.load(Ordering::Relaxed) * (self.dim as u64) * 4
+        self.inner.resident_bytes() + self.resident_rows.get() * (self.dim as u64) * 4
     }
 
     fn table_bytes(&self) -> u64 {
@@ -402,10 +401,10 @@ impl EmbeddingStore for CachedStore {
 
     fn cache_stats(&self) -> Option<CacheStats> {
         Some(CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            write_backs: self.write_backs.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
+            write_backs: self.write_backs.get(),
         })
     }
 }

@@ -300,6 +300,7 @@ impl Default for StoreConfig {
     }
 }
 
+// lint:allow(metrics-registry) — process-unique scratch-file name source, not a stat
 static MMAP_FILE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 impl StoreConfig {

@@ -8,7 +8,7 @@
 //! x16, the paper's p3.16xlarge). Compute time is real (measured XLA
 //! execution); transfer time is the counted-bytes model.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::metrics::{global, Counter};
 
 /// Hardware mode of a training run.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -26,41 +26,54 @@ impl Hardware {
     }
 }
 
-/// Shared transfer ledger (one per run; workers add atomically).
-#[derive(Debug, Default)]
+/// Shared transfer ledger (one per run; workers add atomically). Each
+/// counter is a private `obs::metrics` cell registered under
+/// `train.transfer.*`, so the per-run totals read here also show up —
+/// summed across runs — in metrics snapshots.
+#[derive(Debug)]
 pub struct TransferLedger {
     /// host→device bytes on the critical path
-    pub h2d: AtomicU64,
+    pub h2d: Counter,
     /// device→host bytes on the critical path
-    pub d2h: AtomicU64,
+    pub d2h: Counter,
     /// bytes whose transfer is overlapped with compute (async updates) —
     /// counted but not billed to the critical path
-    pub overlapped: AtomicU64,
+    pub overlapped: Counter,
+}
+
+impl Default for TransferLedger {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl TransferLedger {
     pub fn new() -> Self {
-        Self::default()
+        TransferLedger {
+            h2d: global().counter("train.transfer.h2d_bytes"),
+            d2h: global().counter("train.transfer.d2h_bytes"),
+            overlapped: global().counter("train.transfer.overlapped_bytes"),
+        }
     }
 
     pub fn add_h2d(&self, bytes: u64) {
-        self.h2d.fetch_add(bytes, Ordering::Relaxed);
+        self.h2d.add(bytes);
     }
 
     pub fn add_d2h(&self, bytes: u64) {
-        self.d2h.fetch_add(bytes, Ordering::Relaxed);
+        self.d2h.add(bytes);
     }
 
     pub fn add_overlapped(&self, bytes: u64) {
-        self.overlapped.fetch_add(bytes, Ordering::Relaxed);
+        self.overlapped.add(bytes);
     }
 
     pub fn critical_bytes(&self) -> u64 {
-        self.h2d.load(Ordering::Relaxed) + self.d2h.load(Ordering::Relaxed)
+        self.h2d.get() + self.d2h.get()
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.critical_bytes() + self.overlapped.load(Ordering::Relaxed)
+        self.critical_bytes() + self.overlapped.get()
     }
 
     /// Critical-path transfer seconds under `hw`'s bandwidth model,

@@ -44,6 +44,7 @@
 use super::batch::{BatchBuffers, GatherVolume};
 use crate::kg::TripletStore;
 use crate::models::step::StepShape;
+use crate::obs::trace::{span, SpanId};
 use crate::sampler::{Batch, NegativeSampler, PositiveSampler};
 use crate::store::EmbeddingStore;
 use crate::util::timer::PhaseTimes;
@@ -104,6 +105,7 @@ impl<'scope> Prefetcher<'scope> {
         shape: StepShape,
         rel_dim: usize,
         depth: usize,
+        // lint:allow(metrics-registry) — applied stamp (Release/Acquire), not a stat
         applied: Arc<AtomicU64>,
     ) -> Result<Prefetcher<'scope>> {
         let depth = depth.max(2);
@@ -138,11 +140,15 @@ impl<'scope> Prefetcher<'scope> {
                         }
                     }
                     let gathered_at = applied.load(Ordering::Acquire);
-                    pt.time("prefetch.sample", || pos.next_batch(shape.batch, &mut idx_buf));
-                    let batch = pt.time("prefetch.sample", || neg.assemble(triplets, &idx_buf));
-                    let moved = pt.time("prefetch.gather", || {
-                        buf.gather(&batch, &*entities, &*relations)
-                    });
+                    let batch = {
+                        let _s = span(SpanId::PrefetchSample);
+                        pt.time("prefetch.sample", || pos.next_batch(shape.batch, &mut idx_buf));
+                        pt.time("prefetch.sample", || neg.assemble(triplets, &idx_buf))
+                    };
+                    let moved = {
+                        let _s = span(SpanId::PrefetchGather);
+                        pt.time("prefetch.gather", || buf.gather(&batch, &*entities, &*relations))
+                    };
                     let pb = PrefetchedBatch {
                         batch,
                         buf,

@@ -27,6 +27,7 @@ use super::updater::AsyncUpdater;
 use crate::kg::Dataset;
 use crate::models::step::{StepGrads, StepShape};
 use crate::models::{LossCfg, ModelKind};
+use crate::obs::trace::{span, SpanId};
 use crate::partition::partition_relations;
 use crate::runtime::{BackendKind, Manifest, TrainBackend};
 use crate::sampler::{Batch, NegativeConfig, NegativeSampler, PositiveSampler};
@@ -360,9 +361,9 @@ pub fn run_training(
             .iter()
             .map(|&(p, d)| (p.to_string(), d.as_secs_f64()))
             .collect(),
-        h2d_bytes: ledger.h2d.load(std::sync::atomic::Ordering::Relaxed),
-        d2h_bytes: ledger.d2h.load(std::sync::atomic::Ordering::Relaxed),
-        overlapped_bytes: ledger.overlapped.load(std::sync::atomic::Ordering::Relaxed),
+        h2d_bytes: ledger.h2d.get(),
+        d2h_bytes: ledger.d2h.get(),
+        overlapped_bytes: ledger.overlapped.get(),
         cache: state.cache_stats().since(&cache_before),
     })
 }
@@ -427,6 +428,7 @@ impl WorkerCtx<'_> {
 
     /// (3) fwd/bwd step + loss logging.
     fn compute(&mut self, step: u64, buf: &BatchBuffers) -> Result<StepGrads> {
+        let _span = span(SpanId::Compute);
         let backend = &self.backend;
         let grads = self.phases.time("compute", || backend.step(&buf.inputs()))?;
         if step % self.cfg.log_every as u64 == 0 {
@@ -440,6 +442,7 @@ impl WorkerCtx<'_> {
     /// patch in prefetched buffers. Entity ids are empty under async
     /// updates (those land on the updater thread; Hogwild staleness).
     fn update(&mut self, batch: &Batch, grads: &StepGrads) -> (Vec<u64>, Vec<u64>) {
+        let _span = span(SpanId::Update);
         let (state, cfg, ledger, updater) = (self.state, self.cfg, self.ledger, &self.updater);
         let (gpu, dim, rel_dim) = (self.gpu, self.shape.dim, self.rel_dim);
         self.phases.time("update", || {
@@ -477,6 +480,7 @@ impl WorkerCtx<'_> {
         if self.cfg.n_workers <= 1 || (step + 1) % self.cfg.sync_interval as u64 != 0 {
             return;
         }
+        let _span = span(SpanId::SyncBarrier);
         let (dataset, cfg, sync, w) = (self.dataset, self.cfg, self.sync, self.w);
         let (updater, last_epoch) = (&self.updater, self.last_epoch);
         self.phases.time("sync", || {
@@ -510,20 +514,36 @@ fn run_sequential(
 ) -> Result<()> {
     let mut buf = BatchBuffers::new(&ctx.shape, ctx.rel_dim);
     let mut idx_buf: Vec<u32> = Vec::with_capacity(ctx.shape.batch);
+    let mut epoch_span = span(SpanId::TrainEpoch);
+    let mut epoch_mark = ctx.last_epoch;
     for step in 0..ctx.cfg.batches_per_worker as u64 {
+        if ctx.last_epoch != epoch_mark {
+            // close the previous epoch's span before opening the next —
+            // assignment alone would nest them backwards
+            drop(epoch_span);
+            epoch_span = span(SpanId::TrainEpoch);
+            epoch_mark = ctx.last_epoch;
+        }
+        let _batch_span = span(SpanId::TrainBatch);
+
         // (1) sample
         let (shape, dataset) = (ctx.shape, ctx.dataset);
-        let crossed = ctx.phases.time("sample", || pos.next_batch(shape.batch, &mut idx_buf));
-        let batch = ctx.phases.time("sample", || neg.assemble(&dataset.train, &idx_buf));
+        let (crossed, batch) = {
+            let _s = span(SpanId::Sample);
+            let crossed = ctx.phases.time("sample", || pos.next_batch(shape.batch, &mut idx_buf));
+            let batch = ctx.phases.time("sample", || neg.assemble(&dataset.train, &idx_buf));
+            (crossed, batch)
+        };
         if crossed {
             ctx.last_epoch = pos.epoch();
         }
 
         // (2) gather
         let state = ctx.state;
-        let vol = ctx
-            .phases
-            .time("gather", || buf.gather(&batch, &*state.entities, &*state.relations));
+        let vol = {
+            let _s = span(SpanId::Gather);
+            ctx.phases.time("gather", || buf.gather(&batch, &*state.entities, &*state.relations))
+        };
         ctx.bill_gather(&batch, vol, false);
 
         // (3) compute + (4) update + (5) sync
@@ -531,6 +551,7 @@ fn run_sequential(
         ctx.update(&batch, &grads);
         ctx.sync_barrier(step, &mut |indices| pos.reset_indices(indices));
     }
+    drop(epoch_span);
     Ok(())
 }
 
@@ -554,6 +575,7 @@ fn run_pipelined<'a>(
     neg: NegativeSampler,
 ) -> Result<()> {
     let depth = ctx.cfg.prefetch_depth.max(2);
+    // lint:allow(metrics-registry) — applied stamp (Release/Acquire), not a stat
     let applied = Arc::new(AtomicU64::new(0));
     let dataset: &'a Dataset = ctx.dataset;
     let (entities, relations) = (ctx.state.entities.clone(), ctx.state.relations.clone());
@@ -577,7 +599,17 @@ fn run_pipelined<'a>(
         // dirty-id scratch, reused across steps (hot loop: no allocation)
         let mut ent_dirty: HashSet<u64> = HashSet::new();
         let mut rel_dirty: HashSet<u64> = HashSet::new();
+        let patched = crate::obs::metrics::global().counter("train.prefetch.patched_values");
+        let mut epoch_span = span(SpanId::TrainEpoch);
+        let mut epoch_mark = ctx.last_epoch;
         for step in 0..ctx.cfg.batches_per_worker as u64 {
+            if ctx.last_epoch != epoch_mark {
+                drop(epoch_span);
+                epoch_span = span(SpanId::TrainEpoch);
+                epoch_mark = ctx.last_epoch;
+            }
+            let _batch_span = span(SpanId::TrainBatch);
+
             // (1)+(2) arrive prefetched; blocking here is the pipeline stall
             let mut pb = ctx.phases.time("prefetch", || pf.recv())?;
             // track the sampler epoch by value, not by the crossed flag: a
@@ -605,10 +637,14 @@ fn run_pipelined<'a>(
                 }
             }
             let state = ctx.state;
-            let (ent_patched, rel_patched) = ctx.phases.time("gather", || {
-                let (ents, rels) = (&*state.entities, &*state.relations);
-                pb.buf.patch_rows(&pb.batch, ents, rels, &ent_dirty, &rel_dirty)
-            });
+            let (ent_patched, rel_patched) = {
+                let _s = span(SpanId::PrefetchPatch);
+                ctx.phases.time("gather", || {
+                    let (ents, rels) = (&*state.entities, &*state.relations);
+                    pb.buf.patch_rows(&pb.batch, ents, rels, &ent_dirty, &rel_dirty)
+                })
+            };
+            patched.add(ent_patched + rel_patched);
             if ctx.gpu {
                 // re-gathered rows are on the critical path, unlike the
                 // prefetched bulk; relation rows stay pinned on-GPU under
@@ -637,6 +673,7 @@ fn run_pipelined<'a>(
             // (5) sync; a reshuffle restarts the prefetch stream
             ctx.sync_barrier(step, &mut |indices| pf.reset_indices(indices));
         }
+        drop(epoch_span);
         // fold the helper thread's (overlapped) sample/gather time into
         // this worker's phase report
         ctx.phases.merge(&pf.finish()?);

@@ -25,8 +25,12 @@
 //!    mix — a publish replaces the whole `Arc` or nothing
 //! 10. serve swap: the wait-free epoch probe never overtakes the
 //!     contents — a probe followed by a load sees contents >= the probe
+//! 11. obs trace: a concurrent span-buffer drain reads a fully-written
+//!     prefix (never a torn record) and loses nothing once the writer
+//!     has quiesced
 
 use dglke::kvstore::{InflightWindow, PopOutcome};
+use dglke::obs::trace::SpanBuf;
 use dglke::serve::Swap;
 use dglke::store::{CachedStore, DenseStore, EmbeddingStore};
 use dglke::train::sync::SyncState;
@@ -386,5 +390,43 @@ fn swap_epoch_probe_never_overtakes_contents() {
                 );
             }
         });
+    });
+}
+
+/// 11. The trace span buffer (obs::trace::SpanBuf): the owning thread
+/// appends records — two Relaxed slot stores published by a Release
+/// store of `len` — while a drain loads `len` with Acquire
+/// (ordering-pairs.toml `trace-buf-len`). Any mid-flight drain must
+/// return a consistent prefix: only fully-written records, never a slot
+/// whose timestamp landed but whose code did not. Records are encoded so
+/// a torn read is detectable (`code == 3 * ts`), and a drain after the
+/// writer quiesces must see every event with none dropped.
+#[test]
+fn trace_buf_drain_reads_full_prefix_never_torn() {
+    model(|| {
+        let buf = Arc::new(SpanBuf::with_capacity(1, 64));
+        std::thread::scope(|s| {
+            let w = buf.clone();
+            s.spawn(move || {
+                for i in 1..=48u64 {
+                    explore();
+                    assert!(w.push(i, i * 3), "capacity 64 cannot overflow at 48");
+                }
+            });
+            let mut last_len = 0usize;
+            for _ in 0..16 {
+                explore();
+                let events = buf.drain();
+                assert!(events.len() >= last_len, "published prefix shrank");
+                last_len = events.len();
+                for (k, &(ts, code)) in events.iter().enumerate() {
+                    let i = k as u64 + 1;
+                    assert_eq!((ts, code), (i, 3 * i), "slot {k} torn or reordered");
+                }
+            }
+        });
+        let all = buf.drain();
+        assert_eq!(all.len(), 48, "quiesced drain lost events");
+        assert_eq!(buf.dropped(), 0);
     });
 }

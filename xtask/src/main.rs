@@ -9,12 +9,13 @@
 //!   unwrap-ban, relaxed-ordering), ported from the old line-regex
 //!   scanner onto the token stream with identical semantics. See
 //!   `lint.rs`.
-//! * `analyze` — four syntax-aware passes over the token stream and the
+//! * `analyze` — five syntax-aware passes over the token stream and the
 //!   crate-local call graph (`callgraph.rs`):
 //!   lock-order/deadlock (`locks.rs`, checked against `lock-order.toml`),
 //!   blocking-under-lock (same walk), acquire-release pairing
-//!   (`ordering.rs`, checked against `ordering-pairs.toml`), and
-//!   ledger-billing completeness (`billing.rs`).
+//!   (`ordering.rs`, checked against `ordering-pairs.toml`),
+//!   ledger-billing completeness (`billing.rs`), and the metrics-registry
+//!   ratchet (`metrics.rs`, checked against `metrics-registry.toml`).
 //!
 //! Escape hatch everywhere: a line (or one of the 6 lines above it)
 //! containing `lint:allow(<rule>)` exempts that site; the comment must
@@ -29,6 +30,7 @@ mod config;
 mod lexer;
 mod lint;
 mod locks;
+mod metrics;
 mod ordering;
 
 use std::path::{Path, PathBuf};
@@ -89,12 +91,15 @@ fn run_analyze(root: &Path) -> Result<Vec<String>, String> {
     let lock_cfg = config::parse_lock_order(&read(root, "lock-order.toml")?, "lock-order.toml")?;
     let pairs =
         config::parse_ordering_pairs(&read(root, "ordering-pairs.toml")?, "ordering-pairs.toml")?;
+    let cells =
+        config::parse_counts(&read(root, "metrics-registry.toml")?, "metrics-registry.toml")?;
     let files = lexer::collect_sources(root).map_err(|e| format!("scanning rust/src: {e}"))?;
     let g = callgraph::CallGraph::build(&files);
     let mut out = Vec::new();
     locks::check(&files, &g, &lock_cfg, &mut out);
     ordering::check(&files, &pairs, &mut out);
     billing::check(&files, &g, &mut out);
+    metrics::check(&files, &cells, &mut out);
     Ok(out)
 }
 

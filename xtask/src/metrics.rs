@@ -1,0 +1,175 @@
+//! Metrics-registry pass.
+//!
+//! PR 10 moved every ad-hoc statistics counter (`CachedStore` hit/miss,
+//! `NetLedger` byte tallies, serve served/error, ...) into the
+//! `obs::metrics` registry, where it gets a name, shows up in `Report`
+//! snapshots, and is summed across instances. A raw `AtomicU64` outside
+//! `rust/src/obs/` is therefore one of two things: a *synchronization*
+//! cell (a stamp or ack counter whose Release/Acquire protocol is the
+//! point — those are audited by the ordering pass) or a regression back
+//! to an invisible ad-hoc stat. This pass makes the distinction explicit:
+//! every `AtomicU64` token outside the exempt files must carry
+//! `lint:allow(metrics-registry)` naming its protocol, and the per-file
+//! site counts must match `metrics-registry.toml` exactly — the same
+//! two-sided ratchet as `unsafe-budget.toml`, so a new raw atomic cannot
+//! land without both an inline justification and a manifest diff.
+//!
+//! Exempt: `rust/src/obs/` (the registry's own cells) and
+//! `rust/src/util/sync.rs` (the loom shim wrapping the type itself).
+//! `use` imports are declarations, not sites.
+
+use crate::lexer::{FileLex, Kind, Tok};
+use std::collections::BTreeMap;
+
+pub const METRICS: &str = "metrics-registry";
+
+fn exempt(rel: &str) -> bool {
+    rel.starts_with("rust/src/obs/") || rel == "rust/src/util/sync.rs"
+}
+
+/// Is token `i` part of a `use` item? Walk back to the start of the
+/// enclosing statement (the previous `;`); if a `use` keyword appears
+/// first, this is an import, not a usage site. Brace tokens are skipped
+/// so `use a::{X, Y};` groups resolve correctly.
+fn in_use_item(toks: &[Tok], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        if t.is(";") {
+            return false;
+        }
+        if t.is_id("use") {
+            return true;
+        }
+    }
+    false
+}
+
+pub fn check(files: &[FileLex], counts: &BTreeMap<String, usize>, out: &mut Vec<String>) {
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    for f in files {
+        if exempt(&f.rel) {
+            continue;
+        }
+        let mut n = 0usize;
+        for (i, t) in f.toks.iter().enumerate() {
+            if t.kind != Kind::Id || t.text != "AtomicU64" || in_use_item(&f.toks, i) {
+                continue;
+            }
+            n += 1;
+            if !f.has_allow(t.line, METRICS) {
+                out.push(format!(
+                    "{}:{}: [{METRICS}] raw AtomicU64 outside obs::metrics — an ad-hoc stat \
+                     belongs in the registry (`obs::metrics::global().counter(\"...\")`); a \
+                     true synchronization cell needs `lint:allow(metrics-registry)` naming \
+                     its protocol",
+                    f.rel, t.line
+                ));
+            }
+        }
+        if n > 0 {
+            seen.insert(f.rel.clone(), n);
+        }
+        match (n, counts.get(&f.rel)) {
+            (0, None) => {}
+            (n, Some(&b)) if n == b => {}
+            (n, Some(&b)) if n > b => out.push(format!(
+                "{}: [{METRICS}] {n} raw AtomicU64 site(s), metrics-registry.toml records {b} \
+                 — new cells go through the obs::metrics registry; a genuine synchronization \
+                 cell raises the count with review",
+                f.rel
+            )),
+            (n, Some(&b)) => out.push(format!(
+                "{}: [{METRICS}] {n} raw AtomicU64 site(s), metrics-registry.toml records {b} \
+                 — lower the manifest count (it may only go down)",
+                f.rel
+            )),
+            (n, None) => out.push(format!(
+                "{}: [{METRICS}] {n} raw AtomicU64 site(s) but the file is not in \
+                 metrics-registry.toml",
+                f.rel
+            )),
+        }
+    }
+    for path in counts.keys() {
+        if !seen.contains_key(path) {
+            out.push(format!(
+                "metrics-registry.toml: [{METRICS}] stale entry {path:?} (file gone or \
+                 AtomicU64-free) — remove it"
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_counts;
+
+    fn run(srcs: &[(&str, &str)], toml: &str) -> Vec<String> {
+        let files: Vec<FileLex> =
+            srcs.iter().map(|(rel, s)| FileLex::from_source(rel, s)).collect();
+        let counts = parse_counts(toml, "metrics-registry.toml").expect("fixture parses");
+        let mut out = Vec::new();
+        check(&files, &counts, &mut out);
+        out
+    }
+
+    const ONE: &str = "[files]\n\"rust/src/a.rs\" = 1\n";
+
+    #[test]
+    fn annotated_and_counted_site_is_clean() {
+        let src = "// lint:allow(metrics-registry) — applied-stamp Release/Acquire protocol\n\
+                   static STAMP: AtomicU64 = AtomicU64::new(0);\n";
+        // two tokens on one line: the type position and the constructor
+        let toml = "[files]\n\"rust/src/a.rs\" = 2\n";
+        let out = run(&[("rust/src/a.rs", src)], toml);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn unannotated_site_fires_even_when_counted() {
+        let src = "fn f() { let c = Arc::new(AtomicU64::new(0)); }\n";
+        let out = run(&[("rust/src/a.rs", src)], ONE);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("obs::metrics"), "{out:?}");
+    }
+
+    #[test]
+    fn count_is_an_exact_two_sided_ratchet() {
+        let annotated = "// lint:allow(metrics-registry) — ack protocol\n\
+                         fn f(acked: Arc<AtomicU64>) {}\n";
+        // more sites than recorded
+        let doubled = format!("{annotated}// lint:allow(metrics-registry) — second cell\n\
+                               fn g(acked: Arc<AtomicU64>) {{}}\n");
+        let out = run(&[("rust/src/a.rs", &doubled)], ONE);
+        assert!(out.iter().any(|v| v.contains("records 1")), "{out:?}");
+        // fewer sites than recorded: the manifest must ratchet down
+        let toml = "[files]\n\"rust/src/a.rs\" = 3\n";
+        let out = run(&[("rust/src/a.rs", annotated)], toml);
+        assert!(out.iter().any(|v| v.contains("lower the manifest")), "{out:?}");
+        // a file the manifest has never heard of
+        let out = run(&[("rust/src/b.rs", annotated)], ONE);
+        assert!(out.iter().any(|v| v.contains("not in metrics-registry.toml")), "{out:?}");
+        assert!(out.iter().any(|v| v.contains("stale entry")), "{out:?}");
+    }
+
+    #[test]
+    fn use_imports_obs_and_shim_are_exempt() {
+        let src = "use crate::util::sync::atomic::{AtomicU64, Ordering};\nfn f() {}\n";
+        let out = run(&[("rust/src/a.rs", src)], "");
+        assert!(out.is_empty(), "{out:?}");
+        let raw = "fn f() { let c = AtomicU64::new(0); }\n";
+        let out = run(&[("rust/src/obs/metrics.rs", raw), ("rust/src/util/sync.rs", raw)], "");
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn test_modules_are_out_of_scope() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n\
+                   fn t() { let c = AtomicU64::new(0); }\n}\n";
+        let out = run(&[("rust/src/a.rs", src)], "");
+        assert!(out.is_empty(), "{out:?}");
+    }
+}
